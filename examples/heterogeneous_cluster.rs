@@ -1,0 +1,69 @@
+//! A production-shaped heterogeneous cluster: 512 nodes with IO, service
+//! and GPGPU nodes placed per §II, analyzed under several type-specific
+//! patterns — the scenario the paper's introduction motivates.
+//!
+//! ```sh
+//! cargo run --release --example heterogeneous_cluster
+//! ```
+
+use pgft::metrics::{render_algorithm_table, AlgoSummary};
+use pgft::prelude::*;
+use pgft::sim::{render_sim_table, simulate_flow_level};
+
+fn main() -> anyhow::Result<()> {
+    // 512-node slimmed 3-level PGFT (16 nodes/leaf, 32 leaves).
+    let topo = families::named("medium-512")?;
+    pgft::topology::validate::validate(&topo)?;
+
+    // Realistic placement stack: IO proxies on the last port of every
+    // leaf (BXI-style optical ports), one service node on the first port
+    // of every leaf, and two GPGPU leaves at the end of the machine.
+    let placement = Placement::parse("io:last:1,service:first:1,gpgpu:leaves:2")?;
+    let types = placement.apply(&topo)?;
+    println!("{}", pgft::topology::render::render_summary(&topo, Some(&types)));
+
+    // Type-specific worst cases: compute→IO collection, IO→compute
+    // distribution, compute→GPGPU offload, everyone→service (login/IO
+    // metadata hotspot).
+    let patterns = vec![
+        Pattern::C2ioSym,
+        Pattern::Io2cSym,
+        Pattern::TypeDense {
+            src_ty: NodeType::Compute,
+            dst_ty: NodeType::Gpgpu,
+            cross_top_only: false,
+        },
+        Pattern::TypeDense {
+            src_ty: NodeType::Compute,
+            dst_ty: NodeType::Service,
+            cross_top_only: true,
+        },
+    ];
+
+    let mut rows = Vec::new();
+    for pattern in &patterns {
+        for kind in [
+            AlgorithmKind::Dmodk,
+            AlgorithmKind::Smodk,
+            AlgorithmKind::Gdmodk,
+            AlgorithmKind::Gsmodk,
+        ] {
+            rows.push(AlgoSummary::compute(&topo, &types, kind, pattern, 1)?);
+        }
+    }
+    print!("{}", render_algorithm_table(&rows));
+
+    // Flow-level throughput for the collection pattern (rust solver; the
+    // XLA artifacts cover this size too, see simulate_e2e).
+    println!("\nflow-level max-min rates (compute→IO collection):");
+    let mut sims = Vec::new();
+    for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk] {
+        sims.push(simulate_flow_level(&topo, &types, kind, &Pattern::C2ioSym, 1, None)?);
+    }
+    print!("{}", render_sim_table(&sims));
+
+    let gain = sims[1].aggregate_throughput / sims[0].aggregate_throughput;
+    println!("\nGdmodk aggregate-throughput gain over Dmodk on collection: {gain:.2}x");
+    assert!(gain > 1.5, "grouped routing must pay off at scale");
+    Ok(())
+}

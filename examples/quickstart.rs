@@ -1,0 +1,43 @@
+//! Quickstart: build the paper's case-study PGFT, place IO nodes, route
+//! it five ways, and print the congestion analysis.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use pgft::metrics::{render_algorithm_table, AlgoSummary};
+use pgft::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The topology: PGFT(3; 8,4,2; 1,2,1; 1,1,4) — 64 nodes, 8 leaves,
+    //    slimmed top (nonfull CBB), quadrupled L2→top links.
+    let topo = build_pgft(&PgftSpec::case_study());
+    pgft::topology::validate::validate(&topo)?;
+    println!("{}", pgft::topology::render::render_summary(&topo, None));
+
+    // 2. Heterogeneity: one IO node on the last port of every leaf
+    //    (IO NIDs ≡ 7 mod 8, exactly Fig. 1).
+    let types = Placement::paper_io().apply(&topo)?;
+    println!("node types: {}", types.census());
+
+    // 3. The pattern: data collection, compute → IO of the symmetric leaf.
+    let pattern = Pattern::C2ioSym;
+    let flows = pattern.flows(&topo, &types)?;
+    println!("pattern {}: {} flows, all crossing the top level\n", pattern.name(), flows.len());
+
+    // 4. Route it with every algorithm and compare the static congestion
+    //    metric C_topo = max_p min(src(p), dst(p)).
+    let mut rows = Vec::new();
+    for kind in AlgorithmKind::ALL {
+        rows.push(AlgoSummary::compute(&topo, &types, kind, &pattern, 42)?);
+    }
+    print!("{}", render_algorithm_table(&rows));
+
+    // 5. The paper's takeaway, as assertions.
+    let c = |name: &str| rows.iter().find(|r| r.algorithm == name).unwrap().c_topo;
+    assert_eq!(c("dmodk"), 4, "§III.B");
+    assert_eq!(c("smodk"), 4, "§III.C");
+    assert_eq!(c("gdmodk"), 1, "§IV: grouped routing reaches the optimum");
+    println!("\nGdmodk turns C_topo {} (Dmodk) into {} — congestion removed.", c("dmodk"), c("gdmodk"));
+    Ok(())
+}

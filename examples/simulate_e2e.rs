@@ -1,0 +1,123 @@
+//! END-TO-END DRIVER — proves all three layers compose on a real
+//! workload (recorded in EXPERIMENTS.md):
+//!
+//!   L3 rust: build two PGFTs, place node types, route with all six
+//!            algorithms, generate the paper's C2IO patterns;
+//!   L2/L1:   the AOT-compiled JAX fair-rate solver (whose inner step is
+//!            the Pallas dual-contraction kernel) executes through the
+//!            PJRT runtime — one `execute` per solve, no python;
+//!   checks:  XLA rates vs the exact rust solver (parity), plus the
+//!            packet-level simulator as an independent witness that the
+//!            static metric's ordering is real.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example simulate_e2e
+//! ```
+
+use pgft::prelude::*;
+use pgft::runtime::Runtime;
+use pgft::sim::{
+    render_sim_table, simulate_flow_level, solve_fairrate_exact, IncidenceMatrix, PacketSim,
+    PacketSimConfig,
+};
+
+fn main() -> anyhow::Result<()> {
+    let runtime = Runtime::open_default()?;
+    println!(
+        "PJRT platform: {} | artifacts: {}",
+        runtime.platform(),
+        runtime
+            .manifest()
+            .iter()
+            .map(|a| a.name.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+
+    let mut all_rows = Vec::new();
+    for topo_name in ["case-study", "medium-512"] {
+        let topo = families::named(topo_name)?;
+        pgft::topology::validate::validate(&topo)?;
+        let types = Placement::paper_io().apply(&topo)?;
+        println!("\n==== {} ({} nodes, {} ports) ====", topo_name, topo.num_nodes(), topo.num_ports());
+
+        // --- flow-level simulation through the XLA artifact -------------
+        let mut rows = Vec::new();
+        for pattern in [Pattern::C2ioSym, Pattern::C2ioAll] {
+            for kind in AlgorithmKind::ALL {
+                let row =
+                    simulate_flow_level(&topo, &types, kind, &pattern, 1, Some(&runtime))?;
+                rows.push(row);
+            }
+        }
+        print!("{}", render_sim_table(&rows));
+
+        // --- cross-check one cell against the exact rust solver ---------
+        let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+        let flows = Pattern::C2ioSym.flows(&topo, &types)?;
+        let routes = trace_flows(&topo, &*router, &flows);
+        let inc = IncidenceMatrix::from_routes(&topo, &routes);
+        if runtime.pick("fairrate", inc.num_flows(), inc.num_ports()).is_ok() {
+            let cap = vec![1.0f32; inc.num_ports()];
+            let valid = vec![1.0f32; inc.num_flows()];
+            let xla = runtime
+                .solve_fairrate(inc.dense(), inc.num_flows(), inc.num_ports(), &cap, &valid)?;
+            let exact = solve_fairrate_exact(&inc, &vec![1.0f64; inc.num_ports()]);
+            let max_err = xla
+                .iter()
+                .zip(&exact)
+                .map(|(&x, &e)| (x as f64 - e).abs())
+                .fold(0.0f64, f64::max);
+            println!("XLA vs exact solver: {} flows, max |Δrate| = {max_err:.2e}", xla.len());
+            anyhow::ensure!(max_err < 1e-3, "solver parity violated");
+        } else {
+            println!(
+                "({} flows × {} ports exceeds compiled artifact shapes; rust solver used)",
+                inc.num_flows(),
+                inc.num_ports()
+            );
+        }
+
+        // --- packet-level witness ---------------------------------------
+        let mut dmodk_slots = 0;
+        for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk] {
+            let router = kind.build(&topo, Some(&types), 1);
+            let routes = trace_flows(&topo, &*router, &flows);
+            let res = PacketSim::new(
+                &topo,
+                &routes,
+                PacketSimConfig { message_packets: 64, ..Default::default() },
+            )
+            .run();
+            println!(
+                "packet-sim {kind}: completion {} slots, {:.2} pkt/slot",
+                res.completion_slots, res.throughput
+            );
+            if kind == AlgorithmKind::Dmodk {
+                dmodk_slots = res.completion_slots;
+            } else {
+                let speedup = dmodk_slots as f64 / res.completion_slots as f64;
+                println!("packet-sim speedup Gdmodk vs Dmodk: {speedup:.2}x");
+                anyhow::ensure!(speedup > 1.5, "grouped routing must win end-to-end");
+            }
+        }
+        all_rows.extend(rows);
+    }
+
+    // Headline: the paper's claim holds through the whole stack.
+    let cell = |algo: &str, pat: &str| {
+        all_rows
+            .iter()
+            .find(|r| r.algorithm == algo && r.pattern == pat && r.flows == 56)
+            .unwrap()
+            .aggregate_throughput
+    };
+    let gain = cell("gdmodk", "c2io-sym") / cell("dmodk", "c2io-sym");
+    println!(
+        "\nHEADLINE (case study, C2IO collection): Gdmodk/Dmodk aggregate throughput = {gain:.2}x \
+         (static metric predicted 4→1 congestion)"
+    );
+    anyhow::ensure!(gain > 3.0);
+    println!("END-TO-END OK");
+    Ok(())
+}

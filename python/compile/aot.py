@@ -1,0 +1,100 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id protos, while
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (shapes are static; the rust side pads):
+    fairrate_f{F}_p{P}.hlo.txt   — full max-min solve, one execute/solve
+    portload_f{F}_p{P}.hlo.txt   — the fused dual contraction alone
+    manifest.txt                 — "name kind F P iters" per line
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import fairrate_solve, port_load
+
+# (F, P, iters) variants to compile. The case study needs (224 flows,
+# 192 ports) → 256/256; the medium-512 sweep needs more ports.
+SHAPES = [
+    (256, 256, 64),
+    (1024, 1024, 128),
+    (2048, 2048, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fairrate(f: int, p: int, iters: int) -> str:
+    spec_a = jax.ShapeDtypeStruct((f, p), jnp.float32)
+    spec_cap = jax.ShapeDtypeStruct((p,), jnp.float32)
+    spec_valid = jax.ShapeDtypeStruct((f,), jnp.float32)
+
+    def fn(a, cap, valid):
+        rates, frozen = fairrate_solve(a, cap, valid, iters=iters)
+        return rates, frozen
+
+    return to_hlo_text(jax.jit(fn).lower(spec_a, spec_cap, spec_valid))
+
+
+def lower_portload(f: int, p: int) -> str:
+    spec_a = jax.ShapeDtypeStruct((f, p), jnp.float32)
+    spec_v = jax.ShapeDtypeStruct((f,), jnp.float32)
+
+    def fn(a, rates, active):
+        return port_load(a, rates, active)
+
+    return to_hlo_text(jax.jit(fn).lower(spec_a, spec_v, spec_v))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact name filter (substring match)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for f, p, iters in SHAPES:
+        jobs = [
+            (f"fairrate_f{f}_p{p}", "fairrate", lambda: lower_fairrate(f, p, iters), iters),
+            (f"portload_f{f}_p{p}", "portload", lambda: lower_portload(f, p), 0),
+        ]
+        for name, kind, lower, it in jobs:
+            if args.only and not any(s in name for s in args.only.split(",")):
+                continue
+            text = lower()
+            path = os.path.join(args.out, f"{name}.hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(text)
+            manifest.append(f"{name} {kind} {f} {p} {it}")
+            print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

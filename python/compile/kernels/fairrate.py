@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernel: the waterfilling step's fused dual contraction.
+
+Given the flow×port incidence matrix ``A`` (F, P), current flow rates
+``r`` (F,) and the active-flow mask ``u`` (F,), compute in one pass
+
+    load[p] = Σ_f A[f, p] · r[f]      (capacity already committed at p)
+    cnt[p]  = Σ_f A[f, p] · u[f]      (active flows crossing p)
+
+This is the hot inner product of the max-min fair-rate solver (the
+simulation study the paper lists as future work): both outputs share one
+traversal of ``A``, which is the whole point of fusing them.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ``A`` is tiled into
+(BLOCK_F × BLOCK_P) VMEM blocks via BlockSpec; the two vectors ride along
+as (BLOCK_F,) slices; the (BLOCK_P,) accumulators stay resident in VMEM
+across the F-sweep (output index map ignores the F grid axis). The MXU
+sees the contraction as a (1×BF)·(BF×BP) matmul pair. ``interpret=True``
+everywhere: the CPU PJRT client cannot execute Mosaic custom-calls, and
+the artifacts must run inside the rust coordinator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["port_accumulate", "BLOCK_F", "BLOCK_P"]
+
+# Block sizes chosen for TPU VMEM (see DESIGN.md §Perf): a 256×256 f32
+# tile is 256 KiB; A-tile + vectors + accumulators fit well under the
+# ~16 MiB VMEM budget with room for double buffering.
+BLOCK_F = 256
+BLOCK_P = 256
+
+
+def _kernel(a_ref, r_ref, u_ref, load_ref, cnt_ref):
+    """One (BLOCK_F, BLOCK_P) tile: accumulate both contractions."""
+    f_step = pl.program_id(1)
+
+    @pl.when(f_step == 0)
+    def _init():
+        load_ref[...] = jnp.zeros_like(load_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    a = a_ref[...]
+    # (BF,) · (BF, BP) → (BP,); two vector-matrix products over one A tile.
+    load_ref[...] += jnp.dot(r_ref[...], a, preferred_element_type=jnp.float32)
+    cnt_ref[...] += jnp.dot(u_ref[...], a, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "block_p"))
+def port_accumulate(a, r, u, *, block_f: int = BLOCK_F, block_p: int = BLOCK_P):
+    """Fused dual contraction via Pallas. Shapes must tile evenly; the
+    AOT wrapper pads to the artifact shape before calling.
+    """
+    nf, np_ = a.shape
+    bf = min(block_f, nf)
+    bp = min(block_p, np_)
+    if nf % bf or np_ % bp:
+        raise ValueError(f"shape ({nf},{np_}) not divisible by blocks ({bf},{bp})")
+    grid = (np_ // bp, nf // bf)  # P-major, F innermost → accumulators revolve
+    load, cnt = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bf, bp), lambda p, f: (f, p)),
+            pl.BlockSpec((bf,), lambda p, f: (f,)),
+            pl.BlockSpec((bf,), lambda p, f: (f,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp,), lambda p, f: (p,)),
+            pl.BlockSpec((bp,), lambda p, f: (p,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=True,
+    )(a.astype(jnp.float32), r.astype(jnp.float32), u.astype(jnp.float32))
+    return load, cnt

@@ -1,0 +1,67 @@
+"""Pure-jnp / pure-python oracles for the Pallas kernel and the fair-rate
+solver. These are the correctness ground truth the pytest suite compares
+against; nothing here is ever lowered into the shipped artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ref_port_accumulate", "ref_fairrate_exact"]
+
+
+def ref_port_accumulate(a, rates, active):
+    """Reference for the L1 kernel: the fused dual contraction.
+
+    load[p] = sum_f a[f, p] * rates[f]
+    cnt[p]  = sum_f a[f, p] * active[f]
+    """
+    a = jnp.asarray(a)
+    load = jnp.einsum("fp,f->p", a, jnp.asarray(rates))
+    cnt = jnp.einsum("fp,f->p", a, jnp.asarray(active))
+    return load, cnt
+
+
+def ref_fairrate_exact(a, cap, valid=None):
+    """Exact max-min fair rates by progressive filling (pure numpy).
+
+    a     : (F, P) 0/1 incidence matrix (flow f uses port p).
+    cap   : (P,) port capacities.
+    valid : (F,) optional 0/1 mask; invalid flows get rate 0.
+
+    Returns (F,) rates. Classic water-filling: repeatedly find the
+    bottleneck port (smallest residual fair share), freeze its flows at
+    that share, repeat until every flow is frozen.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    cap = np.asarray(cap, dtype=np.float64)
+    nflows, nports = a.shape
+    rates = np.zeros(nflows)
+    if valid is None:
+        valid = (a.sum(axis=1) > 0).astype(np.float64)
+    else:
+        valid = np.asarray(valid, dtype=np.float64)
+    frozen = valid < 0.5  # invalid flows are frozen at rate 0
+
+    for _ in range(nports + 1):
+        active = ~frozen
+        if not active.any():
+            break
+        cnt = a[active].sum(axis=0)  # active flows per port
+        used = (a[frozen] * rates[frozen, None]).sum(axis=0) if frozen.any() else np.zeros(nports)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            share = np.where(cnt > 0, (cap - used) / np.maximum(cnt, 1e-30), np.inf)
+        share = np.maximum(share, 0.0)
+        theta = share.min()
+        if not np.isfinite(theta):
+            # Remaining active flows traverse no port (shouldn't happen for
+            # valid flows); they keep rate 0.
+            break
+        bottleneck = share <= theta * (1 + 1e-12) + 1e-15
+        hit = active & (a[:, bottleneck].sum(axis=1) > 0)
+        if not hit.any():
+            break
+        rates[hit] = theta
+        frozen |= hit
+    return rates

@@ -1,0 +1,78 @@
+"""Layer-2 JAX model: the flow-level max-min fair-rate solver.
+
+The paper's evaluation is a static congestion metric; its conclusions
+call for "a corresponding study of the new algorithms based on
+simulation … to provide results in terms of performance". This module is
+that study's compute core: given the routed incidence matrix of a
+communication pattern, compute per-flow max-min fair rates (progressive
+filling / waterfilling), from which the rust coordinator derives
+aggregate throughput and completion time per routing algorithm.
+
+The solver is a fixed-trip-count ``fori_loop`` of waterfilling steps so
+the whole computation lowers to a single HLO module (one PJRT execute
+per solve — python is never on the request path). Each step's dual
+contraction is the L1 Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fairrate import port_accumulate
+
+__all__ = ["fairrate_solve", "port_load"]
+
+_BIG = jnp.float32(3.0e38)
+
+
+def _step(carry, a, cap):
+    """One waterfilling iteration.
+
+    carry = (rates (F,), frozen (F,) 0/1). Finds the bottleneck fair
+    share theta over ports with active flows, freezes every active flow
+    crossing a bottleneck port at rate theta.
+    """
+    rates, frozen = carry
+    active = 1.0 - frozen
+    load, cnt = port_accumulate(a, rates * frozen, active)
+    # Residual fair share per port; +inf where no active flow crosses.
+    share = jnp.where(cnt > 0.5, jnp.maximum(cap - load, 0.0) / jnp.maximum(cnt, 1.0), _BIG)
+    theta = jnp.min(share)
+    done = theta >= _BIG  # all ports drained → no-op step
+    bottleneck = (share <= theta * 1.0000001 + 1e-12).astype(jnp.float32)
+    # Flows crossing any bottleneck port: (F,P)·(P,) > 0.
+    hit = (jnp.dot(a, bottleneck) > 0.5).astype(jnp.float32) * active
+    hit = jnp.where(done, jnp.zeros_like(hit), hit)
+    rates = rates + hit * theta * (1.0 - done)
+    frozen = jnp.minimum(frozen + hit, 1.0)
+    return rates, frozen
+
+
+def fairrate_solve(a, cap, valid, iters: int | None = None):
+    """Max-min fair rates for every valid flow.
+
+    a     : (F, P) f32 0/1 incidence matrix (padding rows all-zero).
+    cap   : (P,) f32 port capacities (padding ports: any positive value).
+    valid : (F,) f32 0/1 — which rows are real flows.
+    iters : static trip count; default P (each step freezes ≥1 port).
+
+    Returns (rates (F,), iterations-used-equivalent frozen mask (F,)).
+    """
+    f, p = a.shape
+    n_it = iters if iters is not None else p
+    rates0 = jnp.zeros((f,), jnp.float32)
+    frozen0 = 1.0 - valid.astype(jnp.float32)
+
+    def body(_, carry):
+        return _step(carry, a, cap)
+
+    rates, frozen = jax.lax.fori_loop(0, n_it, body, (rates0, frozen0))
+    return rates, frozen
+
+
+def port_load(a, rates, active):
+    """Standalone dual contraction (exported as its own artifact): the
+    coordinator also uses it to compute port loads / active-flow counts
+    for routed patterns without running a full solve."""
+    return port_accumulate(a, rates, active)

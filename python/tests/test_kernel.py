@@ -1,0 +1,67 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle, swept over
+shapes, block sizes, dtypes and value distributions (hypothesis-style
+parametrized sweep — the hypothesis package is not available offline, so
+the sweep is explicit and seeded)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels.fairrate import port_accumulate
+from compile.kernels.ref import ref_port_accumulate
+
+
+def _case(rng, f, p, density=0.3, binary=True):
+    a = (rng.random((f, p)) < density).astype(np.float32)
+    if not binary:
+        a = a * rng.random((f, p)).astype(np.float32)
+    r = rng.random(f).astype(np.float32)
+    u = (rng.random(f) < 0.5).astype(np.float32)
+    return a, r, u
+
+
+@pytest.mark.parametrize("f,p", [(8, 8), (16, 64), (64, 16), (256, 256), (512, 128), (1024, 1024)])
+def test_kernel_matches_ref_shapes(f, p):
+    rng = np.random.default_rng(f * 1000 + p)
+    a, r, u = _case(rng, f, p)
+    load, cnt = port_accumulate(a, r, u, block_f=min(256, f), block_p=min(256, p))
+    rload, rcnt = ref_port_accumulate(a, r, u)
+    np.testing.assert_allclose(np.asarray(load), np.asarray(rload), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cnt), np.asarray(rcnt), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bf,bp", [(8, 8), (8, 32), (32, 8), (64, 64)])
+def test_kernel_block_shapes(bf, bp):
+    rng = np.random.default_rng(bf * 100 + bp)
+    a, r, u = _case(rng, 64, 64)
+    load, cnt = port_accumulate(a, r, u, block_f=bf, block_p=bp)
+    rload, rcnt = ref_port_accumulate(a, r, u)
+    np.testing.assert_allclose(np.asarray(load), np.asarray(rload), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cnt), np.asarray(rcnt), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_kernel_random_sweep(seed):
+    rng = np.random.default_rng(seed)
+    f = int(rng.choice([8, 16, 32, 64, 128]))
+    p = int(rng.choice([8, 16, 32, 64, 128]))
+    a, r, u = _case(rng, f, p, density=float(rng.uniform(0.05, 0.9)), binary=bool(seed % 2))
+    load, cnt = port_accumulate(a, r, u, block_f=min(32, f), block_p=min(32, p))
+    rload, rcnt = ref_port_accumulate(a, r, u)
+    np.testing.assert_allclose(np.asarray(load), np.asarray(rload), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cnt), np.asarray(rcnt), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_zero_inputs():
+    a = np.zeros((16, 16), np.float32)
+    r = np.zeros(16, np.float32)
+    u = np.zeros(16, np.float32)
+    load, cnt = port_accumulate(a, r, u, block_f=16, block_p=16)
+    assert np.all(np.asarray(load) == 0)
+    assert np.all(np.asarray(cnt) == 0)
+
+
+def test_kernel_rejects_indivisible_blocks():
+    a = np.zeros((10, 16), np.float32)
+    with pytest.raises(ValueError):
+        port_accumulate(a, np.zeros(10, np.float32), np.zeros(10, np.float32),
+                        block_f=4, block_p=16)

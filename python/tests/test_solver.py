@@ -1,0 +1,93 @@
+"""L2 correctness: the fixed-iteration JAX waterfilling solver vs the
+exact python progressive-filling reference, plus hand-checked cases."""
+
+import numpy as np
+import pytest
+
+from compile.kernels.ref import ref_fairrate_exact
+from compile.model import fairrate_solve
+
+
+def _solve(a, cap, valid=None, iters=None):
+    a = np.asarray(a, np.float32)
+    cap = np.asarray(cap, np.float32)
+    if valid is None:
+        valid = (a.sum(axis=1) > 0).astype(np.float32)
+    rates, frozen = fairrate_solve(a, cap, np.asarray(valid, np.float32), iters=iters)
+    return np.asarray(rates), np.asarray(frozen)
+
+
+def test_single_bottleneck_shares_equally():
+    # 4 flows through one unit port → 0.25 each.
+    a = np.ones((4, 1), np.float32)
+    rates, frozen = _solve(a, [1.0])
+    np.testing.assert_allclose(rates, [0.25] * 4, rtol=1e-6)
+    assert np.all(frozen == 1.0)
+
+
+def test_two_tier_waterfilling():
+    # Flow 0 uses ports {0,1}; flow 1 uses {0}; flow 2 uses {1}.
+    # cap = [1, 2]. Port 0: share 0.5 → freeze flows 0,1 at 0.5.
+    # Port 1 residual 2-0.5 = 1.5 for flow 2 → 1.5.
+    a = np.array([[1, 1], [1, 0], [0, 1]], np.float32)
+    rates, _ = _solve(a, [1.0, 2.0])
+    np.testing.assert_allclose(rates, [0.5, 0.5, 1.5], rtol=1e-5)
+
+
+def test_invalid_flows_get_zero():
+    a = np.array([[1, 0], [1, 0], [0, 1]], np.float32)
+    rates, _ = _solve(a, [1.0, 1.0], valid=[1, 0, 1])
+    np.testing.assert_allclose(rates, [1.0, 0.0, 1.0], rtol=1e-5)
+
+
+def test_padding_rows_and_ports_are_inert():
+    # Same system embedded in a padded (8, 8) problem.
+    a = np.zeros((8, 8), np.float32)
+    a[0, 0] = a[0, 1] = 1
+    a[1, 0] = 1
+    a[2, 1] = 1
+    cap = np.ones(8, np.float32)
+    cap[1] = 2.0
+    valid = np.zeros(8, np.float32)
+    valid[:3] = 1
+    rates, _ = _solve(a, cap, valid=valid)
+    np.testing.assert_allclose(rates[:3], [0.5, 0.5, 1.5], rtol=1e-5)
+    np.testing.assert_allclose(rates[3:], 0.0)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_matches_exact_reference_random(seed):
+    rng = np.random.default_rng(seed)
+    f = int(rng.integers(4, 40))
+    p = int(rng.integers(2, 24))
+    a = (rng.random((f, p)) < 0.35).astype(np.float32)
+    a[a.sum(axis=1) == 0, rng.integers(0, p)] = 1  # every flow crosses ≥1 port
+    cap = rng.uniform(0.5, 4.0, p).astype(np.float32)
+    rates, frozen = _solve(a, cap)
+    expect = ref_fairrate_exact(a, cap)
+    assert np.all(frozen == 1.0), "all valid flows must freeze"
+    np.testing.assert_allclose(rates, expect, rtol=2e-4, atol=2e-4)
+
+
+def test_max_min_properties_random():
+    # No port over capacity; every flow bottlenecked somewhere.
+    rng = np.random.default_rng(123)
+    a = (rng.random((30, 12)) < 0.3).astype(np.float32)
+    a[a.sum(axis=1) == 0, 0] = 1
+    cap = rng.uniform(1.0, 3.0, 12).astype(np.float32)
+    rates, _ = _solve(a, cap)
+    load = a.T @ rates
+    assert np.all(load <= cap * (1 + 1e-4)), f"over capacity: {load} vs {cap}"
+    # Bottleneck property: each flow crosses a port that is (nearly) full.
+    full = load >= cap * (1 - 1e-3)
+    for fidx in range(30):
+        ports = a[fidx] > 0
+        assert full[ports].any(), f"flow {fidx} has slack everywhere"
+
+
+def test_iters_parameter_suffices():
+    # With iters == P the solve always converges (each step freezes ≥1 port).
+    a = np.eye(6, dtype=np.float32)
+    rates, frozen = _solve(a, np.arange(1, 7, dtype=np.float32), iters=6)
+    np.testing.assert_allclose(rates, np.arange(1, 7), rtol=1e-6)
+    assert np.all(frozen == 1.0)

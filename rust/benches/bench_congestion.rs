@@ -1,0 +1,111 @@
+//! E3/E4/E6/E7/E9 — the paper's central analysis, regenerated: the
+//! congestion table for every algorithm on both C2IO readings, the
+//! per-port detail behind Figs 4-7, and the hot-port ("congestion risk")
+//! comparison behind the conclusions' sevenfold claim.
+
+use pgft::metrics::{render_algorithm_table, AlgoSummary, CongestionReport};
+use pgft::prelude::*;
+use pgft::report::Table;
+use pgft::util::bench::Bench;
+use std::time::Duration;
+
+fn main() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+
+    println!("== paper analysis table (C2IO, both readings) ==");
+    let mut rows = Vec::new();
+    for pattern in [Pattern::C2ioSym, Pattern::C2ioAll] {
+        for kind in AlgorithmKind::ALL {
+            rows.push(AlgoSummary::compute(&topo, &types, kind, &pattern, 1).unwrap());
+        }
+    }
+    print!("{}", render_algorithm_table(&rows));
+
+    println!("\n== paper claims vs measured ==");
+    let mut t = Table::new("", &["claim", "paper", "measured"]);
+    let get = |a: &str, p: &str| {
+        rows.iter().find(|r| r.algorithm == a && r.pattern == p).unwrap()
+    };
+    let top = topo.spec.h;
+    t.row(&["C_topo(C2IO(Dmodk))".into(), "4".into(), get("dmodk", "c2io-sym").c_topo.to_string()]);
+    t.row(&[
+        "Dmodk hot top-ports".into(),
+        "2".into(),
+        get("dmodk", "c2io-sym").hot_per_level[top].to_string(),
+    ]);
+    t.row(&["C_topo(C2IO(Smodk))".into(), "4".into(), get("smodk", "c2io-sym").c_topo.to_string()]);
+    t.row(&[
+        "Smodk at-risk top-ports".into(),
+        "14".into(),
+        get("smodk", "c2io-sym").used_top_ports.to_string(),
+    ]);
+    t.row(&[
+        "C_topo(C2IO(Gdmodk)) dense".into(),
+        "2".into(),
+        get("gdmodk", "c2io-all").c_topo.to_string(),
+    ]);
+    t.row(&[
+        "C_topo(C2IO(Gdmodk)) 1:1 (=R_dst optimum)".into(),
+        "1".into(),
+        get("gdmodk", "c2io-sym").c_topo.to_string(),
+    ]);
+    t.row(&[
+        "C_topo(C2IO(Gsmodk))".into(),
+        "4".into(),
+        get("gsmodk", "c2io-sym").c_topo.to_string(),
+    ]);
+    t.row(&[
+        "Gsmodk used top-ports".into(),
+        "16".into(),
+        get("gsmodk", "c2io-sym").used_top_ports.to_string(),
+    ]);
+    t.row(&[
+        "sevenfold: Smodk/Dmodk at-risk top-ports".into(),
+        "14/2 = 7x".into(),
+        format!(
+            "{}/{} = {}x",
+            get("smodk", "c2io-sym").used_top_ports,
+            get("dmodk", "c2io-sym").hot_per_level[top],
+            get("smodk", "c2io-sym").used_top_ports
+                / get("dmodk", "c2io-sym").hot_per_level[top].max(1)
+        ),
+    ]);
+    print!("{}", t.to_text());
+
+    println!("\n== per-port detail: Fig 4 (Dmodk) hot ports ==");
+    let router = AlgorithmKind::Dmodk.build(&topo, Some(&types), 1);
+    let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+    let routes = trace_flows(&topo, &*router, &flows);
+    let rep = CongestionReport::compute(&topo, &routes);
+    for p in rep.hot_ports() {
+        let st = rep.per_port[p];
+        println!(
+            "  {}  routes={} srcs={} dsts={} C_p={}",
+            topo.port_label(p),
+            st.routes,
+            st.srcs,
+            st.dsts,
+            st.c()
+        );
+    }
+
+    println!("\n== timing ==");
+    let flows_all = Pattern::AllToAll.flows(&topo, &types).unwrap();
+    for kind in AlgorithmKind::ALL {
+        let router = kind.build(&topo, Some(&types), 1);
+        let name = format!("congestion/{}/c2io-sym", kind);
+        Bench::new(name).target_time(Duration::from_millis(300)).run(|_| {
+            let routes = trace_flows(&topo, &*router, &flows);
+            std::hint::black_box(CongestionReport::compute(&topo, &routes).c_topo());
+        });
+        let name = format!("congestion/{}/all-to-all", kind);
+        Bench::new(name)
+            .target_time(Duration::from_millis(300))
+            .throughput_elems(flows_all.len() as u64)
+            .run(|_| {
+                let routes = trace_flows(&topo, &*router, &flows_all);
+                std::hint::black_box(CongestionReport::compute(&topo, &routes).c_topo());
+            });
+    }
+}

@@ -1,0 +1,186 @@
+//! E13 — performance microbenchmarks of every hot path (the §Perf
+//! numbers in EXPERIMENTS.md): topology build, route tracing, table
+//! materialization, congestion metric, degraded reroute, fair-rate
+//! solvers (rust vs XLA artifact), packet-sim step rate.
+
+use pgft::prelude::*;
+use pgft::routing::degraded::{route_degraded, FaultSet};
+use pgft::routing::ForwardingTables;
+use pgft::sim::{solve_fairrate_exact, IncidenceMatrix, PacketSim, PacketSimConfig};
+use pgft::util::bench::Bench;
+use std::time::Duration;
+
+fn main() {
+    let case = build_pgft(&PgftSpec::case_study());
+    let medium = families::named("medium-512").unwrap();
+    let large = families::named("large-4096").unwrap();
+
+    println!("== topology construction ==");
+    for (label, spec) in [
+        ("case-study(64)", PgftSpec::case_study()),
+        ("medium(512)", medium.spec.clone()),
+        ("large(4096)", large.spec.clone()),
+    ] {
+        Bench::new(format!("topo-build/{label}"))
+            .target_time(Duration::from_millis(300))
+            .run(|_| {
+                std::hint::black_box(build_pgft(&spec));
+            });
+    }
+
+    println!("\n== route tracing (all-pairs) ==");
+    for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
+        let types = Placement::paper_io().apply(topo).unwrap();
+        let n = topo.num_nodes() as u32;
+        let flows: Vec<(u32, u32)> = (0..n)
+            .flat_map(|s| (0..n).filter(move |&d| d != s).map(move |d| (s, d)))
+            .collect();
+        for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk] {
+            let router = kind.build(topo, Some(&types), 1);
+            Bench::new(format!("trace/{kind}/{label}"))
+                .target_time(Duration::from_millis(400))
+                .samples(5, 100)
+                .throughput_elems(flows.len() as u64)
+                .run(|_| {
+                    std::hint::black_box(trace_flows(topo, &*router, &flows));
+                });
+        }
+    }
+
+    println!("\n== metric engine (all-pairs routes) ==");
+    for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
+        let types = Placement::paper_io().apply(topo).unwrap();
+        let n = topo.num_nodes() as u32;
+        let flows: Vec<(u32, u32)> = (0..n)
+            .flat_map(|s| (0..n).filter(move |&d| d != s).map(move |d| (s, d)))
+            .collect();
+        let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
+        let routes = trace_flows(topo, &*router, &flows);
+        let hops: u64 = routes.iter().map(|r| r.ports.len() as u64).sum();
+        Bench::new(format!("metric/{label}"))
+            .target_time(Duration::from_millis(400))
+            .samples(5, 100)
+            .throughput_elems(hops)
+            .run(|_| {
+                std::hint::black_box(
+                    pgft::metrics::CongestionReport::compute(topo, &routes).c_topo(),
+                );
+            });
+    }
+
+    println!("\n== metric ablations (§Perf iteration log) ==");
+    for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
+        let types = Placement::paper_io().apply(topo).unwrap();
+        let n = topo.num_nodes() as u32;
+        let flows: Vec<(u32, u32)> = (0..n)
+            .flat_map(|s| (0..n).filter(move |&d| d != s).map(move |d| (s, d)))
+            .collect();
+        let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
+        let routes = trace_flows(topo, &*router, &flows);
+        Bench::new(format!("metric-ablate/hashset/{label}"))
+            .target_time(Duration::from_millis(400))
+            .samples(3, 100)
+            .run(|_| {
+                std::hint::black_box(
+                    pgft::metrics::CongestionReport::compute_hashset(topo, &routes).c_topo(),
+                );
+            });
+        Bench::new(format!("metric-ablate/sort-dedup/{label}"))
+            .target_time(Duration::from_millis(400))
+            .samples(3, 100)
+            .run(|_| {
+                std::hint::black_box(
+                    pgft::metrics::CongestionReport::compute_sortdedup(topo, &routes).c_topo(),
+                );
+            });
+        Bench::new(format!("metric-ablate/bitmap/{label}"))
+            .target_time(Duration::from_millis(400))
+            .samples(3, 100)
+            .run(|_| {
+                std::hint::black_box(
+                    pgft::metrics::CongestionReport::compute(topo, &routes).c_topo(),
+                );
+            });
+        Bench::new(format!("metric-ablate/fused-arena/{label}"))
+            .target_time(Duration::from_millis(400))
+            .samples(3, 100)
+            .run(|_| {
+                std::hint::black_box(
+                    pgft::metrics::CongestionReport::compute_flows(topo, &*router, &flows)
+                        .c_topo(),
+                );
+            });
+    }
+
+    println!("\n== forwarding-table materialization ==");
+    for (label, topo) in [("case-study", &case), ("medium-512", &medium), ("large-4096", &large)] {
+        let router = AlgorithmKind::Dmodk.build(topo, None, 1);
+        let entries = (topo.num_switches() * topo.num_nodes()) as u64;
+        Bench::new(format!("tables/{label}"))
+            .target_time(Duration::from_millis(400))
+            .samples(3, 50)
+            .throughput_elems(entries)
+            .run(|_| {
+                std::hint::black_box(ForwardingTables::build(topo, &*router).unwrap());
+            });
+    }
+
+    println!("\n== degraded reroute (1 dead link, full recompute) ==");
+    for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
+        let mut faults = FaultSet::none(topo);
+        faults.kill(topo.links.iter().find(|l| l.stage == 2).unwrap().id);
+        Bench::new(format!("reroute/{label}"))
+            .target_time(Duration::from_millis(500))
+            .samples(3, 30)
+            .run(|_| {
+                std::hint::black_box(route_degraded(topo, &faults, None).unwrap());
+            });
+    }
+
+    println!("\n== fair-rate solvers ==");
+    let types = Placement::paper_io().apply(&case).unwrap();
+    let router = AlgorithmKind::Smodk.build(&case, Some(&types), 1);
+    let flows = Pattern::C2ioAll.flows(&case, &types).unwrap();
+    let routes = trace_flows(&case, &*router, &flows);
+    let inc = IncidenceMatrix::from_routes(&case, &routes);
+    println!("  problem: {} flows × {} ports", inc.num_flows(), inc.num_ports());
+    let cap64 = vec![1.0f64; inc.num_ports()];
+    Bench::new("fairrate/rust-exact/c2io-all")
+        .target_time(Duration::from_millis(400))
+        .run(|_| {
+            std::hint::black_box(solve_fairrate_exact(&inc, &cap64));
+        });
+    if let Ok(rt) = pgft::runtime::Runtime::open_default() {
+        let cap = vec![1.0f32; inc.num_ports()];
+        let valid = vec![1.0f32; inc.num_flows()];
+        rt.solve_fairrate(inc.dense(), inc.num_flows(), inc.num_ports(), &cap, &valid)
+            .unwrap(); // warm compile cache
+        Bench::new("fairrate/xla-pjrt/c2io-all")
+            .target_time(Duration::from_millis(600))
+            .run(|_| {
+                std::hint::black_box(
+                    rt.solve_fairrate(inc.dense(), inc.num_flows(), inc.num_ports(), &cap, &valid)
+                        .unwrap(),
+                );
+            });
+        let ones = vec![1.0f32; inc.num_flows()];
+        Bench::new("portload/xla-pjrt (dual contraction)")
+            .target_time(Duration::from_millis(400))
+            .run(|_| {
+                std::hint::black_box(
+                    rt.port_load(inc.dense(), inc.num_flows(), inc.num_ports(), &ones, &ones)
+                        .unwrap(),
+                );
+            });
+    }
+
+    println!("\n== packet sim ==");
+    Bench::new("packet-sim/c2io-sym/64pkt")
+        .target_time(Duration::from_millis(400))
+        .run(|_| {
+            let r = AlgorithmKind::Gdmodk.build(&case, Some(&types), 1);
+            let fl = Pattern::C2ioSym.flows(&case, &types).unwrap();
+            let routes = trace_flows(&case, &*r, &fl);
+            std::hint::black_box(PacketSim::new(&case, &routes, PacketSimConfig::default()).run());
+        });
+}

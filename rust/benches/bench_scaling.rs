@@ -1,0 +1,80 @@
+//! E11 — generalization beyond the case study: C_topo, hot-port counts
+//! and routing cost across PGFT scales for every algorithm, plus
+//! table-build throughput (the fabric-manager-side cost).
+
+use pgft::metrics::AlgoSummary;
+use pgft::prelude::*;
+use pgft::report::Table;
+use pgft::routing::ForwardingTables;
+use pgft::util::bench::Bench;
+use std::time::Duration;
+
+fn main() {
+    let topos = [
+        ("case-study (64)", "case-study"),
+        ("case-study-full (64)", "case-study-full"),
+        ("4-ary-3-tree (64)", "4-ary-3-tree"),
+        ("medium-512", "medium-512"),
+        ("large-4096", "large-4096"),
+    ];
+
+    println!("== C2IO congestion vs scale ==");
+    let mut t = Table::new(
+        "",
+        &["topology", "algo", "pattern", "C_topo", "hot_ports", "used_top", "total_top"],
+    );
+    for (label, name) in &topos {
+        let topo = families::named(name).unwrap();
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        for pattern in [Pattern::C2ioSym] {
+            for kind in [
+                AlgorithmKind::Dmodk,
+                AlgorithmKind::Smodk,
+                AlgorithmKind::Gdmodk,
+                AlgorithmKind::Gsmodk,
+            ] {
+                let s = AlgoSummary::compute(&topo, &types, kind, &pattern, 1).unwrap();
+                t.row(&[
+                    label.to_string(),
+                    s.algorithm.clone(),
+                    s.pattern.clone(),
+                    s.c_topo.to_string(),
+                    s.hot_total.to_string(),
+                    s.used_top_ports.to_string(),
+                    s.total_top_ports.to_string(),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.to_text());
+
+    println!("\n== routing cost vs scale ==");
+    for (label, name) in &topos {
+        let topo = families::named(name).unwrap();
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let n = topo.num_nodes();
+        // Table build (Dmodk): entries/s.
+        let router = AlgorithmKind::Dmodk.build(&topo, Some(&types), 1);
+        let entries = (topo.num_switches() * n) as u64;
+        Bench::new(format!("tables/dmodk/{label}"))
+            .target_time(Duration::from_millis(300))
+            .samples(5, 50)
+            .throughput_elems(entries)
+            .run(|_| {
+                std::hint::black_box(ForwardingTables::build(&topo, &*router).unwrap());
+            });
+        // Pattern metric end-to-end.
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        let gd = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+        Bench::new(format!("metric/gdmodk-c2io/{label}"))
+            .target_time(Duration::from_millis(300))
+            .samples(5, 50)
+            .throughput_elems(flows.len() as u64)
+            .run(|_| {
+                let routes = trace_flows(&topo, &*gd, &flows);
+                std::hint::black_box(
+                    pgft::metrics::CongestionReport::compute(&topo, &routes).c_topo(),
+                );
+            });
+    }
+}

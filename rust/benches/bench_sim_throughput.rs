@@ -1,0 +1,95 @@
+//! E10 — the simulation study the paper's conclusions call for:
+//! flow-level max-min throughput (through the AOT XLA/PJRT artifacts,
+//! with the exact rust solver as cross-check) and packet-level
+//! completion time, per algorithm on both C2IO readings.
+
+use pgft::prelude::*;
+use pgft::report::Table;
+use pgft::runtime::Runtime;
+use pgft::sim::{render_sim_table, simulate_flow_level, PacketSim, PacketSimConfig};
+use pgft::util::bench::Bench;
+use std::time::Duration;
+
+fn main() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let runtime = match Runtime::open_default() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            Some(rt)
+        }
+        Err(e) => {
+            println!("(XLA runtime unavailable: {e:#}; rust solver only)");
+            None
+        }
+    };
+
+    println!("== flow-level max-min fair rates ==");
+    let mut rows = Vec::new();
+    for pattern in [Pattern::C2ioSym, Pattern::C2ioAll] {
+        for kind in AlgorithmKind::ALL {
+            rows.push(
+                simulate_flow_level(&topo, &types, kind, &pattern, 1, runtime.as_ref()).unwrap(),
+            );
+        }
+    }
+    print!("{}", render_sim_table(&rows));
+
+    println!("\n== packet-level completion (64-packet messages) ==");
+    let mut t = Table::new(
+        "",
+        &["algo", "pattern", "completion_slots", "thru pkt/slot", "max_queue", "vs dmodk"],
+    );
+    for pattern in [Pattern::C2ioSym, Pattern::C2ioAll] {
+        let flows = pattern.flows(&topo, &types).unwrap();
+        let mut dmodk_slots = 0u64;
+        for kind in AlgorithmKind::ALL {
+            let router = kind.build(&topo, Some(&types), 1);
+            let routes = trace_flows(&topo, &*router, &flows);
+            let res = PacketSim::new(&topo, &routes, PacketSimConfig::default()).run();
+            if kind == AlgorithmKind::Dmodk {
+                dmodk_slots = res.completion_slots;
+            }
+            t.row(&[
+                kind.as_str().into(),
+                pattern.name(),
+                res.completion_slots.to_string(),
+                format!("{:.3}", res.throughput),
+                res.max_queue_depth.to_string(),
+                if dmodk_slots > 0 {
+                    format!("{:.2}x", dmodk_slots as f64 / res.completion_slots as f64)
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+    }
+    print!("{}", t.to_text());
+
+    println!("\n== solver timing (case-study C2IO incidence) ==");
+    let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+    let flows = Pattern::C2ioAll.flows(&topo, &types).unwrap();
+    let routes = trace_flows(&topo, &*router, &flows);
+    let inc = pgft::sim::IncidenceMatrix::from_routes(&topo, &routes);
+    let cap64 = vec![1.0f64; inc.num_ports()];
+    Bench::new("fairrate/rust-exact")
+        .target_time(Duration::from_millis(400))
+        .run(|_| {
+            std::hint::black_box(pgft::sim::solve_fairrate_exact(&inc, &cap64));
+        });
+    if let Some(rt) = &runtime {
+        let cap = vec![1.0f32; inc.num_ports()];
+        let valid = vec![1.0f32; inc.num_flows()];
+        // Warm the executable cache, then time pure execute.
+        rt.solve_fairrate(inc.dense(), inc.num_flows(), inc.num_ports(), &cap, &valid)
+            .unwrap();
+        Bench::new("fairrate/xla-pjrt (1 execute)")
+            .target_time(Duration::from_millis(600))
+            .run(|_| {
+                std::hint::black_box(
+                    rt.solve_fairrate(inc.dense(), inc.num_flows(), inc.num_ports(), &cap, &valid)
+                        .unwrap(),
+                );
+            });
+    }
+}

@@ -1,0 +1,41 @@
+//! E8 — the §IV.B symmetry identities, measured: C_topo for every
+//! algorithm on C2IO (P) and its reverse IO2C (Q), showing
+//! P(Dmodk)=Q(Smodk), P(Gdmodk)=Q(Gsmodk), etc.
+
+use pgft::metrics::CongestionReport;
+use pgft::prelude::*;
+use pgft::report::Table;
+
+fn c_topo(topo: &Topology, types: &NodeTypeMap, kind: AlgorithmKind, pat: &Pattern) -> u32 {
+    let router = kind.build(topo, Some(types), 1);
+    let flows = pat.flows(topo, types).unwrap();
+    let routes = trace_flows(topo, &*router, &flows);
+    CongestionReport::compute(topo, &routes).c_topo()
+}
+
+fn main() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+
+    for (p, q) in [
+        (Pattern::C2ioSym, Pattern::Io2cSym),
+        (Pattern::C2ioAll, Pattern::Io2cAll),
+    ] {
+        let mut t = Table::new(
+            format!("symmetry: P = {}, Q = {}", p.name(), q.name()),
+            &["identity", "lhs", "rhs", "holds"],
+        );
+        use AlgorithmKind::*;
+        let pairs = [
+            ("C(P(Dmodk)) = C(Q(Smodk))", c_topo(&topo, &types, Dmodk, &p), c_topo(&topo, &types, Smodk, &q)),
+            ("C(Q(Dmodk)) = C(P(Smodk))", c_topo(&topo, &types, Dmodk, &q), c_topo(&topo, &types, Smodk, &p)),
+            ("C(P(Gdmodk)) = C(Q(Gsmodk))", c_topo(&topo, &types, Gdmodk, &p), c_topo(&topo, &types, Gsmodk, &q)),
+            ("C(Q(Gdmodk)) = C(P(Gsmodk))", c_topo(&topo, &types, Gdmodk, &q), c_topo(&topo, &types, Gsmodk, &p)),
+        ];
+        for (name, l, r) in pairs {
+            t.row(&[name.into(), l.to_string(), r.to_string(), (l == r).to_string()]);
+        }
+        print!("{}", t.to_text());
+        println!();
+    }
+}

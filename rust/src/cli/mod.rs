@@ -1,0 +1,450 @@
+//! Command-line interface (zero-dep argument parser; `clap` is not in the
+//! offline vendor set).
+//!
+//! ```text
+//! pgft topo --topo case-study [--dot] [--leaves] [--placement io:last:1]
+//! pgft analyze [--topo ..] [--placement ..] [--pattern c2io-sym,c2io-all]
+//!              [--algo all|dmodk,...] [--seed N] [--format text|csv|json] [--out FILE]
+//! pgft ports --algo dmodk --pattern c2io-sym [--level 3]      # per-port detail (Figs 4-7)
+//! pgft random-dist [--trials 1000] [--pattern c2io-sym]       # §III.D histogram
+//! pgft simulate [--xla|--no-xla] [--pattern ..] [--algo ..]   # flow-level rates
+//! pgft packet-sim [--message 64] [--pattern ..] [--algo ..]   # slot-level sim
+//! pgft run --config FILE                                      # full experiment
+//! pgft fabric-demo [--algo gdmodk]                            # coordinator + fault drill
+//! pgft artifacts                                              # runtime manifest
+//! ```
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::Coordinator;
+use crate::metrics::{render_algorithm_table, AlgoSummary, CongestionReport};
+use crate::nodes::{NodeTypeMap, Placement};
+use crate::patterns::Pattern;
+use crate::report::Table;
+use crate::routing::trace::trace_flows;
+use crate::routing::AlgorithmKind;
+use crate::sim::{render_sim_table, simulate_flow_level, PacketSim, PacketSimConfig};
+use crate::topology::{families, render, Topology};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Parsed `--key value` / `--flag` arguments.
+pub struct Args {
+    pub cmd: String,
+    opts: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+        let mut opts = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("expected --option, got {a:?}"))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                opts.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { cmd, opts })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn load_topo(args: &Args) -> Result<(Topology, NodeTypeMap)> {
+    let topo = families::named(&args.get_or("topo", "case-study"))?;
+    crate::topology::validate::validate(&topo)?;
+    let placement = Placement::parse(&args.get_or("placement", "io:last:1"))?;
+    let types = placement.apply(&topo)?;
+    Ok((topo, types))
+}
+
+fn parse_algos(args: &Args) -> Result<Vec<AlgorithmKind>> {
+    let spec = args.get_or("algo", "all");
+    if spec == "all" {
+        return Ok(AlgorithmKind::ALL.to_vec());
+    }
+    spec.split(',').map(AlgorithmKind::parse).collect()
+}
+
+fn parse_patterns(args: &Args, default: &str) -> Result<Vec<Pattern>> {
+    args.get_or("pattern", default)
+        .split(',')
+        .map(Pattern::parse)
+        .collect()
+}
+
+fn emit(table: &Table, args: &Args) -> Result<()> {
+    let format = args.get_or("format", "text");
+    if let Some(path) = args.get("out") {
+        table.write(path, &format)?;
+        eprintln!("wrote {path}");
+    } else {
+        let body = match format.as_str() {
+            "csv" => table.to_csv(),
+            "json" => table.to_json(),
+            _ => table.to_text(),
+        };
+        print!("{body}");
+    }
+    Ok(())
+}
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "topo" => cmd_topo(&args),
+        "analyze" => cmd_analyze(&args),
+        "ports" => cmd_ports(&args),
+        "random-dist" => cmd_random_dist(&args),
+        "simulate" => cmd_simulate(&args),
+        "packet-sim" => cmd_packet_sim(&args),
+        "run" => cmd_run(&args),
+        "fabric-demo" => cmd_fabric_demo(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `pgft help`"),
+    }
+}
+
+const HELP: &str = r#"pgft — node-type-based load-balancing routing for PGFTs
+
+commands:
+  topo         show a topology (--topo case-study|medium-512|PGFT(...); --dot; --leaves)
+  analyze      congestion table per algorithm × pattern (the paper's analysis)
+  ports        per-port detail for one algorithm/pattern (Figs 4-7)
+  random-dist  C_topo histogram over random-routing seeds (§III.D)
+  simulate     flow-level max-min throughput (XLA/PJRT or rust solver)
+  packet-sim   slot-level packet simulation (completion time)
+  run          full experiment from a TOML config (--config FILE)
+  fabric-demo  coordinator lifecycle: route, fail links, reroute, report
+  artifacts    list AOT artifacts the runtime can execute
+common options:
+  --topo NAME --placement SPEC --algo LIST|all --pattern LIST --seed N
+  --format text|csv|json --out FILE
+"#;
+
+fn cmd_topo(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    print!("{}", render::render_summary(&topo, Some(&types)));
+    if args.flag("leaves") {
+        print!("{}", render::render_leaves(&topo, &types));
+    }
+    if args.flag("dot") {
+        print!("{}", render::render_dot(&topo, Some(&types)));
+    }
+    Ok(())
+}
+
+fn summary_table(rows: &[AlgoSummary]) -> Table {
+    let mut t = Table::new(
+        "congestion analysis (static metric, §III.A)",
+        &["algo", "pattern", "flows", "C_topo", "hot_ports", "hot_top", "used_top", "total_top"],
+    );
+    for r in rows {
+        let h = r.hot_per_level.len() - 1;
+        t.row(&[
+            r.algorithm.clone(),
+            r.pattern.clone(),
+            r.flows.to_string(),
+            r.c_topo.to_string(),
+            r.hot_total.to_string(),
+            r.hot_per_level[h].to_string(),
+            r.used_top_ports.to_string(),
+            r.total_top_ports.to_string(),
+        ]);
+    }
+    t
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let seed = args.u64_or("seed", 1)?;
+    let mut rows = Vec::new();
+    for pattern in parse_patterns(args, "c2io-sym,c2io-all")? {
+        for kind in parse_algos(args)? {
+            rows.push(AlgoSummary::compute(&topo, &types, kind, &pattern, seed)?);
+        }
+    }
+    emit(&summary_table(&rows), args)?;
+    eprintln!();
+    eprint!("{}", render_algorithm_table(&rows));
+    Ok(())
+}
+
+fn cmd_ports(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let kind = AlgorithmKind::parse(&args.get_or("algo", "dmodk"))?;
+    let pattern = Pattern::parse(&args.get_or("pattern", "c2io-sym"))?;
+    let router = kind.build(&topo, Some(&types), args.u64_or("seed", 1)?);
+    let flows = pattern.flows(&topo, &types)?;
+    let routes = trace_flows(&topo, &*router, &flows);
+    let rep = CongestionReport::compute(&topo, &routes);
+    let level: Option<usize> = args.get("level").map(|v| v.parse()).transpose()?;
+    let mut t = Table::new(
+        format!("per-port flows: {} on {}", kind, pattern.name()),
+        &["port", "dir", "level", "routes", "srcs", "dsts", "C_p"],
+    );
+    for port in &topo.ports {
+        let st = rep.per_port[port.id];
+        if st.routes == 0 {
+            continue;
+        }
+        let lvl = topo.port_level(port.id);
+        if let Some(l) = level {
+            if lvl != l {
+                continue;
+            }
+        }
+        t.row(&[
+            topo.port_label(port.id),
+            if port.up { "up".into() } else { "down".into() },
+            lvl.to_string(),
+            st.routes.to_string(),
+            st.srcs.to_string(),
+            st.dsts.to_string(),
+            st.c().to_string(),
+        ]);
+    }
+    emit(&t, args)?;
+    eprintln!("C_topo = {}", rep.c_topo());
+    Ok(())
+}
+
+fn cmd_random_dist(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let pattern = Pattern::parse(&args.get_or("pattern", "c2io-sym"))?;
+    let trials = args.u64_or("trials", 1000)?;
+    let flows = pattern.flows(&topo, &types)?;
+    let mut hist: BTreeMap<u32, u64> = BTreeMap::new();
+    for seed in 0..trials {
+        let router = AlgorithmKind::Random.build(&topo, Some(&types), seed);
+        *hist
+            .entry(CongestionReport::compute_flows(&topo, &*router, &flows).c_topo())
+            .or_default() += 1;
+    }
+    let mut t = Table::new(
+        format!("C_topo distribution over {trials} random routings ({})", pattern.name()),
+        &["C_topo", "count", "fraction"],
+    );
+    for (c, n) in &hist {
+        t.row(&[c.to_string(), n.to_string(), format!("{:.4}", *n as f64 / trials as f64)]);
+    }
+    emit(&t, args)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let seed = args.u64_or("seed", 1)?;
+    let runtime = if args.flag("no-xla") {
+        None
+    } else {
+        match crate::runtime::Runtime::open_default() {
+            Ok(rt) => {
+                eprintln!("PJRT platform: {}", rt.platform());
+                Some(rt)
+            }
+            Err(e) => {
+                eprintln!("XLA runtime unavailable ({e:#}); using rust solver");
+                None
+            }
+        }
+    };
+    let mut rows = Vec::new();
+    for pattern in parse_patterns(args, "c2io-sym")? {
+        for kind in parse_algos(args)? {
+            rows.push(simulate_flow_level(&topo, &types, kind, &pattern, seed, runtime.as_ref())?);
+        }
+    }
+    let mut t = Table::new(
+        "flow-level max-min simulation",
+        &["algo", "pattern", "flows", "agg_thru", "min_rate", "completion", "C_topo", "solver"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.algorithm.clone(),
+            r.pattern.clone(),
+            r.flows.to_string(),
+            format!("{:.3}", r.aggregate_throughput),
+            format!("{:.4}", r.min_rate),
+            format!("{:.2}", r.completion_time),
+            r.c_topo.to_string(),
+            r.solver.clone(),
+        ]);
+    }
+    emit(&t, args)?;
+    eprint!("{}", render_sim_table(&rows));
+    Ok(())
+}
+
+fn cmd_packet_sim(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let seed = args.u64_or("seed", 1)?;
+    let cfg = PacketSimConfig {
+        message_packets: args.u64_or("message", 64)? as u32,
+        queue_capacity: args.u64_or("queue", 8)? as usize,
+        max_slots: args.u64_or("max-slots", 1_000_000)?,
+    };
+    let mut t = Table::new(
+        "packet-level simulation",
+        &["algo", "pattern", "flows", "completion_slots", "throughput", "max_queue"],
+    );
+    for pattern in parse_patterns(args, "c2io-sym")? {
+        let flows = pattern.flows(&topo, &types)?;
+        for kind in parse_algos(args)? {
+            let router = kind.build(&topo, Some(&types), seed);
+            let routes = trace_flows(&topo, &*router, &flows);
+            let res = PacketSim::new(&topo, &routes, cfg.clone()).run();
+            t.row(&[
+                kind.as_str().to_string(),
+                pattern.name(),
+                flows.len().to_string(),
+                res.completion_slots.to_string(),
+                format!("{:.3}", res.throughput),
+                res.max_queue_depth.to_string(),
+            ]);
+        }
+    }
+    emit(&t, args)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args.get("config").context("--config FILE required")?;
+    let cfg = ExperimentConfig::from_file(path)?;
+    let topo = crate::topology::build_pgft(&cfg.topology);
+    crate::topology::validate::validate(&topo)?;
+    let types = cfg.placement.apply(&topo)?;
+    println!("{}", render::render_summary(&topo, Some(&types)));
+
+    // Static analysis.
+    let mut rows = Vec::new();
+    for pattern in &cfg.patterns {
+        for &kind in &cfg.algorithms {
+            rows.push(AlgoSummary::compute(&topo, &types, kind, pattern, cfg.seed)?);
+        }
+    }
+    print!("{}", render_algorithm_table(&rows));
+
+    // Flow-level simulation.
+    let runtime = if cfg.use_xla { crate::runtime::Runtime::open_default().ok() } else { None };
+    let mut sims = Vec::new();
+    for pattern in &cfg.patterns {
+        for &kind in &cfg.algorithms {
+            sims.push(simulate_flow_level(&topo, &types, kind, pattern, cfg.seed, runtime.as_ref())?);
+        }
+    }
+    print!("{}", render_sim_table(&sims));
+    Ok(())
+}
+
+fn cmd_fabric_demo(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let kind = AlgorithmKind::parse(&args.get_or("algo", "gdmodk"))?;
+    let topo = Arc::new(topo);
+    let coord = Coordinator::start(topo.clone(), types, kind, args.u64_or("seed", 1)?)?;
+    println!("fabric up: {:?}", coord.stats()?);
+    println!("C2IO analysis: {:?}", coord.analyze(Pattern::C2ioSym)?.c_topo);
+    // Fault drill: kill two top-stage links, reroute, verify, revive.
+    let victims: Vec<_> = topo.links.iter().filter(|l| l.stage == topo.spec.h).take(2).collect();
+    for v in &victims {
+        coord.link_down(v.id);
+        let s = coord.stats()?;
+        println!(
+            "link {} down → v{} reroute {} µs, diff {} entries",
+            v.id, s.table_version, s.last_reroute_micros, s.last_diff_entries
+        );
+    }
+    println!("degraded C2IO C_topo: {}", coord.analyze(Pattern::C2ioSym)?.c_topo);
+    for v in &victims {
+        coord.link_up(v.id);
+    }
+    println!("healed: {:?}", coord.stats()?);
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    let rt = crate::runtime::Runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut t = Table::new("AOT artifacts", &["name", "kind", "flows", "ports", "iters"]);
+    for a in rt.manifest() {
+        t.row(&[
+            a.name.clone(),
+            a.kind.clone(),
+            a.flows.to_string(),
+            a.ports.to_string(),
+            a.iters.to_string(),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn args_parse_forms() {
+        let a = Args::parse(&argv(&["analyze", "--algo", "dmodk", "--dot", "--seed", "3"])).unwrap();
+        assert_eq!(a.cmd, "analyze");
+        assert_eq!(a.get("algo"), Some("dmodk"));
+        assert!(a.flag("dot"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 3);
+        assert_eq!(a.get_or("missing", "x"), "x");
+        assert!(Args::parse(&argv(&["c", "oops"])).is_err());
+    }
+
+    #[test]
+    fn analyze_command_runs() {
+        run(&argv(&["analyze", "--algo", "dmodk,gdmodk", "--pattern", "c2io-sym"])).unwrap();
+    }
+
+    #[test]
+    fn topo_command_runs() {
+        run(&argv(&["topo", "--leaves"])).unwrap();
+        run(&argv(&["topo", "--topo", "4-ary-2-tree"])).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert!(run(&argv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn random_dist_small() {
+        run(&argv(&["random-dist", "--trials", "5"])).unwrap();
+    }
+}

@@ -1,0 +1,305 @@
+//! Experiment configuration: a zero-dependency TOML-subset parser plus
+//! the typed experiment config the launcher consumes.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with
+//! string / integer / float / boolean / flat array values, `#` comments.
+//! That covers every config this repo ships; nested tables and dates are
+//! intentionally out of scope (the offline vendor set has no `toml`
+//! crate — see DESIGN.md substitutions).
+
+use crate::nodes::Placement;
+use crate::patterns::Pattern;
+use crate::routing::AlgorithmKind;
+use crate::topology::PgftSpec;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_str_array(&self) -> Result<Vec<String>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_str().map(str::to_string)).collect(),
+            Value::Str(s) => Ok(vec![s.clone()]),
+            other => bail!("expected array of strings, got {other:?}"),
+        }
+    }
+}
+
+/// Parsed document: section → key → value. Top-level keys live in `""`.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value: {raw:?}", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str, default: i64) -> Result<i64> {
+        match self.get(section, key) {
+            Some(v) => v.as_int(),
+            None => Ok(default),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    ensure!(!s.is_empty(), "empty value");
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?} (quote strings)")
+}
+
+/// Split on top-level commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// The typed experiment configuration used by `pgft run --config`.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub topology: PgftSpec,
+    pub placement: Placement,
+    pub algorithms: Vec<AlgorithmKind>,
+    pub patterns: Vec<Pattern>,
+    pub seed: u64,
+    pub sim_message_packets: u32,
+    pub use_xla: bool,
+}
+
+impl ExperimentConfig {
+    pub fn from_doc(doc: &Doc) -> Result<ExperimentConfig> {
+        let topo_name = doc.get_str("topology", "spec", "case-study")?;
+        let topology = crate::topology::families::named_spec(&topo_name)?;
+        let placement =
+            Placement::parse(&doc.get_str("topology", "placement", "io:last:1")?)?;
+        let algos = match doc.get("run", "algorithms") {
+            Some(v) => v.as_str_array()?,
+            None => AlgorithmKind::ALL.iter().map(|k| k.as_str().to_string()).collect(),
+        };
+        let algorithms = algos
+            .iter()
+            .map(|a| AlgorithmKind::parse(a))
+            .collect::<Result<Vec<_>>>()?;
+        let pats = match doc.get("run", "patterns") {
+            Some(v) => v.as_str_array()?,
+            None => vec!["c2io-sym".to_string(), "c2io-all".to_string()],
+        };
+        let patterns = pats.iter().map(|p| Pattern::parse(p)).collect::<Result<Vec<_>>>()?;
+        Ok(ExperimentConfig {
+            topology,
+            placement,
+            algorithms,
+            patterns,
+            seed: doc.get_int("run", "seed", 1)? as u64,
+            sim_message_packets: doc.get_int("sim", "message_packets", 64)? as u32,
+            use_xla: doc
+                .get("sim", "use_xla")
+                .map(|v| v.as_bool())
+                .transpose()?
+                .unwrap_or(true),
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        Self::from_doc(&Doc::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# demo config
+[topology]
+spec = "case-study"          # the paper's PGFT
+placement = "io:last:1"
+
+[run]
+algorithms = ["dmodk", "gdmodk"]
+patterns = ["c2io-sym"]
+seed = 7
+
+[sim]
+message_packets = 32
+use_xla = false
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("topology", "spec", "").unwrap(), "case-study");
+        assert_eq!(doc.get_int("run", "seed", 0).unwrap(), 7);
+        assert_eq!(doc.get("sim", "use_xla").unwrap().as_bool().unwrap(), false);
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.topology, PgftSpec::case_study());
+        assert_eq!(cfg.algorithms, vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk]);
+        assert_eq!(cfg.patterns.len(), 1);
+        assert_eq!(cfg.sim_message_packets, 32);
+        assert!(!cfg.use_xla);
+    }
+
+    #[test]
+    fn value_forms() {
+        let doc = Doc::parse(
+            "a = 1\nb = 2.5\nc = \"x # y\"\nd = [1, 2, 3]\ne = true\n[s]\nf = [\"p,q\", \"r\"]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("", "b").unwrap().as_float().unwrap(), 2.5);
+        assert_eq!(doc.get("", "c").unwrap().as_str().unwrap(), "x # y");
+        assert_eq!(
+            doc.get("", "d").unwrap(),
+            &Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert!(doc.get("", "e").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("s", "f").unwrap().as_str_array().unwrap(), vec!["p,q", "r"]);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("x = ").is_err());
+        assert!(Doc::parse("x = \"unterminated").is_err());
+        assert!(Doc::parse("x = [1, 2").is_err());
+        assert!(Doc::parse("x = what").is_err());
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = ExperimentConfig::from_doc(&Doc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.algorithms.len(), 6);
+        assert_eq!(cfg.patterns.len(), 2);
+        assert!(cfg.use_xla);
+    }
+}

@@ -1,0 +1,341 @@
+//! Fabric-manager coordinator, in the style of the BXI routing
+//! architecture (Vigneras & Quintin [8]): a leader thread owns the
+//! fabric state — topology, node types, routing algorithm, fault set,
+//! versioned forwarding tables — and processes events (link up/down,
+//! algorithm change, analysis queries) from a command channel. Route
+//! recomputation after faults uses the procedural degraded router seeded
+//! with the Gxmodk type re-index, and the coordinator reports incremental
+//! table-diff sizes (what would be pushed to switches) and reroute
+//! latency.
+//!
+//! The offline vendor set has no tokio; the event loop is a plain thread
+//! over `std::sync::mpsc`, which a fabric manager would arguably prefer
+//! anyway (single writer, strictly ordered events).
+
+use crate::metrics::AlgoSummary;
+use crate::nodes::{NodeTypeMap, TypeReindex};
+use crate::patterns::Pattern;
+use crate::routing::degraded::{route_degraded, FaultSet};
+use crate::routing::table::ForwardingTables;
+use crate::routing::trace::{trace_flows, RoutePorts};
+use crate::routing::AlgorithmKind;
+use crate::topology::{LinkId, Nid, Topology};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Snapshot of coordinator state for monitoring.
+#[derive(Clone, Debug)]
+pub struct FabricStats {
+    pub algorithm: AlgorithmKind,
+    pub table_version: u64,
+    pub reroutes: u64,
+    pub dead_links: usize,
+    pub table_entries: usize,
+    pub last_reroute_micros: u64,
+    pub last_diff_entries: usize,
+    pub degraded: bool,
+}
+
+enum Command {
+    LinkDown(LinkId),
+    LinkUp(LinkId),
+    SetAlgorithm(AlgorithmKind),
+    Analyze { pattern: Pattern, reply: Sender<Result<AlgoSummary>> },
+    TraceFlows { flows: Vec<(Nid, Nid)>, reply: Sender<Vec<RoutePorts>> },
+    Stats(Sender<FabricStats>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator thread.
+pub struct Coordinator {
+    tx: Sender<Command>,
+    join: Option<JoinHandle<()>>,
+}
+
+struct State {
+    topo: Arc<Topology>,
+    types: NodeTypeMap,
+    reindex: TypeReindex,
+    kind: AlgorithmKind,
+    seed: u64,
+    faults: FaultSet,
+    /// Current tables: router-derived when healthy & dest-based,
+    /// degraded-procedural otherwise.
+    tables: Option<ForwardingTables>,
+    version: u64,
+    reroutes: u64,
+    last_reroute_micros: u64,
+    last_diff_entries: usize,
+}
+
+impl State {
+    fn rebuild_tables(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let new = if self.faults.num_dead() == 0 {
+            let router = self.kind.build(&self.topo, Some(&self.types), self.seed);
+            if router.dest_based() {
+                ForwardingTables::build(&self.topo, &*router)?
+            } else {
+                // Source-based healthy fabric: per-ingress tables are
+                // implicit in the router; the distributable dest-based
+                // form falls back to the procedural balancer with the
+                // same re-index.
+                route_degraded(&self.topo, &self.faults, self.grouped_reindex())?
+            }
+        } else {
+            route_degraded(&self.topo, &self.faults, self.grouped_reindex())?
+        };
+        let diff = match &self.tables {
+            Some(old) => old.diff_entries(&new),
+            None => new.num_entries(),
+        };
+        self.last_diff_entries = diff;
+        self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+        self.version += 1;
+        self.reroutes += 1;
+        let mut new = new;
+        new.version = self.version;
+        self.tables = Some(new);
+        Ok(())
+    }
+
+    fn grouped_reindex(&self) -> Option<&TypeReindex> {
+        if self.kind.is_grouped() {
+            Some(&self.reindex)
+        } else {
+            None
+        }
+    }
+
+    /// Trace flows with the *current* state: healthy fabric uses the
+    /// algorithm's router directly; degraded fabric walks the tables.
+    fn trace(&self, flows: &[(Nid, Nid)]) -> Vec<RoutePorts> {
+        if self.faults.num_dead() == 0 {
+            let router = self.kind.build(&self.topo, Some(&self.types), self.seed);
+            trace_flows(&self.topo, &*router, flows)
+        } else {
+            let t = self.tables.as_ref().expect("tables exist after rebuild");
+            flows.iter().map(|&(s, d)| t.trace(&self.topo, s, d)).collect()
+        }
+    }
+}
+
+impl Coordinator {
+    pub fn start(
+        topo: Arc<Topology>,
+        types: NodeTypeMap,
+        kind: AlgorithmKind,
+        seed: u64,
+    ) -> Result<Coordinator> {
+        let reindex = TypeReindex::new(&types);
+        let faults = FaultSet::none(&topo);
+        let mut state = State {
+            topo,
+            types,
+            reindex,
+            kind,
+            seed,
+            faults,
+            tables: None,
+            version: 0,
+            reroutes: 0,
+            last_reroute_micros: 0,
+            last_diff_entries: 0,
+        };
+        state.rebuild_tables()?;
+        let (tx, rx) = channel::<Command>();
+        let join = std::thread::Builder::new()
+            .name("pgft-fabric-leader".into())
+            .spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Command::LinkDown(l) => {
+                            state.faults.kill(l);
+                            if let Err(e) = state.rebuild_tables() {
+                                eprintln!("reroute after link {l} down failed: {e:#}");
+                            }
+                        }
+                        Command::LinkUp(l) => {
+                            state.faults.revive(l);
+                            if let Err(e) = state.rebuild_tables() {
+                                eprintln!("reroute after link {l} up failed: {e:#}");
+                            }
+                        }
+                        Command::SetAlgorithm(k) => {
+                            state.kind = k;
+                            if let Err(e) = state.rebuild_tables() {
+                                eprintln!("algorithm switch failed: {e:#}");
+                            }
+                        }
+                        Command::Analyze { pattern, reply } => {
+                            let res = (|| {
+                                let flows = pattern.flows(&state.topo, &state.types)?;
+                                let routes = state.trace(&flows);
+                                let rep =
+                                    crate::metrics::CongestionReport::compute(&state.topo, &routes);
+                                Ok(AlgoSummary::from_report(
+                                    &state.topo,
+                                    &rep,
+                                    state.kind.as_str(),
+                                    &pattern.name(),
+                                    flows.len(),
+                                ))
+                            })();
+                            let _ = reply.send(res);
+                        }
+                        Command::TraceFlows { flows, reply } => {
+                            let _ = reply.send(state.trace(&flows));
+                        }
+                        Command::Stats(reply) => {
+                            let _ = reply.send(FabricStats {
+                                algorithm: state.kind,
+                                table_version: state.version,
+                                reroutes: state.reroutes,
+                                dead_links: state.faults.num_dead(),
+                                table_entries: state
+                                    .tables
+                                    .as_ref()
+                                    .map(|t| t.num_entries())
+                                    .unwrap_or(0),
+                                last_reroute_micros: state.last_reroute_micros,
+                                last_diff_entries: state.last_diff_entries,
+                                degraded: state.faults.num_dead() > 0,
+                            });
+                        }
+                        Command::Shutdown => break,
+                    }
+                }
+            })?;
+        Ok(Coordinator { tx, join: Some(join) })
+    }
+
+    pub fn link_down(&self, l: LinkId) {
+        let _ = self.tx.send(Command::LinkDown(l));
+    }
+
+    pub fn link_up(&self, l: LinkId) {
+        let _ = self.tx.send(Command::LinkUp(l));
+    }
+
+    pub fn set_algorithm(&self, k: AlgorithmKind) {
+        let _ = self.tx.send(Command::SetAlgorithm(k));
+    }
+
+    pub fn stats(&self) -> Result<FabricStats> {
+        let (tx, rx) = channel();
+        self.tx.send(Command::Stats(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator stopped"))
+    }
+
+    pub fn analyze(&self, pattern: Pattern) -> Result<AlgoSummary> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Analyze { pattern, reply: tx })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator stopped"))?
+    }
+
+    pub fn trace(&self, flows: Vec<(Nid, Nid)>) -> Result<Vec<RoutePorts>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::TraceFlows { flows, reply: tx })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator stopped"))
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn start(kind: AlgorithmKind) -> (Arc<Topology>, Coordinator) {
+        let topo = Arc::new(build_pgft(&PgftSpec::case_study()));
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let c = Coordinator::start(topo.clone(), types, kind, 1).unwrap();
+        (topo, c)
+    }
+
+    #[test]
+    fn startup_and_stats() {
+        let (_t, c) = start(AlgorithmKind::Gdmodk);
+        let s = c.stats().unwrap();
+        assert_eq!(s.algorithm, AlgorithmKind::Gdmodk);
+        assert_eq!(s.table_version, 1);
+        assert_eq!(s.dead_links, 0);
+        assert!(s.table_entries > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn analyze_matches_direct_metric() {
+        let (_t, c) = start(AlgorithmKind::Dmodk);
+        let s = c.analyze(Pattern::C2ioSym).unwrap();
+        assert_eq!(s.c_topo, 4, "§III.B through the coordinator");
+        c.shutdown();
+    }
+
+    #[test]
+    fn link_failure_triggers_degraded_reroute() {
+        let (topo, c) = start(AlgorithmKind::Gdmodk);
+        let victim = topo.links.iter().find(|l| l.stage == 3).unwrap().id;
+        c.link_down(victim);
+        let s = c.stats().unwrap();
+        assert!(s.degraded);
+        assert_eq!(s.dead_links, 1);
+        assert_eq!(s.table_version, 2);
+        assert!(s.last_diff_entries > 0, "incremental diff recorded");
+        // Routes avoid the dead link.
+        let routes = c.trace(vec![(0, 63), (63, 0), (8, 47)]).unwrap();
+        for r in &routes {
+            for &p in &r.ports {
+                assert_ne!(topo.ports[p].link, victim);
+            }
+        }
+        // Revive: back to healthy routing.
+        c.link_up(victim);
+        let s = c.stats().unwrap();
+        assert!(!s.degraded);
+        assert_eq!(s.table_version, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn algorithm_switch_changes_analysis() {
+        let (_t, c) = start(AlgorithmKind::Dmodk);
+        assert_eq!(c.analyze(Pattern::C2ioSym).unwrap().c_topo, 4);
+        c.set_algorithm(AlgorithmKind::Gdmodk);
+        assert_eq!(c.analyze(Pattern::C2ioSym).unwrap().c_topo, 1);
+        let s = c.stats().unwrap();
+        assert_eq!(s.algorithm, AlgorithmKind::Gdmodk);
+        c.shutdown();
+    }
+
+    #[test]
+    fn source_based_algorithms_also_run() {
+        let (_t, c) = start(AlgorithmKind::Gsmodk);
+        let s = c.analyze(Pattern::C2ioSym).unwrap();
+        assert_eq!(s.c_topo, 4, "§IV.B.2");
+        c.shutdown();
+    }
+}

@@ -1,0 +1,49 @@
+//! # pgft — node-type-based load-balancing routing for PGFTs
+//!
+//! A production-shaped reproduction of *"Node-type-based load-balancing
+//! routing for Parallel Generalized Fat-Trees"* (Gliksberg, Quintin,
+//! García): PGFT topology substrate, the Dmodk/Smodk/Random baselines,
+//! the paper's Gdmodk/Gsmodk contribution, the static congestion metric,
+//! heterogeneous node-type modelling, flow-level and packet-level
+//! simulators, and a BXI-style fabric-manager coordinator. The simulation
+//! hot path runs AOT-compiled JAX/Pallas programs through PJRT (see
+//! `rust/src/runtime`).
+//!
+//! Quick taste (the paper's headline numbers):
+//!
+//! ```
+//! use pgft::prelude::*;
+//! let topo = build_pgft(&PgftSpec::case_study());
+//! let types = Placement::paper_io().apply(&topo).unwrap();
+//! let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+//! let dmodk = AlgorithmKind::Dmodk.build(&topo, Some(&types), 0);
+//! let routes = trace_flows(&topo, &*dmodk, &flows);
+//! let rep = CongestionReport::compute(&topo, &routes);
+//! assert_eq!(rep.c_topo(), 4); // §III.B
+//! let gdmodk = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 0);
+//! let routes = trace_flows(&topo, &*gdmodk, &flows);
+//! assert_eq!(CongestionReport::compute(&topo, &routes).c_topo(), 1); // §IV optimum
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod nodes;
+pub mod patterns;
+pub mod report;
+pub mod routing;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;
+
+/// Convenience re-exports.
+pub mod prelude {
+    pub use crate::metrics::{AlgoSummary, CongestionReport};
+    pub use crate::nodes::{NodeType, NodeTypeMap, Placement, TypeReindex};
+    pub use crate::patterns::Pattern;
+    pub use crate::routing::trace::{trace_flows, trace_route};
+    pub use crate::routing::{AlgorithmKind, ForwardingTables, Router};
+    pub use crate::topology::{build_pgft, families, PgftSpec, Topology};
+}

@@ -1,0 +1,9 @@
+//! `pgft` binary — CLI front-end of the library. See `pgft help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = pgft::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,380 @@
+//! The paper's static congestion metric (§III.A).
+//!
+//! For a set of routes `R` and an output port `p`:
+//!
+//! ```text
+//!     C_p(R)    = min( src(R,p), dst(R,p) )
+//!     C_topo(R) = max_p C_p(R)
+//! ```
+//!
+//! where `src(R,p)` / `dst(R,p)` count *distinct* sources / destinations
+//! of the routes whose output includes `p`. `C_p ≤ 1` means the port only
+//! ever carries one flow's worth of unrelated traffic (Fig. 2); `C_p > 1`
+//! flags potentially avoidable network congestion (Fig. 3).
+
+pub mod report;
+
+pub use report::{render_algorithm_table, AlgoSummary};
+
+use crate::routing::trace::RoutePorts;
+use crate::topology::{PortId, Topology};
+
+/// Per-port flow statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PortStats {
+    /// Routes whose output includes this port.
+    pub routes: u32,
+    /// Distinct sources among them: `src(R,p)`.
+    pub srcs: u32,
+    /// Distinct destinations among them: `dst(R,p)`.
+    pub dsts: u32,
+}
+
+impl PortStats {
+    /// `C_p(R) = min(src, dst)`.
+    #[inline]
+    pub fn c(&self) -> u32 {
+        self.srcs.min(self.dsts)
+    }
+}
+
+/// Congestion analysis of a route set over a topology.
+#[derive(Clone, Debug)]
+pub struct CongestionReport {
+    pub per_port: Vec<PortStats>,
+}
+
+impl CongestionReport {
+    /// Compute per-port distinct-source/destination counts.
+    ///
+    /// Implementation: per-port NID *bitmaps* — O(hops) bit-sets plus an
+    /// O(ports · N/64) popcount sweep, with two flat `u64` arenas
+    /// (`ports × ⌈N/64⌉` words each; 180 KiB for a 512-node all-pairs
+    /// run). Chosen over per-port `HashSet`s and over scatter+sort+dedup
+    /// after measuring all three — see EXPERIMENTS.md §Perf and the
+    /// `metric-ablate/*` rows of `bench_perf` (the ablation variants are
+    /// kept below).
+    pub fn compute(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
+        let np = topo.num_ports();
+        let words = (topo.num_nodes() + 63) / 64;
+        let mut per_port = vec![PortStats::default(); np];
+        let mut src_bits = vec![0u64; np * words];
+        let mut dst_bits = vec![0u64; np * words];
+        for r in routes {
+            let (sw, sb) = ((r.src / 64) as usize, r.src % 64);
+            let (dw, db) = ((r.dst / 64) as usize, r.dst % 64);
+            for &p in &r.ports {
+                per_port[p].routes += 1;
+                src_bits[p * words + sw] |= 1u64 << sb;
+                dst_bits[p * words + dw] |= 1u64 << db;
+            }
+        }
+        for (p, st) in per_port.iter_mut().enumerate() {
+            if st.routes == 0 {
+                continue;
+            }
+            st.srcs = src_bits[p * words..(p + 1) * words]
+                .iter()
+                .map(|w| w.count_ones())
+                .sum();
+            st.dsts = dst_bits[p * words..(p + 1) * words]
+                .iter()
+                .map(|w| w.count_ones())
+                .sum();
+        }
+        CongestionReport { per_port }
+    }
+
+    /// Ablation (§Perf iteration 1 → 2): scatter `(port, nid)` pairs,
+    /// sort, dedup, count runs. Beats hash sets on small fabrics, loses
+    /// past ~10⁶ hops; superseded by the bitmap path above.
+    pub fn compute_sortdedup(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
+        let np = topo.num_ports();
+        let mut per_port = vec![PortStats::default(); np];
+
+        let hops: usize = routes.iter().map(|r| r.ports.len()).sum();
+        let mut by_src: Vec<(u32, u32)> = Vec::with_capacity(hops);
+        let mut by_dst: Vec<(u32, u32)> = Vec::with_capacity(hops);
+        for r in routes {
+            for &p in &r.ports {
+                per_port[p].routes += 1;
+                by_src.push((p as u32, r.src));
+                by_dst.push((p as u32, r.dst));
+            }
+        }
+        for (pairs, pick_src) in [(&mut by_src, true), (&mut by_dst, false)] {
+            pairs.sort_unstable();
+            pairs.dedup();
+            for &(p, _) in pairs.iter() {
+                let st = &mut per_port[p as usize];
+                if pick_src {
+                    st.srcs += 1;
+                } else {
+                    st.dsts += 1;
+                }
+            }
+        }
+        CongestionReport { per_port }
+    }
+
+    /// Ablation baseline for §Perf: per-port `HashSet` accumulation (the
+    /// obvious first implementation). Kept for `bench_perf`'s ablation
+    /// row; `compute` is the shipped path.
+    pub fn compute_hashset(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
+        use std::collections::HashSet;
+        let np = topo.num_ports();
+        let mut per_port = vec![PortStats::default(); np];
+        let mut srcs: Vec<HashSet<u32>> = vec![HashSet::new(); np];
+        let mut dsts: Vec<HashSet<u32>> = vec![HashSet::new(); np];
+        for r in routes {
+            for &p in &r.ports {
+                per_port[p].routes += 1;
+                srcs[p].insert(r.src);
+                dsts[p].insert(r.dst);
+            }
+        }
+        for p in 0..np {
+            per_port[p].srcs = srcs[p].len() as u32;
+            per_port[p].dsts = dsts[p].len() as u32;
+        }
+        CongestionReport { per_port }
+    }
+
+    /// Fused trace+metric hot path: routes are traced into a reusable
+    /// arena (no per-route allocation) and the per-port statistics are
+    /// accumulated directly — the path `random-dist`-style Monte-Carlo
+    /// sweeps use. Equivalent to `trace_flows` + `compute` (asserted in
+    /// tests).
+    pub fn compute_flows(
+        topo: &Topology,
+        router: &dyn crate::routing::Router,
+        flows: &[(u32, u32)],
+    ) -> CongestionReport {
+        let np = topo.num_ports();
+        let words = (topo.num_nodes() + 63) / 64;
+        let mut per_port = vec![PortStats::default(); np];
+        let mut src_bits = vec![0u64; np * words];
+        let mut dst_bits = vec![0u64; np * words];
+        let mut ports: Vec<PortId> = Vec::with_capacity(2 * topo.spec.h);
+        for &(src, dst) in flows {
+            ports.clear();
+            crate::routing::trace::trace_route_into(topo, router, src, dst, &mut ports);
+            let (sw, sb) = ((src / 64) as usize, src % 64);
+            let (dw, db) = ((dst / 64) as usize, dst % 64);
+            for &p in &ports {
+                per_port[p].routes += 1;
+                src_bits[p * words + sw] |= 1u64 << sb;
+                dst_bits[p * words + dw] |= 1u64 << db;
+            }
+        }
+        for (p, st) in per_port.iter_mut().enumerate() {
+            if st.routes == 0 {
+                continue;
+            }
+            st.srcs = src_bits[p * words..(p + 1) * words]
+                .iter()
+                .map(|w| w.count_ones())
+                .sum();
+            st.dsts = dst_bits[p * words..(p + 1) * words]
+                .iter()
+                .map(|w| w.count_ones())
+                .sum();
+        }
+        CongestionReport { per_port }
+    }
+
+    /// `C_p` for one port.
+    #[inline]
+    pub fn c_port(&self, p: PortId) -> u32 {
+        self.per_port[p].c()
+    }
+
+    /// `C_topo(R) = max_p C_p(R)`.
+    pub fn c_topo(&self) -> u32 {
+        self.per_port.iter().map(|s| s.c()).max().unwrap_or(0)
+    }
+
+    /// Ports with `C_p > 1` — "potentially avoidable network congestion".
+    pub fn hot_ports(&self) -> Vec<PortId> {
+        self.per_port
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.c() > 1)
+            .map(|(p, _)| p)
+            .collect()
+    }
+
+    /// Hot ports restricted to switch level `l` (up or down direction).
+    pub fn hot_ports_at(&self, topo: &Topology, level: usize, up: bool) -> Vec<PortId> {
+        self.hot_ports()
+            .into_iter()
+            .filter(|&p| topo.port_level(p) == level && topo.ports[p].up == up)
+            .collect()
+    }
+
+    /// Max `C_p` over ports of a given level/direction.
+    pub fn c_max_at(&self, topo: &Topology, level: usize, up: bool) -> u32 {
+        topo.ports
+            .iter()
+            .filter(|port| topo.port_level(port.id) == level && port.up == up)
+            .map(|port| self.c_port(port.id))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Number of *used* ports at a level/direction (routes > 0).
+    pub fn used_ports_at(&self, topo: &Topology, level: usize, up: bool) -> usize {
+        topo.ports
+            .iter()
+            .filter(|port| {
+                topo.port_level(port.id) == level
+                    && port.up == up
+                    && self.per_port[port.id].routes > 0
+            })
+            .count()
+    }
+
+    /// Histogram of `C_p` values over all ports (index = C value).
+    pub fn histogram(&self) -> Vec<usize> {
+        let max = self.c_topo() as usize;
+        let mut h = vec![0usize; max + 1];
+        for s in &self.per_port {
+            h[s.c() as usize] += 1;
+        }
+        h
+    }
+
+    /// The input-side variant the paper mentions ("the same analysis can
+    /// be made with ports as input"): every hop's input port is the far
+    /// end of the link it arrived on; for symmetric patterns
+    /// `C_topo` matches the output-side value.
+    pub fn compute_input_side(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
+        // Map each output port to the receiving element's port on the same
+        // link (the opposite directed port), and rerun the analysis.
+        let mapped: Vec<RoutePorts> = routes
+            .iter()
+            .map(|r| RoutePorts {
+                src: r.src,
+                dst: r.dst,
+                ports: r
+                    .ports
+                    .iter()
+                    .map(|&p| {
+                        let link = &topo.links[topo.ports[p].link];
+                        if link.up_port == p {
+                            link.down_port
+                        } else {
+                            link.up_port
+                        }
+                    })
+                    .collect(),
+            })
+            .collect();
+        CongestionReport::compute(topo, &mapped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::patterns::Pattern;
+    use crate::routing::trace::trace_flows;
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    /// Fig. 2: a port with a single destination (or single source) has
+    /// C_p = 1 no matter how many routes share it.
+    #[test]
+    fn single_flow_port_is_one() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        // Gather: every node sends to node 7 → every used port has dst
+        // count 1 → C_p = 1 everywhere.
+        let types = crate::nodes::NodeTypeMap::uniform(64, crate::nodes::NodeType::Compute);
+        let flows = Pattern::Gather { root: 7 }.flows(&topo, &types).unwrap();
+        let routes = trace_flows(&topo, &*r, &flows);
+        let rep = CongestionReport::compute(&topo, &routes);
+        assert_eq!(rep.c_topo(), 1);
+        assert!(rep.hot_ports().is_empty());
+        // And scatter likewise (src count 1 everywhere).
+        let flows = Pattern::Scatter { root: 0 }.flows(&topo, &types).unwrap();
+        let routes = trace_flows(&topo, &*r, &flows);
+        assert_eq!(CongestionReport::compute(&topo, &routes).c_topo(), 1);
+    }
+
+    /// Fig. 3: two sources to two destinations through one port → C_p = 2.
+    #[test]
+    fn crossing_flows_port_is_two() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        // Pick two flows that share exactly one port (the leaf up-port):
+        // sources on leaf 0 to odd-parity destinations on *different*
+        // destination leaves: 0→17 (leaf 2) and 1→27 (leaf 3).
+        let routes = trace_flows(&topo, &*r, &[(0, 17), (1, 27)]);
+        let rep = CongestionReport::compute(&topo, &routes);
+        // The shared leaf up-port has 2 srcs and 2 dsts.
+        assert_eq!(rep.c_topo(), 2);
+        assert_eq!(rep.hot_ports().len(), 1);
+        let hp = rep.hot_ports()[0];
+        assert_eq!(rep.per_port[hp].srcs, 2);
+        assert_eq!(rep.per_port[hp].dsts, 2);
+    }
+
+    #[test]
+    fn histogram_sums_to_port_count() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let r = AlgorithmKind::Dmodk.build(&topo, Some(&types), 0);
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        let routes = trace_flows(&topo, &*r, &flows);
+        let rep = CongestionReport::compute(&topo, &routes);
+        assert_eq!(rep.histogram().iter().sum::<usize>(), topo.num_ports());
+    }
+
+    #[test]
+    fn input_side_matches_for_symmetric_pattern() {
+        // §III.A: "This does not cause C_topo(R) to vary when the pattern
+        // has symmetrical communications between sources and destinations."
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = crate::nodes::NodeTypeMap::uniform(64, crate::nodes::NodeType::Compute);
+        let r = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        let flows = Pattern::AllToAll.flows(&topo, &types).unwrap();
+        let routes = trace_flows(&topo, &*r, &flows);
+        let out = CongestionReport::compute(&topo, &routes);
+        let inp = CongestionReport::compute_input_side(&topo, &routes);
+        assert_eq!(out.c_topo(), inp.c_topo());
+    }
+
+    #[test]
+    fn ablation_and_fused_paths_agree() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gsmodk, AlgorithmKind::Random] {
+            let r = kind.build(&topo, Some(&types), 5);
+            let flows = Pattern::C2ioAll.flows(&topo, &types).unwrap();
+            let routes = trace_flows(&topo, &*r, &flows);
+            let a = CongestionReport::compute(&topo, &routes);
+            let b = CongestionReport::compute_hashset(&topo, &routes);
+            let c = CongestionReport::compute_flows(&topo, &*r, &flows);
+            for p in 0..topo.num_ports() {
+                assert_eq!(a.per_port[p], b.per_port[p], "{kind} port {p} (hashset)");
+                assert_eq!(a.per_port[p], c.per_port[p], "{kind} port {p} (fused)");
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_counting_not_route_counting() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        // Duplicate the same flow 5 times: distinct src/dst still 1.
+        let routes = trace_flows(&topo, &*r, &[(0, 63); 5]);
+        let rep = CongestionReport::compute(&topo, &routes);
+        assert_eq!(rep.c_topo(), 1);
+        let first = routes[0].ports[0];
+        assert_eq!(rep.per_port[first].routes, 5);
+        assert_eq!(rep.per_port[first].srcs, 1);
+        assert_eq!(rep.per_port[first].dsts, 1);
+    }
+}

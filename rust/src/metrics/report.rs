@@ -1,0 +1,138 @@
+//! Tabular congestion summaries — the rows the paper's analysis states
+//! (and the benches print).
+
+use super::CongestionReport;
+use crate::nodes::NodeTypeMap;
+use crate::patterns::Pattern;
+use crate::routing::AlgorithmKind;
+use crate::topology::Topology;
+use anyhow::Result;
+
+/// One row: an algorithm's congestion profile for a pattern.
+#[derive(Clone, Debug)]
+pub struct AlgoSummary {
+    pub algorithm: String,
+    pub pattern: String,
+    pub flows: usize,
+    pub c_topo: u32,
+    /// Hot ports (C > 1) in total and per level (index 0 = node injection
+    /// level, 1..=h switch levels).
+    pub hot_total: usize,
+    pub hot_per_level: Vec<usize>,
+    /// Max C per level (same indexing), split (up, down).
+    pub c_max_up: Vec<u32>,
+    pub c_max_down: Vec<u32>,
+    /// Used top-level down-ports (the resource §III tracks).
+    pub used_top_ports: usize,
+    pub total_top_ports: usize,
+}
+
+impl AlgoSummary {
+    pub fn compute(
+        topo: &Topology,
+        types: &NodeTypeMap,
+        kind: AlgorithmKind,
+        pattern: &Pattern,
+        seed: u64,
+    ) -> Result<AlgoSummary> {
+        let router = kind.build(topo, Some(types), seed);
+        let flows = pattern.flows(topo, types)?;
+        // Fused trace+metric path (no per-route allocation) — §Perf it. 4.
+        let rep = CongestionReport::compute_flows(topo, &*router, &flows);
+        Ok(Self::from_report(topo, &rep, kind.as_str(), &pattern.name(), flows.len()))
+    }
+
+    pub fn from_report(
+        topo: &Topology,
+        rep: &CongestionReport,
+        algorithm: &str,
+        pattern: &str,
+        flows: usize,
+    ) -> AlgoSummary {
+        let h = topo.spec.h;
+        let mut hot_per_level = vec![0usize; h + 1];
+        for p in rep.hot_ports() {
+            hot_per_level[topo.port_level(p)] += 1;
+        }
+        let c_max_up: Vec<u32> = (0..=h).map(|l| rep.c_max_at(topo, l, true)).collect();
+        let c_max_down: Vec<u32> = (0..=h).map(|l| rep.c_max_at(topo, l, false)).collect();
+        AlgoSummary {
+            algorithm: algorithm.to_string(),
+            pattern: pattern.to_string(),
+            flows,
+            c_topo: rep.c_topo(),
+            hot_total: rep.hot_ports().len(),
+            hot_per_level,
+            c_max_up,
+            c_max_down,
+            used_top_ports: rep.used_ports_at(topo, h, false),
+            total_top_ports: topo.level_ports(h, false).len(),
+        }
+    }
+}
+
+/// Render a fixed-width comparison table for several algorithm rows.
+pub fn render_algorithm_table(rows: &[AlgoSummary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:<10} {:>6} {:>7} {:>9} {:>12} {:>14} {:>12}\n",
+        "algo", "pattern", "flows", "C_topo", "hot-ports", "hot-top-lvl", "used-top-ports", "Cmax-by-lvl"
+    ));
+    out.push_str(&"-".repeat(96));
+    out.push('\n');
+    for r in rows {
+        let h = r.hot_per_level.len() - 1;
+        let cmax: Vec<String> = (0..=h)
+            .map(|l| format!("{}/{}", r.c_max_up[l], r.c_max_down[l]))
+            .collect();
+        out.push_str(&format!(
+            "{:<10} {:<10} {:>6} {:>7} {:>9} {:>12} {:>11}/{:<3} {:>12}\n",
+            r.algorithm,
+            r.pattern,
+            r.flows,
+            r.c_topo,
+            r.hot_total,
+            r.hot_per_level[h],
+            r.used_top_ports,
+            r.total_top_ports,
+            cmax.join(" "),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    #[test]
+    fn summary_for_dmodk_case_study() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let s = AlgoSummary::compute(&topo, &types, AlgorithmKind::Dmodk, &Pattern::C2ioSym, 0)
+            .unwrap();
+        assert_eq!(s.c_topo, 4, "paper §III.B");
+        assert_eq!(s.flows, 56);
+        // Exactly two hot top-level ports.
+        assert_eq!(s.hot_per_level[3], 2);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let rows: Vec<AlgoSummary> = AlgorithmKind::ALL
+            .iter()
+            .map(|&k| {
+                AlgoSummary::compute(&topo, &types, k, &Pattern::C2ioSym, 1).unwrap()
+            })
+            .collect();
+        let t = render_algorithm_table(&rows);
+        for k in AlgorithmKind::ALL {
+            assert!(t.contains(k.as_str()), "{t}");
+        }
+        assert_eq!(t.lines().count(), 2 + rows.len());
+    }
+}

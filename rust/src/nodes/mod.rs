@@ -1,0 +1,185 @@
+//! Node-type heterogeneity (§II of the paper): node type taxonomy, the
+//! NID→type map, placement strategies, and the Gxmodk type re-indexing
+//! (Algorithm 1).
+
+pub mod placement;
+pub mod reindex;
+
+pub use placement::Placement;
+pub use reindex::TypeReindex;
+
+use crate::topology::Nid;
+use std::fmt;
+
+/// Node types observed on production clusters (§II). `Custom` leaves room
+/// for site-specific classes (e.g. Lustre routers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NodeType {
+    Compute,
+    Io,
+    Service,
+    Gpgpu,
+    Fpga,
+    Custom(u8),
+}
+
+impl NodeType {
+    /// The "ordinary" type — unmarked in renderings.
+    pub fn is_default(self) -> bool {
+        self == NodeType::Compute
+    }
+
+    /// One-letter tag for diagrams.
+    pub fn short(self) -> &'static str {
+        match self {
+            NodeType::Compute => "C",
+            NodeType::Io => "I",
+            NodeType::Service => "S",
+            NodeType::Gpgpu => "G",
+            NodeType::Fpga => "F",
+            NodeType::Custom(_) => "X",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NodeType> {
+        match s.to_ascii_lowercase().as_str() {
+            "compute" | "c" => Some(NodeType::Compute),
+            "io" | "i" => Some(NodeType::Io),
+            "service" | "s" => Some(NodeType::Service),
+            "gpgpu" | "gpu" | "g" => Some(NodeType::Gpgpu),
+            "fpga" | "f" => Some(NodeType::Fpga),
+            other => other
+                .strip_prefix("custom")
+                .and_then(|n| n.parse().ok())
+                .map(NodeType::Custom),
+        }
+    }
+
+    /// Canonical ordering rank used by the re-indexer (compute first, as
+    /// in the paper's worked example: compute gNIDs 0..55, IO 56..63).
+    pub fn rank(self) -> u32 {
+        match self {
+            NodeType::Compute => 0,
+            NodeType::Io => 1,
+            NodeType::Service => 2,
+            NodeType::Gpgpu => 3,
+            NodeType::Fpga => 4,
+            NodeType::Custom(k) => 5 + k as u32,
+        }
+    }
+}
+
+impl fmt::Display for NodeType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NodeType::Compute => write!(f, "compute"),
+            NodeType::Io => write!(f, "io"),
+            NodeType::Service => write!(f, "service"),
+            NodeType::Gpgpu => write!(f, "gpgpu"),
+            NodeType::Fpga => write!(f, "fpga"),
+            NodeType::Custom(k) => write!(f, "custom{k}"),
+        }
+    }
+}
+
+/// NID → type assignment for a whole fabric.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeTypeMap {
+    types: Vec<NodeType>,
+}
+
+impl NodeTypeMap {
+    pub fn uniform(n: Nid, ty: NodeType) -> Self {
+        Self { types: vec![ty; n as usize] }
+    }
+
+    pub fn from_vec(types: Vec<NodeType>) -> Self {
+        Self { types }
+    }
+
+    pub fn len(&self) -> usize {
+        self.types.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.types.is_empty()
+    }
+
+    #[inline]
+    pub fn type_of(&self, nid: Nid) -> NodeType {
+        self.types[nid as usize]
+    }
+
+    pub fn set(&mut self, nid: Nid, ty: NodeType) {
+        self.types[nid as usize] = ty;
+    }
+
+    /// All NIDs of a given type, ascending.
+    pub fn nids_of(&self, ty: NodeType) -> Vec<Nid> {
+        self.types
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t == ty)
+            .map(|(i, _)| i as Nid)
+            .collect()
+    }
+
+    /// Distinct types present, in canonical rank order.
+    pub fn types_present(&self) -> Vec<NodeType> {
+        let mut tys: Vec<NodeType> = self.types.clone();
+        tys.sort_by_key(|t| t.rank());
+        tys.dedup();
+        tys
+    }
+
+    /// Census string, e.g. `"compute:56 io:8"`.
+    pub fn census(&self) -> String {
+        self.types_present()
+            .iter()
+            .map(|&ty| format!("{ty}:{}", self.nids_of(ty).len()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Nid, NodeType)> + '_ {
+        self.types.iter().enumerate().map(|(i, &t)| (i as Nid, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for ty in [
+            NodeType::Compute,
+            NodeType::Io,
+            NodeType::Service,
+            NodeType::Gpgpu,
+            NodeType::Fpga,
+            NodeType::Custom(3),
+        ] {
+            assert_eq!(NodeType::parse(&ty.to_string()), Some(ty));
+        }
+        assert_eq!(NodeType::parse("IO"), Some(NodeType::Io));
+        assert_eq!(NodeType::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn ranks_put_compute_first() {
+        assert!(NodeType::Compute.rank() < NodeType::Io.rank());
+        assert!(NodeType::Io.rank() < NodeType::Custom(0).rank());
+    }
+
+    #[test]
+    fn census_and_queries() {
+        let mut m = NodeTypeMap::uniform(8, NodeType::Compute);
+        m.set(7, NodeType::Io);
+        m.set(3, NodeType::Io);
+        assert_eq!(m.census(), "compute:6 io:2");
+        assert_eq!(m.nids_of(NodeType::Io), vec![3, 7]);
+        assert_eq!(m.types_present(), vec![NodeType::Compute, NodeType::Io]);
+        assert_eq!(m.type_of(3), NodeType::Io);
+    }
+}

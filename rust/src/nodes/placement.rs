@@ -1,0 +1,229 @@
+//! Secondary-node placement strategies (§II): where IO / service / GPGPU
+//! nodes sit in the fabric. The paper lists three realistic options;
+//! we implement those plus scattered/random placements used by the
+//! placement-sensitivity bench (E12).
+
+use super::{NodeType, NodeTypeMap};
+use crate::topology::{Endpoint, Topology};
+use crate::util::rng::Xoshiro256;
+use anyhow::{ensure, Result};
+
+/// A placement strategy assigns types to the nodes of a topology.
+/// Unassigned nodes default to [`NodeType::Compute`].
+#[derive(Clone, Debug)]
+pub enum Placement {
+    /// "Placing a constant number of secondary nodes of each type at
+    /// every leaf" — on the *last* ports, like BXI's reserved optical
+    /// ports and the paper's case study (IO ≡ 7 mod 8).
+    LastPortsPerLeaf { ty: NodeType, count: u32 },
+    /// Same, but on the first ports of every leaf.
+    FirstPortsPerLeaf { ty: NodeType, count: u32 },
+    /// Every k-th NID fabric-wide (offset, stride).
+    Strided { ty: NodeType, offset: u32, stride: u32 },
+    /// All nodes of the last `leaves` leaves — approximates the paper's
+    /// "irregular subgroup with secondary nodes connected to the top
+    /// switches" without breaking the fat-tree property.
+    DedicatedLeaves { ty: NodeType, leaves: u32 },
+    /// `count` nodes of type `ty` placed uniformly at random (seeded) —
+    /// the "unlucky repartition" scenario of the abstract.
+    Random { ty: NodeType, count: u32, seed: u64 },
+    /// Apply several placements in order (later ones overwrite).
+    Stack(Vec<Placement>),
+}
+
+impl Placement {
+    /// The paper's case-study placement: one IO node on the last port of
+    /// every leaf.
+    pub fn paper_io() -> Placement {
+        Placement::LastPortsPerLeaf { ty: NodeType::Io, count: 1 }
+    }
+
+    pub fn apply(&self, topo: &Topology) -> Result<NodeTypeMap> {
+        let mut map = NodeTypeMap::uniform(topo.num_nodes() as u32, NodeType::Compute);
+        self.apply_onto(topo, &mut map)?;
+        Ok(map)
+    }
+
+    fn apply_onto(&self, topo: &Topology, map: &mut NodeTypeMap) -> Result<()> {
+        match self {
+            Placement::LastPortsPerLeaf { ty, count } | Placement::FirstPortsPerLeaf { ty, count } => {
+                let m1 = topo.spec.m[0];
+                ensure!(*count <= m1, "count {count} exceeds nodes-per-leaf {m1}");
+                let from_end = matches!(self, Placement::LastPortsPerLeaf { .. });
+                for leaf in topo.level_switches(1) {
+                    let mut nids: Vec<u32> = topo.switches[leaf]
+                        .down_ports
+                        .iter()
+                        .filter_map(|&p| match topo.port_peer(p) {
+                            Endpoint::Node(n) => Some(n),
+                            _ => None,
+                        })
+                        .collect();
+                    nids.sort_unstable();
+                    nids.dedup();
+                    let take: Vec<u32> = if from_end {
+                        nids.iter().rev().take(*count as usize).copied().collect()
+                    } else {
+                        nids.iter().take(*count as usize).copied().collect()
+                    };
+                    for n in take {
+                        map.set(n, *ty);
+                    }
+                }
+            }
+            Placement::Strided { ty, offset, stride } => {
+                ensure!(*stride > 0, "stride must be positive");
+                let mut n = *offset;
+                while (n as usize) < map.len() {
+                    map.set(n, *ty);
+                    n += stride;
+                }
+            }
+            Placement::DedicatedLeaves { ty, leaves } => {
+                let all: Vec<usize> = topo.level_switches(1).collect();
+                ensure!((*leaves as usize) <= all.len(), "not enough leaves");
+                for &leaf in all.iter().rev().take(*leaves as usize) {
+                    for &p in &topo.switches[leaf].down_ports {
+                        if let Endpoint::Node(n) = topo.port_peer(p) {
+                            map.set(n, *ty);
+                        }
+                    }
+                }
+            }
+            Placement::Random { ty, count, seed } => {
+                ensure!((*count as usize) <= map.len(), "count exceeds node count");
+                let mut rng = Xoshiro256::new(*seed);
+                let picks = rng.sample_indices(map.len(), *count as usize);
+                for i in picks {
+                    map.set(i as u32, *ty);
+                }
+            }
+            Placement::Stack(list) => {
+                for p in list {
+                    p.apply_onto(topo, map)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a compact CLI form, e.g.:
+    ///   `io:last:1` · `service:first:2` · `gpgpu:stride:3:8` ·
+    ///   `io:leaves:2` · `io:random:8:42` · comma-separated stacks.
+    pub fn parse(s: &str) -> Result<Placement> {
+        let items: Vec<&str> = s.split(',').collect();
+        let mut out = Vec::new();
+        for item in items {
+            let parts: Vec<&str> = item.split(':').collect();
+            ensure!(parts.len() >= 2, "placement {item:?}: want type:kind[:args]");
+            let ty = NodeType::parse(parts[0])
+                .ok_or_else(|| anyhow::anyhow!("unknown node type {:?}", parts[0]))?;
+            let arg = |i: usize| -> Result<u32> {
+                parts
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("placement {item:?}: missing arg {i}"))?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("placement {item:?}: {e}"))
+            };
+            let p = match parts[1] {
+                "last" => Placement::LastPortsPerLeaf { ty, count: arg(2)? },
+                "first" => Placement::FirstPortsPerLeaf { ty, count: arg(2)? },
+                "stride" => Placement::Strided { ty, offset: arg(2)?, stride: arg(3)? },
+                "leaves" => Placement::DedicatedLeaves { ty, leaves: arg(2)? },
+                "random" => Placement::Random { ty, count: arg(2)?, seed: arg(3)? as u64 },
+                k => anyhow::bail!("unknown placement kind {k:?}"),
+            };
+            out.push(p);
+        }
+        Ok(if out.len() == 1 { out.pop().unwrap() } else { Placement::Stack(out) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn topo() -> Topology {
+        build_pgft(&PgftSpec::case_study())
+    }
+
+    #[test]
+    fn paper_io_placement_matches_mod8() {
+        // "IO nodes ... have NIDs whose modulo by 8 is 7."
+        let t = topo();
+        let map = Placement::paper_io().apply(&t).unwrap();
+        for nid in 0..64u32 {
+            let expect = if nid % 8 == 7 { NodeType::Io } else { NodeType::Compute };
+            assert_eq!(map.type_of(nid), expect, "nid {nid}");
+        }
+        assert_eq!(map.nids_of(NodeType::Io).len(), 8);
+    }
+
+    #[test]
+    fn strided_equals_last_port_for_case_study() {
+        let t = topo();
+        let a = Placement::paper_io().apply(&t).unwrap();
+        let b = Placement::Strided { ty: NodeType::Io, offset: 7, stride: 8 }
+            .apply(&t)
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dedicated_leaves_types_whole_leaf() {
+        let t = topo();
+        let map = Placement::DedicatedLeaves { ty: NodeType::Io, leaves: 2 }
+            .apply(&t)
+            .unwrap();
+        let ios = map.nids_of(NodeType::Io);
+        assert_eq!(ios.len(), 16);
+        // Last two leaves hold nids 48..63.
+        assert_eq!(ios, (48..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn random_placement_is_seeded_and_sized() {
+        let t = topo();
+        let a = Placement::Random { ty: NodeType::Io, count: 8, seed: 1 }.apply(&t).unwrap();
+        let b = Placement::Random { ty: NodeType::Io, count: 8, seed: 1 }.apply(&t).unwrap();
+        let c = Placement::Random { ty: NodeType::Io, count: 8, seed: 2 }.apply(&t).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.nids_of(NodeType::Io).len(), 8);
+        assert_ne!(a, c, "different seed should (almost surely) differ");
+    }
+
+    #[test]
+    fn stack_applies_in_order() {
+        let t = topo();
+        let p = Placement::Stack(vec![
+            Placement::paper_io(),
+            Placement::FirstPortsPerLeaf { ty: NodeType::Service, count: 1 },
+        ]);
+        let map = p.apply(&t).unwrap();
+        assert_eq!(map.type_of(7), NodeType::Io);
+        assert_eq!(map.type_of(0), NodeType::Service);
+        assert_eq!(map.census(), "compute:48 io:8 service:8");
+    }
+
+    #[test]
+    fn parse_forms() {
+        let t = topo();
+        let p = Placement::parse("io:last:1").unwrap();
+        assert_eq!(p.apply(&t).unwrap(), Placement::paper_io().apply(&t).unwrap());
+        let p2 = Placement::parse("io:last:1,service:first:1").unwrap();
+        assert_eq!(p2.apply(&t).unwrap().census(), "compute:48 io:8 service:8");
+        assert!(Placement::parse("io:bogus").is_err());
+        assert!(Placement::parse("martian:last:1").is_err());
+        let p3 = Placement::parse("io:random:4:99").unwrap();
+        assert_eq!(p3.apply(&t).unwrap().nids_of(NodeType::Io).len(), 4);
+    }
+
+    #[test]
+    fn overfull_counts_rejected() {
+        let t = topo();
+        assert!(Placement::LastPortsPerLeaf { ty: NodeType::Io, count: 9 }.apply(&t).is_err());
+        assert!(Placement::DedicatedLeaves { ty: NodeType::Io, leaves: 99 }.apply(&t).is_err());
+        assert!(Placement::Random { ty: NodeType::Io, count: 65, seed: 0 }.apply(&t).is_err());
+    }
+}

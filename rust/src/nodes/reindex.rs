@@ -1,0 +1,174 @@
+//! Algorithm 1 of the paper: **Reindex NIDs by type**.
+//!
+//! Gxmodk preprocesses NIDs so that nodes of the same type occupy a
+//! contiguous gNID range; within each type, gNIDs follow original NID
+//! order ("re-indexing in the order of the original NIDs ensures that
+//! consecutive reindexed NIDs are topologically close"). Xmodk is then
+//! applied to the gNIDs.
+//!
+//! In the paper's worked example (64 nodes, IO on the last port of every
+//! leaf): compute nodes get gNIDs 0..55, IO nodes 56..63.
+
+use super::{NodeType, NodeTypeMap};
+use crate::topology::Nid;
+
+/// A bijection NID ↔ gNID induced by a type map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TypeReindex {
+    /// `gnid[nid]` — the reindexed id.
+    gnid: Vec<Nid>,
+    /// `nid[gnid]` — inverse.
+    nid: Vec<Nid>,
+    /// (type, first gNID, count) per group, in gNID order.
+    groups: Vec<(NodeType, Nid, u32)>,
+}
+
+impl TypeReindex {
+    /// Build the re-index from a type map. Types are processed in
+    /// canonical rank order ([`NodeType::rank`]: compute first, then io,
+    /// service, gpgpu, fpga, custom_k).
+    pub fn new(types: &NodeTypeMap) -> TypeReindex {
+        let n = types.len();
+        let mut gnid = vec![0 as Nid; n];
+        let mut nid = vec![0 as Nid; n];
+        let mut groups = Vec::new();
+        let mut next: Nid = 0;
+        for ty in types.types_present() {
+            let members = types.nids_of(ty); // ascending NID order
+            groups.push((ty, next, members.len() as u32));
+            for m in members {
+                gnid[m as usize] = next;
+                nid[next as usize] = m;
+                next += 1;
+            }
+        }
+        debug_assert_eq!(next as usize, n);
+        TypeReindex { gnid, nid, groups }
+    }
+
+    /// Identity re-index (uniform fabric ⇒ Gxmodk degenerates to Xmodk).
+    pub fn identity(n: u32) -> TypeReindex {
+        TypeReindex {
+            gnid: (0..n).collect(),
+            nid: (0..n).collect(),
+            groups: vec![(NodeType::Compute, 0, n)],
+        }
+    }
+
+    #[inline]
+    pub fn gnid(&self, nid: Nid) -> Nid {
+        self.gnid[nid as usize]
+    }
+
+    #[inline]
+    pub fn nid(&self, gnid: Nid) -> Nid {
+        self.nid[gnid as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.gnid.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gnid.is_empty()
+    }
+
+    /// Groups as (type, first gNID, count).
+    pub fn groups(&self) -> &[(NodeType, Nid, u32)] {
+        &self.groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::topology::{build_pgft, PgftSpec};
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn paper_worked_example() {
+        // Compute nodes are reindexed first: gNIDs 0..55; IO 56..63.
+        let t = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&t).unwrap();
+        let r = TypeReindex::new(&types);
+        // NID 7 (first IO) → gNID 56; NID 47 → gNID 61; NID 63 → 63.
+        assert_eq!(r.gnid(7), 56);
+        assert_eq!(r.gnid(15), 57);
+        assert_eq!(r.gnid(23), 58);
+        assert_eq!(r.gnid(31), 59);
+        assert_eq!(r.gnid(39), 60);
+        assert_eq!(r.gnid(47), 61);
+        assert_eq!(r.gnid(55), 62);
+        assert_eq!(r.gnid(63), 63);
+        // Compute nodes keep order: NID 0 → 0, NID 8 → 7 (one IO skipped).
+        assert_eq!(r.gnid(0), 0);
+        assert_eq!(r.gnid(6), 6);
+        assert_eq!(r.gnid(8), 7);
+        assert_eq!(r.gnid(62), 55);
+        assert_eq!(
+            r.groups(),
+            &[(NodeType::Compute, 0, 56), (NodeType::Io, 56, 8)]
+        );
+    }
+
+    #[test]
+    fn identity_reindex() {
+        let r = TypeReindex::identity(16);
+        for n in 0..16 {
+            assert_eq!(r.gnid(n), n);
+            assert_eq!(r.nid(n), n);
+        }
+    }
+
+    #[test]
+    fn prop_bijection_and_order_preserving() {
+        Prop::new("reindex-bijection").cases(60).run(|g| {
+            let n = g.usize_in(1, 200) as u32;
+            let mut map = NodeTypeMap::uniform(n, NodeType::Compute);
+            // Sprinkle random types.
+            for _ in 0..g.usize_in(0, n as usize) {
+                let nid = g.usize_in(0, n as usize - 1) as u32;
+                let ty = *g.choose(&[
+                    NodeType::Io,
+                    NodeType::Service,
+                    NodeType::Gpgpu,
+                    NodeType::Custom(1),
+                ]);
+                map.set(nid, ty);
+            }
+            let r = TypeReindex::new(&map);
+            // Bijection.
+            let mut seen = vec![false; n as usize];
+            for nid in 0..n {
+                let gid = r.gnid(nid);
+                assert!(!seen[gid as usize], "gnid reused");
+                seen[gid as usize] = true;
+                assert_eq!(r.nid(gid), nid);
+            }
+            // Within a type, NID order is preserved.
+            for ty in map.types_present() {
+                let members = map.nids_of(ty);
+                let gids: Vec<u32> = members.iter().map(|&m| r.gnid(m)).collect();
+                let mut sorted = gids.clone();
+                sorted.sort_unstable();
+                assert_eq!(gids, sorted, "order not preserved within {ty}");
+                // And contiguous.
+                if let Some(&first) = sorted.first() {
+                    let expect: Vec<u32> = (first..first + sorted.len() as u32).collect();
+                    assert_eq!(sorted, expect, "group not contiguous for {ty}");
+                }
+            }
+            // Groups cover [0, n).
+            let total: u32 = r.groups().iter().map(|&(_, _, c)| c).sum();
+            assert_eq!(total, n);
+        });
+    }
+
+    #[test]
+    fn uniform_map_gives_identity() {
+        let map = NodeTypeMap::uniform(32, NodeType::Compute);
+        let r = TypeReindex::new(&map);
+        assert_eq!(r, TypeReindex::identity(32));
+    }
+}

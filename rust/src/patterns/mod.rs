@@ -1,0 +1,346 @@
+//! Traffic-pattern library (§III).
+//!
+//! The paper's analysis pattern is **C2IO** — "data collection from all
+//! compute nodes to IO nodes". Its §III prose pins a *bijective* reading
+//! (each compute node sends to the IO node of its symmetrical leaf, "each
+//! destination has exactly one corresponding source"), while the §IV
+//! Gdmodk analysis ("all leaves' up-ports have seven sources and two
+//! destinations") is only consistent with a *dense* reading (every
+//! compute node sends to every IO node of the opposite subgroup). Both
+//! are provided — [`Pattern::C2ioSym`] and [`Pattern::C2ioAll`] — and the
+//! benches report both (see DESIGN.md §4).
+//!
+//! Classic worst-case patterns (all-to-all, shift, gather/scatter,
+//! permutations, hot-spot) are included for baseline comparisons.
+
+use crate::nodes::{NodeType, NodeTypeMap};
+use crate::topology::{Endpoint, Nid, Topology};
+use crate::util::rng::Xoshiro256;
+use anyhow::{ensure, Result};
+
+/// A communication pattern: a generator of (src, dst) flows.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Pattern {
+    /// Compute→IO, bijective symmetric-leaf reading (§III): the compute
+    /// nodes of each leaf send to the IO node(s) of the leaf with the
+    /// top-level digit mirrored (`a_h ↦ m_h-1-a_h`), round-robin when a
+    /// leaf hosts several IO nodes.
+    C2ioSym,
+    /// Compute→IO, dense cross-subgroup reading (§IV): every compute node
+    /// sends to every IO node whose top-level digit differs.
+    C2ioAll,
+    /// The symmetrical patterns Q of §IV.B's identities: IO→compute.
+    Io2cSym,
+    Io2cAll,
+    /// Generalized bijective type pattern: sources of `src_ty` on each
+    /// leaf send to `dst_ty` nodes of the mirrored leaf.
+    TypeBiject { src_ty: NodeType, dst_ty: NodeType },
+    /// Generalized dense type pattern; `cross_top_only` restricts to
+    /// flows whose endpoints differ in the top-level digit.
+    TypeDense { src_ty: NodeType, dst_ty: NodeType, cross_top_only: bool },
+    /// Every node to every other node.
+    AllToAll,
+    /// Shift permutation: node i → (i + k) mod N (Zahavi's nonblocking
+    /// target for Dmodk on real-life fat-trees).
+    Shift { k: u32 },
+    /// All nodes send to `root` (incast).
+    Gather { root: Nid },
+    /// `root` sends to all nodes (outcast).
+    Scatter { root: Nid },
+    /// Random permutation (derangement not enforced; self-flows dropped).
+    RandPerm { seed: u64 },
+    /// Every node sends to one of `dsts` hot destinations (chosen
+    /// round-robin by source).
+    HotSpot { dsts: u32 },
+    /// Reverse every flow of the inner pattern (P ↦ its symmetrical Q).
+    Transpose(Box<Pattern>),
+}
+
+impl Pattern {
+    /// Generate the flow list. Patterns touching node types need a type
+    /// map; others ignore it.
+    pub fn flows(&self, topo: &Topology, types: &NodeTypeMap) -> Result<Vec<(Nid, Nid)>> {
+        let n = topo.num_nodes() as Nid;
+        let flows = match self {
+            Pattern::C2ioSym => {
+                Pattern::TypeBiject { src_ty: NodeType::Compute, dst_ty: NodeType::Io }
+                    .flows(topo, types)?
+            }
+            Pattern::C2ioAll => Pattern::TypeDense {
+                src_ty: NodeType::Compute,
+                dst_ty: NodeType::Io,
+                cross_top_only: true,
+            }
+            .flows(topo, types)?,
+            Pattern::Io2cSym => Pattern::Transpose(Box::new(Pattern::C2ioSym)).flows(topo, types)?,
+            Pattern::Io2cAll => Pattern::Transpose(Box::new(Pattern::C2ioAll)).flows(topo, types)?,
+            Pattern::TypeBiject { src_ty, dst_ty } => {
+                let mut out = Vec::new();
+                for leaf in topo.level_switches(1) {
+                    let srcs = leaf_nodes_of_type(topo, types, leaf, *src_ty);
+                    if srcs.is_empty() {
+                        continue;
+                    }
+                    let mirror = mirrored_leaf(topo, leaf);
+                    let dsts = leaf_nodes_of_type(topo, types, mirror, *dst_ty);
+                    if dsts.is_empty() {
+                        continue;
+                    }
+                    for (i, &s) in srcs.iter().enumerate() {
+                        out.push((s, dsts[i % dsts.len()]));
+                    }
+                }
+                out
+            }
+            Pattern::TypeDense { src_ty, dst_ty, cross_top_only } => {
+                let srcs = types.nids_of(*src_ty);
+                let dsts = types.nids_of(*dst_ty);
+                let mut out = Vec::new();
+                for &s in &srcs {
+                    let sd = topo.nid_digits(s);
+                    for &d in &dsts {
+                        if s == d {
+                            continue;
+                        }
+                        if *cross_top_only {
+                            let dd = topo.nid_digits(d);
+                            if sd[topo.spec.h - 1] == dd[topo.spec.h - 1] {
+                                continue;
+                            }
+                        }
+                        out.push((s, d));
+                    }
+                }
+                out
+            }
+            Pattern::AllToAll => {
+                let mut out = Vec::with_capacity(n as usize * (n as usize - 1));
+                for s in 0..n {
+                    for d in 0..n {
+                        if s != d {
+                            out.push((s, d));
+                        }
+                    }
+                }
+                out
+            }
+            Pattern::Shift { k } => (0..n).map(|s| (s, (s + k) % n)).filter(|(s, d)| s != d).collect(),
+            Pattern::Gather { root } => {
+                ensure!(*root < n, "gather root {} out of range", root);
+                (0..n).filter(|&s| s != *root).map(|s| (s, *root)).collect()
+            }
+            Pattern::Scatter { root } => {
+                ensure!(*root < n, "scatter root {} out of range", root);
+                (0..n).filter(|&d| d != *root).map(|d| (*root, d)).collect()
+            }
+            Pattern::RandPerm { seed } => {
+                let mut perm: Vec<Nid> = (0..n).collect();
+                Xoshiro256::new(*seed).shuffle(&mut perm);
+                (0..n).map(|s| (s, perm[s as usize])).filter(|(s, d)| s != d).collect()
+            }
+            Pattern::HotSpot { dsts } => {
+                ensure!(*dsts > 0 && *dsts <= n, "hotspot dsts out of range");
+                (0..n)
+                    .map(|s| (s, s % dsts))
+                    .filter(|(s, d)| s != d)
+                    .collect()
+            }
+            Pattern::Transpose(inner) => {
+                inner.flows(topo, types)?.into_iter().map(|(s, d)| (d, s)).collect()
+            }
+        };
+        ensure!(!flows.is_empty(), "pattern {} produced no flows", self.name());
+        Ok(flows)
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Pattern::C2ioSym => "c2io-sym".into(),
+            Pattern::C2ioAll => "c2io-all".into(),
+            Pattern::Io2cSym => "io2c-sym".into(),
+            Pattern::Io2cAll => "io2c-all".into(),
+            Pattern::TypeBiject { src_ty, dst_ty } => format!("biject-{src_ty}-{dst_ty}"),
+            Pattern::TypeDense { src_ty, dst_ty, cross_top_only } => {
+                format!("dense-{src_ty}-{dst_ty}{}", if *cross_top_only { "-cross" } else { "" })
+            }
+            Pattern::AllToAll => "all-to-all".into(),
+            Pattern::Shift { k } => format!("shift-{k}"),
+            Pattern::Gather { root } => format!("gather-{root}"),
+            Pattern::Scatter { root } => format!("scatter-{root}"),
+            Pattern::RandPerm { seed } => format!("randperm-{seed}"),
+            Pattern::HotSpot { dsts } => format!("hotspot-{dsts}"),
+            Pattern::Transpose(p) => format!("transpose({})", p.name()),
+        }
+    }
+
+    /// Parse CLI forms: `c2io-sym`, `c2io-all`, `io2c-sym`, `io2c-all`,
+    /// `all-to-all`, `shift:K`, `gather:ROOT`, `scatter:ROOT`,
+    /// `randperm:SEED`, `hotspot:D`, `biject:SRC:DST`, `dense:SRC:DST`,
+    /// `transpose:<inner>`.
+    pub fn parse(s: &str) -> Result<Pattern> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let arg = |i: usize| -> Result<u32> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("pattern {s:?}: missing arg {i}"))?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("pattern {s:?}: {e}"))
+        };
+        let ty = |i: usize| -> Result<NodeType> {
+            NodeType::parse(parts.get(i).copied().unwrap_or(""))
+                .ok_or_else(|| anyhow::anyhow!("pattern {s:?}: bad node type at {i}"))
+        };
+        Ok(match parts[0] {
+            "c2io-sym" | "c2io" => Pattern::C2ioSym,
+            "c2io-all" => Pattern::C2ioAll,
+            "io2c-sym" | "io2c" => Pattern::Io2cSym,
+            "io2c-all" => Pattern::Io2cAll,
+            "all-to-all" | "a2a" => Pattern::AllToAll,
+            "shift" => Pattern::Shift { k: arg(1)? },
+            "gather" => Pattern::Gather { root: arg(1)? },
+            "scatter" => Pattern::Scatter { root: arg(1)? },
+            "randperm" => Pattern::RandPerm { seed: arg(1)? as u64 },
+            "hotspot" => Pattern::HotSpot { dsts: arg(1)? },
+            "biject" => Pattern::TypeBiject { src_ty: ty(1)?, dst_ty: ty(2)? },
+            "dense" => Pattern::TypeDense { src_ty: ty(1)?, dst_ty: ty(2)?, cross_top_only: true },
+            "dense-any" => {
+                Pattern::TypeDense { src_ty: ty(1)?, dst_ty: ty(2)?, cross_top_only: false }
+            }
+            "transpose" => Pattern::Transpose(Box::new(Pattern::parse(&parts[1..].join(":"))?)),
+            other => anyhow::bail!("unknown pattern {other:?}"),
+        })
+    }
+}
+
+/// Nodes of a given type on a leaf, ascending NID.
+fn leaf_nodes_of_type(
+    topo: &Topology,
+    types: &NodeTypeMap,
+    leaf: usize,
+    ty: NodeType,
+) -> Vec<Nid> {
+    let mut nids: Vec<Nid> = topo.switches[leaf]
+        .down_ports
+        .iter()
+        .filter_map(|&p| match topo.port_peer(p) {
+            Endpoint::Node(n) if types.type_of(n) == ty => Some(n),
+            _ => None,
+        })
+        .collect();
+    nids.sort_unstable();
+    nids.dedup();
+    nids
+}
+
+/// The leaf with the top-level digit mirrored (`a_h ↦ m_h - 1 - a_h`).
+fn mirrored_leaf(topo: &Topology, leaf: usize) -> usize {
+    let sw = &topo.switches[leaf];
+    debug_assert_eq!(sw.level, 1);
+    let mut top = sw.top.clone();
+    let h = topo.spec.h;
+    if h >= 2 {
+        let mh = topo.spec.m[h - 1];
+        let last = top.len() - 1;
+        top[last] = mh - 1 - top[last];
+    }
+    topo.switch_at(1, &top, &sw.bottom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn setup() -> (Topology, NodeTypeMap) {
+        let t = build_pgft(&PgftSpec::case_study());
+        let m = Placement::paper_io().apply(&t).unwrap();
+        (t, m)
+    }
+
+    /// "(0,0,1) is symmetrical to (0,1,1), so NIDs 8 to 14 send to NID 47."
+    #[test]
+    fn c2io_sym_matches_paper_example() {
+        let (t, m) = setup();
+        let flows = Pattern::C2ioSym.flows(&t, &m).unwrap();
+        assert_eq!(flows.len(), 56, "7 computes × 8 leaves");
+        for s in 8..15u32 {
+            assert!(flows.contains(&(s, 47)), "NID {s} should send to 47");
+        }
+        // And leaf 5's computes send to leaf 1's IO node (NID 15).
+        for s in 40..47u32 {
+            assert!(flows.contains(&(s, 15)));
+        }
+        // All flows cross the top (different subgroup digits).
+        for &(s, d) in &flows {
+            assert_ne!(t.nid_digits(s)[2], t.nid_digits(d)[2], "{s}->{d} must cross");
+        }
+        // Each destination has exactly 7 sources.
+        for io in [7u32, 15, 23, 31, 39, 47, 55, 63] {
+            assert_eq!(flows.iter().filter(|&&(_, d)| d == io).count(), 7);
+        }
+    }
+
+    #[test]
+    fn c2io_all_is_dense_cross_subgroup() {
+        let (t, m) = setup();
+        let flows = Pattern::C2ioAll.flows(&t, &m).unwrap();
+        // 28 computes per subgroup × 4 opposite IO × 2 directions-of-subgroup.
+        assert_eq!(flows.len(), 224);
+        for &(s, d) in &flows {
+            assert_eq!(m.type_of(s), NodeType::Compute);
+            assert_eq!(m.type_of(d), NodeType::Io);
+            assert_ne!(t.nid_digits(s)[2], t.nid_digits(d)[2]);
+        }
+    }
+
+    #[test]
+    fn transpose_reverses() {
+        let (t, m) = setup();
+        let p = Pattern::C2ioSym.flows(&t, &m).unwrap();
+        let q = Pattern::Io2cSym.flows(&t, &m).unwrap();
+        let mut p_rev: Vec<(Nid, Nid)> = p.iter().map(|&(s, d)| (d, s)).collect();
+        let mut q2 = q.clone();
+        p_rev.sort_unstable();
+        q2.sort_unstable();
+        assert_eq!(p_rev, q2);
+    }
+
+    #[test]
+    fn classic_patterns_shapes() {
+        let (t, m) = setup();
+        assert_eq!(Pattern::AllToAll.flows(&t, &m).unwrap().len(), 64 * 63);
+        assert_eq!(Pattern::Shift { k: 8 }.flows(&t, &m).unwrap().len(), 64);
+        assert_eq!(Pattern::Gather { root: 7 }.flows(&t, &m).unwrap().len(), 63);
+        assert_eq!(Pattern::Scatter { root: 0 }.flows(&t, &m).unwrap().len(), 63);
+        let perm = Pattern::RandPerm { seed: 5 }.flows(&t, &m).unwrap();
+        let mut dsts: Vec<Nid> = perm.iter().map(|&(_, d)| d).collect();
+        dsts.sort_unstable();
+        dsts.dedup();
+        assert_eq!(dsts.len(), perm.len(), "permutation destinations distinct");
+        let hot = Pattern::HotSpot { dsts: 2 }.flows(&t, &m).unwrap();
+        assert!(hot.iter().all(|&(_, d)| d < 2));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [
+            "c2io-sym", "c2io-all", "io2c-sym", "io2c-all", "all-to-all", "shift:8",
+            "gather:7", "scatter:0", "randperm:3", "hotspot:2", "biject:compute:io",
+            "dense:compute:io", "transpose:shift:8",
+        ] {
+            let p = Pattern::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            let (t, m) = setup();
+            assert!(!p.flows(&t, &m).unwrap().is_empty(), "{s}");
+        }
+        assert!(Pattern::parse("warp-drive").is_err());
+        assert!(Pattern::parse("shift").is_err());
+    }
+
+    #[test]
+    fn patterns_with_no_flows_error() {
+        let t = build_pgft(&PgftSpec::case_study());
+        let uniform = NodeTypeMap::uniform(64, NodeType::Compute);
+        assert!(Pattern::C2ioSym.flows(&t, &uniform).is_err(), "no IO nodes → no flows");
+    }
+}

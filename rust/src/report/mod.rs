@@ -1,0 +1,186 @@
+//! Generic result tables with text / CSV / JSON emitters — every bench
+//! and CLI command reports through this so EXPERIMENTS.md can quote
+//! machine-readable output.
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A rectangular result table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display<T: std::fmt::Display>(&mut self, cells: &[T]) -> &mut Self {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v)
+    }
+
+    /// Aligned fixed-width text.
+    pub fn to_text(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "# {}", self.title);
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// JSON: array of objects keyed by header.
+    pub fn to_json(&self) -> String {
+        let esc = |s: &str| {
+            let mut o = String::new();
+            for c in s.chars() {
+                match c {
+                    '"' => o.push_str("\\\""),
+                    '\\' => o.push_str("\\\\"),
+                    '\n' => o.push_str("\\n"),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(o, "\\u{:04x}", c as u32);
+                    }
+                    c => o.push(c),
+                }
+            }
+            o
+        };
+        // Numbers stay unquoted when they parse as f64 and aren't empty.
+        let cell = |s: &str| {
+            if !s.is_empty() && s.parse::<f64>().is_ok() {
+                s.to_string()
+            } else {
+                format!("\"{}\"", esc(s))
+            }
+        };
+        let mut out = String::from("[");
+        for (ri, row) in self.rows.iter().enumerate() {
+            if ri > 0 {
+                out.push(',');
+            }
+            out.push_str("\n  {");
+            for (i, h) in self.headers.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                let _ = write!(out, "\"{}\": {}", esc(h), cell(&row[i]));
+            }
+            out.push('}');
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>, format: &str) -> Result<()> {
+        let body = match format {
+            "csv" => self.to_csv(),
+            "json" => self.to_json(),
+            _ => self.to_text(),
+        };
+        std::fs::write(path.as_ref(), body)
+            .with_context(|| format!("write {}", path.as_ref().display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo", &["algo", "C_topo", "note"]);
+        t.row_display(&["dmodk", "4", "two hot ports"]);
+        t.row_display(&["gdmodk", "1", "optimal, \"quoted\""]);
+        t
+    }
+
+    #[test]
+    fn text_aligns() {
+        let s = sample().to_text();
+        assert!(s.contains("# demo"));
+        assert!(s.contains("dmodk"));
+        assert_eq!(s.lines().count(), 5);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let s = sample().to_csv();
+        assert!(s.starts_with("algo,C_topo,note"));
+        assert!(s.contains("\"optimal, \"\"quoted\"\"\""));
+    }
+
+    #[test]
+    fn json_types() {
+        let s = sample().to_json();
+        assert!(s.contains("\"C_topo\": 4"), "{s}");
+        assert!(s.contains("\"algo\": \"dmodk\""));
+        assert!(s.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn write_roundtrip() {
+        let t = sample();
+        let dir = std::env::temp_dir().join("pgft_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for fmt in ["text", "csv", "json"] {
+            let p = dir.join(format!("t.{fmt}"));
+            t.write(&p, fmt).unwrap();
+            assert!(std::fs::read_to_string(&p).unwrap().contains("dmodk"));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        Table::new("x", &["a", "b"]).row(&["only-one".into()]);
+    }
+}

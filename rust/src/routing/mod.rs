@@ -1,0 +1,166 @@
+//! Routing algorithms for PGFTs.
+//!
+//! All fat-tree routes are *minimal up\*/down\* paths*: climb from the
+//! source to a nearest common ancestor (NCA) of source and destination,
+//! then descend. An algorithm therefore only decides
+//!   1. which up-port to take at each non-ancestor element, and
+//!   2. which of the `p_l` parallel links to take on the way down.
+//!
+//! [`Router`] captures exactly those two choices plus the injection port;
+//! [`trace`] turns them into concrete routes; [`table`] materializes them
+//! into per-switch linear forwarding tables (what a fabric manager
+//! uploads to switches).
+//!
+//! Implemented algorithms (paper §I.D, §IV):
+//! * [`xmodk`] — Dmodk / Smodk closed forms, and their type-grouped
+//!   Gdmodk / Gsmodk variants (the paper's contribution),
+//! * [`random`] — seeded random up-port / parallel-link choice,
+//! * [`degraded`] — procedural fault-aware baseline used for rerouting.
+
+pub mod degraded;
+pub mod random;
+pub mod table;
+pub mod trace;
+pub mod verify;
+pub mod xmodk;
+
+pub use table::ForwardingTables;
+pub use trace::{trace_route, RoutePorts};
+pub use xmodk::{Basis, Xmodk};
+
+use crate::nodes::{NodeTypeMap, TypeReindex};
+use crate::topology::{Nid, PortId, SwitchId, Topology};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// The routing decision interface: enough to derive any minimal route.
+pub trait Router: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Injection port of `src` (among its `w_1·p_1` node up-ports).
+    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId;
+
+    /// Up-port taken at switch `sw` (not an ancestor of `dst`).
+    fn up_port(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> PortId;
+
+    /// Parallel-link index (`0..p_l`) used when descending from `sw`
+    /// toward `dst`.
+    fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32;
+
+    /// Whether tables depend only on the destination (true for Dmodk,
+    /// Gdmodk, Random; false for Smodk/Gsmodk). Dest-based routers can be
+    /// materialized into plain linear forwarding tables.
+    fn dest_based(&self) -> bool;
+}
+
+/// Algorithm selector, the user-facing name set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgorithmKind {
+    Random,
+    /// The paper's §III.D per-route dispersion model (see
+    /// [`random::PerPairRandom`]).
+    RandomPair,
+    Dmodk,
+    Smodk,
+    Gdmodk,
+    Gsmodk,
+}
+
+impl AlgorithmKind {
+    pub const ALL: [AlgorithmKind; 6] = [
+        AlgorithmKind::Random,
+        AlgorithmKind::RandomPair,
+        AlgorithmKind::Dmodk,
+        AlgorithmKind::Smodk,
+        AlgorithmKind::Gdmodk,
+        AlgorithmKind::Gsmodk,
+    ];
+
+    pub fn parse(s: &str) -> Result<AlgorithmKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Ok(AlgorithmKind::Random),
+            "random-pair" | "randompair" => Ok(AlgorithmKind::RandomPair),
+            "dmodk" => Ok(AlgorithmKind::Dmodk),
+            "smodk" => Ok(AlgorithmKind::Smodk),
+            "gdmodk" => Ok(AlgorithmKind::Gdmodk),
+            "gsmodk" => Ok(AlgorithmKind::Gsmodk),
+            other => anyhow::bail!("unknown algorithm {other:?} (random|random-pair|dmodk|smodk|gdmodk|gsmodk)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AlgorithmKind::Random => "random",
+            AlgorithmKind::RandomPair => "random-pair",
+            AlgorithmKind::Dmodk => "dmodk",
+            AlgorithmKind::Smodk => "smodk",
+            AlgorithmKind::Gdmodk => "gdmodk",
+            AlgorithmKind::Gsmodk => "gsmodk",
+        }
+    }
+
+    pub fn is_grouped(&self) -> bool {
+        matches!(self, AlgorithmKind::Gdmodk | AlgorithmKind::Gsmodk)
+    }
+
+    /// Instantiate a router. Grouped variants need the node-type map to
+    /// build Algorithm 1's re-index; `seed` only affects `Random`.
+    pub fn build(
+        &self,
+        topo: &Topology,
+        types: Option<&NodeTypeMap>,
+        seed: u64,
+    ) -> Box<dyn Router> {
+        let reindex = |basis: Basis| -> Box<dyn Router> {
+            let r = match types {
+                Some(m) => Arc::new(TypeReindex::new(m)),
+                None => Arc::new(TypeReindex::identity(topo.num_nodes() as u32)),
+            };
+            Box::new(Xmodk::grouped(basis, r))
+        };
+        match self {
+            AlgorithmKind::Random => Box::new(random::RandomRouter::new(topo, seed)),
+            AlgorithmKind::RandomPair => Box::new(random::PerPairRandom::new(seed)),
+            AlgorithmKind::Dmodk => Box::new(Xmodk::plain(Basis::Dest)),
+            AlgorithmKind::Smodk => Box::new(Xmodk::plain(Basis::Source)),
+            AlgorithmKind::Gdmodk => reindex(Basis::Dest),
+            AlgorithmKind::Gsmodk => reindex(Basis::Source),
+        }
+    }
+}
+
+impl std::fmt::Display for AlgorithmKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    #[test]
+    fn parse_all_kinds() {
+        for k in AlgorithmKind::ALL {
+            assert_eq!(AlgorithmKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(AlgorithmKind::parse("ftree").is_err());
+    }
+
+    #[test]
+    fn build_all_kinds() {
+        let t = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&t).unwrap();
+        for k in AlgorithmKind::ALL {
+            let r = k.build(&t, Some(&types), 42);
+            assert!(!r.name().is_empty());
+            assert_eq!(
+                r.dest_based(),
+                matches!(k, AlgorithmKind::Random | AlgorithmKind::Dmodk | AlgorithmKind::Gdmodk),
+                "{k}"
+            );
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Random routing (§I.D.1): when several NCAs (and parallel links) are
+//! available, pick upward routes uniformly at random — per (switch,
+//! destination) table entry, as a fabric manager would, so routes stay
+//! deterministic once computed.
+//!
+//! "On average, the routes are randomly load-balanced … Deviations from
+//! the average will, however, cause routes to overlap and induce network
+//! congestion." (§III.D quantifies this on the case study.)
+
+use super::Router;
+use crate::topology::{Nid, PortId, SwitchId, Topology};
+use crate::util::rng::Xoshiro256;
+
+/// Materialized random choices: one up-port index per (element, dest) and
+/// one parallel-link index per (switch, dest).
+pub struct RandomRouter {
+    seed: u64,
+    n: usize,
+    /// `node_up[src·n + dst? ]` — injection choice depends on dst for
+    /// table-per-destination semantics: indexed `[src][dst]` flattened.
+    node_up: Vec<u16>,
+    /// `sw_up[sw][dst]` flattened: chosen up-port *index*.
+    sw_up: Vec<u16>,
+    /// `sw_down[sw][dst]` flattened: chosen parallel-link index.
+    sw_down: Vec<u16>,
+    num_switches: usize,
+}
+
+impl RandomRouter {
+    pub fn new(topo: &Topology, seed: u64) -> RandomRouter {
+        let n = topo.num_nodes();
+        let ns = topo.num_switches();
+        let mut rng = Xoshiro256::new(seed);
+        let mut node_up = vec![0u16; n * n];
+        let up0 = topo.spec.up_ports_at(0) as u64;
+        for v in node_up.iter_mut() {
+            *v = rng.next_below(up0) as u16;
+        }
+        let mut sw_up = vec![0u16; ns * n];
+        let mut sw_down = vec![0u16; ns * n];
+        for sw in 0..ns {
+            let level = topo.switches[sw].level;
+            let ups = topo.spec.up_ports_at(level) as u64;
+            let par = topo.spec.p[level - 1] as u64;
+            for dst in 0..n {
+                if ups > 0 {
+                    sw_up[sw * n + dst] = rng.next_below(ups) as u16;
+                }
+                sw_down[sw * n + dst] = rng.next_below(par) as u16;
+            }
+        }
+        RandomRouter { seed, n, node_up, sw_up, sw_down, num_switches: ns }
+    }
+}
+
+impl Router for RandomRouter {
+    fn name(&self) -> String {
+        format!("random(seed={})", self.seed)
+    }
+
+    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId {
+        let idx = self.node_up[src as usize * self.n + dst as usize] as usize;
+        topo.nodes[src as usize].up_ports[idx]
+    }
+
+    fn up_port(&self, topo: &Topology, sw: SwitchId, _src: Nid, dst: Nid) -> PortId {
+        debug_assert!(sw < self.num_switches);
+        let idx = self.sw_up[sw * self.n + dst as usize] as usize;
+        topo.switches[sw].up_ports[idx]
+    }
+
+    fn down_link(&self, _topo: &Topology, sw: SwitchId, _src: Nid, dst: Nid) -> u32 {
+        self.sw_down[sw * self.n + dst as usize] as u32
+    }
+
+    fn dest_based(&self) -> bool {
+        true
+    }
+}
+
+/// Per-*pair* random routing — the model behind the paper's §III.D
+/// footnote ("distributing each group of 28 routes into its
+/// corresponding 8 top-ports"): every (src, dst) route spreads
+/// independently, so same-destination routes do *not* coalesce. Not
+/// realizable with plain per-destination tables (it needs source-adaptive
+/// dispersive tables), but it is the right baseline for the collision
+/// arithmetic the paper quotes; `random` (per-destination tables, above)
+/// is what a fabric manager would actually upload.
+pub struct PerPairRandom {
+    seed: u64,
+}
+
+impl PerPairRandom {
+    pub fn new(seed: u64) -> PerPairRandom {
+        PerPairRandom { seed }
+    }
+
+    /// Stateless per-(element, src, dst) uniform draw via SplitMix64.
+    #[inline]
+    fn draw(&self, elem: u64, src: Nid, dst: Nid, bound: u64) -> u64 {
+        let mut x = self.seed
+            ^ elem.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ ((src as u64) << 32 | dst as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        // One SplitMix64 scramble round.
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        x % bound
+    }
+}
+
+impl Router for PerPairRandom {
+    fn name(&self) -> String {
+        format!("random-pair(seed={})", self.seed)
+    }
+
+    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId {
+        let ups = topo.nodes[src as usize].up_ports.len() as u64;
+        topo.nodes[src as usize].up_ports[self.draw(u64::MAX, src, dst, ups) as usize]
+    }
+
+    fn up_port(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
+        let ups = topo.switches[sw].up_ports.len() as u64;
+        topo.switches[sw].up_ports[self.draw(sw as u64, src, dst, ups) as usize]
+    }
+
+    fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
+        let level = topo.switches[sw].level;
+        let par = topo.spec.p[level - 1] as u64;
+        self.draw((sw as u64) | (1 << 40), src, dst, par) as u32
+    }
+
+    fn dest_based(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::trace::{minimal_hops, trace_route};
+    use crate::topology::{build_pgft, PgftSpec};
+
+    #[test]
+    fn deterministic_per_seed() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let a = RandomRouter::new(&topo, 1);
+        let b = RandomRouter::new(&topo, 1);
+        let c = RandomRouter::new(&topo, 2);
+        let mut diff = 0;
+        for (s, d) in [(0u32, 63u32), (5, 40), (33, 2), (12, 55)] {
+            assert_eq!(trace_route(&topo, &a, s, d).ports, trace_route(&topo, &b, s, d).ports);
+            if trace_route(&topo, &a, s, d).ports != trace_route(&topo, &c, s, d).ports {
+                diff += 1;
+            }
+        }
+        assert!(diff > 0, "different seeds should differ somewhere");
+    }
+
+    #[test]
+    fn routes_are_minimal() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = RandomRouter::new(&topo, 7);
+        for src in (0..64u32).step_by(5) {
+            for dst in 0..64u32 {
+                assert_eq!(
+                    trace_route(&topo, &r, src, dst).ports.len(),
+                    minimal_hops(&topo, src, dst)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_pair_routes_are_minimal_and_deterministic() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = PerPairRandom::new(5);
+        for src in (0..64u32).step_by(7) {
+            for dst in 0..64u32 {
+                let a = trace_route(&topo, &r, src, dst);
+                assert_eq!(a.ports.len(), minimal_hops(&topo, src, dst));
+                assert_eq!(a.ports, trace_route(&topo, &r, src, dst).ports);
+            }
+        }
+    }
+
+    #[test]
+    fn per_pair_spreads_same_destination_routes() {
+        // The defining difference from per-destination tables: routes to
+        // one destination take several top-ports.
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = PerPairRandom::new(1);
+        let mut tops = std::collections::HashSet::new();
+        for src in 0..32u32 {
+            for &p in &trace_route(&topo, &r, src, 63).ports {
+                if topo.port_level(p) == 3 {
+                    tops.insert(p);
+                }
+            }
+        }
+        assert!(tops.len() >= 3, "per-pair must disperse: {}", tops.len());
+    }
+
+    #[test]
+    fn uses_multiple_top_ports_for_one_destination() {
+        // Unlike Dmodk, random routing spreads routes to one destination
+        // across several top switches/links with high probability.
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = RandomRouter::new(&topo, 3);
+        let mut top_ports = std::collections::HashSet::new();
+        for src in 0..32u32 {
+            let route = trace_route(&topo, &r, src, 63);
+            for &p in &route.ports {
+                if topo.port_level(p) == 3 {
+                    top_ports.insert(p);
+                }
+            }
+        }
+        assert!(top_ports.len() > 1, "random should spread dest-63 routes");
+    }
+}

@@ -1,0 +1,142 @@
+//! Materialized linear forwarding tables (LFTs) — what the fabric
+//! manager actually uploads to switches.
+//!
+//! Destination-based routers (Dmodk, Gdmodk, Random) compress to one
+//! output port per (switch, destination). Source-based routers (Smodk,
+//! Gsmodk) need the source too — real fabrics implement them with
+//! per-ingress-port tables; we materialize the equivalent
+//! (ingress-port, destination) form.
+
+use super::{Router, trace::RoutePorts};
+use crate::topology::{Endpoint, Nid, PortId, Topology};
+use anyhow::{ensure, Result};
+
+/// Per-switch destination-indexed tables plus per-node injection tables.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ForwardingTables {
+    /// `switch_out[sw][dst]` — output port, `usize::MAX` when `dst` is
+    /// not routed via `sw` as origin of a hop (never happens for
+    /// complete tables; kept for partial/degraded tables).
+    pub switch_out: Vec<Vec<PortId>>,
+    /// `node_out[src][dst]` — injection port (`usize::MAX` on diagonal).
+    pub node_out: Vec<Vec<PortId>>,
+    /// Table generation, bumped by the coordinator on reroutes.
+    pub version: u64,
+}
+
+pub const UNROUTED: PortId = usize::MAX;
+
+impl ForwardingTables {
+    /// Materialize a destination-based router into LFTs.
+    pub fn build(topo: &Topology, router: &dyn Router) -> Result<ForwardingTables> {
+        ensure!(
+            router.dest_based(),
+            "{} is source-based; materialize per-ingress tables instead",
+            router.name()
+        );
+        let n = topo.num_nodes();
+        let mut switch_out = vec![vec![UNROUTED; n]; topo.num_switches()];
+        for (sw_id, sw) in topo.switches.iter().enumerate() {
+            for dst in 0..n as Nid {
+                let port = if topo.is_ancestor(sw_id, dst) {
+                    let j = router.down_link(topo, sw_id, 0, dst);
+                    topo.down_port_toward(sw_id, dst, j)
+                } else {
+                    router.up_port(topo, sw_id, 0, dst)
+                };
+                switch_out[sw.id][dst as usize] = port;
+            }
+        }
+        let mut node_out = vec![vec![UNROUTED; n]; n];
+        for src in 0..n as Nid {
+            for dst in 0..n as Nid {
+                if src != dst {
+                    node_out[src as usize][dst as usize] = router.inject_port(topo, src, dst);
+                }
+            }
+        }
+        Ok(ForwardingTables { switch_out, node_out, version: 0 })
+    }
+
+    /// Walk the tables for one flow.
+    pub fn trace(&self, topo: &Topology, src: Nid, dst: Nid) -> RoutePorts {
+        let mut ports = Vec::new();
+        if src == dst {
+            return RoutePorts { src, dst, ports };
+        }
+        let mut port = self.node_out[src as usize][dst as usize];
+        loop {
+            assert_ne!(port, UNROUTED, "unrouted hop {src}->{dst}");
+            ports.push(port);
+            match topo.port_peer(port) {
+                Endpoint::Node(n) => {
+                    assert_eq!(n, dst, "table walk ended at node {n}, wanted {dst}");
+                    break;
+                }
+                Endpoint::Switch(s) => {
+                    port = self.switch_out[s][dst as usize];
+                }
+            }
+            assert!(ports.len() <= 4 * topo.spec.h + 2, "table loop {src}->{dst}");
+        }
+        RoutePorts { src, dst, ports }
+    }
+
+    /// Total number of (switch, dst) entries — the size a fabric manager
+    /// would push over the management network.
+    pub fn num_entries(&self) -> usize {
+        self.switch_out.iter().map(|t| t.len()).sum()
+    }
+
+    /// Entries that differ from `other` (for incremental distribution).
+    pub fn diff_entries(&self, other: &ForwardingTables) -> usize {
+        self.switch_out
+            .iter()
+            .zip(&other.switch_out)
+            .map(|(a, b)| a.iter().zip(b).filter(|(x, y)| x != y).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::trace::trace_route;
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    #[test]
+    fn tables_reproduce_traced_routes() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Random] {
+            let r = kind.build(&topo, None, 11);
+            let t = ForwardingTables::build(&topo, &*r).unwrap();
+            for src in 0..64u32 {
+                for dst in 0..64u32 {
+                    assert_eq!(
+                        t.trace(&topo, src, dst).ports,
+                        trace_route(&topo, &*r, src, dst).ports,
+                        "{kind} {src}->{dst}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn source_based_rejected() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = AlgorithmKind::Smodk.build(&topo, None, 0);
+        assert!(ForwardingTables::build(&topo, &*r).is_err());
+    }
+
+    #[test]
+    fn entry_count_and_diff() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let d = ForwardingTables::build(&topo, &*AlgorithmKind::Dmodk.build(&topo, None, 0)).unwrap();
+        assert_eq!(d.num_entries(), 14 * 64);
+        let r = ForwardingTables::build(&topo, &*AlgorithmKind::Random.build(&topo, None, 5)).unwrap();
+        assert_eq!(d.diff_entries(&d), 0);
+        assert!(d.diff_entries(&r) > 0);
+    }
+}

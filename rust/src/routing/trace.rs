@@ -1,0 +1,197 @@
+//! Route tracing: turn a [`Router`]'s local decisions into the full
+//! sequence of output ports a packet traverses from `src` to `dst`.
+//!
+//! All produced routes are minimal up\*/down\* paths: the trace climbs
+//! while the current switch is not an ancestor of the destination, then
+//! descends along destination digits. This is the invariant that makes
+//! fat-tree routing deadlock-free (§I.A), and `debug_assert`s enforce it.
+
+use super::Router;
+use crate::topology::{Endpoint, Nid, PortId, Topology};
+
+/// A traced route: every output port the flow occupies, in order,
+/// including the source node's injection port and the last switch's
+/// down-port to the destination node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoutePorts {
+    pub src: Nid,
+    pub dst: Nid,
+    pub ports: Vec<PortId>,
+}
+
+impl RoutePorts {
+    /// Number of switch-to-switch or node-to-switch hops.
+    pub fn len(&self) -> usize {
+        self.ports.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ports.is_empty()
+    }
+}
+
+/// Trace the route for one (src, dst) flow. `src == dst` yields an empty
+/// route (no network traversal).
+pub fn trace_route(topo: &Topology, router: &dyn Router, src: Nid, dst: Nid) -> RoutePorts {
+    let mut ports = Vec::with_capacity(2 * topo.spec.h);
+    trace_route_into(topo, router, src, dst, &mut ports);
+    RoutePorts { src, dst, ports }
+}
+
+/// Allocation-free tracing into a caller-provided buffer (the fused
+/// metric hot path, see `CongestionReport::compute_flows`).
+pub fn trace_route_into(
+    topo: &Topology,
+    router: &dyn Router,
+    src: Nid,
+    dst: Nid,
+    ports: &mut Vec<PortId>,
+) {
+    if src == dst {
+        return;
+    }
+    // Injection.
+    let inject = router.inject_port(topo, src, dst);
+    ports.push(inject);
+    let mut cur = topo.port_peer(inject);
+    let mut went_down = false;
+
+    loop {
+        let sw = match cur {
+            Endpoint::Node(n) => {
+                debug_assert_eq!(n, dst, "route ended at wrong node");
+                break;
+            }
+            Endpoint::Switch(s) => s,
+        };
+        let out = if topo.is_ancestor(sw, dst) {
+            went_down = true;
+            let j = router.down_link(topo, sw, src, dst);
+            topo.down_port_toward(sw, dst, j)
+        } else {
+            debug_assert!(!went_down, "valley route: up after down");
+            router.up_port(topo, sw, src, dst)
+        };
+        ports.push(out);
+        cur = topo.port_peer(out);
+        debug_assert!(ports.len() <= 2 * topo.spec.h + 1, "route too long: loop?");
+    }
+}
+
+/// Trace a batch of flows.
+pub fn trace_flows(
+    topo: &Topology,
+    router: &dyn Router,
+    flows: &[(Nid, Nid)],
+) -> Vec<RoutePorts> {
+    flows.iter().map(|&(s, d)| trace_route(topo, router, s, d)).collect()
+}
+
+/// Hop distance of a minimal route between two nodes: `2·(nca_level)`
+/// where `nca_level` is the lowest level at which their digit prefixes
+/// agree (plus the two node-leaf hops counted in the port sequence).
+pub fn minimal_hops(topo: &Topology, src: Nid, dst: Nid) -> usize {
+    if src == dst {
+        return 0;
+    }
+    let a = topo.nid_digits(src);
+    let b = topo.nid_digits(dst);
+    let h = topo.spec.h;
+    // NCA level = highest index where digits differ, +1 (levels 1-based).
+    let mut nca = 1;
+    for l in (0..h).rev() {
+        if a[l] != b[l] {
+            nca = l + 1;
+            break;
+        }
+    }
+    // Ports: 1 injection + (nca-1) switch up-ports + nca down-ports.
+    2 * nca
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::xmodk::{Basis, Xmodk};
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn trace_reaches_destination_and_is_minimal() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = Xmodk::plain(Basis::Dest);
+        for src in 0..64u32 {
+            for dst in 0..64u32 {
+                let route = trace_route(&topo, &r, src, dst);
+                assert_eq!(route.ports.len(), minimal_hops(&topo, src, dst), "{src}->{dst}");
+                if src != dst {
+                    // Last port lands on the destination node.
+                    let last = *route.ports.last().unwrap();
+                    assert_eq!(topo.port_peer(last), Endpoint::Node(dst));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_leaf_routes_stay_local() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let r = Xmodk::plain(Basis::Source);
+        // 0 → 5: same leaf, exactly 2 ports (inject + leaf down).
+        let route = trace_route(&topo, &r, 0, 5);
+        assert_eq!(route.ports.len(), 2);
+        // 0 → 8: adjacent leaf, through one L2 switch: 4 ports.
+        let route = trace_route(&topo, &r, 0, 8);
+        assert_eq!(route.ports.len(), 4);
+        // 0 → 63: cross subgroup, through top: 6 ports.
+        let route = trace_route(&topo, &r, 0, 63);
+        assert_eq!(route.ports.len(), 6);
+    }
+
+    #[test]
+    fn up_then_down_shape_for_all_algorithms() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = crate::nodes::Placement::paper_io().apply(&topo).unwrap();
+        for kind in AlgorithmKind::ALL {
+            let r = kind.build(&topo, Some(&types), 7);
+            for (src, dst) in [(0u32, 63u32), (12, 3), (40, 17), (63, 0)] {
+                let route = trace_route(&topo, &*r, src, dst);
+                // Direction flags must be monotone: all up then all down.
+                let dirs: Vec<bool> = route.ports.iter().map(|&p| topo.ports[p].up).collect();
+                let first_down = dirs.iter().position(|&u| !u).unwrap_or(dirs.len());
+                assert!(
+                    dirs[first_down..].iter().all(|&u| !u),
+                    "{kind}: valley in route {src}->{dst}: {dirs:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_all_pairs_reach_on_random_pgfts() {
+        Prop::new("trace-reaches").cases(25).run(|g| {
+            let h = g.usize_in(2, 3);
+            let m: Vec<u32> = (0..h).map(|_| g.usize_in(2, 4) as u32).collect();
+            let w: Vec<u32> = (0..h)
+                .map(|i| if i == 0 { 1 } else { g.usize_in(1, 3) as u32 })
+                .collect();
+            let p: Vec<u32> = (0..h).map(|_| g.usize_in(1, 2) as u32).collect();
+            let spec = PgftSpec::new(m, w, p).unwrap();
+            if spec.num_nodes() > 64 {
+                return;
+            }
+            let topo = build_pgft(&spec);
+            let n = topo.num_nodes() as u32;
+            for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Smodk, AlgorithmKind::Random] {
+                let r = kind.build(&topo, None, 99);
+                for src in 0..n {
+                    for dst in 0..n {
+                        let route = trace_route(&topo, &*r, src, dst);
+                        assert_eq!(route.ports.len(), minimal_hops(&topo, src, dst));
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Routing verification: reachability, minimality, up\*/down\* shape and
+//! deadlock freedom.
+//!
+//! Deadlock freedom is checked the strong way — build the channel
+//! dependency graph (CDG) over output ports from the actual traced
+//! routes and assert acyclicity — so it also covers degraded/procedural
+//! tables where the up\*/down\* argument does not apply verbatim.
+
+use super::trace::{minimal_hops, RoutePorts};
+use crate::topology::{Endpoint, Nid, Topology};
+use anyhow::{ensure, Result};
+
+/// Verification report over a set of traced routes.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub flows: usize,
+    pub minimal: usize,
+    pub valley_free: usize,
+    pub cdg_edges: usize,
+    pub deadlock_free: bool,
+}
+
+/// Verify a complete set of routes (usually all-pairs).
+pub fn verify_routes(topo: &Topology, routes: &[RoutePorts]) -> Result<VerifyReport> {
+    let mut rep = VerifyReport { flows: routes.len(), deadlock_free: true, ..Default::default() };
+
+    for r in routes {
+        if r.src == r.dst {
+            ensure!(r.ports.is_empty(), "self-route {} has hops", r.src);
+            continue;
+        }
+        // Reaches destination.
+        let last = *r.ports.last().expect("non-empty route");
+        ensure!(
+            topo.port_peer(last) == Endpoint::Node(r.dst),
+            "route {}->{} ends at {:?}",
+            r.src,
+            r.dst,
+            topo.port_peer(last)
+        );
+        // Contiguity: each port's peer owns the next port.
+        for win in r.ports.windows(2) {
+            let peer = topo.port_peer(win[0]);
+            let next_owner = topo.ports[win[1]].owner;
+            ensure!(peer == next_owner, "route {}->{} not contiguous", r.src, r.dst);
+        }
+        if r.ports.len() == minimal_hops(topo, r.src, r.dst) {
+            rep.minimal += 1;
+        }
+        // Valley-free (up* then down*).
+        let dirs: Vec<bool> = r.ports.iter().map(|&p| topo.ports[p].up).collect();
+        let first_down = dirs.iter().position(|&u| !u).unwrap_or(dirs.len());
+        if dirs[first_down..].iter().all(|&u| !u) {
+            rep.valley_free += 1;
+        }
+    }
+
+    // Channel dependency graph over ports.
+    let np = topo.num_ports();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for r in routes {
+        for win in r.ports.windows(2) {
+            edges.push((win[0] as u32, win[1] as u32));
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    rep.cdg_edges = edges.len();
+    rep.deadlock_free = is_acyclic(np, &edges);
+    ensure!(rep.deadlock_free, "channel dependency graph has a cycle");
+    Ok(rep)
+}
+
+/// Kahn's algorithm.
+fn is_acyclic(n: usize, edges: &[(u32, u32)]) -> bool {
+    let mut indeg = vec![0u32; n];
+    let mut adj_start = vec![0usize; n + 1];
+    for &(a, _) in edges {
+        adj_start[a as usize + 1] += 1;
+    }
+    for i in 0..n {
+        adj_start[i + 1] += adj_start[i];
+    }
+    let mut adj = vec![0u32; edges.len()];
+    let mut cursor = adj_start.clone();
+    for &(a, b) in edges {
+        adj[cursor[a as usize]] = b;
+        cursor[a as usize] += 1;
+        indeg[b as usize] += 1;
+    }
+    let mut queue: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(v) = queue.pop() {
+        seen += 1;
+        for i in adj_start[v as usize]..adj_start[v as usize + 1] {
+            let w = adj[i];
+            indeg[w as usize] -= 1;
+            if indeg[w as usize] == 0 {
+                queue.push(w);
+            }
+        }
+    }
+    seen == n
+}
+
+/// All-pairs flow list for a topology.
+pub fn all_pairs(n: Nid) -> Vec<(Nid, Nid)> {
+    let mut v = Vec::with_capacity((n as usize) * (n as usize - 1));
+    for s in 0..n {
+        for d in 0..n {
+            if s != d {
+                v.push((s, d));
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::trace::trace_flows;
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    #[test]
+    fn all_algorithms_verify_on_case_study() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = crate::nodes::Placement::paper_io().apply(&topo).unwrap();
+        let flows = all_pairs(64);
+        for kind in AlgorithmKind::ALL {
+            let r = kind.build(&topo, Some(&types), 1);
+            let routes = trace_flows(&topo, &*r, &flows);
+            let rep = verify_routes(&topo, &routes).unwrap_or_else(|e| panic!("{kind}: {e}"));
+            assert_eq!(rep.minimal, rep.flows, "{kind}: all routes minimal");
+            assert_eq!(rep.valley_free, rep.flows, "{kind}: all routes valley-free");
+            assert!(rep.deadlock_free);
+        }
+    }
+
+    #[test]
+    fn cycle_detection_works() {
+        assert!(is_acyclic(3, &[(0, 1), (1, 2)]));
+        assert!(!is_acyclic(3, &[(0, 1), (1, 2), (2, 0)]));
+        assert!(is_acyclic(1, &[]));
+    }
+
+    #[test]
+    fn broken_route_rejected() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        // A route that claims to end somewhere else.
+        let bogus = RoutePorts { src: 0, dst: 63, ports: vec![topo.nodes[0].up_ports[0]] };
+        assert!(verify_routes(&topo, &[bogus]).is_err());
+    }
+}

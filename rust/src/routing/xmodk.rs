@@ -1,0 +1,249 @@
+//! The Xmodk family: Dmodk, Smodk (Zahavi's closed forms) and the
+//! paper's grouped variants Gdmodk / Gsmodk.
+//!
+//! Up-port selection at a level-`l` element for key `x` (destination NID
+//! for Dmodk, source NID for Smodk):
+//!
+//! ```text
+//!     u = ⌊ x / Π_{k=1..l} w_k ⌋ mod (w_{l+1} · p_{l+1})
+//! ```
+//!
+//! `u` indexes the element's up-ports in round-robin order (parent
+//! `u mod w_{l+1}`, parallel link `⌊u / w_{l+1}⌋`), which is exactly how
+//! [`crate::topology::build`] numbers them — "all up-switches are
+//! assigned a route before multiple routes are assigned towards a single
+//! switch" (§I.D.2).
+//!
+//! Descending from level `l`, the parallel-link choice is
+//! `⌊ x / Π_{k=1..l-1} w_k ⌋ mod p_l`, the same stream of digits the
+//! up-path consumed, so routes to/from `x` stay within the single-root
+//! subtree Dmodk concentrates them in.
+//!
+//! The grouped variants apply the identical formulas to **gNIDs**
+//! (Algorithm 1 re-index, [`TypeReindex`]): `Gdmodk(d) = Dmodk(g(d))`,
+//! `Gsmodk(s) = Smodk(g(s))`.
+
+use super::Router;
+use crate::nodes::TypeReindex;
+use crate::topology::{Nid, PortId, SwitchId, Topology};
+use std::sync::Arc;
+
+/// Which endpoint's NID feeds the modulo formulas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Basis {
+    Dest,
+    Source,
+}
+
+/// Dmodk / Smodk / Gdmodk / Gsmodk, depending on `basis` and `reindex`.
+#[derive(Clone)]
+pub struct Xmodk {
+    basis: Basis,
+    reindex: Option<Arc<TypeReindex>>,
+}
+
+impl Xmodk {
+    pub fn plain(basis: Basis) -> Xmodk {
+        Xmodk { basis, reindex: None }
+    }
+
+    pub fn grouped(basis: Basis, reindex: Arc<TypeReindex>) -> Xmodk {
+        Xmodk { basis, reindex: Some(reindex) }
+    }
+
+    /// The key fed to the formulas for flow (src, dst): the chosen
+    /// endpoint's NID, re-indexed if grouped.
+    #[inline]
+    pub fn key(&self, src: Nid, dst: Nid) -> u64 {
+        let x = match self.basis {
+            Basis::Dest => dst,
+            Basis::Source => src,
+        };
+        match &self.reindex {
+            Some(r) => r.gnid(x) as u64,
+            None => x as u64,
+        }
+    }
+
+    /// Up-port index at a level-`l` element (0 = node): the closed form.
+    #[inline]
+    pub fn up_index(topo: &Topology, level: usize, key: u64) -> u32 {
+        let spec = &topo.spec;
+        let k = spec.w[level] as u64 * spec.p[level] as u64;
+        ((key / spec.w_prefix(level)) % k) as u32
+    }
+
+    /// Parallel-link index when descending from level `l`:
+    /// `⌊x / Π_{k=1..l} w_k⌋ mod p_l` — the *link half* of the up-port
+    /// index a level-`l-1` element computes for the same key, so the
+    /// descent retraces the parallel links of the single-root subtree the
+    /// ascent selected. (Using `W_{l-1}` instead would still match the
+    /// paper's case study, where the only parallel stage has `w_3 = 1`,
+    /// but would break the §IV.B duality
+    /// `C_topo(P(Dmodk)) = C_topo(Q(Smodk))` on PGFTs with a stage where
+    /// both `w_l > 1` and `p_l > 1` — see `rust/tests/symmetry.rs`.)
+    #[inline]
+    pub fn down_index(topo: &Topology, level: usize, key: u64) -> u32 {
+        let spec = &topo.spec;
+        ((key / spec.w_prefix(level)) % spec.p[level - 1] as u64) as u32
+    }
+}
+
+impl Router for Xmodk {
+    fn name(&self) -> String {
+        match (self.basis, self.reindex.is_some()) {
+            (Basis::Dest, false) => "dmodk".into(),
+            (Basis::Source, false) => "smodk".into(),
+            (Basis::Dest, true) => "gdmodk".into(),
+            (Basis::Source, true) => "gsmodk".into(),
+        }
+    }
+
+    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId {
+        let u = Self::up_index(topo, 0, self.key(src, dst));
+        topo.nodes[src as usize].up_ports[u as usize]
+    }
+
+    fn up_port(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
+        let s = &topo.switches[sw];
+        let u = Self::up_index(topo, s.level, self.key(src, dst));
+        s.up_ports[u as usize]
+    }
+
+    fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
+        let level = topo.switches[sw].level;
+        Self::down_index(topo, level, self.key(src, dst))
+    }
+
+    fn dest_based(&self) -> bool {
+        self.basis == Basis::Dest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::topology::{build_pgft, Endpoint, PgftSpec, Topology};
+
+    fn t() -> Topology {
+        build_pgft(&PgftSpec::case_study())
+    }
+
+    /// §III.B: "47 mod 2 = 1, thus destination 47 is assigned the second
+    /// L2 switch of each subgroup" and "[IO destinations] are assigned
+    /// the last port of the four leading to their subgroup".
+    #[test]
+    fn dmodk_paper_examples() {
+        let topo = t();
+        // Leaf level (l=1): up index for dest 47 = 47 mod (w2·p2 = 2) = 1.
+        assert_eq!(Xmodk::up_index(&topo, 1, 47), 1);
+        // All IO destinations (≡7 mod 8) share that L2 parity.
+        for d in [7u64, 15, 23, 31, 39, 47, 55, 63] {
+            assert_eq!(Xmodk::up_index(&topo, 1, d), 1, "dest {d}");
+            // L2 level (l=2): ⌊d/2⌋ mod (w3·p3 = 4) = 3 → last parallel port.
+            assert_eq!(Xmodk::up_index(&topo, 2, d), 3, "dest {d}");
+            // Top-level down parallel link = ⌊d/2⌋ mod p3 = 3.
+            assert_eq!(Xmodk::down_index(&topo, 3, d), 3, "dest {d}");
+        }
+        // Compute destinations spread: dests 0..7 hit alternating parity.
+        assert_eq!(Xmodk::up_index(&topo, 1, 0), 0);
+        assert_eq!(Xmodk::up_index(&topo, 1, 1), 1);
+        assert_eq!(Xmodk::up_index(&topo, 1, 2), 0);
+    }
+
+    /// All Dmodk routes to a destination converge on one top switch (the
+    /// "single-root subtree" property).
+    #[test]
+    fn dmodk_single_root_subtree() {
+        let topo = t();
+        let r = Xmodk::plain(Basis::Dest);
+        for dst in 0..64u32 {
+            let mut tops = std::collections::HashSet::new();
+            for src in 0..64u32 {
+                if src == dst || topo.nid_digits(src)[2] == topo.nid_digits(dst)[2] {
+                    continue; // only cross-subgroup routes reach the top
+                }
+                let ports = super::super::trace_route(&topo, &*Box::new(r.clone()), src, dst);
+                for &p in &ports.ports {
+                    if let Endpoint::Switch(s) = topo.ports[p].owner {
+                        if topo.switches[s].level == 3 {
+                            tops.insert(s);
+                        }
+                    }
+                }
+            }
+            assert_eq!(tops.len(), 1, "dest {dst} should use exactly one top switch");
+        }
+    }
+
+    /// §IV.B.1: Gdmodk assigns each IO destination a *unique* L2 parity —
+    /// "e.g.: gNID 61 is assigned (1,0,1) and (1,1,1)" — and splits the
+    /// four top-level parallel links two-per-L2-switch.
+    #[test]
+    fn gdmodk_paper_examples() {
+        let topo = t();
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let r = Xmodk::grouped(Basis::Dest, Arc::new(TypeReindex::new(&types)));
+        // gNIDs for IO nodes 7,15,…,63 are 56..63 → leaf parity alternates.
+        let gkeys: Vec<u64> = [7u32, 15, 23, 31, 39, 47, 55, 63]
+            .iter()
+            .map(|&d| r.key(0, d))
+            .collect();
+        assert_eq!(gkeys, vec![56, 57, 58, 59, 60, 61, 62, 63]);
+        // NID 47 → gNID 61 → leaf up index 61 mod 2 = 1 (second L2 switch).
+        assert_eq!(Xmodk::up_index(&topo, 1, 61), 1);
+        // L2 up index for gNID 61: ⌊61/2⌋ mod 4 = 2 (third parallel port,
+        // not the shared last one).
+        assert_eq!(Xmodk::up_index(&topo, 2, 61), 2);
+        // The four right-subgroup IO gNIDs 60..63 use parallel links
+        // 2,2,3,3 — half the links, balanced.
+        let links: Vec<u32> = (60..64).map(|g| Xmodk::up_index(&topo, 2, g)).collect();
+        assert_eq!(links, vec![2, 2, 3, 3]);
+        // And the left-subgroup IO gNIDs 56..59 use links 0,0,1,1.
+        let links_l: Vec<u32> = (56..60).map(|g| Xmodk::up_index(&topo, 2, g)).collect();
+        assert_eq!(links_l, vec![0, 0, 1, 1]);
+    }
+
+    /// §III.C: Smodk maps source s to top switch (s mod 2) via parallel
+    /// link ⌊s/2⌋ mod 4; sources ≡ 7 mod 8 would map to the last port of
+    /// the second top switch — but those are IO nodes, so two top-ports
+    /// carry no compute source.
+    #[test]
+    fn smodk_source_port_period() {
+        let topo = t();
+        for s in 0..32u64 {
+            assert_eq!(Xmodk::up_index(&topo, 1, s), (s % 2) as u32);
+            assert_eq!(Xmodk::up_index(&topo, 2, s), ((s / 2) % 4) as u32);
+        }
+        // Combo (parity, link) cycles with period 8; s ≡ 7 mod 8 is combo
+        // (1, 3) — the skipped one.
+        let combo = |s: u64| (Xmodk::up_index(&topo, 1, s), Xmodk::up_index(&topo, 2, s));
+        assert_eq!(combo(7), (1, 3));
+        assert_eq!(combo(15), (1, 3));
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..8 {
+            seen.insert(combo(s));
+        }
+        assert_eq!(seen.len(), 8, "8 consecutive NIDs cover all 8 top-port combos");
+    }
+
+    #[test]
+    fn grouped_with_identity_reindex_equals_plain() {
+        let topo = t();
+        let id = Arc::new(TypeReindex::identity(64));
+        let g = Xmodk::grouped(Basis::Dest, id);
+        let d = Xmodk::plain(Basis::Dest);
+        for src in [0u32, 13, 40] {
+            for dst in 0..64u32 {
+                if src == dst {
+                    continue;
+                }
+                assert_eq!(
+                    super::super::trace_route(&topo, &g, src, dst).ports,
+                    super::super::trace_route(&topo, &d, src, dst).ports
+                );
+            }
+        }
+    }
+}

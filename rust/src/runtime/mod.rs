@@ -1,0 +1,271 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos; `HloModuleProto::from_text_file` reassigns
+//! instruction ids and round-trips cleanly (see /opt/xla-example).
+//!
+//! Executables are compiled once per artifact and cached; the request
+//! path performs a single `execute` per fair-rate solve (the iteration
+//! loop is folded into the HLO as a `while`).
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One entry of `artifacts/manifest.txt`: `name kind F P iters`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String,
+    pub flows: usize,
+    pub ports: usize,
+    pub iters: usize,
+}
+
+/// A compiled artifact plus its static problem shape.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client + executable cache over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactInfo>,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`; compiles lazily).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("{}: run `make artifacts` first", manifest_path.display())
+        })?;
+        let mut manifest = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let f: Vec<&str> = line.split_whitespace().collect();
+            ensure!(f.len() == 5, "bad manifest line: {line:?}");
+            manifest.push(ArtifactInfo {
+                name: f[0].to_string(),
+                kind: f[1].to_string(),
+                flows: f[2].parse()?,
+                ports: f[3].parse()?,
+                iters: f[4].parse()?,
+            });
+        }
+        ensure!(!manifest.is_empty(), "empty artifact manifest");
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact location: `$PGFT_ARTIFACTS`, CWD, or the crate dir.
+    pub fn open_default() -> Result<Runtime> {
+        if let Ok(dir) = std::env::var("PGFT_ARTIFACTS") {
+            return Runtime::open(dir);
+        }
+        for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+            if Path::new(cand).join("manifest.txt").exists() {
+                return Runtime::open(cand);
+            }
+        }
+        bail!("artifacts/manifest.txt not found; run `make artifacts`")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &[ArtifactInfo] {
+        &self.manifest
+    }
+
+    /// Load (compile + cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .manifest
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let arc = std::sync::Arc::new(Executable { info, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Smallest artifact of `kind` fitting (flows, ports); errors if none.
+    pub fn pick(&self, kind: &str, flows: usize, ports: usize) -> Result<ArtifactInfo> {
+        self.manifest
+            .iter()
+            .filter(|a| a.kind == kind && a.flows >= flows && a.ports >= ports)
+            .min_by_key(|a| a.flows * a.ports)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {kind} artifact fits F={flows}, P={ports} (have: {:?}); \
+                     add a shape to python/compile/aot.py SHAPES",
+                    self.manifest.iter().map(|a| (a.flows, a.ports)).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Run a fair-rate solve: pad the dense incidence `a` (F×P
+    /// row-major), `cap` and `valid` to the artifact shape, execute, and
+    /// return the first `flows` rates.
+    pub fn solve_fairrate(
+        &self,
+        a: &[f32],
+        flows: usize,
+        ports: usize,
+        cap: &[f32],
+        valid: &[f32],
+    ) -> Result<Vec<f32>> {
+        ensure!(a.len() == flows * ports, "incidence shape mismatch");
+        ensure!(cap.len() == ports && valid.len() == flows, "vector shape mismatch");
+        let info = self.pick("fairrate", flows, ports)?;
+        let exe = self.load(&info.name)?;
+        let (pf, pp) = (info.flows, info.ports);
+
+        // Pad row-major (F,P) → (PF,PP). Padding capacity must be
+        // positive so padded ports never become a (zero-capacity)
+        // bottleneck; padding flows are marked invalid.
+        let mut a_pad = vec![0f32; pf * pp];
+        for f in 0..flows {
+            a_pad[f * pp..f * pp + ports].copy_from_slice(&a[f * ports..(f + 1) * ports]);
+        }
+        let mut cap_pad = vec![1f32; pp];
+        cap_pad[..ports].copy_from_slice(cap);
+        let mut valid_pad = vec![0f32; pf];
+        valid_pad[..flows].copy_from_slice(valid);
+
+        let lit_a = xla::Literal::vec1(&a_pad)
+            .reshape(&[pf as i64, pp as i64])
+            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+        let lit_cap = xla::Literal::vec1(&cap_pad);
+        let lit_valid = xla::Literal::vec1(&valid_pad);
+
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[lit_a, lit_cap, lit_valid])
+            .map_err(|e| anyhow!("execute {}: {e:?}", info.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (rates, frozen) = lit.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let rates = rates.to_vec::<f32>().map_err(|e| anyhow!("rates: {e:?}"))?;
+        let frozen = frozen.to_vec::<f32>().map_err(|e| anyhow!("frozen: {e:?}"))?;
+        ensure!(
+            frozen[..flows].iter().all(|&x| x > 0.5),
+            "solver did not converge within {} iterations",
+            info.iters
+        );
+        Ok(rates[..flows].to_vec())
+    }
+
+    /// Run the standalone dual contraction (portload artifact):
+    /// returns (load, cnt) for the first `ports` entries.
+    pub fn port_load(
+        &self,
+        a: &[f32],
+        flows: usize,
+        ports: usize,
+        rates: &[f32],
+        active: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(a.len() == flows * ports, "incidence shape mismatch");
+        let info = self.pick("portload", flows, ports)?;
+        let exe = self.load(&info.name)?;
+        let (pf, pp) = (info.flows, info.ports);
+        let mut a_pad = vec![0f32; pf * pp];
+        for f in 0..flows {
+            a_pad[f * pp..f * pp + ports].copy_from_slice(&a[f * ports..(f + 1) * ports]);
+        }
+        let mut r_pad = vec![0f32; pf];
+        r_pad[..flows].copy_from_slice(rates);
+        let mut u_pad = vec![0f32; pf];
+        u_pad[..flows].copy_from_slice(active);
+
+        let lit_a = xla::Literal::vec1(&a_pad)
+            .reshape(&[pf as i64, pp as i64])
+            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[lit_a, xla::Literal::vec1(&r_pad), xla::Literal::vec1(&u_pad)])
+            .map_err(|e| anyhow!("execute {}: {e:?}", info.name))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let (load, cnt) = lit.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let load = load.to_vec::<f32>().map_err(|e| anyhow!("load: {e:?}"))?;
+        let cnt = cnt.to_vec::<f32>().map_err(|e| anyhow!("cnt: {e:?}"))?;
+        Ok((load[..ports].to_vec(), cnt[..ports].to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::open_default().ok()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(rt.manifest().iter().any(|a| a.kind == "fairrate"));
+        assert!(rt.manifest().iter().any(|a| a.kind == "portload"));
+        assert!(rt.pick("fairrate", 100, 100).is_ok());
+        assert!(rt.pick("fairrate", 1_000_000, 10).is_err());
+        assert!(rt.pick("nonsense", 1, 1).is_err());
+    }
+
+    #[test]
+    fn portload_matches_manual() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // 3 flows × 2 ports.
+        let a = [1., 0., 1., 1., 0., 1.];
+        let (load, cnt) = rt
+            .port_load(&a, 3, 2, &[1.0, 2.0, 4.0], &[1.0, 1.0, 0.0])
+            .unwrap();
+        assert_eq!(load, vec![3.0, 6.0]);
+        assert_eq!(cnt, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn fairrate_known_case() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // Flow 0 → ports {0,1}; flow 1 → {0}; flow 2 → {1}; cap [1,2].
+        let a = [1., 1., 1., 0., 0., 1.];
+        let rates = rt
+            .solve_fairrate(&a, 3, 2, &[1.0, 2.0], &[1.0, 1.0, 1.0])
+            .unwrap();
+        assert!((rates[0] - 0.5).abs() < 1e-4, "{rates:?}");
+        assert!((rates[1] - 0.5).abs() < 1e-4, "{rates:?}");
+        assert!((rates[2] - 1.5).abs() < 1e-4, "{rates:?}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Routed pattern → dense flow×port incidence matrix.
+//!
+//! Only *used* ports become columns (a pattern touches a small slice of
+//! the fabric), which is what lets the fixed-shape XLA artifacts cover
+//! real topologies: the case study's C2IO uses ≲ 120 ports of 192; a
+//! 512-node sweep stays under the 1024-column artifact.
+
+use crate::routing::trace::RoutePorts;
+use crate::topology::{PortId, Topology};
+
+/// Dense row-major (flows × used-ports) 0/1 matrix with the port-id
+/// compression maps.
+#[derive(Clone, Debug)]
+pub struct IncidenceMatrix {
+    dense: Vec<f32>,
+    flows: usize,
+    used_ports: Vec<PortId>,
+    /// Reverse map: global PortId → column (usize::MAX = unused).
+    col_of: Vec<usize>,
+}
+
+impl IncidenceMatrix {
+    pub fn from_routes(topo: &Topology, routes: &[RoutePorts]) -> IncidenceMatrix {
+        let mut col_of = vec![usize::MAX; topo.num_ports()];
+        let mut used_ports = Vec::new();
+        for r in routes {
+            for &p in &r.ports {
+                if col_of[p] == usize::MAX {
+                    col_of[p] = used_ports.len();
+                    used_ports.push(p);
+                }
+            }
+        }
+        let flows = routes.len();
+        let ports = used_ports.len();
+        let mut dense = vec![0f32; flows * ports];
+        for (f, r) in routes.iter().enumerate() {
+            for &p in &r.ports {
+                dense[f * ports + col_of[p]] = 1.0;
+            }
+        }
+        IncidenceMatrix { dense, flows, used_ports, col_of }
+    }
+
+    pub fn num_flows(&self) -> usize {
+        self.flows
+    }
+
+    pub fn num_ports(&self) -> usize {
+        self.used_ports.len()
+    }
+
+    pub fn dense(&self) -> &[f32] {
+        &self.dense
+    }
+
+    #[inline]
+    pub fn at(&self, flow: usize, col: usize) -> f32 {
+        self.dense[flow * self.used_ports.len() + col]
+    }
+
+    /// Global PortId of a column.
+    pub fn port_of_col(&self, col: usize) -> PortId {
+        self.used_ports[col]
+    }
+
+    /// Column of a global PortId, if used.
+    pub fn col_of_port(&self, p: PortId) -> Option<usize> {
+        match self.col_of.get(p) {
+            Some(&c) if c != usize::MAX => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Ports crossed by one flow (column indices).
+    pub fn cols_of_flow(&self, flow: usize) -> Vec<usize> {
+        let np = self.used_ports.len();
+        (0..np).filter(|&c| self.dense[flow * np + c] > 0.5).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::Pattern;
+    use crate::routing::trace::trace_flows;
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    #[test]
+    fn incidence_matches_routes() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = crate::nodes::Placement::paper_io().apply(&topo).unwrap();
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        let r = AlgorithmKind::Dmodk.build(&topo, Some(&types), 0);
+        let routes = trace_flows(&topo, &*r, &flows);
+        let inc = IncidenceMatrix::from_routes(&topo, &routes);
+        assert_eq!(inc.num_flows(), 56);
+        assert!(inc.num_ports() > 0 && inc.num_ports() <= topo.num_ports());
+        // Every route's hop count equals its row sum.
+        for (f, route) in routes.iter().enumerate() {
+            assert_eq!(inc.cols_of_flow(f).len(), route.ports.len());
+            for &p in &route.ports {
+                let c = inc.col_of_port(p).expect("used port must have a column");
+                assert_eq!(inc.at(f, c), 1.0);
+                assert_eq!(inc.port_of_col(c), p);
+            }
+        }
+        // Unused ports have no column.
+        let used: std::collections::HashSet<_> =
+            routes.iter().flat_map(|r| r.ports.iter().copied()).collect();
+        for p in 0..topo.num_ports() {
+            assert_eq!(inc.col_of_port(p).is_some(), used.contains(&p));
+        }
+    }
+
+    #[test]
+    fn case_study_c2io_fits_smallest_artifact() {
+        // The (256, 256) artifact must cover the paper's workload.
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = crate::nodes::Placement::paper_io().apply(&topo).unwrap();
+        for pat in [Pattern::C2ioSym, Pattern::C2ioAll] {
+            let flows = pat.flows(&topo, &types).unwrap();
+            let r = AlgorithmKind::Smodk.build(&topo, Some(&types), 0);
+            let routes = trace_flows(&topo, &*r, &flows);
+            let inc = IncidenceMatrix::from_routes(&topo, &routes);
+            assert!(inc.num_flows() <= 256, "{}: {}", pat.name(), inc.num_flows());
+            assert!(inc.num_ports() <= 256, "{}: {}", pat.name(), inc.num_ports());
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! PGFT construction: enumerate switches level by level, cable each
+//! element to its `w_{l+1}` parents with `p_{l+1}` parallel links.
+//!
+//! Connection rule (Ohring XGFT extended with parallel links): the
+//! level-`l` element with top digits `(a_{l+1}..a_h)` and bottom digits
+//! `(b_1..b_l)` is cabled to the level-`l+1` switches with top digits
+//! `(a_{l+2}..a_h)` and bottom digits `(b_1..b_l, c)` for every
+//! `c ∈ [0, w_{l+1})`, each via `p_{l+1}` parallel links. From the
+//! parent's view, the child is its `a_{l+1}`-th child.
+
+use super::graph::{Endpoint, Link, Node, Port, Switch, Topology};
+use super::spec::PgftSpec;
+
+/// Build the full port/link graph for a PGFT.
+pub fn build_pgft(spec: &PgftSpec) -> Topology {
+    let h = spec.h;
+    let n_nodes = spec.num_nodes() as usize;
+
+    // --- enumerate switches ------------------------------------------------
+    let mut level_start = Vec::with_capacity(h + 1);
+    let mut switches: Vec<Switch> = Vec::new();
+    for l in 1..=h {
+        level_start.push(switches.len());
+        let count = spec.switches_at_level(l) as usize;
+        for within in 0..count {
+            // Decompose: bottom digits minor (radix w_1..w_l), then top
+            // digits (radix m_{l+1}..m_h). Must mirror Topology::switch_at.
+            let mut x = within as u64;
+            let mut bottom = Vec::with_capacity(l);
+            for j in 0..l {
+                bottom.push((x % spec.w[j] as u64) as u32);
+                x /= spec.w[j] as u64;
+            }
+            let mut top = Vec::with_capacity(h - l);
+            for j in 0..(h - l) {
+                top.push((x % spec.m[l + j] as u64) as u32);
+                x /= spec.m[l + j] as u64;
+            }
+            debug_assert_eq!(x, 0);
+            switches.push(Switch {
+                id: switches.len(),
+                level: l,
+                top,
+                bottom,
+                up_ports: vec![usize::MAX; spec.up_ports_at(l) as usize],
+                down_ports: vec![usize::MAX; spec.down_ports_at(l) as usize],
+            });
+        }
+    }
+    level_start.push(switches.len());
+
+    // --- enumerate nodes ---------------------------------------------------
+    let mut nodes: Vec<Node> = Vec::with_capacity(n_nodes);
+    for nid in 0..n_nodes as u64 {
+        let mut d = Vec::with_capacity(h);
+        let mut x = nid;
+        for l in 0..h {
+            d.push((x % spec.m[l] as u64) as u32);
+            x /= spec.m[l] as u64;
+        }
+        nodes.push(Node {
+            nid: nid as u32,
+            digits: d,
+            up_ports: vec![usize::MAX; spec.up_ports_at(0) as usize],
+        });
+    }
+
+    let mut topo = Topology {
+        spec: spec.clone(),
+        switches,
+        nodes,
+        ports: Vec::new(),
+        links: Vec::new(),
+        level_start,
+    };
+
+    // --- cable stage 1: nodes to leaves ------------------------------------
+    for nid in 0..n_nodes {
+        let (digits, child_idx) = {
+            let n = &topo.nodes[nid];
+            (n.digits.clone(), n.digits[0])
+        };
+        for c in 0..spec.w[0] {
+            // Parent leaf: top = a_2..a_h, bottom = (c).
+            let top: Vec<u32> = digits[1..].to_vec();
+            let leaf = topo.switch_at(1, &top, &[c]);
+            for j in 0..spec.p[0] {
+                let up_idx = c + spec.w[0] * j; // round-robin: parents first
+                let down_idx = child_idx * spec.p[0] + j;
+                add_link(
+                    &mut topo,
+                    Endpoint::Node(nid as u32),
+                    up_idx,
+                    Endpoint::Switch(leaf),
+                    down_idx,
+                    1,
+                );
+            }
+        }
+    }
+
+    // --- cable stages 2..h: level l-1 switches to level l -------------------
+    for l in 1..h {
+        // child level = l, parent level = l+1; stage index l+1 (1-based).
+        let range = topo.level_switches(l);
+        for sid in range {
+            let (top, bottom, child_idx) = {
+                let s = &topo.switches[sid];
+                (s.top.clone(), s.bottom.clone(), s.top[0])
+            };
+            for c in 0..spec.w[l] {
+                let ptop: Vec<u32> = top[1..].to_vec();
+                let mut pbottom = bottom.clone();
+                pbottom.push(c);
+                let parent = topo.switch_at(l + 1, &ptop, &pbottom);
+                for j in 0..spec.p[l] {
+                    let up_idx = c + spec.w[l] * j;
+                    let down_idx = child_idx * spec.p[l] + j;
+                    add_link(
+                        &mut topo,
+                        Endpoint::Switch(sid),
+                        up_idx,
+                        Endpoint::Switch(parent),
+                        down_idx,
+                        l + 1,
+                    );
+                }
+            }
+        }
+    }
+
+    // Sanity: every port slot must be filled exactly once.
+    debug_assert!(topo
+        .switches
+        .iter()
+        .all(|s| s.up_ports.iter().chain(s.down_ports.iter()).all(|&p| p != usize::MAX)));
+    debug_assert!(topo.nodes.iter().all(|n| n.up_ports.iter().all(|&p| p != usize::MAX)));
+    topo
+}
+
+/// Create the two directed ports + the undirected link for one cable.
+fn add_link(
+    topo: &mut Topology,
+    lower: Endpoint,
+    up_idx: u32,
+    upper: Endpoint,
+    down_idx: u32,
+    stage: usize,
+) {
+    let link_id = topo.links.len();
+    let up_port_id = topo.ports.len();
+    let down_port_id = up_port_id + 1;
+    topo.ports.push(Port {
+        id: up_port_id,
+        owner: lower,
+        peer: upper,
+        up: true,
+        link: link_id,
+        index: up_idx,
+    });
+    topo.ports.push(Port {
+        id: down_port_id,
+        owner: upper,
+        peer: lower,
+        up: false,
+        link: link_id,
+        index: down_idx,
+    });
+    topo.links.push(Link { id: link_id, up_port: up_port_id, down_port: down_port_id, stage });
+
+    match lower {
+        Endpoint::Node(n) => topo.nodes[n as usize].up_ports[up_idx as usize] = up_port_id,
+        Endpoint::Switch(s) => topo.switches[s].up_ports[up_idx as usize] = up_port_id,
+    }
+    match upper {
+        Endpoint::Switch(s) => topo.switches[s].down_ports[down_idx as usize] = down_port_id,
+        Endpoint::Node(_) => unreachable!("upper endpoint must be a switch"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn build_case_study_structure() {
+        let t = build_pgft(&PgftSpec::case_study());
+        // Every leaf's up-ports reach the two L2 switches of its subgroup.
+        for leaf in t.level_switches(1) {
+            let sw = &t.switches[leaf];
+            let parents: Vec<usize> = sw
+                .up_ports
+                .iter()
+                .map(|&p| match t.port_peer(p) {
+                    Endpoint::Switch(s) => s,
+                    _ => panic!(),
+                })
+                .collect();
+            assert_eq!(parents.len(), 2);
+            assert_ne!(parents[0], parents[1]);
+            for &pa in &parents {
+                assert_eq!(t.switches[pa].level, 2);
+                // Same subgroup: shared a_3 digit.
+                assert_eq!(t.switches[pa].top[0], sw.top[1]);
+            }
+        }
+        // Each L2 switch's 4 up-ports all reach the same single top switch
+        // (w_3 = 1) via 4 parallel links.
+        for l2 in t.level_switches(2) {
+            let sw = &t.switches[l2];
+            let parents: std::collections::HashSet<usize> = sw
+                .up_ports
+                .iter()
+                .map(|&p| match t.port_peer(p) {
+                    Endpoint::Switch(s) => s,
+                    _ => panic!(),
+                })
+                .collect();
+            assert_eq!(parents.len(), 1, "w3=1: single parent");
+        }
+    }
+
+    #[test]
+    fn up_port_round_robin_indexing() {
+        // On a topology with w=2, p=2 at a stage, up-port u must reach
+        // parent u%2 via link u/2.
+        let spec = PgftSpec::new(vec![2, 2], vec![1, 2], vec![1, 2]).unwrap();
+        let t = build_pgft(&spec);
+        for leaf in t.level_switches(1) {
+            let sw = &t.switches[leaf];
+            assert_eq!(sw.up_ports.len(), 4);
+            let peer = |u: usize| match t.port_peer(sw.up_ports[u]) {
+                Endpoint::Switch(s) => s,
+                _ => panic!(),
+            };
+            assert_eq!(peer(0), peer(2), "ports 0 and 2 share parent 0");
+            assert_eq!(peer(1), peer(3), "ports 1 and 3 share parent 1");
+            assert_ne!(peer(0), peer(1), "ports 0 and 1 hit distinct parents");
+        }
+    }
+
+    #[test]
+    fn prop_structural_invariants_random_pgfts() {
+        Prop::new("pgft-structure").cases(40).run(|g| {
+            let h = g.usize_in(1, 4);
+            let m: Vec<u32> = (0..h).map(|_| g.usize_in(1, 4) as u32).collect();
+            let w: Vec<u32> = (0..h).map(|i| if i == 0 { 1 } else { g.usize_in(1, 3) as u32 }).collect();
+            let p: Vec<u32> = (0..h).map(|_| g.usize_in(1, 3) as u32).collect();
+            let spec = PgftSpec::new(m, w, p).unwrap();
+            if spec.num_nodes() > 512 || spec.total_switches() > 1024 {
+                return; // keep cases small
+            }
+            let t = build_pgft(&spec);
+            assert_eq!(t.num_nodes() as u64, spec.num_nodes());
+            assert_eq!(t.num_switches() as u64, spec.total_switches());
+            assert_eq!(t.links.len() as u64, spec.total_links());
+            assert_eq!(t.num_ports(), 2 * t.links.len());
+            // Port slots all filled and owned consistently.
+            for port in &t.ports {
+                let owner_list: &[usize] = match (port.owner, port.up) {
+                    (Endpoint::Node(n), true) => &t.nodes[n as usize].up_ports,
+                    (Endpoint::Switch(s), true) => &t.switches[s].up_ports,
+                    (Endpoint::Switch(s), false) => &t.switches[s].down_ports,
+                    (Endpoint::Node(_), false) => panic!("nodes have no down ports"),
+                };
+                assert_eq!(owner_list[port.index as usize], port.id);
+            }
+            // Every node reaches the top by climbing first up-ports.
+            if t.num_nodes() > 0 {
+                let mut cur = Endpoint::Node(0);
+                for _ in 0..spec.h {
+                    let ups = match cur {
+                        Endpoint::Node(n) => &t.nodes[n as usize].up_ports,
+                        Endpoint::Switch(s) => &t.switches[s].up_ports,
+                    };
+                    assert!(!ups.is_empty());
+                    cur = t.port_peer(ups[0]);
+                }
+                if let Endpoint::Switch(s) = cur {
+                    assert_eq!(t.switches[s].level, spec.h);
+                } else {
+                    panic!("climb ended at a node");
+                }
+            }
+        });
+    }
+}

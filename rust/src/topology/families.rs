@@ -1,0 +1,129 @@
+//! Convenience constructors for the classical fat-tree families the paper
+//! cites: XGFTs (Ohring et al.) and k-ary n-trees (Petrini & Vanneschi),
+//! both expressed as PGFT special cases, plus a handful of named
+//! real-world-shaped instances used by benches and examples.
+
+use super::build::build_pgft;
+use super::graph::Topology;
+use super::spec::PgftSpec;
+use anyhow::Result;
+
+/// XGFT(h; m…; w…) = PGFT with all parallelism 1.
+pub fn xgft(m: Vec<u32>, w: Vec<u32>) -> Result<Topology> {
+    let h = m.len();
+    let spec = PgftSpec::new(m, w, vec![1; h])?;
+    Ok(build_pgft(&spec))
+}
+
+/// k-ary n-tree: `k^n` nodes, `n` levels of `k^(n-1)` switches with `k`
+/// ports in each direction. PGFT(n; k,…,k; 1,k,…,k; 1,…,1).
+pub fn kary_ntree(k: u32, n: usize) -> Result<Topology> {
+    let mut w = vec![k; n];
+    w[0] = 1;
+    let spec = PgftSpec::new(vec![k; n], w, vec![1; n])?;
+    Ok(build_pgft(&spec))
+}
+
+/// The spec of a k-ary n-tree without building it.
+pub fn kary_ntree_spec(k: u32, n: usize) -> Result<PgftSpec> {
+    let mut w = vec![k; n];
+    w[0] = 1;
+    PgftSpec::new(vec![k; n], w, vec![1; n])
+}
+
+/// A pruned ("slimmed") full-CBB-at-the-top PGFT in the style of the
+/// paper's case study, scaled: `leaf_nodes` nodes per leaf, `g` subgroups
+/// of `leaves_per_group` leaves, `l2_per_group` L2 switches, and `par`
+/// parallel links from L2 to the tops.
+pub fn pruned_three_level(
+    leaf_nodes: u32,
+    leaves_per_group: u32,
+    groups: u32,
+    l2_per_group: u32,
+    par: u32,
+) -> Result<Topology> {
+    let spec = PgftSpec::new(
+        vec![leaf_nodes, leaves_per_group, groups],
+        vec![1, l2_per_group, 1],
+        vec![1, 1, par],
+    )?;
+    Ok(build_pgft(&spec))
+}
+
+/// Named topologies for benches/examples.
+pub fn named(name: &str) -> Result<Topology> {
+    let spec = named_spec(name)?;
+    Ok(build_pgft(&spec))
+}
+
+pub fn named_spec(name: &str) -> Result<PgftSpec> {
+    match name {
+        // The paper's Fig. 1 case study.
+        "case-study" | "casestudy" | "paper" => Ok(PgftSpec::case_study()),
+        // Full-CBB variant of the case study (top parallelism doubled):
+        // used to show congestion disappears with full CBB.
+        "case-study-full" => PgftSpec::new(vec![8, 4, 2], vec![1, 2, 1], vec![1, 1, 8]),
+        // Small k-ary n-trees.
+        "2-ary-3-tree" => kary_ntree_spec(2, 3),
+        "4-ary-2-tree" => kary_ntree_spec(4, 2),
+        "4-ary-3-tree" => kary_ntree_spec(4, 3),
+        "8-ary-2-tree" => kary_ntree_spec(8, 2),
+        // Medium cluster: 512 nodes, 3 levels, slimmed top (1:2 taper).
+        "medium-512" => PgftSpec::new(vec![16, 8, 4], vec![1, 4, 2], vec![1, 1, 2]),
+        // Large cluster: 4096 nodes, BXI-like 48-port switch shapes
+        // (24 down / 24 up at the leaf level, slimmed above).
+        "large-4096" => PgftSpec::new(vec![16, 16, 16], vec![1, 8, 4], vec![1, 2, 2]),
+        _ => PgftSpec::parse(name),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kary_tree_shape() {
+        let t = kary_ntree(2, 3).unwrap();
+        assert_eq!(t.num_nodes(), 8);
+        assert_eq!(t.num_switches(), 12); // 3 levels × 4
+        assert!(t.spec.is_full_cbb());
+        for l in 1..=3 {
+            assert_eq!(t.level_switches(l).len(), 4);
+        }
+    }
+
+    #[test]
+    fn xgft_slimmed() {
+        // XGFT with slimming: 2:1 taper at level 2.
+        let t = xgft(vec![4, 4], vec![1, 2]).unwrap();
+        assert_eq!(t.num_nodes(), 16);
+        assert_eq!(t.level_switches(1).len(), 4);
+        assert_eq!(t.level_switches(2).len(), 2);
+        assert!(!t.spec.is_full_cbb());
+    }
+
+    #[test]
+    fn named_instances_build() {
+        for name in [
+            "case-study",
+            "case-study-full",
+            "2-ary-3-tree",
+            "4-ary-3-tree",
+            "medium-512",
+        ] {
+            let t = named(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(t.num_nodes() > 0);
+        }
+        assert_eq!(named("case-study").unwrap().num_nodes(), 64);
+        assert_eq!(named("medium-512").unwrap().num_nodes(), 512);
+        // Fallback to spec parsing.
+        assert_eq!(named("PGFT(2; 4,4; 1,4; 1,1)").unwrap().num_nodes(), 16);
+        assert!(named("no-such-topology").is_err());
+    }
+
+    #[test]
+    fn pruned_matches_case_study() {
+        let t = pruned_three_level(8, 4, 2, 2, 4).unwrap();
+        assert_eq!(t.spec, PgftSpec::case_study());
+    }
+}

@@ -1,0 +1,387 @@
+//! In-memory network graph for a constructed PGFT.
+//!
+//! Design notes:
+//!  * Every *directed output port* gets a global [`PortId`]; the static
+//!    congestion metric (§III.A of the paper) counts flows per output
+//!    port, so ports — not links — are the primary citizens.
+//!  * Up-ports of a level-`l` element are indexed in the round-robin
+//!    order required by Dmodk's parallel-link rule: up-port `u`
+//!    corresponds to parent `u mod w_{l+1}` via parallel link
+//!    `⌊u / w_{l+1}⌋` — "all up-switches are assigned a route before
+//!    multiple routes are assigned towards a single switch".
+//!  * Down-ports are indexed child-major: down-port `c·p_l + j` leads to
+//!    child `c` via parallel link `j` (matches the paper's `(2,0,1):7/8`
+//!    numbering where the four links to the left subgroup precede the
+//!    four to the right).
+
+use super::spec::PgftSpec;
+
+pub type SwitchId = usize;
+pub type PortId = usize;
+pub type LinkId = usize;
+pub type Nid = u32;
+
+/// Which element emits from a port / receives at the far end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Endpoint {
+    Node(Nid),
+    Switch(SwitchId),
+}
+
+/// A switch at level `1..=h`.
+#[derive(Clone, Debug)]
+pub struct Switch {
+    pub id: SwitchId,
+    /// 1-based level (1 = leaf, h = top).
+    pub level: usize,
+    /// Sub-tree digits `a_{l+1}..a_h`, least-significant first
+    /// (`top[j] ∈ [0, m_{l+1+j})`).
+    pub top: Vec<u32>,
+    /// Within-tree digits `b_1..b_l`, least-significant first
+    /// (`bottom[j] ∈ [0, w_{1+j})`).
+    pub bottom: Vec<u32>,
+    /// Up-ports, round-robin indexed (see module docs). Empty at top level.
+    pub up_ports: Vec<PortId>,
+    /// Down-ports, child-major (`child·p_l + link`).
+    pub down_ports: Vec<PortId>,
+}
+
+/// An end-node (processing element). Level 0.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub nid: Nid,
+    /// Digits `a_1..a_h`, least-significant first (`digits[j] ∈ [0, m_{1+j})`).
+    pub digits: Vec<u32>,
+    /// Injection ports toward leaves, round-robin indexed over `w_1·p_1`.
+    pub up_ports: Vec<PortId>,
+}
+
+/// A directed output port.
+#[derive(Clone, Debug)]
+pub struct Port {
+    pub id: PortId,
+    /// Emitting element.
+    pub owner: Endpoint,
+    /// Receiving element.
+    pub peer: Endpoint,
+    /// True if this port sends from level `l` to level `l+1`.
+    pub up: bool,
+    /// The undirected link this port belongs to.
+    pub link: LinkId,
+    /// Port index within its owner's `up_ports`/`down_ports` vector.
+    pub index: u32,
+}
+
+/// An undirected cable. `up_port` emits upward (toward the top level),
+/// `down_port` emits downward.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub id: LinkId,
+    pub up_port: PortId,
+    pub down_port: PortId,
+    /// Level of the upper endpoint (link stage `l` joins `l-1` and `l`).
+    pub stage: usize,
+}
+
+/// A fully constructed topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub spec: PgftSpec,
+    pub switches: Vec<Switch>,
+    pub nodes: Vec<Node>,
+    pub ports: Vec<Port>,
+    pub links: Vec<Link>,
+    /// `level_start[l]` = first SwitchId of level `l+1`… indexed so that
+    /// switches of level `l` occupy `level_start[l-1]..level_start[l]`.
+    pub(crate) level_start: Vec<SwitchId>,
+}
+
+impl Topology {
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_switches(&self) -> usize {
+        self.switches.len()
+    }
+
+    pub fn num_ports(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// Switches of a 1-based level, as a contiguous id range.
+    pub fn level_switches(&self, l: usize) -> std::ops::Range<SwitchId> {
+        assert!((1..=self.spec.h).contains(&l));
+        self.level_start[l - 1]..self.level_start[l]
+    }
+
+    /// O(1) switch lookup from level + digit vectors (LSD-first, as in
+    /// [`Switch::top`]/[`Switch::bottom`]).
+    pub fn switch_at(&self, level: usize, top: &[u32], bottom: &[u32]) -> SwitchId {
+        let spec = &self.spec;
+        debug_assert_eq!(top.len(), spec.h - level);
+        debug_assert_eq!(bottom.len(), level);
+        // Linear index: bottom digits minor (radix w_1..w_l), top digits
+        // major (radix m_{l+1}..m_h).
+        let mut bot = 0u64;
+        for j in (0..level).rev() {
+            bot = bot * spec.w[j] as u64 + bottom[j] as u64;
+        }
+        let mut topv = 0u64;
+        for j in (0..(spec.h - level)).rev() {
+            topv = topv * spec.m[level + j] as u64 + top[j] as u64;
+        }
+        let within = topv * spec.w_prefix(level) + bot;
+        self.level_start[level - 1] + within as usize
+    }
+
+    /// Digit vector of a node id (LSD-first).
+    pub fn nid_digits(&self, nid: Nid) -> Vec<u32> {
+        let mut d = Vec::with_capacity(self.spec.h);
+        let mut x = nid as u64;
+        for l in 0..self.spec.h {
+            d.push((x % self.spec.m[l] as u64) as u32);
+            x /= self.spec.m[l] as u64;
+        }
+        d
+    }
+
+    /// NID from digits.
+    pub fn digits_nid(&self, digits: &[u32]) -> Nid {
+        let mut x = 0u64;
+        for j in (0..digits.len()).rev() {
+            x = x * self.spec.m[j] as u64 + digits[j] as u64;
+        }
+        x as Nid
+    }
+
+    /// The leaf switch a node is cabled to when `w_1 == 1` (the common
+    /// case, incl. the paper's). With `w_1 > 1` a node has several leaves;
+    /// this returns the first.
+    pub fn leaf_of(&self, nid: Nid) -> SwitchId {
+        let node = &self.nodes[nid as usize];
+        match self.ports[node.up_ports[0]].peer {
+            Endpoint::Switch(s) => s,
+            Endpoint::Node(_) => unreachable!("node cabled to node"),
+        }
+    }
+
+    /// Is `sw` an ancestor of node `nid` (i.e. `nid` in its sub-tree)?
+    /// True iff the node's digits above the switch level match the
+    /// switch's `top` digits.
+    pub fn is_ancestor(&self, sw: SwitchId, nid: Nid) -> bool {
+        let s = &self.switches[sw];
+        let d = &self.nodes[nid as usize].digits;
+        s.top.iter().enumerate().all(|(j, &t)| d[s.level + j] == t)
+    }
+
+    /// For an ancestor switch at level `l`, the child index (`a_l` digit)
+    /// on the way down to `nid`.
+    #[inline]
+    pub fn child_index_toward(&self, sw: SwitchId, nid: Nid) -> u32 {
+        let s = &self.switches[sw];
+        self.nodes[nid as usize].digits[s.level - 1]
+    }
+
+    /// Down-port of `sw` toward `nid`'s subtree via parallel link `j`.
+    #[inline]
+    pub fn down_port_toward(&self, sw: SwitchId, nid: Nid, j: u32) -> PortId {
+        let s = &self.switches[sw];
+        let p_l = self.spec.p[s.level - 1];
+        debug_assert!(j < p_l);
+        let c = self.child_index_toward(sw, nid);
+        s.down_ports[(c * p_l + j) as usize]
+    }
+
+    /// The element on the receiving side of a port.
+    #[inline]
+    pub fn port_peer(&self, p: PortId) -> Endpoint {
+        self.ports[p].peer
+    }
+
+    /// Owner level of a port (0 for nodes).
+    pub fn port_level(&self, p: PortId) -> usize {
+        match self.ports[p].owner {
+            Endpoint::Node(_) => 0,
+            Endpoint::Switch(s) => self.switches[s].level,
+        }
+    }
+
+    /// Paper-style switch label, e.g. `(2,0,1)` for the second top switch
+    /// of the case study: `(level-1, a-digits…, b-digits…)` with digits
+    /// printed most-significant first and radix-1 digits elided.
+    pub fn switch_label(&self, sw: SwitchId) -> String {
+        let s = &self.switches[sw];
+        let mut parts: Vec<String> = vec![format!("{}", s.level - 1)];
+        // a digits (MSD first), skip radix-1 positions.
+        for j in (0..s.top.len()).rev() {
+            if self.spec.m[s.level + j] > 1 {
+                parts.push(s.top[j].to_string());
+            }
+        }
+        // b digits (MSD first), skip radix-1 positions.
+        for j in (0..s.bottom.len()).rev() {
+            if self.spec.w[j] > 1 {
+                parts.push(s.bottom[j].to_string());
+            }
+        }
+        format!("({})", parts.join(","))
+    }
+
+    /// Human label for a port: `"(2,0,1):8"` (1-based rank as the paper
+    /// counts, down-ports first).
+    pub fn port_label(&self, p: PortId) -> String {
+        let port = &self.ports[p];
+        match port.owner {
+            Endpoint::Node(n) => format!("node{}:{}", n, port.index + 1),
+            Endpoint::Switch(s) => {
+                let sw = &self.switches[s];
+                let rank = if port.up {
+                    sw.down_ports.len() as u32 + port.index + 1
+                } else {
+                    port.index + 1
+                };
+                format!("{}:{}", self.switch_label(s), rank)
+            }
+        }
+    }
+
+    /// All output ports owned by switches of level `l`, split by direction.
+    pub fn level_ports(&self, l: usize, up: bool) -> Vec<PortId> {
+        self.level_switches(l)
+            .flat_map(|s| {
+                let sw = &self.switches[s];
+                if up { sw.up_ports.clone() } else { sw.down_ports.clone() }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::build::build_pgft;
+
+    fn t() -> Topology {
+        build_pgft(&PgftSpec::case_study())
+    }
+
+    #[test]
+    fn counts_match_spec() {
+        let t = t();
+        assert_eq!(t.num_nodes(), 64);
+        assert_eq!(t.num_switches(), 14);
+        assert_eq!(t.links.len(), 96);
+        assert_eq!(t.num_ports(), 192);
+    }
+
+    #[test]
+    fn nid_digit_roundtrip() {
+        let t = t();
+        for nid in 0..64u32 {
+            let d = t.nid_digits(nid);
+            assert_eq!(t.digits_nid(&d), nid);
+            assert_eq!(d.len(), 3);
+            assert!(d[0] < 8 && d[1] < 4 && d[2] < 2);
+        }
+        // NID 47 = node 7 of leaf 5 (subgroup 1, leaf-in-subgroup 1).
+        assert_eq!(t.nid_digits(47), vec![7, 1, 1]);
+    }
+
+    #[test]
+    fn ancestor_relation() {
+        let t = t();
+        // Leaf of nid 8..15 is leaf index 1.
+        let leaf = t.leaf_of(8);
+        for n in 8..16 {
+            assert!(t.is_ancestor(leaf, n));
+        }
+        assert!(!t.is_ancestor(leaf, 7));
+        assert!(!t.is_ancestor(leaf, 16));
+        // Top switches are ancestors of everything.
+        for sw in t.level_switches(3) {
+            for n in 0..64 {
+                assert!(t.is_ancestor(sw, n));
+            }
+        }
+        // L2 switches of subgroup 0 cover nids 0..31 only.
+        for sw in t.level_switches(2) {
+            let covers: Vec<u32> = (0..64).filter(|&n| t.is_ancestor(sw, n)).collect();
+            assert_eq!(covers.len(), 32);
+        }
+    }
+
+    #[test]
+    fn switch_labels_match_paper() {
+        let t = t();
+        // Top switches: (2,0,0) .. the paper calls the second one (2,0,1).
+        let tops: Vec<String> = t.level_switches(3).map(|s| t.switch_label(s)).collect();
+        assert!(tops.contains(&"(2,0)".to_string()) || tops.contains(&"(2,0,1)".to_string()),
+            "tops: {tops:?}");
+        // With radix-1 digits elided the two tops are (2,0) and (2,1);
+        // the paper prints a redundant zero. Check level-2 labels contain
+        // subgroup and switch digits.
+        let l2: Vec<String> = t.level_switches(2).map(|s| t.switch_label(s)).collect();
+        assert_eq!(l2.len(), 4);
+    }
+
+    #[test]
+    fn switch_at_is_inverse_of_enumeration() {
+        let t = t();
+        for l in 1..=3 {
+            for sid in t.level_switches(l) {
+                let sw = &t.switches[sid];
+                assert_eq!(t.switch_at(l, &sw.top, &sw.bottom), sid, "level {l} sw {sid}");
+            }
+        }
+    }
+
+    #[test]
+    fn port_structure_case_study() {
+        let t = t();
+        for sid in t.level_switches(1) {
+            let sw = &t.switches[sid];
+            assert_eq!(sw.down_ports.len(), 8);
+            assert_eq!(sw.up_ports.len(), 2);
+        }
+        for sid in t.level_switches(2) {
+            let sw = &t.switches[sid];
+            assert_eq!(sw.down_ports.len(), 4);
+            assert_eq!(sw.up_ports.len(), 4);
+        }
+        for sid in t.level_switches(3) {
+            let sw = &t.switches[sid];
+            assert_eq!(sw.down_ports.len(), 8);
+            assert!(sw.up_ports.is_empty());
+        }
+    }
+
+    #[test]
+    fn links_pair_up_and_down() {
+        let t = t();
+        for link in &t.links {
+            let up = &t.ports[link.up_port];
+            let down = &t.ports[link.down_port];
+            assert!(up.up && !down.up);
+            assert_eq!(up.link, link.id);
+            assert_eq!(down.link, link.id);
+            // The two ports mirror each other.
+            assert_eq!(up.owner, down.peer);
+            assert_eq!(up.peer, down.owner);
+        }
+    }
+
+    #[test]
+    fn down_port_toward_reaches_child_subtree() {
+        let t = t();
+        for sid in t.level_switches(3) {
+            for nid in [0u32, 17, 40, 63] {
+                let p = t.down_port_toward(sid, nid, 0);
+                match t.port_peer(p) {
+                    Endpoint::Switch(c) => assert!(t.is_ancestor(c, nid)),
+                    _ => panic!("top down-port should reach a switch"),
+                }
+            }
+        }
+    }
+}

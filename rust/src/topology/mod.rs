@@ -1,0 +1,13 @@
+//! Fat-tree topology substrate: PGFT specification, construction,
+//! classical-family constructors, validation and rendering.
+
+pub mod build;
+pub mod families;
+pub mod graph;
+pub mod render;
+pub mod spec;
+pub mod validate;
+
+pub use build::build_pgft;
+pub use graph::{Endpoint, Link, LinkId, Nid, Node, Port, PortId, Switch, SwitchId, Topology};
+pub use spec::PgftSpec;

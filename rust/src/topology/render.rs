@@ -1,0 +1,149 @@
+//! Topology rendering: ASCII art summary (the repo's stand-in for the
+//! paper's Fig. 1) and Graphviz DOT output for inspection.
+
+use super::graph::{Endpoint, Topology};
+use crate::nodes::NodeTypeMap;
+use std::fmt::Write as _;
+
+/// Multi-line text summary of a topology, one line per switch level plus
+/// node-type counts. Deterministic, used in `pgft topo show`.
+pub fn render_summary(t: &Topology, types: Option<&NodeTypeMap>) -> String {
+    let mut out = String::new();
+    let s = &t.spec;
+    let _ = writeln!(out, "{}", s.display());
+    let _ = writeln!(
+        out,
+        "  nodes: {}   switches: {}   links: {}   CBB ratio: {:.3}{}",
+        s.num_nodes(),
+        s.total_switches(),
+        s.total_links(),
+        s.cbb_ratio(),
+        if s.is_full_cbb() { " (full)" } else { " (slimmed)" }
+    );
+    for l in (1..=s.h).rev() {
+        let n = s.switches_at_level(l);
+        let _ = writeln!(
+            out,
+            "  L{l}: {n:>5} switches  [{} down / {} up ports each, radix {}]",
+            s.down_ports_at(l),
+            s.up_ports_at(l),
+            s.radix_at(l),
+        );
+    }
+    if let Some(map) = types {
+        let _ = writeln!(out, "  node types: {}", map.census());
+    }
+    out
+}
+
+/// Compact per-leaf diagram: each leaf rendered with its node NIDs, IO
+/// nodes (or any non-default type) marked. Mirrors Fig. 1's annotation
+/// that "IO nodes have the largest NID of every leaf".
+pub fn render_leaves(t: &Topology, types: &NodeTypeMap) -> String {
+    let mut out = String::new();
+    for leaf in t.level_switches(1) {
+        let sw = &t.switches[leaf];
+        let mut nids: Vec<u32> = sw
+            .down_ports
+            .iter()
+            .filter_map(|&p| match t.port_peer(p) {
+                Endpoint::Node(n) => Some(n),
+                _ => None,
+            })
+            .collect();
+        nids.sort_unstable();
+        nids.dedup();
+        let cells: Vec<String> = nids
+            .iter()
+            .map(|&n| {
+                let ty = types.type_of(n);
+                if ty.is_default() {
+                    format!("{n}")
+                } else {
+                    format!("{n}[{}]", ty.short())
+                }
+            })
+            .collect();
+        let _ = writeln!(out, "  leaf {:<10} {}", t.switch_label(leaf), cells.join(" "));
+    }
+    out
+}
+
+/// Graphviz DOT with levels as ranks. Small fabrics only (guard upstream).
+pub fn render_dot(t: &Topology, types: Option<&NodeTypeMap>) -> String {
+    let mut out = String::from("digraph pgft {\n  rankdir=BT;\n  node [shape=box];\n");
+    for n in &t.nodes {
+        let (fill, label) = match types.map(|m| m.type_of(n.nid)) {
+            Some(ty) if !ty.is_default() => ("black", format!("{}:{}", n.nid, ty.short())),
+            _ => ("white", format!("{}", n.nid)),
+        };
+        let _ = writeln!(
+            out,
+            "  n{} [label=\"{label}\", style=filled, fillcolor={fill}, fontcolor={}];",
+            n.nid,
+            if fill == "black" { "white" } else { "black" }
+        );
+    }
+    for sw in &t.switches {
+        let _ = writeln!(out, "  s{} [label=\"{}\", shape=ellipse];", sw.id, t.switch_label(sw.id));
+    }
+    for link in &t.links {
+        let up = &t.ports[link.up_port];
+        let from = match up.owner {
+            Endpoint::Node(n) => format!("n{n}"),
+            Endpoint::Switch(s) => format!("s{s}"),
+        };
+        let to = match up.peer {
+            Endpoint::Node(n) => format!("n{n}"),
+            Endpoint::Switch(s) => format!("s{s}"),
+        };
+        let _ = writeln!(out, "  {from} -> {to} [dir=none];");
+    }
+    // Rank constraints per level.
+    for l in 1..=t.spec.h {
+        let ids: Vec<String> = t.level_switches(l).map(|s| format!("s{s}")).collect();
+        let _ = writeln!(out, "  {{ rank=same; {} }}", ids.join("; "));
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::{NodeType, NodeTypeMap, Placement};
+    use crate::topology::build::build_pgft;
+    use crate::topology::spec::PgftSpec;
+
+    #[test]
+    fn summary_mentions_structure() {
+        let t = build_pgft(&PgftSpec::case_study());
+        let s = render_summary(&t, None);
+        assert!(s.contains("PGFT(3; 8,4,2; 1,2,1; 1,1,4)"));
+        assert!(s.contains("nodes: 64"));
+        assert!(s.contains("slimmed"));
+        assert!(s.contains("L3:"));
+    }
+
+    #[test]
+    fn leaves_mark_io_nodes() {
+        let t = build_pgft(&PgftSpec::case_study());
+        let types = Placement::LastPortsPerLeaf { ty: NodeType::Io, count: 1 }
+            .apply(&t)
+            .unwrap();
+        let s = render_leaves(&t, &types);
+        assert!(s.contains("7[I]"), "{s}");
+        assert!(s.contains("63[I]"), "{s}");
+        assert!(!s.contains("0["), "compute nodes unmarked: {s}");
+    }
+
+    #[test]
+    fn dot_is_wellformed() {
+        let t = build_pgft(&PgftSpec::case_study());
+        let types = NodeTypeMap::uniform(t.num_nodes() as u32, NodeType::Compute);
+        let d = render_dot(&t, Some(&types));
+        assert!(d.starts_with("digraph"));
+        assert!(d.ends_with("}\n"));
+        assert_eq!(d.matches(" -> ").count(), t.links.len());
+    }
+}

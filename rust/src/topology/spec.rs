@@ -1,0 +1,237 @@
+//! PGFT parameter specification and structural arithmetic.
+//!
+//! A Parallel Generalized Fat-Tree is described (Zahavi) as
+//! `PGFT(h; m_1..m_h; w_1..w_h; p_1..p_h)`:
+//!  * `h`   — number of switch levels (level 0 = end-nodes),
+//!  * `m_l` — downward arity at level `l` (children per level-`l` switch),
+//!  * `w_l` — upward arity at level `l-1` (parents per level-`l-1` element),
+//!  * `p_l` — number of parallel links on each level-`l-1`↔`l` connection.
+//!
+//! The paper's case study is `PGFT(3; 8,4,2; 1,2,1; 1,1,4)`.
+//!
+//! Internally all parameter vectors are stored 0-indexed (`m[0] = m_1`).
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Parsed PGFT parameters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PgftSpec {
+    pub h: usize,
+    pub m: Vec<u32>,
+    pub w: Vec<u32>,
+    pub p: Vec<u32>,
+}
+
+impl PgftSpec {
+    pub fn new(m: Vec<u32>, w: Vec<u32>, p: Vec<u32>) -> Result<Self> {
+        let h = m.len();
+        ensure!(h >= 1, "PGFT needs at least one level");
+        ensure!(w.len() == h && p.len() == h, "m/w/p must all have length h={h}");
+        for (name, v) in [("m", &m), ("w", &w), ("p", &p)] {
+            ensure!(v.iter().all(|&x| x >= 1), "{name} entries must be >= 1: {v:?}");
+        }
+        Ok(Self { h, m, w, p })
+    }
+
+    /// The paper's case-study topology: `PGFT(3; 8,4,2; 1,2,1; 1,1,4)`.
+    pub fn case_study() -> Self {
+        Self::new(vec![8, 4, 2], vec![1, 2, 1], vec![1, 1, 4]).unwrap()
+    }
+
+    /// Parse `"PGFT(3; 8,4,2; 1,2,1; 1,1,4)"` (whitespace-insensitive;
+    /// the leading `PGFT` and the explicit `h` are optional:
+    /// `"8,4,2;1,2,1;1,1,4"` also parses).
+    pub fn parse(s: &str) -> Result<Self> {
+        let t: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        let t = t
+            .strip_prefix("PGFT(")
+            .or_else(|| t.strip_prefix("pgft("))
+            .map(|x| x.strip_suffix(')').unwrap_or(x))
+            .unwrap_or(&t);
+        let parts: Vec<&str> = t.split(';').collect();
+        let (mh, rest): (Option<usize>, &[&str]) = match parts.len() {
+            4 => (Some(parts[0].parse().context("bad h")?), &parts[1..]),
+            3 => (None, &parts[..]),
+            n => bail!("expected 3 or 4 ';'-separated groups, got {n} in {s:?}"),
+        };
+        let vec_of = |x: &str, name: &str| -> Result<Vec<u32>> {
+            x.split(',')
+                .map(|d| d.parse::<u32>().with_context(|| format!("bad {name} digit {d:?}")))
+                .collect()
+        };
+        let m = vec_of(rest[0], "m")?;
+        let w = vec_of(rest[1], "w")?;
+        let p = vec_of(rest[2], "p")?;
+        if let Some(h) = mh {
+            ensure!(h == m.len(), "declared h={h} but m has {} entries", m.len());
+        }
+        Self::new(m, w, p)
+    }
+
+    /// Number of end-nodes: `Π m_l`.
+    pub fn num_nodes(&self) -> u64 {
+        self.m.iter().map(|&x| x as u64).product()
+    }
+
+    /// Number of switches at level `l` (1-based):
+    /// `Π_{i>l} m_i × Π_{i<=l} w_i`.
+    pub fn switches_at_level(&self, l: usize) -> u64 {
+        assert!((1..=self.h).contains(&l));
+        let above: u64 = self.m[l..].iter().map(|&x| x as u64).product();
+        let below: u64 = self.w[..l].iter().map(|&x| x as u64).product();
+        above * below
+    }
+
+    pub fn total_switches(&self) -> u64 {
+        (1..=self.h).map(|l| self.switches_at_level(l)).sum()
+    }
+
+    /// `W_l = Π_{k=1..l} w_k` — the divisor in the Xmodk up-port formula.
+    /// `w_prefix(0) = 1`.
+    pub fn w_prefix(&self, l: usize) -> u64 {
+        self.w[..l].iter().map(|&x| x as u64).product()
+    }
+
+    /// Up-ports of a level-`l` element (node for l=0): `w_{l+1}·p_{l+1}`,
+    /// 0 at the top level.
+    pub fn up_ports_at(&self, l: usize) -> u32 {
+        if l >= self.h {
+            0
+        } else {
+            self.w[l] * self.p[l]
+        }
+    }
+
+    /// Down-ports of a level-`l` switch: `m_l·p_l`.
+    pub fn down_ports_at(&self, l: usize) -> u32 {
+        assert!((1..=self.h).contains(&l));
+        self.m[l - 1] * self.p[l - 1]
+    }
+
+    /// Switch radix (total ports) at level `l`.
+    pub fn radix_at(&self, l: usize) -> u32 {
+        self.down_ports_at(l) + self.up_ports_at(l)
+    }
+
+    /// Per-level cross-bisection ratio: up-capacity / down-capacity of a
+    /// level-`l` switch, `l < h`. A PGFT provides full CBB iff every
+    /// level's ratio is ≥ 1.
+    pub fn cbb_ratio_at(&self, l: usize) -> f64 {
+        self.up_ports_at(l) as f64 / self.down_ports_at(l) as f64
+    }
+
+    /// Overall CBB ratio (min over levels below the top).
+    pub fn cbb_ratio(&self) -> f64 {
+        (1..self.h)
+            .map(|l| self.cbb_ratio_at(l))
+            .fold(f64::INFINITY, f64::min)
+            .min(1.0)
+    }
+
+    pub fn is_full_cbb(&self) -> bool {
+        (1..self.h).all(|l| self.cbb_ratio_at(l) >= 1.0)
+    }
+
+    /// Total number of links (each parallel link counted separately).
+    pub fn total_links(&self) -> u64 {
+        // Level l-1 ↔ l stage: (#elements at l-1) × w_l × p_l.
+        let mut total = 0u64;
+        for l in 1..=self.h {
+            let below = if l == 1 {
+                self.num_nodes()
+            } else {
+                self.switches_at_level(l - 1)
+            };
+            total += below * (self.w[l - 1] as u64) * (self.p[l - 1] as u64);
+        }
+        total
+    }
+
+    /// Canonical display form.
+    pub fn display(&self) -> String {
+        let join = |v: &[u32]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+        format!("PGFT({}; {}; {}; {})", self.h, join(&self.m), join(&self.w), join(&self.p))
+    }
+}
+
+impl std::fmt::Display for PgftSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.display())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_study_counts() {
+        let s = PgftSpec::case_study();
+        assert_eq!(s.num_nodes(), 64);
+        assert_eq!(s.switches_at_level(1), 8); // leaves
+        assert_eq!(s.switches_at_level(2), 4); // L2
+        assert_eq!(s.switches_at_level(3), 2); // tops
+        assert_eq!(s.total_switches(), 14);
+        // Leaf: 8 down + 2 up; L2: 4 down + 4 up; top: 8 down.
+        assert_eq!(s.down_ports_at(1), 8);
+        assert_eq!(s.up_ports_at(1), 2);
+        assert_eq!(s.down_ports_at(2), 4);
+        assert_eq!(s.up_ports_at(2), 4);
+        assert_eq!(s.down_ports_at(3), 8);
+        assert_eq!(s.up_ports_at(3), 0);
+    }
+
+    #[test]
+    fn case_study_is_nonfull_cbb() {
+        let s = PgftSpec::case_study();
+        assert!(!s.is_full_cbb());
+        assert!((s.cbb_ratio() - 0.25).abs() < 1e-12);
+        assert!((s.cbb_ratio_at(1) - 0.25).abs() < 1e-12);
+        assert!((s.cbb_ratio_at(2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let s = PgftSpec::parse("PGFT(3; 8,4,2; 1,2,1; 1,1,4)").unwrap();
+        assert_eq!(s, PgftSpec::case_study());
+        let s2 = PgftSpec::parse("8,4,2;1,2,1;1,1,4").unwrap();
+        assert_eq!(s2, s);
+        let s3 = PgftSpec::parse(&s.display()).unwrap();
+        assert_eq!(s3, s);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(PgftSpec::parse("PGFT(2; 8,4,2; 1,2,1; 1,1,4)").is_err()); // h mismatch
+        assert!(PgftSpec::parse("8,4;1,2,1;1,1,4").is_err()); // length mismatch
+        assert!(PgftSpec::parse("8,0;1,2;1,1").is_err()); // zero arity
+        assert!(PgftSpec::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn w_prefix_products() {
+        let s = PgftSpec::case_study();
+        assert_eq!(s.w_prefix(0), 1);
+        assert_eq!(s.w_prefix(1), 1);
+        assert_eq!(s.w_prefix(2), 2);
+        assert_eq!(s.w_prefix(3), 2);
+    }
+
+    #[test]
+    fn link_count_case_study() {
+        let s = PgftSpec::case_study();
+        // node-leaf: 64·1·1 = 64; leaf-L2: 8·2·1 = 16; L2-top: 4·1·4 = 16.
+        assert_eq!(s.total_links(), 96);
+    }
+
+    #[test]
+    fn kary_ntree_counts() {
+        // 4-ary 3-tree: 64 nodes, 16 switches/level, full CBB.
+        let s = PgftSpec::new(vec![4, 4, 4], vec![1, 4, 4], vec![1, 1, 1]).unwrap();
+        assert_eq!(s.num_nodes(), 64);
+        assert_eq!(s.switches_at_level(1), 16);
+        assert_eq!(s.switches_at_level(2), 16);
+        assert_eq!(s.switches_at_level(3), 16);
+        assert!(s.is_full_cbb());
+    }
+}

@@ -1,0 +1,185 @@
+//! Structural validation of a constructed topology.
+//!
+//! A fabric manager must not push routes onto a miscabled fabric; these
+//! checks are what the coordinator runs at startup ("fabric discovery
+//! audit") and what the test suite uses to validate constructors.
+
+use super::graph::{Endpoint, Topology};
+use anyhow::{ensure, Result};
+
+/// Full structural audit. Cheap (linear in ports).
+pub fn validate(topo: &Topology) -> Result<()> {
+    check_counts(topo)?;
+    check_port_symmetry(topo)?;
+    check_arities(topo)?;
+    check_level_monotonicity(topo)?;
+    check_connectivity(topo)?;
+    Ok(())
+}
+
+fn check_counts(t: &Topology) -> Result<()> {
+    ensure!(
+        t.num_nodes() as u64 == t.spec.num_nodes(),
+        "node count {} != spec {}",
+        t.num_nodes(),
+        t.spec.num_nodes()
+    );
+    ensure!(
+        t.num_switches() as u64 == t.spec.total_switches(),
+        "switch count mismatch"
+    );
+    ensure!(t.links.len() as u64 == t.spec.total_links(), "link count mismatch");
+    ensure!(t.num_ports() == 2 * t.links.len(), "ports must be 2× links");
+    Ok(())
+}
+
+fn check_port_symmetry(t: &Topology) -> Result<()> {
+    for link in &t.links {
+        let up = &t.ports[link.up_port];
+        let down = &t.ports[link.down_port];
+        ensure!(up.up && !down.up, "link {} direction flags wrong", link.id);
+        ensure!(
+            up.owner == down.peer && up.peer == down.owner,
+            "link {} endpoints don't mirror",
+            link.id
+        );
+        ensure!(up.link == link.id && down.link == link.id, "link id mismatch");
+    }
+    Ok(())
+}
+
+fn check_arities(t: &Topology) -> Result<()> {
+    for sw in &t.switches {
+        let l = sw.level;
+        ensure!(
+            sw.up_ports.len() == t.spec.up_ports_at(l) as usize,
+            "switch {} up-port count {} != {}",
+            sw.id,
+            sw.up_ports.len(),
+            t.spec.up_ports_at(l)
+        );
+        ensure!(
+            sw.down_ports.len() == t.spec.down_ports_at(l) as usize,
+            "switch {} down-port count wrong",
+            sw.id
+        );
+    }
+    for n in &t.nodes {
+        ensure!(
+            n.up_ports.len() == t.spec.up_ports_at(0) as usize,
+            "node {} up-port count wrong",
+            n.nid
+        );
+    }
+    Ok(())
+}
+
+fn check_level_monotonicity(t: &Topology) -> Result<()> {
+    for port in &t.ports {
+        let from = match port.owner {
+            Endpoint::Node(_) => 0,
+            Endpoint::Switch(s) => t.switches[s].level,
+        };
+        let to = match port.peer {
+            Endpoint::Node(_) => 0,
+            Endpoint::Switch(s) => t.switches[s].level,
+        };
+        if port.up {
+            ensure!(to == from + 1, "up-port {} jumps {}→{}", port.id, from, to);
+        } else {
+            ensure!(from == to + 1, "down-port {} jumps {}→{}", port.id, from, to);
+        }
+    }
+    Ok(())
+}
+
+/// Every node must reach every other node through *some* up*/down* path.
+/// We verify the cheaper equivalent: every node reaches at least one top
+/// switch going up, and every top switch reaches every node going down
+/// (checked by digit containment, which `is_ancestor` encodes, plus spot
+/// BFS on small fabrics).
+fn check_connectivity(t: &Topology) -> Result<()> {
+    for sw_id in t.level_switches(t.spec.h) {
+        for nid in 0..t.num_nodes() as u32 {
+            ensure!(
+                t.is_ancestor(sw_id, nid),
+                "top switch {} is not an ancestor of node {}",
+                sw_id,
+                nid
+            );
+        }
+    }
+    // Spot-check with a real BFS from node 0 on small fabrics.
+    if t.num_ports() <= 100_000 && t.num_nodes() > 0 {
+        let mut seen_nodes = vec![false; t.num_nodes()];
+        let mut seen_sw = vec![false; t.num_switches()];
+        let mut queue = vec![Endpoint::Node(0)];
+        seen_nodes[0] = true;
+        while let Some(e) = queue.pop() {
+            let ports: Vec<usize> = match e {
+                Endpoint::Node(n) => t.nodes[n as usize].up_ports.clone(),
+                Endpoint::Switch(s) => {
+                    let sw = &t.switches[s];
+                    sw.up_ports.iter().chain(sw.down_ports.iter()).copied().collect()
+                }
+            };
+            for p in ports {
+                match t.port_peer(p) {
+                    Endpoint::Node(n) => {
+                        if !seen_nodes[n as usize] {
+                            seen_nodes[n as usize] = true;
+                            queue.push(Endpoint::Node(n));
+                        }
+                    }
+                    Endpoint::Switch(s) => {
+                        if !seen_sw[s] {
+                            seen_sw[s] = true;
+                            queue.push(Endpoint::Switch(s));
+                        }
+                    }
+                }
+            }
+        }
+        ensure!(seen_nodes.iter().all(|&b| b), "fabric is not connected (nodes)");
+        ensure!(seen_sw.iter().all(|&b| b), "fabric is not connected (switches)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::build::build_pgft;
+    use crate::topology::families;
+    use crate::topology::spec::PgftSpec;
+
+    #[test]
+    fn case_study_validates() {
+        validate(&build_pgft(&PgftSpec::case_study())).unwrap();
+    }
+
+    #[test]
+    fn named_families_validate() {
+        for name in ["case-study-full", "2-ary-3-tree", "4-ary-3-tree", "medium-512"] {
+            validate(&families::named(name).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn corrupted_topology_fails() {
+        let mut t = build_pgft(&PgftSpec::case_study());
+        // Flip one port's direction flag.
+        t.ports[0].up = !t.ports[0].up;
+        assert!(validate(&t).is_err());
+    }
+
+    #[test]
+    fn severed_link_fails_connectivity() {
+        let mut t = build_pgft(&PgftSpec::case_study());
+        // Orphan node 63 by rewiring its injection port onto node 0's leaf
+        // port slot (making a dangling inconsistency).
+        let p = t.nodes[63].up_ports[0];
+        t.ports[p].peer = Endpoint::Node(62);
+        assert!(validate(&t).is_err());
+    }
+}

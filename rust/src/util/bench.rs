@@ -1,0 +1,200 @@
+//! Zero-dependency micro/macro benchmark harness.
+//!
+//! `criterion` is unavailable offline; this module provides the part the
+//! benches need: warmup, timed iterations, robust statistics
+//! (median / p95 / mean / stddev), throughput reporting and a stable
+//! text output format that `cargo bench` prints and EXPERIMENTS.md quotes.
+
+use std::time::{Duration, Instant};
+
+/// Robust summary statistics over per-iteration wall-clock samples.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |q: f64| -> f64 {
+            let idx = (q * (n - 1) as f64).round() as usize;
+            ns[idx.min(n - 1)]
+        };
+        Stats {
+            samples: n,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            min_ns: ns[0],
+            median_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            max_ns: ns[n - 1],
+        }
+    }
+}
+
+fn human_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// A single benchmark definition. Build with [`Bench::new`], configure,
+/// then call [`Bench::run`] with the closure to measure.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    min_samples: usize,
+    max_samples: usize,
+    target_time: Duration,
+    /// Elements processed per iteration, for throughput lines.
+    throughput: Option<u64>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup: Duration::from_millis(200),
+            min_samples: 10,
+            max_samples: 200,
+            target_time: Duration::from_secs(1),
+            throughput: None,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn samples(mut self, min: usize, max: usize) -> Self {
+        self.min_samples = min;
+        self.max_samples = max.max(min);
+        self
+    }
+
+    pub fn target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Report throughput as `elems/s` assuming `elems` per iteration.
+    pub fn throughput_elems(mut self, elems: u64) -> Self {
+        self.throughput = Some(elems);
+        self
+    }
+
+    /// Measure `f`, print a criterion-like line, return the stats.
+    /// `f` receives the iteration index; use `std::hint::black_box` inside.
+    pub fn run<F: FnMut(usize)>(self, mut f: F) -> Stats {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut i = 0usize;
+        while w0.elapsed() < self.warmup {
+            f(i);
+            i += 1;
+        }
+        // Sampling: adapt count to target_time using a pilot iteration.
+        let pilot = {
+            let t = Instant::now();
+            f(i);
+            i += 1;
+            t.elapsed().as_secs_f64().max(1e-9)
+        };
+        let want = (self.target_time.as_secs_f64() / pilot) as usize;
+        let count = want.clamp(self.min_samples, self.max_samples);
+        let mut samples = Vec::with_capacity(count);
+        for _ in 0..count {
+            let t = Instant::now();
+            f(i);
+            i += 1;
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let st = Stats::from_samples(samples);
+        let mut line = format!(
+            "bench {:<44} median {:>10}  p95 {:>10}  mean {:>10} ± {:>9}  (n={})",
+            self.name,
+            human_ns(st.median_ns),
+            human_ns(st.p95_ns),
+            human_ns(st.mean_ns),
+            human_ns(st.stddev_ns),
+            st.samples
+        );
+        if let Some(e) = self.throughput {
+            let eps = e as f64 / (st.median_ns / 1e9);
+            line.push_str(&format!("  [{:.3} Melem/s]", eps / 1e6));
+        }
+        println!("{line}");
+        st
+    }
+}
+
+/// Measure a one-shot (non-repeatable or long) operation.
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    let d = t.elapsed();
+    println!("once  {:<44} {:>10}", name, human_ns(d.as_nanos() as f64));
+    (out, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let st = Stats::from_samples(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(st.min_ns, 1.0);
+        assert_eq!(st.max_ns, 5.0);
+        assert_eq!(st.median_ns, 3.0);
+        assert!(st.p95_ns >= st.median_ns);
+        assert!((st.mean_ns - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut calls = 0usize;
+        let st = Bench::new("noop")
+            .warmup(Duration::from_millis(1))
+            .samples(5, 5)
+            .target_time(Duration::from_millis(1))
+            .run(|_| {
+                calls += 1;
+                std::hint::black_box(calls);
+            });
+        assert_eq!(st.samples, 5);
+        assert!(calls >= 6); // warmup + pilot + 5 samples
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn human_ns_units() {
+        assert!(human_ns(12.0).ends_with("ns"));
+        assert!(human_ns(12_000.0).ends_with("µs"));
+        assert!(human_ns(12_000_000.0).ends_with("ms"));
+        assert!(human_ns(2_000_000_000.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,5 @@
+//! Zero-dependency substrates: PRNG, property-testing, bench harness.
+
+pub mod bench;
+pub mod prop;
+pub mod rng;

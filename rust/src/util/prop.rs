@@ -1,0 +1,212 @@
+//! Minimal property-based testing harness.
+//!
+//! `proptest` is not available in the offline vendor set, so this module
+//! provides the subset we need: run a closure over many pseudo-random
+//! cases drawn from a seeded [`Xoshiro256`], and on failure retry with a
+//! sequence of shrunken variants of the failing case (shrinking is
+//! delegated to the case generator via integer size hints).
+//!
+//! Usage:
+//! ```
+//! use pgft::util::prop::Prop;
+//! Prop::new("example").cases(64).run(|g| {
+//!     let n = g.int_in(1, 100);
+//!     assert!(n >= 1 && n <= 100);
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+/// Case generator handed to property closures. Wraps the PRNG and records
+/// the draws so a failing case can be reported.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Trace of drawn values (for failure reports).
+    pub trace: Vec<(String, i64)>,
+    /// When `Some(k)`, integer draws are clamped toward their minimum to
+    /// produce smaller counterexamples (shrink pass `k` of [`SHRINK_PASSES`]).
+    shrink: Option<u32>,
+}
+
+const SHRINK_PASSES: u32 = 4;
+
+impl Gen {
+    fn new(seed: u64, shrink: Option<u32>) -> Self {
+        Self { rng: Xoshiro256::new(seed), trace: Vec::new(), shrink }
+    }
+
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        let mut v = lo + self.rng.next_below(span) as i64;
+        if let Some(pass) = self.shrink {
+            // Bias toward lo: each pass halves the distance from lo.
+            let dist = (v - lo) >> (pass + 1);
+            v = lo + dist;
+        }
+        self.trace.push((format!("int_in({lo},{hi})"), v));
+        v
+    }
+
+    /// usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.int_in(lo as i64, hi as i64) as usize
+    }
+
+    /// One element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize_in(0, xs.len() - 1);
+        &xs[i]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let b = self.rng.next_u64() & 1 == 1;
+        self.trace.push(("bool".into(), b as i64));
+        b
+    }
+
+    /// Raw access for non-shrinkable draws (permutations etc.).
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// A named property with a case budget.
+pub struct Prop {
+    name: &'static str,
+    cases: u32,
+    seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        Self { name, cases: 128, seed: 0x5EED_0F00_D5EE_D0F7 ^ fnv(name) }
+    }
+
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Run the property; panic with the smallest failing case found.
+    pub fn run<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(self, f: F) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            if let Err(first) = try_case(&f, case_seed, None) {
+                // Shrink: re-run with increasingly aggressive clamping;
+                // keep the last failure (smallest draws).
+                let mut best = first;
+                for pass in 0..SHRINK_PASSES {
+                    if let Err(t) = try_case(&f, case_seed, Some(pass)) {
+                        best = t;
+                    }
+                }
+                panic!(
+                    "property '{}' failed (case {case}, seed {case_seed:#x})\n  draws: {:?}\n  error: {}",
+                    self.name, best.trace, best.msg
+                );
+            }
+        }
+    }
+}
+
+struct Failure {
+    trace: Vec<(String, i64)>,
+    msg: String,
+}
+
+fn try_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    f: &F,
+    seed: u64,
+    shrink: Option<u32>,
+) -> Result<(), Failure> {
+    let mut g = Gen::new(seed, shrink);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+    match result {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let msg = if let Some(s) = e.downcast_ref::<&str>() {
+                s.to_string()
+            } else if let Some(s) = e.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "<non-string panic>".to_string()
+            };
+            Err(Failure { trace: g.trace, msg })
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+// Dummy const so the seed expression above compiles as a float literal
+// trick would not; keep an explicit constant instead.
+#[allow(non_upper_case_globals)]
+const _: () = ();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        Prop::new("tautology").cases(32).run(|g| {
+            let n = g.int_in(0, 10);
+            assert!((0..=10).contains(&n));
+        });
+    }
+
+    #[test]
+    fn failing_property_panics_with_trace() {
+        let r = std::panic::catch_unwind(|| {
+            Prop::new("always-false").cases(8).run(|g| {
+                let n = g.int_in(5, 50);
+                assert!(n < 5, "n={n} is not < 5");
+            });
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("always-false"), "got: {msg}");
+        assert!(msg.contains("draws"), "got: {msg}");
+    }
+
+    #[test]
+    fn shrinking_biases_toward_minimum() {
+        // A property failing for any n > 0 should report a small n after
+        // shrink passes (clamped toward lo).
+        let r = std::panic::catch_unwind(|| {
+            Prop::new("shrinks").cases(4).run(|g| {
+                let n = g.int_in(0, 1_000_000);
+                assert!(n == 0, "fail {n}");
+            });
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("should fail"),
+        };
+        // After SHRINK_PASSES with >>(pass+1), the reported value is at
+        // most 1/32 of the original range.
+        let val: i64 = msg
+            .split("int_in(0,1000000)\", ")
+            .nth(1)
+            .and_then(|s| s.split(')').next())
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(i64::MAX);
+        assert!(val <= 1_000_000 / 16, "shrunk value too large: {val} ({msg})");
+    }
+}

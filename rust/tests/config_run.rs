@@ -1,0 +1,61 @@
+//! End-to-end launcher test: TOML config → experiment → correct numbers.
+
+use pgft::config::{Doc, ExperimentConfig};
+use pgft::prelude::*;
+
+const CONFIG: &str = r#"
+[topology]
+spec = "case-study"
+placement = "io:last:1"
+
+[run]
+algorithms = ["dmodk", "smodk", "gdmodk", "gsmodk", "random"]
+patterns = ["c2io-sym", "c2io-all"]
+seed = 1
+
+[sim]
+message_packets = 16
+use_xla = false
+"#;
+
+#[test]
+fn config_to_experiment_to_paper_numbers() {
+    let cfg = ExperimentConfig::from_doc(&Doc::parse(CONFIG).unwrap()).unwrap();
+    let topo = build_pgft(&cfg.topology);
+    let types = cfg.placement.apply(&topo).unwrap();
+
+    let mut results = std::collections::HashMap::new();
+    for pattern in &cfg.patterns {
+        for &kind in &cfg.algorithms {
+            let s = AlgoSummary::compute(&topo, &types, kind, pattern, cfg.seed).unwrap();
+            results.insert((kind.as_str(), pattern.name()), s.c_topo);
+        }
+    }
+    assert_eq!(results[&("dmodk", "c2io-sym".into())], 4);
+    assert_eq!(results[&("smodk", "c2io-sym".into())], 4);
+    assert_eq!(results[&("gdmodk", "c2io-sym".into())], 1);
+    assert_eq!(results[&("gdmodk", "c2io-all".into())], 2);
+    assert_eq!(results[&("gsmodk", "c2io-all".into())], 4);
+}
+
+#[test]
+fn config_file_roundtrip() {
+    let dir = std::env::temp_dir().join("pgft_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(&path, CONFIG).unwrap();
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.algorithms.len(), 5);
+    assert_eq!(cfg.sim_message_packets, 16);
+    assert!(!cfg.use_xla);
+}
+
+#[test]
+fn cli_run_command() {
+    let dir = std::env::temp_dir().join("pgft_cfg_test2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(&path, CONFIG).unwrap();
+    pgft::cli::run(&["run".to_string(), "--config".to_string(), path.display().to_string()])
+        .unwrap();
+}

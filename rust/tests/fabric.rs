@@ -1,0 +1,107 @@
+//! Coordinator integration: fault storms, algorithm migrations, and
+//! analysis-under-degradation (the BXI-style fabric-management story).
+
+use pgft::coordinator::Coordinator;
+use pgft::prelude::*;
+use std::sync::Arc;
+
+fn start(kind: AlgorithmKind) -> (Arc<Topology>, NodeTypeMap, Coordinator) {
+    let topo = Arc::new(build_pgft(&PgftSpec::case_study()));
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let c = Coordinator::start(topo.clone(), types.clone(), kind, 1).unwrap();
+    (topo, types, c)
+}
+
+#[test]
+fn fault_storm_and_recovery() {
+    let (topo, _types, c) = start(AlgorithmKind::Gdmodk);
+    // Kill 3 of the 4 parallel links of one L2→top connection plus one
+    // leaf uplink: routing must survive (PGFT link duplication).
+    let l2 = topo.level_switches(2).next().unwrap();
+    let victims: Vec<usize> = topo.switches[l2]
+        .up_ports
+        .iter()
+        .take(3)
+        .map(|&p| topo.ports[p].link)
+        .chain(topo.links.iter().filter(|l| l.stage == 2).take(1).map(|l| l.id))
+        .collect();
+    for &v in &victims {
+        c.link_down(v);
+    }
+    let s = c.stats().unwrap();
+    assert_eq!(s.dead_links, victims.len());
+    assert!(s.degraded);
+
+    // Every pair still routes, avoiding all dead links.
+    let flows: Vec<(u32, u32)> =
+        (0..64).flat_map(|s| (0..64).filter(move |&d| d != s).map(move |d| (s, d))).collect();
+    let routes = c.trace(flows).unwrap();
+    let rep = pgft::routing::verify::verify_routes(&topo, &routes).unwrap();
+    assert!(rep.deadlock_free);
+    for r in &routes {
+        for &p in &r.ports {
+            assert!(!victims.contains(&topo.ports[p].link), "route through dead link");
+        }
+    }
+
+    // Analysis still answers under degradation.
+    let a = c.analyze(Pattern::C2ioSym).unwrap();
+    assert!(a.c_topo >= 1);
+
+    // Full recovery restores the healthy Gdmodk optimum.
+    for &v in &victims {
+        c.link_up(v);
+    }
+    assert_eq!(c.analyze(Pattern::C2ioSym).unwrap().c_topo, 1);
+    c.shutdown();
+}
+
+#[test]
+fn reroute_latency_and_diff_are_reported() {
+    let (topo, _types, c) = start(AlgorithmKind::Dmodk);
+    let victim = topo.links.iter().find(|l| l.stage == 3).unwrap().id;
+    c.link_down(victim);
+    let s = c.stats().unwrap();
+    assert!(s.last_reroute_micros > 0);
+    assert!(s.last_diff_entries > 0 && s.last_diff_entries <= s.table_entries);
+    c.shutdown();
+}
+
+#[test]
+fn algorithm_migration_live() {
+    let (_topo, _types, c) = start(AlgorithmKind::Smodk);
+    let before = c.analyze(Pattern::C2ioAll).unwrap();
+    assert_eq!(before.c_topo, 4);
+    c.set_algorithm(AlgorithmKind::Gdmodk);
+    let after = c.analyze(Pattern::C2ioAll).unwrap();
+    assert_eq!(after.c_topo, 2);
+    let s = c.stats().unwrap();
+    assert_eq!(s.algorithm, AlgorithmKind::Gdmodk);
+    assert!(s.table_version >= 2);
+    c.shutdown();
+}
+
+#[test]
+fn many_coordinators_in_parallel() {
+    // Leaders for different partitions can coexist (thread hygiene).
+    let handles: Vec<_> = AlgorithmKind::ALL
+        .iter()
+        .map(|&k| {
+            std::thread::spawn(move || {
+                let (_t, _m, c) = start(k);
+                let a = c.analyze(Pattern::C2ioSym).unwrap();
+                c.shutdown();
+                (k, a.c_topo)
+            })
+        })
+        .collect();
+    let mut results: Vec<(AlgorithmKind, u32)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    results.sort_by_key(|(k, _)| k.as_str());
+    let by_kind: std::collections::HashMap<&str, u32> =
+        results.iter().map(|(k, c)| (k.as_str(), *c)).collect();
+    assert_eq!(by_kind["dmodk"], 4);
+    assert_eq!(by_kind["gdmodk"], 1);
+    assert_eq!(by_kind["smodk"], 4);
+    assert_eq!(by_kind["gsmodk"], 4);
+}

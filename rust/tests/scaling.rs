@@ -1,0 +1,98 @@
+//! E11 — the paper's conclusions generalized beyond the 64-node case
+//! study: Gxmodk's advantage persists on larger PGFTs and other
+//! placements, and routing stays valid everywhere.
+
+use pgft::metrics::CongestionReport;
+use pgft::prelude::*;
+
+fn c_topo(
+    topo: &Topology,
+    types: &NodeTypeMap,
+    kind: AlgorithmKind,
+    pattern: &Pattern,
+) -> (u32, usize) {
+    let router = kind.build(topo, Some(types), 1);
+    let flows = pattern.flows(topo, types).unwrap();
+    let routes = trace_flows(topo, &*router, &flows);
+    let rep = CongestionReport::compute(topo, &routes);
+    (rep.c_topo(), rep.hot_ports().len())
+}
+
+#[test]
+fn medium_512_gdmodk_beats_dmodk() {
+    let topo = families::named("medium-512").unwrap();
+    pgft::topology::validate::validate(&topo).unwrap();
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let (d, d_hot) = c_topo(&topo, &types, AlgorithmKind::Dmodk, &Pattern::C2ioSym);
+    let (g, g_hot) = c_topo(&topo, &types, AlgorithmKind::Gdmodk, &Pattern::C2ioSym);
+    assert!(g < d, "gdmodk {g} < dmodk {d}");
+    assert!(g_hot < d_hot, "hot ports {g_hot} < {d_hot}");
+    assert_eq!(g, 1, "bijective pattern: grouped routing reaches the optimum");
+}
+
+#[test]
+fn medium_512_routes_verify() {
+    let topo = families::named("medium-512").unwrap();
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    // Sampled pairs (full all-pairs is 512²; keep CI fast).
+    let mut rng = pgft::util::rng::Xoshiro256::new(9);
+    let flows: Vec<(u32, u32)> = (0..4000)
+        .map(|_| (rng.index(512) as u32, rng.index(512) as u32))
+        .filter(|(s, d)| s != d)
+        .collect();
+    for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk, AlgorithmKind::Gsmodk] {
+        let router = kind.build(&topo, Some(&types), 1);
+        let routes = trace_flows(&topo, &*router, &flows);
+        let rep = pgft::routing::verify::verify_routes(&topo, &routes).unwrap();
+        assert_eq!(rep.minimal, rep.flows, "{kind}");
+        assert!(rep.deadlock_free, "{kind}");
+    }
+}
+
+#[test]
+fn full_cbb_variant_kills_top_congestion() {
+    // With the top stage un-slimmed (p3 = 8) Dmodk's C2IO concentration
+    // is halved: the case study's congestion is a *slimming* artifact,
+    // which is why the paper uses nonfull CBB.
+    let slim = families::named("case-study").unwrap();
+    let full = families::named("case-study-full").unwrap();
+    let ts = Placement::paper_io().apply(&slim).unwrap();
+    let tf = Placement::paper_io().apply(&full).unwrap();
+    let (c_slim, _) = c_topo(&slim, &ts, AlgorithmKind::Dmodk, &Pattern::C2ioSym);
+    let (c_full, _) = c_topo(&full, &tf, AlgorithmKind::Dmodk, &Pattern::C2ioSym);
+    assert!(c_full < c_slim, "full CBB {c_full} < slimmed {c_slim}");
+}
+
+#[test]
+fn kary_tree_gxmodk_degenerates_gracefully() {
+    // On a homogeneous k-ary n-tree with no secondary nodes the grouped
+    // algorithms equal their plain counterparts.
+    let topo = families::kary_ntree(4, 3).unwrap();
+    let types = NodeTypeMap::uniform(topo.num_nodes() as u32, NodeType::Compute);
+    let flows = Pattern::Shift { k: 5 }.flows(&topo, &types).unwrap();
+    for (grouped, plain) in [
+        (AlgorithmKind::Gdmodk, AlgorithmKind::Dmodk),
+        (AlgorithmKind::Gsmodk, AlgorithmKind::Smodk),
+    ] {
+        let rg = grouped.build(&topo, Some(&types), 0);
+        let rp = plain.build(&topo, Some(&types), 0);
+        for &(s, d) in &flows {
+            assert_eq!(
+                trace_route(&topo, &*rg, s, d).ports,
+                trace_route(&topo, &*rp, s, d).ports,
+                "{grouped} vs {plain} on {s}->{d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn alltoall_unharmed_by_grouping() {
+    // Gxmodk must not regress the general worst case it wasn't built
+    // for: all-to-all C_topo stays within one of Xmodk's.
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let (d, _) = c_topo(&topo, &types, AlgorithmKind::Dmodk, &Pattern::AllToAll);
+    let (g, _) = c_topo(&topo, &types, AlgorithmKind::Gdmodk, &Pattern::AllToAll);
+    assert!(g <= d + 1, "gdmodk {g} vs dmodk {d} on all-to-all");
+}

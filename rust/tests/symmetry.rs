@@ -1,0 +1,119 @@
+//! E8 — the §IV.B symmetry identities. For a pattern P and its
+//! symmetrical pattern Q (all flows reversed):
+//!
+//!   C_topo(P(Dmodk))  = C_topo(Q(Smodk))
+//!   C_topo(Q(Dmodk))  = C_topo(P(Smodk))
+//!   C_topo(P(Gdmodk)) = C_topo(Q(Gsmodk))
+//!   C_topo(Q(Gdmodk)) = C_topo(P(Gsmodk))
+//!
+//! The identities hold because reversing flows swaps the roles of source
+//! and destination, and Smodk(key=src) mirrors Dmodk(key=dst), while the
+//! output-port metric on P equals the input-port metric on Q (§III.A:
+//! symmetric analysis).
+
+use pgft::metrics::CongestionReport;
+use pgft::prelude::*;
+use pgft::util::prop::Prop;
+
+fn c_topo(topo: &Topology, types: &NodeTypeMap, kind: AlgorithmKind, flows: &[(u32, u32)]) -> u32 {
+    let router = kind.build(topo, Some(types), 0);
+    let routes = trace_flows(topo, &*router, flows);
+    CongestionReport::compute(topo, &routes).c_topo()
+}
+
+fn reversed(flows: &[(u32, u32)]) -> Vec<(u32, u32)> {
+    flows.iter().map(|&(s, d)| (d, s)).collect()
+}
+
+fn check_identities(topo: &Topology, types: &NodeTypeMap, p: &[(u32, u32)]) {
+    let q = reversed(p);
+    use AlgorithmKind::*;
+    assert_eq!(c_topo(topo, types, Dmodk, p), c_topo(topo, types, Smodk, &q), "P(D) = Q(S)");
+    assert_eq!(c_topo(topo, types, Dmodk, &q), c_topo(topo, types, Smodk, p), "Q(D) = P(S)");
+    assert_eq!(c_topo(topo, types, Gdmodk, p), c_topo(topo, types, Gsmodk, &q), "P(GD) = Q(GS)");
+    assert_eq!(c_topo(topo, types, Gdmodk, &q), c_topo(topo, types, Gsmodk, p), "Q(GD) = P(GS)");
+}
+
+#[test]
+fn identities_on_c2io_patterns() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    for pattern in [Pattern::C2ioSym, Pattern::C2ioAll] {
+        let p = pattern.flows(&topo, &types).unwrap();
+        check_identities(&topo, &types, &p);
+    }
+}
+
+/// The concrete §IV statement: the symmetrical pattern (IO→compute) under
+/// Gsmodk shows the same improvement Gdmodk shows on compute→IO.
+#[test]
+fn io2c_gsmodk_matches_c2io_gdmodk() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let p = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+    let q = Pattern::Io2cSym.flows(&topo, &types).unwrap();
+    assert_eq!(
+        c_topo(&topo, &types, AlgorithmKind::Gdmodk, &p),
+        c_topo(&topo, &types, AlgorithmKind::Gsmodk, &q)
+    );
+    // And the improvement is real: Gsmodk on the scatter-like Q is
+    // optimal where Smodk was not.
+    let smodk_q = c_topo(&topo, &types, AlgorithmKind::Smodk, &q);
+    let gsmodk_q = c_topo(&topo, &types, AlgorithmKind::Gsmodk, &q);
+    assert!(gsmodk_q < smodk_q, "Gsmodk({gsmodk_q}) < Smodk({smodk_q}) on IO→compute");
+}
+
+#[test]
+fn identities_on_classic_patterns() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    for pattern in [
+        Pattern::Shift { k: 8 },
+        Pattern::Gather { root: 7 },
+        Pattern::Scatter { root: 0 },
+        Pattern::RandPerm { seed: 11 },
+        Pattern::HotSpot { dsts: 3 },
+    ] {
+        let p = pattern.flows(&topo, &types).unwrap();
+        check_identities(&topo, &types, &p);
+    }
+}
+
+#[test]
+fn prop_identities_on_random_flow_sets() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    Prop::new("xmodk-duality").cases(30).run(|g| {
+        let n = g.usize_in(1, 80);
+        let mut flows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = g.usize_in(0, 63) as u32;
+            let d = g.usize_in(0, 63) as u32;
+            if s != d {
+                flows.push((s, d));
+            }
+        }
+        if flows.is_empty() {
+            return;
+        }
+        check_identities(&topo, &types, &flows);
+    });
+}
+
+#[test]
+fn prop_identities_on_other_pgfts() {
+    // The duality is a property of the formulas, not the case study.
+    let specs = [
+        PgftSpec::new(vec![4, 4], vec![1, 2], vec![1, 2]).unwrap(),
+        PgftSpec::new(vec![2, 3, 2], vec![1, 2, 2], vec![1, 1, 1]).unwrap(),
+        PgftSpec::new(vec![4, 2, 2], vec![1, 2, 1], vec![1, 1, 2]).unwrap(),
+    ];
+    for spec in specs {
+        let topo = build_pgft(&spec);
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let n = topo.num_nodes() as u32;
+        let flows: Vec<(u32, u32)> =
+            (0..n).flat_map(|s| (0..n).filter(move |&d| d != s).map(move |d| (s, d))).collect();
+        check_identities(&topo, &types, &flows);
+    }
+}
