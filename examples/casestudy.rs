@@ -1,5 +1,6 @@
 //! The full paper walk-through: reproduces every number of §III and §IV
-//! on the case study, with the per-port views behind Figures 4-7.
+//! on the case study — the headline table through the parallel sweep
+//! engine, plus the per-port views behind Figures 4-7.
 //!
 //! ```sh
 //! cargo run --release --example casestudy
@@ -37,6 +38,32 @@ fn main() -> anyhow::Result<()> {
     println!("== Fig 1: the case-study topology ==");
     print!("{}", pgft::topology::render::render_summary(&topo, Some(&types)));
     print!("{}", pgft::topology::render::render_leaves(&topo, &types));
+
+    // The §III/§IV comparison table is one declarative sweep: every
+    // algorithm on both C2IO readings, fanned out in parallel.
+    println!("\n== §III-§IV congestion table (sweep engine) ==");
+    let spec = SweepSpec {
+        topologies: vec!["case-study".into()],
+        placements: vec!["io:last:1".into()],
+        patterns: vec![Pattern::C2ioSym, Pattern::C2ioAll],
+        algorithms: AlgorithmKind::ALL.to_vec(),
+        seeds: vec![1],
+        simulate: false,
+    };
+    let rows = run_sweep(&spec, &SweepOptions::default())?;
+    print!("{}", pgft::metrics::render_algorithm_table(&pgft::sweep::summaries(&rows)));
+    let cell = |algo: &str, pat: &str| {
+        rows.iter()
+            .find(|r| r.summary.algorithm == algo && r.summary.pattern == pat)
+            .unwrap()
+            .summary
+            .c_topo
+    };
+    assert_eq!(cell("dmodk", "c2io-sym"), 4, "§III.B");
+    assert_eq!(cell("smodk", "c2io-sym"), 4, "§III.C");
+    assert_eq!(cell("gdmodk", "c2io-all"), 2, "§IV.B.1");
+    assert_eq!(cell("gdmodk", "c2io-sym"), 1, "§IV optimum");
+    assert_eq!(cell("gsmodk", "c2io-sym"), 4, "§IV.B.2");
 
     println!("\n== §III.B / Fig 4: Dmodk ==");
     let dmodk = report(&topo, &types, AlgorithmKind::Dmodk, &Pattern::C2ioSym);

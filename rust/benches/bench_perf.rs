@@ -1,13 +1,16 @@
-//! E13 — performance microbenchmarks of every hot path (the §Perf
-//! numbers in EXPERIMENTS.md): topology build, route tracing, table
+//! E13 — performance benchmarks of every hot path (the §Perf numbers in
+//! EXPERIMENTS.md): topology build, route tracing, table
 //! materialization, congestion metric, degraded reroute, fair-rate
-//! solvers (rust vs XLA artifact), packet-sim step rate.
+//! solvers (rust vs XLA artifact), packet-sim step rate, and the sweep
+//! engine's parallel-vs-serial grid execution (PR-1's acceptance run).
 
 use pgft::prelude::*;
 use pgft::routing::degraded::{route_degraded, FaultSet};
+use pgft::routing::verify::all_pairs;
 use pgft::routing::ForwardingTables;
 use pgft::sim::{solve_fairrate_exact, IncidenceMatrix, PacketSim, PacketSimConfig};
-use pgft::util::bench::Bench;
+use pgft::util::bench::{speedup_line, time_once, Bench};
+use pgft::util::par;
 use std::time::Duration;
 
 fn main() {
@@ -31,10 +34,7 @@ fn main() {
     println!("\n== route tracing (all-pairs) ==");
     for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
         let types = Placement::paper_io().apply(topo).unwrap();
-        let n = topo.num_nodes() as u32;
-        let flows: Vec<(u32, u32)> = (0..n)
-            .flat_map(|s| (0..n).filter(move |&d| d != s).map(move |d| (s, d)))
-            .collect();
+        let flows = all_pairs(topo.num_nodes() as u32);
         for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk] {
             let router = kind.build(topo, Some(&types), 1);
             Bench::new(format!("trace/{kind}/{label}"))
@@ -50,10 +50,7 @@ fn main() {
     println!("\n== metric engine (all-pairs routes) ==");
     for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
         let types = Placement::paper_io().apply(topo).unwrap();
-        let n = topo.num_nodes() as u32;
-        let flows: Vec<(u32, u32)> = (0..n)
-            .flat_map(|s| (0..n).filter(move |&d| d != s).map(move |d| (s, d)))
-            .collect();
+        let flows = all_pairs(topo.num_nodes() as u32);
         let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
         let routes = trace_flows(topo, &*router, &flows);
         let hops: u64 = routes.iter().map(|r| r.ports.len() as u64).sum();
@@ -71,10 +68,7 @@ fn main() {
     println!("\n== metric ablations (§Perf iteration log) ==");
     for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
         let types = Placement::paper_io().apply(topo).unwrap();
-        let n = topo.num_nodes() as u32;
-        let flows: Vec<(u32, u32)> = (0..n)
-            .flat_map(|s| (0..n).filter(move |&d| d != s).map(move |d| (s, d)))
-            .collect();
+        let flows = all_pairs(topo.num_nodes() as u32);
         let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
         let routes = trace_flows(topo, &*router, &flows);
         Bench::new(format!("metric-ablate/hashset/{label}"))
@@ -183,4 +177,28 @@ fn main() {
             let routes = trace_flows(&case, &*r, &fl);
             std::hint::black_box(PacketSim::new(&case, &routes, PacketSimConfig::default()).run());
         });
+
+    // The PR-1 acceptance run: the full 6-algorithm × 4-pattern ×
+    // 2-placement grid on medium-512, serial vs parallel, byte-identical
+    // rows and ≥2× wall-clock on 4+ cores.
+    println!("\n== sweep engine (algorithm × pattern × placement grid) ==");
+    let spec = SweepSpec::paper_grid("medium-512");
+    let threads = par::max_threads();
+    println!("  grid: {} cells on medium-512, {} worker threads available", spec.num_cells(), threads);
+    let (rows_serial, t_serial) = time_once("sweep/medium-512/serial", || {
+        run_sweep(&spec, &SweepOptions { threads: 1 }).unwrap()
+    });
+    let (rows_parallel, t_parallel) = time_once("sweep/medium-512/parallel", || {
+        run_sweep(&spec, &SweepOptions { threads }).unwrap()
+    });
+    assert_eq!(rows_serial, rows_parallel, "parallel sweep must be byte-identical to serial");
+    assert_eq!(
+        sweep_table(&rows_serial).to_csv(),
+        sweep_table(&rows_parallel).to_csv(),
+        "rendered output must be byte-identical too"
+    );
+    let x = speedup_line("sweep/medium-512", t_serial, t_parallel);
+    if threads >= 4 && x < 2.0 {
+        eprintln!("WARNING: sweep speedup {x:.2}x below the 2x target on {threads} cores");
+    }
 }

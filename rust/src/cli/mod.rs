@@ -3,6 +3,8 @@
 //!
 //! ```text
 //! pgft topo --topo case-study [--dot] [--leaves] [--placement io:last:1]
+//! pgft sweep [--config FILE] [--topo ..] [--placements A;B] [--pattern ..]
+//!            [--algo ..] [--seeds 1,2] [--simulate] [--serial|--threads N]
 //! pgft analyze [--topo ..] [--placement ..] [--pattern c2io-sym,c2io-all]
 //!              [--algo all|dmodk,...] [--seed N] [--format text|csv|json] [--out FILE]
 //! pgft ports --algo dmodk --pattern c2io-sym [--level 3]      # per-port detail (Figs 4-7)
@@ -16,25 +18,29 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Coordinator;
-use crate::metrics::{render_algorithm_table, AlgoSummary, CongestionReport};
+use crate::metrics::{render_algorithm_table, CongestionReport};
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
 use crate::report::Table;
 use crate::routing::trace::trace_flows;
 use crate::routing::AlgorithmKind;
 use crate::sim::{render_sim_table, simulate_flow_level, PacketSim, PacketSimConfig};
+use crate::sweep::{run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
 use crate::topology::{families, render, Topology};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Parsed `--key value` / `--flag` arguments.
 pub struct Args {
+    /// The leading subcommand word (`help` when absent).
     pub cmd: String,
     opts: BTreeMap<String, String>,
 }
 
 impl Args {
+    /// Parse an argv tail (without the program name).
     pub fn parse(argv: &[String]) -> Result<Args> {
         let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
         let mut opts = BTreeMap::new();
@@ -55,18 +61,22 @@ impl Args {
         Ok(Args { cmd, opts })
     }
 
+    /// Value of `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key`, or `default`.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Whether a boolean `--key` flag was given.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Numeric `--key` with a default; errors on non-numbers.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not a number")),
@@ -119,6 +129,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.cmd.as_str() {
         "topo" => cmd_topo(&args),
+        "sweep" => cmd_sweep(&args),
         "analyze" => cmd_analyze(&args),
         "ports" => cmd_ports(&args),
         "random-dist" => cmd_random_dist(&args),
@@ -139,6 +150,9 @@ const HELP: &str = r#"pgft — node-type-based load-balancing routing for PGFTs
 
 commands:
   topo         show a topology (--topo case-study|medium-512|PGFT(...); --dot; --leaves)
+  sweep        parallel experiment grid: algorithms × patterns × placements × seeds
+               (--config FILE, or --topo/--placements A;B/--pattern/--algo/--seeds 1,2;
+                --simulate adds flow-level throughput; --serial / --threads N)
   analyze      congestion table per algorithm × pattern (the paper's analysis)
   ports        per-port detail for one algorithm/pattern (Figs 4-7)
   random-dist  C_topo histogram over random-routing seeds (§III.D)
@@ -164,39 +178,107 @@ fn cmd_topo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn summary_table(rows: &[AlgoSummary]) -> Table {
+fn summary_table(rows: &[SweepResult]) -> Table {
     let mut t = Table::new(
         "congestion analysis (static metric, §III.A)",
         &["algo", "pattern", "flows", "C_topo", "hot_ports", "hot_top", "used_top", "total_top"],
     );
     for r in rows {
-        let h = r.hot_per_level.len() - 1;
+        let s = &r.summary;
+        let h = s.hot_per_level.len() - 1;
         t.row(&[
-            r.algorithm.clone(),
-            r.pattern.clone(),
-            r.flows.to_string(),
-            r.c_topo.to_string(),
-            r.hot_total.to_string(),
-            r.hot_per_level[h].to_string(),
-            r.used_top_ports.to_string(),
-            r.total_top_ports.to_string(),
+            s.algorithm.clone(),
+            s.pattern.clone(),
+            s.flows.to_string(),
+            s.c_topo.to_string(),
+            s.hot_total.to_string(),
+            s.hot_per_level[h].to_string(),
+            s.used_top_ports.to_string(),
+            s.total_top_ports.to_string(),
         ]);
     }
     t
 }
 
-fn cmd_analyze(args: &Args) -> Result<()> {
-    let (topo, types) = load_topo(args)?;
-    let seed = args.u64_or("seed", 1)?;
-    let mut rows = Vec::new();
-    for pattern in parse_patterns(args, "c2io-sym,c2io-all")? {
-        for kind in parse_algos(args)? {
-            rows.push(AlgoSummary::compute(&topo, &types, kind, &pattern, seed)?);
-        }
+/// Worker-thread count from `--serial` / `--threads N`.
+fn parse_threads(args: &Args) -> Result<usize> {
+    if args.flag("serial") {
+        return Ok(1);
     }
+    Ok(args.u64_or("threads", crate::util::par::max_threads() as u64)?.max(1) as usize)
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    // Base grid from the config file (or the paper defaults), then CLI
+    // flags override axis by axis — `--config grid.toml --simulate`
+    // means "that grid, with throughput attached".
+    let mut spec = match args.get("config") {
+        Some(path) => {
+            let mut s = SweepSpec::from_file(path)?;
+            if let Some(t) = args.get("topo") {
+                s.topologies = vec![t.to_string()];
+            }
+            s
+        }
+        None => SweepSpec::paper_grid(&args.get_or("topo", "case-study")),
+    };
+    // Every axis accepts both the singular spelling the other
+    // subcommands use and the natural plural — Args::parse has no
+    // unknown-flag rejection, so a missed spelling would otherwise be
+    // silently ignored and the default grid would run instead.
+    if let Some(p) = args.get("placements").or_else(|| args.get("placement")) {
+        // ';'-separated so individual specs keep their ','-stacks.
+        spec.placements = p.split(';').map(str::to_string).collect();
+    }
+    if let Some(p) = args.get("pattern").or_else(|| args.get("patterns")) {
+        spec.patterns = p.split(',').map(Pattern::parse).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(a) = args.get("algo").or_else(|| args.get("algos")) {
+        spec.algorithms = if a == "all" {
+            AlgorithmKind::ALL.to_vec()
+        } else {
+            a.split(',').map(AlgorithmKind::parse).collect::<Result<Vec<_>>>()?
+        };
+    }
+    // `--seed` (the other subcommands' spelling) works here too.
+    if let Some(seeds) = args.get("seeds").or_else(|| args.get("seed")) {
+        spec.seeds = seeds
+            .split(',')
+            .map(|s| s.parse::<u64>().map_err(|e| anyhow::anyhow!("--seeds {s:?}: {e}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if args.flag("simulate") {
+        spec.simulate = true;
+    }
+    spec.validate()?;
+    let threads = parse_threads(args)?;
+    let t0 = Instant::now();
+    let rows = run_sweep(&spec, &SweepOptions { threads })?;
+    let elapsed = t0.elapsed();
+    emit(&sweep_table(&rows), args)?;
+    eprintln!(
+        "{} cells in {:.3}s on {} thread{}",
+        rows.len(),
+        elapsed.as_secs_f64(),
+        threads,
+        if threads == 1 { "" } else { "s" }
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let spec = SweepSpec {
+        topologies: vec![args.get_or("topo", "case-study")],
+        placements: vec![args.get_or("placement", "io:last:1")],
+        patterns: parse_patterns(args, "c2io-sym,c2io-all")?,
+        algorithms: parse_algos(args)?,
+        seeds: vec![args.u64_or("seed", 1)?],
+        simulate: false,
+    };
+    let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
     emit(&summary_table(&rows), args)?;
     eprintln!();
-    eprint!("{}", render_algorithm_table(&rows));
+    eprint!("{}", render_algorithm_table(&crate::sweep::summaries(&rows)));
     Ok(())
 }
 
@@ -339,29 +421,56 @@ fn cmd_packet_sim(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let path = args.get("config").context("--config FILE required")?;
     let cfg = ExperimentConfig::from_file(path)?;
+    // Built once here for the summary banner; run_sweep re-resolves the
+    // topology from its spec string (keeps SweepSpec self-contained; the
+    // rebuild is milliseconds even at 4096 nodes).
     let topo = crate::topology::build_pgft(&cfg.topology);
     crate::topology::validate::validate(&topo)?;
     let types = cfg.placement.apply(&topo)?;
     println!("{}", render::render_summary(&topo, Some(&types)));
 
-    // Static analysis.
-    let mut rows = Vec::new();
-    for pattern in &cfg.patterns {
-        for &kind in &cfg.algorithms {
-            rows.push(AlgoSummary::compute(&topo, &types, kind, pattern, cfg.seed)?);
-        }
-    }
-    print!("{}", render_algorithm_table(&rows));
+    // The whole experiment is one sweep: static congestion analysis plus
+    // flow-level throughput (deterministic rust solver) for every
+    // (algorithm, pattern) cell, fanned out in parallel.
+    let spec = SweepSpec {
+        topologies: vec![cfg.topology_name.clone()],
+        placements: vec![cfg.placement_spec.clone()],
+        patterns: cfg.patterns.clone(),
+        algorithms: cfg.algorithms.clone(),
+        seeds: vec![cfg.seed],
+        simulate: true,
+    };
+    let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
+    print!("{}", render_algorithm_table(&crate::sweep::summaries(&rows)));
+    print!("{}", sweep_table(&rows).to_text());
 
-    // Flow-level simulation.
-    let runtime = if cfg.use_xla { crate::runtime::Runtime::open_default().ok() } else { None };
-    let mut sims = Vec::new();
-    for pattern in &cfg.patterns {
-        for &kind in &cfg.algorithms {
-            sims.push(simulate_flow_level(&topo, &types, kind, pattern, cfg.seed, runtime.as_ref())?);
+    // `use_xla = true`: additionally run the flow-level solves through
+    // the AOT artifacts for cross-checking (the sweep's rust-solver
+    // figures above stay the deterministic reference).
+    if cfg.use_xla {
+        match crate::runtime::Runtime::open_default() {
+            Ok(rt) => {
+                eprintln!("PJRT platform: {}", rt.platform());
+                let mut sims = Vec::new();
+                for pattern in &cfg.patterns {
+                    for &kind in &cfg.algorithms {
+                        sims.push(simulate_flow_level(
+                            &topo,
+                            &types,
+                            kind,
+                            pattern,
+                            cfg.seed,
+                            Some(&rt),
+                        )?);
+                    }
+                }
+                print!("{}", render_sim_table(&sims));
+            }
+            Err(e) => eprintln!(
+                "XLA runtime unavailable ({e:#}); the sweep's rust-solver rates above stand"
+            ),
         }
     }
-    print!("{}", render_sim_table(&sims));
     Ok(())
 }
 
@@ -446,5 +555,45 @@ mod tests {
     #[test]
     fn random_dist_small() {
         run(&argv(&["random-dist", "--trials", "5"])).unwrap();
+    }
+
+    #[test]
+    fn sweep_command_runs_serial_and_parallel() {
+        let base = [
+            "sweep", "--topo", "case-study", "--pattern", "c2io-sym",
+            "--algo", "dmodk,gdmodk", "--seeds", "1,2",
+        ];
+        let mut serial: Vec<String> = argv(&base);
+        serial.push("--serial".into());
+        run(&serial).unwrap();
+        let mut threaded: Vec<String> = argv(&base);
+        threaded.extend(argv(&["--threads", "3"]));
+        run(&threaded).unwrap();
+    }
+
+    #[test]
+    fn sweep_rejects_bad_seeds() {
+        assert!(run(&argv(&["sweep", "--seeds", "one,two"])).is_err());
+    }
+
+    #[test]
+    fn sweep_cli_flags_override_config() {
+        let dir = std::env::temp_dir().join("pgft_sweep_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("grid.toml");
+        std::fs::write(
+            &path,
+            "[sweep]\npatterns = [\"c2io-sym\"]\nalgorithms = [\"dmodk\"]\nplacements = [\"io:last:1\"]\n",
+        )
+        .unwrap();
+        let p = path.to_str().unwrap();
+        // Config alone works, and --algo/--serial compose on top of it
+        // instead of being silently dropped.
+        run(&argv(&["sweep", "--config", p, "--serial"])).unwrap();
+        run(&argv(&["sweep", "--config", p, "--serial", "--algo", "gdmodk"])).unwrap();
+        // A `pgft run`-shaped config is rejected, not defaulted.
+        let wrong = dir.join("exp.toml");
+        std::fs::write(&wrong, "[topology]\nspec = \"case-study\"\n").unwrap();
+        assert!(run(&argv(&["sweep", "--config", wrong.to_str().unwrap()])).is_err());
     }
 }

@@ -17,14 +17,20 @@ use std::collections::BTreeMap;
 /// A parsed scalar or array value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A floating-point literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat `[a, b, c]` array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, or an error for any other value kind.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -32,6 +38,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, or an error for any other value kind.
     pub fn as_int(&self) -> Result<i64> {
         match self {
             Value::Int(i) => Ok(*i),
@@ -39,6 +46,7 @@ impl Value {
         }
     }
 
+    /// The value as a float (integers widen), or an error.
     pub fn as_float(&self) -> Result<f64> {
         match self {
             Value::Float(f) => Ok(*f),
@@ -47,6 +55,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, or an error for any other value kind.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -54,6 +63,7 @@ impl Value {
         }
     }
 
+    /// String array (a lone string counts as a one-element array).
     pub fn as_str_array(&self) -> Result<Vec<String>> {
         match self {
             Value::Array(xs) => xs.iter().map(|v| v.as_str().map(str::to_string)).collect(),
@@ -61,15 +71,26 @@ impl Value {
             other => bail!("expected array of strings, got {other:?}"),
         }
     }
+
+    /// Integer array (a lone integer counts as a one-element array).
+    pub fn as_int_array(&self) -> Result<Vec<i64>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_int()).collect(),
+            Value::Int(i) => Ok(vec![*i]),
+            other => bail!("expected array of integers, got {other:?}"),
+        }
+    }
 }
 
 /// Parsed document: section → key → value. Top-level keys live in `""`.
 #[derive(Clone, Debug, Default)]
 pub struct Doc {
+    /// Section name → (key → value); top-level keys under `""`.
     pub sections: BTreeMap<String, BTreeMap<String, Value>>,
 }
 
 impl Doc {
+    /// Parse the TOML subset (see module docs) into a [`Doc`].
     pub fn parse(text: &str) -> Result<Doc> {
         let mut doc = Doc::default();
         let mut section = String::new();
@@ -96,10 +117,12 @@ impl Doc {
         Ok(doc)
     }
 
+    /// Raw value lookup.
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section).and_then(|s| s.get(key))
     }
 
+    /// String lookup with a default for missing keys.
     pub fn get_str(&self, section: &str, key: &str, default: &str) -> Result<String> {
         match self.get(section, key) {
             Some(v) => Ok(v.as_str()?.to_string()),
@@ -107,9 +130,18 @@ impl Doc {
         }
     }
 
+    /// Integer lookup with a default for missing keys.
     pub fn get_int(&self, section: &str, key: &str, default: i64) -> Result<i64> {
         match self.get(section, key) {
             Some(v) => v.as_int(),
+            None => Ok(default),
+        }
+    }
+
+    /// Boolean lookup with a default for missing keys.
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            Some(v) => v.as_bool(),
             None => Ok(default),
         }
     }
@@ -186,21 +218,34 @@ fn split_top_level(s: &str) -> Vec<String> {
 /// The typed experiment configuration used by `pgft run --config`.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// The topology spec string as written in the config (named family
+    /// or `PGFT(...)` form) — kept so the sweep engine can re-resolve it.
+    pub topology_name: String,
+    /// Resolved topology parameters.
     pub topology: PgftSpec,
+    /// The placement spec string as written in the config.
+    pub placement_spec: String,
+    /// Resolved placement strategy.
     pub placement: Placement,
+    /// Algorithms to compare.
     pub algorithms: Vec<AlgorithmKind>,
+    /// Patterns to route.
     pub patterns: Vec<Pattern>,
+    /// Seed for the seed-sensitive (random) algorithms.
     pub seed: u64,
+    /// Message size for the packet-level simulator.
     pub sim_message_packets: u32,
+    /// Prefer the XLA/PJRT solver when artifacts are available.
     pub use_xla: bool,
 }
 
 impl ExperimentConfig {
+    /// Build a typed config from a parsed [`Doc`], filling defaults.
     pub fn from_doc(doc: &Doc) -> Result<ExperimentConfig> {
         let topo_name = doc.get_str("topology", "spec", "case-study")?;
         let topology = crate::topology::families::named_spec(&topo_name)?;
-        let placement =
-            Placement::parse(&doc.get_str("topology", "placement", "io:last:1")?)?;
+        let placement_spec = doc.get_str("topology", "placement", "io:last:1")?;
+        let placement = Placement::parse(&placement_spec)?;
         let algos = match doc.get("run", "algorithms") {
             Some(v) => v.as_str_array()?,
             None => AlgorithmKind::ALL.iter().map(|k| k.as_str().to_string()).collect(),
@@ -215,7 +260,9 @@ impl ExperimentConfig {
         };
         let patterns = pats.iter().map(|p| Pattern::parse(p)).collect::<Result<Vec<_>>>()?;
         Ok(ExperimentConfig {
+            topology_name: topo_name,
             topology,
+            placement_spec,
             placement,
             algorithms,
             patterns,
@@ -229,6 +276,7 @@ impl ExperimentConfig {
         })
     }
 
+    /// Read and parse an experiment config file.
     pub fn from_file(path: &str) -> Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
         Self::from_doc(&Doc::parse(&text)?)
@@ -284,6 +332,11 @@ use_xla = false
         );
         assert!(doc.get("", "e").unwrap().as_bool().unwrap());
         assert_eq!(doc.get("s", "f").unwrap().as_str_array().unwrap(), vec!["p,q", "r"]);
+        assert_eq!(doc.get("", "d").unwrap().as_int_array().unwrap(), vec![1, 2, 3]);
+        assert_eq!(doc.get("", "a").unwrap().as_int_array().unwrap(), vec![1]);
+        assert!(doc.get("", "c").unwrap().as_int_array().is_err());
+        assert!(doc.get_bool("", "e", false).unwrap());
+        assert!(doc.get_bool("", "missing", true).unwrap());
     }
 
     #[test]

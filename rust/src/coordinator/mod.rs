@@ -29,13 +29,21 @@ use std::time::Instant;
 /// Snapshot of coordinator state for monitoring.
 #[derive(Clone, Debug)]
 pub struct FabricStats {
+    /// Active routing algorithm.
     pub algorithm: AlgorithmKind,
+    /// Current forwarding-table generation.
     pub table_version: u64,
+    /// Total reroutes performed since startup.
     pub reroutes: u64,
+    /// Currently dead links.
     pub dead_links: usize,
+    /// Total (switch, destination) table entries.
     pub table_entries: usize,
+    /// Wall-clock cost of the last reroute.
     pub last_reroute_micros: u64,
+    /// Entries the last reroute changed (incremental push size).
     pub last_diff_entries: usize,
+    /// Whether the fabric is running on degraded (fault-avoiding) tables.
     pub degraded: bool,
 }
 
@@ -124,6 +132,8 @@ impl State {
 }
 
 impl Coordinator {
+    /// Spawn the leader thread, compute initial tables, and return the
+    /// command handle.
     pub fn start(
         topo: Arc<Topology>,
         types: NodeTypeMap,
@@ -212,24 +222,30 @@ impl Coordinator {
         Ok(Coordinator { tx, join: Some(join) })
     }
 
+    /// Report a link failure; the leader reroutes incrementally.
     pub fn link_down(&self, l: LinkId) {
         let _ = self.tx.send(Command::LinkDown(l));
     }
 
+    /// Report a link recovery; the leader reroutes incrementally.
     pub fn link_up(&self, l: LinkId) {
         let _ = self.tx.send(Command::LinkUp(l));
     }
 
+    /// Switch the routing algorithm live (tables are rebuilt).
     pub fn set_algorithm(&self, k: AlgorithmKind) {
         let _ = self.tx.send(Command::SetAlgorithm(k));
     }
 
+    /// Fetch a monitoring snapshot from the leader.
     pub fn stats(&self) -> Result<FabricStats> {
         let (tx, rx) = channel();
         self.tx.send(Command::Stats(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
         rx.recv().map_err(|_| anyhow!("coordinator stopped"))
     }
 
+    /// Run the §III congestion analysis on the *current* fabric state
+    /// (healthy router or degraded tables).
     pub fn analyze(&self, pattern: Pattern) -> Result<AlgoSummary> {
         let (tx, rx) = channel();
         self.tx
@@ -238,6 +254,7 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("coordinator stopped"))?
     }
 
+    /// Trace flows through the current fabric state.
     pub fn trace(&self, flows: Vec<(Nid, Nid)>) -> Result<Vec<RoutePorts>> {
         let (tx, rx) = channel();
         self.tx
@@ -246,6 +263,7 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("coordinator stopped"))
     }
 
+    /// Stop the leader thread and join it.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Command::Shutdown);
         if let Some(j) = self.join.take() {

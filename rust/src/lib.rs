@@ -5,9 +5,12 @@
 //! García): PGFT topology substrate, the Dmodk/Smodk/Random baselines,
 //! the paper's Gdmodk/Gsmodk contribution, the static congestion metric,
 //! heterogeneous node-type modelling, flow-level and packet-level
-//! simulators, and a BXI-style fabric-manager coordinator. The simulation
-//! hot path runs AOT-compiled JAX/Pallas programs through PJRT (see
-//! `rust/src/runtime`).
+//! simulators, a parallel experiment-sweep engine ([`sweep`]) that turns
+//! the paper's algorithm × pattern × placement grids into one command,
+//! and a BXI-style fabric-manager coordinator. With the `xla` cargo
+//! feature, the simulation hot path runs AOT-compiled JAX/Pallas
+//! programs through PJRT (see `rust/src/runtime`); without it the exact
+//! pure-rust solvers are used.
 //!
 //! Quick taste (the paper's headline numbers):
 //!
@@ -24,6 +27,16 @@
 //! let routes = trace_flows(&topo, &*gdmodk, &flows);
 //! assert_eq!(CongestionReport::compute(&topo, &routes).c_topo(), 1); // §IV optimum
 //! ```
+//!
+//! The same comparison as one declarative sweep over the whole grid:
+//!
+//! ```
+//! use pgft::prelude::*;
+//! let rows = run_sweep(&SweepSpec::paper_grid("case-study"), &SweepOptions::default()).unwrap();
+//! assert!(rows.iter().any(|r| r.summary.algorithm == "gdmodk" && r.summary.c_topo == 1));
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod config;
@@ -35,6 +48,7 @@ pub mod report;
 pub mod routing;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod topology;
 pub mod util;
 
@@ -45,5 +59,6 @@ pub mod prelude {
     pub use crate::patterns::Pattern;
     pub use crate::routing::trace::{trace_flows, trace_route};
     pub use crate::routing::{AlgorithmKind, ForwardingTables, Router};
+    pub use crate::sweep::{run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
     pub use crate::topology::{build_pgft, families, PgftSpec, Topology};
 }

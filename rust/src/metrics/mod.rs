@@ -41,6 +41,7 @@ impl PortStats {
 /// Congestion analysis of a route set over a topology.
 #[derive(Clone, Debug)]
 pub struct CongestionReport {
+    /// Per-output-port statistics, indexed by global `PortId`.
     pub per_port: Vec<PortStats>,
 }
 

@@ -9,25 +9,34 @@ use crate::topology::Topology;
 use anyhow::Result;
 
 /// One row: an algorithm's congestion profile for a pattern.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct AlgoSummary {
+    /// Algorithm name (`AlgorithmKind::as_str`).
     pub algorithm: String,
+    /// Pattern name (`Pattern::name`).
     pub pattern: String,
+    /// Number of flows the pattern generated.
     pub flows: usize,
+    /// The paper's static metric: `max_p min(src(p), dst(p))`.
     pub c_topo: u32,
-    /// Hot ports (C > 1) in total and per level (index 0 = node injection
-    /// level, 1..=h switch levels).
+    /// Hot ports (C > 1) in total.
     pub hot_total: usize,
+    /// Hot ports per level (index 0 = node injection level, 1..=h
+    /// switch levels).
     pub hot_per_level: Vec<usize>,
-    /// Max C per level (same indexing), split (up, down).
+    /// Max `C_p` per level (same indexing), up-ports.
     pub c_max_up: Vec<u32>,
+    /// Max `C_p` per level (same indexing), down-ports.
     pub c_max_down: Vec<u32>,
     /// Used top-level down-ports (the resource §III tracks).
     pub used_top_ports: usize,
+    /// Total top-level down-ports.
     pub total_top_ports: usize,
 }
 
 impl AlgoSummary {
+    /// Route `pattern` with `kind` and summarize the congestion metrics
+    /// (the fused trace+metric path — no per-route allocation).
     pub fn compute(
         topo: &Topology,
         types: &NodeTypeMap,
@@ -42,6 +51,7 @@ impl AlgoSummary {
         Ok(Self::from_report(topo, &rep, kind.as_str(), &pattern.name(), flows.len()))
     }
 
+    /// Summarize an already-computed [`CongestionReport`].
     pub fn from_report(
         topo: &Topology,
         rep: &CongestionReport,

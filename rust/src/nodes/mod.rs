@@ -15,11 +15,17 @@ use std::fmt;
 /// for site-specific classes (e.g. Lustre routers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum NodeType {
+    /// Ordinary compute node (the default type).
     Compute,
+    /// I/O node (storage proxies, Lustre servers, …).
     Io,
+    /// Service node (login, scheduler, metadata).
     Service,
+    /// GPGPU accelerator node.
     Gpgpu,
+    /// FPGA accelerator node.
     Fpga,
+    /// Site-specific class `k`.
     Custom(u8),
 }
 
@@ -41,6 +47,7 @@ impl NodeType {
         }
     }
 
+    /// Parse a CLI/config type name (`io`, `i`, `custom3`, …).
     pub fn parse(s: &str) -> Option<NodeType> {
         match s.to_ascii_lowercase().as_str() {
             "compute" | "c" => Some(NodeType::Compute),
@@ -89,27 +96,33 @@ pub struct NodeTypeMap {
 }
 
 impl NodeTypeMap {
+    /// All `n` nodes of one type.
     pub fn uniform(n: Nid, ty: NodeType) -> Self {
         Self { types: vec![ty; n as usize] }
     }
 
+    /// Wrap an explicit NID-indexed type vector.
     pub fn from_vec(types: Vec<NodeType>) -> Self {
         Self { types }
     }
 
+    /// Number of nodes covered.
     pub fn len(&self) -> usize {
         self.types.len()
     }
 
+    /// Whether the map covers no nodes.
     pub fn is_empty(&self) -> bool {
         self.types.is_empty()
     }
 
+    /// Type of one node.
     #[inline]
     pub fn type_of(&self, nid: Nid) -> NodeType {
         self.types[nid as usize]
     }
 
+    /// Reassign one node's type.
     pub fn set(&mut self, nid: Nid, ty: NodeType) {
         self.types[nid as usize] = ty;
     }
@@ -141,6 +154,7 @@ impl NodeTypeMap {
             .join(" ")
     }
 
+    /// Iterate `(nid, type)` pairs in NID order.
     pub fn iter(&self) -> impl Iterator<Item = (Nid, NodeType)> + '_ {
         self.types.iter().enumerate().map(|(i, &t)| (i as Nid, t))
     }

@@ -15,18 +15,47 @@ pub enum Placement {
     /// "Placing a constant number of secondary nodes of each type at
     /// every leaf" — on the *last* ports, like BXI's reserved optical
     /// ports and the paper's case study (IO ≡ 7 mod 8).
-    LastPortsPerLeaf { ty: NodeType, count: u32 },
+    LastPortsPerLeaf {
+        /// Secondary node type to place.
+        ty: NodeType,
+        /// Nodes per leaf.
+        count: u32,
+    },
     /// Same, but on the first ports of every leaf.
-    FirstPortsPerLeaf { ty: NodeType, count: u32 },
+    FirstPortsPerLeaf {
+        /// Secondary node type to place.
+        ty: NodeType,
+        /// Nodes per leaf.
+        count: u32,
+    },
     /// Every k-th NID fabric-wide (offset, stride).
-    Strided { ty: NodeType, offset: u32, stride: u32 },
+    Strided {
+        /// Secondary node type to place.
+        ty: NodeType,
+        /// First NID to mark.
+        offset: u32,
+        /// NID step between marks.
+        stride: u32,
+    },
     /// All nodes of the last `leaves` leaves — approximates the paper's
     /// "irregular subgroup with secondary nodes connected to the top
     /// switches" without breaking the fat-tree property.
-    DedicatedLeaves { ty: NodeType, leaves: u32 },
+    DedicatedLeaves {
+        /// Secondary node type to place.
+        ty: NodeType,
+        /// How many trailing leaves to dedicate.
+        leaves: u32,
+    },
     /// `count` nodes of type `ty` placed uniformly at random (seeded) —
     /// the "unlucky repartition" scenario of the abstract.
-    Random { ty: NodeType, count: u32, seed: u64 },
+    Random {
+        /// Secondary node type to place.
+        ty: NodeType,
+        /// How many nodes to mark.
+        count: u32,
+        /// Sampling seed.
+        seed: u64,
+    },
     /// Apply several placements in order (later ones overwrite).
     Stack(Vec<Placement>),
 }
@@ -38,6 +67,8 @@ impl Placement {
         Placement::LastPortsPerLeaf { ty: NodeType::Io, count: 1 }
     }
 
+    /// Apply this placement to a topology: unnamed nodes stay
+    /// [`NodeType::Compute`].
     pub fn apply(&self, topo: &Topology) -> Result<NodeTypeMap> {
         let mut map = NodeTypeMap::uniform(topo.num_nodes() as u32, NodeType::Compute);
         self.apply_onto(topo, &mut map)?;

@@ -55,20 +55,24 @@ impl TypeReindex {
         }
     }
 
+    /// gNID of a node.
     #[inline]
     pub fn gnid(&self, nid: Nid) -> Nid {
         self.gnid[nid as usize]
     }
 
+    /// Inverse lookup: the NID holding a gNID.
     #[inline]
     pub fn nid(&self, gnid: Nid) -> Nid {
         self.nid[gnid as usize]
     }
 
+    /// Number of nodes in the bijection.
     pub fn len(&self) -> usize {
         self.gnid.len()
     }
 
+    /// Whether the re-index covers no nodes.
     pub fn is_empty(&self) -> bool {
         self.gnid.is_empty()
     }

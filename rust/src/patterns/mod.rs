@@ -29,29 +29,58 @@ pub enum Pattern {
     /// Compute→IO, dense cross-subgroup reading (§IV): every compute node
     /// sends to every IO node whose top-level digit differs.
     C2ioAll,
-    /// The symmetrical patterns Q of §IV.B's identities: IO→compute.
+    /// The symmetrical pattern Q of §IV.B's identities: IO→compute,
+    /// bijective reading.
     Io2cSym,
+    /// IO→compute, dense cross-subgroup reading.
     Io2cAll,
     /// Generalized bijective type pattern: sources of `src_ty` on each
     /// leaf send to `dst_ty` nodes of the mirrored leaf.
-    TypeBiject { src_ty: NodeType, dst_ty: NodeType },
+    TypeBiject {
+        /// Source node type.
+        src_ty: NodeType,
+        /// Destination node type.
+        dst_ty: NodeType,
+    },
     /// Generalized dense type pattern; `cross_top_only` restricts to
     /// flows whose endpoints differ in the top-level digit.
-    TypeDense { src_ty: NodeType, dst_ty: NodeType, cross_top_only: bool },
+    TypeDense {
+        /// Source node type.
+        src_ty: NodeType,
+        /// Destination node type.
+        dst_ty: NodeType,
+        /// Keep only flows crossing the top level.
+        cross_top_only: bool,
+    },
     /// Every node to every other node.
     AllToAll,
     /// Shift permutation: node i → (i + k) mod N (Zahavi's nonblocking
     /// target for Dmodk on real-life fat-trees).
-    Shift { k: u32 },
+    Shift {
+        /// The shift distance.
+        k: u32,
+    },
     /// All nodes send to `root` (incast).
-    Gather { root: Nid },
+    Gather {
+        /// The collecting node.
+        root: Nid,
+    },
     /// `root` sends to all nodes (outcast).
-    Scatter { root: Nid },
+    Scatter {
+        /// The distributing node.
+        root: Nid,
+    },
     /// Random permutation (derangement not enforced; self-flows dropped).
-    RandPerm { seed: u64 },
+    RandPerm {
+        /// Shuffle seed.
+        seed: u64,
+    },
     /// Every node sends to one of `dsts` hot destinations (chosen
     /// round-robin by source).
-    HotSpot { dsts: u32 },
+    HotSpot {
+        /// Number of hot destination nodes (NIDs `0..dsts`).
+        dsts: u32,
+    },
     /// Reverse every flow of the inner pattern (P ↦ its symmetrical Q).
     Transpose(Box<Pattern>),
 }
@@ -153,6 +182,9 @@ impl Pattern {
         Ok(flows)
     }
 
+    /// Canonical short display name. Parameterless patterns round-trip
+    /// through [`Pattern::parse`] verbatim; parameterized ones display
+    /// with `-` (`shift-1`) while `parse` takes `:` (`shift:1`).
     pub fn name(&self) -> String {
         match self {
             Pattern::C2ioSym => "c2io-sym".into(),

@@ -1,20 +1,26 @@
 //! Generic result tables with text / CSV / JSON emitters — every bench
 //! and CLI command reports through this so EXPERIMENTS.md can quote
-//! machine-readable output.
+//! machine-readable output. The CSV and JSON forms also parse back
+//! ([`Table::from_csv`] / [`Table::from_json`]), which is what lets
+//! sweep results round-trip through files.
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::fmt::Write as _;
 use std::path::Path;
 
 /// A rectangular result table.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Table {
+    /// Heading printed above the text rendering (not part of CSV/JSON).
     pub title: String,
+    /// Column names.
     pub headers: Vec<String>,
+    /// Row-major cells; every row is as wide as `headers`.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// New empty table with the given title and column names.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
         Table {
             title: title.into(),
@@ -23,12 +29,14 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Append a row of anything displayable.
     pub fn row_display<T: std::fmt::Display>(&mut self, cells: &[T]) -> &mut Self {
         let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
         self.row(&v)
@@ -62,6 +70,8 @@ impl Table {
         out
     }
 
+    /// RFC-4180-style CSV: header line + rows; cells containing commas
+    /// or quotes are quoted with doubled inner quotes.
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| {
             if s.contains(',') || s.contains('"') {
@@ -95,9 +105,11 @@ impl Table {
             }
             o
         };
-        // Numbers stay unquoted when they parse as f64 and aren't empty.
+        // Numbers stay unquoted only when the cell is a token JSON's
+        // number grammar accepts (Rust's f64 parser is laxer: "inf",
+        // "NaN", "+4", ".5" and "1." all parse but are not JSON).
         let cell = |s: &str| {
-            if !s.is_empty() && s.parse::<f64>().is_ok() {
+            if is_json_number(s) {
                 s.to_string()
             } else {
                 format!("\"{}\"", esc(s))
@@ -121,6 +133,8 @@ impl Table {
         out
     }
 
+    /// Write the table to a file in the given format (`csv`, `json`, or
+    /// anything else for aligned text).
     pub fn write(&self, path: impl AsRef<Path>, format: &str) -> Result<()> {
         let body = match format {
             "csv" => self.to_csv(),
@@ -129,6 +143,258 @@ impl Table {
         };
         std::fs::write(path.as_ref(), body)
             .with_context(|| format!("write {}", path.as_ref().display()))
+    }
+
+    /// Parse the CSV this module emits: a header line followed by data
+    /// rows; quoted cells may contain commas and doubled quotes. Cells
+    /// never span lines (the emitter never produces embedded newlines).
+    /// The title is not representable in CSV and comes back empty.
+    pub fn from_csv(text: &str) -> Result<Table> {
+        let mut lines = text.lines();
+        let header_line = lines.next().context("empty CSV input")?;
+        let headers = parse_csv_record(header_line)?;
+        let mut t = Table { title: String::new(), headers, rows: Vec::new() };
+        for line in lines {
+            // An empty line is noise for multi-column tables, but for a
+            // single-column table it is a legitimate row holding one
+            // empty cell (the round-trip of `[""]`).
+            if line.is_empty() && t.headers.len() != 1 {
+                continue;
+            }
+            let cells = parse_csv_record(line)?;
+            ensure!(
+                cells.len() == t.headers.len(),
+                "CSV row has {} cells, header has {}: {line:?}",
+                cells.len(),
+                t.headers.len()
+            );
+            t.rows.push(cells);
+        }
+        Ok(t)
+    }
+
+    /// Parse the JSON array-of-flat-objects form [`Table::to_json`]
+    /// emits. Headers are taken from the first object's keys (so at
+    /// least one row is required), and unquoted number cells keep their
+    /// literal text — `from_json(to_json(t))` reproduces the original
+    /// cell strings byte-for-byte. The title comes back empty.
+    pub fn from_json(text: &str) -> Result<Table> {
+        let mut p = JsonParser { s: text.as_bytes(), i: 0 };
+        let mut headers: Vec<String> = Vec::new();
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        p.skip_ws();
+        p.expect(b'[')?;
+        p.skip_ws();
+        if !p.eat(b']') {
+            loop {
+                p.skip_ws();
+                p.expect(b'{')?;
+                let mut keys = Vec::new();
+                let mut cells = Vec::new();
+                p.skip_ws();
+                if !p.eat(b'}') {
+                    loop {
+                        p.skip_ws();
+                        keys.push(p.string()?);
+                        p.skip_ws();
+                        p.expect(b':')?;
+                        p.skip_ws();
+                        cells.push(p.value()?);
+                        p.skip_ws();
+                        if p.eat(b',') {
+                            continue;
+                        }
+                        p.expect(b'}')?;
+                        break;
+                    }
+                }
+                if headers.is_empty() {
+                    headers = keys;
+                } else {
+                    ensure!(keys == headers, "object keys {keys:?} != headers {headers:?}");
+                }
+                rows.push(cells);
+                p.skip_ws();
+                if p.eat(b',') {
+                    continue;
+                }
+                p.expect(b']')?;
+                break;
+            }
+        }
+        ensure!(!headers.is_empty(), "empty JSON table: headers live in the rows");
+        Ok(Table { title: String::new(), headers, rows })
+    }
+}
+
+/// Whether `s` matches JSON's number grammar exactly
+/// (`-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`).
+fn is_json_number(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = 0;
+    if b.first() == Some(&b'-') {
+        i += 1;
+    }
+    match b.get(i) {
+        Some(b'0') => i += 1,
+        Some(c) if c.is_ascii_digit() => {
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        let start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == start {
+            return false;
+        }
+    }
+    if matches!(b.get(i), Some(b'e') | Some(b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+') | Some(b'-')) {
+            i += 1;
+        }
+        let start = i;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == start {
+            return false;
+        }
+    }
+    i == b.len()
+}
+
+/// Split one CSV line into unescaped cells.
+fn parse_csv_record(line: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        cur.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => cur.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => out.push(std::mem::take(&mut cur)),
+                c => cur.push(c),
+            }
+        }
+    }
+    ensure!(!in_quotes, "unterminated quoted CSV cell in {line:?}");
+    out.push(cur);
+    Ok(out)
+}
+
+/// Hand-rolled scanner for the JSON subset [`Table::to_json`] emits
+/// (arrays of flat objects; string values with the emitter's escapes;
+/// raw number tokens kept verbatim).
+struct JsonParser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.i < self.s.len() && self.s[self.i] == b {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        ensure!(self.eat(b), "expected {:?} at byte {}", b as char, self.i);
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            ensure!(self.i < self.s.len(), "unterminated JSON string");
+            let c = self.s[self.i];
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    ensure!(self.i < self.s.len(), "dangling escape");
+                    let e = self.s[self.i];
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'u' => {
+                            ensure!(self.i + 4 <= self.s.len(), "short \\u escape");
+                            let hex = std::str::from_utf8(&self.s[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            out.push(char::from_u32(code).context("bad \\u code point")?);
+                            self.i += 4;
+                        }
+                        other => anyhow::bail!("unsupported escape \\{}", other as char),
+                    }
+                }
+                c if c < 0x80 => out.push(c as char),
+                c => {
+                    // Copy a full multi-byte UTF-8 sequence.
+                    let start = self.i - 1;
+                    let len = if c >= 0xF0 {
+                        4
+                    } else if c >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    ensure!(start + len <= self.s.len(), "truncated UTF-8 sequence");
+                    out.push_str(std::str::from_utf8(&self.s[start..start + len])?);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    /// A cell value: a string, or a raw (number-like) token kept
+    /// verbatim so numeric cells round-trip exactly.
+    fn value(&mut self) -> Result<String> {
+        if self.i < self.s.len() && self.s[self.i] == b'"' {
+            return self.string();
+        }
+        let start = self.i;
+        while self.i < self.s.len()
+            && !matches!(self.s[self.i], b',' | b'}' | b']')
+            && !self.s[self.i].is_ascii_whitespace()
+        {
+            self.i += 1;
+        }
+        ensure!(self.i > start, "empty JSON value at byte {start}");
+        Ok(std::str::from_utf8(&self.s[start..self.i])?.to_string())
     }
 }
 
@@ -182,5 +448,71 @@ mod tests {
     #[should_panic(expected = "row width mismatch")]
     fn width_checked() {
         Table::new("x", &["a", "b"]).row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_parses_back() {
+        let t = sample();
+        let p = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(p.headers, t.headers);
+        assert_eq!(p.rows, t.rows, "quoted commas and doubled quotes survive");
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let t = sample();
+        let p = Table::from_json(&t.to_json()).unwrap();
+        assert_eq!(p.headers, t.headers);
+        assert_eq!(p.rows, t.rows, "number cells keep their literal text");
+        // And the re-emitted JSON is byte-identical.
+        assert_eq!(p.to_json(), t.to_json());
+    }
+
+    #[test]
+    fn empty_cells_roundtrip() {
+        let mut t = Table::new("", &["a", "b", "c"]);
+        t.row_display(&["", "0.5", "x,y"]);
+        t.row_display(&["", "", ""]);
+        assert_eq!(Table::from_csv(&t.to_csv()).unwrap().rows, t.rows);
+        assert_eq!(Table::from_json(&t.to_json()).unwrap().rows, t.rows);
+        // Single-column table with an empty cell: the row serializes to
+        // an empty CSV line and must not be dropped.
+        let mut one = Table::new("", &["only"]);
+        one.row_display(&[""]);
+        one.row_display(&["x"]);
+        assert_eq!(Table::from_csv(&one.to_csv()).unwrap().rows, one.rows);
+    }
+
+    #[test]
+    fn non_json_numbers_are_quoted() {
+        // Rust's f64 parser accepts all of these, but JSON's number
+        // grammar only accepts the last four: the rest must be quoted
+        // for the emitted document to stay valid JSON — and all of them
+        // must round-trip.
+        let quoted = ["inf", "NaN", "-inf", "+4", ".5", "1.", "01", "1e"];
+        let raw = ["1.5", "-2", "0", "6.02e23"];
+        let mut t = Table::new("", &["v"]);
+        for v in quoted.iter().chain(raw.iter()) {
+            t.row_display(&[*v]);
+        }
+        let json = t.to_json();
+        for v in quoted {
+            assert!(json.contains(&format!("\"{v}\"")), "{v} should be quoted in {json}");
+        }
+        for v in raw {
+            assert!(json.contains(&format!(": {v}")), "{v} should be raw in {json}");
+        }
+        assert_eq!(Table::from_json(&json).unwrap().rows, t.rows);
+    }
+
+    #[test]
+    fn malformed_inputs_rejected() {
+        assert!(Table::from_csv("").is_err());
+        assert!(Table::from_csv("a,b\n\"unterminated").is_err());
+        assert!(Table::from_csv("a,b\n1,2,3").is_err());
+        assert!(Table::from_json("").is_err());
+        assert!(Table::from_json("[\n]\n").is_err(), "headers live in the rows");
+        assert!(Table::from_json("[{\"a\": 1}, {\"b\": 2}]").is_err(), "key mismatch");
+        assert!(Table::from_json("[{\"a\": \"oops]").is_err());
     }
 }

@@ -25,10 +25,12 @@ pub struct FaultSet {
 }
 
 impl FaultSet {
+    /// A fully healthy fabric (no dead links).
     pub fn none(topo: &Topology) -> FaultSet {
         FaultSet { dead: vec![false; topo.links.len()], count: 0 }
     }
 
+    /// Mark a link dead (idempotent).
     pub fn kill(&mut self, link: LinkId) {
         if !self.dead[link] {
             self.dead[link] = true;
@@ -36,6 +38,7 @@ impl FaultSet {
         }
     }
 
+    /// Mark a link healthy again (idempotent).
     pub fn revive(&mut self, link: LinkId) {
         if self.dead[link] {
             self.dead[link] = false;
@@ -43,15 +46,18 @@ impl FaultSet {
         }
     }
 
+    /// Whether a link is currently dead.
     #[inline]
     pub fn is_dead(&self, link: LinkId) -> bool {
         self.dead[link]
     }
 
+    /// Number of dead links.
     pub fn num_dead(&self) -> usize {
         self.count
     }
 
+    /// Ids of all dead links, ascending.
     pub fn dead_links(&self) -> Vec<LinkId> {
         self.dead
             .iter()

@@ -35,6 +35,7 @@ use std::sync::Arc;
 
 /// The routing decision interface: enough to derive any minimal route.
 pub trait Router: Send + Sync {
+    /// Human-readable algorithm name (seeds included where relevant).
     fn name(&self) -> String;
 
     /// Injection port of `src` (among its `w_1·p_1` node up-ports).
@@ -56,17 +57,23 @@ pub trait Router: Send + Sync {
 /// Algorithm selector, the user-facing name set.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AlgorithmKind {
+    /// Seeded random per-destination tables (§I.D.1).
     Random,
     /// The paper's §III.D per-route dispersion model (see
     /// [`random::PerPairRandom`]).
     RandomPair,
+    /// Destination-mod-k closed form (Zahavi).
     Dmodk,
+    /// Source-mod-k closed form.
     Smodk,
+    /// Grouped (type-reindexed) Dmodk — the paper's contribution.
     Gdmodk,
+    /// Grouped (type-reindexed) Smodk.
     Gsmodk,
 }
 
 impl AlgorithmKind {
+    /// Every algorithm, in canonical comparison order.
     pub const ALL: [AlgorithmKind; 6] = [
         AlgorithmKind::Random,
         AlgorithmKind::RandomPair,
@@ -76,6 +83,7 @@ impl AlgorithmKind {
         AlgorithmKind::Gsmodk,
     ];
 
+    /// Parse a CLI/config algorithm name.
     pub fn parse(s: &str) -> Result<AlgorithmKind> {
         match s.to_ascii_lowercase().as_str() {
             "random" => Ok(AlgorithmKind::Random),
@@ -88,6 +96,7 @@ impl AlgorithmKind {
         }
     }
 
+    /// Canonical lower-case name (inverse of [`AlgorithmKind::parse`]).
     pub fn as_str(&self) -> &'static str {
         match self {
             AlgorithmKind::Random => "random",
@@ -99,6 +108,7 @@ impl AlgorithmKind {
         }
     }
 
+    /// Whether this is one of the paper's type-grouped variants.
     pub fn is_grouped(&self) -> bool {
         matches!(self, AlgorithmKind::Gdmodk | AlgorithmKind::Gsmodk)
     }

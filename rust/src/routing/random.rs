@@ -27,6 +27,7 @@ pub struct RandomRouter {
 }
 
 impl RandomRouter {
+    /// Materialize seeded random per-destination choices for `topo`.
     pub fn new(topo: &Topology, seed: u64) -> RandomRouter {
         let n = topo.num_nodes();
         let ns = topo.num_switches();
@@ -91,6 +92,7 @@ pub struct PerPairRandom {
 }
 
 impl PerPairRandom {
+    /// Stateless per-pair dispersive router with the given seed.
     pub fn new(seed: u64) -> PerPairRandom {
         PerPairRandom { seed }
     }

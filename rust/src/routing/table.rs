@@ -24,6 +24,7 @@ pub struct ForwardingTables {
     pub version: u64,
 }
 
+/// Sentinel for "no output port" in partial/degraded tables.
 pub const UNROUTED: PortId = usize::MAX;
 
 impl ForwardingTables {

@@ -14,8 +14,11 @@ use crate::topology::{Endpoint, Nid, PortId, Topology};
 /// down-port to the destination node.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RoutePorts {
+    /// Source node id.
     pub src: Nid,
+    /// Destination node id.
     pub dst: Nid,
+    /// Output ports occupied, in traversal order.
     pub ports: Vec<PortId>,
 }
 
@@ -25,6 +28,7 @@ impl RoutePorts {
         self.ports.len()
     }
 
+    /// True for self-routes (`src == dst`), which occupy no ports.
     pub fn is_empty(&self) -> bool {
         self.ports.is_empty()
     }

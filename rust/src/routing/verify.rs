@@ -13,10 +13,15 @@ use anyhow::{ensure, Result};
 /// Verification report over a set of traced routes.
 #[derive(Clone, Debug, Default)]
 pub struct VerifyReport {
+    /// Routes checked.
     pub flows: usize,
+    /// Routes whose hop count equals the minimal up*/down* distance.
     pub minimal: usize,
+    /// Routes that never go up after going down.
     pub valley_free: usize,
+    /// Distinct edges of the channel dependency graph.
     pub cdg_edges: usize,
+    /// Whether the CDG is acyclic (no credit-loop deadlock possible).
     pub deadlock_free: bool,
 }
 

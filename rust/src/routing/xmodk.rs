@@ -31,7 +31,9 @@ use std::sync::Arc;
 /// Which endpoint's NID feeds the modulo formulas.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Basis {
+    /// Key on the destination NID (Dmodk / Gdmodk).
     Dest,
+    /// Key on the source NID (Smodk / Gsmodk).
     Source,
 }
 
@@ -43,10 +45,12 @@ pub struct Xmodk {
 }
 
 impl Xmodk {
+    /// Plain (ungrouped) Dmodk or Smodk.
     pub fn plain(basis: Basis) -> Xmodk {
         Xmodk { basis, reindex: None }
     }
 
+    /// The paper's grouped variant: identical formulas over gNIDs.
     pub fn grouped(basis: Basis, reindex: Arc<TypeReindex>) -> Xmodk {
         Xmodk { basis, reindex: Some(reindex) }
     }

@@ -8,214 +8,331 @@
 //! Executables are compiled once per artifact and cached; the request
 //! path performs a single `execute` per fair-rate solve (the iteration
 //! loop is folded into the HLO as a `while`).
-
-use anyhow::{anyhow, bail, ensure, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+//!
+//! # The `xla` cargo feature
+//!
+//! The real implementation needs the vendored `xla` (PJRT) crate, which
+//! only exists inside the AOT image, so it is gated behind the `xla`
+//! cargo feature (see `rust/Cargo.toml`). Without the feature this
+//! module compiles to a stub whose constructors fail with a clear
+//! message; every consumer ([`crate::sim::simulate_flow_level`], the
+//! CLI, the benches) falls back to the exact pure-rust solvers, and the
+//! default `cargo test` needs no AOT artifacts at all.
 
 /// One entry of `artifacts/manifest.txt`: `name kind F P iters`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ArtifactInfo {
+    /// Artifact file stem (`<name>.hlo.txt`).
     pub name: String,
+    /// Program kind: `fairrate` or `portload`.
     pub kind: String,
+    /// Compiled (padded) flow-dimension size.
     pub flows: usize,
+    /// Compiled (padded) port-dimension size.
     pub ports: usize,
+    /// Solver iterations folded into the HLO `while` loop.
     pub iters: usize,
 }
 
-/// A compiled artifact plus its static problem shape.
-pub struct Executable {
-    pub info: ArtifactInfo,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::ArtifactInfo;
+    use anyhow::{anyhow, bail, ensure, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-/// PJRT CPU client + executable cache over an artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Vec<ArtifactInfo>,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Open the artifact directory (reads `manifest.txt`; compiles lazily).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!("{}: run `make artifacts` first", manifest_path.display())
-        })?;
-        let mut manifest = Vec::new();
-        for line in text.lines().filter(|l| !l.trim().is_empty()) {
-            let f: Vec<&str> = line.split_whitespace().collect();
-            ensure!(f.len() == 5, "bad manifest line: {line:?}");
-            manifest.push(ArtifactInfo {
-                name: f[0].to_string(),
-                kind: f[1].to_string(),
-                flows: f[2].parse()?,
-                ports: f[3].parse()?,
-                iters: f[4].parse()?,
-            });
-        }
-        ensure!(!manifest.is_empty(), "empty artifact manifest");
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    /// A compiled artifact plus its static problem shape.
+    pub struct Executable {
+        /// Manifest entry describing the compiled shapes.
+        pub info: ArtifactInfo,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Default artifact location: `$PGFT_ARTIFACTS`, CWD, or the crate dir.
-    pub fn open_default() -> Result<Runtime> {
-        if let Ok(dir) = std::env::var("PGFT_ARTIFACTS") {
-            return Runtime::open(dir);
-        }
-        for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
-            if Path::new(cand).join("manifest.txt").exists() {
-                return Runtime::open(cand);
+    /// PJRT CPU client + executable cache over an artifact directory.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        manifest: Vec<ArtifactInfo>,
+        cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    }
+
+    impl Runtime {
+        /// Open the artifact directory (reads `manifest.txt`; compiles lazily).
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest_path = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+                format!("{}: run `make artifacts` first", manifest_path.display())
+            })?;
+            let mut manifest = Vec::new();
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                let f: Vec<&str> = line.split_whitespace().collect();
+                ensure!(f.len() == 5, "bad manifest line: {line:?}");
+                manifest.push(ArtifactInfo {
+                    name: f[0].to_string(),
+                    kind: f[1].to_string(),
+                    flows: f[2].parse()?,
+                    ports: f[3].parse()?,
+                    iters: f[4].parse()?,
+                });
             }
+            ensure!(!manifest.is_empty(), "empty artifact manifest");
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
         }
-        bail!("artifacts/manifest.txt not found; run `make artifacts`")
-    }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn manifest(&self) -> &[ArtifactInfo] {
-        &self.manifest
-    }
-
-    /// Load (compile + cache) an artifact by name.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+        /// Default artifact location: `$PGFT_ARTIFACTS`, CWD, or the crate dir.
+        pub fn open_default() -> Result<Runtime> {
+            if let Ok(dir) = std::env::var("PGFT_ARTIFACTS") {
+                return Runtime::open(dir);
+            }
+            for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+                if Path::new(cand).join("manifest.txt").exists() {
+                    return Runtime::open(cand);
+                }
+            }
+            bail!("artifacts/manifest.txt not found; run `make artifacts`")
         }
-        let info = self
-            .manifest
-            .iter()
-            .find(|a| a.name == name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
-            .clone();
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let arc = std::sync::Arc::new(Executable { info, exe });
-        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
-        Ok(arc)
-    }
 
-    /// Smallest artifact of `kind` fitting (flows, ports); errors if none.
-    pub fn pick(&self, kind: &str, flows: usize, ports: usize) -> Result<ArtifactInfo> {
-        self.manifest
-            .iter()
-            .filter(|a| a.kind == kind && a.flows >= flows && a.ports >= ports)
-            .min_by_key(|a| a.flows * a.ports)
-            .cloned()
-            .ok_or_else(|| {
-                anyhow!(
-                    "no {kind} artifact fits F={flows}, P={ports} (have: {:?}); \
-                     add a shape to python/compile/aot.py SHAPES",
-                    self.manifest.iter().map(|a| (a.flows, a.ports)).collect::<Vec<_>>()
-                )
-            })
-    }
-
-    /// Run a fair-rate solve: pad the dense incidence `a` (F×P
-    /// row-major), `cap` and `valid` to the artifact shape, execute, and
-    /// return the first `flows` rates.
-    pub fn solve_fairrate(
-        &self,
-        a: &[f32],
-        flows: usize,
-        ports: usize,
-        cap: &[f32],
-        valid: &[f32],
-    ) -> Result<Vec<f32>> {
-        ensure!(a.len() == flows * ports, "incidence shape mismatch");
-        ensure!(cap.len() == ports && valid.len() == flows, "vector shape mismatch");
-        let info = self.pick("fairrate", flows, ports)?;
-        let exe = self.load(&info.name)?;
-        let (pf, pp) = (info.flows, info.ports);
-
-        // Pad row-major (F,P) → (PF,PP). Padding capacity must be
-        // positive so padded ports never become a (zero-capacity)
-        // bottleneck; padding flows are marked invalid.
-        let mut a_pad = vec![0f32; pf * pp];
-        for f in 0..flows {
-            a_pad[f * pp..f * pp + ports].copy_from_slice(&a[f * ports..(f + 1) * ports]);
+        /// PJRT platform name (`cpu` in the AOT image).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let mut cap_pad = vec![1f32; pp];
-        cap_pad[..ports].copy_from_slice(cap);
-        let mut valid_pad = vec![0f32; pf];
-        valid_pad[..flows].copy_from_slice(valid);
 
-        let lit_a = xla::Literal::vec1(&a_pad)
-            .reshape(&[pf as i64, pp as i64])
-            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
-        let lit_cap = xla::Literal::vec1(&cap_pad);
-        let lit_valid = xla::Literal::vec1(&valid_pad);
-
-        let result = exe
-            .exe
-            .execute::<xla::Literal>(&[lit_a, lit_cap, lit_valid])
-            .map_err(|e| anyhow!("execute {}: {e:?}", info.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let (rates, frozen) = lit.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let rates = rates.to_vec::<f32>().map_err(|e| anyhow!("rates: {e:?}"))?;
-        let frozen = frozen.to_vec::<f32>().map_err(|e| anyhow!("frozen: {e:?}"))?;
-        ensure!(
-            frozen[..flows].iter().all(|&x| x > 0.5),
-            "solver did not converge within {} iterations",
-            info.iters
-        );
-        Ok(rates[..flows].to_vec())
-    }
-
-    /// Run the standalone dual contraction (portload artifact):
-    /// returns (load, cnt) for the first `ports` entries.
-    pub fn port_load(
-        &self,
-        a: &[f32],
-        flows: usize,
-        ports: usize,
-        rates: &[f32],
-        active: &[f32],
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
-        ensure!(a.len() == flows * ports, "incidence shape mismatch");
-        let info = self.pick("portload", flows, ports)?;
-        let exe = self.load(&info.name)?;
-        let (pf, pp) = (info.flows, info.ports);
-        let mut a_pad = vec![0f32; pf * pp];
-        for f in 0..flows {
-            a_pad[f * pp..f * pp + ports].copy_from_slice(&a[f * ports..(f + 1) * ports]);
+        /// The parsed artifact manifest.
+        pub fn manifest(&self) -> &[ArtifactInfo] {
+            &self.manifest
         }
-        let mut r_pad = vec![0f32; pf];
-        r_pad[..flows].copy_from_slice(rates);
-        let mut u_pad = vec![0f32; pf];
-        u_pad[..flows].copy_from_slice(active);
 
-        let lit_a = xla::Literal::vec1(&a_pad)
-            .reshape(&[pf as i64, pp as i64])
-            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
-        let result = exe
-            .exe
-            .execute::<xla::Literal>(&[lit_a, xla::Literal::vec1(&r_pad), xla::Literal::vec1(&u_pad)])
-            .map_err(|e| anyhow!("execute {}: {e:?}", info.name))?;
-        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
-        let (load, cnt) = lit.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let load = load.to_vec::<f32>().map_err(|e| anyhow!("load: {e:?}"))?;
-        let cnt = cnt.to_vec::<f32>().map_err(|e| anyhow!("cnt: {e:?}"))?;
-        Ok((load[..ports].to_vec(), cnt[..ports].to_vec()))
+        /// Load (compile + cache) an artifact by name.
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let info = self
+                .manifest
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            let arc = std::sync::Arc::new(Executable { info, exe });
+            self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+            Ok(arc)
+        }
+
+        /// Smallest artifact of `kind` fitting (flows, ports); errors if none.
+        pub fn pick(&self, kind: &str, flows: usize, ports: usize) -> Result<ArtifactInfo> {
+            self.manifest
+                .iter()
+                .filter(|a| a.kind == kind && a.flows >= flows && a.ports >= ports)
+                .min_by_key(|a| a.flows * a.ports)
+                .cloned()
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no {kind} artifact fits F={flows}, P={ports} (have: {:?}); \
+                         add a shape to python/compile/aot.py SHAPES",
+                        self.manifest.iter().map(|a| (a.flows, a.ports)).collect::<Vec<_>>()
+                    )
+                })
+        }
+
+        /// Run a fair-rate solve: pad the dense incidence `a` (F×P
+        /// row-major), `cap` and `valid` to the artifact shape, execute, and
+        /// return the first `flows` rates.
+        pub fn solve_fairrate(
+            &self,
+            a: &[f32],
+            flows: usize,
+            ports: usize,
+            cap: &[f32],
+            valid: &[f32],
+        ) -> Result<Vec<f32>> {
+            ensure!(a.len() == flows * ports, "incidence shape mismatch");
+            ensure!(cap.len() == ports && valid.len() == flows, "vector shape mismatch");
+            let info = self.pick("fairrate", flows, ports)?;
+            let exe = self.load(&info.name)?;
+            let (pf, pp) = (info.flows, info.ports);
+
+            // Pad row-major (F,P) → (PF,PP). Padding capacity must be
+            // positive so padded ports never become a (zero-capacity)
+            // bottleneck; padding flows are marked invalid.
+            let mut a_pad = vec![0f32; pf * pp];
+            for f in 0..flows {
+                a_pad[f * pp..f * pp + ports].copy_from_slice(&a[f * ports..(f + 1) * ports]);
+            }
+            let mut cap_pad = vec![1f32; pp];
+            cap_pad[..ports].copy_from_slice(cap);
+            let mut valid_pad = vec![0f32; pf];
+            valid_pad[..flows].copy_from_slice(valid);
+
+            let lit_a = xla::Literal::vec1(&a_pad)
+                .reshape(&[pf as i64, pp as i64])
+                .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+            let lit_cap = xla::Literal::vec1(&cap_pad);
+            let lit_valid = xla::Literal::vec1(&valid_pad);
+
+            let result = exe
+                .exe
+                .execute::<xla::Literal>(&[lit_a, lit_cap, lit_valid])
+                .map_err(|e| anyhow!("execute {}: {e:?}", info.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let (rates, frozen) = lit.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let rates = rates.to_vec::<f32>().map_err(|e| anyhow!("rates: {e:?}"))?;
+            let frozen = frozen.to_vec::<f32>().map_err(|e| anyhow!("frozen: {e:?}"))?;
+            ensure!(
+                frozen[..flows].iter().all(|&x| x > 0.5),
+                "solver did not converge within {} iterations",
+                info.iters
+            );
+            Ok(rates[..flows].to_vec())
+        }
+
+        /// Run the standalone dual contraction (portload artifact):
+        /// returns (load, cnt) for the first `ports` entries.
+        pub fn port_load(
+            &self,
+            a: &[f32],
+            flows: usize,
+            ports: usize,
+            rates: &[f32],
+            active: &[f32],
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
+            ensure!(a.len() == flows * ports, "incidence shape mismatch");
+            let info = self.pick("portload", flows, ports)?;
+            let exe = self.load(&info.name)?;
+            let (pf, pp) = (info.flows, info.ports);
+            let mut a_pad = vec![0f32; pf * pp];
+            for f in 0..flows {
+                a_pad[f * pp..f * pp + ports].copy_from_slice(&a[f * ports..(f + 1) * ports]);
+            }
+            let mut r_pad = vec![0f32; pf];
+            r_pad[..flows].copy_from_slice(rates);
+            let mut u_pad = vec![0f32; pf];
+            u_pad[..flows].copy_from_slice(active);
+
+            let lit_a = xla::Literal::vec1(&a_pad)
+                .reshape(&[pf as i64, pp as i64])
+                .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+            let result = exe
+                .exe
+                .execute::<xla::Literal>(&[
+                    lit_a,
+                    xla::Literal::vec1(&r_pad),
+                    xla::Literal::vec1(&u_pad),
+                ])
+                .map_err(|e| anyhow!("execute {}: {e:?}", info.name))?;
+            let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+            let (load, cnt) = lit.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let load = load.to_vec::<f32>().map_err(|e| anyhow!("load: {e:?}"))?;
+            let cnt = cnt.to_vec::<f32>().map_err(|e| anyhow!("cnt: {e:?}"))?;
+            Ok((load[..ports].to_vec(), cnt[..ports].to_vec()))
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::{Executable, Runtime};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::ArtifactInfo;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+    use std::sync::Arc;
+
+    const DISABLED: &str =
+        "PJRT runtime disabled: this binary was built without the `xla` cargo feature. \
+         To execute the compiled JAX/Pallas programs, rebuild inside the AOT image: \
+         enable the vendored dependency in rust/Cargo.toml (uncomment the `xla` line \
+         and set the feature to `xla = [\"dep:xla\"]`), run `make artifacts`, then \
+         `cargo build --release --features xla`. The exact pure-rust solvers remain \
+         fully available without it.";
+
+    /// Placeholder for the compiled-artifact handle (never constructed
+    /// without the `xla` feature).
+    pub struct Executable {
+        /// Manifest entry describing the compiled shapes.
+        pub info: ArtifactInfo,
+    }
+
+    /// Stub runtime: the API of the real one, with constructors that
+    /// fail with a clear build-configuration message.
+    pub struct Runtime {
+        _unconstructible: (),
+    }
+
+    impl Runtime {
+        /// Always fails: the `xla` feature is disabled.
+        pub fn open(_dir: impl AsRef<Path>) -> Result<Runtime> {
+            bail!(DISABLED)
+        }
+
+        /// Always fails: the `xla` feature is disabled.
+        pub fn open_default() -> Result<Runtime> {
+            bail!(DISABLED)
+        }
+
+        /// Unreachable (no stub `Runtime` can be constructed).
+        pub fn platform(&self) -> String {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        /// Unreachable; typed to match the real runtime.
+        pub fn manifest(&self) -> &[ArtifactInfo] {
+            &[]
+        }
+
+        /// Always fails: the `xla` feature is disabled.
+        pub fn load(&self, _name: &str) -> Result<Arc<Executable>> {
+            bail!(DISABLED)
+        }
+
+        /// Always fails: the `xla` feature is disabled.
+        pub fn pick(&self, _kind: &str, _flows: usize, _ports: usize) -> Result<ArtifactInfo> {
+            bail!(DISABLED)
+        }
+
+        /// Always fails: the `xla` feature is disabled.
+        pub fn solve_fairrate(
+            &self,
+            _a: &[f32],
+            _flows: usize,
+            _ports: usize,
+            _cap: &[f32],
+            _valid: &[f32],
+        ) -> Result<Vec<f32>> {
+            bail!(DISABLED)
+        }
+
+        /// Always fails: the `xla` feature is disabled.
+        pub fn port_load(
+            &self,
+            _a: &[f32],
+            _flows: usize,
+            _ports: usize,
+            _rates: &[f32],
+            _active: &[f32],
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
+            bail!(DISABLED)
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{Executable, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -223,6 +340,14 @@ mod tests {
 
     fn runtime() -> Option<Runtime> {
         Runtime::open_default().ok()
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_errors_mention_the_feature() {
+        let err = Runtime::open_default().unwrap_err().to_string();
+        assert!(err.contains("xla"), "{err}");
+        assert!(err.contains("cargo"), "{err}");
     }
 
     #[test]

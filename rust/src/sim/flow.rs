@@ -20,6 +20,8 @@ pub struct IncidenceMatrix {
 }
 
 impl IncidenceMatrix {
+    /// Build the dense matrix from traced routes, compressing columns to
+    /// the ports the routes actually use.
     pub fn from_routes(topo: &Topology, routes: &[RoutePorts]) -> IncidenceMatrix {
         let mut col_of = vec![usize::MAX; topo.num_ports()];
         let mut used_ports = Vec::new();
@@ -42,18 +44,22 @@ impl IncidenceMatrix {
         IncidenceMatrix { dense, flows, used_ports, col_of }
     }
 
+    /// Number of rows (flows).
     pub fn num_flows(&self) -> usize {
         self.flows
     }
 
+    /// Number of columns (used ports).
     pub fn num_ports(&self) -> usize {
         self.used_ports.len()
     }
 
+    /// Row-major dense 0/1 data, `num_flows() × num_ports()`.
     pub fn dense(&self) -> &[f32] {
         &self.dense
     }
 
+    /// One matrix entry.
     #[inline]
     pub fn at(&self, flow: usize, col: usize) -> f32 {
         self.dense[flow * self.used_ports.len() + col]

@@ -28,13 +28,17 @@ use anyhow::Result;
 /// Flow-level simulation summary for one (algorithm, pattern) cell.
 #[derive(Clone, Debug)]
 pub struct SimReport {
+    /// Algorithm name.
     pub algorithm: String,
+    /// Pattern name.
     pub pattern: String,
+    /// Number of flows simulated.
     pub flows: usize,
     /// Sum of max-min fair rates (links normalized to capacity 1).
     pub aggregate_throughput: f64,
     /// Worst flow rate — the pattern's completion is bound by it.
     pub min_rate: f64,
+    /// Mean flow rate.
     pub mean_rate: f64,
     /// Time to complete one unit of data per flow: 1 / min_rate.
     pub completion_time: f64,

@@ -13,6 +13,7 @@ use crate::routing::trace::RoutePorts;
 use crate::topology::Topology;
 use std::collections::VecDeque;
 
+/// Tunables of the discrete-time packet simulation.
 #[derive(Clone, Debug)]
 pub struct PacketSimConfig {
     /// Packets per flow message.
@@ -29,6 +30,7 @@ impl Default for PacketSimConfig {
     }
 }
 
+/// Outcome of one packet-level simulation run.
 #[derive(Clone, Debug)]
 pub struct PacketSimResult {
     /// Slot at which the last packet arrived.
@@ -50,6 +52,7 @@ struct Packet {
     #[allow(dead_code)] seq: u32, // kept for tracing/debug dumps
 }
 
+/// Discrete-time simulator over a fixed set of traced routes.
 pub struct PacketSim<'a> {
     topo: &'a Topology,
     routes: &'a [RoutePorts],
@@ -57,10 +60,12 @@ pub struct PacketSim<'a> {
 }
 
 impl<'a> PacketSim<'a> {
+    /// Set up a simulation of `routes` on `topo`.
     pub fn new(topo: &'a Topology, routes: &'a [RoutePorts], cfg: PacketSimConfig) -> Self {
         PacketSim { topo, routes, cfg }
     }
 
+    /// Run until every message is delivered (or `max_slots` elapses).
     pub fn run(&self) -> PacketSimResult {
         let nf = self.routes.len();
         let np = self.topo.num_ports();

@@ -1,0 +1,49 @@
+//! Declarative experiment-grid sweeps — the paper's "variety of
+//! situations" methodology as a first-class, parallel subsystem.
+//!
+//! The paper's evidence is a grid: routing **algorithms** × traffic
+//! **patterns** × node-type **placements** (× topologies × seeds),
+//! compared on the static congestion metric `C_topo` and on simulated
+//! throughput. The seed repo hand-rolled that grid separately in every
+//! example and bench; this module makes it one declarative object:
+//!
+//!  * [`SweepSpec`] — the grid: topology names, placement specs,
+//!    patterns, algorithms, seeds, and whether to attach a flow-level
+//!    max-min throughput simulation to each cell. Parsed from the same
+//!    TOML subset as [`crate::config`] (`pgft sweep --config FILE`) or
+//!    built programmatically ([`SweepSpec::paper_grid`]).
+//!  * [`run_sweep`] — the engine: fans the grid's cells out over a
+//!    [`crate::util::par`] worker pool (rayon is not in the offline
+//!    vendor set), shares work between cells — pattern flow lists are
+//!    generated once per (topology, placement), and deterministic
+//!    algorithms (everything but `random`/`random-pair`) are traced once
+//!    regardless of how many seeds the grid requests — and returns rows
+//!    in deterministic grid order, byte-identical to a serial run.
+//!  * [`SweepResult`] — one row: the cell coordinates plus its
+//!    [`crate::metrics::AlgoSummary`] and optional throughput figures,
+//!    convertible to/from text, CSV and JSON via [`crate::report::Table`]
+//!    ([`sweep_table`] / [`sweep_results_from_table`]).
+//!
+//! ```
+//! use pgft::sweep::{run_sweep, sweep_table, SweepOptions, SweepSpec};
+//! let mut spec = SweepSpec::paper_grid("case-study");
+//! spec.seeds = vec![1];
+//! let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+//! assert_eq!(rows.len(), spec.num_cells());
+//! // Gdmodk reaches the §III.B optimum on the bijective C2IO pattern.
+//! let gd = rows.iter().find(|r| {
+//!     r.summary.algorithm == "gdmodk"
+//!         && r.summary.pattern == "c2io-sym"
+//!         && r.placement == "io:last:1"
+//! });
+//! assert_eq!(gd.unwrap().summary.c_topo, 1);
+//! println!("{}", sweep_table(&rows).to_text());
+//! ```
+
+pub mod result;
+pub mod runner;
+pub mod spec;
+
+pub use result::{summaries, sweep_results_from_table, sweep_table, SweepResult, SweepSim};
+pub use runner::{run_sweep, SweepOptions};
+pub use spec::SweepSpec;

@@ -1,0 +1,242 @@
+//! Sweep result rows and their tabular (text/CSV/JSON) encoding.
+
+use crate::metrics::AlgoSummary;
+use crate::report::Table;
+use anyhow::{ensure, Context, Result};
+
+/// Flow-level max-min throughput figures of one cell (present when the
+/// spec requested `simulate`). Computed with the deterministic pure-rust
+/// solver so parallel and serial sweeps agree bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSim {
+    /// Sum of max-min fair rates over all flows (links have capacity 1).
+    pub aggregate_throughput: f64,
+    /// Worst flow rate — the pattern's completion is bound by it.
+    pub min_rate: f64,
+    /// Time to deliver one unit of data per flow: `1 / min_rate`.
+    pub completion_time: f64,
+}
+
+/// One cell of an executed sweep: the grid coordinates plus the static
+/// congestion summary and optional throughput figures.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepResult {
+    /// Topology spec string of the cell (as given in the [`super::SweepSpec`]).
+    pub topology: String,
+    /// Placement spec string of the cell.
+    pub placement: String,
+    /// Requested seed (deterministic algorithms share traced routes
+    /// across seeds; the row still records what was asked for).
+    pub seed: u64,
+    /// Static congestion metrics (§III.A): `C_topo`, hot ports per
+    /// level, used top-ports — see [`AlgoSummary`].
+    pub summary: AlgoSummary,
+    /// Throughput figures when the spec set `simulate`.
+    pub sim: Option<SweepSim>,
+}
+
+/// Column names of the sweep table, in emission order. Vector-valued
+/// summary fields (`hot_per_level`, `cmax_up`, `cmax_down`) are encoded
+/// `"a|b|c"` so every cell stays CSV- and JSON-friendly.
+pub const COLUMNS: [&str; 16] = [
+    "topology",
+    "placement",
+    "algo",
+    "pattern",
+    "seed",
+    "flows",
+    "C_topo",
+    "hot_ports",
+    "hot_per_level",
+    "cmax_up",
+    "cmax_down",
+    "used_top",
+    "total_top",
+    "agg_thru",
+    "min_rate",
+    "completion",
+];
+
+fn join_nums<T: std::fmt::Display>(xs: &[T]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("|")
+}
+
+fn split_nums<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split('|')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<T>().map_err(|e| anyhow::anyhow!("bad number {p:?}: {e}")))
+        .collect()
+}
+
+impl SweepResult {
+    /// Encode as one table row (see [`COLUMNS`]). Floats use Rust's
+    /// shortest-round-trip `Display`, so [`SweepResult::from_cells`]
+    /// recovers them exactly.
+    pub fn to_cells(&self) -> Vec<String> {
+        let s = &self.summary;
+        let (agg, min, comp) = match &self.sim {
+            Some(x) => (
+                x.aggregate_throughput.to_string(),
+                x.min_rate.to_string(),
+                x.completion_time.to_string(),
+            ),
+            None => (String::new(), String::new(), String::new()),
+        };
+        vec![
+            self.topology.clone(),
+            self.placement.clone(),
+            s.algorithm.clone(),
+            s.pattern.clone(),
+            self.seed.to_string(),
+            s.flows.to_string(),
+            s.c_topo.to_string(),
+            s.hot_total.to_string(),
+            join_nums(&s.hot_per_level),
+            join_nums(&s.c_max_up),
+            join_nums(&s.c_max_down),
+            s.used_top_ports.to_string(),
+            s.total_top_ports.to_string(),
+            agg,
+            min,
+            comp,
+        ]
+    }
+
+    /// Decode a row previously produced by [`SweepResult::to_cells`]
+    /// (the CSV/JSON round-trip path).
+    pub fn from_cells(cells: &[String]) -> Result<SweepResult> {
+        ensure!(
+            cells.len() == COLUMNS.len(),
+            "sweep row has {} cells, expected {}",
+            cells.len(),
+            COLUMNS.len()
+        );
+        let int = |i: usize| -> Result<u64> {
+            cells[i]
+                .parse()
+                .with_context(|| format!("column {} = {:?}", COLUMNS[i], cells[i]))
+        };
+        let float = |i: usize| -> Result<f64> {
+            cells[i]
+                .parse()
+                .with_context(|| format!("column {} = {:?}", COLUMNS[i], cells[i]))
+        };
+        let sim = if cells[13].is_empty() && cells[14].is_empty() && cells[15].is_empty() {
+            None
+        } else {
+            Some(SweepSim {
+                aggregate_throughput: float(13)?,
+                min_rate: float(14)?,
+                completion_time: float(15)?,
+            })
+        };
+        Ok(SweepResult {
+            topology: cells[0].clone(),
+            placement: cells[1].clone(),
+            seed: int(4)?,
+            summary: AlgoSummary {
+                algorithm: cells[2].clone(),
+                pattern: cells[3].clone(),
+                flows: int(5)? as usize,
+                c_topo: int(6)? as u32,
+                hot_total: int(7)? as usize,
+                hot_per_level: split_nums(&cells[8])?,
+                c_max_up: split_nums(&cells[9])?,
+                c_max_down: split_nums(&cells[10])?,
+                used_top_ports: int(11)? as usize,
+                total_top_ports: int(12)? as usize,
+            },
+            sim,
+        })
+    }
+}
+
+/// Extract the static-metric summaries of a row set (the shape
+/// [`crate::metrics::render_algorithm_table`] consumes).
+pub fn summaries(rows: &[SweepResult]) -> Vec<AlgoSummary> {
+    rows.iter().map(|r| r.summary.clone()).collect()
+}
+
+/// Collect sweep rows into a [`Table`] for text/CSV/JSON emission.
+pub fn sweep_table(rows: &[SweepResult]) -> Table {
+    let mut t = Table::new(
+        "experiment sweep: algorithm × pattern × placement × seed grid",
+        &COLUMNS,
+    );
+    for r in rows {
+        t.row(&r.to_cells());
+    }
+    t
+}
+
+/// Inverse of [`sweep_table`]: recover the typed rows from a parsed
+/// table (e.g. `Table::from_csv` / `Table::from_json` output).
+pub fn sweep_results_from_table(t: &Table) -> Result<Vec<SweepResult>> {
+    ensure!(
+        t.headers.iter().map(String::as_str).eq(COLUMNS.iter().copied()),
+        "not a sweep table: headers {:?}",
+        t.headers
+    );
+    t.rows.iter().map(|r| SweepResult::from_cells(r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(sim: bool) -> SweepResult {
+        SweepResult {
+            topology: "case-study".into(),
+            placement: "io:last:1,service:first:1".into(),
+            seed: 7,
+            summary: AlgoSummary {
+                algorithm: "gdmodk".into(),
+                pattern: "c2io-sym".into(),
+                flows: 56,
+                c_topo: 1,
+                hot_total: 0,
+                hot_per_level: vec![0, 0, 0, 0],
+                c_max_up: vec![1, 1, 1, 0],
+                c_max_down: vec![0, 1, 1, 1],
+                used_top_ports: 8,
+                total_top_ports: 16,
+            },
+            sim: sim.then(|| SweepSim {
+                aggregate_throughput: 8.0,
+                min_rate: 1.0 / 7.0,
+                completion_time: 7.0,
+            }),
+        }
+    }
+
+    #[test]
+    fn cells_roundtrip_with_and_without_sim() {
+        for sim in [false, true] {
+            let r = sample(sim);
+            let cells = r.to_cells();
+            assert_eq!(cells.len(), COLUMNS.len());
+            let back = SweepResult::from_cells(&cells).unwrap();
+            assert_eq!(back, r, "sim={sim}");
+        }
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let rows = vec![sample(false), sample(true)];
+        let t = sweep_table(&rows);
+        assert_eq!(sweep_results_from_table(&t).unwrap(), rows);
+    }
+
+    #[test]
+    fn malformed_rows_rejected() {
+        let mut cells = sample(false).to_cells();
+        cells[6] = "not-a-number".into();
+        assert!(SweepResult::from_cells(&cells).is_err());
+        assert!(SweepResult::from_cells(&cells[..5]).is_err());
+        let wrong = Table::new("x", &["a", "b"]);
+        assert!(sweep_results_from_table(&wrong).is_err());
+    }
+}

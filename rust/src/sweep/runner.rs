@@ -1,0 +1,312 @@
+//! The sweep executor: work sharing, parallel fan-out, deterministic
+//! row order.
+
+use super::result::{SweepResult, SweepSim};
+use super::spec::SweepSpec;
+use crate::metrics::{AlgoSummary, CongestionReport};
+use crate::nodes::{NodeTypeMap, Placement};
+use crate::patterns::Pattern;
+use crate::routing::trace::trace_flows;
+use crate::routing::AlgorithmKind;
+use crate::sim::{solve_fairrate_exact, IncidenceMatrix};
+use crate::topology::{families, Topology};
+use crate::util::par;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Execution options of a sweep (how, not what — the *what* lives in
+/// [`SweepSpec`] so a spec means the same grid everywhere).
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Worker threads for the cell fan-out; `1` runs fully serial on the
+    /// calling thread. Output is byte-identical either way.
+    pub threads: usize,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions { threads: par::max_threads() }
+    }
+}
+
+/// One resolved (topology, placement) group. Topologies are stored once
+/// in a side table (building `large-4096` is not free, and several
+/// placements usually share one topology).
+struct Group {
+    topo_idx: usize,
+    placement_idx: usize,
+    types: NodeTypeMap,
+    /// Pattern flow lists, generated once and shared by every algorithm
+    /// and seed of the group.
+    flows: Vec<Vec<(u32, u32)>>,
+}
+
+/// A unique unit of work: (group, algorithm, pattern, effective seed).
+type JobKey = (usize, AlgorithmKind, usize, u64);
+
+/// Execute a sweep and return one [`SweepResult`] per grid cell, in
+/// deterministic grid order: topology-major, then placement, pattern,
+/// algorithm, seed — independent of thread count and scheduling.
+///
+/// Work sharing:
+///  * each topology is built and validated once, each placement applied
+///    once per topology;
+///  * each pattern's flow list is generated once per (topology,
+///    placement) and shared by every algorithm and seed;
+///  * traced routes are deduplicated per (group, algorithm, pattern,
+///    effective seed): only `random`/`random-pair` are seed-sensitive,
+///    so a grid with many seeds traces each deterministic algorithm
+///    exactly once.
+///
+/// The deduplicated jobs of the *whole* grid are fanned out in a single
+/// [`par::par_map`] call, so topology/placement-heavy grids parallelize
+/// as well as pattern/algorithm-heavy ones.
+pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResult>> {
+    spec.validate()?;
+
+    // Phase 1 (serial, cheap relative to cells): resolve topologies,
+    // placements and flow lists.
+    let mut topos: Vec<Topology> = Vec::with_capacity(spec.topologies.len());
+    for topo_name in &spec.topologies {
+        let topo = families::named(topo_name)?;
+        crate::topology::validate::validate(&topo)?;
+        topos.push(topo);
+    }
+    let mut groups: Vec<Group> = Vec::with_capacity(spec.topologies.len() * spec.placements.len());
+    for topo_idx in 0..spec.topologies.len() {
+        for (placement_idx, placement_spec) in spec.placements.iter().enumerate() {
+            let types = Placement::parse(placement_spec)?.apply(&topos[topo_idx])?;
+            let flows = spec
+                .patterns
+                .iter()
+                .map(|p| p.flows(&topos[topo_idx], &types))
+                .collect::<Result<Vec<_>>>()?;
+            groups.push(Group { topo_idx, placement_idx, types, flows });
+        }
+    }
+
+    // Phase 2: deduplicate every grid cell into unique jobs, flattened
+    // across all groups.
+    let mut jobs: Vec<JobKey> = Vec::new();
+    let mut job_index: HashMap<JobKey, usize> = HashMap::new();
+    let mut cell_jobs: Vec<usize> = Vec::with_capacity(spec.num_cells());
+    for gi in 0..groups.len() {
+        for pi in 0..spec.patterns.len() {
+            for &algo in &spec.algorithms {
+                for &seed in &spec.seeds {
+                    let effective = if seed_sensitive(algo) { seed } else { spec.seeds[0] };
+                    let key = (gi, algo, pi, effective);
+                    let j = *job_index.entry(key).or_insert_with(|| {
+                        jobs.push(key);
+                        jobs.len() - 1
+                    });
+                    cell_jobs.push(j);
+                }
+            }
+        }
+    }
+
+    // Phase 3: one grid-wide parallel fan-out. Results land in job
+    // order regardless of scheduling, so the output is deterministic.
+    let cells = par::par_map(opts.threads, &jobs, |_, &(gi, algo, pi, seed)| {
+        let group = &groups[gi];
+        compute_cell(
+            spec,
+            &topos[group.topo_idx],
+            &group.types,
+            algo,
+            &spec.patterns[pi],
+            &group.flows[pi],
+            seed,
+        )
+    });
+
+    // Phase 4: emit one row per requested cell, in grid order.
+    let mut out = Vec::with_capacity(spec.num_cells());
+    let mut cursor = 0usize;
+    for group in &groups {
+        for _pi in 0..spec.patterns.len() {
+            for _algo in &spec.algorithms {
+                for &seed in &spec.seeds {
+                    let cell = &cells[cell_jobs[cursor]];
+                    cursor += 1;
+                    out.push(SweepResult {
+                        topology: spec.topologies[group.topo_idx].clone(),
+                        placement: spec.placements[group.placement_idx].clone(),
+                        seed,
+                        summary: cell.summary.clone(),
+                        sim: cell.sim.clone(),
+                    });
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Routing depends on the seed only for the random algorithms; every
+/// Xmodk variant ignores it.
+fn seed_sensitive(algo: AlgorithmKind) -> bool {
+    matches!(algo, AlgorithmKind::Random | AlgorithmKind::RandomPair)
+}
+
+/// Computed content of one unique job.
+struct Cell {
+    summary: AlgoSummary,
+    sim: Option<SweepSim>,
+}
+
+fn compute_cell(
+    spec: &SweepSpec,
+    topo: &Topology,
+    types: &NodeTypeMap,
+    algo: AlgorithmKind,
+    pattern: &Pattern,
+    flows: &[(u32, u32)],
+    seed: u64,
+) -> Cell {
+    let router = algo.build(topo, Some(types), seed);
+    if spec.simulate {
+        // Simulation needs the materialized routes; reuse them for the
+        // metric instead of re-tracing.
+        let routes = trace_flows(topo, &*router, flows);
+        let rep = CongestionReport::compute(topo, &routes);
+        let inc = IncidenceMatrix::from_routes(topo, &routes);
+        let cap = vec![1.0f64; inc.num_ports()];
+        let rates = solve_fairrate_exact(&inc, &cap);
+        let sum: f64 = rates.iter().sum();
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        Cell {
+            summary: AlgoSummary::from_report(
+                topo,
+                &rep,
+                algo.as_str(),
+                &pattern.name(),
+                flows.len(),
+            ),
+            sim: Some(SweepSim {
+                aggregate_throughput: sum,
+                min_rate: min,
+                completion_time: 1.0 / min,
+            }),
+        }
+    } else {
+        // Metric-only cell: the fused trace+metric path avoids
+        // materializing routes entirely (§Perf iteration 4).
+        let rep = CongestionReport::compute_flows(topo, &*router, flows);
+        Cell {
+            summary: AlgoSummary::from_report(
+                topo,
+                &rep,
+                algo.as_str(),
+                &pattern.name(),
+                flows.len(),
+            ),
+            sim: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec {
+            topologies: vec!["case-study".into()],
+            placements: vec!["io:last:1".into()],
+            patterns: vec![Pattern::C2ioSym, Pattern::C2ioAll],
+            algorithms: AlgorithmKind::ALL.to_vec(),
+            seeds: vec![1],
+            simulate: false,
+        }
+    }
+
+    #[test]
+    fn paper_numbers_through_the_engine() {
+        let rows = run_sweep(&tiny_spec(), &SweepOptions::default()).unwrap();
+        assert_eq!(rows.len(), 12);
+        let c = |algo: &str, pat: &str| {
+            rows.iter()
+                .find(|r| r.summary.algorithm == algo && r.summary.pattern == pat)
+                .unwrap()
+                .summary
+                .c_topo
+        };
+        assert_eq!(c("dmodk", "c2io-sym"), 4, "§III.B");
+        assert_eq!(c("smodk", "c2io-sym"), 4, "§III.C");
+        assert_eq!(c("gdmodk", "c2io-sym"), 1, "§IV optimum");
+        assert_eq!(c("gdmodk", "c2io-all"), 2, "§IV.B.1 dense reading");
+        assert_eq!(c("gsmodk", "c2io-all"), 4, "§IV.B.2");
+    }
+
+    #[test]
+    fn rows_come_back_in_grid_order() {
+        let mut spec = tiny_spec();
+        spec.topologies = vec!["case-study".into(), "4-ary-2-tree".into()];
+        spec.placements = vec!["io:last:1".into(), "io:first:1".into()];
+        let rows = run_sweep(&spec, &SweepOptions { threads: 3 }).unwrap();
+        let mut i = 0;
+        for topology in &spec.topologies {
+            for placement in &spec.placements {
+                for pattern in &spec.patterns {
+                    for algo in &spec.algorithms {
+                        assert_eq!(rows[i].topology, *topology);
+                        assert_eq!(rows[i].placement, *placement);
+                        assert_eq!(rows[i].summary.pattern, pattern.name());
+                        assert_eq!(rows[i].summary.algorithm, algo.as_str());
+                        i += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(i, rows.len());
+    }
+
+    #[test]
+    fn deterministic_algorithms_share_traces_across_seeds() {
+        let mut spec = tiny_spec();
+        spec.patterns = vec![Pattern::C2ioSym];
+        spec.algorithms = vec![AlgorithmKind::Dmodk, AlgorithmKind::Random];
+        spec.seeds = vec![1, 2, 3];
+        let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        assert_eq!(rows.len(), 6);
+        // Dmodk rows differ only in the seed column.
+        let dmodk: Vec<_> = rows.iter().filter(|r| r.summary.algorithm == "dmodk").collect();
+        assert_eq!(dmodk.len(), 3);
+        assert!(dmodk.windows(2).all(|w| w[0].summary == w[1].summary));
+        assert_eq!(dmodk.iter().map(|r| r.seed).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn simulate_attaches_consistent_throughput() {
+        let mut spec = tiny_spec();
+        spec.patterns = vec![Pattern::C2ioSym];
+        spec.algorithms = vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk];
+        spec.simulate = true;
+        let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        let sim = |algo: &str| {
+            rows.iter()
+                .find(|r| r.summary.algorithm == algo)
+                .unwrap()
+                .sim
+                .clone()
+                .unwrap()
+        };
+        let (d, g) = (sim("dmodk"), sim("gdmodk"));
+        // Same headline as `sim::tests::flow_level_gdmodk_beats_dmodk_on_c2io`.
+        assert!(g.min_rate > d.min_rate * 3.0);
+        assert!(g.aggregate_throughput > d.aggregate_throughput * 2.0);
+        assert!(g.completion_time < d.completion_time / 3.0);
+    }
+
+    #[test]
+    fn unknown_topology_or_placement_errors() {
+        let mut spec = tiny_spec();
+        spec.topologies = vec!["no-such-topology".into()];
+        assert!(run_sweep(&spec, &SweepOptions::default()).is_err());
+        let mut spec = tiny_spec();
+        spec.placements = vec!["io:bogus".into()];
+        assert!(run_sweep(&spec, &SweepOptions::default()).is_err());
+    }
+}

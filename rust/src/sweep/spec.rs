@@ -1,0 +1,235 @@
+//! The declarative grid description: what to sweep.
+
+use crate::config::Doc;
+use crate::patterns::Pattern;
+use crate::routing::AlgorithmKind;
+use anyhow::{ensure, Context, Result};
+
+/// An experiment grid: the cross product of topologies × placements ×
+/// patterns × algorithms × seeds, optionally with a flow-level
+/// throughput simulation attached to every cell.
+///
+/// Topologies and placements are kept as their *spec strings* (resolved
+/// by [`crate::topology::families::named`] and
+/// [`crate::nodes::Placement::parse`] at run time) so a spec can be
+/// round-tripped through config files and result rows unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    /// Named topologies (`case-study`, `medium-512`, …) or inline
+    /// `PGFT(h; m..; w..; p..)` strings.
+    pub topologies: Vec<String>,
+    /// Placement spec strings, e.g. `io:last:1` or the stacked
+    /// `io:last:1,service:first:1` form.
+    pub placements: Vec<String>,
+    /// Traffic patterns to route.
+    pub patterns: Vec<Pattern>,
+    /// Routing algorithms to compare.
+    pub algorithms: Vec<AlgorithmKind>,
+    /// Seeds (only the `random`/`random-pair` algorithms are
+    /// seed-sensitive; the engine traces deterministic algorithms once).
+    pub seeds: Vec<u64>,
+    /// Attach max-min fair-rate throughput figures to every cell (the
+    /// deterministic pure-rust solver; see `crate::sim::fairrate`).
+    pub simulate: bool,
+}
+
+impl SweepSpec {
+    /// The paper's default comparison grid on one topology: all six
+    /// algorithms, both C2IO readings plus the symmetric IO→compute
+    /// pattern and a shift baseline, under two leaf-local IO placements.
+    pub fn paper_grid(topology: &str) -> SweepSpec {
+        SweepSpec {
+            topologies: vec![topology.to_string()],
+            placements: vec!["io:last:1".to_string(), "io:first:1".to_string()],
+            patterns: vec![
+                Pattern::C2ioSym,
+                Pattern::C2ioAll,
+                Pattern::Io2cSym,
+                Pattern::Shift { k: 1 },
+            ],
+            algorithms: AlgorithmKind::ALL.to_vec(),
+            seeds: vec![1],
+            simulate: false,
+        }
+    }
+
+    /// Parse from a config [`Doc`] (`[sweep]` section of the TOML
+    /// subset). Every key is optional:
+    ///
+    /// ```text
+    /// [sweep]
+    /// topologies  = ["case-study", "medium-512"]
+    /// placements  = ["io:last:1", "io:first:1"]
+    /// patterns    = ["c2io-sym", "c2io-all", "io2c-sym", "shift:1"]
+    /// algorithms  = ["all"]          # or an explicit list
+    /// seeds       = [1, 2, 3]
+    /// simulate    = false
+    /// ```
+    pub fn from_doc(doc: &Doc) -> Result<SweepSpec> {
+        // Guard against passing the wrong kind of config (e.g. a
+        // `pgft run` experiment file): a non-empty document must carry a
+        // `[sweep]` section, and every key in it must be recognized —
+        // otherwise defaults would silently shadow the user's intent.
+        const KNOWN: [&str; 6] =
+            ["topologies", "placements", "patterns", "algorithms", "seeds", "simulate"];
+        if !doc.sections.is_empty() {
+            let section = doc
+                .sections
+                .get("sweep")
+                .with_context(|| {
+                    format!(
+                        "config has no [sweep] section (found: {:?}); \
+                         `pgft run` configs use [topology]/[run] instead",
+                        doc.sections.keys().collect::<Vec<_>>()
+                    )
+                })?;
+            for name in doc.sections.keys() {
+                ensure!(
+                    name == "sweep",
+                    "a sweep config holds only a [sweep] section, found [{name}] \
+                     (mixed-in `pgft run` syntax?)"
+                );
+            }
+            for key in section.keys() {
+                ensure!(
+                    KNOWN.contains(&key.as_str()),
+                    "unknown [sweep] key {key:?} (known: {KNOWN:?})"
+                );
+            }
+        }
+        let list = |key: &str, default: &[&str]| -> Result<Vec<String>> {
+            match doc.get("sweep", key) {
+                Some(v) => v.as_str_array(),
+                None => Ok(default.iter().map(|s| s.to_string()).collect()),
+            }
+        };
+        let topologies = list("topologies", &["case-study"])?;
+        let placements = list("placements", &["io:last:1", "io:first:1"])?;
+        let patterns = list("patterns", &["c2io-sym", "c2io-all", "io2c-sym", "shift:1"])?
+            .iter()
+            .map(|p| Pattern::parse(p))
+            .collect::<Result<Vec<_>>>()?;
+        let algo_names = list("algorithms", &["all"])?;
+        let algorithms = if algo_names.len() == 1 && algo_names[0] == "all" {
+            AlgorithmKind::ALL.to_vec()
+        } else {
+            algo_names
+                .iter()
+                .map(|a| AlgorithmKind::parse(a))
+                .collect::<Result<Vec<_>>>()?
+        };
+        let seeds: Vec<u64> = match doc.get("sweep", "seeds") {
+            Some(v) => v
+                .as_int_array()?
+                .into_iter()
+                .map(|i| {
+                    ensure!(i >= 0, "seeds must be non-negative, got {i}");
+                    Ok(i as u64)
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![1],
+        };
+        let simulate = doc.get_bool("sweep", "simulate", false)?;
+        let spec = SweepSpec { topologies, placements, patterns, algorithms, seeds, simulate };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a sweep config file (see [`SweepSpec::from_doc`]).
+    pub fn from_file(path: &str) -> Result<SweepSpec> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        Self::from_doc(&Doc::parse(&text)?)
+    }
+
+    /// Total number of grid cells (= result rows).
+    pub fn num_cells(&self) -> usize {
+        self.topologies.len()
+            * self.placements.len()
+            * self.patterns.len()
+            * self.algorithms.len()
+            * self.seeds.len()
+    }
+
+    /// Reject degenerate (empty-axis) grids with a clear message.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.topologies.is_empty(), "sweep: no topologies");
+        ensure!(!self.placements.is_empty(), "sweep: no placements");
+        ensure!(!self.patterns.is_empty(), "sweep: no patterns");
+        ensure!(!self.algorithms.is_empty(), "sweep: no algorithms");
+        ensure!(!self.seeds.is_empty(), "sweep: no seeds");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_shape() {
+        let s = SweepSpec::paper_grid("medium-512");
+        s.validate().unwrap();
+        assert_eq!(s.topologies, vec!["medium-512"]);
+        assert_eq!(s.placements.len(), 2);
+        assert!(s.patterns.len() >= 4);
+        assert_eq!(s.algorithms.len(), 6);
+        assert_eq!(s.num_cells(), 2 * s.patterns.len() * 6);
+    }
+
+    #[test]
+    fn from_doc_defaults_and_overrides() {
+        let empty = SweepSpec::from_doc(&Doc::parse("").unwrap()).unwrap();
+        assert_eq!(empty.topologies, vec!["case-study"]);
+        assert_eq!(empty.algorithms.len(), 6);
+        assert_eq!(empty.seeds, vec![1]);
+        assert!(!empty.simulate);
+
+        let doc = Doc::parse(
+            r#"
+[sweep]
+topologies = ["case-study", "4-ary-2-tree"]
+placements = ["io:last:1"]
+patterns = ["c2io-sym", "shift:3"]
+algorithms = ["dmodk", "gdmodk"]
+seeds = [7, 8]
+simulate = true
+"#,
+        )
+        .unwrap();
+        let s = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(s.topologies.len(), 2);
+        assert_eq!(s.patterns, vec![Pattern::C2ioSym, Pattern::Shift { k: 3 }]);
+        assert_eq!(s.algorithms, vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk]);
+        assert_eq!(s.seeds, vec![7, 8]);
+        assert!(s.simulate);
+        assert_eq!(s.num_cells(), 2 * 1 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn bad_entries_rejected() {
+        let doc = Doc::parse("[sweep]\nalgorithms = [\"warp-routing\"]\n").unwrap();
+        assert!(SweepSpec::from_doc(&doc).is_err());
+        let doc = Doc::parse("[sweep]\npatterns = [\"no-such\"]\n").unwrap();
+        assert!(SweepSpec::from_doc(&doc).is_err());
+        let mut s = SweepSpec::paper_grid("case-study");
+        s.seeds.clear();
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn wrong_config_shape_rejected_not_defaulted() {
+        // A `pgft run` config must not silently sweep the default grid.
+        let doc = Doc::parse("[topology]\nspec = \"medium-512\"\n").unwrap();
+        let err = SweepSpec::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("[sweep]"), "{err}");
+        // Typoed keys inside [sweep] are rejected too.
+        let doc = Doc::parse("[sweep]\nalgorithm = [\"dmodk\"]\n").unwrap();
+        assert!(SweepSpec::from_doc(&doc).is_err());
+        // As is mixing a stray [run]-style section next to [sweep].
+        let doc = Doc::parse("[sweep]\nseeds = [1]\n[run]\nseed = 2\n").unwrap();
+        assert!(SweepSpec::from_doc(&doc).is_err());
+        // Negative seeds wrap to huge u64s if accepted — reject instead.
+        let doc = Doc::parse("[sweep]\nseeds = [-1]\n").unwrap();
+        assert!(SweepSpec::from_doc(&doc).is_err());
+    }
+}

@@ -56,6 +56,8 @@ pub fn named(name: &str) -> Result<Topology> {
     Ok(build_pgft(&spec))
 }
 
+/// Resolve a name (or inline `PGFT(...)` string) to its spec without
+/// building the graph.
 pub fn named_spec(name: &str) -> Result<PgftSpec> {
     match name {
         // The paper's Fig. 1 case study.

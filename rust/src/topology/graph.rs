@@ -16,21 +16,28 @@
 
 use super::spec::PgftSpec;
 
+/// Global switch index (levels concatenated, leaves first).
 pub type SwitchId = usize;
+/// Global directed-output-port index.
 pub type PortId = usize;
+/// Global undirected-link index.
 pub type LinkId = usize;
+/// End-node id (the paper's NID).
 pub type Nid = u32;
 
 /// Which element emits from a port / receives at the far end.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Endpoint {
+    /// An end-node.
     Node(Nid),
+    /// A switch.
     Switch(SwitchId),
 }
 
 /// A switch at level `1..=h`.
 #[derive(Clone, Debug)]
 pub struct Switch {
+    /// Global id (== index into `Topology::switches`).
     pub id: SwitchId,
     /// 1-based level (1 = leaf, h = top).
     pub level: usize,
@@ -49,6 +56,7 @@ pub struct Switch {
 /// An end-node (processing element). Level 0.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// The node's id (== index into `Topology::nodes`).
     pub nid: Nid,
     /// Digits `a_1..a_h`, least-significant first (`digits[j] ∈ [0, m_{1+j})`).
     pub digits: Vec<u32>,
@@ -59,6 +67,7 @@ pub struct Node {
 /// A directed output port.
 #[derive(Clone, Debug)]
 pub struct Port {
+    /// Global id (== index into `Topology::ports`).
     pub id: PortId,
     /// Emitting element.
     pub owner: Endpoint,
@@ -76,8 +85,11 @@ pub struct Port {
 /// `down_port` emits downward.
 #[derive(Clone, Debug)]
 pub struct Link {
+    /// Global id (== index into `Topology::links`).
     pub id: LinkId,
+    /// The port that emits upward over this cable.
     pub up_port: PortId,
+    /// The port that emits downward over this cable.
     pub down_port: PortId,
     /// Level of the upper endpoint (link stage `l` joins `l-1` and `l`).
     pub stage: usize,
@@ -86,10 +98,15 @@ pub struct Link {
 /// A fully constructed topology.
 #[derive(Clone, Debug)]
 pub struct Topology {
+    /// The PGFT parameters this graph was built from.
     pub spec: PgftSpec,
+    /// All switches, level-major (leaves first).
     pub switches: Vec<Switch>,
+    /// All end-nodes, NID order.
     pub nodes: Vec<Node>,
+    /// All directed output ports.
     pub ports: Vec<Port>,
+    /// All undirected links.
     pub links: Vec<Link>,
     /// `level_start[l]` = first SwitchId of level `l+1`… indexed so that
     /// switches of level `l` occupy `level_start[l-1]..level_start[l]`.
@@ -97,14 +114,17 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Number of end-nodes.
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Number of switches across all levels.
     pub fn num_switches(&self) -> usize {
         self.switches.len()
     }
 
+    /// Number of directed output ports (2× links).
     pub fn num_ports(&self) -> usize {
         self.ports.len()
     }

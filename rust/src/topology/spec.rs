@@ -16,13 +16,19 @@ use anyhow::{bail, ensure, Context, Result};
 /// Parsed PGFT parameters.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PgftSpec {
+    /// Number of switch levels.
     pub h: usize,
+    /// Downward arities `m_1..m_h` (0-indexed).
     pub m: Vec<u32>,
+    /// Upward arities `w_1..w_h` (0-indexed).
     pub w: Vec<u32>,
+    /// Parallel-link counts `p_1..p_h` (0-indexed).
     pub p: Vec<u32>,
 }
 
 impl PgftSpec {
+    /// Validate and wrap the three parameter vectors (equal length ≥ 1,
+    /// all entries ≥ 1).
     pub fn new(m: Vec<u32>, w: Vec<u32>, p: Vec<u32>) -> Result<Self> {
         let h = m.len();
         ensure!(h >= 1, "PGFT needs at least one level");
@@ -82,6 +88,7 @@ impl PgftSpec {
         above * below
     }
 
+    /// Total switches across all levels.
     pub fn total_switches(&self) -> u64 {
         (1..=self.h).map(|l| self.switches_at_level(l)).sum()
     }
@@ -128,6 +135,7 @@ impl PgftSpec {
             .min(1.0)
     }
 
+    /// Whether every level provides full cross-bisection bandwidth.
     pub fn is_full_cbb(&self) -> bool {
         (1..self.h).all(|l| self.cbb_ratio_at(l) >= 1.0)
     }

@@ -10,16 +10,24 @@ use std::time::{Duration, Instant};
 /// Robust summary statistics over per-iteration wall-clock samples.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// Number of timed iterations.
     pub samples: usize,
+    /// Mean per-iteration time in nanoseconds.
     pub mean_ns: f64,
+    /// Standard deviation in nanoseconds.
     pub stddev_ns: f64,
+    /// Fastest iteration in nanoseconds.
     pub min_ns: f64,
+    /// Median iteration in nanoseconds.
     pub median_ns: f64,
+    /// 95th-percentile iteration in nanoseconds.
     pub p95_ns: f64,
+    /// Slowest iteration in nanoseconds.
     pub max_ns: f64,
 }
 
 impl Stats {
+    /// Summarize raw per-iteration samples (nanoseconds).
     pub fn from_samples(mut ns: Vec<f64>) -> Stats {
         assert!(!ns.is_empty());
         ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -67,6 +75,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// A benchmark with default warmup/sample/time budgets.
     pub fn new(name: impl Into<String>) -> Self {
         Self {
             name: name.into(),
@@ -78,17 +87,20 @@ impl Bench {
         }
     }
 
+    /// Set the warmup duration.
     pub fn warmup(mut self, d: Duration) -> Self {
         self.warmup = d;
         self
     }
 
+    /// Bound the number of timed samples.
     pub fn samples(mut self, min: usize, max: usize) -> Self {
         self.min_samples = min;
         self.max_samples = max.max(min);
         self
     }
 
+    /// Set the target total sampling time (sample count adapts to it).
     pub fn target_time(mut self, d: Duration) -> Self {
         self.target_time = d;
         self
@@ -154,6 +166,25 @@ pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
     (out, d)
 }
 
+/// Human-readable duration in the same units the bench lines use.
+pub fn human_duration(d: Duration) -> String {
+    human_ns(d.as_nanos() as f64)
+}
+
+/// Print a serial-vs-parallel comparison line and return the speedup
+/// factor (used by the sweep-engine benches).
+pub fn speedup_line(name: &str, serial: Duration, parallel: Duration) -> f64 {
+    let x = serial.as_secs_f64() / parallel.as_secs_f64().max(1e-12);
+    println!(
+        "speedup {:<42} serial {:>10}  parallel {:>10}  → {:.2}x",
+        name,
+        human_duration(serial),
+        human_duration(parallel),
+        x
+    );
+    x
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +227,12 @@ mod tests {
         assert!(human_ns(12_000.0).ends_with("µs"));
         assert!(human_ns(12_000_000.0).ends_with("ms"));
         assert!(human_ns(2_000_000_000.0).ends_with('s'));
+    }
+
+    #[test]
+    fn speedup_line_computes_ratio() {
+        let x = speedup_line("demo", Duration::from_millis(100), Duration::from_millis(25));
+        assert!((x - 4.0).abs() < 1e-9);
+        assert!(human_duration(Duration::from_millis(3)).ends_with("ms"));
     }
 }

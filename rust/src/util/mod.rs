@@ -1,5 +1,7 @@
-//! Zero-dependency substrates: PRNG, property-testing, bench harness.
+//! Zero-dependency substrates: PRNG, property-testing, bench harness,
+//! and the rayon-style parallel map the sweep engine runs on.
 
 pub mod bench;
+pub mod par;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,105 @@
+//! Minimal data-parallel substrate for the sweep engine.
+//!
+//! `rayon` is not in the offline vendor set (which holds only the `xla`
+//! crate closure), so this module hand-rolls the rayon-style slice the
+//! repo needs — an indexed parallel map over a slice with
+//!
+//!  * **work stealing** via a shared atomic cursor (cells vary wildly in
+//!    cost: an all-to-all trace on `medium-512` is ~1000× a case-study
+//!    cell, so static chunking would idle most workers), and
+//!  * **deterministic, input-ordered results**: every item writes to its
+//!    own slot, so the output is independent of scheduling. This is what
+//!    lets `pgft sweep` guarantee byte-identical output with and without
+//!    `--serial`.
+//!
+//! Workers are scoped threads ([`std::thread::scope`]) — no pool object
+//! to manage, no `'static` bounds, and a panicking cell propagates to the
+//! caller exactly as it would serially.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default: the hardware parallelism
+/// reported by the OS, or 1 when unknown.
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `threads` scoped worker threads and
+/// return the results in input order.
+///
+/// `f` receives `(index, &item)`. With `threads <= 1` (or one item) the
+/// map degenerates to a plain serial loop on the calling thread — the
+/// `--serial` reference path. Results are identical either way.
+pub fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<R>>> =
+        Mutex::new(std::iter::repeat_with(|| None).take(items.len()).collect());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                // Compute outside the lock; the lock only guards the
+                // O(1) slot store, so contention is negligible for the
+                // coarse-grained cells the sweep engine schedules.
+                let r = f(i, &items[i]);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|slot| slot.expect("every index was claimed by a worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = par_map(4, &items, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * x
+        });
+        let expect: Vec<u64> = items.iter().map(|&x| x * x).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let items: Vec<u32> = (0..100).rev().collect();
+        let serial = par_map(1, &items, |i, &x| (i, x.wrapping_mul(2654435761)));
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(par_map(threads, &items, |i, &x| (i, x.wrapping_mul(2654435761))), serial);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<i32> = Vec::new();
+        assert!(par_map(8, &none, |_, &x| x).is_empty());
+        assert_eq!(par_map(8, &[41], |_, &x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+}

@@ -60,6 +60,7 @@ impl Gen {
         &xs[i]
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         let b = self.rng.next_u64() & 1 == 1;
         self.trace.push(("bool".into(), b as i64));
@@ -80,15 +81,18 @@ pub struct Prop {
 }
 
 impl Prop {
+    /// A property named for failure reports (name also salts the seed).
     pub fn new(name: &'static str) -> Self {
         Self { name, cases: 128, seed: 0x5EED_0F00_D5EE_D0F7 ^ fnv(name) }
     }
 
+    /// Set the number of cases to run.
     pub fn cases(mut self, n: u32) -> Self {
         self.cases = n;
         self
     }
 
+    /// Override the base seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
         self

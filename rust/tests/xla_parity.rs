@@ -1,6 +1,13 @@
 //! Cross-layer parity: the AOT-compiled JAX/Pallas fair-rate solver
 //! (executed through PJRT from rust) must agree with the exact rust
 //! solver on real routed workloads — the L1↔L2↔L3 composition check.
+//!
+//! Needs the real PJRT runtime, so the whole file is compiled only with
+//! `--features xla` (which in turn needs the AOT image's vendored `xla`
+//! crate enabled in rust/Cargo.toml — see the notes there — and
+//! `make artifacts` to have run).
+
+#![cfg(feature = "xla")]
 
 use pgft::prelude::*;
 use pgft::runtime::Runtime;
