@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         placements: vec!["io:last:1".into()],
         patterns: vec![Pattern::C2ioSym, Pattern::C2ioAll],
         algorithms: AlgorithmKind::ALL.to_vec(),
+        faults: vec!["none".into()],
         seeds: vec![1],
         simulate: false,
     };

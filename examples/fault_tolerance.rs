@@ -44,7 +44,8 @@ fn main() -> anyhow::Result<()> {
     let flows: Vec<(u32, u32)> =
         (0..64).flat_map(|s| (0..64).filter(move |&d| d != s).map(move |d| (s, d))).collect();
     let routes = coord.trace(flows)?;
-    let rep = pgft::routing::verify::verify_routes(&topo, &routes)?;
+    let rep = pgft::routing::verify::verify_routes(&topo, &routes);
+    rep.ensure_valid()?;
     println!(
         "degraded fabric: {}/{} flows routed, deadlock-free: {}",
         rep.flows, rep.flows, rep.deadlock_free
@@ -64,5 +65,50 @@ fn main() -> anyhow::Result<()> {
     coord.set_algorithm(AlgorithmKind::Dmodk);
     println!("migrated to dmodk: C_topo = {}", coord.analyze(Pattern::C2ioSym)?.c_topo);
     coord.shutdown();
+
+    // --- Generated fault scenarios (the `faults` subsystem) ------------
+    // A seeded cascade: links die one by one; after every event the
+    // degraded router reroutes the whole fabric and we report how many
+    // routes moved compared to the pristine tables.
+    println!("\n== cascading failure drill (seeded, deterministic) ==");
+    let types = Placement::paper_io().apply(&topo)?;
+    let scenario = FaultModel::parse("cascade:4")?.generate(&topo, 1);
+    let flows = Pattern::C2ioSym.flows(&topo, &types)?;
+    let base = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+    let pristine = trace_flows(&topo, &*base, &flows);
+    for (step, faults) in scenario.stages(&topo).iter().enumerate() {
+        match AlgorithmKind::Gdmodk.build_degraded(&topo, Some(&types), 1, faults) {
+            Ok(router) => {
+                let rerouted = trace_flows(&topo, &*router, &flows);
+                let moved =
+                    pristine.iter().zip(&rerouted).filter(|(a, b)| a.ports != b.ports).count();
+                let rep = pgft::routing::verify::verify_routes(&topo, &rerouted);
+                assert!(rep.deadlock_free, "reroutes stay deadlock-free");
+                println!(
+                    "step {}: {} dead links, {}/{} routes moved, deadlock-free: {}",
+                    step + 1,
+                    faults.num_dead(),
+                    moved,
+                    flows.len(),
+                    rep.deadlock_free
+                );
+            }
+            Err(e) => println!("step {}: fabric partitioned ({e})", step + 1),
+        }
+    }
+
+    // The same study as one grid: `pgft faults` in library form.
+    println!("\n== fault grid (pgft faults equivalent) ==");
+    let spec = SweepSpec {
+        topologies: vec!["case-study".into()],
+        placements: vec!["io:last:1".into()],
+        patterns: vec![Pattern::C2ioSym],
+        algorithms: vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk],
+        faults: vec!["none".into(), "links:2".into(), "stage:3:4".into()],
+        seeds: vec![1],
+        simulate: true,
+    };
+    let rows = run_sweep(&spec, &SweepOptions::default())?;
+    print!("{}", pgft::sweep::fault_table(&rows).to_text());
     Ok(())
 }

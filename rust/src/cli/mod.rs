@@ -4,7 +4,10 @@
 //! ```text
 //! pgft topo --topo case-study [--dot] [--leaves] [--placement io:last:1]
 //! pgft sweep [--config FILE] [--topo ..] [--placements A;B] [--pattern ..]
-//!            [--algo ..] [--seeds 1,2] [--simulate] [--serial|--threads N]
+//!            [--algo ..] [--faults none,rate:0.05] [--seeds 1,2] [--simulate]
+//!            [--serial|--threads N]
+//! pgft faults [--topo ..] [--algo ..] [--pattern ..] [--faults SPECS]
+//!             [--seeds 1,2] [--simulate] [--format csv] [--out FILE]
 //! pgft analyze [--topo ..] [--placement ..] [--pattern c2io-sym,c2io-all]
 //!              [--algo all|dmodk,...] [--seed N] [--format text|csv|json] [--out FILE]
 //! pgft ports --algo dmodk --pattern c2io-sym [--level 3]      # per-port detail (Figs 4-7)
@@ -25,7 +28,7 @@ use crate::report::Table;
 use crate::routing::trace::trace_flows;
 use crate::routing::AlgorithmKind;
 use crate::sim::{render_sim_table, simulate_flow_level, PacketSim, PacketSimConfig};
-use crate::sweep::{run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
+use crate::sweep::{fault_table, run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
 use crate::topology::{families, render, Topology};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -130,6 +133,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     match args.cmd.as_str() {
         "topo" => cmd_topo(&args),
         "sweep" => cmd_sweep(&args),
+        "faults" => cmd_faults(&args),
         "analyze" => cmd_analyze(&args),
         "ports" => cmd_ports(&args),
         "random-dist" => cmd_random_dist(&args),
@@ -153,6 +157,9 @@ commands:
   sweep        parallel experiment grid: algorithms × patterns × placements × seeds
                (--config FILE, or --topo/--placements A;B/--pattern/--algo/--seeds 1,2;
                 --simulate adds flow-level throughput; --serial / --threads N)
+  faults       fault-injection grid: algorithms × fault scenarios on one topology
+               (--faults none,rate:0.05,links:4,switches:1,stage:3:2,cascade:4;
+                reports rerouting cost and, with --simulate, throughput retention)
   analyze      congestion table per algorithm × pattern (the paper's analysis)
   ports        per-port detail for one algorithm/pattern (Figs 4-7)
   random-dist  C_topo histogram over random-routing seeds (§III.D)
@@ -240,6 +247,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             a.split(',').map(AlgorithmKind::parse).collect::<Result<Vec<_>>>()?
         };
     }
+    if let Some(f) = args.get("faults").or_else(|| args.get("fault")) {
+        spec.faults = f.split(',').map(str::to_string).collect();
+    }
     // `--seed` (the other subcommands' spelling) works here too.
     if let Some(seeds) = args.get("seeds").or_else(|| args.get("seed")) {
         spec.seeds = seeds
@@ -266,12 +276,46 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pgft faults` — the paper-style comparison grid with fault scenarios
+/// as the second axis: every algorithm × every fault spec on one
+/// topology/pattern, reporting rerouting cost (routes changed vs.
+/// pristine) and, with `--simulate`, fair-rate throughput retention.
+/// Fully deterministic: the same `--seeds` produce byte-identical CSV.
+fn cmd_faults(args: &Args) -> Result<()> {
+    let seeds: Vec<u64> = args
+        .get_or("seeds", &args.u64_or("seed", 1)?.to_string())
+        .split(',')
+        .map(|x| x.parse::<u64>().map_err(|e| anyhow::anyhow!("--seeds {x:?}: {e}")))
+        .collect::<Result<Vec<_>>>()?;
+    let spec = SweepSpec {
+        topologies: vec![args.get_or("topo", "case-study")],
+        placements: vec![args.get_or("placement", "io:last:1")],
+        patterns: parse_patterns(args, "c2io-sym")?,
+        algorithms: parse_algos(args)?,
+        faults: args
+            .get_or("faults", "none,rate:0.05,links:2,stage:2:1")
+            .split(',')
+            .map(str::to_string)
+            .collect(),
+        seeds,
+        simulate: args.flag("simulate"),
+    };
+    spec.validate()?;
+    let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
+    emit(&sweep_table(&rows), args)?;
+    // The focused resiliency view goes to stderr so `--out`/stdout CSV
+    // stays machine-clean.
+    eprint!("{}", fault_table(&rows).to_text());
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let spec = SweepSpec {
         topologies: vec![args.get_or("topo", "case-study")],
         placements: vec![args.get_or("placement", "io:last:1")],
         patterns: parse_patterns(args, "c2io-sym,c2io-all")?,
         algorithms: parse_algos(args)?,
+        faults: vec!["none".into()],
         seeds: vec![args.u64_or("seed", 1)?],
         simulate: false,
     };
@@ -437,6 +481,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         placements: vec![cfg.placement_spec.clone()],
         patterns: cfg.patterns.clone(),
         algorithms: cfg.algorithms.clone(),
+        faults: vec!["none".into()],
         seeds: vec![cfg.seed],
         simulate: true,
     };
@@ -574,6 +619,46 @@ mod tests {
     #[test]
     fn sweep_rejects_bad_seeds() {
         assert!(run(&argv(&["sweep", "--seeds", "one,two"])).is_err());
+    }
+
+    #[test]
+    fn faults_command_runs_and_is_deterministic() {
+        let dir = std::env::temp_dir().join("pgft_faults_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out_a = dir.join("a.csv");
+        let out_b = dir.join("b.csv");
+        let base = [
+            "faults", "--topo", "case-study", "--algo", "dmodk,gdmodk",
+            "--pattern", "c2io-sym", "--faults", "none,links:2", "--seeds", "1",
+            "--serial", "--format", "csv",
+        ];
+        let mut a: Vec<String> = argv(&base);
+        a.extend(argv(&["--out", out_a.to_str().unwrap()]));
+        run(&a).unwrap();
+        let mut b: Vec<String> = argv(&base);
+        b.extend(argv(&["--out", out_b.to_str().unwrap()]));
+        run(&b).unwrap();
+        let (ca, cb) = (
+            std::fs::read_to_string(&out_a).unwrap(),
+            std::fs::read_to_string(&out_b).unwrap(),
+        );
+        assert_eq!(ca, cb, "same seed must produce byte-identical CSV");
+        assert!(ca.lines().next().unwrap().contains("fault"));
+        assert_eq!(ca.lines().count(), 1 + 4, "header + 2 algos × 2 faults");
+    }
+
+    #[test]
+    fn faults_command_rejects_bad_specs() {
+        assert!(run(&argv(&["faults", "--faults", "meteor:3"])).is_err());
+    }
+
+    #[test]
+    fn sweep_accepts_faults_axis() {
+        run(&argv(&[
+            "sweep", "--topo", "case-study", "--pattern", "c2io-sym",
+            "--algo", "gdmodk", "--faults", "none,stage:3:2", "--serial",
+        ]))
+        .unwrap();
     }
 
     #[test]

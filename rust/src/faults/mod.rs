@@ -1,0 +1,152 @@
+//! Fault injection & online rerouting — the "real fabrics degrade"
+//! scenario family the paper's companion works (*High-Quality
+//! Fault-Resiliency in Fat-Trees*) study.
+//!
+//! The subsystem has three layers:
+//!
+//!  * [`FaultSet`] — the ground truth: which links are currently dead.
+//!    (Moved here from `routing::degraded`, which re-exports it.)
+//!  * [`scenario`] — seeded, deterministic *generators* of fault sets:
+//!    random link failures by rate or count, random switch deaths,
+//!    targeted worst-case cuts per stage, and cascading-failure
+//!    sequences ([`FaultModel`] / [`FaultScenario`]).
+//!  * [`view`] / [`router`] — *online rerouting*: [`DegradedTopology`]
+//!    masks failed ports without rebuilding the graph and computes
+//!    up\*/down\* reachability; [`DegradedRouter`] wraps any base
+//!    [`crate::routing::Router`] (Dmodk, Smodk, Gdmodk, Gsmodk, random,
+//!    …) so the same algorithm routes around faults — falling back to
+//!    the next healthy candidate port deterministically, and descending
+//!    only where the descent path survives. With zero faults the wrapped
+//!    router is byte-identical to the base router.
+//!
+//! Faults are a first-class sweep axis ([`crate::sweep::SweepSpec::faults`])
+//! and a CLI subcommand (`pgft faults`), which report per-cell rerouting
+//! cost (routes changed vs. pristine) and fair-rate throughput retention.
+//!
+//! ```
+//! use pgft::prelude::*;
+//! let topo = build_pgft(&PgftSpec::case_study());
+//! let types = Placement::paper_io().apply(&topo).unwrap();
+//! // Worst-case cut: 2 of the 4 parallel links of one L2→top bundle.
+//! let scenario = FaultModel::parse("stage:3:2").unwrap().generate(&topo, 1);
+//! let faults = scenario.fault_set(&topo);
+//! let router = AlgorithmKind::Gdmodk.build_degraded(&topo, Some(&types), 1, &faults).unwrap();
+//! let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+//! let routes = trace_flows(&topo, &*router, &flows);
+//! let rep = pgft::routing::verify::verify_routes(&topo, &routes);
+//! assert!(rep.deadlock_free && rep.ensure_valid().is_ok());
+//! ```
+
+pub mod router;
+pub mod scenario;
+pub mod view;
+
+pub use router::DegradedRouter;
+pub use scenario::{FaultModel, FaultScenario};
+pub use view::{DegradedTopology, ReachField};
+
+use crate::topology::{LinkId, Topology};
+
+/// Set of failed links.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSet {
+    dead: Vec<bool>,
+    count: usize,
+}
+
+impl FaultSet {
+    /// A fully healthy fabric (no dead links).
+    pub fn none(topo: &Topology) -> FaultSet {
+        FaultSet { dead: vec![false; topo.links.len()], count: 0 }
+    }
+
+    /// A fault set with the given links dead.
+    pub fn from_links(topo: &Topology, links: &[LinkId]) -> FaultSet {
+        let mut f = FaultSet::none(topo);
+        for &l in links {
+            f.kill(l);
+        }
+        f
+    }
+
+    /// Mark a link dead (idempotent).
+    pub fn kill(&mut self, link: LinkId) {
+        if !self.dead[link] {
+            self.dead[link] = true;
+            self.count += 1;
+        }
+    }
+
+    /// Kill every link incident to a switch (models a switch death).
+    pub fn kill_switch(&mut self, topo: &Topology, sw: crate::topology::SwitchId) {
+        let s = &topo.switches[sw];
+        for &p in s.up_ports.iter().chain(&s.down_ports) {
+            self.kill(topo.ports[p].link);
+        }
+    }
+
+    /// Mark a link healthy again (idempotent).
+    pub fn revive(&mut self, link: LinkId) {
+        if self.dead[link] {
+            self.dead[link] = false;
+            self.count -= 1;
+        }
+    }
+
+    /// Whether a link is currently dead.
+    #[inline]
+    pub fn is_dead(&self, link: LinkId) -> bool {
+        self.dead[link]
+    }
+
+    /// Number of dead links.
+    pub fn num_dead(&self) -> usize {
+        self.count
+    }
+
+    /// Ids of all dead links, ascending.
+    pub fn dead_links(&self) -> Vec<LinkId> {
+        self.dead
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    #[test]
+    fn fault_set_bookkeeping() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let mut f = FaultSet::none(&topo);
+        assert_eq!(f.num_dead(), 0);
+        f.kill(3);
+        f.kill(3);
+        f.kill(7);
+        assert_eq!(f.num_dead(), 2);
+        assert_eq!(f.dead_links(), vec![3, 7]);
+        f.revive(3);
+        assert_eq!(f.num_dead(), 1);
+        assert!(f.is_dead(7) && !f.is_dead(3));
+    }
+
+    #[test]
+    fn from_links_and_kill_switch() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let f = FaultSet::from_links(&topo, &[1, 5, 5]);
+        assert_eq!(f.num_dead(), 2);
+        let mut g = FaultSet::none(&topo);
+        let l2 = topo.level_switches(2).next().unwrap();
+        g.kill_switch(&topo, l2);
+        // L2 switch of the case study: 4 down + 4 up links.
+        assert_eq!(g.num_dead(), 8);
+        for &p in &topo.switches[l2].up_ports {
+            assert!(g.is_dead(topo.ports[p].link));
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! [`DegradedRouter`] — online rerouting for *any* base algorithm.
+//!
+//! The wrapper keeps the base algorithm's decisions wherever they
+//! survive and deterministically falls back where they don't:
+//!
+//!  * **climb** — at an element that cannot pure-descend to the
+//!    destination, take the base algorithm's up-port if its link is
+//!    alive and its parent still reaches the destination; otherwise
+//!    rotate to the next healthy viable up-port (cyclically from the
+//!    preferred index, so the fallback is deterministic and stays close
+//!    to the base distribution);
+//!  * **descend** — start descending exactly at the first element whose
+//!    pure-descent path survives ([`ReachField::descend`]); among the
+//!    parallel links toward the destination's subtree, take the base
+//!    algorithm's choice if alive, else rotate.
+//!
+//! Because routes are strictly "climb while descent is broken, then
+//! descend", they are valley-free and loop-free for every fault set, so
+//! the channel dependency graph stays acyclic (deadlock freedom is
+//! structural, not incidental). With zero faults the preferred choice is
+//! always viable and the wrapper is **byte-identical** to the base
+//! router — the property `tests/fault_rerouting.rs` pins.
+//!
+//! Construction fails (cleanly, with the broken pair named) when some
+//! node pair has no surviving up\*/down\* path — the caller decides
+//! whether that scenario is an error or a skipped sweep cell.
+
+use super::view::DegradedTopology;
+use super::FaultSet;
+use crate::routing::Router;
+use crate::topology::{Endpoint, Nid, PortId, SwitchId, Topology};
+use anyhow::{ensure, Result};
+
+/// A fault-aware wrapper around any [`Router`] (see module docs).
+pub struct DegradedRouter {
+    base: Box<dyn Router>,
+    faults: FaultSet,
+    /// Node count of the topology this was built for.
+    n: usize,
+    /// Switch count of the topology this was built for.
+    ns: usize,
+    /// `descend[dst · ns + sw]` — can `sw` pure-descend to `dst`?
+    descend: Vec<bool>,
+    /// `good[dst · (n + ns) + elem]` — does an up\*/down\* path survive?
+    /// (elements nodes-first, as in [`super::view::ReachField`]).
+    good: Vec<bool>,
+}
+
+impl DegradedRouter {
+    /// Wrap `base` for routing on `topo` with the given fault mask.
+    /// Precomputes per-destination reachability; errors if the surviving
+    /// fabric no longer connects every node pair via up\*/down\* paths.
+    pub fn new(
+        topo: &Topology,
+        faults: &FaultSet,
+        base: Box<dyn Router>,
+    ) -> Result<DegradedRouter> {
+        let n = topo.num_nodes();
+        let ns = topo.num_switches();
+        let view = DegradedTopology::new(topo, faults);
+        let mut descend = vec![false; n * ns];
+        let mut good = vec![false; n * (n + ns)];
+        for dst in 0..n as Nid {
+            let field = view.reach(dst);
+            for src in 0..n {
+                ensure!(
+                    field.good[src],
+                    "fabric partitioned: no surviving up*/down* path {src} -> {dst} \
+                     ({} dead links)",
+                    faults.num_dead()
+                );
+            }
+            let d = dst as usize;
+            descend[d * ns..(d + 1) * ns].copy_from_slice(&field.descend);
+            good[d * (n + ns)..(d + 1) * (n + ns)].copy_from_slice(&field.good);
+        }
+        Ok(DegradedRouter { base, faults: faults.clone(), n, ns, descend, good })
+    }
+
+    /// The fault mask this router routes around.
+    pub fn faults(&self) -> &FaultSet {
+        &self.faults
+    }
+
+    /// Whether element `sw` still reaches `dst` (up\*/down\*).
+    #[inline]
+    fn switch_good(&self, sw: SwitchId, dst: Nid) -> bool {
+        self.good[dst as usize * (self.n + self.ns) + self.n + sw]
+    }
+
+    /// An up-port is viable if its cable is alive and its parent still
+    /// reaches the destination.
+    #[inline]
+    fn up_viable(&self, topo: &Topology, port: PortId, dst: Nid) -> bool {
+        if self.faults.is_dead(topo.ports[port].link) {
+            return false;
+        }
+        match topo.port_peer(port) {
+            Endpoint::Switch(parent) => self.switch_good(parent, dst),
+            Endpoint::Node(_) => false,
+        }
+    }
+
+    /// First viable up-port scanning cyclically from the preferred one.
+    fn pick_up(&self, topo: &Topology, ports: &[PortId], preferred: PortId, dst: Nid) -> PortId {
+        let start = topo.ports[preferred].index as usize;
+        debug_assert_eq!(ports[start], preferred, "preferred port not owned by element");
+        for i in 0..ports.len() {
+            let port = ports[(start + i) % ports.len()];
+            if self.up_viable(topo, port, dst) {
+                return port;
+            }
+        }
+        unreachable!(
+            "no viable up-port toward {dst}: connectivity was validated at construction"
+        )
+    }
+}
+
+impl Router for DegradedRouter {
+    fn name(&self) -> String {
+        format!("degraded[{} dead]({})", self.faults.num_dead(), self.base.name())
+    }
+
+    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId {
+        let preferred = self.base.inject_port(topo, src, dst);
+        self.pick_up(topo, &topo.nodes[src as usize].up_ports, preferred, dst)
+    }
+
+    fn up_port(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
+        let preferred = self.base.up_port(topo, sw, src, dst);
+        self.pick_up(topo, &topo.switches[sw].up_ports, preferred, dst)
+    }
+
+    fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
+        let level = topo.switches[sw].level;
+        let p_l = topo.spec.p[level - 1];
+        let preferred = self.base.down_link(topo, sw, src, dst) % p_l;
+        for i in 0..p_l {
+            let j = (preferred + i) % p_l;
+            if !self.faults.is_dead(topo.ports[topo.down_port_toward(sw, dst, j)].link) {
+                return j;
+            }
+        }
+        unreachable!("descend_at guaranteed an alive parallel link toward {dst} at switch {sw}")
+    }
+
+    fn descend_at(&self, _topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
+        self.descend[dst as usize * self.ns + sw]
+    }
+
+    fn reaches(&self, _topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
+        self.switch_good(sw, dst)
+    }
+
+    fn dest_based(&self) -> bool {
+        self.base.dest_based()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::routing::trace::trace_flows;
+    use crate::routing::verify::{all_pairs, verify_routes};
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn topo() -> crate::topology::Topology {
+        build_pgft(&PgftSpec::case_study())
+    }
+
+    #[test]
+    fn zero_faults_is_byte_identical_to_base() {
+        let t = topo();
+        let types = Placement::paper_io().apply(&t).unwrap();
+        let faults = FaultSet::none(&t);
+        let flows = all_pairs(64);
+        for kind in AlgorithmKind::ALL {
+            let base = kind.build(&t, Some(&types), 3);
+            let wrapped =
+                DegradedRouter::new(&t, &faults, kind.build(&t, Some(&types), 3)).unwrap();
+            let a = trace_flows(&t, &*base, &flows);
+            let b = trace_flows(&t, &wrapped, &flows);
+            assert_eq!(a, b, "{kind}: zero faults must not change a single port");
+        }
+    }
+
+    #[test]
+    fn reroutes_around_dead_parallel_links() {
+        let t = topo();
+        let types = Placement::paper_io().apply(&t).unwrap();
+        // Kill 3 of 4 parallel links of the first L2→top bundle.
+        let l2 = t.level_switches(2).next().unwrap();
+        let mut faults = FaultSet::none(&t);
+        for &p in t.switches[l2].up_ports.iter().take(3) {
+            faults.kill(t.ports[p].link);
+        }
+        let flows = all_pairs(64);
+        for kind in AlgorithmKind::ALL {
+            let r = DegradedRouter::new(&t, &faults, kind.build(&t, Some(&types), 1))
+                .unwrap_or_else(|e| panic!("{kind}: {e}"));
+            let routes = trace_flows(&t, &r, &flows);
+            let rep = verify_routes(&t, &routes);
+            rep.ensure_valid().unwrap_or_else(|e| panic!("{kind}: {e}"));
+            assert!(rep.deadlock_free, "{kind}");
+            assert_eq!(rep.valley_free, rep.flows, "{kind}: reroutes stay valley-free");
+            for route in &routes {
+                for &p in &route.ports {
+                    assert!(!faults.is_dead(t.ports[p].link), "{kind} uses a dead link");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_a_clean_error() {
+        let t = topo();
+        let mut faults = FaultSet::none(&t);
+        faults.kill(t.ports[t.nodes[0].up_ports[0]].link); // node 0 isolated
+        let err = DegradedRouter::new(&t, &faults, AlgorithmKind::Dmodk.build(&t, None, 0))
+            .err()
+            .expect("partition must be rejected");
+        assert!(err.to_string().contains("partitioned"), "{err}");
+    }
+
+    #[test]
+    fn whole_bundle_death_shifts_to_surviving_top() {
+        let t = topo();
+        // Kill the whole 4-link bundle of L2 switch 0: destinations in
+        // subgroup 0 can no longer be reached through its paired top, so
+        // every cross-subgroup flow shifts to the other top. All routes
+        // stay minimal (the sibling L2 path has the same length).
+        let l2 = t.level_switches(2).next().unwrap();
+        let mut faults = FaultSet::none(&t);
+        for &p in &t.switches[l2].up_ports {
+            faults.kill(t.ports[p].link);
+        }
+        let r = DegradedRouter::new(&t, &faults, AlgorithmKind::Gdmodk.build(&t, None, 0))
+            .unwrap();
+        let routes = trace_flows(&t, &r, &all_pairs(64));
+        let rep = verify_routes(&t, &routes);
+        rep.ensure_valid().unwrap();
+        assert!(rep.deadlock_free);
+        assert_eq!(rep.minimal, rep.flows, "sibling-L2 reroutes keep minimal length");
+        for route in &routes {
+            for &p in &route.ports {
+                assert!(!faults.is_dead(t.ports[p].link));
+            }
+        }
+    }
+
+    #[test]
+    fn dead_node_link_forces_plane_selection() {
+        // A PGFT with w1 = 2 is two independent routing "planes" (every
+        // bottom digit commits the descent path). Killing one of the
+        // destination's two node links poisons that whole plane for the
+        // destination: the reachability fields propagate the breakage
+        // down to the injection choice, every route to node 0 enters at
+        // plane 1, and — because PGFT descent is committed per plane —
+        // all reroutes stay minimal.
+        let spec = PgftSpec::new(vec![4, 4], vec![2, 2], vec![1, 1]).unwrap();
+        let t = build_pgft(&spec);
+        let dead_port = t.nodes[0].up_ports[0];
+        let mut faults = FaultSet::none(&t);
+        faults.kill(t.ports[dead_port].link);
+        let r = DegradedRouter::new(&t, &faults, AlgorithmKind::Dmodk.build(&t, None, 0))
+            .unwrap();
+        let routes = trace_flows(&t, &r, &all_pairs(t.num_nodes() as u32));
+        let rep = verify_routes(&t, &routes);
+        rep.ensure_valid().unwrap();
+        assert!(rep.deadlock_free);
+        assert_eq!(rep.minimal, rep.flows, "plane selection keeps routes minimal");
+        // Every route to node 0 must arrive through the surviving plane:
+        // its final hop is node 0's other (plane-1) leaf link.
+        let alive_leaf = match t.port_peer(t.nodes[0].up_ports[1]) {
+            Endpoint::Switch(s) => s,
+            Endpoint::Node(_) => unreachable!(),
+        };
+        for route in routes.iter().filter(|r| r.dst == 0 && r.src != 0) {
+            let last = *route.ports.last().unwrap();
+            match t.ports[last].owner {
+                Endpoint::Switch(s) => assert_eq!(s, alive_leaf, "{}->0", route.src),
+                Endpoint::Node(_) => panic!("final hop must be a leaf down-port"),
+            }
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! Seeded, deterministic fault-scenario generation.
+//!
+//! A [`FaultModel`] is a compact description of *how* a fabric degrades
+//! (parseable from CLI/config strings so it can ride on sweep grids);
+//! [`FaultModel::generate`] expands it against a concrete topology and
+//! seed into a [`FaultScenario`] — an *ordered* list of link deaths.
+//! The order matters for cascading-failure studies: every prefix of the
+//! event list is itself a valid (smaller) scenario, exposed by
+//! [`FaultScenario::stages`].
+//!
+//! Generation is a pure function of `(model, topology, seed)`, so sweep
+//! cells and CLI runs reproduce byte-identically.
+//!
+//! Unless a stage is named explicitly, the random models draw only from
+//! *switch-to-switch* links (stage ≥ 2): with the common `w_1 = 1`
+//! wiring every node has a single injection cable, so killing a stage-1
+//! link always partitions the fabric and tells us nothing about
+//! rerouting quality. `stage:1:K` still targets node links explicitly.
+
+use super::FaultSet;
+use crate::topology::{LinkId, Topology};
+use crate::util::rng::Xoshiro256;
+use anyhow::{bail, ensure, Context, Result};
+
+/// A parseable description of how to degrade a fabric.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultModel {
+    /// No faults (the pristine reference row of a sweep).
+    None,
+    /// Every eligible (stage ≥ 2) link dies independently with this
+    /// probability.
+    LinkRate {
+        /// Per-link failure probability in `[0, 1]`.
+        rate: f64,
+    },
+    /// Exactly `count` distinct eligible links die, sampled uniformly.
+    LinkCount {
+        /// Number of links to kill.
+        count: usize,
+    },
+    /// `count` switches die (all their links fail), sampled uniformly
+    /// from the non-leaf levels `2..=h` (leaf deaths always partition
+    /// `w_1 = 1` fabrics).
+    SwitchCount {
+        /// Number of switches to kill.
+        count: usize,
+    },
+    /// Targeted worst-case cut at one stage: kills `count` links of the
+    /// stage *concentrated on consecutive up-link bundles* of one lower
+    /// element (spilling into the next element's bundle), which is the
+    /// adversarial pattern that removes path diversity fastest. The seed
+    /// rotates which element is hit first.
+    StageCut {
+        /// Link stage to attack (stage `l` joins levels `l-1` and `l`).
+        stage: usize,
+        /// Number of links to kill at that stage.
+        count: usize,
+    },
+    /// A cascading failure: `count` sequential random single-link
+    /// deaths. The final fault set equals `LinkCount`, but the scenario
+    /// records the order so [`FaultScenario::stages`] can replay the
+    /// cascade step by step.
+    Cascade {
+        /// Number of cascade steps (one link per step).
+        count: usize,
+    },
+}
+
+impl FaultModel {
+    /// Parse a compact spec string:
+    ///
+    /// | spec          | meaning                                        |
+    /// |---------------|------------------------------------------------|
+    /// | `none`        | pristine fabric                                |
+    /// | `rate:R`      | each eligible link dies with probability `R`   |
+    /// | `links:K`     | `K` uniform random eligible links die          |
+    /// | `switches:K`  | `K` random non-leaf switches die entirely      |
+    /// | `stage:L:K`   | worst-case cut of `K` links at stage `L`       |
+    /// | `cascade:K`   | `K` sequential single-link failures            |
+    pub fn parse(s: &str) -> Result<FaultModel> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let arg = |i: usize| -> Result<usize> {
+            parts
+                .get(i)
+                .with_context(|| format!("fault spec {s:?}: missing arg {i}"))?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("fault spec {s:?}: {e}"))
+        };
+        Ok(match parts[0] {
+            "none" => FaultModel::None,
+            "rate" => {
+                let rate: f64 = parts
+                    .get(1)
+                    .with_context(|| format!("fault spec {s:?}: missing rate"))?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault spec {s:?}: {e}"))?;
+                ensure!((0.0..=1.0).contains(&rate), "fault rate {rate} outside [0, 1]");
+                FaultModel::LinkRate { rate }
+            }
+            "links" => FaultModel::LinkCount { count: arg(1)? },
+            "switches" => FaultModel::SwitchCount { count: arg(1)? },
+            "stage" => FaultModel::StageCut { stage: arg(1)?, count: arg(2)? },
+            "cascade" => FaultModel::Cascade { count: arg(1)? },
+            other => bail!("unknown fault model {other:?} (none|rate:R|links:K|switches:K|stage:L:K|cascade:K)"),
+        })
+    }
+
+    /// Canonical spec string (inverse of [`FaultModel::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            FaultModel::None => "none".into(),
+            FaultModel::LinkRate { rate } => format!("rate:{rate}"),
+            FaultModel::LinkCount { count } => format!("links:{count}"),
+            FaultModel::SwitchCount { count } => format!("switches:{count}"),
+            FaultModel::StageCut { stage, count } => format!("stage:{stage}:{count}"),
+            FaultModel::Cascade { count } => format!("cascade:{count}"),
+        }
+    }
+
+    /// Whether this model produces no faults regardless of seed.
+    pub fn is_none(&self) -> bool {
+        matches!(self, FaultModel::None)
+    }
+
+    /// Check the model against a concrete topology shape ([`parse`] only
+    /// sees the string): a `stage:L:K` cut must name an existing stage,
+    /// otherwise it would silently expand to a zero-fault scenario and a
+    /// typo would masquerade as "this fault costs nothing".
+    ///
+    /// [`parse`]: FaultModel::parse
+    pub fn validate_for(&self, spec: &crate::topology::PgftSpec) -> Result<()> {
+        if let FaultModel::StageCut { stage, .. } = self {
+            ensure!(
+                (1..=spec.h).contains(stage),
+                "fault spec {:?}: stage {stage} does not exist on an h={} topology \
+                 (stages are 1..={})",
+                self.name(),
+                spec.h,
+                spec.h
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand the model against a topology into a concrete, ordered
+    /// scenario. Deterministic in `(self, topo, seed)`. Counts larger
+    /// than the eligible population saturate (everything eligible dies).
+    pub fn generate(&self, topo: &Topology, seed: u64) -> FaultScenario {
+        let mut rng = Xoshiro256::new(seed ^ 0xFA_0175_CE4A_5105);
+        let eligible: Vec<LinkId> = topo
+            .links
+            .iter()
+            .filter(|l| l.stage >= 2)
+            .map(|l| l.id)
+            .collect();
+        let events: Vec<LinkId> = match self {
+            FaultModel::None => Vec::new(),
+            FaultModel::LinkRate { rate } => eligible
+                .iter()
+                .copied()
+                .filter(|_| rng.next_f64() < *rate)
+                .collect(),
+            FaultModel::LinkCount { count } | FaultModel::Cascade { count } => {
+                let k = (*count).min(eligible.len());
+                let mut idx = rng.sample_indices(eligible.len().max(1), k);
+                // sample_indices is unordered between runs of different k;
+                // for LinkCount the order is irrelevant, for Cascade it IS
+                // the cascade order — keep the sampled order as drawn, but
+                // shuffle so the cascade does not trend toward high ids.
+                rng.shuffle(&mut idx);
+                idx.into_iter().map(|i| eligible[i]).collect()
+            }
+            FaultModel::SwitchCount { count } => {
+                let candidates: Vec<usize> = (2..=topo.spec.h)
+                    .flat_map(|l| topo.level_switches(l))
+                    .collect();
+                let k = (*count).min(candidates.len());
+                let picks = rng.sample_indices(candidates.len().max(1), k);
+                let mut events = Vec::new();
+                for i in picks {
+                    let s = &topo.switches[candidates[i]];
+                    for &p in s.up_ports.iter().chain(&s.down_ports) {
+                        let link = topo.ports[p].link;
+                        if !events.contains(&link) {
+                            events.push(link);
+                        }
+                    }
+                }
+                events
+            }
+            FaultModel::StageCut { stage, count } => {
+                let stage_links: Vec<LinkId> = topo
+                    .links
+                    .iter()
+                    .filter(|l| l.stage == *stage)
+                    .map(|l| l.id)
+                    .collect();
+                if stage_links.is_empty() {
+                    Vec::new()
+                } else {
+                    // Links of one stage are contiguous bundles per lower
+                    // element in id order (w_l · p_l up-links each); start
+                    // at a seeded bundle boundary and kill consecutively.
+                    let bundle = (topo.spec.up_ports_at(*stage - 1) as usize).max(1);
+                    let bundles = (stage_links.len() / bundle).max(1);
+                    let start = (rng.next_below(bundles as u64) as usize) * bundle;
+                    let k = (*count).min(stage_links.len());
+                    (0..k)
+                        .map(|i| stage_links[(start + i) % stage_links.len()])
+                        .collect()
+                }
+            }
+        };
+        FaultScenario { model: self.name(), seed, events }
+    }
+}
+
+impl std::fmt::Display for FaultModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// A concrete, ordered fault scenario: the expansion of one
+/// [`FaultModel`] against one topology and seed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultScenario {
+    /// Canonical model spec this was generated from.
+    pub model: String,
+    /// Generation seed.
+    pub seed: u64,
+    /// Ordered link deaths (duplicates never occur).
+    pub events: Vec<LinkId>,
+}
+
+impl FaultScenario {
+    /// Number of dead links in the final state.
+    pub fn num_faults(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The final fault set (all events applied).
+    pub fn fault_set(&self, topo: &Topology) -> FaultSet {
+        FaultSet::from_links(topo, &self.events)
+    }
+
+    /// Cumulative fault sets after each event — `stages()[i]` holds the
+    /// first `i + 1` deaths. Empty for a zero-fault scenario. Replays a
+    /// cascade step by step.
+    pub fn stages(&self, topo: &Topology) -> Vec<FaultSet> {
+        let mut out = Vec::with_capacity(self.events.len());
+        let mut f = FaultSet::none(topo);
+        for &l in &self.events {
+            f.kill(l);
+            out.push(f.clone());
+        }
+        out
+    }
+
+    /// Short human label, e.g. `links:4@seed1(4 dead)`.
+    pub fn label(&self) -> String {
+        format!("{}@seed{}({} dead)", self.model, self.seed, self.events.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn topo() -> Topology {
+        build_pgft(&PgftSpec::case_study())
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["none", "rate:0.05", "links:4", "switches:2", "stage:3:2", "cascade:5"] {
+            let m = FaultModel::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(m.name(), s);
+            assert_eq!(FaultModel::parse(&m.name()).unwrap(), m);
+        }
+        assert!(FaultModel::parse("meteor:3").is_err());
+        assert!(FaultModel::parse("rate:1.5").is_err());
+        assert!(FaultModel::parse("links").is_err());
+        assert!(FaultModel::parse("stage:3").is_err());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let t = topo();
+        for spec in ["rate:0.2", "links:4", "switches:1", "stage:3:2", "cascade:3"] {
+            let m = FaultModel::parse(spec).unwrap();
+            let a = m.generate(&t, 7);
+            let b = m.generate(&t, 7);
+            assert_eq!(a, b, "{spec} must be deterministic");
+            let c = m.generate(&t, 8);
+            // Different seeds (almost surely) differ for random models.
+            if spec.starts_with("links") || spec.starts_with("cascade") {
+                assert_ne!(a.events, c.events, "{spec} should vary with seed");
+            }
+        }
+    }
+
+    #[test]
+    fn counts_and_eligibility() {
+        let t = topo();
+        let s = FaultModel::LinkCount { count: 4 }.generate(&t, 1);
+        assert_eq!(s.num_faults(), 4);
+        // Only switch-to-switch links are eligible.
+        for &l in &s.events {
+            assert!(t.links[l].stage >= 2, "link {l} is a node link");
+        }
+        // Saturation: more than the 32 eligible links of the case study.
+        let s = FaultModel::LinkCount { count: 10_000 }.generate(&t, 1);
+        assert_eq!(s.num_faults(), 32);
+        // Zero-fault scenarios.
+        assert_eq!(FaultModel::None.generate(&t, 1).num_faults(), 0);
+        assert_eq!(FaultModel::LinkRate { rate: 0.0 }.generate(&t, 1).num_faults(), 0);
+        assert_eq!(FaultModel::LinkCount { count: 0 }.generate(&t, 1).num_faults(), 0);
+        // Rate 1 kills every eligible link.
+        assert_eq!(FaultModel::LinkRate { rate: 1.0 }.generate(&t, 1).num_faults(), 32);
+    }
+
+    #[test]
+    fn out_of_range_stage_rejected_by_validate_for() {
+        let t = topo();
+        let m = FaultModel::parse("stage:4:2").unwrap(); // h = 3: no stage 4
+        assert!(m.validate_for(&t.spec).is_err());
+        assert!(FaultModel::parse("stage:0:2").unwrap().validate_for(&t.spec).is_err());
+        for ok in ["stage:1:1", "stage:2:1", "stage:3:4", "rate:0.5", "none"] {
+            FaultModel::parse(ok).unwrap().validate_for(&t.spec).unwrap();
+        }
+    }
+
+    #[test]
+    fn switch_death_kills_incident_links() {
+        let t = topo();
+        let s = FaultModel::SwitchCount { count: 1 }.generate(&t, 3);
+        let f = s.fault_set(&t);
+        // A dead L2 switch has 8 links, a dead top switch has 8 links.
+        assert_eq!(f.num_dead(), 8);
+    }
+
+    #[test]
+    fn stage_cut_concentrates_on_bundles() {
+        let t = topo();
+        // Stage 3 = L2→top, bundled 4 parallel links per L2 switch.
+        let s = FaultModel::StageCut { stage: 3, count: 4 }.generate(&t, 0);
+        assert_eq!(s.num_faults(), 4);
+        // All four dead links hang off the same L2 switch (one bundle).
+        let owners: std::collections::HashSet<_> = s
+            .events
+            .iter()
+            .map(|&l| t.ports[t.links[l].up_port].owner)
+            .collect();
+        assert_eq!(owners.len(), 1, "worst-case cut should hit one bundle");
+        for &l in &s.events {
+            assert_eq!(t.links[l].stage, 3);
+        }
+    }
+
+    #[test]
+    fn cascade_stages_are_cumulative() {
+        let t = topo();
+        let s = FaultModel::Cascade { count: 3 }.generate(&t, 5);
+        let stages = s.stages(&t);
+        assert_eq!(stages.len(), 3);
+        for (i, st) in stages.iter().enumerate() {
+            assert_eq!(st.num_dead(), i + 1);
+            // Each stage contains the previous one.
+            if i > 0 {
+                for l in stages[i - 1].dead_links() {
+                    assert!(st.is_dead(l));
+                }
+            }
+        }
+        assert_eq!(stages.last().unwrap(), &s.fault_set(&t));
+    }
+}

@@ -7,7 +7,9 @@
 //! heterogeneous node-type modelling, flow-level and packet-level
 //! simulators, a parallel experiment-sweep engine ([`sweep`]) that turns
 //! the paper's algorithm × pattern × placement grids into one command,
-//! and a BXI-style fabric-manager coordinator. With the `xla` cargo
+//! a fault-injection & online-rerouting subsystem ([`faults`]) that adds
+//! seeded failure scenarios as a first-class sweep axis, and a BXI-style
+//! fabric-manager coordinator. With the `xla` cargo
 //! feature, the simulation hot path runs AOT-compiled JAX/Pallas
 //! programs through PJRT (see `rust/src/runtime`); without it the exact
 //! pure-rust solvers are used.
@@ -41,6 +43,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod metrics;
 pub mod nodes;
 pub mod patterns;
@@ -54,6 +57,7 @@ pub mod util;
 
 /// Convenience re-exports.
 pub mod prelude {
+    pub use crate::faults::{DegradedRouter, DegradedTopology, FaultModel, FaultScenario, FaultSet};
     pub use crate::metrics::{AlgoSummary, CongestionReport};
     pub use crate::nodes::{NodeType, NodeTypeMap, Placement, TypeReindex};
     pub use crate::patterns::Pattern;

@@ -48,6 +48,25 @@ pub trait Router: Send + Sync {
     /// toward `dst`.
     fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32;
 
+    /// Whether the route should switch from climbing to descending at
+    /// `sw`. On a pristine fabric that is exactly "is `sw` an ancestor
+    /// of `dst`" (the default); fault-aware routers override it to keep
+    /// climbing past ancestors whose descent path died
+    /// (see [`crate::faults::DegradedRouter`]).
+    fn descend_at(&self, topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
+        topo.is_ancestor(sw, dst)
+    }
+
+    /// Whether `sw` can reach `dst` at all under this router. Always
+    /// true on a pristine fabric (the default); fault-aware routers
+    /// report switches cut off from a destination, and
+    /// [`table::ForwardingTables::build`] leaves those entries
+    /// [`table::UNROUTED`].
+    fn reaches(&self, topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
+        let _ = (topo, sw, dst);
+        true
+    }
+
     /// Whether tables depend only on the destination (true for Dmodk,
     /// Gdmodk, Random; false for Smodk/Gsmodk). Dest-based routers can be
     /// materialized into plain linear forwarding tables.
@@ -136,6 +155,22 @@ impl AlgorithmKind {
             AlgorithmKind::Gdmodk => reindex(Basis::Dest),
             AlgorithmKind::Gsmodk => reindex(Basis::Source),
         }
+    }
+
+    /// Instantiate a router that routes around the given fault set:
+    /// [`AlgorithmKind::build`] wrapped in a
+    /// [`crate::faults::DegradedRouter`]. With zero faults the result is
+    /// byte-identical to the plain router. Errors when the surviving
+    /// fabric no longer connects every node pair.
+    pub fn build_degraded(
+        &self,
+        topo: &Topology,
+        types: Option<&NodeTypeMap>,
+        seed: u64,
+        faults: &crate::faults::FaultSet,
+    ) -> Result<Box<dyn Router>> {
+        let base = self.build(topo, types, seed);
+        Ok(Box::new(crate::faults::DegradedRouter::new(topo, faults, base)?))
     }
 }
 

@@ -39,7 +39,13 @@ impl ForwardingTables {
         let mut switch_out = vec![vec![UNROUTED; n]; topo.num_switches()];
         for (sw_id, sw) in topo.switches.iter().enumerate() {
             for dst in 0..n as Nid {
-                let port = if topo.is_ancestor(sw_id, dst) {
+                // Switches cut off from `dst` (possible on degraded
+                // fabrics; never on pristine ones) keep UNROUTED —
+                // no valid route ever transits them toward `dst`.
+                if !router.reaches(topo, sw_id, dst) {
+                    continue;
+                }
+                let port = if router.descend_at(topo, sw_id, dst) {
                     let j = router.down_link(topo, sw_id, 0, dst);
                     topo.down_port_toward(sw_id, dst, j)
                 } else {

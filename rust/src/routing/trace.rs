@@ -68,7 +68,9 @@ pub fn trace_route_into(
             }
             Endpoint::Switch(s) => s,
         };
-        let out = if topo.is_ancestor(sw, dst) {
+        // `descend_at` is "is an ancestor" on pristine fabrics; fault-aware
+        // routers keep climbing past ancestors whose descent path died.
+        let out = if router.descend_at(topo, sw, dst) {
             went_down = true;
             let j = router.down_link(topo, sw, src, dst);
             topo.down_port_toward(sw, dst, j)

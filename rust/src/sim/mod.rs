@@ -48,6 +48,17 @@ pub struct SimReport {
     pub solver: String,
 }
 
+/// Max-min fair rates of a traced route set on unit-capacity links (the
+/// deterministic pure-rust solver). The shared entry point for sweep
+/// cells and the fault subsystem's throughput-retention figures: both
+/// the pristine and the degraded route sets go through this one
+/// function, so retention ratios compare like with like.
+pub fn fair_rates(topo: &Topology, routes: &[crate::routing::trace::RoutePorts]) -> Vec<f64> {
+    let inc = IncidenceMatrix::from_routes(topo, routes);
+    let cap = vec![1.0f64; inc.num_ports()];
+    solve_fairrate_exact(&inc, &cap)
+}
+
 /// Run the flow-level simulation for one algorithm on one pattern.
 /// `runtime`: use the XLA/PJRT artifact when `Some`, else the exact rust
 /// solver.

@@ -8,10 +8,12 @@
 //! example and bench; this module makes it one declarative object:
 //!
 //!  * [`SweepSpec`] — the grid: topology names, placement specs,
-//!    patterns, algorithms, seeds, and whether to attach a flow-level
-//!    max-min throughput simulation to each cell. Parsed from the same
-//!    TOML subset as [`crate::config`] (`pgft sweep --config FILE`) or
-//!    built programmatically ([`SweepSpec::paper_grid`]).
+//!    patterns, algorithms, fault scenarios
+//!    ([`crate::faults::FaultModel`] specs; `"none"` for pristine),
+//!    seeds, and whether to attach a flow-level max-min throughput
+//!    simulation to each cell. Parsed from the same TOML subset as
+//!    [`crate::config`] (`pgft sweep --config FILE`) or built
+//!    programmatically ([`SweepSpec::paper_grid`]).
 //!  * [`run_sweep`] — the engine: fans the grid's cells out over a
 //!    [`crate::util::par`] worker pool (rayon is not in the offline
 //!    vendor set), shares work between cells — pattern flow lists are
@@ -44,6 +46,8 @@ pub mod result;
 pub mod runner;
 pub mod spec;
 
-pub use result::{summaries, sweep_results_from_table, sweep_table, SweepResult, SweepSim};
+pub use result::{
+    fault_table, summaries, sweep_results_from_table, sweep_table, SweepResult, SweepSim,
+};
 pub use runner::{run_sweep, SweepOptions};
 pub use spec::SweepSpec;

@@ -18,31 +18,46 @@ pub struct SweepSim {
 }
 
 /// One cell of an executed sweep: the grid coordinates plus the static
-/// congestion summary and optional throughput figures.
+/// congestion summary, fault-scenario figures and optional throughput.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SweepResult {
     /// Topology spec string of the cell (as given in the [`super::SweepSpec`]).
     pub topology: String,
     /// Placement spec string of the cell.
     pub placement: String,
+    /// Fault-scenario spec string of the cell (`"none"` for pristine).
+    pub fault: String,
     /// Requested seed (deterministic algorithms share traced routes
     /// across seeds; the row still records what was asked for).
     pub seed: u64,
     /// Static congestion metrics (§III.A): `C_topo`, hot ports per
     /// level, used top-ports — see [`AlgoSummary`].
     pub summary: AlgoSummary,
+    /// Dead links the cell's fault scenario produced (0 for `none`).
+    pub dead_links: usize,
+    /// Rerouting cost: flows whose port sequence differs from the
+    /// pristine trace of the same cell (0 for `none`).
+    pub routes_changed: usize,
+    /// False when the scenario partitioned the fabric — the summary is
+    /// zeroed then and `routes_changed` counts every flow as lost.
+    pub routable: bool,
     /// Throughput figures when the spec set `simulate`.
     pub sim: Option<SweepSim>,
+    /// Fair-rate throughput retention vs. the pristine routes of the
+    /// same cell (degraded aggregate / pristine aggregate); present only
+    /// for simulated fault cells.
+    pub retention: Option<f64>,
 }
 
 /// Column names of the sweep table, in emission order. Vector-valued
 /// summary fields (`hot_per_level`, `cmax_up`, `cmax_down`) are encoded
 /// `"a|b|c"` so every cell stays CSV- and JSON-friendly.
-pub const COLUMNS: [&str; 16] = [
+pub const COLUMNS: [&str; 21] = [
     "topology",
     "placement",
     "algo",
     "pattern",
+    "fault",
     "seed",
     "flows",
     "C_topo",
@@ -52,9 +67,13 @@ pub const COLUMNS: [&str; 16] = [
     "cmax_down",
     "used_top",
     "total_top",
+    "dead_links",
+    "routes_changed",
+    "routable",
     "agg_thru",
     "min_rate",
     "completion",
+    "retention",
 ];
 
 fn join_nums<T: std::fmt::Display>(xs: &[T]) -> String {
@@ -85,11 +104,13 @@ impl SweepResult {
             ),
             None => (String::new(), String::new(), String::new()),
         };
+        let retention = self.retention.map(|r| r.to_string()).unwrap_or_default();
         vec![
             self.topology.clone(),
             self.placement.clone(),
             s.algorithm.clone(),
             s.pattern.clone(),
+            self.fault.clone(),
             self.seed.to_string(),
             s.flows.to_string(),
             s.c_topo.to_string(),
@@ -99,9 +120,13 @@ impl SweepResult {
             join_nums(&s.c_max_down),
             s.used_top_ports.to_string(),
             s.total_top_ports.to_string(),
+            self.dead_links.to_string(),
+            self.routes_changed.to_string(),
+            if self.routable { "1".to_string() } else { "0".to_string() },
             agg,
             min,
             comp,
+            retention,
         ]
     }
 
@@ -124,32 +149,43 @@ impl SweepResult {
                 .parse()
                 .with_context(|| format!("column {} = {:?}", COLUMNS[i], cells[i]))
         };
-        let sim = if cells[13].is_empty() && cells[14].is_empty() && cells[15].is_empty() {
+        let sim = if cells[17].is_empty() && cells[18].is_empty() && cells[19].is_empty() {
             None
         } else {
             Some(SweepSim {
-                aggregate_throughput: float(13)?,
-                min_rate: float(14)?,
-                completion_time: float(15)?,
+                aggregate_throughput: float(17)?,
+                min_rate: float(18)?,
+                completion_time: float(19)?,
             })
+        };
+        let retention = if cells[20].is_empty() { None } else { Some(float(20)?) };
+        let routable = match cells[16].as_str() {
+            "1" => true,
+            "0" => false,
+            other => anyhow::bail!("column routable = {other:?} (want 0 or 1)"),
         };
         Ok(SweepResult {
             topology: cells[0].clone(),
             placement: cells[1].clone(),
-            seed: int(4)?,
+            fault: cells[4].clone(),
+            seed: int(5)?,
             summary: AlgoSummary {
                 algorithm: cells[2].clone(),
                 pattern: cells[3].clone(),
-                flows: int(5)? as usize,
-                c_topo: int(6)? as u32,
-                hot_total: int(7)? as usize,
-                hot_per_level: split_nums(&cells[8])?,
-                c_max_up: split_nums(&cells[9])?,
-                c_max_down: split_nums(&cells[10])?,
-                used_top_ports: int(11)? as usize,
-                total_top_ports: int(12)? as usize,
+                flows: int(6)? as usize,
+                c_topo: int(7)? as u32,
+                hot_total: int(8)? as usize,
+                hot_per_level: split_nums(&cells[9])?,
+                c_max_up: split_nums(&cells[10])?,
+                c_max_down: split_nums(&cells[11])?,
+                used_top_ports: int(12)? as usize,
+                total_top_ports: int(13)? as usize,
             },
+            dead_links: int(14)? as usize,
+            routes_changed: int(15)? as usize,
+            routable,
             sim,
+            retention,
         })
     }
 }
@@ -163,11 +199,40 @@ pub fn summaries(rows: &[SweepResult]) -> Vec<AlgoSummary> {
 /// Collect sweep rows into a [`Table`] for text/CSV/JSON emission.
 pub fn sweep_table(rows: &[SweepResult]) -> Table {
     let mut t = Table::new(
-        "experiment sweep: algorithm × pattern × placement × seed grid",
+        "experiment sweep: algorithm × pattern × placement × fault × seed grid",
         &COLUMNS,
     );
     for r in rows {
         t.row(&r.to_cells());
+    }
+    t
+}
+
+/// A focused fault-resiliency companion table: one row per sweep cell
+/// with just the degradation story — `C_topo`, dead links, rerouting
+/// cost and throughput retention. This is the paper-style "comparison
+/// grid × fault-rate curve" view `pgft faults` prints.
+pub fn fault_table(rows: &[SweepResult]) -> Table {
+    let mut t = Table::new(
+        "fault resiliency: rerouting cost and throughput retention per scenario",
+        &[
+            "topology", "algo", "pattern", "fault", "seed", "routable", "dead_links",
+            "routes_changed", "C_topo", "retention",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            r.topology.clone(),
+            r.summary.algorithm.clone(),
+            r.summary.pattern.clone(),
+            r.fault.clone(),
+            r.seed.to_string(),
+            if r.routable { "yes".to_string() } else { "PARTITIONED".to_string() },
+            r.dead_links.to_string(),
+            r.routes_changed.to_string(),
+            r.summary.c_topo.to_string(),
+            r.retention.map(|x| format!("{x:.4}")).unwrap_or_default(),
+        ]);
     }
     t
 }
@@ -191,6 +256,7 @@ mod tests {
         SweepResult {
             topology: "case-study".into(),
             placement: "io:last:1,service:first:1".into(),
+            fault: "stage:3:2".into(),
             seed: 7,
             summary: AlgoSummary {
                 algorithm: "gdmodk".into(),
@@ -204,11 +270,15 @@ mod tests {
                 used_top_ports: 8,
                 total_top_ports: 16,
             },
+            dead_links: 2,
+            routes_changed: 11,
+            routable: true,
             sim: sim.then(|| SweepSim {
                 aggregate_throughput: 8.0,
                 min_rate: 1.0 / 7.0,
                 completion_time: 7.0,
             }),
+            retention: sim.then(|| 0.875),
         }
     }
 
@@ -224,6 +294,15 @@ mod tests {
     }
 
     #[test]
+    fn unroutable_rows_roundtrip() {
+        let mut r = sample(false);
+        r.routable = false;
+        r.routes_changed = r.summary.flows;
+        let back = SweepResult::from_cells(&r.to_cells()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
     fn table_roundtrip() {
         let rows = vec![sample(false), sample(true)];
         let t = sweep_table(&rows);
@@ -231,11 +310,25 @@ mod tests {
     }
 
     #[test]
+    fn fault_table_renders() {
+        let t = fault_table(&[sample(true)]);
+        let text = t.to_text();
+        assert!(text.contains("stage:3:2"), "{text}");
+        assert!(text.contains("0.8750"), "{text}");
+        let mut dead = sample(false);
+        dead.routable = false;
+        assert!(fault_table(&[dead]).to_text().contains("PARTITIONED"));
+    }
+
+    #[test]
     fn malformed_rows_rejected() {
         let mut cells = sample(false).to_cells();
-        cells[6] = "not-a-number".into();
+        cells[7] = "not-a-number".into();
         assert!(SweepResult::from_cells(&cells).is_err());
         assert!(SweepResult::from_cells(&cells[..5]).is_err());
+        let mut cells = sample(false).to_cells();
+        cells[16] = "maybe".into();
+        assert!(SweepResult::from_cells(&cells).is_err(), "routable must be 0/1");
         let wrong = Table::new("x", &["a", "b"]);
         assert!(sweep_results_from_table(&wrong).is_err());
     }

@@ -3,12 +3,13 @@
 
 use super::result::{SweepResult, SweepSim};
 use super::spec::SweepSpec;
+use crate::faults::{DegradedRouter, FaultModel};
 use crate::metrics::{AlgoSummary, CongestionReport};
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
 use crate::routing::trace::trace_flows;
 use crate::routing::AlgorithmKind;
-use crate::sim::{solve_fairrate_exact, IncidenceMatrix};
+use crate::sim::fair_rates;
 use crate::topology::{families, Topology};
 use crate::util::par;
 use anyhow::Result;
@@ -41,36 +42,50 @@ struct Group {
     flows: Vec<Vec<(u32, u32)>>,
 }
 
-/// A unique unit of work: (group, algorithm, pattern, effective seed).
-type JobKey = (usize, AlgorithmKind, usize, u64);
+/// A unique unit of work: (group, algorithm, pattern, fault, effective
+/// seed).
+type JobKey = (usize, AlgorithmKind, usize, usize, u64);
 
 /// Execute a sweep and return one [`SweepResult`] per grid cell, in
 /// deterministic grid order: topology-major, then placement, pattern,
-/// algorithm, seed — independent of thread count and scheduling.
+/// algorithm, fault, seed — independent of thread count and scheduling.
 ///
 /// Work sharing:
 ///  * each topology is built and validated once, each placement applied
 ///    once per topology;
 ///  * each pattern's flow list is generated once per (topology,
-///    placement) and shared by every algorithm and seed;
+///    placement) and shared by every algorithm, fault and seed;
 ///  * traced routes are deduplicated per (group, algorithm, pattern,
-///    effective seed): only `random`/`random-pair` are seed-sensitive,
-///    so a grid with many seeds traces each deterministic algorithm
-///    exactly once.
+///    fault, effective seed): only `random`/`random-pair` and non-`none`
+///    fault scenarios are seed-sensitive, so a grid with many seeds
+///    traces each fully deterministic cell exactly once.
 ///
 /// The deduplicated jobs of the *whole* grid are fanned out in a single
 /// [`par::par_map`] call, so topology/placement-heavy grids parallelize
 /// as well as pattern/algorithm-heavy ones.
+///
+/// Fault cells route through [`DegradedRouter`] and additionally report
+/// the rerouting cost (`routes_changed` vs. the pristine trace of the
+/// same cell) and — with `simulate` — fair-rate throughput retention.
+/// A scenario that partitions the fabric yields an *unroutable* row
+/// (zeroed metrics, `routable = false`) instead of failing the grid.
 pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResult>> {
     spec.validate()?;
 
     // Phase 1 (serial, cheap relative to cells): resolve topologies,
-    // placements and flow lists.
+    // placements, fault models and flow lists.
     let mut topos: Vec<Topology> = Vec::with_capacity(spec.topologies.len());
     for topo_name in &spec.topologies {
         let topo = families::named(topo_name)?;
         crate::topology::validate::validate(&topo)?;
         topos.push(topo);
+    }
+    let fault_models: Vec<FaultModel> =
+        spec.faults.iter().map(|f| FaultModel::parse(f)).collect::<Result<Vec<_>>>()?;
+    for topo in &topos {
+        for model in &fault_models {
+            model.validate_for(&topo.spec)?;
+        }
     }
     let mut groups: Vec<Group> = Vec::with_capacity(spec.topologies.len() * spec.placements.len());
     for topo_idx in 0..spec.topologies.len() {
@@ -86,21 +101,25 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
     }
 
     // Phase 2: deduplicate every grid cell into unique jobs, flattened
-    // across all groups.
+    // across all groups. A cell is seed-sensitive when its algorithm is
+    // random OR its fault scenario is generated (non-`none`).
     let mut jobs: Vec<JobKey> = Vec::new();
     let mut job_index: HashMap<JobKey, usize> = HashMap::new();
     let mut cell_jobs: Vec<usize> = Vec::with_capacity(spec.num_cells());
     for gi in 0..groups.len() {
         for pi in 0..spec.patterns.len() {
             for &algo in &spec.algorithms {
-                for &seed in &spec.seeds {
-                    let effective = if seed_sensitive(algo) { seed } else { spec.seeds[0] };
-                    let key = (gi, algo, pi, effective);
-                    let j = *job_index.entry(key).or_insert_with(|| {
-                        jobs.push(key);
-                        jobs.len() - 1
-                    });
-                    cell_jobs.push(j);
+                for fi in 0..fault_models.len() {
+                    for &seed in &spec.seeds {
+                        let sensitive = seed_sensitive(algo) || !fault_models[fi].is_none();
+                        let effective = if sensitive { seed } else { spec.seeds[0] };
+                        let key = (gi, algo, pi, fi, effective);
+                        let j = *job_index.entry(key).or_insert_with(|| {
+                            jobs.push(key);
+                            jobs.len() - 1
+                        });
+                        cell_jobs.push(j);
+                    }
                 }
             }
         }
@@ -108,7 +127,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
 
     // Phase 3: one grid-wide parallel fan-out. Results land in job
     // order regardless of scheduling, so the output is deterministic.
-    let cells = par::par_map(opts.threads, &jobs, |_, &(gi, algo, pi, seed)| {
+    let cells = par::par_map(opts.threads, &jobs, |_, &(gi, algo, pi, fi, seed)| {
         let group = &groups[gi];
         compute_cell(
             spec,
@@ -117,6 +136,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
             algo,
             &spec.patterns[pi],
             &group.flows[pi],
+            &fault_models[fi],
             seed,
         )
     });
@@ -127,16 +147,23 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
     for group in &groups {
         for _pi in 0..spec.patterns.len() {
             for _algo in &spec.algorithms {
-                for &seed in &spec.seeds {
-                    let cell = &cells[cell_jobs[cursor]];
-                    cursor += 1;
-                    out.push(SweepResult {
-                        topology: spec.topologies[group.topo_idx].clone(),
-                        placement: spec.placements[group.placement_idx].clone(),
-                        seed,
-                        summary: cell.summary.clone(),
-                        sim: cell.sim.clone(),
-                    });
+                for fault in &spec.faults {
+                    for &seed in &spec.seeds {
+                        let cell = &cells[cell_jobs[cursor]];
+                        cursor += 1;
+                        out.push(SweepResult {
+                            topology: spec.topologies[group.topo_idx].clone(),
+                            placement: spec.placements[group.placement_idx].clone(),
+                            fault: fault.clone(),
+                            seed,
+                            summary: cell.summary.clone(),
+                            dead_links: cell.dead_links,
+                            routes_changed: cell.routes_changed,
+                            routable: cell.routable,
+                            sim: cell.sim.clone(),
+                            retention: cell.retention,
+                        });
+                    }
                 }
             }
         }
@@ -145,7 +172,8 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
 }
 
 /// Routing depends on the seed only for the random algorithms; every
-/// Xmodk variant ignores it.
+/// Xmodk variant ignores it. (Fault scenarios add their own seed
+/// sensitivity — see the job-deduplication phase.)
 fn seed_sensitive(algo: AlgorithmKind) -> bool {
     matches!(algo, AlgorithmKind::Random | AlgorithmKind::RandomPair)
 }
@@ -153,9 +181,20 @@ fn seed_sensitive(algo: AlgorithmKind) -> bool {
 /// Computed content of one unique job.
 struct Cell {
     summary: AlgoSummary,
+    dead_links: usize,
+    routes_changed: usize,
+    routable: bool,
     sim: Option<SweepSim>,
+    retention: Option<f64>,
 }
 
+fn sim_from_rates(rates: &[f64]) -> SweepSim {
+    let sum: f64 = rates.iter().sum();
+    let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    SweepSim { aggregate_throughput: sum, min_rate: min, completion_time: 1.0 / min }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn compute_cell(
     spec: &SweepSpec,
     topo: &Topology,
@@ -163,37 +202,109 @@ fn compute_cell(
     algo: AlgorithmKind,
     pattern: &Pattern,
     flows: &[(u32, u32)],
+    fault_model: &FaultModel,
     seed: u64,
 ) -> Cell {
     let router = algo.build(topo, Some(types), seed);
-    if spec.simulate {
-        // Simulation needs the materialized routes; reuse them for the
-        // metric instead of re-tracing.
-        let routes = trace_flows(topo, &*router, flows);
-        let rep = CongestionReport::compute(topo, &routes);
-        let inc = IncidenceMatrix::from_routes(topo, &routes);
-        let cap = vec![1.0f64; inc.num_ports()];
-        let rates = solve_fairrate_exact(&inc, &cap);
-        let sum: f64 = rates.iter().sum();
-        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
-        Cell {
-            summary: AlgoSummary::from_report(
-                topo,
-                &rep,
-                algo.as_str(),
-                &pattern.name(),
-                flows.len(),
-            ),
-            sim: Some(SweepSim {
-                aggregate_throughput: sum,
-                min_rate: min,
-                completion_time: 1.0 / min,
-            }),
+    if fault_model.is_none() {
+        // Pristine cell: identical to the pre-fault engine.
+        if spec.simulate {
+            // Simulation needs the materialized routes; reuse them for
+            // the metric instead of re-tracing.
+            let routes = trace_flows(topo, &*router, flows);
+            let rep = CongestionReport::compute(topo, &routes);
+            let rates = fair_rates(topo, &routes);
+            Cell {
+                summary: AlgoSummary::from_report(
+                    topo,
+                    &rep,
+                    algo.as_str(),
+                    &pattern.name(),
+                    flows.len(),
+                ),
+                dead_links: 0,
+                routes_changed: 0,
+                routable: true,
+                sim: Some(sim_from_rates(&rates)),
+                retention: None,
+            }
+        } else {
+            // Metric-only cell: the fused trace+metric path avoids
+            // materializing routes entirely (§Perf iteration 4).
+            let rep = CongestionReport::compute_flows(topo, &*router, flows);
+            Cell {
+                summary: AlgoSummary::from_report(
+                    topo,
+                    &rep,
+                    algo.as_str(),
+                    &pattern.name(),
+                    flows.len(),
+                ),
+                dead_links: 0,
+                routes_changed: 0,
+                routable: true,
+                sim: None,
+                retention: None,
+            }
         }
     } else {
-        // Metric-only cell: the fused trace+metric path avoids
-        // materializing routes entirely (§Perf iteration 4).
-        let rep = CongestionReport::compute_flows(topo, &*router, flows);
+        // Fault cell: expand the scenario deterministically from the
+        // cell seed, reroute with the degraded wrapper, and report the
+        // rerouting cost against the pristine trace of the same cell.
+        let scenario = fault_model.generate(topo, seed);
+        let faults = scenario.fault_set(topo);
+        let dead_links = faults.num_dead();
+        let h = topo.spec.h;
+        let degraded = match DegradedRouter::new(topo, &faults, algo.build(topo, Some(types), seed))
+        {
+            Ok(d) => d,
+            Err(_) => {
+                // Partitioned fabric: an unroutable row, not a grid error.
+                return Cell {
+                    summary: AlgoSummary {
+                        algorithm: algo.as_str().to_string(),
+                        pattern: pattern.name(),
+                        flows: flows.len(),
+                        c_topo: 0,
+                        hot_total: 0,
+                        hot_per_level: vec![0; h + 1],
+                        c_max_up: vec![0; h + 1],
+                        c_max_down: vec![0; h + 1],
+                        used_top_ports: 0,
+                        total_top_ports: topo.level_ports(h, false).len(),
+                    },
+                    dead_links,
+                    routes_changed: flows.len(),
+                    routable: false,
+                    sim: None,
+                    retention: None,
+                };
+            }
+        };
+        // The pristine trace is recomputed per fault cell rather than
+        // shared with the cell's `none` job: sharing would thread a
+        // cross-job dependency through the fan-out for a cost that is at
+        // most 2x on fault cells (trace + one extra fair-rate solve).
+        // Revisit if fault grids dominate sweep wall-clock.
+        let pristine = trace_flows(topo, &*router, flows);
+        let rerouted = trace_flows(topo, &degraded, flows);
+        let routes_changed = pristine
+            .iter()
+            .zip(&rerouted)
+            .filter(|(a, b)| a.ports != b.ports)
+            .count();
+        let rep = CongestionReport::compute(topo, &rerouted);
+        let (sim, retention) = if spec.simulate {
+            let degraded_rates = fair_rates(topo, &rerouted);
+            let pristine_rates = fair_rates(topo, &pristine);
+            let sim = sim_from_rates(&degraded_rates);
+            let pristine_agg: f64 = pristine_rates.iter().sum();
+            let retention =
+                if pristine_agg > 0.0 { sim.aggregate_throughput / pristine_agg } else { 1.0 };
+            (Some(sim), Some(retention))
+        } else {
+            (None, None)
+        };
         Cell {
             summary: AlgoSummary::from_report(
                 topo,
@@ -202,7 +313,11 @@ fn compute_cell(
                 &pattern.name(),
                 flows.len(),
             ),
-            sim: None,
+            dead_links,
+            routes_changed,
+            routable: true,
+            sim,
+            retention,
         }
     }
 }
@@ -217,6 +332,7 @@ mod tests {
             placements: vec!["io:last:1".into()],
             patterns: vec![Pattern::C2ioSym, Pattern::C2ioAll],
             algorithms: AlgorithmKind::ALL.to_vec(),
+            faults: vec!["none".into()],
             seeds: vec![1],
             simulate: false,
         }
@@ -245,17 +361,21 @@ mod tests {
         let mut spec = tiny_spec();
         spec.topologies = vec!["case-study".into(), "4-ary-2-tree".into()];
         spec.placements = vec!["io:last:1".into(), "io:first:1".into()];
+        spec.faults = vec!["none".into(), "links:1".into()];
         let rows = run_sweep(&spec, &SweepOptions { threads: 3 }).unwrap();
         let mut i = 0;
         for topology in &spec.topologies {
             for placement in &spec.placements {
                 for pattern in &spec.patterns {
                     for algo in &spec.algorithms {
-                        assert_eq!(rows[i].topology, *topology);
-                        assert_eq!(rows[i].placement, *placement);
-                        assert_eq!(rows[i].summary.pattern, pattern.name());
-                        assert_eq!(rows[i].summary.algorithm, algo.as_str());
-                        i += 1;
+                        for fault in &spec.faults {
+                            assert_eq!(rows[i].topology, *topology);
+                            assert_eq!(rows[i].placement, *placement);
+                            assert_eq!(rows[i].summary.pattern, pattern.name());
+                            assert_eq!(rows[i].summary.algorithm, algo.as_str());
+                            assert_eq!(rows[i].fault, *fault);
+                            i += 1;
+                        }
                     }
                 }
             }
@@ -301,12 +421,74 @@ mod tests {
     }
 
     #[test]
-    fn unknown_topology_or_placement_errors() {
+    fn zero_fault_scenarios_match_pristine_cells() {
+        // The acceptance guarantee: a fault-rate-0 cell carries exactly
+        // the pristine cell's metrics (and zero rerouting cost).
+        let mut spec = tiny_spec();
+        spec.faults = vec!["none".into(), "rate:0".into(), "links:0".into()];
+        spec.simulate = true;
+        let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        assert_eq!(rows.len(), 12 * 3);
+        for chunk in rows.chunks(spec.faults.len()) {
+            let pristine = &chunk[0];
+            assert_eq!(pristine.fault, "none");
+            for row in &chunk[1..] {
+                assert_eq!(row.summary, pristine.summary, "{}", row.fault);
+                assert_eq!(row.sim, pristine.sim, "{}", row.fault);
+                assert_eq!(row.dead_links, 0);
+                assert_eq!(row.routes_changed, 0);
+                assert!(row.routable);
+            }
+        }
+    }
+
+    #[test]
+    fn fault_cells_report_rerouting_cost() {
+        let mut spec = tiny_spec();
+        spec.patterns = vec![Pattern::C2ioSym];
+        spec.algorithms = vec![AlgorithmKind::Gdmodk];
+        spec.faults = vec!["none".into(), "stage:3:4".into()];
+        spec.simulate = true;
+        let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        assert_eq!(rows.len(), 2);
+        let faulted = &rows[1];
+        assert_eq!(faulted.fault, "stage:3:4");
+        assert!(faulted.routable);
+        assert_eq!(faulted.dead_links, 4);
+        assert!(faulted.routes_changed > 0, "killing a whole bundle must move routes");
+        let retention = faulted.retention.expect("simulate attaches retention");
+        assert!(retention > 0.0 && retention <= 1.0 + 1e-9, "retention {retention}");
+    }
+
+    #[test]
+    fn partitioning_scenarios_yield_unroutable_rows() {
+        let mut spec = tiny_spec();
+        spec.patterns = vec![Pattern::C2ioSym];
+        spec.algorithms = vec![AlgorithmKind::Dmodk];
+        // Killing every eligible link certainly partitions the fabric.
+        spec.faults = vec!["rate:1".into()];
+        let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(!rows[0].routable);
+        assert_eq!(rows[0].summary.c_topo, 0);
+        assert_eq!(rows[0].dead_links, 32);
+        assert_eq!(rows[0].routes_changed, rows[0].summary.flows);
+    }
+
+    #[test]
+    fn unknown_topology_placement_or_fault_errors() {
         let mut spec = tiny_spec();
         spec.topologies = vec!["no-such-topology".into()];
         assert!(run_sweep(&spec, &SweepOptions::default()).is_err());
         let mut spec = tiny_spec();
         spec.placements = vec!["io:bogus".into()];
+        assert!(run_sweep(&spec, &SweepOptions::default()).is_err());
+        let mut spec = tiny_spec();
+        spec.faults = vec!["meteor:9".into()];
+        assert!(run_sweep(&spec, &SweepOptions::default()).is_err());
+        // Parseable but out of range for the topology (h = 3).
+        let mut spec = tiny_spec();
+        spec.faults = vec!["stage:4:2".into()];
         assert!(run_sweep(&spec, &SweepOptions::default()).is_err());
     }
 }

@@ -1,6 +1,7 @@
 //! The declarative grid description: what to sweep.
 
 use crate::config::Doc;
+use crate::faults::FaultModel;
 use crate::patterns::Pattern;
 use crate::routing::AlgorithmKind;
 use anyhow::{ensure, Context, Result};
@@ -25,8 +26,13 @@ pub struct SweepSpec {
     pub patterns: Vec<Pattern>,
     /// Routing algorithms to compare.
     pub algorithms: Vec<AlgorithmKind>,
-    /// Seeds (only the `random`/`random-pair` algorithms are
-    /// seed-sensitive; the engine traces deterministic algorithms once).
+    /// Fault-scenario specs ([`crate::faults::FaultModel::parse`]
+    /// strings; `"none"` is the pristine reference). Every non-`none`
+    /// spec is expanded per cell against the cell's topology and seed.
+    pub faults: Vec<String>,
+    /// Seeds (the `random`/`random-pair` algorithms and every non-`none`
+    /// fault scenario are seed-sensitive; the engine traces fully
+    /// deterministic cells once).
     pub seeds: Vec<u64>,
     /// Attach max-min fair-rate throughput figures to every cell (the
     /// deterministic pure-rust solver; see `crate::sim::fairrate`).
@@ -48,6 +54,7 @@ impl SweepSpec {
                 Pattern::Shift { k: 1 },
             ],
             algorithms: AlgorithmKind::ALL.to_vec(),
+            faults: vec!["none".to_string()],
             seeds: vec![1],
             simulate: false,
         }
@@ -70,8 +77,8 @@ impl SweepSpec {
         // `pgft run` experiment file): a non-empty document must carry a
         // `[sweep]` section, and every key in it must be recognized —
         // otherwise defaults would silently shadow the user's intent.
-        const KNOWN: [&str; 6] =
-            ["topologies", "placements", "patterns", "algorithms", "seeds", "simulate"];
+        const KNOWN: [&str; 7] =
+            ["topologies", "placements", "patterns", "algorithms", "faults", "seeds", "simulate"];
         if !doc.sections.is_empty() {
             let section = doc
                 .sections
@@ -118,6 +125,7 @@ impl SweepSpec {
                 .map(|a| AlgorithmKind::parse(a))
                 .collect::<Result<Vec<_>>>()?
         };
+        let faults = list("faults", &["none"])?;
         let seeds: Vec<u64> = match doc.get("sweep", "seeds") {
             Some(v) => v
                 .as_int_array()?
@@ -130,7 +138,8 @@ impl SweepSpec {
             None => vec![1],
         };
         let simulate = doc.get_bool("sweep", "simulate", false)?;
-        let spec = SweepSpec { topologies, placements, patterns, algorithms, seeds, simulate };
+        let spec =
+            SweepSpec { topologies, placements, patterns, algorithms, faults, seeds, simulate };
         spec.validate()?;
         Ok(spec)
     }
@@ -147,15 +156,21 @@ impl SweepSpec {
             * self.placements.len()
             * self.patterns.len()
             * self.algorithms.len()
+            * self.faults.len()
             * self.seeds.len()
     }
 
-    /// Reject degenerate (empty-axis) grids with a clear message.
+    /// Reject degenerate (empty-axis) grids and malformed fault specs
+    /// with a clear message.
     pub fn validate(&self) -> Result<()> {
         ensure!(!self.topologies.is_empty(), "sweep: no topologies");
         ensure!(!self.placements.is_empty(), "sweep: no placements");
         ensure!(!self.patterns.is_empty(), "sweep: no patterns");
         ensure!(!self.algorithms.is_empty(), "sweep: no algorithms");
+        ensure!(!self.faults.is_empty(), "sweep: no faults (use [\"none\"])");
+        for f in &self.faults {
+            FaultModel::parse(f).with_context(|| format!("sweep fault spec {f:?}"))?;
+        }
         ensure!(!self.seeds.is_empty(), "sweep: no seeds");
         Ok(())
     }
@@ -203,6 +218,26 @@ simulate = true
         assert_eq!(s.seeds, vec![7, 8]);
         assert!(s.simulate);
         assert_eq!(s.num_cells(), 2 * 1 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn faults_axis_parses_and_validates() {
+        let doc = Doc::parse(
+            "[sweep]\nfaults = [\"none\", \"rate:0.05\", \"links:4\", \"stage:3:2\"]\n",
+        )
+        .unwrap();
+        let s = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(s.faults.len(), 4);
+        assert_eq!(s.num_cells(), 2 * 4 * 6 * 4, "faults multiply the grid");
+        // Defaults to the pristine-only axis.
+        let s = SweepSpec::from_doc(&Doc::parse("").unwrap()).unwrap();
+        assert_eq!(s.faults, vec!["none".to_string()]);
+        // Malformed fault specs are rejected at validation time.
+        let doc = Doc::parse("[sweep]\nfaults = [\"meteor:3\"]\n").unwrap();
+        assert!(SweepSpec::from_doc(&doc).is_err());
+        let mut s = SweepSpec::paper_grid("case-study");
+        s.faults.clear();
+        assert!(s.validate().is_err());
     }
 
     #[test]

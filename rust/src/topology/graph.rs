@@ -195,6 +195,33 @@ impl Topology {
         s.top.iter().enumerate().all(|(j, &t)| d[s.level + j] == t)
     }
 
+    /// All ancestors of `nid` at 1-based level `l` — the `W_l = Π w`
+    /// switches whose sub-tree contains the node — enumerated directly
+    /// from the digit structure in `O(W_l)` (no level scan), ascending
+    /// by switch id. The degraded-fabric reachability pass iterates
+    /// this per destination, where scanning whole levels would dominate.
+    pub fn ancestors_at(&self, l: usize, nid: Nid) -> Vec<SwitchId> {
+        assert!((1..=self.spec.h).contains(&l));
+        let digits = &self.nodes[nid as usize].digits;
+        let top: Vec<u32> = digits[l..].to_vec();
+        let w_l = self.spec.w_prefix(l) as usize;
+        let mut out = Vec::with_capacity(w_l);
+        let mut bottom = vec![0u32; l];
+        for _ in 0..w_l {
+            out.push(self.switch_at(l, &top, &bottom));
+            // Increment the mixed-radix bottom counter (radix w_1..w_l).
+            for j in 0..l {
+                bottom[j] += 1;
+                if bottom[j] < self.spec.w[j] {
+                    break;
+                }
+                bottom[j] = 0;
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
     /// For an ancestor switch at level `l`, the child index (`a_l` digit)
     /// on the way down to `nid`.
     #[inline]
@@ -343,6 +370,26 @@ mod tests {
         // subgroup and switch digits.
         let l2: Vec<String> = t.level_switches(2).map(|s| t.switch_label(s)).collect();
         assert_eq!(l2.len(), 4);
+    }
+
+    #[test]
+    fn ancestors_at_matches_is_ancestor_scan() {
+        // Case study and a w1 = 2 (multi-plane) shape.
+        for spec in [
+            PgftSpec::case_study(),
+            PgftSpec::new(vec![4, 4], vec![2, 2], vec![1, 1]).unwrap(),
+        ] {
+            let t = build_pgft(&spec);
+            for nid in (0..t.num_nodes() as u32).step_by(7) {
+                for l in 1..=spec.h {
+                    let direct = t.ancestors_at(l, nid);
+                    let scan: Vec<usize> =
+                        t.level_switches(l).filter(|&s| t.is_ancestor(s, nid)).collect();
+                    assert_eq!(direct, scan, "{spec} level {l} nid {nid}");
+                    assert_eq!(direct.len() as u64, spec.w_prefix(l), "{spec} level {l}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -4,8 +4,19 @@
 //! benches need: warmup, timed iterations, robust statistics
 //! (median / p95 / mean / stddev), throughput reporting and a stable
 //! text output format that `cargo bench` prints and EXPERIMENTS.md quotes.
+//!
+//! **Smoke mode:** setting `PGFT_BENCH_SMOKE=1` clamps every [`Bench`]
+//! to zero warmup and a single timed sample, regardless of builder
+//! configuration. CI runs benches this way — the numbers are
+//! meaningless, but the bench *code* executes end to end on every push,
+//! so benches cannot silently rot.
 
 use std::time::{Duration, Instant};
+
+/// Whether `PGFT_BENCH_SMOKE` requests 1-iteration smoke runs.
+fn smoke_mode() -> bool {
+    matches!(std::env::var("PGFT_BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0")
+}
 
 /// Robust summary statistics over per-iteration wall-clock samples.
 #[derive(Clone, Debug)]
@@ -114,7 +125,16 @@ impl Bench {
 
     /// Measure `f`, print a criterion-like line, return the stats.
     /// `f` receives the iteration index; use `std::hint::black_box` inside.
-    pub fn run<F: FnMut(usize)>(self, mut f: F) -> Stats {
+    pub fn run<F: FnMut(usize)>(mut self, mut f: F) -> Stats {
+        // CI smoke mode overrides every budget (see module docs): the
+        // clamp lives here, after the builders, so call sites cannot
+        // accidentally undo it.
+        if smoke_mode() {
+            self.warmup = Duration::ZERO;
+            self.min_samples = 1;
+            self.max_samples = 1;
+            self.target_time = Duration::ZERO;
+        }
         // Warmup.
         let w0 = Instant::now();
         let mut i = 0usize;

@@ -1,0 +1,64 @@
+//! Shared randomized-case generators for the property-test harnesses
+//! (`routing_invariants.rs`, `fault_rerouting.rs`). Each integration
+//! test crate compiles this module independently.
+#![allow(dead_code)]
+
+use pgft::topology::PgftSpec;
+use pgft::util::prop::Gen;
+
+/// A random small PGFT spec: 2–3 levels, ≤ 64 nodes, mixed arities,
+/// parallel links and (sometimes) multi-leaf nodes (`w_1 = 2`).
+pub fn random_spec(g: &mut Gen) -> PgftSpec {
+    let h = g.usize_in(2, 3);
+    let m_hi = if h == 2 { 6 } else { 4 };
+    let mut m: Vec<u32> = (0..h).map(|_| g.usize_in(2, m_hi) as u32).collect();
+    // Cap the node count at 64 so all-pairs sweeps stay fast.
+    while m.iter().map(|&x| x as u64).product::<u64>() > 64 {
+        let i = m
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &x)| x)
+            .map(|(i, _)| i)
+            .unwrap();
+        m[i] -= 1;
+    }
+    let w: Vec<u32> = (0..h)
+        .map(|i| if i == 0 { g.usize_in(1, 2) as u32 } else { g.usize_in(1, 3) as u32 })
+        .collect();
+    let p: Vec<u32> = (0..h).map(|_| g.usize_in(1, 2) as u32).collect();
+    PgftSpec::new(m, w, p).expect("generated spec is structurally valid")
+}
+
+/// A random placement spec string for a fabric of `n` nodes: the
+/// paper's leaf-local placements, strided, seeded-random and stacked
+/// multi-type variants.
+pub fn random_placement(g: &mut Gen, n: u32) -> String {
+    match g.usize_in(0, 4) {
+        0 => "io:last:1".to_string(),
+        1 => "io:first:1".to_string(),
+        2 => {
+            let stride = g.usize_in(2, 8) as u32;
+            let offset = g.usize_in(0, (stride - 1) as usize) as u32;
+            format!("io:stride:{offset}:{stride}")
+        }
+        3 => {
+            let count = g.usize_in(1, (n as usize).min(8)) as u32;
+            let seed = g.int_in(0, 1 << 20);
+            format!("io:random:{count}:{seed}")
+        }
+        _ => "io:last:1,service:first:1".to_string(),
+    }
+}
+
+/// A random fault-model spec string (never `"none"`): the whole
+/// scenario family — iid link rates, fixed counts, switch deaths,
+/// targeted stage cuts and cascades.
+pub fn random_fault_model(g: &mut Gen, h: usize) -> String {
+    match g.usize_in(0, 4) {
+        0 => format!("rate:0.{:02}", g.usize_in(1, 30)),
+        1 => format!("links:{}", g.usize_in(1, 6)),
+        2 => "switches:1".to_string(),
+        3 => format!("stage:{}:{}", g.usize_in(2, h), g.usize_in(1, 4)),
+        _ => format!("cascade:{}", g.usize_in(1, 5)),
+    }
+}

@@ -36,7 +36,7 @@ fn fault_storm_and_recovery() {
     let flows: Vec<(u32, u32)> =
         (0..64).flat_map(|s| (0..64).filter(move |&d| d != s).map(move |d| (s, d))).collect();
     let routes = c.trace(flows).unwrap();
-    let rep = pgft::routing::verify::verify_routes(&topo, &routes).unwrap();
+    let rep = pgft::routing::verify::check_routes(&topo, &routes).unwrap();
     assert!(rep.deadlock_free);
     for r in &routes {
         for &p in &r.ports {

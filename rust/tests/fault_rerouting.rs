@@ -1,0 +1,185 @@
+//! Fault-rerouting property harness: under every generated
+//! `FaultScenario` whose surviving fabric still spans all node pairs,
+//! the rerouted tables of EVERY algorithm
+//!
+//!  * deliver every flow (fully connected),
+//!  * use no dead link,
+//!  * stay valley-free, loop-free and deadlock-free (acyclic CDG),
+//!  * and with zero faults are **byte-identical** to pristine routing.
+//!
+//! Scenarios that partition the fabric must be rejected cleanly by
+//! `DegradedRouter::new`, and that verdict must agree with the
+//! topology view's `updown_connected` predicate.
+
+mod common;
+
+use common::{random_fault_model, random_placement, random_spec};
+use pgft::prelude::*;
+use pgft::routing::verify::{all_pairs, verify_routes};
+use pgft::routing::Router;
+use pgft::util::prop::Prop;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The other half of the acceptance budget: ≥ 50 randomized
+/// (spec, placement, scenario) combinations through all six algorithms
+/// (routing_invariants.rs covers the pristine half).
+const CASES: u32 = 60;
+
+#[test]
+fn prop_rerouted_tables_deadlock_free_and_connected() {
+    let combos = AtomicUsize::new(0);
+    let survived = AtomicUsize::new(0);
+    Prop::new("fault-rerouting").cases(CASES).run(|g| {
+        let spec = random_spec(g);
+        let topo = build_pgft(&spec);
+        let n = topo.num_nodes() as u32;
+        let placement = random_placement(g, n);
+        let types = Placement::parse(&placement).unwrap().apply(&topo).unwrap();
+        let model_spec = random_fault_model(g, spec.h);
+        let model = FaultModel::parse(&model_spec)
+            .unwrap_or_else(|e| panic!("generated model {model_spec}: {e}"));
+        let seed = g.int_in(0, 1 << 16) as u64;
+        let scenario = model.generate(&topo, seed);
+        let faults = scenario.fault_set(&topo);
+        let view = DegradedTopology::new(&topo, &faults);
+        let connected = view.updown_connected();
+        let flows = all_pairs(n);
+
+        for kind in AlgorithmKind::ALL {
+            let built = DegradedRouter::new(&topo, &faults, kind.build(&topo, Some(&types), seed));
+            match built {
+                Err(e) => {
+                    // The router's verdict must agree with the view's
+                    // connectivity predicate.
+                    assert!(
+                        !connected,
+                        "{kind} on {spec} rejected a connected fabric \
+                         ({model_spec}@{seed}): {e}"
+                    );
+                }
+                Ok(router) => {
+                    assert!(
+                        connected,
+                        "{kind} on {spec} accepted a partitioned fabric ({model_spec}@{seed})"
+                    );
+                    let routes = trace_flows(&topo, &router, &flows);
+                    let rep = verify_routes(&topo, &routes);
+                    rep.ensure_valid().unwrap_or_else(|e| {
+                        panic!("{kind} on {spec} ({model_spec}@{seed}): {e}")
+                    });
+                    assert!(rep.deadlock_free, "{kind} on {spec} ({model_spec}@{seed})");
+                    assert_eq!(
+                        rep.valley_free, rep.flows,
+                        "{kind} on {spec} ({model_spec}@{seed}): reroutes must be valley-free"
+                    );
+                    for route in &routes {
+                        for &p in &route.ports {
+                            assert!(
+                                !faults.is_dead(topo.ports[p].link),
+                                "{kind} on {spec}: route {}->{} uses dead link {}",
+                                route.src,
+                                route.dst,
+                                topo.ports[p].link
+                            );
+                        }
+                    }
+                    // Dest-based wrapped routers still materialize into
+                    // loop-free tables replaying the same routes.
+                    if router.dest_based() {
+                        let tables = ForwardingTables::build(&topo, &router)
+                            .unwrap_or_else(|e| panic!("{kind} on {spec}: {e}"));
+                        for (i, &(s, d)) in flows.iter().enumerate() {
+                            assert_eq!(
+                                tables.trace(&topo, s, d).ports,
+                                routes[i].ports,
+                                "{kind} on {spec}: degraded table walk {s}->{d} diverges"
+                            );
+                        }
+                    }
+                    survived.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        combos.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(combos.load(Ordering::Relaxed), CASES as usize);
+    assert!(
+        survived.load(Ordering::Relaxed) > 0,
+        "generator never produced a survivable scenario — it is useless"
+    );
+}
+
+#[test]
+fn prop_zero_fault_scenarios_are_byte_identical_to_pristine() {
+    Prop::new("zero-fault-identity").cases(25).run(|g| {
+        let spec = random_spec(g);
+        let topo = build_pgft(&spec);
+        let n = topo.num_nodes() as u32;
+        let types = Placement::parse(&random_placement(g, n))
+            .unwrap()
+            .apply(&topo)
+            .unwrap();
+        let seed = g.int_in(0, 1 << 16) as u64;
+        // Three spellings of "no faults": the empty set, rate 0, count 0.
+        let empty_sets = [
+            FaultSet::none(&topo),
+            FaultModel::parse("rate:0").unwrap().generate(&topo, seed).fault_set(&topo),
+            FaultModel::parse("links:0").unwrap().generate(&topo, seed).fault_set(&topo),
+        ];
+        let flows = all_pairs(n);
+        for kind in AlgorithmKind::ALL {
+            let base = kind.build(&topo, Some(&types), seed);
+            let pristine = trace_flows(&topo, &*base, &flows);
+            for faults in &empty_sets {
+                let wrapped =
+                    DegradedRouter::new(&topo, faults, kind.build(&topo, Some(&types), seed))
+                        .unwrap_or_else(|e| panic!("{kind} on {spec}: {e}"));
+                let routes = trace_flows(&topo, &wrapped, &flows);
+                assert_eq!(
+                    routes, pristine,
+                    "{kind} on {spec}: zero faults must not change a single port"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn cascade_prefixes_reroute_incrementally() {
+    // Deterministic (non-prop) cascade drill on the case study: each
+    // cumulative prefix either routes deadlock-free or is a clean
+    // partition error, and the rerouting cost is monotone in practice.
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let scenario = FaultModel::parse("cascade:6").unwrap().generate(&topo, 42);
+    assert_eq!(scenario.num_faults(), 6);
+    let flows = all_pairs(64);
+    let base = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+    let pristine = trace_flows(&topo, &*base, &flows);
+    let mut last_changed = 0usize;
+    let mut any_ok = false;
+    for faults in scenario.stages(&topo) {
+        let rebuilt = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+        match DegradedRouter::new(&topo, &faults, rebuilt) {
+            Err(_) => {
+                assert!(!DegradedTopology::new(&topo, &faults).updown_connected());
+            }
+            Ok(router) => {
+                any_ok = true;
+                let routes = trace_flows(&topo, &router, &flows);
+                let rep = verify_routes(&topo, &routes);
+                rep.ensure_valid().unwrap();
+                assert!(rep.deadlock_free);
+                let changed =
+                    pristine.iter().zip(&routes).filter(|(a, b)| a.ports != b.ports).count();
+                // Not strictly monotone in theory, but never jumps back
+                // to zero once links started dying.
+                if last_changed > 0 {
+                    assert!(changed > 0, "later cascade stages keep rerouting");
+                }
+                last_changed = changed;
+            }
+        }
+    }
+    assert!(any_ok, "the first cascade stage (1 dead link) must be survivable");
+}

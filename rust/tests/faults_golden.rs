@@ -1,0 +1,139 @@
+//! Golden-file pin of the `pgft faults` CSV output (case study,
+//! deterministic seed), mirroring `tests/sweep_determinism.rs`:
+//!
+//!  1. the same invocation twice is **byte-identical** (the acceptance
+//!     criterion for `pgft faults --seed 1`),
+//!  2. the CSV schema (header + row shape + the hand-derivable pristine
+//!     cells) is pinned inline, so column drift fails loudly,
+//!  3. the full output is compared byte-for-byte against
+//!     `tests/golden/faults_case_study.csv`. If the golden file does
+//!     not exist yet it is written (blessed) by this test — commit the
+//!     blessed file so later format drift is caught. To re-bless after
+//!     an *intentional* format change, delete the file and re-run.
+
+use pgft::cli;
+use pgft::sweep::result::COLUMNS;
+
+fn argv(s: &[&str]) -> Vec<String> {
+    s.iter().map(|x| x.to_string()).collect()
+}
+
+fn run_faults_csv(out: &std::path::Path) -> String {
+    let mut args = argv(&[
+        "faults",
+        "--topo",
+        "case-study",
+        "--algo",
+        "dmodk,gdmodk",
+        "--pattern",
+        "c2io-sym",
+        "--faults",
+        "none,links:2,stage:3:4",
+        "--seeds",
+        "1",
+        "--serial",
+        "--format",
+        "csv",
+        "--out",
+    ]);
+    args.push(out.to_str().unwrap().to_string());
+    cli::run(&args).unwrap();
+    std::fs::read_to_string(out).unwrap()
+}
+
+#[test]
+fn faults_csv_is_deterministic_schema_stable_and_golden() {
+    let dir = std::env::temp_dir().join("pgft_faults_golden");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // 1. Byte-identical across runs.
+    let a = run_faults_csv(&dir.join("a.csv"));
+    let b = run_faults_csv(&dir.join("b.csv"));
+    assert_eq!(a, b, "pgft faults --seeds 1 must be byte-identical across runs");
+
+    // 2. Schema pin: header is exactly the sweep column set, and every
+    // row has the full width.
+    let mut lines = a.lines();
+    assert_eq!(lines.next().unwrap(), COLUMNS.join(","), "sweep CSV header drifted");
+    let rows: Vec<&str> = lines.collect();
+    assert_eq!(rows.len(), 2 * 3, "2 algorithms × 3 fault scenarios");
+    for row in &rows {
+        assert_eq!(
+            row.split(',').count(),
+            COLUMNS.len(),
+            "row width drifted: {row}"
+        );
+    }
+
+    // Hand-derivable pristine cells (paper §III.B / §IV): the `none`
+    // rows carry the known C_topo with zero fault cost.
+    let none_prefix = |algo: &str, c_topo: u32| {
+        format!("case-study,io:last:1,{algo},c2io-sym,none,1,56,{c_topo},")
+    };
+    assert!(
+        rows[0].starts_with(&none_prefix("dmodk", 4)),
+        "dmodk none row drifted: {}",
+        rows[0]
+    );
+    assert!(
+        rows[3].starts_with(&none_prefix("gdmodk", 1)),
+        "gdmodk none row drifted: {}",
+        rows[3]
+    );
+    for row in &rows {
+        let cells: Vec<&str> = row.split(',').collect();
+        let algo = cells[2];
+        let (fault, dead, changed, routable) = (cells[4], cells[14], cells[15], cells[16]);
+        match fault {
+            "none" => {
+                assert_eq!((dead, changed, routable), ("0", "0", "1"), "{row}");
+            }
+            "links:2" => {
+                assert_eq!(dead, "2", "{row}");
+            }
+            "stage:3:4" => {
+                assert_eq!(dead, "4", "{row}");
+                assert_eq!(routable, "1", "one dead bundle keeps the fabric up: {row}");
+                if algo == "gdmodk" {
+                    // Gdmodk's pristine C2IO routes use every L2 up-bundle,
+                    // so whichever bundle died, routes must have moved.
+                    // (Dmodk concentrates on the parity-1 bundles; whether
+                    // it moves depends on which bundle the seed picked.)
+                    assert!(changed.parse::<u64>().unwrap() > 0, "{row}");
+                }
+            }
+            other => panic!("unexpected fault cell {other:?} in {row}"),
+        }
+        // No simulation requested: the float columns stay empty.
+        assert_eq!(cells[17], "", "{row}");
+        assert_eq!(cells[20], "", "{row}");
+    }
+
+    // 3. Golden file: compare, or bless on first run.
+    let golden_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let golden = golden_dir.join("faults_case_study.csv");
+    if golden.exists() {
+        let want = std::fs::read_to_string(&golden).unwrap();
+        assert_eq!(
+            a, want,
+            "pgft faults output drifted from tests/golden/faults_case_study.csv; \
+             if the change is intentional, delete the golden file and re-run to re-bless"
+        );
+    } else if std::env::var_os("PGFT_REQUIRE_GOLDEN").is_some() {
+        // CI sets PGFT_REQUIRE_GOLDEN (see .github/workflows/ci.yml): a
+        // fresh CI checkout must never silently re-bless — a missing
+        // golden there means it was deleted (or never committed) and the
+        // drift pin would be inert.
+        panic!(
+            "tests/golden/faults_case_study.csv is missing — run `cargo test --test \
+             faults_golden` locally once to bless it and commit the file"
+        );
+    } else {
+        std::fs::create_dir_all(&golden_dir).unwrap();
+        std::fs::write(&golden, &a).unwrap();
+        eprintln!(
+            "blessed new golden file {} — commit it so format drift is pinned",
+            golden.display()
+        );
+    }
+}

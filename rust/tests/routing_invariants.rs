@@ -1,0 +1,175 @@
+//! Seeded property-test harness over randomized PGFTs × placements:
+//! for EVERY routing algorithm,
+//!
+//!  * all-pairs routes are minimal up\*/down\* paths,
+//!  * every node pair is reachable (delivery verified per route),
+//!  * forwarding tables are cycle-free and reproduce the traced routes
+//!    (dest-based algorithms),
+//!  * the channel dependency graph is acyclic (deadlock freedom),
+//!  * Gdmodk/Gsmodk spread each node-type group across up-links within
+//!    the paper's balance bound.
+//!
+//! Std-only (no proptest): cases are drawn from the crate's own seeded
+//! [`pgft::util::prop::Prop`] harness, so failures reproduce exactly
+//! and shrink toward small counterexamples.
+
+mod common;
+
+use common::{random_placement, random_spec};
+use pgft::prelude::*;
+use pgft::routing::verify::{all_pairs, verify_routes};
+use pgft::routing::Xmodk;
+use pgft::util::prop::Prop;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Half of the acceptance budget: ≥ 50 randomized (spec, placement)
+/// combinations through all six algorithms (fault_rerouting.rs covers
+/// the scenario half).
+const CASES: u32 = 50;
+
+#[test]
+fn prop_all_algorithms_minimal_reachable_deadlock_free() {
+    let combos = AtomicUsize::new(0);
+    Prop::new("routing-invariants").cases(CASES).run(|g| {
+        let spec = random_spec(g);
+        let topo = build_pgft(&spec);
+        let n = topo.num_nodes() as u32;
+        let placement = random_placement(g, n);
+        let types = Placement::parse(&placement)
+            .and_then(|p| p.apply(&topo))
+            .unwrap_or_else(|e| panic!("placement {placement} on {spec}: {e}"));
+        let seed = g.int_in(0, 1 << 16) as u64;
+        let flows = all_pairs(n);
+        for kind in AlgorithmKind::ALL {
+            let router = kind.build(&topo, Some(&types), seed);
+            let routes = trace_flows(&topo, &*router, &flows);
+            let rep = verify_routes(&topo, &routes);
+            // Reachability + minimality + valley-freedom + CDG acyclicity,
+            // with the structured report naming the first offender.
+            assert!(
+                rep.is_clean(),
+                "{kind} on {spec} ({placement}): {}",
+                rep.violations
+                    .iter()
+                    .take(3)
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            );
+            assert_eq!(rep.flows, flows.len());
+            assert_eq!(rep.minimal, rep.flows, "{kind} on {spec}: all routes minimal");
+            assert_eq!(rep.valley_free, rep.flows, "{kind} on {spec}: valley-free");
+            assert!(rep.deadlock_free, "{kind} on {spec}");
+
+            // Dest-based algorithms must materialize into cycle-free
+            // linear forwarding tables that replay the exact same routes
+            // (ForwardingTables::trace panics on loops, so equality
+            // doubles as the cycle check).
+            if router.dest_based() {
+                let tables = ForwardingTables::build(&topo, &*router)
+                    .unwrap_or_else(|e| panic!("{kind} on {spec}: {e}"));
+                for (i, &(s, d)) in flows.iter().enumerate() {
+                    assert_eq!(
+                        tables.trace(&topo, s, d).ports,
+                        routes[i].ports,
+                        "{kind} on {spec}: table walk {s}->{d} diverges"
+                    );
+                }
+            }
+        }
+        combos.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(combos.load(Ordering::Relaxed), CASES as usize);
+}
+
+/// The paper's §IV balance property, generalized: Xmodk assigns a
+/// contiguous key range round-robin over the `k = w_{l+1}·p_{l+1}`
+/// up-ports after dividing by `W_l = Π w`. For a contiguous gNID block
+/// (what Algorithm 1 produces per type), per-port counts can differ by
+/// at most `W_l` between the ceil/floor block shares plus `W_l - 1` at
+/// each partial end — so the spread is bounded by `3·W_l - 2`, and by
+/// exactly 1 when `W_l = 1` (the perfectly balanced leaf level of the
+/// paper's worked example).
+fn formula_bound(w_prefix: u64) -> i64 {
+    if w_prefix == 1 {
+        1
+    } else {
+        3 * w_prefix as i64 - 2
+    }
+}
+
+#[test]
+fn prop_grouped_xmodk_per_type_upload_within_balance_bound() {
+    Prop::new("gxmodk-balance").cases(CASES).run(|g| {
+        let spec = random_spec(g);
+        let topo = build_pgft(&spec);
+        let n = topo.num_nodes() as u32;
+        let placement = random_placement(g, n);
+        let types = Placement::parse(&placement).unwrap().apply(&topo).unwrap();
+        let reindex = TypeReindex::new(&types);
+
+        // Formula level: both Gdmodk (keys = destination gNIDs) and
+        // Gsmodk (keys = source gNIDs) push each type's contiguous gNID
+        // block through the same up_index closed form.
+        for level in 0..spec.h {
+            let k = (spec.w[level] * spec.p[level]) as usize;
+            if k == 1 {
+                continue; // single up-port: nothing to balance
+            }
+            let w_prefix = spec.w_prefix(level);
+            for &(ty, start, count) in reindex.groups() {
+                let mut loads = vec![0i64; k];
+                for gnid in start..start + count {
+                    loads[Xmodk::up_index(&topo, level, gnid as u64) as usize] += 1;
+                }
+                let max = *loads.iter().max().unwrap();
+                let min = *loads.iter().min().unwrap();
+                assert!(
+                    max - min <= formula_bound(w_prefix),
+                    "{spec} ({placement}): type {ty} level {level}: loads {loads:?} \
+                     spread {} > bound {}",
+                    max - min,
+                    formula_bound(w_prefix)
+                );
+            }
+        }
+
+        // Route-realized for Gdmodk: at every switch with up-ports, the
+        // destinations of one type that route *up* (those outside the
+        // switch's subtree) are the type's gNID block minus one
+        // contiguous subrange — at most two contiguous runs, so the
+        // spread is bounded by twice the single-run bound.
+        let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 0);
+        for level in 1..spec.h {
+            let k = (spec.w[level] * spec.p[level]) as usize;
+            if k == 1 {
+                continue;
+            }
+            let w_prefix = spec.w_prefix(level);
+            for sw in topo.level_switches(level) {
+                for &(ty, _, _) in reindex.groups() {
+                    let mut loads = vec![0i64; k];
+                    let mut routed = 0;
+                    for dst in types.nids_of(ty) {
+                        if topo.is_ancestor(sw, dst) {
+                            continue;
+                        }
+                        let port = router.up_port(&topo, sw, 0, dst);
+                        loads[topo.ports[port].index as usize] += 1;
+                        routed += 1;
+                    }
+                    if routed == 0 {
+                        continue;
+                    }
+                    let max = *loads.iter().max().unwrap();
+                    let min = *loads.iter().min().unwrap();
+                    assert!(
+                        max - min <= 2 * formula_bound(w_prefix),
+                        "{spec} ({placement}): realized type {ty} at switch {sw} \
+                         level {level}: loads {loads:?}"
+                    );
+                }
+            }
+        }
+    });
+}

@@ -43,7 +43,7 @@ fn medium_512_routes_verify() {
     for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk, AlgorithmKind::Gsmodk] {
         let router = kind.build(&topo, Some(&types), 1);
         let routes = trace_flows(&topo, &*router, &flows);
-        let rep = pgft::routing::verify::verify_routes(&topo, &routes).unwrap();
+        let rep = pgft::routing::verify::check_routes(&topo, &routes).unwrap();
         assert_eq!(rep.minimal, rep.flows, "{kind}");
         assert!(rep.deadlock_free, "{kind}");
     }

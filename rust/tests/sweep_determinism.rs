@@ -17,6 +17,7 @@ fn grid(simulate: bool) -> SweepSpec {
             Pattern::Shift { k: 1 },
         ],
         algorithms: AlgorithmKind::ALL.to_vec(),
+        faults: vec!["none".into()],
         seeds: vec![1, 2],
         simulate,
     }
