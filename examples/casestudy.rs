@@ -9,7 +9,12 @@
 use pgft::metrics::CongestionReport;
 use pgft::prelude::*;
 
-fn report(topo: &Topology, types: &NodeTypeMap, kind: AlgorithmKind, pat: &Pattern) -> CongestionReport {
+fn report(
+    topo: &Topology,
+    types: &NodeTypeMap,
+    kind: AlgorithmKind,
+    pat: &Pattern,
+) -> CongestionReport {
     let router = kind.build(topo, Some(types), 1);
     let flows = pat.flows(topo, types).unwrap();
     let routes = trace_flows(topo, &*router, &flows);
@@ -24,7 +29,8 @@ fn show_top_ports(topo: &Topology, rep: &CongestionReport, label: &str) {
             .iter()
             .map(|&p| {
                 let s = rep.per_port[p];
-                format!("{}:{}/{}/{}→{}", topo.ports[p].index + 1, s.routes, s.srcs, s.dsts, s.c())
+                let rank = topo.ports[p].index + 1;
+                format!("{}:{}/{}/{}→{}", rank, s.routes, s.srcs, s.dsts, s.c())
             })
             .collect();
         println!("    {} [{}]", topo.switch_label(sw), cells.join(" "));
@@ -50,6 +56,7 @@ fn main() -> anyhow::Result<()> {
         faults: vec!["none".into()],
         seeds: vec![1],
         simulate: false,
+        netsim: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions::default())?;
     print!("{}", pgft::metrics::render_algorithm_table(&pgft::sweep::summaries(&rows)));

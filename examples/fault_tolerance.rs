@@ -107,6 +107,7 @@ fn main() -> anyhow::Result<()> {
         faults: vec!["none".into(), "links:2".into(), "stage:3:4".into()],
         seeds: vec![1],
         simulate: true,
+        netsim: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions::default())?;
     print!("{}", pgft::sweep::fault_table(&rows).to_text());

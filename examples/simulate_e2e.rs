@@ -39,7 +39,12 @@ fn main() -> anyhow::Result<()> {
         let topo = families::named(topo_name)?;
         pgft::topology::validate::validate(&topo)?;
         let types = Placement::paper_io().apply(&topo)?;
-        println!("\n==== {} ({} nodes, {} ports) ====", topo_name, topo.num_nodes(), topo.num_ports());
+        println!(
+            "\n==== {} ({} nodes, {} ports) ====",
+            topo_name,
+            topo.num_nodes(),
+            topo.num_ports()
+        );
 
         // --- flow-level simulation through the XLA artifact -------------
         let mut rows = Vec::new();
@@ -88,7 +93,7 @@ fn main() -> anyhow::Result<()> {
                 &routes,
                 PacketSimConfig { message_packets: 64, ..Default::default() },
             )
-            .run();
+            .run()?;
             println!(
                 "packet-sim {kind}: completion {} slots, {:.2} pkt/slot",
                 res.completion_slots, res.throughput

@@ -1,0 +1,749 @@
+#!/usr/bin/env python3
+"""Reference generator for ``rust/tests/golden/faults_case_study.csv``.
+
+This is a line-by-line port of the exact pipeline behind::
+
+    pgft faults --topo case-study --algo dmodk,gdmodk --pattern c2io-sym \
+                --faults none,links:2,stage:3:4 --seeds 1 --serial --format csv
+
+kept in Python so the golden file can be (re)generated and audited
+without a Rust toolchain, and so CI has an independent implementation to
+diff against.  Every stage mirrors its Rust counterpart exactly:
+
+* ``util::rng``            -> SplitMix64 / xoshiro256** / Lemire bounded
+* ``topology::build``      -> identical switch/port/link id assignment
+* ``routing::xmodk``       -> Dmodk / Gdmodk closed forms + Algorithm 1
+* ``faults::scenario``     -> seeded links:K / stage:L:K expansion
+* ``faults::view/router``  -> reachability fields + degraded rerouting
+* ``metrics``              -> the C_p = min(src, dst) congestion report
+* ``sweep::result``        -> the 26-column CSV row encoding
+
+Run ``python3 python/tools/gen_faults_golden.py`` to regenerate the
+golden file; the script asserts every paper-pinned figure on the way
+(see ``python/tests/test_faults_golden.py`` for the pytest wrapper).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# util::rng — SplitMix64 + xoshiro256** + Lemire bounded sampling
+# ---------------------------------------------------------------------------
+
+
+class SplitMix64:
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Xoshiro256:
+    def __init__(self, seed: int) -> None:
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_below(self, bound: int) -> int:
+        assert bound > 0
+        x = self.next_u64()
+        m = x * bound
+        low = m & MASK
+        if low < bound:
+            threshold = ((-bound) & MASK) % bound
+            while low < threshold:
+                x = self.next_u64()
+                m = x * bound
+                low = m & MASK
+        return m >> 64
+
+    def index(self, bound: int) -> int:
+        return self.next_below(bound)
+
+    def shuffle(self, xs: list) -> None:
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.index(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def sample_indices(self, n: int, k: int) -> list:
+        assert k <= n
+        chosen: list = []
+        for j in range(n - k, n):
+            t = self.index(j + 1)
+            if t in chosen:
+                chosen.append(j)
+            else:
+                chosen.append(t)
+        return chosen
+
+
+# ---------------------------------------------------------------------------
+# topology — the paper's case study PGFT(3; 8,4,2; 1,2,1; 1,1,4)
+# ---------------------------------------------------------------------------
+
+H = 3
+M = [8, 4, 2]
+W = [1, 2, 1]
+P = [1, 1, 4]
+
+
+def w_prefix(l: int) -> int:
+    out = 1
+    for x in W[:l]:
+        out *= x
+    return out
+
+
+class Topo:
+    """Mirror of ``topology::build::build_pgft`` (same id assignment)."""
+
+    def __init__(self) -> None:
+        self.num_nodes = 1
+        for m in M:
+            self.num_nodes *= m
+        # switches: level-major; each has level, top, bottom, up/down port slots
+        self.sw_level: list = []
+        self.sw_top: list = []
+        self.sw_bottom: list = []
+        self.sw_up: list = []
+        self.sw_down: list = []
+        self.level_start = []
+        for l in range(1, H + 1):
+            self.level_start.append(len(self.sw_level))
+            above = 1
+            for m in M[l:]:
+                above *= m
+            below = 1
+            for w in W[:l]:
+                below *= w
+            for within in range(above * below):
+                x = within
+                bottom = []
+                for j in range(l):
+                    bottom.append(x % W[j])
+                    x //= W[j]
+                top = []
+                for j in range(H - l):
+                    top.append(x % M[l + j])
+                    x //= M[l + j]
+                assert x == 0
+                self.sw_level.append(l)
+                self.sw_top.append(top)
+                self.sw_bottom.append(bottom)
+                self.sw_up.append([None] * self.up_ports_at(l))
+                self.sw_down.append([None] * self.down_ports_at(l))
+        self.level_start.append(len(self.sw_level))
+        self.num_switches = len(self.sw_level)
+
+        self.node_digits = []
+        self.node_up = []
+        for nid in range(self.num_nodes):
+            d = []
+            x = nid
+            for l in range(H):
+                d.append(x % M[l])
+                x //= M[l]
+            self.node_digits.append(d)
+            self.node_up.append([None] * self.up_ports_at(0))
+
+        # ports: owner, peer, up, link, index;  links: up_port, down_port, stage
+        self.port_owner: list = []
+        self.port_peer: list = []
+        self.port_up: list = []
+        self.port_link: list = []
+        self.port_index: list = []
+        self.link_up: list = []
+        self.link_down: list = []
+        self.link_stage: list = []
+
+        # stage 1: nodes to leaves
+        for nid in range(self.num_nodes):
+            digits = self.node_digits[nid]
+            child_idx = digits[0]
+            for c in range(W[0]):
+                leaf = self.switch_at(1, digits[1:], [c])
+                for j in range(P[0]):
+                    up_idx = c + W[0] * j
+                    down_idx = child_idx * P[0] + j
+                    self._add_link(("n", nid), up_idx, ("s", leaf), down_idx, 1)
+
+        # stages 2..h
+        for l in range(1, H):
+            for sid in range(self.level_start[l - 1], self.level_start[l]):
+                top = self.sw_top[sid]
+                bottom = self.sw_bottom[sid]
+                child_idx = top[0]
+                for c in range(W[l]):
+                    parent = self.switch_at(l + 1, top[1:], bottom + [c])
+                    for j in range(P[l]):
+                        up_idx = c + W[l] * j
+                        down_idx = child_idx * P[l] + j
+                        self._add_link(("s", sid), up_idx, ("s", parent), down_idx, l + 1)
+
+        assert all(p is not None for ups in self.sw_up for p in ups)
+        assert all(p is not None for dns in self.sw_down for p in dns)
+        assert all(p is not None for ups in self.node_up for p in ups)
+        self.num_ports = len(self.port_owner)
+        self.num_links = len(self.link_up)
+
+    @staticmethod
+    def up_ports_at(l: int) -> int:
+        return 0 if l >= H else W[l] * P[l]
+
+    @staticmethod
+    def down_ports_at(l: int) -> int:
+        return M[l - 1] * P[l - 1]
+
+    def switch_at(self, level: int, top: list, bottom: list) -> int:
+        bot = 0
+        for j in range(level - 1, -1, -1):
+            bot = bot * W[j] + bottom[j]
+        topv = 0
+        for j in range(H - level - 1, -1, -1):
+            topv = topv * M[level + j] + top[j]
+        within = topv * w_prefix(level) + bot
+        return self.level_start[level - 1] + within
+
+    def _add_link(self, lower, up_idx, upper, down_idx, stage) -> None:
+        link_id = len(self.link_up)
+        up_port = len(self.port_owner)
+        down_port = up_port + 1
+        self.port_owner += [lower, upper]
+        self.port_peer += [upper, lower]
+        self.port_up += [True, False]
+        self.port_link += [link_id, link_id]
+        self.port_index += [up_idx, down_idx]
+        self.link_up.append(up_port)
+        self.link_down.append(down_port)
+        self.link_stage.append(stage)
+        kind, idx = lower
+        if kind == "n":
+            self.node_up[idx][up_idx] = up_port
+        else:
+            self.sw_up[idx][up_idx] = up_port
+        ukind, uidx = upper
+        assert ukind == "s"
+        self.sw_down[uidx][down_idx] = down_port
+
+    def is_ancestor(self, sw: int, nid: int) -> bool:
+        level = self.sw_level[sw]
+        d = self.node_digits[nid]
+        return all(d[level + j] == t for j, t in enumerate(self.sw_top[sw]))
+
+    def ancestors_at(self, l: int, nid: int) -> list:
+        digits = self.node_digits[nid]
+        top = digits[l:]
+        wl = w_prefix(l)
+        out = []
+        bottom = [0] * l
+        for _ in range(wl):
+            out.append(self.switch_at(l, top, bottom))
+            for j in range(l):
+                bottom[j] += 1
+                if bottom[j] < W[j]:
+                    break
+                bottom[j] = 0
+        out.sort()
+        return out
+
+    def child_index_toward(self, sw: int, nid: int) -> int:
+        return self.node_digits[nid][self.sw_level[sw] - 1]
+
+    def down_port_toward(self, sw: int, nid: int, j: int) -> int:
+        p_l = P[self.sw_level[sw] - 1]
+        c = self.child_index_toward(sw, nid)
+        return self.sw_down[sw][c * p_l + j]
+
+    def port_level(self, p: int) -> int:
+        kind, idx = self.port_owner[p]
+        return 0 if kind == "n" else self.sw_level[idx]
+
+    def level_switches(self, l: int):
+        return range(self.level_start[l - 1], self.level_start[l])
+
+
+# ---------------------------------------------------------------------------
+# nodes — placement io:last:1 + Algorithm 1 re-index
+# ---------------------------------------------------------------------------
+
+
+def build_types(topo: Topo) -> list:
+    """io:last:1 — the highest NID of each leaf is IO, the rest compute."""
+    types = ["compute"] * topo.num_nodes
+    for leaf in topo.level_switches(1):
+        nids = sorted(
+            {topo.port_peer[p][1] for p in topo.sw_down[leaf] if topo.port_peer[p][0] == "n"}
+        )
+        types[nids[-1]] = "io"
+    return types
+
+
+def build_gnid(types: list) -> list:
+    """TypeReindex::new — compute first, then io, NID order within type."""
+    gnid = [0] * len(types)
+    nxt = 0
+    for ty in ("compute", "io"):
+        for nid, t in enumerate(types):
+            if t == ty:
+                gnid[nid] = nxt
+                nxt += 1
+    assert nxt == len(types)
+    return gnid
+
+
+# ---------------------------------------------------------------------------
+# patterns — c2io-sym (bijective symmetric-leaf reading)
+# ---------------------------------------------------------------------------
+
+
+def c2io_sym_flows(topo: Topo, types: list) -> list:
+    flows = []
+    for leaf in topo.level_switches(1):
+        nids = sorted(
+            {topo.port_peer[p][1] for p in topo.sw_down[leaf] if topo.port_peer[p][0] == "n"}
+        )
+        srcs = [n for n in nids if types[n] == "compute"]
+        if not srcs:
+            continue
+        # mirrored leaf: top-level digit flipped
+        top = list(topo.sw_top[leaf])
+        top[-1] = M[H - 1] - 1 - top[-1]
+        mirror = topo.switch_at(1, top, topo.sw_bottom[leaf])
+        mnids = sorted(
+            {topo.port_peer[p][1] for p in topo.sw_down[mirror] if topo.port_peer[p][0] == "n"}
+        )
+        dsts = [n for n in mnids if types[n] == "io"]
+        if not dsts:
+            continue
+        for i, s in enumerate(srcs):
+            flows.append((s, dsts[i % len(dsts)]))
+    return flows
+
+
+# ---------------------------------------------------------------------------
+# routing — Xmodk closed forms and the trace loop
+# ---------------------------------------------------------------------------
+
+
+def up_index(level: int, key: int) -> int:
+    k = W[level] * P[level]
+    return (key // w_prefix(level)) % k
+
+
+def down_index(level: int, key: int) -> int:
+    return (key // w_prefix(level)) % P[level - 1]
+
+
+class XmodkRouter:
+    """Dmodk (key = dst) or Gdmodk (key = gnid[dst])."""
+
+    def __init__(self, topo: Topo, gnid=None) -> None:
+        self.topo = topo
+        self.gnid = gnid
+
+    def key(self, src: int, dst: int) -> int:
+        return self.gnid[dst] if self.gnid is not None else dst
+
+    def inject_port(self, src: int, dst: int) -> int:
+        return self.topo.node_up[src][up_index(0, self.key(src, dst))]
+
+    def up_port(self, sw: int, src: int, dst: int) -> int:
+        level = self.topo.sw_level[sw]
+        return self.topo.sw_up[sw][up_index(level, self.key(src, dst))]
+
+    def down_link(self, sw: int, src: int, dst: int) -> int:
+        level = self.topo.sw_level[sw]
+        return down_index(level, self.key(src, dst))
+
+    def descend_at(self, sw: int, dst: int) -> bool:
+        return self.topo.is_ancestor(sw, dst)
+
+
+def trace_route(topo: Topo, router, src: int, dst: int) -> list:
+    """Mirror of ``routing::trace::trace_route_into``."""
+    if src == dst:
+        return []
+    ports = [router.inject_port(src, dst)]
+    cur = topo.port_peer[ports[0]]
+    while True:
+        kind, idx = cur
+        if kind == "n":
+            assert idx == dst, f"route ended at node {idx}, wanted {dst}"
+            return ports
+        sw = idx
+        if router.descend_at(sw, dst):
+            j = router.down_link(sw, src, dst)
+            out = topo.down_port_toward(sw, dst, j)
+        else:
+            out = router.up_port(sw, src, dst)
+        ports.append(out)
+        cur = topo.port_peer[out]
+        assert len(ports) <= 2 * H + 1, "route too long: loop?"
+
+
+# ---------------------------------------------------------------------------
+# faults — scenario expansion (links:K, stage:L:K) and degraded rerouting
+# ---------------------------------------------------------------------------
+
+SEED_XOR = 0xFA0175CE4A5105
+
+
+def generate_faults(topo: Topo, model: str, seed: int) -> list:
+    """Mirror of ``FaultModel::generate`` for the golden's three specs."""
+    rng = Xoshiro256(seed ^ SEED_XOR)
+    eligible = [l for l in range(topo.num_links) if topo.link_stage[l] >= 2]
+    if model == "none":
+        return []
+    if model.startswith("links:"):
+        count = int(model.split(":")[1])
+        k = min(count, len(eligible))
+        idx = rng.sample_indices(max(len(eligible), 1), k)
+        rng.shuffle(idx)
+        return [eligible[i] for i in idx]
+    if model.startswith("stage:"):
+        _, stage_s, count_s = model.split(":")
+        stage, count = int(stage_s), int(count_s)
+        stage_links = [l for l in range(topo.num_links) if topo.link_stage[l] == stage]
+        if not stage_links:
+            return []
+        bundle = max(Topo.up_ports_at(stage - 1), 1)
+        bundles = max(len(stage_links) // bundle, 1)
+        start = rng.next_below(bundles) * bundle
+        k = min(count, len(stage_links))
+        return [stage_links[(start + i) % len(stage_links)] for i in range(k)]
+    raise ValueError(f"unsupported fault model {model!r}")
+
+
+class DegradedRouter:
+    """Mirror of ``faults::router::DegradedRouter`` over a base router."""
+
+    def __init__(self, topo: Topo, dead: set, base) -> None:
+        self.topo = topo
+        self.dead = dead
+        self.base = base
+        n, ns = topo.num_nodes, topo.num_switches
+        self.descend = [[False] * ns for _ in range(n)]
+        self.good = [[False] * (n + ns) for _ in range(n)]
+        for dst in range(n):
+            desc, good = self._reach(dst)
+            for src in range(n):
+                if not good[src]:
+                    raise RuntimeError(f"fabric partitioned: {src} -> {dst}")
+            self.descend[dst] = desc
+            self.good[dst] = good
+
+    def _alive(self, port: int) -> bool:
+        return self.topo.port_link[port] not in self.dead
+
+    def _reach(self, dst: int):
+        """Mirror of ``DegradedTopology::reach``."""
+        topo = self.topo
+        n, ns = topo.num_nodes, topo.num_switches
+        descend = [False] * ns
+        good = [False] * (n + ns)
+        good[dst] = True
+        for l in range(1, H + 1):
+            for sw in topo.ancestors_at(l, dst):
+                p_l = P[l - 1]
+                ok = False
+                for j in range(p_l):
+                    port = topo.down_port_toward(sw, dst, j)
+                    if not self._alive(port):
+                        continue
+                    kind, idx = topo.port_peer[port]
+                    if kind == "n":
+                        if idx == dst:
+                            ok = True
+                            break
+                    elif descend[idx]:
+                        ok = True
+                        break
+                descend[sw] = ok
+        for l in range(H, 0, -1):
+            for sw in topo.level_switches(l):
+                g = descend[sw]
+                if not g:
+                    for p in topo.sw_up[sw]:
+                        if self._alive(p):
+                            kind, idx = topo.port_peer[p]
+                            if kind == "s" and good[n + idx]:
+                                g = True
+                                break
+                good[n + sw] = g
+        for nid in range(n):
+            if nid == dst:
+                continue
+            g = False
+            for p in topo.node_up[nid]:
+                if self._alive(p):
+                    kind, idx = topo.port_peer[p]
+                    if kind == "s" and good[n + idx]:
+                        g = True
+                        break
+            good[nid] = g
+        return descend, good
+
+    def _up_viable(self, port: int, dst: int) -> bool:
+        if not self._alive(port):
+            return False
+        kind, idx = self.topo.port_peer[port]
+        return kind == "s" and self.good[dst][self.topo.num_nodes + idx]
+
+    def _pick_up(self, ports: list, preferred: int, dst: int) -> int:
+        start = self.topo.port_index[preferred]
+        assert ports[start] == preferred
+        for i in range(len(ports)):
+            port = ports[(start + i) % len(ports)]
+            if self._up_viable(port, dst):
+                return port
+        raise RuntimeError("no viable up-port (connectivity was validated)")
+
+    def inject_port(self, src: int, dst: int) -> int:
+        preferred = self.base.inject_port(src, dst)
+        return self._pick_up(self.topo.node_up[src], preferred, dst)
+
+    def up_port(self, sw: int, src: int, dst: int) -> int:
+        preferred = self.base.up_port(sw, src, dst)
+        return self._pick_up(self.topo.sw_up[sw], preferred, dst)
+
+    def down_link(self, sw: int, src: int, dst: int) -> int:
+        level = self.topo.sw_level[sw]
+        p_l = P[level - 1]
+        preferred = self.base.down_link(sw, src, dst) % p_l
+        for i in range(p_l):
+            j = (preferred + i) % p_l
+            if self._alive(self.topo.down_port_toward(sw, dst, j)):
+                return j
+        raise RuntimeError("descend_at guaranteed an alive parallel link")
+
+    def descend_at(self, sw: int, dst: int) -> bool:
+        return self.descend[dst][sw]
+
+
+# ---------------------------------------------------------------------------
+# metrics — the C_p = min(src, dst) congestion report + AlgoSummary fields
+# ---------------------------------------------------------------------------
+
+
+class Report:
+    def __init__(self, topo: Topo, routes: list) -> None:
+        self.topo = topo
+        np_ = topo.num_ports
+        self.routes_n = [0] * np_
+        self.srcs = [set() for _ in range(np_)]
+        self.dsts = [set() for _ in range(np_)]
+        for (src, dst), ports in routes:
+            for p in ports:
+                self.routes_n[p] += 1
+                self.srcs[p].add(src)
+                self.dsts[p].add(dst)
+
+    def c(self, p: int) -> int:
+        return min(len(self.srcs[p]), len(self.dsts[p]))
+
+    def c_topo(self) -> int:
+        return max(self.c(p) for p in range(self.topo.num_ports))
+
+    def hot_ports(self) -> list:
+        return [p for p in range(self.topo.num_ports) if self.c(p) > 1]
+
+    def c_max_at(self, level: int, up: bool) -> int:
+        vals = [
+            self.c(p)
+            for p in range(self.topo.num_ports)
+            if self.topo.port_level(p) == level and self.topo.port_up[p] == up
+        ]
+        return max(vals) if vals else 0
+
+    def used_at(self, level: int, up: bool) -> int:
+        return sum(
+            1
+            for p in range(self.topo.num_ports)
+            if self.topo.port_level(p) == level
+            and self.topo.port_up[p] == up
+            and self.routes_n[p] > 0
+        )
+
+
+def summary_cells(topo: Topo, rep: Report) -> dict:
+    hot = rep.hot_ports()
+    hot_per_level = [0] * (H + 1)
+    for p in hot:
+        hot_per_level[topo.port_level(p)] += 1
+    total_top = sum(
+        1
+        for p in range(topo.num_ports)
+        if topo.port_level(p) == H and not topo.port_up[p]
+    )
+    return {
+        "c_topo": rep.c_topo(),
+        "hot_total": len(hot),
+        "hot_per_level": hot_per_level,
+        "c_max_up": [rep.c_max_at(l, True) for l in range(H + 1)],
+        "c_max_down": [rep.c_max_at(l, False) for l in range(H + 1)],
+        "used_top": rep.used_at(H, False),
+        "total_top": total_top,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the golden grid itself
+# ---------------------------------------------------------------------------
+
+COLUMNS = [
+    "topology", "placement", "algo", "pattern", "fault", "seed", "flows", "C_topo",
+    "hot_ports", "hot_per_level", "cmax_up", "cmax_down", "used_top", "total_top",
+    "dead_links", "routes_changed", "routable", "agg_thru", "min_rate", "completion",
+    "retention", "ns_offered", "ns_accepted", "ns_mean_lat", "ns_p99_lat", "ns_saturated",
+]
+
+
+def join_nums(xs: list) -> str:
+    return "|".join(str(x) for x in xs)
+
+
+def golden_rows() -> list:
+    topo = Topo()
+    assert topo.num_nodes == 64 and topo.num_switches == 14
+    assert topo.num_links == 96 and topo.num_ports == 192
+
+    types = build_types(topo)
+    assert [n for n, t in enumerate(types) if t == "io"] == [7, 15, 23, 31, 39, 47, 55, 63]
+    gnid = build_gnid(types)
+    assert gnid[7] == 56 and gnid[47] == 61 and gnid[63] == 63
+    assert gnid[0] == 0 and gnid[8] == 7 and gnid[62] == 55
+
+    flows = c2io_sym_flows(topo, types)
+    assert len(flows) == 56
+    assert all((s, 47) in flows for s in range(8, 15)), "paper: NIDs 8..14 -> 47"
+    assert all((s, 15) in flows for s in range(40, 47))
+
+    seed = 1
+    rows = []
+    for algo in ("dmodk", "gdmodk"):
+        base = XmodkRouter(topo, gnid if algo == "gdmodk" else None)
+        pristine = [((s, d), trace_route(topo, base, s, d)) for (s, d) in flows]
+        # Sanity of the degraded port: zero faults is byte-identical to
+        # the base router (the property rust/tests/fault_rerouting.rs
+        # pins on the Rust side).
+        empty = DegradedRouter(topo, set(), base)
+        assert [trace_route(topo, empty, s, d) for (s, d) in flows] == [
+            p for (_sd, p) in pristine
+        ], "zero-fault DegradedRouter must not move a single port"
+        for ports_pair in pristine:
+            (_s, _d), ports = ports_pair
+            assert len(ports) == 6, "all C2IO flows cross the top: 6 hops"
+            dirs = [topo.port_up[p] for p in ports]
+            first_down = dirs.index(False) if False in dirs else len(dirs)
+            assert all(not u for u in dirs[first_down:]), "valley-free"
+
+        for fault in ("none", "links:2", "stage:3:4"):
+            events = generate_faults(topo, fault, seed)
+            dead = set(events)
+            dead_links = len(dead)
+            if fault == "none":
+                routed = pristine
+                routes_changed = 0
+            else:
+                for l in dead:
+                    assert topo.link_stage[l] >= 2, "only switch links are eligible"
+                try:
+                    degraded = DegradedRouter(topo, dead, base)
+                except RuntimeError:
+                    # Partitioned fabric: an unroutable row (mirrors the
+                    # sweep runner), not a grid error.
+                    rows.append([
+                        "case-study", "io:last:1", algo, "c2io-sym", fault, str(seed),
+                        str(len(flows)), "0", "0", join_nums([0] * (H + 1)),
+                        join_nums([0] * (H + 1)), join_nums([0] * (H + 1)), "0", "16",
+                        str(dead_links), str(len(flows)), "0",
+                        "", "", "", "", "", "", "", "", "",
+                    ])
+                    continue
+                routed = [((s, d), trace_route(topo, degraded, s, d)) for (s, d) in flows]
+                for (_sd, ports) in routed:
+                    for p in ports:
+                        assert topo.port_link[p] not in dead, "dead link used"
+                routes_changed = sum(
+                    1 for (a, b) in zip(pristine, routed) if a[1] != b[1]
+                )
+            rep = Report(topo, routed)
+            cells = summary_cells(topo, rep)
+
+            if fault == "none":
+                if algo == "dmodk":
+                    assert cells["c_topo"] == 4, "paper §III.B"
+                    assert cells["hot_per_level"][H] == 2, "two hot top-level ports"
+                    assert cells["used_top"] == 2, "Dmodk concentrates on 2 top ports"
+                else:
+                    assert cells["c_topo"] == 1, "paper §IV optimum"
+                    assert cells["hot_total"] == 0
+                    assert cells["used_top"] == 8
+                assert cells["total_top"] == 16
+            if fault == "links:2":
+                assert dead_links == 2
+            if fault == "stage:3:4":
+                assert dead_links == 4
+                owners = {topo.port_owner[topo.link_up[l]] for l in dead}
+                assert len(owners) == 1, "stage cut concentrates on one bundle"
+                if algo == "gdmodk":
+                    assert routes_changed > 0, "gdmodk uses every L2 bundle"
+
+            rows.append([
+                "case-study", "io:last:1", algo, "c2io-sym", fault, str(seed),
+                str(len(flows)), str(cells["c_topo"]), str(cells["hot_total"]),
+                join_nums(cells["hot_per_level"]), join_nums(cells["c_max_up"]),
+                join_nums(cells["c_max_down"]), str(cells["used_top"]),
+                str(cells["total_top"]), str(dead_links), str(routes_changed), "1",
+                "", "", "", "", "", "", "", "", "",
+            ])
+    return rows
+
+
+def golden_csv() -> str:
+    rows = golden_rows()
+    out = [",".join(COLUMNS)]
+    out += [",".join(r) for r in rows]
+    return "\n".join(out) + "\n"
+
+
+def main() -> int:
+    csv = golden_csv()
+    here = os.path.dirname(os.path.abspath(__file__))
+    dest = os.path.normpath(
+        os.path.join(here, "..", "..", "rust", "tests", "golden", "faults_case_study.csv")
+    )
+    os.makedirs(os.path.dirname(dest), exist_ok=True)
+    with open(dest, "w", encoding="utf-8", newline="") as f:
+        f.write(csv)
+    sys.stderr.write(f"wrote {dest} ({len(csv.splitlines()) - 1} rows)\n")
+    sys.stdout.write(csv)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,60 @@
+//! E13 — flit-level simulator cost and the latency-vs-load headline:
+//! events/second of the calendar-queue engine across offered loads, and
+//! the Dmodk-vs-Gdmodk saturation gap on the paper's C2IO case study.
+//!
+//! CI smoke-runs this with `PGFT_BENCH_SMOKE=1` (1 iteration) so the
+//! bench code cannot rot; real numbers come from a plain `cargo bench`.
+
+use pgft::netsim::{load_curve, run_netsim, saturation_point, NetsimConfig};
+use pgft::prelude::*;
+use pgft::util::bench::Bench;
+use std::time::Duration;
+
+fn main() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+    let cfg = NetsimConfig { warmup: 200, measure: 1000, drain: 200, ..Default::default() };
+
+    println!("== engine cost: one run per offered load (case study, C2IO) ==");
+    for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk] {
+        let router = kind.build(&topo, Some(&types), 1);
+        let routes = trace_flows(&topo, &*router, &flows);
+        for rate in [0.05f64, 0.3, 0.8] {
+            let rep = run_netsim(&topo, &routes, &cfg, rate).unwrap();
+            let events = rep.events;
+            Bench::new(format!("netsim/{kind}/rate-{rate}"))
+                .target_time(Duration::from_millis(300))
+                .throughput_elems(events)
+                .run(|_| {
+                    std::hint::black_box(run_netsim(&topo, &routes, &cfg, rate).unwrap());
+                });
+        }
+    }
+
+    println!("\n== saturation points (4-point curve per algorithm) ==");
+    let rates = [0.1f64, 0.3, 0.6, 0.9];
+    let mut peaks = Vec::new();
+    for kind in AlgorithmKind::ALL {
+        let router = kind.build(&topo, Some(&types), 1);
+        let routes = trace_flows(&topo, &*router, &flows);
+        let (curve, d) = pgft::util::bench::time_once(&format!("netsim/curve/{kind}"), || {
+            load_curve(&topo, &routes, &cfg, &rates).unwrap()
+        });
+        let sat = saturation_point(&curve).expect("non-empty curve");
+        println!(
+            "  {kind:<12} peak accepted {:>6.2} flits/cycle, knee at offered {:>4.2} ({})",
+            sat.peak_accepted,
+            sat.knee_offered,
+            pgft::util::bench::human_duration(d)
+        );
+        peaks.push((kind, sat.peak_accepted));
+    }
+    let peak = |k: AlgorithmKind| peaks.iter().find(|(x, _)| *x == k).unwrap().1;
+    println!(
+        "\nheadline: gdmodk saturates at {:.2} flits/cycle vs dmodk {:.2} ({:.1}x)",
+        peak(AlgorithmKind::Gdmodk),
+        peak(AlgorithmKind::Dmodk),
+        peak(AlgorithmKind::Gdmodk) / peak(AlgorithmKind::Dmodk).max(1e-9)
+    );
+}

@@ -175,7 +175,11 @@ fn main() {
             let r = AlgorithmKind::Gdmodk.build(&case, Some(&types), 1);
             let fl = Pattern::C2ioSym.flows(&case, &types).unwrap();
             let routes = trace_flows(&case, &*r, &fl);
-            std::hint::black_box(PacketSim::new(&case, &routes, PacketSimConfig::default()).run());
+            std::hint::black_box(
+                PacketSim::new(&case, &routes, PacketSimConfig::default())
+                    .run()
+                    .expect("default max_slots covers the case study"),
+            );
         });
 
     // The PR-1 acceptance run: the full 6-algorithm × 4-pattern ×
@@ -184,7 +188,11 @@ fn main() {
     println!("\n== sweep engine (algorithm × pattern × placement grid) ==");
     let spec = SweepSpec::paper_grid("medium-512");
     let threads = par::max_threads();
-    println!("  grid: {} cells on medium-512, {} worker threads available", spec.num_cells(), threads);
+    println!(
+        "  grid: {} cells on medium-512, {} worker threads available",
+        spec.num_cells(),
+        threads
+    );
     let (rows_serial, t_serial) = time_once("sweep/medium-512/serial", || {
         run_sweep(&spec, &SweepOptions { threads: 1 }).unwrap()
     });

@@ -46,7 +46,9 @@ fn main() {
         for kind in AlgorithmKind::ALL {
             let router = kind.build(&topo, Some(&types), 1);
             let routes = trace_flows(&topo, &*router, &flows);
-            let res = PacketSim::new(&topo, &routes, PacketSimConfig::default()).run();
+            let res = PacketSim::new(&topo, &routes, PacketSimConfig::default())
+                .run()
+                .expect("default max_slots covers the case study");
             if kind == AlgorithmKind::Dmodk {
                 dmodk_slots = res.completion_slots;
             }

@@ -13,6 +13,9 @@
 //! pgft ports --algo dmodk --pattern c2io-sym [--level 3]      # per-port detail (Figs 4-7)
 //! pgft random-dist [--trials 1000] [--pattern c2io-sym]       # §III.D histogram
 //! pgft simulate [--xla|--no-xla] [--pattern ..] [--algo ..]   # flow-level rates
+//! pgft netsim [--rates 0.05,0.1] [--algo ..] [--pattern ..]   # flit-level curves
+//!             [--packet-flits 4] [--vcs 2] [--vc-capacity 8] [--link-latency 1]
+//!             [--injection bernoulli|burst:K] [--faults SPEC] [--seed N]
 //! pgft packet-sim [--message 64] [--pattern ..] [--algo ..]   # slot-level sim
 //! pgft run --config FILE                                      # full experiment
 //! pgft fabric-demo [--algo gdmodk]                            # coordinator + fault drill
@@ -21,12 +24,16 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Coordinator;
+use crate::faults::FaultModel;
 use crate::metrics::{render_algorithm_table, CongestionReport};
+use crate::netsim::{
+    curve_table, default_rates, load_curve, saturation_point, CurvePoint, Injection, NetsimConfig,
+};
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
 use crate::report::Table;
 use crate::routing::trace::trace_flows;
-use crate::routing::AlgorithmKind;
+use crate::routing::{AlgorithmKind, Router};
 use crate::sim::{render_sim_table, simulate_flow_level, PacketSim, PacketSimConfig};
 use crate::sweep::{fault_table, run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
 use crate::topology::{families, render, Topology};
@@ -138,6 +145,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "ports" => cmd_ports(&args),
         "random-dist" => cmd_random_dist(&args),
         "simulate" => cmd_simulate(&args),
+        "netsim" => cmd_netsim(&args),
         "packet-sim" => cmd_packet_sim(&args),
         "run" => cmd_run(&args),
         "fabric-demo" => cmd_fabric_demo(&args),
@@ -164,7 +172,13 @@ commands:
   ports        per-port detail for one algorithm/pattern (Figs 4-7)
   random-dist  C_topo histogram over random-routing seeds (§III.D)
   simulate     flow-level max-min throughput (XLA/PJRT or rust solver)
-  packet-sim   slot-level packet simulation (completion time)
+  netsim       flit-level latency-vs-offered-load curves (VC/credit flow
+               control; --rates 0.05,0.1,..; --packet-flits/--vcs/--vc-capacity/
+               --link-latency/--warmup/--measure/--drain; --injection
+               bernoulli|burst:K; --faults SPEC simulates degraded tables;
+               deterministic per --seed)
+  packet-sim   slot-level packet simulation (completion time; superseded by
+               netsim for latency/throughput studies)
   run          full experiment from a TOML config (--config FILE)
   fabric-demo  coordinator lifecycle: route, fail links, reroute, report
   artifacts    list AOT artifacts the runtime can execute
@@ -205,6 +219,13 @@ fn summary_table(rows: &[SweepResult]) -> Table {
         ]);
     }
     t
+}
+
+/// Parse a comma-separated offered-load list (`0.05,0.1,0.2`).
+fn parse_rates(spec: &str) -> Result<Vec<f64>> {
+    spec.split(',')
+        .map(|x| x.parse::<f64>().map_err(|e| anyhow::anyhow!("offered load {x:?}: {e}")))
+        .collect()
 }
 
 /// Worker-thread count from `--serial` / `--threads N`.
@@ -260,6 +281,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.flag("simulate") {
         spec.simulate = true;
     }
+    if let Some(n) = args.get("netsim") {
+        spec.netsim = parse_rates(n)?;
+    }
     spec.validate()?;
     let threads = parse_threads(args)?;
     let t0 = Instant::now();
@@ -299,6 +323,10 @@ fn cmd_faults(args: &Args) -> Result<()> {
             .collect(),
         seeds,
         simulate: args.flag("simulate"),
+        netsim: match args.get("netsim") {
+            Some(n) => parse_rates(n)?,
+            None => Vec::new(),
+        },
     };
     spec.validate()?;
     let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
@@ -318,6 +346,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         faults: vec!["none".into()],
         seeds: vec![args.u64_or("seed", 1)?],
         simulate: false,
+        netsim: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
     emit(&summary_table(&rows), args)?;
@@ -431,6 +460,77 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pgft netsim` — flit-level latency-vs-offered-load curves: one curve
+/// per (algorithm, pattern) over a grid of injection rates, simulated
+/// with the VC/credit event-driven engine ([`crate::netsim`]). With
+/// `--faults SPEC` the *degraded* tables are simulated end-to-end
+/// (scenario expanded from `--seed`, routed via
+/// [`crate::faults::DegradedRouter`]). Deterministic: the same `--seed`
+/// produces byte-identical CSV.
+fn cmd_netsim(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let seed = args.u64_or("seed", 1)?;
+    let rates = match args.get("rates") {
+        Some(spec) => parse_rates(spec)?,
+        None => default_rates(),
+    };
+    let cfg = NetsimConfig {
+        packet_flits: args.u64_or("packet-flits", 4)? as u32,
+        vcs: args.u64_or("vcs", 2)? as u32,
+        vc_capacity: args.u64_or("vc-capacity", 8)? as u32,
+        link_latency: args.u64_or("link-latency", 1)?,
+        warmup: args.u64_or("warmup", 300)?,
+        measure: args.u64_or("measure", 1500)?,
+        drain: args.u64_or("drain", 300)?,
+        injection: Injection::parse(&args.get_or("injection", "bernoulli"))?,
+        seed,
+    };
+    // Optional fault scenario: simulate rerouted (degraded) tables.
+    let faults = match args.get("faults") {
+        Some(spec) if spec != "none" => {
+            let model = FaultModel::parse(spec)?;
+            model.validate_for(&topo.spec)?;
+            Some(model.generate(&topo, seed).fault_set(&topo))
+        }
+        _ => None,
+    };
+    let mut points: Vec<CurvePoint> = Vec::new();
+    let mut sat = Table::new(
+        "saturation points (peak accepted flits/cycle, knee offered load)",
+        &["algo", "pattern", "peak_accepted", "knee_offered", "first_saturated"],
+    );
+    for pattern in parse_patterns(args, "c2io-sym")? {
+        let flows = pattern.flows(&topo, &types)?;
+        for kind in parse_algos(args)? {
+            let router: Box<dyn Router> = match &faults {
+                Some(f) => kind.build_degraded(&topo, Some(&types), seed, f)?,
+                None => kind.build(&topo, Some(&types), seed),
+            };
+            let routes = trace_flows(&topo, &*router, &flows);
+            let curve = load_curve(&topo, &routes, &cfg, &rates)?;
+            if let Some(s) = saturation_point(&curve) {
+                sat.row(&[
+                    kind.as_str().to_string(),
+                    pattern.name(),
+                    format!("{:.3}", s.peak_accepted),
+                    format!("{:.3}", s.knee_offered),
+                    s.first_saturated.map(|x| format!("{x:.3}")).unwrap_or_default(),
+                ]);
+            }
+            points.extend(curve.into_iter().map(|report| CurvePoint {
+                algorithm: kind.as_str().to_string(),
+                pattern: pattern.name(),
+                report,
+            }));
+        }
+    }
+    emit(&curve_table(&points), args)?;
+    // The saturation summary goes to stderr so `--out`/stdout CSV stays
+    // machine-clean.
+    eprint!("{}", sat.to_text());
+    Ok(())
+}
+
 fn cmd_packet_sim(args: &Args) -> Result<()> {
     let (topo, types) = load_topo(args)?;
     let seed = args.u64_or("seed", 1)?;
@@ -448,7 +548,7 @@ fn cmd_packet_sim(args: &Args) -> Result<()> {
         for kind in parse_algos(args)? {
             let router = kind.build(&topo, Some(&types), seed);
             let routes = trace_flows(&topo, &*router, &flows);
-            let res = PacketSim::new(&topo, &routes, cfg.clone()).run();
+            let res = PacketSim::new(&topo, &routes, cfg.clone()).run()?;
             t.row(&[
                 kind.as_str().to_string(),
                 pattern.name(),
@@ -484,6 +584,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         faults: vec!["none".into()],
         seeds: vec![cfg.seed],
         simulate: true,
+        netsim: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
     print!("{}", render_algorithm_table(&crate::sweep::summaries(&rows)));
@@ -572,7 +673,8 @@ mod tests {
 
     #[test]
     fn args_parse_forms() {
-        let a = Args::parse(&argv(&["analyze", "--algo", "dmodk", "--dot", "--seed", "3"])).unwrap();
+        let a =
+            Args::parse(&argv(&["analyze", "--algo", "dmodk", "--dot", "--seed", "3"])).unwrap();
         assert_eq!(a.cmd, "analyze");
         assert_eq!(a.get("algo"), Some("dmodk"));
         assert!(a.flag("dot"));
@@ -659,6 +761,29 @@ mod tests {
             "--algo", "gdmodk", "--faults", "none,stage:3:2", "--serial",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn netsim_command_runs_and_rejects_bad_args() {
+        run(&argv(&[
+            "netsim", "--algo", "dmodk", "--pattern", "c2io-sym", "--rates", "0.1",
+            "--warmup", "50", "--measure", "200", "--drain", "50",
+        ]))
+        .unwrap();
+        // Unordered rate grids and unknown injection processes fail fast.
+        assert!(run(&argv(&["netsim", "--rates", "0.5,0.1"])).is_err());
+        assert!(run(&argv(&["netsim", "--injection", "poisson"])).is_err());
+        assert!(run(&argv(&["netsim", "--faults", "meteor:3"])).is_err());
+    }
+
+    #[test]
+    fn sweep_accepts_netsim_axis() {
+        run(&argv(&[
+            "sweep", "--topo", "case-study", "--pattern", "c2io-sym",
+            "--algo", "gdmodk", "--netsim", "0.1", "--serial",
+        ]))
+        .unwrap();
+        assert!(run(&argv(&["sweep", "--netsim", "2.0"])).is_err(), "rates must be in (0,1]");
     }
 
     #[test]

@@ -80,6 +80,17 @@ impl Value {
             other => bail!("expected array of integers, got {other:?}"),
         }
     }
+
+    /// Float array; integers widen and a lone number counts as a
+    /// one-element array (the `[sweep] netsim = [0.1, 0.2]` axis).
+    pub fn as_float_array(&self) -> Result<Vec<f64>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_float()).collect(),
+            Value::Float(f) => Ok(vec![*f]),
+            Value::Int(i) => Ok(vec![*i as f64]),
+            other => bail!("expected array of numbers, got {other:?}"),
+        }
+    }
 }
 
 /// Parsed document: section → key → value. Top-level keys live in `""`.
@@ -335,6 +346,9 @@ use_xla = false
         assert_eq!(doc.get("", "d").unwrap().as_int_array().unwrap(), vec![1, 2, 3]);
         assert_eq!(doc.get("", "a").unwrap().as_int_array().unwrap(), vec![1]);
         assert!(doc.get("", "c").unwrap().as_int_array().is_err());
+        assert_eq!(doc.get("", "d").unwrap().as_float_array().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(doc.get("", "b").unwrap().as_float_array().unwrap(), vec![2.5]);
+        assert!(doc.get("", "c").unwrap().as_float_array().is_err());
         assert!(doc.get_bool("", "e", false).unwrap());
         assert!(doc.get_bool("", "missing", true).unwrap());
     }

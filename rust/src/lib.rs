@@ -5,7 +5,8 @@
 //! García): PGFT topology substrate, the Dmodk/Smodk/Random baselines,
 //! the paper's Gdmodk/Gsmodk contribution, the static congestion metric,
 //! heterogeneous node-type modelling, flow-level and packet-level
-//! simulators, a parallel experiment-sweep engine ([`sweep`]) that turns
+//! simulators plus an event-driven flit-level simulator with VC/credit
+//! flow control ([`netsim`]), a parallel experiment-sweep engine ([`sweep`]) that turns
 //! the paper's algorithm × pattern × placement grids into one command,
 //! a fault-injection & online-rerouting subsystem ([`faults`]) that adds
 //! seeded failure scenarios as a first-class sweep axis, and a BXI-style
@@ -45,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod faults;
 pub mod metrics;
+pub mod netsim;
 pub mod nodes;
 pub mod patterns;
 pub mod report;
@@ -59,6 +61,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::faults::{DegradedRouter, DegradedTopology, FaultModel, FaultScenario, FaultSet};
     pub use crate::metrics::{AlgoSummary, CongestionReport};
+    pub use crate::netsim::{load_curve, run_netsim, Injection, NetsimConfig, NetsimReport};
     pub use crate::nodes::{NodeType, NodeTypeMap, Placement, TypeReindex};
     pub use crate::patterns::Pattern;
     pub use crate::routing::trace::{trace_flows, trace_route};

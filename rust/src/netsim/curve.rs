@@ -1,0 +1,178 @@
+//! Injection-rate sweeps: the latency-vs-offered-load curve and its
+//! saturation point — the standard presentation of the interconnect
+//! literature, and the `pgft netsim` CLI's output shape.
+
+use super::{run_netsim, NetsimConfig, NetsimReport};
+use crate::report::Table;
+use crate::routing::trace::RoutePorts;
+use crate::topology::Topology;
+use anyhow::{ensure, Result};
+
+/// One labelled point of a latency-vs-load curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    /// Algorithm label of the routed table this point simulated.
+    pub algorithm: String,
+    /// Pattern label.
+    pub pattern: String,
+    /// The simulation figures at this offered load.
+    pub report: NetsimReport,
+}
+
+/// Run the whole injection-rate grid over one route set. The offered
+/// loads must be ascending (the curve reads left to right); every run
+/// re-seeds identically, so the curve is deterministic point-wise.
+pub fn load_curve(
+    topo: &Topology,
+    routes: &[RoutePorts],
+    cfg: &NetsimConfig,
+    rates: &[f64],
+) -> Result<Vec<NetsimReport>> {
+    ensure!(!rates.is_empty(), "netsim: no injection rates to sweep");
+    ensure!(
+        rates.windows(2).all(|w| w[0] < w[1]),
+        "netsim: injection rates must be strictly ascending: {rates:?}"
+    );
+    rates.iter().map(|&r| run_netsim(topo, routes, cfg, r)).collect()
+}
+
+/// The default injection-rate grid: 0.05 to 1.0 in 0.05 steps.
+pub fn default_rates() -> Vec<f64> {
+    (1..=20).map(|i| i as f64 / 20.0).collect()
+}
+
+/// Where a curve stops scaling (see [`saturation_point`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Saturation {
+    /// Peak accepted throughput over the curve (aggregate flits/cycle)
+    /// — "the saturation throughput".
+    pub peak_accepted: f64,
+    /// Smallest offered load (per flow) whose accepted throughput
+    /// reaches 95% of the peak — the knee of the curve.
+    pub knee_offered: f64,
+    /// Smallest offered load flagged saturated
+    /// (accepted < [`super::SATURATION_FRACTION`] × offered), if any.
+    pub first_saturated: Option<f64>,
+}
+
+/// Read the saturation point off a curve produced by [`load_curve`].
+pub fn saturation_point(curve: &[NetsimReport]) -> Option<Saturation> {
+    if curve.is_empty() {
+        return None;
+    }
+    let peak_accepted = curve.iter().map(|r| r.accepted).fold(0.0f64, f64::max);
+    let knee_offered = curve
+        .iter()
+        .find(|r| r.accepted >= 0.95 * peak_accepted)
+        .map(|r| r.offered)
+        .unwrap_or(curve[curve.len() - 1].offered);
+    let first_saturated = curve.iter().find(|r| r.saturated).map(|r| r.offered);
+    Some(Saturation { peak_accepted, knee_offered, first_saturated })
+}
+
+/// Collect labelled curve points into a [`Table`] (text/CSV/JSON).
+/// Floats use Rust's shortest-round-trip `Display`, so the CSV is both
+/// lossless and byte-deterministic per seed.
+pub fn curve_table(points: &[CurvePoint]) -> Table {
+    let mut t = Table::new(
+        "netsim: latency vs offered load (flit-level, VC/credit flow control)",
+        &[
+            "algo", "pattern", "offered", "agg_offered", "accepted", "mean_lat", "p99_lat",
+            "delivered", "injected", "saturated",
+        ],
+    );
+    for p in points {
+        let r = &p.report;
+        t.row(&[
+            p.algorithm.clone(),
+            p.pattern.clone(),
+            r.offered.to_string(),
+            r.offered_aggregate.to_string(),
+            r.accepted.to_string(),
+            r.mean_latency.to_string(),
+            r.p99_latency.to_string(),
+            r.delivered_packets.to_string(),
+            r.injected_packets.to_string(),
+            if r.saturated { "1".to_string() } else { "0".to_string() },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::patterns::Pattern;
+    use crate::routing::trace::trace_flows;
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn setup(kind: AlgorithmKind) -> (Topology, Vec<RoutePorts>) {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        let router = kind.build(&topo, Some(&types), 1);
+        let routes = trace_flows(&topo, &*router, &flows);
+        (topo, routes)
+    }
+
+    fn cfg() -> NetsimConfig {
+        NetsimConfig { warmup: 200, measure: 1600, drain: 200, ..Default::default() }
+    }
+
+    #[test]
+    fn curve_is_monotone_in_offered_and_detects_saturation() {
+        let (topo, routes) = setup(AlgorithmKind::Dmodk);
+        // Dmodk's fair-rate floor on C2IO is 1/28 ≈ 0.036: the first
+        // point sits below it, the other two far above.
+        let rates = [0.02, 0.2, 0.8];
+        let curve = load_curve(&topo, &routes, &cfg(), &rates).unwrap();
+        assert_eq!(curve.len(), 3);
+        // Accepted throughput grows toward the bottleneck cap, then stops.
+        assert!(curve[1].accepted > curve[0].accepted);
+        assert!(!curve[0].saturated, "{:?}", curve[0]);
+        assert!(curve[1].saturated && curve[2].saturated, "{curve:?}");
+        let sat = saturation_point(&curve).unwrap();
+        assert!(sat.peak_accepted <= 2.2, "dmodk top-bundle cap: {sat:?}");
+        assert_eq!(sat.first_saturated, Some(0.2));
+        // Latency climbs sharply past the knee.
+        assert!(curve[2].mean_latency > curve[0].mean_latency);
+    }
+
+    #[test]
+    fn rates_must_ascend_and_be_nonempty() {
+        let (topo, routes) = setup(AlgorithmKind::Dmodk);
+        assert!(load_curve(&topo, &routes, &cfg(), &[]).is_err());
+        assert!(load_curve(&topo, &routes, &cfg(), &[0.5, 0.2]).is_err());
+        assert!(saturation_point(&[]).is_none());
+    }
+
+    #[test]
+    fn table_renders_and_labels() {
+        let (topo, routes) = setup(AlgorithmKind::Gdmodk);
+        let curve = load_curve(&topo, &routes, &cfg(), &[0.1]).unwrap();
+        let points: Vec<CurvePoint> = curve
+            .into_iter()
+            .map(|report| CurvePoint {
+                algorithm: "gdmodk".into(),
+                pattern: "c2io-sym".into(),
+                report,
+            })
+            .collect();
+        let t = curve_table(&points);
+        let text = t.to_text();
+        assert!(text.contains("gdmodk"), "{text}");
+        assert!(text.contains("0.1"), "{text}");
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn default_rates_span_the_unit_interval() {
+        let r = default_rates();
+        assert_eq!(r.len(), 20);
+        assert!((r[0] - 0.05).abs() < 1e-12);
+        assert!((r[19] - 1.0).abs() < 1e-12);
+        assert!(r.windows(2).all(|w| w[0] < w[1]));
+    }
+}

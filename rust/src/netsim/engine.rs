@@ -1,0 +1,330 @@
+//! The simulation engine: input-buffered ports with virtual channels
+//! and credit-based flow control over precomputed routes.
+//!
+//! Model (one cycle = the time a port needs to forward one flit; links
+//! are normalized to capacity 1 flit/cycle, the fair-rate solver's unit
+//! scale):
+//!
+//!  * Every directed output port owns `vcs` virtual-channel FIFOs of
+//!    `vc_capacity` flits. A packet is assigned one VC at creation
+//!    (round-robin per flow) and keeps it on every hop.
+//!  * **Credits**: a flit may only be transmitted toward the next port
+//!    of its route if that port's VC buffer has a free slot. The slot is
+//!    reserved at transmit time and freed when the flit itself is
+//!    transmitted onward — exact credit flow control with the credit
+//!    loop collapsed to the link latency.
+//!  * **Arbitration**: each cycle a port forwards at most one flit,
+//!    picking the next serviceable VC round-robin from the last one
+//!    served. A head flit whose downstream credit is exhausted blocks
+//!    its VC (head-of-line blocking within a VC is modelled; other VCs
+//!    overtake).
+//!  * **Sources** are open-loop: the injection process appends packets
+//!    to an unbounded per-flow backlog, and the source pushes at most
+//!    one flit per cycle into the first route port's VC buffer, credit
+//!    permitting. Offered load is therefore not throttled by the
+//!    fabric — exactly what makes saturation visible.
+//!
+//! Because all routes are minimal up\*/down\* port sequences (any
+//! [`crate::routing::Router`], including
+//! [`crate::faults::DegradedRouter`]), the channel dependency graph is
+//! acyclic and the credit loops cannot deadlock.
+
+use super::event::{Calendar, Event};
+use super::inject::draw_gap;
+use super::{NetsimConfig, NetsimReport, SATURATION_FRACTION};
+use crate::routing::trace::RoutePorts;
+use crate::util::rng::Xoshiro256;
+use std::collections::VecDeque;
+
+/// One buffered flit: which packet it belongs to and which hop (index
+/// into the packet's route) the buffering port is.
+#[derive(Clone, Copy, Debug)]
+struct Flit {
+    packet: u32,
+    hop: u16,
+}
+
+/// An in-flight packet.
+#[derive(Clone, Copy, Debug)]
+struct Packet {
+    flow: u32,
+    arrival: u64,
+    vc: u32,
+    pushed: u32,
+    delivered: u32,
+}
+
+/// Mutable simulation state over borrowed routes.
+pub(crate) struct Engine<'a> {
+    routes: &'a [RoutePorts],
+    rate: f64,
+    // Config (copied out for borrow-friendly field access).
+    packet_flits: u32,
+    vcs: usize,
+    link_latency: u64,
+    warmup: u64,
+    measure: u64,
+    drain: u64,
+    p_event: f64,
+    burst: u32,
+    // Per (port, vc): FIFO buffer and free-slot (credit) count.
+    queues: Vec<VecDeque<Flit>>,
+    credits: Vec<u32>,
+    // Per port: single-outstanding-event flags and round-robin pointer.
+    service_pending: Vec<bool>,
+    last_vc: Vec<usize>,
+    // Per flow: source state.
+    source_pending: Vec<bool>,
+    next_vc: Vec<u32>,
+    backlog: Vec<VecDeque<u32>>,
+    rngs: Vec<Xoshiro256>,
+    packets: Vec<Packet>,
+    cal: Calendar,
+    // Statistics.
+    injected_packets: u64,
+    delivered_packets: u64,
+    accepted_flits: u64,
+    flow_flits: Vec<u64>,
+    latencies: Vec<u64>,
+}
+
+impl<'a> Engine<'a> {
+    /// Set up a run of `routes` at offered load `rate` (flits per cycle
+    /// per flow). The caller validated `cfg` and `rate`.
+    pub(crate) fn new(
+        num_ports: usize,
+        routes: &'a [RoutePorts],
+        cfg: &NetsimConfig,
+        rate: f64,
+    ) -> Engine<'a> {
+        let vcs = cfg.vcs as usize;
+        let nf = routes.len();
+        let horizon = cfg.warmup + cfg.measure + cfg.drain;
+        let rngs = (0..nf)
+            .map(|f| {
+                Xoshiro256::new(
+                    cfg.seed.wrapping_add((f as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                )
+            })
+            .collect();
+        Engine {
+            routes,
+            rate,
+            packet_flits: cfg.packet_flits,
+            vcs,
+            link_latency: cfg.link_latency,
+            warmup: cfg.warmup,
+            measure: cfg.measure,
+            drain: cfg.drain,
+            p_event: cfg.injection.event_probability(rate, cfg.packet_flits),
+            burst: cfg.injection.burst_len(),
+            queues: vec![VecDeque::new(); num_ports * vcs],
+            credits: vec![cfg.vc_capacity; num_ports * vcs],
+            service_pending: vec![false; num_ports],
+            last_vc: vec![0; num_ports],
+            source_pending: vec![false; nf],
+            next_vc: vec![0; nf],
+            backlog: vec![VecDeque::new(); nf],
+            rngs,
+            packets: Vec::new(),
+            cal: Calendar::new(horizon),
+            injected_packets: 0,
+            delivered_packets: 0,
+            accepted_flits: 0,
+            flow_flits: vec![0; nf],
+            latencies: Vec::new(),
+        }
+    }
+
+    /// Run to the horizon and summarize.
+    pub(crate) fn run(mut self) -> NetsimReport {
+        let end = self.warmup + self.measure + self.drain;
+        // Seed the first arrival of every active flow (gap ≥ 1, so the
+        // calendar cursor invariant holds from cycle 0).
+        for f in 0..self.routes.len() {
+            if self.routes[f].ports.is_empty() {
+                continue; // self-flow: nothing to simulate
+            }
+            let gap = draw_gap(&mut self.rngs[f], self.p_event);
+            self.cal.schedule(gap, Event::NewPacket { flow: f as u32 });
+        }
+        for t in 1..=end {
+            for (_seq, ev) in self.cal.take(t) {
+                match ev {
+                    Event::Service { port } => self.on_service(port as usize, t),
+                    Event::NewPacket { flow } => self.on_new_packet(flow as usize, t),
+                    Event::Source { flow } => self.on_source(flow as usize, t),
+                    Event::Arrive { port, packet, hop } => {
+                        self.on_arrive(port as usize, packet, hop, t)
+                    }
+                }
+            }
+        }
+        self.finish()
+    }
+
+    fn wake_service(&mut self, port: usize, t: u64) {
+        if !self.service_pending[port] {
+            self.service_pending[port] = true;
+            self.cal.schedule(t, Event::Service { port: port as u32 });
+        }
+    }
+
+    fn wake_source(&mut self, flow: usize, t: u64) {
+        if !self.source_pending[flow] {
+            self.source_pending[flow] = true;
+            self.cal.schedule(t, Event::Source { flow: flow as u32 });
+        }
+    }
+
+    /// The injection process fires: create `burst` packets, wake the
+    /// source, draw the next inter-arrival gap.
+    fn on_new_packet(&mut self, flow: usize, t: u64) {
+        for _ in 0..self.burst {
+            let vc = self.next_vc[flow] % self.vcs as u32;
+            self.next_vc[flow] = self.next_vc[flow].wrapping_add(1);
+            let pid = self.packets.len() as u32;
+            let pkt = Packet { flow: flow as u32, arrival: t, vc, pushed: 0, delivered: 0 };
+            self.packets.push(pkt);
+            self.backlog[flow].push_back(pid);
+            self.injected_packets += 1;
+        }
+        self.wake_source(flow, t + 1);
+        let gap = draw_gap(&mut self.rngs[flow], self.p_event);
+        self.cal.schedule(t + gap, Event::NewPacket { flow: flow as u32 });
+    }
+
+    /// The source pushes at most one backlog flit into the first route
+    /// port's VC buffer, credit permitting; polls again next cycle while
+    /// backlog remains.
+    fn on_source(&mut self, flow: usize, t: u64) {
+        self.source_pending[flow] = false;
+        let pid = match self.backlog[flow].front() {
+            Some(&pid) => pid,
+            None => return,
+        };
+        let vc = self.packets[pid as usize].vc as usize;
+        let p0 = self.routes[flow].ports[0];
+        let qi = p0 * self.vcs + vc;
+        if self.credits[qi] > 0 {
+            self.credits[qi] -= 1;
+            self.queues[qi].push_back(Flit { packet: pid, hop: 0 });
+            self.packets[pid as usize].pushed += 1;
+            if self.packets[pid as usize].pushed == self.packet_flits {
+                self.backlog[flow].pop_front();
+            }
+            self.wake_service(p0, t + 1);
+        }
+        if !self.backlog[flow].is_empty() {
+            self.wake_source(flow, t + 1);
+        }
+    }
+
+    /// A flit lands in `port`'s VC buffer (its credit was reserved at
+    /// transmit time).
+    fn on_arrive(&mut self, port: usize, packet: u32, hop: u16, t: u64) {
+        let vc = self.packets[packet as usize].vc as usize;
+        self.queues[port * self.vcs + vc].push_back(Flit { packet, hop });
+        self.wake_service(port, t + 1);
+    }
+
+    /// Port arbitration: transmit the head flit of the next serviceable
+    /// VC (round-robin), if any.
+    fn on_service(&mut self, port: usize, t: u64) {
+        self.service_pending[port] = false;
+        let vcs = self.vcs;
+        let base = port * vcs;
+        let mut chosen: Option<usize> = None;
+        for i in 1..=vcs {
+            let vc = (self.last_vc[port] + i) % vcs;
+            let head = match self.queues[base + vc].front() {
+                Some(&f) => f,
+                None => continue,
+            };
+            let flow = self.packets[head.packet as usize].flow as usize;
+            let nh = head.hop as usize + 1;
+            if nh < self.routes[flow].ports.len() {
+                let q = self.routes[flow].ports[nh];
+                if self.credits[q * vcs + vc] == 0 {
+                    continue; // blocked on downstream credit
+                }
+            }
+            chosen = Some(vc);
+            break;
+        }
+        if let Some(vc) = chosen {
+            self.last_vc[port] = vc;
+            let flit = self.queues[base + vc].pop_front().expect("chosen VC has a head flit");
+            self.credits[base + vc] += 1; // our slot frees as the flit leaves
+            let flow = self.packets[flit.packet as usize].flow as usize;
+            let nh = flit.hop as usize + 1;
+            if nh < self.routes[flow].ports.len() {
+                let q = self.routes[flow].ports[nh];
+                self.credits[q * vcs + vc] -= 1; // reserve downstream slot
+                self.cal.schedule(
+                    t + self.link_latency,
+                    Event::Arrive { port: q as u32, packet: flit.packet, hop: nh as u16 },
+                );
+            } else {
+                self.deliver(flit.packet, t);
+            }
+        }
+        // Poll again while any VC holds flits (transmitted or blocked).
+        if (0..vcs).any(|v| !self.queues[base + v].is_empty()) {
+            self.wake_service(port, t + 1);
+        }
+    }
+
+    /// A flit reaches its destination node (infinite sink).
+    fn deliver(&mut self, pid: u32, t: u64) {
+        let in_window = t >= self.warmup && t < self.warmup + self.measure;
+        let pkt = &mut self.packets[pid as usize];
+        pkt.delivered += 1;
+        let flow = pkt.flow as usize;
+        let arrival = pkt.arrival;
+        let done = pkt.delivered == self.packet_flits;
+        if in_window {
+            self.accepted_flits += 1;
+            self.flow_flits[flow] += 1;
+        }
+        if done {
+            self.delivered_packets += 1;
+            if arrival >= self.warmup && arrival < self.warmup + self.measure {
+                self.latencies.push(t - arrival);
+            }
+        }
+    }
+
+    /// Summarize the run.
+    fn finish(self) -> NetsimReport {
+        let active = self.routes.iter().filter(|r| !r.ports.is_empty()).count();
+        let offered_aggregate = self.rate * active as f64;
+        let measure = self.measure as f64;
+        let accepted = self.accepted_flits as f64 / measure;
+        let flow_accepted: Vec<f64> =
+            self.flow_flits.iter().map(|&f| f as f64 / measure).collect();
+        let mut lat = self.latencies;
+        lat.sort_unstable();
+        let (mean_latency, p99_latency) = if lat.is_empty() {
+            (0.0, 0.0)
+        } else {
+            let mean = lat.iter().sum::<u64>() as f64 / lat.len() as f64;
+            let idx = ((lat.len() - 1) as f64 * 0.99).round() as usize;
+            (mean, lat[idx.min(lat.len() - 1)] as f64)
+        };
+        NetsimReport {
+            offered: self.rate,
+            offered_aggregate,
+            accepted,
+            flow_accepted,
+            mean_latency,
+            p99_latency,
+            injected_packets: self.injected_packets,
+            delivered_packets: self.delivered_packets,
+            measured_packets: lat.len() as u64,
+            flows: active,
+            events: self.cal.scheduled(),
+            saturated: accepted < SATURATION_FRACTION * offered_aggregate,
+        }
+    }
+}

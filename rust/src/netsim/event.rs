@@ -1,0 +1,167 @@
+//! Calendar-queue event core of the flit-level simulator.
+//!
+//! Events are scheduled at integer cycle times on a bounded horizon, so
+//! the calendar degenerates gracefully: one bucket per cycle, drained in
+//! time order. Within a bucket, events are processed in a **total,
+//! scheduling-independent order** — sorted by `(class, key, seq)`:
+//!
+//!  * `class` — [`Service`](Event::Service) transmissions first, then
+//!    [`NewPacket`](Event::NewPacket) arrivals, then
+//!    [`Source`](Event::Source) injections, then
+//!    [`Arrive`](Event::Arrive) deliveries into downstream buffers.
+//!    Running every transmission of cycle `t` *before* any flit lands at
+//!    `t` enforces the one-cycle minimum dwell per hop without per-flit
+//!    timestamps.
+//!  * `key` — the entity id (port or flow), so same-class events run in
+//!    a fixed fabric order regardless of how they were scheduled.
+//!  * `seq` — a monotone tie-breaker for the rare same-class same-key
+//!    duplicates, making the order fully deterministic.
+//!
+//! The engine only ever schedules strictly into the future
+//! (`t_event > now`), which the cursor assert pins: a same-cycle
+//! schedule after the bucket drained would be silently lost otherwise.
+
+/// One simulator event (see the module docs for the processing order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Port arbitration: `port` tries to transmit one flit this cycle.
+    Service {
+        /// The transmitting output port.
+        port: u32,
+    },
+    /// The injection process delivers new packet(s) into `flow`'s
+    /// source backlog.
+    NewPacket {
+        /// The flow whose source receives the packet(s).
+        flow: u32,
+    },
+    /// `flow`'s source tries to push one backlog flit into the buffer
+    /// of the first port of its route.
+    Source {
+        /// The injecting flow.
+        flow: u32,
+    },
+    /// A flit finishes traversing a link and lands in the VC buffer of
+    /// `port` (the next output port on its route).
+    Arrive {
+        /// The receiving output port.
+        port: u32,
+        /// Index of the in-flight packet in the engine's packet arena.
+        packet: u32,
+        /// Hop index of `port` within the packet's route.
+        hop: u16,
+    },
+}
+
+impl Event {
+    /// Processing class within a cycle (lower runs first).
+    #[inline]
+    fn class(&self) -> u8 {
+        match self {
+            Event::Service { .. } => 0,
+            Event::NewPacket { .. } => 1,
+            Event::Source { .. } => 2,
+            Event::Arrive { .. } => 3,
+        }
+    }
+
+    /// Entity id ordering same-class events of one cycle.
+    #[inline]
+    fn key(&self) -> u32 {
+        match self {
+            Event::Service { port } => *port,
+            Event::NewPacket { flow } => *flow,
+            Event::Source { flow } => *flow,
+            Event::Arrive { port, .. } => *port,
+        }
+    }
+}
+
+/// Bounded-horizon calendar queue: `buckets[t]` holds cycle `t`'s events.
+pub struct Calendar {
+    buckets: Vec<Vec<(u64, Event)>>,
+    seq: u64,
+    cursor: u64,
+}
+
+impl Calendar {
+    /// A calendar covering cycles `0..=horizon`. Events scheduled past
+    /// the horizon are dropped (the run is over before they would fire).
+    pub fn new(horizon: u64) -> Calendar {
+        Calendar {
+            buckets: vec![Vec::new(); horizon as usize + 1],
+            seq: 0,
+            cursor: 0,
+        }
+    }
+
+    /// Schedule `ev` at cycle `t`. Must be strictly after the bucket
+    /// currently being drained (the engine never schedules same-cycle).
+    pub fn schedule(&mut self, t: u64, ev: Event) {
+        debug_assert!(t > self.cursor, "same-or-past-cycle schedule at t={t}");
+        if let Some(bucket) = self.buckets.get_mut(t as usize) {
+            self.seq += 1;
+            bucket.push((self.seq, ev));
+        }
+    }
+
+    /// Drain cycle `t`'s bucket in the canonical `(class, key, seq)`
+    /// order.
+    pub fn take(&mut self, t: u64) -> Vec<(u64, Event)> {
+        self.cursor = t;
+        let mut evs = std::mem::take(&mut self.buckets[t as usize]);
+        evs.sort_unstable_by_key(|&(seq, ev)| (ev.class(), ev.key(), seq));
+        evs
+    }
+
+    /// Total number of events ever scheduled (for reporting/debugging).
+    pub fn scheduled(&self) -> u64 {
+        self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_orders_by_class_then_key_then_seq() {
+        let mut cal = Calendar::new(10);
+        cal.schedule(5, Event::Arrive { port: 1, packet: 0, hop: 2 });
+        cal.schedule(5, Event::Service { port: 9 });
+        cal.schedule(5, Event::Source { flow: 0 });
+        cal.schedule(5, Event::Service { port: 2 });
+        cal.schedule(5, Event::NewPacket { flow: 4 });
+        cal.schedule(5, Event::Arrive { port: 1, packet: 7, hop: 3 });
+        let evs: Vec<Event> = cal.take(5).into_iter().map(|(_, e)| e).collect();
+        assert_eq!(
+            evs,
+            vec![
+                Event::Service { port: 2 },
+                Event::Service { port: 9 },
+                Event::NewPacket { flow: 4 },
+                Event::Source { flow: 0 },
+                Event::Arrive { port: 1, packet: 0, hop: 2 },
+                Event::Arrive { port: 1, packet: 7, hop: 3 },
+            ]
+        );
+        assert_eq!(cal.scheduled(), 6);
+    }
+
+    #[test]
+    fn past_horizon_schedules_are_dropped() {
+        let mut cal = Calendar::new(3);
+        cal.schedule(3, Event::Service { port: 0 });
+        cal.schedule(4, Event::Service { port: 1 }); // dropped
+        assert_eq!(cal.take(3).len(), 1);
+        assert_eq!(cal.take(2).len(), 0);
+    }
+
+    #[test]
+    fn buckets_drain_once() {
+        let mut cal = Calendar::new(4);
+        cal.schedule(2, Event::Source { flow: 3 });
+        assert_eq!(cal.take(2).len(), 1);
+        assert_eq!(cal.take(2).len(), 0, "a drained bucket stays empty");
+    }
+}

@@ -1,0 +1,152 @@
+//! Seeded injection processes: how packets arrive at the sources.
+//!
+//! Offered load is expressed per flow in **flits per cycle** on the same
+//! unit scale as the fair-rate solver (a link moves one flit per cycle,
+//! i.e. has capacity 1.0), so a netsim sweep point at offered load `r`
+//! is directly comparable to a [`crate::sim::fairrate`] rate `r`.
+//!
+//! * [`Injection::Bernoulli`] — every cycle each flow independently
+//!   starts a new packet with probability `r / packet_flits`, the
+//!   memoryless open-loop process of the latency-vs-load literature.
+//!   Inter-arrival gaps are drawn in closed form (geometric), so idle
+//!   sources cost no events.
+//! * [`Injection::Burst`] — same mean load, but packets arrive in
+//!   back-to-back groups of `length` (probability divided accordingly),
+//!   stressing buffer depth at equal offered load.
+
+use crate::util::rng::Xoshiro256;
+
+/// The packet-arrival process of every source (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Injection {
+    /// Memoryless per-cycle packet arrivals.
+    Bernoulli,
+    /// Bursty arrivals: groups of `length` back-to-back packets.
+    Burst {
+        /// Packets per burst (≥ 1; `1` degenerates to Bernoulli).
+        length: u32,
+    },
+}
+
+impl Injection {
+    /// Packets created per arrival event.
+    pub fn burst_len(&self) -> u32 {
+        match self {
+            Injection::Bernoulli => 1,
+            Injection::Burst { length } => (*length).max(1),
+        }
+    }
+
+    /// Per-cycle arrival-event probability for offered load `rate`
+    /// (flits/cycle/flow) and `packet_flits` flits per packet.
+    pub fn event_probability(&self, rate: f64, packet_flits: u32) -> f64 {
+        rate / (packet_flits as f64 * self.burst_len() as f64)
+    }
+
+    /// Parse `bernoulli` or `burst:K`.
+    pub fn parse(s: &str) -> anyhow::Result<Injection> {
+        if s == "bernoulli" {
+            return Ok(Injection::Bernoulli);
+        }
+        if let Some(k) = s.strip_prefix("burst:") {
+            let length: u32 = k
+                .parse()
+                .map_err(|e| anyhow::anyhow!("injection {s:?}: {e}"))?;
+            anyhow::ensure!(length >= 1, "injection {s:?}: burst length must be >= 1");
+            return Ok(Injection::Burst { length });
+        }
+        anyhow::bail!("unknown injection process {s:?} (bernoulli|burst:K)")
+    }
+
+    /// Canonical spec string (inverse of [`Injection::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Injection::Bernoulli => "bernoulli".into(),
+            Injection::Burst { length } => format!("burst:{length}"),
+        }
+    }
+}
+
+/// Next inter-arrival gap (in cycles, ≥ 1) of a Bernoulli(`p`) process,
+/// drawn in closed form: `1 + Geometric(p)` failures-before-success.
+/// `p ≥ 1` degenerates to back-to-back arrivals.
+pub fn draw_gap(rng: &mut Xoshiro256, p: f64) -> u64 {
+    if p >= 1.0 {
+        return 1;
+    }
+    debug_assert!(p > 0.0, "draw_gap needs p in (0, 1]");
+    let u = rng.next_f64(); // in [0, 1)
+    // (1 - u) in (0, 1]: ln ≤ 0. The denominator is ln(1 - p) computed
+    // as ln_1p(-p) so it stays strictly negative even when p is tiny
+    // enough that `1.0 - p == 1.0` (a plain ln would return -0.0 there
+    // and collapse every gap to 1, inverting a near-zero offered load
+    // into full overload). The ratio is ≥ 0 and saturates to u64::MAX
+    // on the (astronomically rare) u → 1 tail, which simply lands past
+    // the horizon.
+    let g = ((1.0 - u).ln() / (-p).ln_1p()).floor();
+    1 + g as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["bernoulli", "burst:4"] {
+            let i = Injection::parse(s).unwrap();
+            assert_eq!(i.name(), s);
+        }
+        assert!(Injection::parse("poisson").is_err());
+        assert!(Injection::parse("burst:0").is_err());
+        assert_eq!(Injection::Burst { length: 4 }.burst_len(), 4);
+    }
+
+    #[test]
+    fn event_probability_scales_with_packet_and_burst() {
+        let b = Injection::Bernoulli;
+        assert!((b.event_probability(0.4, 4) - 0.1).abs() < 1e-12);
+        let burst = Injection::Burst { length: 2 };
+        assert!((burst.event_probability(0.4, 4) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaps_have_the_right_mean() {
+        let mut rng = Xoshiro256::new(7);
+        let p = 0.125f64;
+        let n = 20_000u64;
+        let total: u64 = (0..n).map(|_| draw_gap(&mut rng, p)).sum();
+        let mean = total as f64 / n as f64;
+        // Geometric mean gap = 1/p = 8; allow 5% sampling slack.
+        assert!((mean - 8.0).abs() < 0.4, "mean gap {mean}");
+    }
+
+    #[test]
+    fn gap_is_always_at_least_one() {
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..1000 {
+            assert!(draw_gap(&mut rng, 0.9) >= 1);
+        }
+        assert_eq!(draw_gap(&mut rng, 1.0), 1);
+    }
+
+    #[test]
+    fn tiny_probabilities_yield_huge_gaps_not_back_to_back() {
+        // Regression: with p below f64's 1-ulp (~1.1e-16), a plain
+        // `(1.0 - p).ln()` is -0.0 and every gap collapses to 1 —
+        // ln_1p keeps the mean at ~1/p instead.
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..50 {
+            assert!(draw_gap(&mut rng, 1e-18) > 1_000, "gap must be astronomically long");
+        }
+    }
+
+    #[test]
+    fn gaps_are_deterministic_per_seed() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..100 {
+            assert_eq!(draw_gap(&mut a, 0.3), draw_gap(&mut b, 0.3));
+        }
+    }
+}

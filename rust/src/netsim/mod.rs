@@ -1,0 +1,258 @@
+//! Event-driven flit-level network simulator — the "simulation-based
+//! analysis" the paper's conclusions call for, at the fidelity standard
+//! in the interconnect literature (latency-vs-offered-load curves,
+//! FatPaths-style): input-buffered switches with virtual channels,
+//! credit-based flow control, configurable link latency and packet
+//! size, a calendar-queue event core, and pluggable seeded injection
+//! processes.
+//!
+//! The simulator consumes *any* traced route set — every
+//! [`crate::routing::AlgorithmKind`], and
+//! [`crate::faults::DegradedRouter`] tables too, so fault scenarios are
+//! simulatable end-to-end. It is fully deterministic in
+//! `(routes, config, rate)`: the same seed reproduces every curve
+//! byte-for-byte, which `tests/netsim_parity.rs` pins.
+//!
+//! Layering:
+//!  * [`event`] — the calendar-queue event core (deterministic total
+//!    order per cycle),
+//!  * [`engine`] — VC/credit port model over precomputed routes,
+//!  * [`inject`] — Bernoulli / burst packet-arrival processes,
+//!  * [`curve`] — injection-rate sweeps, the latency-vs-load table and
+//!    saturation-point detection.
+//!
+//! Units: one cycle forwards one flit per port, i.e. links have
+//! capacity 1 flit/cycle — the exact unit scale of
+//! [`crate::sim::solve_fairrate_exact`], which remains the *low-load
+//! oracle*: below saturation, netsim per-flow throughput must agree
+//! with the fair-rate solution (pinned by the parity test).
+//!
+//! ```
+//! use pgft::prelude::*;
+//! use pgft::netsim::{run_netsim, NetsimConfig};
+//! let topo = build_pgft(&PgftSpec::case_study());
+//! let types = Placement::paper_io().apply(&topo).unwrap();
+//! let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+//! let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+//! let routes = trace_flows(&topo, &*router, &flows);
+//! let cfg = NetsimConfig { warmup: 200, measure: 1000, drain: 200, ..Default::default() };
+//! let rep = run_netsim(&topo, &routes, &cfg, 0.05).unwrap();
+//! assert!(!rep.saturated, "gdmodk is stable well below its 1/7 fair rate");
+//! ```
+
+pub mod curve;
+pub mod engine;
+pub mod event;
+pub mod inject;
+
+pub use curve::{curve_table, default_rates, load_curve, saturation_point, CurvePoint, Saturation};
+pub use inject::Injection;
+
+use crate::routing::trace::RoutePorts;
+use crate::topology::Topology;
+use anyhow::{ensure, Result};
+
+/// A run counts as saturated when it accepts less than this fraction of
+/// the aggregate offered load (the standard "accepted < offered" knee
+/// test, with slack for open-loop sampling noise).
+pub const SATURATION_FRACTION: f64 = 0.85;
+
+/// Tunables of a flit-level simulation run (see the module docs for the
+/// model; [`NetsimConfig::default`] matches the case-study scale).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetsimConfig {
+    /// Flits per packet.
+    pub packet_flits: u32,
+    /// Virtual channels per port.
+    pub vcs: u32,
+    /// Buffer capacity of one (port, VC) pair, in flits.
+    pub vc_capacity: u32,
+    /// Link traversal latency in cycles (≥ 1).
+    pub link_latency: u64,
+    /// Cycles before measurement starts (reach steady state).
+    pub warmup: u64,
+    /// Measurement-window length in cycles.
+    pub measure: u64,
+    /// Extra cycles after the window so in-flight tagged packets can
+    /// complete and report their latency.
+    pub drain: u64,
+    /// The packet-arrival process.
+    pub injection: Injection,
+    /// Seed of the per-flow injection streams.
+    pub seed: u64,
+}
+
+impl Default for NetsimConfig {
+    fn default() -> Self {
+        NetsimConfig {
+            packet_flits: 4,
+            vcs: 2,
+            vc_capacity: 8,
+            link_latency: 1,
+            warmup: 300,
+            measure: 1500,
+            drain: 300,
+            injection: Injection::Bernoulli,
+            seed: 1,
+        }
+    }
+}
+
+impl NetsimConfig {
+    /// Reject degenerate parameter combinations with a clear message.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.packet_flits >= 1, "netsim: packet_flits must be >= 1");
+        ensure!(self.vcs >= 1, "netsim: vcs must be >= 1");
+        ensure!(self.vc_capacity >= 1, "netsim: vc_capacity must be >= 1");
+        ensure!(self.link_latency >= 1, "netsim: link_latency must be >= 1");
+        ensure!(self.measure >= 1, "netsim: measure window must be >= 1 cycle");
+        Ok(())
+    }
+}
+
+/// Result of one flit-level run at a single offered load.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetsimReport {
+    /// Offered load per flow, flits/cycle (the swept knob).
+    pub offered: f64,
+    /// Offered load × active flows (aggregate flits/cycle).
+    pub offered_aggregate: f64,
+    /// Accepted throughput: flits delivered per cycle inside the
+    /// measurement window, aggregated over all flows.
+    pub accepted: f64,
+    /// Per-flow accepted throughput (flits/cycle, measurement window).
+    pub flow_accepted: Vec<f64>,
+    /// Mean packet latency in cycles over packets *injected* in the
+    /// window and delivered by the end of the run (0 when none).
+    pub mean_latency: f64,
+    /// 99th-percentile packet latency (same sample; 0 when none).
+    pub p99_latency: f64,
+    /// Packets created by the injection processes over the whole run.
+    pub injected_packets: u64,
+    /// Packets fully delivered over the whole run.
+    pub delivered_packets: u64,
+    /// Latency sample size (tagged packets delivered in time).
+    pub measured_packets: u64,
+    /// Active (non-self) flows.
+    pub flows: usize,
+    /// Total events the calendar processed (cost/debug figure).
+    pub events: u64,
+    /// Whether accepted fell below
+    /// [`SATURATION_FRACTION`] × `offered_aggregate`.
+    pub saturated: bool,
+}
+
+/// Run one flit-level simulation of `routes` on `topo` at offered load
+/// `rate` (flits per cycle per flow, in `(0, 1]`). Deterministic in
+/// `(routes, cfg, rate)`.
+pub fn run_netsim(
+    topo: &Topology,
+    routes: &[RoutePorts],
+    cfg: &NetsimConfig,
+    rate: f64,
+) -> Result<NetsimReport> {
+    cfg.validate()?;
+    ensure!(
+        rate > 0.0 && rate <= 1.0,
+        "netsim: offered load {rate} outside (0, 1] flits/cycle/flow"
+    );
+    ensure!(
+        routes.iter().any(|r| !r.ports.is_empty()),
+        "netsim: no active flows to simulate"
+    );
+    Ok(engine::Engine::new(topo.num_ports(), routes, cfg, rate).run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::patterns::Pattern;
+    use crate::routing::trace::trace_flows;
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn routes(kind: AlgorithmKind) -> (Topology, Vec<RoutePorts>) {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        let router = kind.build(&topo, Some(&types), 1);
+        let routes = trace_flows(&topo, &*router, &flows);
+        (topo, routes)
+    }
+
+    fn small_cfg() -> NetsimConfig {
+        NetsimConfig { warmup: 200, measure: 800, drain: 200, ..Default::default() }
+    }
+
+    #[test]
+    fn low_load_is_stable_and_accepts_offered() {
+        let (topo, routes) = routes(AlgorithmKind::Gdmodk);
+        let rep = run_netsim(&topo, &routes, &small_cfg(), 0.05).unwrap();
+        assert_eq!(rep.flows, 56);
+        assert!(!rep.saturated, "{rep:?}");
+        // Open-loop low load: accepted tracks offered (sampling slack).
+        assert!(rep.accepted > 0.6 * rep.offered_aggregate, "{rep:?}");
+        assert!(rep.accepted < 1.4 * rep.offered_aggregate, "{rep:?}");
+        assert!(rep.measured_packets > 0);
+        assert!(rep.mean_latency >= 6.0, "at least one cycle per hop: {rep:?}");
+        assert!(rep.p99_latency >= rep.mean_latency);
+    }
+
+    #[test]
+    fn overload_saturates_at_the_bottleneck_capacity() {
+        // Dmodk funnels all 56 C2IO flows through 2 top down-ports, so
+        // accepted throughput caps near 2 flits/cycle however hard the
+        // sources push.
+        let (topo, routes) = routes(AlgorithmKind::Dmodk);
+        let rep = run_netsim(&topo, &routes, &small_cfg(), 0.8).unwrap();
+        assert!(rep.saturated, "{rep:?}");
+        assert!(rep.accepted <= 2.2, "top bundle capacity is 2 flits/cycle: {rep:?}");
+        assert!(rep.accepted > 1.0, "the bottleneck stays busy: {rep:?}");
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let (topo, routes) = routes(AlgorithmKind::Smodk);
+        let a = run_netsim(&topo, &routes, &small_cfg(), 0.3).unwrap();
+        let b = run_netsim(&topo, &routes, &small_cfg(), 0.3).unwrap();
+        assert_eq!(a, b, "identical seeds must reproduce bit-identical reports");
+        let mut cfg = small_cfg();
+        cfg.seed = 2;
+        let c = run_netsim(&topo, &routes, &cfg, 0.3).unwrap();
+        assert_ne!(a.injected_packets, 0);
+        assert_ne!(a, c, "a different seed draws different arrivals");
+    }
+
+    #[test]
+    fn burst_injection_raises_latency_at_equal_load() {
+        let (topo, routes) = routes(AlgorithmKind::Gdmodk);
+        let smooth = run_netsim(&topo, &routes, &small_cfg(), 0.1).unwrap();
+        let mut cfg = small_cfg();
+        cfg.injection = Injection::Burst { length: 4 };
+        let bursty = run_netsim(&topo, &routes, &cfg, 0.1).unwrap();
+        // Equal mean load within sampling noise...
+        assert!(!bursty.saturated, "{bursty:?}");
+        // ...but bursts queue behind each other at the source.
+        assert!(
+            bursty.mean_latency > smooth.mean_latency,
+            "burst {bursty:?} vs smooth {smooth:?}"
+        );
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected() {
+        let (topo, routes) = routes(AlgorithmKind::Dmodk);
+        assert!(run_netsim(&topo, &routes, &small_cfg(), 0.0).is_err());
+        assert!(run_netsim(&topo, &routes, &small_cfg(), 1.5).is_err());
+        let mut cfg = small_cfg();
+        cfg.vcs = 0;
+        assert!(run_netsim(&topo, &routes, &cfg, 0.5).is_err());
+        let mut cfg = small_cfg();
+        cfg.link_latency = 0;
+        assert!(run_netsim(&topo, &routes, &cfg, 0.5).is_err());
+        // All-self-flow route sets cannot be simulated.
+        let self_routes = vec![RoutePorts { src: 0, dst: 0, ports: vec![] }];
+        assert!(run_netsim(&topo, &self_routes, &small_cfg(), 0.5).is_err());
+    }
+}

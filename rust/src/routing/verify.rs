@@ -430,7 +430,8 @@ mod tests {
             ports: vec![topo.nodes[0].up_ports[0]],
         }])
         .is_err());
-        let v = &rep.hard_violations()[0];
+        let hard = rep.hard_violations();
+        let v = hard[0];
         assert_eq!(v.kind, ViolationKind::EndsElsewhere);
         assert_eq!((v.src, v.dst), (0, 63));
         assert!(v.port.is_some());

@@ -6,8 +6,15 @@
 //! * [`fairrate`] — exact max-min fair-rate solver in rust (baseline and
 //!   parity oracle for the XLA path).
 //! * [`packet`] — discrete-time packet-level simulator (FIFO output
-//!   queues) for completion-time results.
+//!   queues) for completion-time results. *Superseded by
+//!   [`crate::netsim`]* — the event-driven flit-level simulator with
+//!   VC/credit flow control — for latency-vs-load and saturation
+//!   studies; kept as the simple completion-time cross-check.
 //! * [`SimReport`] — per-algorithm throughput/latency summary rows.
+//!
+//! [`fairrate`] doubles as the **low-load oracle** for `netsim`: below
+//! saturation the flit-level per-flow throughput must agree with the
+//! max-min fair rates (pinned by `tests/netsim_parity.rs`).
 
 pub mod fairrate;
 pub mod flow;
@@ -115,7 +122,8 @@ pub fn render_sim_table(rows: &[SimReport]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
         "{:<10} {:<10} {:>6} {:>11} {:>9} {:>9} {:>11} {:>7} {:>6}\n",
-        "algo", "pattern", "flows", "agg-thru", "min-rate", "mean-rate", "completion", "C_topo", "solver"
+        "algo", "pattern", "flows", "agg-thru", "min-rate", "mean-rate", "completion", "C_topo",
+        "solver"
     ));
     out.push_str(&"-".repeat(90));
     out.push('\n');

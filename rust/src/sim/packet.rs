@@ -1,16 +1,26 @@
-//! Discrete-time packet-level simulator.
+//! Discrete-time packet-level simulator (legacy *completion-time* tool).
 //!
-//! A deliberately simple synchronous model that still exhibits the
-//! queueing behaviour the static metric predicts: every output port is a
-//! FIFO that forwards one packet per time slot; each flow must deliver
-//! `message_packets` packets along its precomputed route; a source
-//! injects its next packet when the first queue has room. Head-of-line
-//! blocking and port contention emerge naturally, so completion times
-//! order algorithms the way `C_topo` does — the "tangible results"
-//! complement the paper asks for.
+//! **Superseded by [`crate::netsim`]** for latency/throughput studies:
+//! this module is a synchronous one-packet-per-slot FIFO model useful
+//! for fixed-message completion times, while `netsim` is the
+//! event-driven flit-level simulator (virtual channels, credit flow
+//! control, injection-rate sweeps) that produces the
+//! latency-vs-offered-load curves standard in the literature. New
+//! scenarios should target `netsim`; this simulator is kept as the
+//! simple completion-time cross-check.
+//!
+//! Model: every output port is a FIFO that forwards one packet per time
+//! slot; each flow must deliver `message_packets` packets along its
+//! precomputed route; a source injects its next packet when the first
+//! queue has room. Head-of-line blocking and port contention emerge
+//! naturally, so completion times order algorithms the way `C_topo`
+//! does. A run that exhausts [`PacketSimConfig::max_slots`] before
+//! delivering every message is an explicit error — a truncated
+//! completion time would silently understate congestion.
 
 use crate::routing::trace::RoutePorts;
 use crate::topology::Topology;
+use anyhow::{ensure, Result};
 use std::collections::VecDeque;
 
 /// Tunables of the discrete-time packet simulation.
@@ -65,8 +75,11 @@ impl<'a> PacketSim<'a> {
         PacketSim { topo, routes, cfg }
     }
 
-    /// Run until every message is delivered (or `max_slots` elapses).
-    pub fn run(&self) -> PacketSimResult {
+    /// Run until every message is delivered. Errors when
+    /// [`PacketSimConfig::max_slots`] elapses with packets still queued
+    /// (raise `max_slots`, or switch to [`crate::netsim`] for open-loop
+    /// saturation studies where completion is not the question).
+    pub fn run(&self) -> Result<PacketSimResult> {
         let nf = self.routes.len();
         let np = self.topo.num_ports();
         // Per-port FIFO of (packet, hop index of this port in its route).
@@ -135,14 +148,23 @@ impl<'a> PacketSim<'a> {
                 max_depth = max_depth.max(q.len());
             }
         }
-        let _ = queues; // drained or timed out
-        PacketSimResult {
+        ensure!(
+            remaining == 0,
+            "packet sim exhausted max_slots = {} with {} packet(s) undelivered \
+             ({} delivered); raise max_slots or use `pgft netsim` for \
+             open-loop saturation studies",
+            self.cfg.max_slots,
+            remaining,
+            delivered
+        );
+        let _ = queues; // drained
+        Ok(PacketSimResult {
             completion_slots: slot,
             flow_completion,
             max_queue_depth: max_depth,
             delivered,
             throughput: if slot > 0 { delivered as f64 / slot as f64 } else { 0.0 },
-        }
+        })
     }
 }
 
@@ -167,6 +189,7 @@ mod tests {
             PacketSimConfig { message_packets: msg, ..Default::default() },
         )
         .run()
+        .unwrap()
     }
 
     #[test]
@@ -180,10 +203,31 @@ mod tests {
             &routes,
             PacketSimConfig { message_packets: 1, ..Default::default() },
         )
-        .run();
+        .run()
+        .unwrap();
         // One packet over 6 hops: phase-1 of slots 1..=6 moves it.
         assert_eq!(res.completion_slots, 7, "inject at slot1, deliver 6 slots later");
         assert_eq!(res.delivered, 1);
+    }
+
+    #[test]
+    fn max_slots_exhaustion_is_an_explicit_error() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        let router = AlgorithmKind::Dmodk.build(&topo, Some(&types), 0);
+        let routes = trace_flows(&topo, &*router, &flows);
+        // 56 flows × 64 packets cannot possibly finish in 10 slots.
+        let err = PacketSim::new(
+            &topo,
+            &routes,
+            PacketSimConfig { message_packets: 64, max_slots: 10, ..Default::default() },
+        )
+        .run()
+        .expect_err("truncation must not masquerade as completion");
+        let msg = err.to_string();
+        assert!(msg.contains("max_slots"), "{msg}");
+        assert!(msg.contains("netsim"), "the error points at the successor: {msg}");
     }
 
     #[test]

@@ -17,6 +17,24 @@ pub struct SweepSim {
     pub completion_time: f64,
 }
 
+/// Flit-level simulation figures of one cell (present when the spec's
+/// `netsim` axis is non-empty). See [`crate::netsim`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetsimStats {
+    /// Offered load per flow (flits/cycle) — the swept injection rate.
+    pub offered: f64,
+    /// Accepted aggregate throughput (flits/cycle, measurement window).
+    pub accepted: f64,
+    /// Mean packet latency in cycles (packets injected in the window).
+    pub mean_latency: f64,
+    /// 99th-percentile packet latency in cycles.
+    pub p99_latency: f64,
+    /// Whether the cell ran past its saturation point
+    /// (accepted < [`crate::netsim::SATURATION_FRACTION`] × offered
+    /// aggregate).
+    pub saturated: bool,
+}
+
 /// One cell of an executed sweep: the grid coordinates plus the static
 /// congestion summary, fault-scenario figures and optional throughput.
 #[derive(Clone, Debug, PartialEq)]
@@ -47,12 +65,15 @@ pub struct SweepResult {
     /// same cell (degraded aggregate / pristine aggregate); present only
     /// for simulated fault cells.
     pub retention: Option<f64>,
+    /// Flit-level simulation figures when the spec's `netsim` axis is
+    /// non-empty (absent on unroutable fault cells).
+    pub netsim: Option<NetsimStats>,
 }
 
 /// Column names of the sweep table, in emission order. Vector-valued
 /// summary fields (`hot_per_level`, `cmax_up`, `cmax_down`) are encoded
 /// `"a|b|c"` so every cell stays CSV- and JSON-friendly.
-pub const COLUMNS: [&str; 21] = [
+pub const COLUMNS: [&str; 26] = [
     "topology",
     "placement",
     "algo",
@@ -74,6 +95,11 @@ pub const COLUMNS: [&str; 21] = [
     "min_rate",
     "completion",
     "retention",
+    "ns_offered",
+    "ns_accepted",
+    "ns_mean_lat",
+    "ns_p99_lat",
+    "ns_saturated",
 ];
 
 fn join_nums<T: std::fmt::Display>(xs: &[T]) -> String {
@@ -105,6 +131,16 @@ impl SweepResult {
             None => (String::new(), String::new(), String::new()),
         };
         let retention = self.retention.map(|r| r.to_string()).unwrap_or_default();
+        let (ns_off, ns_acc, ns_mean, ns_p99, ns_sat) = match &self.netsim {
+            Some(n) => (
+                n.offered.to_string(),
+                n.accepted.to_string(),
+                n.mean_latency.to_string(),
+                n.p99_latency.to_string(),
+                if n.saturated { "1".to_string() } else { "0".to_string() },
+            ),
+            None => Default::default(),
+        };
         vec![
             self.topology.clone(),
             self.placement.clone(),
@@ -127,6 +163,11 @@ impl SweepResult {
             min,
             comp,
             retention,
+            ns_off,
+            ns_acc,
+            ns_mean,
+            ns_p99,
+            ns_sat,
         ]
     }
 
@@ -159,11 +200,25 @@ impl SweepResult {
             })
         };
         let retention = if cells[20].is_empty() { None } else { Some(float(20)?) };
-        let routable = match cells[16].as_str() {
-            "1" => true,
-            "0" => false,
-            other => anyhow::bail!("column routable = {other:?} (want 0 or 1)"),
+        let flag = |i: usize| -> Result<bool> {
+            match cells[i].as_str() {
+                "1" => Ok(true),
+                "0" => Ok(false),
+                other => anyhow::bail!("column {} = {other:?} (want 0 or 1)", COLUMNS[i]),
+            }
         };
+        let netsim = if cells[21..26].iter().all(|c| c.is_empty()) {
+            None
+        } else {
+            Some(NetsimStats {
+                offered: float(21)?,
+                accepted: float(22)?,
+                mean_latency: float(23)?,
+                p99_latency: float(24)?,
+                saturated: flag(25)?,
+            })
+        };
+        let routable = flag(16)?;
         Ok(SweepResult {
             topology: cells[0].clone(),
             placement: cells[1].clone(),
@@ -186,6 +241,7 @@ impl SweepResult {
             routable,
             sim,
             retention,
+            netsim,
         })
     }
 }
@@ -279,6 +335,13 @@ mod tests {
                 completion_time: 7.0,
             }),
             retention: sim.then(|| 0.875),
+            netsim: sim.then(|| NetsimStats {
+                offered: 0.25,
+                accepted: 7.31,
+                mean_latency: 19.5,
+                p99_latency: 84.0,
+                saturated: true,
+            }),
         }
     }
 
@@ -329,6 +392,12 @@ mod tests {
         let mut cells = sample(false).to_cells();
         cells[16] = "maybe".into();
         assert!(SweepResult::from_cells(&cells).is_err(), "routable must be 0/1");
+        let mut cells = sample(true).to_cells();
+        cells[25] = "yes".into();
+        assert!(SweepResult::from_cells(&cells).is_err(), "ns_saturated must be 0/1");
+        let mut cells = sample(true).to_cells();
+        cells[22] = "fast".into();
+        assert!(SweepResult::from_cells(&cells).is_err());
         let wrong = Table::new("x", &["a", "b"]);
         assert!(sweep_results_from_table(&wrong).is_err());
     }

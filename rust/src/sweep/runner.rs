@@ -1,13 +1,14 @@
 //! The sweep executor: work sharing, parallel fan-out, deterministic
 //! row order.
 
-use super::result::{SweepResult, SweepSim};
+use super::result::{NetsimStats, SweepResult, SweepSim};
 use super::spec::SweepSpec;
 use crate::faults::{DegradedRouter, FaultModel};
 use crate::metrics::{AlgoSummary, CongestionReport};
+use crate::netsim::{run_netsim, NetsimConfig};
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
-use crate::routing::trace::trace_flows;
+use crate::routing::trace::{trace_flows, RoutePorts};
 use crate::routing::AlgorithmKind;
 use crate::sim::fair_rates;
 use crate::topology::{families, Topology};
@@ -42,13 +43,14 @@ struct Group {
     flows: Vec<Vec<(u32, u32)>>,
 }
 
-/// A unique unit of work: (group, algorithm, pattern, fault, effective
-/// seed).
-type JobKey = (usize, AlgorithmKind, usize, usize, u64);
+/// A unique unit of work: (group, algorithm, pattern, fault, netsim
+/// axis index, effective seed).
+type JobKey = (usize, AlgorithmKind, usize, usize, usize, u64);
 
 /// Execute a sweep and return one [`SweepResult`] per grid cell, in
 /// deterministic grid order: topology-major, then placement, pattern,
-/// algorithm, fault, seed — independent of thread count and scheduling.
+/// algorithm, fault, netsim offered load, seed — independent of thread
+/// count and scheduling.
 ///
 /// Work sharing:
 ///  * each topology is built and validated once, each placement applied
@@ -100,9 +102,18 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
         }
     }
 
+    // The netsim axis: `None` when the axis is off (factor of one), one
+    // offered load per entry otherwise.
+    let netsim_axis: Vec<Option<f64>> = if spec.netsim.is_empty() {
+        vec![None]
+    } else {
+        spec.netsim.iter().copied().map(Some).collect()
+    };
+
     // Phase 2: deduplicate every grid cell into unique jobs, flattened
     // across all groups. A cell is seed-sensitive when its algorithm is
-    // random OR its fault scenario is generated (non-`none`).
+    // random, its fault scenario is generated (non-`none`), OR it runs a
+    // flit-level simulation (seeded injection processes).
     let mut jobs: Vec<JobKey> = Vec::new();
     let mut job_index: HashMap<JobKey, usize> = HashMap::new();
     let mut cell_jobs: Vec<usize> = Vec::with_capacity(spec.num_cells());
@@ -110,15 +121,19 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
         for pi in 0..spec.patterns.len() {
             for &algo in &spec.algorithms {
                 for fi in 0..fault_models.len() {
-                    for &seed in &spec.seeds {
-                        let sensitive = seed_sensitive(algo) || !fault_models[fi].is_none();
-                        let effective = if sensitive { seed } else { spec.seeds[0] };
-                        let key = (gi, algo, pi, fi, effective);
-                        let j = *job_index.entry(key).or_insert_with(|| {
-                            jobs.push(key);
-                            jobs.len() - 1
-                        });
-                        cell_jobs.push(j);
+                    for ni in 0..netsim_axis.len() {
+                        for &seed in &spec.seeds {
+                            let sensitive = seed_sensitive(algo)
+                                || !fault_models[fi].is_none()
+                                || netsim_axis[ni].is_some();
+                            let effective = if sensitive { seed } else { spec.seeds[0] };
+                            let key = (gi, algo, pi, fi, ni, effective);
+                            let j = *job_index.entry(key).or_insert_with(|| {
+                                jobs.push(key);
+                                jobs.len() - 1
+                            });
+                            cell_jobs.push(j);
+                        }
                     }
                 }
             }
@@ -127,7 +142,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
 
     // Phase 3: one grid-wide parallel fan-out. Results land in job
     // order regardless of scheduling, so the output is deterministic.
-    let cells = par::par_map(opts.threads, &jobs, |_, &(gi, algo, pi, fi, seed)| {
+    let cells = par::par_map(opts.threads, &jobs, |_, &(gi, algo, pi, fi, ni, seed)| {
         let group = &groups[gi];
         compute_cell(
             spec,
@@ -137,6 +152,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
             &spec.patterns[pi],
             &group.flows[pi],
             &fault_models[fi],
+            netsim_axis[ni],
             seed,
         )
     });
@@ -148,21 +164,24 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
         for _pi in 0..spec.patterns.len() {
             for _algo in &spec.algorithms {
                 for fault in &spec.faults {
-                    for &seed in &spec.seeds {
-                        let cell = &cells[cell_jobs[cursor]];
-                        cursor += 1;
-                        out.push(SweepResult {
-                            topology: spec.topologies[group.topo_idx].clone(),
-                            placement: spec.placements[group.placement_idx].clone(),
-                            fault: fault.clone(),
-                            seed,
-                            summary: cell.summary.clone(),
-                            dead_links: cell.dead_links,
-                            routes_changed: cell.routes_changed,
-                            routable: cell.routable,
-                            sim: cell.sim.clone(),
-                            retention: cell.retention,
-                        });
+                    for _ni in 0..netsim_axis.len() {
+                        for &seed in &spec.seeds {
+                            let cell = &cells[cell_jobs[cursor]];
+                            cursor += 1;
+                            out.push(SweepResult {
+                                topology: spec.topologies[group.topo_idx].clone(),
+                                placement: spec.placements[group.placement_idx].clone(),
+                                fault: fault.clone(),
+                                seed,
+                                summary: cell.summary.clone(),
+                                dead_links: cell.dead_links,
+                                routes_changed: cell.routes_changed,
+                                routable: cell.routable,
+                                sim: cell.sim.clone(),
+                                retention: cell.retention,
+                                netsim: cell.netsim.clone(),
+                            });
+                        }
                     }
                 }
             }
@@ -186,12 +205,36 @@ struct Cell {
     routable: bool,
     sim: Option<SweepSim>,
     retention: Option<f64>,
+    netsim: Option<NetsimStats>,
 }
 
 fn sim_from_rates(rates: &[f64]) -> SweepSim {
     let sum: f64 = rates.iter().sum();
     let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
     SweepSim { aggregate_throughput: sum, min_rate: min, completion_time: 1.0 / min }
+}
+
+/// Run the flit-level simulator on one cell's routes at one offered
+/// load (the cell seed drives the injection streams). A cell with no
+/// simulatable flow (all self-flows) yields empty netsim columns
+/// rather than failing the grid.
+fn netsim_stats(
+    topo: &Topology,
+    routes: &[RoutePorts],
+    seed: u64,
+    rate: f64,
+) -> Option<NetsimStats> {
+    let cfg = NetsimConfig { seed, ..Default::default() };
+    match run_netsim(topo, routes, &cfg, rate) {
+        Ok(r) => Some(NetsimStats {
+            offered: r.offered,
+            accepted: r.accepted,
+            mean_latency: r.mean_latency,
+            p99_latency: r.p99_latency,
+            saturated: r.saturated,
+        }),
+        Err(_) => None,
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -203,17 +246,19 @@ fn compute_cell(
     pattern: &Pattern,
     flows: &[(u32, u32)],
     fault_model: &FaultModel,
+    netsim_rate: Option<f64>,
     seed: u64,
 ) -> Cell {
     let router = algo.build(topo, Some(types), seed);
     if fault_model.is_none() {
         // Pristine cell: identical to the pre-fault engine.
-        if spec.simulate {
+        if spec.simulate || netsim_rate.is_some() {
             // Simulation needs the materialized routes; reuse them for
             // the metric instead of re-tracing.
             let routes = trace_flows(topo, &*router, flows);
             let rep = CongestionReport::compute(topo, &routes);
-            let rates = fair_rates(topo, &routes);
+            let sim = spec.simulate.then(|| sim_from_rates(&fair_rates(topo, &routes)));
+            let netsim = netsim_rate.and_then(|rate| netsim_stats(topo, &routes, seed, rate));
             Cell {
                 summary: AlgoSummary::from_report(
                     topo,
@@ -225,8 +270,9 @@ fn compute_cell(
                 dead_links: 0,
                 routes_changed: 0,
                 routable: true,
-                sim: Some(sim_from_rates(&rates)),
+                sim,
                 retention: None,
+                netsim,
             }
         } else {
             // Metric-only cell: the fused trace+metric path avoids
@@ -245,6 +291,7 @@ fn compute_cell(
                 routable: true,
                 sim: None,
                 retention: None,
+                netsim: None,
             }
         }
     } else {
@@ -278,6 +325,7 @@ fn compute_cell(
                     routable: false,
                     sim: None,
                     retention: None,
+                    netsim: None,
                 };
             }
         };
@@ -305,6 +353,9 @@ fn compute_cell(
         } else {
             (None, None)
         };
+        // Fault cells simulate the *rerouted* tables, so the netsim
+        // columns quantify degraded-fabric latency/throughput directly.
+        let netsim = netsim_rate.and_then(|rate| netsim_stats(topo, &rerouted, seed, rate));
         Cell {
             summary: AlgoSummary::from_report(
                 topo,
@@ -318,6 +369,7 @@ fn compute_cell(
             routable: true,
             sim,
             retention,
+            netsim,
         }
     }
 }
@@ -335,6 +387,7 @@ mod tests {
             faults: vec!["none".into()],
             seeds: vec![1],
             simulate: false,
+            netsim: Vec::new(),
         }
     }
 
@@ -418,6 +471,42 @@ mod tests {
         assert!(g.min_rate > d.min_rate * 3.0);
         assert!(g.aggregate_throughput > d.aggregate_throughput * 2.0);
         assert!(g.completion_time < d.completion_time / 3.0);
+    }
+
+    #[test]
+    fn netsim_axis_attaches_flit_level_columns() {
+        let mut spec = tiny_spec();
+        spec.patterns = vec![Pattern::C2ioSym];
+        spec.algorithms = vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk];
+        spec.netsim = vec![0.05, 0.6];
+        let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        assert_eq!(rows.len(), 4, "netsim axis multiplies the grid");
+        for row in &rows {
+            let ns = row.netsim.as_ref().expect("netsim columns attached");
+            assert!(ns.accepted > 0.0);
+            assert!(ns.mean_latency > 0.0);
+        }
+        // Rows come back rate-major within a (pattern, algo, fault) block.
+        assert_eq!(rows[0].netsim.as_ref().unwrap().offered, 0.05);
+        assert_eq!(rows[1].netsim.as_ref().unwrap().offered, 0.6);
+        // The headline: at overload, gdmodk accepts far more than dmodk.
+        let at = |algo: &str, offered: f64| {
+            rows.iter()
+                .find(|r| {
+                    r.summary.algorithm == algo
+                        && r.netsim.as_ref().is_some_and(|n| n.offered == offered)
+                })
+                .unwrap()
+                .netsim
+                .clone()
+                .unwrap()
+        };
+        let (d, g) = (at("dmodk", 0.6), at("gdmodk", 0.6));
+        assert!(d.saturated, "{d:?}");
+        assert!(g.accepted > 1.5 * d.accepted, "gdmodk {g:?} vs dmodk {d:?}");
+        // And the parallel run is byte-identical to serial, floats included.
+        let serial = run_sweep(&spec, &SweepOptions { threads: 1 }).unwrap();
+        assert_eq!(serial, rows);
     }
 
     #[test]

@@ -30,13 +30,18 @@ pub struct SweepSpec {
     /// strings; `"none"` is the pristine reference). Every non-`none`
     /// spec is expanded per cell against the cell's topology and seed.
     pub faults: Vec<String>,
-    /// Seeds (the `random`/`random-pair` algorithms and every non-`none`
-    /// fault scenario are seed-sensitive; the engine traces fully
-    /// deterministic cells once).
+    /// Seeds (the `random`/`random-pair` algorithms, every non-`none`
+    /// fault scenario and every netsim cell are seed-sensitive; the
+    /// engine traces fully deterministic cells once).
     pub seeds: Vec<u64>,
     /// Attach max-min fair-rate throughput figures to every cell (the
     /// deterministic pure-rust solver; see `crate::sim::fairrate`).
     pub simulate: bool,
+    /// Flit-level injection-rate axis ([`crate::netsim`]): offered loads
+    /// in `(0, 1]` flits/cycle/flow. Empty disables the axis; non-empty
+    /// multiplies the grid and attaches accepted-throughput and
+    /// mean/p99-latency columns to every cell.
+    pub netsim: Vec<f64>,
 }
 
 impl SweepSpec {
@@ -57,6 +62,7 @@ impl SweepSpec {
             faults: vec!["none".to_string()],
             seeds: vec![1],
             simulate: false,
+            netsim: Vec::new(),
         }
     }
 
@@ -77,8 +83,10 @@ impl SweepSpec {
         // `pgft run` experiment file): a non-empty document must carry a
         // `[sweep]` section, and every key in it must be recognized —
         // otherwise defaults would silently shadow the user's intent.
-        const KNOWN: [&str; 7] =
-            ["topologies", "placements", "patterns", "algorithms", "faults", "seeds", "simulate"];
+        const KNOWN: [&str; 8] = [
+            "topologies", "placements", "patterns", "algorithms", "faults", "seeds", "simulate",
+            "netsim",
+        ];
         if !doc.sections.is_empty() {
             let section = doc
                 .sections
@@ -138,8 +146,20 @@ impl SweepSpec {
             None => vec![1],
         };
         let simulate = doc.get_bool("sweep", "simulate", false)?;
-        let spec =
-            SweepSpec { topologies, placements, patterns, algorithms, faults, seeds, simulate };
+        let netsim = match doc.get("sweep", "netsim") {
+            Some(v) => v.as_float_array()?,
+            None => Vec::new(),
+        };
+        let spec = SweepSpec {
+            topologies,
+            placements,
+            patterns,
+            algorithms,
+            faults,
+            seeds,
+            simulate,
+            netsim,
+        };
         spec.validate()?;
         Ok(spec)
     }
@@ -150,13 +170,15 @@ impl SweepSpec {
         Self::from_doc(&Doc::parse(&text)?)
     }
 
-    /// Total number of grid cells (= result rows).
+    /// Total number of grid cells (= result rows). An empty `netsim`
+    /// axis contributes a factor of one (the axis is off, not absent).
     pub fn num_cells(&self) -> usize {
         self.topologies.len()
             * self.placements.len()
             * self.patterns.len()
             * self.algorithms.len()
             * self.faults.len()
+            * self.netsim.len().max(1)
             * self.seeds.len()
     }
 
@@ -172,6 +194,17 @@ impl SweepSpec {
             FaultModel::parse(f).with_context(|| format!("sweep fault spec {f:?}"))?;
         }
         ensure!(!self.seeds.is_empty(), "sweep: no seeds");
+        for &r in &self.netsim {
+            ensure!(
+                r > 0.0 && r <= 1.0,
+                "sweep: netsim offered load {r} outside (0, 1] flits/cycle/flow"
+            );
+        }
+        ensure!(
+            self.netsim.windows(2).all(|w| w[0] < w[1]),
+            "sweep: netsim offered loads must be strictly ascending: {:?}",
+            self.netsim
+        );
         Ok(())
     }
 }
@@ -238,6 +271,24 @@ simulate = true
         let mut s = SweepSpec::paper_grid("case-study");
         s.faults.clear();
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn netsim_axis_parses_and_validates() {
+        let doc = Doc::parse("[sweep]\nnetsim = [0.1, 0.5, 1]\n").unwrap();
+        let s = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(s.netsim, vec![0.1, 0.5, 1.0]);
+        assert_eq!(s.num_cells(), 2 * 4 * 6 * 3, "netsim multiplies the grid");
+        // Defaults to off (factor of one, not zero).
+        let s = SweepSpec::from_doc(&Doc::parse("").unwrap()).unwrap();
+        assert!(s.netsim.is_empty());
+        assert_eq!(s.num_cells(), 2 * 4 * 6);
+        // Out-of-range and unordered rates are rejected.
+        assert!(SweepSpec::from_doc(&Doc::parse("[sweep]\nnetsim = [0]\n").unwrap()).is_err());
+        assert!(SweepSpec::from_doc(&Doc::parse("[sweep]\nnetsim = [1.5]\n").unwrap()).is_err());
+        assert!(
+            SweepSpec::from_doc(&Doc::parse("[sweep]\nnetsim = [0.5, 0.1]\n").unwrap()).is_err()
+        );
     }
 
     #[test]

@@ -104,9 +104,14 @@ fn faults_csv_is_deterministic_schema_stable_and_golden() {
             }
             other => panic!("unexpected fault cell {other:?} in {row}"),
         }
-        // No simulation requested: the float columns stay empty.
+        // No simulation requested: the fair-rate float columns stay
+        // empty, and so do the netsim (flit-level) columns — the grid
+        // ran without a netsim axis.
         assert_eq!(cells[17], "", "{row}");
         assert_eq!(cells[20], "", "{row}");
+        for cell in &cells[21..26] {
+            assert_eq!(*cell, "", "netsim columns must be empty: {row}");
+        }
     }
 
     // 3. Golden file: compare, or bless on first run.

@@ -20,6 +20,7 @@ fn grid(simulate: bool) -> SweepSpec {
         faults: vec!["none".into()],
         seeds: vec![1, 2],
         simulate,
+        netsim: Vec::new(),
     }
 }
 
