@@ -68,28 +68,27 @@ fn main() -> anyhow::Result<()> {
 
     // --- Generated fault scenarios (the `faults` subsystem) ------------
     // A seeded cascade: links die one by one; after every event the
-    // degraded router reroutes the whole fabric and we report how many
-    // routes moved compared to the pristine tables.
-    println!("\n== cascading failure drill (seeded, deterministic) ==");
+    // pristine route store is repaired through the eval layer's
+    // incremental re-trace (only flows crossing a dead link move — no
+    // full re-trace, byte-identical to one) and we report the cost.
+    println!("\n== cascading failure drill (seeded, incremental re-trace) ==");
     let types = Placement::paper_io().apply(&topo)?;
     let scenario = FaultModel::parse("cascade:4")?.generate(&topo, 1);
     let flows = Pattern::C2ioSym.flows(&topo, &types)?;
     let base = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
-    let pristine = trace_flows(&topo, &*base, &flows);
+    let pristine = FlowSet::trace(&topo, &*base, &flows);
     for (step, faults) in scenario.stages(&topo).iter().enumerate() {
         match AlgorithmKind::Gdmodk.build_degraded(&topo, Some(&types), 1, faults) {
             Ok(router) => {
-                let rerouted = trace_flows(&topo, &*router, &flows);
-                let moved =
-                    pristine.iter().zip(&rerouted).filter(|(a, b)| a.ports != b.ports).count();
-                let rep = pgft::routing::verify::verify_routes(&topo, &rerouted);
+                let (rerouted, moved) = pristine.retrace_incremental(&topo, faults, &*router);
+                let rep = pgft::routing::verify::verify_routes(&topo, &rerouted.to_routes());
                 assert!(rep.deadlock_free, "reroutes stay deadlock-free");
                 println!(
                     "step {}: {} dead links, {}/{} routes moved, deadlock-free: {}",
                     step + 1,
                     faults.num_dead(),
                     moved,
-                    flows.len(),
+                    rerouted.len(),
                     rep.deadlock_free
                 );
             }

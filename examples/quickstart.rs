@@ -39,5 +39,25 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(c("smodk"), 4, "§III.C");
     assert_eq!(c("gdmodk"), 1, "§IV: grouped routing reaches the optimum");
     println!("\nGdmodk turns C_topo {} (Dmodk) into {} — congestion removed.", c("dmodk"), c("gdmodk"));
+
+    // 6. The same scoring through the unified eval layer: trace once
+    //    into an arena-backed FlowSet, then run any evaluator stack
+    //    over the shared store (this is how sweep cells work inside).
+    let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 42);
+    let set = FlowSet::trace(&topo, &*router, &flows);
+    let cells = pgft::eval::evaluate_all(
+        &pgft::eval::parse_evaluators("congestion,fairrate")?,
+        &topo,
+        &set,
+        42,
+    );
+    assert_eq!(cells.congestion.unwrap().c_topo(), 1);
+    let fair = cells.fairrate.unwrap();
+    println!(
+        "eval layer: {} flows, {} hops in one arena, fair-rate aggregate {:.2}",
+        set.len(),
+        set.total_hops(),
+        fair.aggregate_throughput
+    );
     Ok(())
 }

@@ -1,0 +1,114 @@
+//! Eval-layer performance: arena trace throughput (traces/s),
+//! incremental-vs-full re-trace on a single-link fault cell, and the
+//! flit-level engine's events/s — emitted both as bench lines and as a
+//! machine-readable `BENCH_eval.json` (uploaded as a CI artifact, so
+//! the perf trajectory of the eval core is tracked run over run).
+//!
+//! CI smoke-runs this with `PGFT_BENCH_SMOKE=1` (1 iteration) so the
+//! bench code cannot rot; real numbers come from a plain
+//! `cargo bench --bench bench_eval`. The output path defaults to
+//! `BENCH_eval.json` in the package root and can be overridden with
+//! `PGFT_BENCH_EVAL_OUT`.
+
+use pgft::netsim::{run_netsim, NetsimConfig};
+use pgft::prelude::*;
+use pgft::routing::verify::all_pairs;
+use pgft::util::bench::Bench;
+use std::time::Duration;
+
+fn main() {
+    let case = build_pgft(&PgftSpec::case_study());
+    let medium = families::named("medium-512").unwrap();
+
+    println!("== arena trace throughput (all-pairs, dmodk) ==");
+    let mut traces_per_sec = Vec::new();
+    for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
+        let types = Placement::paper_io().apply(topo).unwrap();
+        let flows = all_pairs(topo.num_nodes() as u32);
+        let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
+        let st = Bench::new(format!("eval/flowset-trace/{label}"))
+            .target_time(Duration::from_millis(400))
+            .samples(5, 100)
+            .throughput_elems(flows.len() as u64)
+            .run(|_| {
+                std::hint::black_box(FlowSet::trace(topo, &*router, &flows));
+            });
+        traces_per_sec.push((label, flows.len() as f64 / (st.median_ns / 1e9)));
+    }
+
+    println!("\n== incremental vs full re-trace (1 dead link, medium-512) ==");
+    let types = Placement::paper_io().apply(&medium).unwrap();
+    let flows = all_pairs(medium.num_nodes() as u32);
+    let mut faults = FaultSet::none(&medium);
+    faults.kill(medium.links.iter().find(|l| l.stage == 2).unwrap().id);
+    let pristine =
+        FlowSet::trace(&medium, &*AlgorithmKind::Dmodk.build(&medium, Some(&types), 1), &flows);
+    let degraded = DegradedRouter::new(
+        &medium,
+        &faults,
+        AlgorithmKind::Dmodk.build(&medium, Some(&types), 1),
+    )
+    .unwrap();
+    let dirty = pristine.dirty_flows(&medium, &faults).len();
+    println!("  {} of {} flows cross the dead link", dirty, pristine.len());
+    let full_st = Bench::new("eval/retrace/full")
+        .target_time(Duration::from_millis(400))
+        .samples(5, 60)
+        .run(|_| {
+            std::hint::black_box(FlowSet::trace(&medium, &degraded, &flows));
+        });
+    let incr_st = Bench::new("eval/retrace/incremental")
+        .target_time(Duration::from_millis(400))
+        .samples(5, 60)
+        .run(|_| {
+            std::hint::black_box(pristine.retrace_incremental(&medium, &faults, &degraded));
+        });
+    let (incremental, changed) = pristine.retrace_incremental(&medium, &faults, &degraded);
+    assert_eq!(
+        incremental,
+        FlowSet::trace(&medium, &degraded, &flows),
+        "incremental re-trace must be byte-identical to a full re-trace"
+    );
+    assert_eq!(changed, dirty);
+    let speedup = full_st.median_ns / incr_st.median_ns.max(1e-9);
+    println!("  incremental re-trace speedup on a single-link fault: {speedup:.2}x");
+
+    println!("\n== flit-level engine events/s (case study, C2IO, gdmodk) ==");
+    let ctypes = Placement::paper_io().apply(&case).unwrap();
+    let cflows = Pattern::C2ioSym.flows(&case, &ctypes).unwrap();
+    let router = AlgorithmKind::Gdmodk.build(&case, Some(&ctypes), 1);
+    let set = FlowSet::trace(&case, &*router, &cflows);
+    let cfg = NetsimConfig { warmup: 200, measure: 1000, drain: 200, ..Default::default() };
+    let events = run_netsim(&case, &set, &cfg, 0.3).unwrap().events;
+    let ns_st = Bench::new("eval/netsim/rate-0.3")
+        .target_time(Duration::from_millis(400))
+        .throughput_elems(events)
+        .run(|_| {
+            std::hint::black_box(run_netsim(&case, &set, &cfg, 0.3).unwrap());
+        });
+    let events_per_sec = events as f64 / (ns_st.median_ns / 1e9);
+
+    // Machine-readable perf record (the CI artifact; the committed copy
+    // is pinned well-formed by tests/eval_agreement.rs).
+    let tps = |label: &str| {
+        traces_per_sec.iter().find(|(l, _)| *l == label).map(|(_, v)| *v).unwrap_or(0.0)
+    };
+    let json = format!(
+        "{{\n  \"schema\": \"pgft-bench-eval/1\",\n  \"source\": \"rust-bench\",\n  \
+         \"traces_per_sec\": {{\"case-study\": {:.1}, \"medium-512\": {:.1}}},\n  \
+         \"retrace\": {{\"topology\": \"medium-512\", \"dead_links\": 1, \"flows\": {}, \
+         \"dirty_flows\": {}, \"full_ms\": {:.4}, \"incremental_ms\": {:.4}, \
+         \"speedup\": {:.4}}},\n  \"netsim_events_per_sec\": {:.1}\n}}\n",
+        tps("case-study"),
+        tps("medium-512"),
+        pristine.len(),
+        dirty,
+        full_st.median_ns / 1e6,
+        incr_st.median_ns / 1e6,
+        speedup,
+        events_per_sec,
+    );
+    let out = std::env::var("PGFT_BENCH_EVAL_OUT").unwrap_or_else(|_| "BENCH_eval.json".into());
+    std::fs::write(&out, &json).expect("write BENCH_eval.json");
+    println!("\nwrote {out}:\n{json}");
+}

@@ -19,7 +19,7 @@ fn main() {
     println!("== engine cost: one run per offered load (case study, C2IO) ==");
     for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk] {
         let router = kind.build(&topo, Some(&types), 1);
-        let routes = trace_flows(&topo, &*router, &flows);
+        let routes = FlowSet::trace(&topo, &*router, &flows);
         for rate in [0.05f64, 0.3, 0.8] {
             let rep = run_netsim(&topo, &routes, &cfg, rate).unwrap();
             let events = rep.events;
@@ -37,7 +37,7 @@ fn main() {
     let mut peaks = Vec::new();
     for kind in AlgorithmKind::ALL {
         let router = kind.build(&topo, Some(&types), 1);
-        let routes = trace_flows(&topo, &*router, &flows);
+        let routes = FlowSet::trace(&topo, &*router, &flows);
         let (curve, d) = pgft::util::bench::time_once(&format!("netsim/curve/{kind}"), || {
             load_curve(&topo, &routes, &cfg, &rates).unwrap()
         });

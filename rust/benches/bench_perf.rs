@@ -65,29 +65,20 @@ fn main() {
             });
     }
 
-    println!("\n== metric ablations (§Perf iteration log) ==");
+    // The §Perf kernel ablation (bitmap vs hashset vs sort+dedup) is
+    // settled: bench_perf crowned the bitmap kernel and the losers were
+    // demoted to `#[cfg(test)]` cross-checks in `metrics`. What remains
+    // benchmarked here are the three *entry points* into that one
+    // kernel: owned routes, the fused trace+metric path, and the
+    // arena-backed FlowSet the eval layer shares across evaluators.
+    println!("\n== metric entry points (one bitmap kernel) ==");
     for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
         let types = Placement::paper_io().apply(topo).unwrap();
         let flows = all_pairs(topo.num_nodes() as u32);
         let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
         let routes = trace_flows(topo, &*router, &flows);
-        Bench::new(format!("metric-ablate/hashset/{label}"))
-            .target_time(Duration::from_millis(400))
-            .samples(3, 100)
-            .run(|_| {
-                std::hint::black_box(
-                    pgft::metrics::CongestionReport::compute_hashset(topo, &routes).c_topo(),
-                );
-            });
-        Bench::new(format!("metric-ablate/sort-dedup/{label}"))
-            .target_time(Duration::from_millis(400))
-            .samples(3, 100)
-            .run(|_| {
-                std::hint::black_box(
-                    pgft::metrics::CongestionReport::compute_sortdedup(topo, &routes).c_topo(),
-                );
-            });
-        Bench::new(format!("metric-ablate/bitmap/{label}"))
+        let set = FlowSet::trace(topo, &*router, &flows);
+        Bench::new(format!("metric/route-ports/{label}"))
             .target_time(Duration::from_millis(400))
             .samples(3, 100)
             .run(|_| {
@@ -95,13 +86,21 @@ fn main() {
                     pgft::metrics::CongestionReport::compute(topo, &routes).c_topo(),
                 );
             });
-        Bench::new(format!("metric-ablate/fused-arena/{label}"))
+        Bench::new(format!("metric/fused-arena/{label}"))
             .target_time(Duration::from_millis(400))
             .samples(3, 100)
             .run(|_| {
                 std::hint::black_box(
                     pgft::metrics::CongestionReport::compute_flows(topo, &*router, &flows)
                         .c_topo(),
+                );
+            });
+        Bench::new(format!("metric/flowset/{label}"))
+            .target_time(Duration::from_millis(400))
+            .samples(3, 100)
+            .run(|_| {
+                std::hint::black_box(
+                    pgft::metrics::CongestionReport::compute_flowset(topo, &set).c_topo(),
                 );
             });
     }

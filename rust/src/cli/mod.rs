@@ -8,6 +8,8 @@
 //!            [--serial|--threads N]
 //! pgft faults [--topo ..] [--algo ..] [--pattern ..] [--faults SPECS]
 //!             [--seeds 1,2] [--simulate] [--format csv] [--out FILE]
+//! pgft eval [--topo ..] [--algo ..] [--pattern ..] [--seed N]
+//!           [--evaluators congestion,fairrate,netsim:0.3] [--faults SPEC]
 //! pgft analyze [--topo ..] [--placement ..] [--pattern c2io-sym,c2io-all]
 //!              [--algo all|dmodk,...] [--seed N] [--format text|csv|json] [--out FILE]
 //! pgft ports --algo dmodk --pattern c2io-sym [--level 3]      # per-port detail (Figs 4-7)
@@ -24,7 +26,8 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Coordinator;
-use crate::faults::FaultModel;
+use crate::eval::{evaluate_all, parse_evaluators, FlowSet};
+use crate::faults::{FaultModel, FaultSet};
 use crate::metrics::{render_algorithm_table, CongestionReport};
 use crate::netsim::{
     curve_table, default_rates, load_curve, saturation_point, CurvePoint, Injection, NetsimConfig,
@@ -95,6 +98,22 @@ impl Args {
     }
 }
 
+/// Expand an optional `--faults SPEC` argument into a fault set
+/// (`None` when absent or `"none"`): parse the model, validate it
+/// against the topology, expand it deterministically from `seed`.
+/// Shared by the subcommands that simulate degraded fabrics
+/// (`netsim`, `eval`) so fault-spec handling cannot diverge.
+fn parse_fault_set(args: &Args, topo: &Topology, seed: u64) -> Result<Option<FaultSet>> {
+    match args.get("faults") {
+        Some(spec) if spec != "none" => {
+            let model = FaultModel::parse(spec)?;
+            model.validate_for(&topo.spec)?;
+            Ok(Some(model.generate(topo, seed).fault_set(topo)))
+        }
+        _ => Ok(None),
+    }
+}
+
 fn load_topo(args: &Args) -> Result<(Topology, NodeTypeMap)> {
     let topo = families::named(&args.get_or("topo", "case-study"))?;
     crate::topology::validate::validate(&topo)?;
@@ -141,6 +160,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "topo" => cmd_topo(&args),
         "sweep" => cmd_sweep(&args),
         "faults" => cmd_faults(&args),
+        "eval" => cmd_eval(&args),
         "analyze" => cmd_analyze(&args),
         "ports" => cmd_ports(&args),
         "random-dist" => cmd_random_dist(&args),
@@ -168,6 +188,10 @@ commands:
   faults       fault-injection grid: algorithms × fault scenarios on one topology
                (--faults none,rate:0.05,links:4,switches:1,stage:3:2,cascade:4;
                 reports rerouting cost and, with --simulate, throughput retention)
+  eval         the unified evaluator surface: one shared FlowSet trace per
+               (algorithm, pattern) cell, scored by any evaluator stack
+               (--evaluators congestion,fairrate,netsim:0.3; --faults SPEC
+                repairs the store via incremental re-trace first)
   analyze      congestion table per algorithm × pattern (the paper's analysis)
   ports        per-port detail for one algorithm/pattern (Figs 4-7)
   random-dist  C_topo histogram over random-routing seeds (§III.D)
@@ -337,6 +361,76 @@ fn cmd_faults(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pgft eval` — the uniform evaluator surface: trace one arena-backed
+/// [`FlowSet`] per (algorithm, pattern) cell and score it with any
+/// stack of [`crate::eval::Evaluator`]s
+/// (`--evaluators congestion,fairrate,netsim:RATE`). With
+/// `--faults SPEC` the store is first repaired through
+/// [`FlowSet::retrace_incremental`] against the scenario expanded from
+/// `--seed`, and the `changed` column reports how many routes moved.
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let seed = args.u64_or("seed", 1)?;
+    let evaluators = parse_evaluators(&args.get_or("evaluators", "congestion,fairrate"))?;
+    let faults = parse_fault_set(args, &topo, seed)?;
+    let mut t = Table::new(
+        "unified eval: evaluator stack over one shared route store per cell",
+        &[
+            "algo", "pattern", "flows", "hops", "changed", "C_topo", "hot_ports", "agg_thru",
+            "min_rate", "ns_accepted", "ns_mean_lat", "ns_saturated",
+        ],
+    );
+    for pattern in parse_patterns(args, "c2io-sym")? {
+        let flows = pattern.flows(&topo, &types)?;
+        for kind in parse_algos(args)? {
+            let router = kind.build(&topo, Some(&types), seed);
+            let pristine = FlowSet::trace(&topo, &*router, &flows);
+            let (set, changed) = match &faults {
+                Some(f) => {
+                    let degraded = kind.build_degraded(&topo, Some(&types), seed, f)?;
+                    pristine.retrace_incremental(&topo, f, &*degraded)
+                }
+                None => (pristine, 0),
+            };
+            let cells = evaluate_all(&evaluators, &topo, &set, seed);
+            let (c_topo, hot) = match &cells.congestion {
+                Some(rep) => (rep.c_topo().to_string(), rep.hot_ports().len().to_string()),
+                None => Default::default(),
+            };
+            let (agg, min) = match &cells.fairrate {
+                Some(s) => (
+                    format!("{:.4}", s.aggregate_throughput),
+                    format!("{:.4}", s.min_rate),
+                ),
+                None => Default::default(),
+            };
+            let (ns_acc, ns_lat, ns_sat) = match &cells.netsim {
+                Some(n) => (
+                    format!("{:.4}", n.accepted),
+                    format!("{:.2}", n.mean_latency),
+                    if n.saturated { "1".to_string() } else { "0".to_string() },
+                ),
+                None => Default::default(),
+            };
+            t.row(&[
+                kind.as_str().to_string(),
+                pattern.name(),
+                flows.len().to_string(),
+                set.total_hops().to_string(),
+                changed.to_string(),
+                c_topo,
+                hot,
+                agg,
+                min,
+                ns_acc,
+                ns_lat,
+                ns_sat,
+            ]);
+        }
+    }
+    emit(&t, args)
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let spec = SweepSpec {
         topologies: vec![args.get_or("topo", "case-study")],
@@ -486,14 +580,7 @@ fn cmd_netsim(args: &Args) -> Result<()> {
         seed,
     };
     // Optional fault scenario: simulate rerouted (degraded) tables.
-    let faults = match args.get("faults") {
-        Some(spec) if spec != "none" => {
-            let model = FaultModel::parse(spec)?;
-            model.validate_for(&topo.spec)?;
-            Some(model.generate(&topo, seed).fault_set(&topo))
-        }
-        _ => None,
-    };
+    let faults = parse_fault_set(args, &topo, seed)?;
     let mut points: Vec<CurvePoint> = Vec::new();
     let mut sat = Table::new(
         "saturation points (peak accepted flits/cycle, knee offered load)",
@@ -506,8 +593,8 @@ fn cmd_netsim(args: &Args) -> Result<()> {
                 Some(f) => kind.build_degraded(&topo, Some(&types), seed, f)?,
                 None => kind.build(&topo, Some(&types), seed),
             };
-            let routes = trace_flows(&topo, &*router, &flows);
-            let curve = load_curve(&topo, &routes, &cfg, &rates)?;
+            let set = FlowSet::trace(&topo, &*router, &flows);
+            let curve = load_curve(&topo, &set, &cfg, &rates)?;
             if let Some(s) = saturation_point(&curve) {
                 sat.row(&[
                     kind.as_str().to_string(),
@@ -752,6 +839,23 @@ mod tests {
     #[test]
     fn faults_command_rejects_bad_specs() {
         assert!(run(&argv(&["faults", "--faults", "meteor:3"])).is_err());
+    }
+
+    #[test]
+    fn eval_command_runs_stacks_and_rejects_bad_evaluators() {
+        run(&argv(&[
+            "eval", "--algo", "dmodk,gdmodk", "--pattern", "c2io-sym",
+            "--evaluators", "congestion,fairrate",
+        ]))
+        .unwrap();
+        // A fault scenario routes through the incremental repair path.
+        run(&argv(&[
+            "eval", "--algo", "gdmodk", "--faults", "stage:3:2", "--evaluators", "congestion",
+        ]))
+        .unwrap();
+        assert!(run(&argv(&["eval", "--evaluators", "bogus"])).is_err());
+        assert!(run(&argv(&["eval", "--evaluators", "netsim:7"])).is_err());
+        assert!(run(&argv(&["eval", "--faults", "meteor:3"])).is_err());
     }
 
     #[test]

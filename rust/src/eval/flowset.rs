@@ -1,0 +1,318 @@
+//! [`FlowSet`] — the arena-backed route store every evaluator consumes.
+//!
+//! Before the eval layer existed, each consumer (`metrics`, the
+//! fair-rate solver, the packet/flit simulators) took its own
+//! `Vec<RoutePorts>`: one heap allocation per flow, re-traced per
+//! consumer. A `FlowSet` stores the same information once, in CSR form —
+//! a flat port buffer plus per-flow offsets and a flow table — so a
+//! sweep cell traces each flow exactly once into one contiguous arena
+//! and every evaluator reads the same bytes.
+//!
+//! The store also knows how to *repair itself* under faults:
+//! [`FlowSet::retrace_incremental`] re-traces only the flows whose
+//! stored path crosses a dead link (flows routed entirely over healthy
+//! links are copied verbatim) and is byte-identical to a full re-trace
+//! with the same fault-aware router — the invariant
+//! `tests/eval_agreement.rs` pins across randomized scenarios. The
+//! identity holds because every [`Router`] in this crate is stateless
+//! per (src, dst) query and [`crate::faults::DegradedRouter`] keeps the
+//! base algorithm's decisions wherever their links survive, so a flow
+//! that touches no dead link re-traces to exactly its pristine ports.
+
+use crate::faults::FaultSet;
+use crate::routing::trace::{trace_route_into, RoutePorts};
+use crate::routing::Router;
+use crate::topology::{Nid, PortId, Topology};
+
+/// A compact, contiguous store of traced routes: CSR layout with a
+/// flow → (src, dst, weight) table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FlowSet {
+    /// `(src, dst)` per flow, in trace order.
+    pairs: Vec<(Nid, Nid)>,
+    /// Per-flow demand weight (1 unless a weighted pattern set it).
+    weights: Vec<u32>,
+    /// CSR offsets into `ports`; `offsets.len() == pairs.len() + 1`.
+    offsets: Vec<u32>,
+    /// Flat arena of every route's output ports, concatenated.
+    ports: Vec<PortId>,
+}
+
+impl FlowSet {
+    /// An empty store (useful as a fold seed).
+    pub fn empty() -> FlowSet {
+        FlowSet { pairs: Vec::new(), weights: Vec::new(), offsets: vec![0], ports: Vec::new() }
+    }
+
+    /// Trace every `(src, dst)` flow with `router` into one contiguous
+    /// arena (unit weights). This is the single trace a sweep cell
+    /// performs; every evaluator then shares the result.
+    pub fn trace(topo: &Topology, router: &dyn Router, flows: &[(Nid, Nid)]) -> FlowSet {
+        let mut set = FlowSet {
+            pairs: Vec::with_capacity(flows.len()),
+            weights: vec![1; flows.len()],
+            offsets: Vec::with_capacity(flows.len() + 1),
+            ports: Vec::with_capacity(flows.len() * 2 * topo.spec.h),
+        };
+        set.offsets.push(0);
+        for &(src, dst) in flows {
+            set.pairs.push((src, dst));
+            trace_route_into(topo, router, src, dst, &mut set.ports);
+            set.offsets.push(set.ports.len() as u32);
+        }
+        set
+    }
+
+    /// Like [`FlowSet::trace`] for weighted flows (`weight` is carried
+    /// per flow for demand-aware evaluators; the built-in evaluators
+    /// treat every flow as one unit of demand).
+    pub fn trace_weighted(
+        topo: &Topology,
+        router: &dyn Router,
+        flows: &[(Nid, Nid, u32)],
+    ) -> FlowSet {
+        let pairs: Vec<(Nid, Nid)> = flows.iter().map(|&(s, d, _)| (s, d)).collect();
+        let mut set = FlowSet::trace(topo, router, &pairs);
+        set.weights = flows.iter().map(|&(_, _, w)| w).collect();
+        set
+    }
+
+    /// Import routes traced elsewhere (interop with the
+    /// [`RoutePorts`]-shaped legacy surface, e.g. `trace_flows`).
+    pub fn from_routes(routes: &[RoutePorts]) -> FlowSet {
+        let mut set = FlowSet::empty();
+        set.pairs.reserve(routes.len());
+        set.weights = vec![1; routes.len()];
+        set.ports.reserve(routes.iter().map(|r| r.ports.len()).sum());
+        for r in routes {
+            set.pairs.push((r.src, r.dst));
+            set.ports.extend_from_slice(&r.ports);
+            set.offsets.push(set.ports.len() as u32);
+        }
+        set
+    }
+
+    /// Materialize per-flow [`RoutePorts`] (interop with consumers that
+    /// still want owned per-route vectors, e.g. `routing::verify`).
+    pub fn to_routes(&self) -> Vec<RoutePorts> {
+        (0..self.len())
+            .map(|f| {
+                let (src, dst) = self.pairs[f];
+                RoutePorts { src, dst, ports: self.route(f).to_vec() }
+            })
+            .collect()
+    }
+
+    /// Number of flows (self-flows included).
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// True when the store holds no flows at all.
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Flows that traverse at least one port (i.e. `src != dst`).
+    pub fn num_active(&self) -> usize {
+        (0..self.len()).filter(|&f| !self.route(f).is_empty()).count()
+    }
+
+    /// Total hops over all flows (= length of the port arena).
+    pub fn total_hops(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// `(src, dst)` of one flow.
+    #[inline]
+    pub fn pair(&self, flow: usize) -> (Nid, Nid) {
+        self.pairs[flow]
+    }
+
+    /// Demand weight of one flow.
+    #[inline]
+    pub fn weight(&self, flow: usize) -> u32 {
+        self.weights[flow]
+    }
+
+    /// The traced route of one flow: every output port in traversal
+    /// order (empty for self-flows). Borrowed straight from the arena —
+    /// no per-route allocation anywhere.
+    #[inline]
+    pub fn route(&self, flow: usize) -> &[PortId] {
+        &self.ports[self.offsets[flow] as usize..self.offsets[flow + 1] as usize]
+    }
+
+    /// Iterate `((src, dst), route)` in flow order.
+    pub fn iter(&self) -> impl Iterator<Item = ((Nid, Nid), &[PortId])> + '_ {
+        (0..self.len()).map(|f| (self.pairs[f], self.route(f)))
+    }
+
+    /// Whether a flow's stored route crosses a link the fault set killed.
+    #[inline]
+    pub fn crosses_fault(&self, topo: &Topology, faults: &FaultSet, flow: usize) -> bool {
+        self.route(flow).iter().any(|&p| faults.is_dead(topo.ports[p].link))
+    }
+
+    /// Flows whose stored route crosses a dead link — exactly the set a
+    /// fault event forces to move.
+    pub fn dirty_flows(&self, topo: &Topology, faults: &FaultSet) -> Vec<usize> {
+        (0..self.len()).filter(|&f| self.crosses_fault(topo, faults, f)).collect()
+    }
+
+    /// Repair the store after a fault event: re-trace **only** the flows
+    /// whose stored route crosses a dead link, copying every other route
+    /// verbatim from the arena. Returns the repaired store and the
+    /// number of flows whose route changed.
+    ///
+    /// `router` must be a fault-aware router for the same `faults` (in
+    /// practice a [`crate::faults::DegradedRouter`] wrapping the cell's
+    /// base algorithm). The result is **byte-identical to a full
+    /// re-trace** with the same router (see the module docs for why;
+    /// `debug_assert`ed here per retraced flow, property-pinned in
+    /// `tests/eval_agreement.rs`), at the cost of re-tracing only the
+    /// dirty flows — on a single-link fault that is a small fraction of
+    /// the pattern, which is what makes fault grids cheap
+    /// (`benches/bench_eval.rs` records the speedup).
+    pub fn retrace_incremental(
+        &self,
+        topo: &Topology,
+        faults: &FaultSet,
+        router: &dyn Router,
+    ) -> (FlowSet, usize) {
+        let mut out = FlowSet {
+            pairs: self.pairs.clone(),
+            weights: self.weights.clone(),
+            offsets: Vec::with_capacity(self.offsets.len()),
+            ports: Vec::with_capacity(self.ports.len()),
+        };
+        out.offsets.push(0);
+        let mut changed = 0usize;
+        for f in 0..self.len() {
+            let (src, dst) = self.pairs[f];
+            if self.crosses_fault(topo, faults, f) {
+                let start = out.ports.len();
+                trace_route_into(topo, router, src, dst, &mut out.ports);
+                // A dirty flow always moves: its old route used a dead
+                // link the fault-aware router can no longer take.
+                debug_assert_ne!(
+                    &out.ports[start..],
+                    self.route(f),
+                    "retrace of a dirty flow {src}->{dst} reproduced a dead-link route"
+                );
+                changed += 1;
+            } else {
+                out.ports.extend_from_slice(self.route(f));
+            }
+            out.offsets.push(out.ports.len() as u32);
+        }
+        (out, changed)
+    }
+
+    /// Number of flows whose route differs between two stores over the
+    /// same flow list (the rerouting-cost figure sweep rows report).
+    pub fn diff_count(&self, other: &FlowSet) -> usize {
+        assert_eq!(self.pairs, other.pairs, "diff_count compares stores over the same flows");
+        (0..self.len()).filter(|&f| self.route(f) != other.route(f)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::patterns::Pattern;
+    use crate::routing::trace::trace_flows;
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn setup() -> (Topology, Vec<(Nid, Nid)>) {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        (topo, flows)
+    }
+
+    #[test]
+    fn trace_matches_route_ports_surface() {
+        let (topo, flows) = setup();
+        for kind in AlgorithmKind::ALL {
+            let router = kind.build(&topo, None, 3);
+            let set = FlowSet::trace(&topo, &*router, &flows);
+            let routes = trace_flows(&topo, &*router, &flows);
+            assert_eq!(set.len(), routes.len());
+            assert_eq!(set.total_hops(), routes.iter().map(|r| r.ports.len()).sum::<usize>());
+            for (f, r) in routes.iter().enumerate() {
+                assert_eq!(set.pair(f), (r.src, r.dst), "{kind}");
+                assert_eq!(set.route(f), r.ports.as_slice(), "{kind}");
+                assert_eq!(set.weight(f), 1);
+            }
+            assert_eq!(set.to_routes(), routes, "{kind}");
+            assert_eq!(FlowSet::from_routes(&routes), set, "{kind}");
+        }
+    }
+
+    #[test]
+    fn self_flows_are_empty_and_inactive() {
+        let (topo, _) = setup();
+        let router = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        let set = FlowSet::trace(&topo, &*router, &[(0, 0), (0, 63), (5, 5)]);
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.num_active(), 1);
+        assert!(set.route(0).is_empty() && set.route(2).is_empty());
+        assert_eq!(set.route(1).len(), 6);
+        let collected: Vec<_> = set.iter().map(|(pair, route)| (pair, route.len())).collect();
+        assert_eq!(collected, vec![((0, 0), 0), ((0, 63), 6), ((5, 5), 0)]);
+    }
+
+    #[test]
+    fn weighted_trace_carries_weights() {
+        let (topo, _) = setup();
+        let router = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        let set = FlowSet::trace_weighted(&topo, &*router, &[(0, 63, 4), (1, 62, 1)]);
+        assert_eq!(set.weight(0), 4);
+        assert_eq!(set.weight(1), 1);
+        let unit = FlowSet::trace(&topo, &*router, &[(0, 63), (1, 62)]);
+        assert_eq!(set.route(0), unit.route(0), "weights never change routing");
+    }
+
+    #[test]
+    fn incremental_retrace_equals_full_retrace() {
+        let (topo, flows) = setup();
+        // Kill 2 of the 4 parallel links of the first L2→top bundle.
+        let l2 = topo.level_switches(2).next().unwrap();
+        let mut faults = FaultSet::none(&topo);
+        for &p in topo.switches[l2].up_ports.iter().take(2) {
+            faults.kill(topo.ports[p].link);
+        }
+        for kind in AlgorithmKind::ALL {
+            let base = kind.build(&topo, None, 7);
+            let pristine = FlowSet::trace(&topo, &*base, &flows);
+            let degraded = crate::faults::DegradedRouter::new(
+                &topo,
+                &faults,
+                kind.build(&topo, None, 7),
+            )
+            .unwrap();
+            let (incremental, changed) = pristine.retrace_incremental(&topo, &faults, &degraded);
+            let full = FlowSet::trace(&topo, &degraded, &flows);
+            assert_eq!(incremental, full, "{kind}: incremental must be byte-identical to full");
+            assert_eq!(changed, pristine.diff_count(&full), "{kind}");
+            assert_eq!(changed, pristine.dirty_flows(&topo, &faults).len(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn zero_faults_retrace_is_identity() {
+        let (topo, flows) = setup();
+        let faults = FaultSet::none(&topo);
+        let base = AlgorithmKind::Gdmodk.build(&topo, None, 1);
+        let pristine = FlowSet::trace(&topo, &*base, &flows);
+        let degraded =
+            crate::faults::DegradedRouter::new(&topo, &faults, AlgorithmKind::Gdmodk.build(&topo, None, 1))
+                .unwrap();
+        let (repaired, changed) = pristine.retrace_incremental(&topo, &faults, &degraded);
+        assert_eq!(changed, 0);
+        assert_eq!(repaired, pristine);
+    }
+}

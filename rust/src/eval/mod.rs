@@ -1,0 +1,379 @@
+//! The unified evaluation core: one route store, one evaluator seam.
+//!
+//! The paper's results all come from the same conceptual pipeline —
+//! trace the routes of a pattern, then *score* them: the static
+//! congestion metric `C_p`/`C_topo` (§III.A), max-min fair-rate
+//! throughput, or simulated flit-level latency. Before this module each
+//! scorer owned its inputs: `metrics`, `sim::fairrate` and `netsim`
+//! every one consumed its own per-flow `Vec<RoutePorts>`, re-traced and
+//! re-allocated per sweep cell. Here the pipeline is factored into two
+//! halves:
+//!
+//!  * [`FlowSet`] — the arena-backed CSR route store, traced once per
+//!    cell and shared (borrowed) by every scorer, with
+//!    [`FlowSet::retrace_incremental`] repairing it allocation-lean
+//!    after a fault event;
+//!  * [`Evaluator`] — the scorer interface
+//!    (`evaluate(topo, flows, seed) -> EvalCells`), implemented by
+//!    [`CongestionEval`] (static metric), [`FairRateEval`] (max-min
+//!    throughput) and [`NetsimEval`] (flit-level simulation), and the
+//!    seam any future scorer (adaptive routing, queueing models) plugs
+//!    into.
+//!
+//! `sweep::runner`, the `pgft eval` subcommand and the examples all
+//! select evaluators uniformly through this interface instead of
+//! hand-wiring each engine.
+//!
+//! ```
+//! use pgft::prelude::*;
+//! use pgft::eval::{CongestionEval, Evaluator, FairRateEval, FlowSet};
+//! let topo = build_pgft(&PgftSpec::case_study());
+//! let types = Placement::paper_io().apply(&topo).unwrap();
+//! let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+//! let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+//! // One trace, shared by every evaluator.
+//! let set = FlowSet::trace(&topo, &*router, &flows);
+//! let c = CongestionEval.evaluate(&topo, &set, 1);
+//! assert_eq!(c.congestion.unwrap().c_topo(), 1); // §IV optimum
+//! let f = FairRateEval.evaluate(&topo, &set, 1);
+//! assert!(f.fairrate.unwrap().aggregate_throughput > 7.9);
+//! ```
+
+pub mod flowset;
+
+pub use flowset::FlowSet;
+
+use crate::metrics::CongestionReport;
+use crate::netsim::{run_netsim, NetsimConfig, NetsimReport};
+use crate::sim::fair_rates;
+use crate::topology::Topology;
+use anyhow::{ensure, Result};
+
+/// Max-min fair-rate figures of one evaluated route set (the columns
+/// `simulate` sweeps attach to every cell; re-exported by
+/// `sweep::result` as `SweepSim` for the CSV surface).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FairRateStats {
+    /// Sum of max-min fair rates over all flows (links have capacity 1).
+    pub aggregate_throughput: f64,
+    /// Worst flow rate — the pattern's completion is bound by it.
+    pub min_rate: f64,
+    /// Time to deliver one unit of data per flow: `1 / min_rate`.
+    pub completion_time: f64,
+}
+
+impl FairRateStats {
+    /// Summarize a per-flow rate vector.
+    pub fn from_rates(rates: &[f64]) -> FairRateStats {
+        let sum: f64 = rates.iter().sum();
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        FairRateStats { aggregate_throughput: sum, min_rate: min, completion_time: 1.0 / min }
+    }
+}
+
+/// Flit-level simulation figures of one evaluated route set at one
+/// offered load (the `ns_*` sweep columns; re-exported by
+/// `sweep::result`). See [`crate::netsim`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetsimStats {
+    /// Offered load per flow (flits/cycle) — the swept injection rate.
+    pub offered: f64,
+    /// Accepted aggregate throughput (flits/cycle, measurement window).
+    pub accepted: f64,
+    /// Mean packet latency in cycles (packets injected in the window).
+    pub mean_latency: f64,
+    /// 99th-percentile packet latency in cycles.
+    pub p99_latency: f64,
+    /// Whether the run ran past its saturation point
+    /// (accepted < [`crate::netsim::SATURATION_FRACTION`] × offered
+    /// aggregate).
+    pub saturated: bool,
+}
+
+impl From<&NetsimReport> for NetsimStats {
+    fn from(r: &NetsimReport) -> NetsimStats {
+        NetsimStats {
+            offered: r.offered,
+            accepted: r.accepted,
+            mean_latency: r.mean_latency,
+            p99_latency: r.p99_latency,
+            saturated: r.saturated,
+        }
+    }
+}
+
+/// What one or more evaluators produced for one route set. Every field
+/// is optional — an evaluator fills the cells it owns and
+/// [`EvalCells::absorb`] merges the contributions of an evaluator
+/// stack into one record.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EvalCells {
+    /// Per-port congestion statistics ([`CongestionEval`]).
+    pub congestion: Option<CongestionReport>,
+    /// Max-min fair-rate throughput ([`FairRateEval`]).
+    pub fairrate: Option<FairRateStats>,
+    /// Flit-level simulation figures ([`NetsimEval`]).
+    pub netsim: Option<NetsimStats>,
+}
+
+impl EvalCells {
+    /// Merge another evaluator's cells into this record (later
+    /// contributions win per field — evaluator stacks are expected to
+    /// fill disjoint fields).
+    pub fn absorb(&mut self, other: EvalCells) {
+        if other.congestion.is_some() {
+            self.congestion = other.congestion;
+        }
+        if other.fairrate.is_some() {
+            self.fairrate = other.fairrate;
+        }
+        if other.netsim.is_some() {
+            self.netsim = other.netsim;
+        }
+    }
+}
+
+/// A route-set scorer: anything that turns a traced [`FlowSet`] into
+/// result cells. The three shipped engines implement it; the sweep
+/// runner, the `pgft eval` subcommand and the examples are generic over
+/// it, so adding a fourth engine means implementing this trait — not
+/// rewiring every caller.
+pub trait Evaluator: Send + Sync {
+    /// Human-readable evaluator name (used in tables and logs).
+    fn name(&self) -> String;
+
+    /// Score a traced route set. `seed` drives evaluators with internal
+    /// randomness (netsim injection streams); deterministic evaluators
+    /// ignore it.
+    fn evaluate(&self, topo: &Topology, flows: &FlowSet, seed: u64) -> EvalCells;
+}
+
+/// The static congestion metric (§III.A): fills
+/// [`EvalCells::congestion`] with per-port `C_p` statistics over the
+/// canonical bitmap kernel.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CongestionEval;
+
+impl Evaluator for CongestionEval {
+    fn name(&self) -> String {
+        "congestion".to_string()
+    }
+
+    fn evaluate(&self, topo: &Topology, flows: &FlowSet, _seed: u64) -> EvalCells {
+        EvalCells {
+            congestion: Some(CongestionReport::compute_flowset(topo, flows)),
+            ..Default::default()
+        }
+    }
+}
+
+/// Exact max-min fair-rate throughput (the deterministic pure-rust
+/// solver, `sim::fairrate`): fills [`EvalCells::fairrate`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FairRateEval;
+
+impl Evaluator for FairRateEval {
+    fn name(&self) -> String {
+        "fairrate".to_string()
+    }
+
+    fn evaluate(&self, topo: &Topology, flows: &FlowSet, _seed: u64) -> EvalCells {
+        EvalCells {
+            fairrate: Some(FairRateStats::from_rates(&fair_rates(topo, flows))),
+            ..Default::default()
+        }
+    }
+}
+
+/// The event-driven flit-level simulator at one offered load: fills
+/// [`EvalCells::netsim`]. The `evaluate` seed seeds the injection
+/// streams (overriding `config.seed`), so sweep cells stay
+/// seed-sensitive exactly like the pre-refactor engine.
+///
+/// A route set with no simulatable flow (all self-flows) yields empty
+/// netsim cells rather than an error — grid cells degrade, they don't
+/// fail (the policy `sweep::runner` always had).
+#[derive(Clone, Debug)]
+pub struct NetsimEval {
+    /// Simulator tunables (packet size, VCs, windows, injection).
+    pub config: NetsimConfig,
+    /// Offered load per flow, flits/cycle in `(0, 1]`.
+    pub rate: f64,
+}
+
+impl NetsimEval {
+    /// A netsim evaluator at `rate` with default tunables (the shape
+    /// the `SweepSpec.netsim` axis runs).
+    pub fn at(rate: f64) -> NetsimEval {
+        NetsimEval { config: NetsimConfig::default(), rate }
+    }
+}
+
+impl Evaluator for NetsimEval {
+    fn name(&self) -> String {
+        format!("netsim:{}", self.rate)
+    }
+
+    fn evaluate(&self, topo: &Topology, flows: &FlowSet, seed: u64) -> EvalCells {
+        let cfg = NetsimConfig { seed, ..self.config.clone() };
+        EvalCells {
+            netsim: run_netsim(topo, flows, &cfg, self.rate).ok().map(|r| NetsimStats::from(&r)),
+            ..Default::default()
+        }
+    }
+}
+
+/// Parse a comma-separated evaluator selection — the uniform CLI
+/// surface (`pgft eval --evaluators congestion,fairrate,netsim:0.3`):
+/// `congestion`, `fairrate`, and `netsim:RATE` (offered load per flow
+/// in `(0, 1]`). Duplicate kinds are rejected: [`EvalCells::absorb`]
+/// keeps one set of cells per kind, so a second `netsim:R` would be
+/// paid for and silently discarded (sweep the `netsim` axis, or run
+/// `pgft eval` once per rate, for multiple load points).
+pub fn parse_evaluators(spec: &str) -> Result<Vec<Box<dyn Evaluator>>> {
+    let mut out: Vec<Box<dyn Evaluator>> = Vec::new();
+    let (mut congestion, mut fairrate, mut netsim) = (false, false, false);
+    let once = |seen: &mut bool, part: &str| -> Result<()> {
+        ensure!(!*seen, "duplicate evaluator kind {part:?}: its cells would overwrite the first");
+        *seen = true;
+        Ok(())
+    };
+    for part in spec.split(',') {
+        match part {
+            "congestion" => {
+                once(&mut congestion, part)?;
+                out.push(Box::new(CongestionEval));
+            }
+            "fairrate" => {
+                once(&mut fairrate, part)?;
+                out.push(Box::new(FairRateEval));
+            }
+            _ => match part.strip_prefix("netsim:") {
+                Some(rate) => {
+                    once(&mut netsim, part)?;
+                    let rate: f64 = rate
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("evaluator {part:?}: bad rate ({e})"))?;
+                    ensure!(
+                        rate > 0.0 && rate <= 1.0,
+                        "evaluator {part:?}: offered load outside (0, 1]"
+                    );
+                    out.push(Box::new(NetsimEval::at(rate)));
+                }
+                None => anyhow::bail!(
+                    "unknown evaluator {part:?} (congestion|fairrate|netsim:RATE)"
+                ),
+            },
+        }
+    }
+    ensure!(!out.is_empty(), "no evaluators selected");
+    Ok(out)
+}
+
+/// Run an evaluator stack over one route set and merge the cells.
+pub fn evaluate_all(
+    evaluators: &[Box<dyn Evaluator>],
+    topo: &Topology,
+    flows: &FlowSet,
+    seed: u64,
+) -> EvalCells {
+    let mut cells = EvalCells::default();
+    for e in evaluators {
+        cells.absorb(e.evaluate(topo, flows, seed));
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::patterns::Pattern;
+    use crate::routing::trace::trace_flows;
+    use crate::routing::AlgorithmKind;
+    use crate::sim::{solve_fairrate_exact, IncidenceMatrix};
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn case(kind: AlgorithmKind) -> (Topology, FlowSet, Vec<crate::routing::RoutePorts>) {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        let router = kind.build(&topo, Some(&types), 1);
+        let set = FlowSet::trace(&topo, &*router, &flows);
+        let routes = trace_flows(&topo, &*router, &flows);
+        (topo, set, routes)
+    }
+
+    #[test]
+    fn congestion_eval_matches_pre_refactor_kernel() {
+        for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk, AlgorithmKind::Random] {
+            let (topo, set, routes) = case(kind);
+            let cells = CongestionEval.evaluate(&topo, &set, 1);
+            let rep = cells.congestion.expect("congestion cells filled");
+            let reference = CongestionReport::compute(&topo, &routes);
+            assert_eq!(rep.per_port, reference.per_port, "{kind}: C_p must be byte-identical");
+            assert!(cells.fairrate.is_none() && cells.netsim.is_none());
+        }
+    }
+
+    #[test]
+    fn fairrate_eval_matches_exact_solver() {
+        let (topo, set, routes) = case(AlgorithmKind::Dmodk);
+        let cells = FairRateEval.evaluate(&topo, &set, 1);
+        let stats = cells.fairrate.expect("fairrate cells filled");
+        let inc = IncidenceMatrix::from_routes(&topo, &routes);
+        let rates = solve_fairrate_exact(&inc, &vec![1.0; inc.num_ports()]);
+        let reference = FairRateStats::from_rates(&rates);
+        assert_eq!(stats, reference, "bit-exact against the pre-refactor path");
+        // Dmodk funnels 56 flows through 2 top ports: min rate 1/28.
+        assert!((stats.min_rate - 1.0 / 28.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn netsim_eval_is_seeded_and_degrades_cleanly() {
+        let (topo, set, _) = case(AlgorithmKind::Gdmodk);
+        let ev = NetsimEval {
+            config: NetsimConfig { warmup: 100, measure: 400, drain: 100, ..Default::default() },
+            rate: 0.05,
+        };
+        let a = ev.evaluate(&topo, &set, 7);
+        let b = ev.evaluate(&topo, &set, 7);
+        assert_eq!(a, b, "same seed, same cells");
+        let c = ev.evaluate(&topo, &set, 8);
+        assert_ne!(a, c, "the evaluate seed drives the injection streams");
+        // All-self-flow sets degrade to empty cells, not errors.
+        let router = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        let selfs = FlowSet::trace(&topo, &*router, &[(3, 3)]);
+        assert_eq!(ev.evaluate(&topo, &selfs, 7), EvalCells::default());
+    }
+
+    #[test]
+    fn absorb_merges_disjoint_fields() {
+        let (topo, set, _) = case(AlgorithmKind::Gdmodk);
+        let stack = parse_evaluators("congestion,fairrate").unwrap();
+        let cells = evaluate_all(&stack, &topo, &set, 1);
+        assert!(cells.congestion.is_some());
+        assert!(cells.fairrate.is_some());
+        assert!(cells.netsim.is_none());
+        assert_eq!(cells.congestion.unwrap().c_topo(), 1, "§IV optimum");
+    }
+
+    #[test]
+    fn parse_evaluators_rejects_bad_specs() {
+        assert!(parse_evaluators("congestion,fairrate,netsim:0.3").is_ok());
+        assert!(parse_evaluators("").is_err());
+        assert!(parse_evaluators("frobnicate").is_err());
+        assert!(parse_evaluators("netsim:0").is_err());
+        assert!(parse_evaluators("netsim:1.5").is_err());
+        assert!(parse_evaluators("netsim:fast").is_err());
+        // Duplicate kinds would silently overwrite each other's cells.
+        assert!(parse_evaluators("congestion,congestion").is_err());
+        assert!(parse_evaluators("netsim:0.1,netsim:0.5").is_err());
+        let names: Vec<String> = parse_evaluators("congestion,netsim:0.25")
+            .unwrap()
+            .iter()
+            .map(|e| e.name())
+            .collect();
+        assert_eq!(names, vec!["congestion".to_string(), "netsim:0.25".to_string()]);
+    }
+}

@@ -6,7 +6,10 @@
 //! the paper's Gdmodk/Gsmodk contribution, the static congestion metric,
 //! heterogeneous node-type modelling, flow-level and packet-level
 //! simulators plus an event-driven flit-level simulator with VC/credit
-//! flow control ([`netsim`]), a parallel experiment-sweep engine ([`sweep`]) that turns
+//! flow control ([`netsim`]), a unified evaluation core ([`eval`]: the
+//! arena-backed `FlowSet` route store with incremental fault re-trace,
+//! and the `Evaluator` trait all three scoring engines sit behind), a
+//! parallel experiment-sweep engine ([`sweep`]) that turns
 //! the paper's algorithm × pattern × placement grids into one command,
 //! a fault-injection & online-rerouting subsystem ([`faults`]) that adds
 //! seeded failure scenarios as a first-class sweep axis, and a BXI-style
@@ -44,6 +47,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod eval;
 pub mod faults;
 pub mod metrics;
 pub mod netsim;
@@ -59,6 +63,9 @@ pub mod util;
 
 /// Convenience re-exports.
 pub mod prelude {
+    pub use crate::eval::{
+        CongestionEval, EvalCells, Evaluator, FairRateEval, FlowSet, NetsimEval,
+    };
     pub use crate::faults::{DegradedRouter, DegradedTopology, FaultModel, FaultScenario, FaultSet};
     pub use crate::metrics::{AlgoSummary, CongestionReport};
     pub use crate::netsim::{load_curve, run_netsim, Injection, NetsimConfig, NetsimReport};

@@ -39,37 +39,52 @@ impl PortStats {
 }
 
 /// Congestion analysis of a route set over a topology.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CongestionReport {
     /// Per-output-port statistics, indexed by global `PortId`.
     pub per_port: Vec<PortStats>,
 }
 
-impl CongestionReport {
-    /// Compute per-port distinct-source/destination counts.
-    ///
-    /// Implementation: per-port NID *bitmaps* — O(hops) bit-sets plus an
-    /// O(ports · N/64) popcount sweep, with two flat `u64` arenas
-    /// (`ports × ⌈N/64⌉` words each; 180 KiB for a 512-node all-pairs
-    /// run). Chosen over per-port `HashSet`s and over scatter+sort+dedup
-    /// after measuring all three — see EXPERIMENTS.md §Perf and the
-    /// `metric-ablate/*` rows of `bench_perf` (the ablation variants are
-    /// kept below).
-    pub fn compute(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
-        let np = topo.num_ports();
-        let words = (topo.num_nodes() + 63) / 64;
-        let mut per_port = vec![PortStats::default(); np];
-        let mut src_bits = vec![0u64; np * words];
-        let mut dst_bits = vec![0u64; np * words];
-        for r in routes {
-            let (sw, sb) = ((r.src / 64) as usize, r.src % 64);
-            let (dw, db) = ((r.dst / 64) as usize, r.dst % 64);
-            for &p in &r.ports {
-                per_port[p].routes += 1;
-                src_bits[p * words + sw] |= 1u64 << sb;
-                dst_bits[p * words + dw] |= 1u64 << db;
-            }
+/// The one congestion kernel: per-port NID *bitmaps* — O(hops) bit-sets
+/// plus an O(ports · N/64) popcount sweep, with two flat `u64` arenas
+/// (`ports × ⌈N/64⌉` words each; 180 KiB for a 512-node all-pairs run).
+/// Chosen over per-port `HashSet`s and over scatter+sort+dedup after
+/// measuring all three in `bench_perf` (see EXPERIMENTS.md §Perf); the
+/// losing variants survive only as `#[cfg(test)]` cross-checks below.
+/// Every public entry point (`compute`, `compute_flows`,
+/// `compute_flowset`) accumulates through this accumulator, so there is
+/// exactly one shipped implementation of the metric.
+struct BitmapAccum {
+    words: usize,
+    per_port: Vec<PortStats>,
+    src_bits: Vec<u64>,
+    dst_bits: Vec<u64>,
+}
+
+impl BitmapAccum {
+    fn new(num_ports: usize, num_nodes: usize) -> BitmapAccum {
+        let words = (num_nodes + 63) / 64;
+        BitmapAccum {
+            words,
+            per_port: vec![PortStats::default(); num_ports],
+            src_bits: vec![0u64; num_ports * words],
+            dst_bits: vec![0u64; num_ports * words],
         }
+    }
+
+    #[inline]
+    fn add(&mut self, src: u32, dst: u32, ports: &[PortId]) {
+        let (sw, sb) = ((src / 64) as usize, src % 64);
+        let (dw, db) = ((dst / 64) as usize, dst % 64);
+        for &p in ports {
+            self.per_port[p].routes += 1;
+            self.src_bits[p * self.words + sw] |= 1u64 << sb;
+            self.dst_bits[p * self.words + dw] |= 1u64 << db;
+        }
+    }
+
+    fn finish(self) -> CongestionReport {
+        let BitmapAccum { words, mut per_port, src_bits, dst_bits } = self;
         for (p, st) in per_port.iter_mut().enumerate() {
             if st.routes == 0 {
                 continue;
@@ -85,11 +100,41 @@ impl CongestionReport {
         }
         CongestionReport { per_port }
     }
+}
 
-    /// Ablation (§Perf iteration 1 → 2): scatter `(port, nid)` pairs,
-    /// sort, dedup, count runs. Beats hash sets on small fabrics, loses
-    /// past ~10⁶ hops; superseded by the bitmap path above.
-    pub fn compute_sortdedup(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
+impl CongestionReport {
+    /// Compute per-port distinct-source/destination counts over owned
+    /// per-route vectors (the [`RoutePorts`] surface). One bitmap
+    /// kernel (the private `BitmapAccum`) serves every entry point.
+    pub fn compute(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
+        let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
+        for r in routes {
+            acc.add(r.src, r.dst, &r.ports);
+        }
+        acc.finish()
+    }
+
+    /// Compute over an arena-backed [`crate::eval::FlowSet`] — the
+    /// canonical eval-layer entry point ([`crate::eval::CongestionEval`]):
+    /// same kernel, zero per-route allocation, shared trace.
+    pub fn compute_flowset(
+        topo: &Topology,
+        flows: &crate::eval::FlowSet,
+    ) -> CongestionReport {
+        let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
+        for ((src, dst), ports) in flows.iter() {
+            acc.add(src, dst, ports);
+        }
+        acc.finish()
+    }
+
+    /// Ablation cross-check (§Perf iteration 1 → 2): scatter
+    /// `(port, nid)` pairs, sort, dedup, count runs. Beats hash sets on
+    /// small fabrics, loses past ~10⁶ hops; demoted from the public
+    /// surface once `bench_perf` crowned the bitmap kernel — kept only
+    /// to cross-check it in tests.
+    #[cfg(test)]
+    fn compute_sortdedup(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
         let np = topo.num_ports();
         let mut per_port = vec![PortStats::default(); np];
 
@@ -118,10 +163,12 @@ impl CongestionReport {
         CongestionReport { per_port }
     }
 
-    /// Ablation baseline for §Perf: per-port `HashSet` accumulation (the
-    /// obvious first implementation). Kept for `bench_perf`'s ablation
-    /// row; `compute` is the shipped path.
-    pub fn compute_hashset(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
+    /// Ablation cross-check for §Perf: per-port `HashSet` accumulation
+    /// (the obvious first implementation). Demoted from the public
+    /// surface with [`CongestionReport::compute_sortdedup`]; the bitmap
+    /// kernel is the one shipped path.
+    #[cfg(test)]
+    fn compute_hashset(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
         use std::collections::HashSet;
         let np = topo.num_ports();
         let mut per_port = vec![PortStats::default(); np];
@@ -151,37 +198,14 @@ impl CongestionReport {
         router: &dyn crate::routing::Router,
         flows: &[(u32, u32)],
     ) -> CongestionReport {
-        let np = topo.num_ports();
-        let words = (topo.num_nodes() + 63) / 64;
-        let mut per_port = vec![PortStats::default(); np];
-        let mut src_bits = vec![0u64; np * words];
-        let mut dst_bits = vec![0u64; np * words];
+        let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
         let mut ports: Vec<PortId> = Vec::with_capacity(2 * topo.spec.h);
         for &(src, dst) in flows {
             ports.clear();
             crate::routing::trace::trace_route_into(topo, router, src, dst, &mut ports);
-            let (sw, sb) = ((src / 64) as usize, src % 64);
-            let (dw, db) = ((dst / 64) as usize, dst % 64);
-            for &p in &ports {
-                per_port[p].routes += 1;
-                src_bits[p * words + sw] |= 1u64 << sb;
-                dst_bits[p * words + dw] |= 1u64 << db;
-            }
+            acc.add(src, dst, &ports);
         }
-        for (p, st) in per_port.iter_mut().enumerate() {
-            if st.routes == 0 {
-                continue;
-            }
-            st.srcs = src_bits[p * words..(p + 1) * words]
-                .iter()
-                .map(|w| w.count_ones())
-                .sum();
-            st.dsts = dst_bits[p * words..(p + 1) * words]
-                .iter()
-                .map(|w| w.count_ones())
-                .sum();
-        }
-        CongestionReport { per_port }
+        acc.finish()
     }
 
     /// `C_p` for one port.
@@ -349,6 +373,9 @@ mod tests {
 
     #[test]
     fn ablation_and_fused_paths_agree() {
+        // The demoted kernels (`compute_hashset`, `compute_sortdedup`)
+        // live on exactly here: as cross-checks of the one canonical
+        // bitmap kernel, alongside its fused and FlowSet entry points.
         let topo = build_pgft(&PgftSpec::case_study());
         let types = Placement::paper_io().apply(&topo).unwrap();
         for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gsmodk, AlgorithmKind::Random] {
@@ -357,10 +384,15 @@ mod tests {
             let routes = trace_flows(&topo, &*r, &flows);
             let a = CongestionReport::compute(&topo, &routes);
             let b = CongestionReport::compute_hashset(&topo, &routes);
+            let s = CongestionReport::compute_sortdedup(&topo, &routes);
             let c = CongestionReport::compute_flows(&topo, &*r, &flows);
+            let set = crate::eval::FlowSet::trace(&topo, &*r, &flows);
+            let d = CongestionReport::compute_flowset(&topo, &set);
             for p in 0..topo.num_ports() {
                 assert_eq!(a.per_port[p], b.per_port[p], "{kind} port {p} (hashset)");
+                assert_eq!(a.per_port[p], s.per_port[p], "{kind} port {p} (sort-dedup)");
                 assert_eq!(a.per_port[p], c.per_port[p], "{kind} port {p} (fused)");
+                assert_eq!(a.per_port[p], d.per_port[p], "{kind} port {p} (flowset)");
             }
         }
     }

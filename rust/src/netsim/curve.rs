@@ -3,8 +3,8 @@
 //! literature, and the `pgft netsim` CLI's output shape.
 
 use super::{run_netsim, NetsimConfig, NetsimReport};
+use crate::eval::FlowSet;
 use crate::report::Table;
-use crate::routing::trace::RoutePorts;
 use crate::topology::Topology;
 use anyhow::{ensure, Result};
 
@@ -19,12 +19,13 @@ pub struct CurvePoint {
     pub report: NetsimReport,
 }
 
-/// Run the whole injection-rate grid over one route set. The offered
-/// loads must be ascending (the curve reads left to right); every run
-/// re-seeds identically, so the curve is deterministic point-wise.
+/// Run the whole injection-rate grid over one traced route store. The
+/// offered loads must be ascending (the curve reads left to right);
+/// every run re-seeds identically, so the curve is deterministic
+/// point-wise.
 pub fn load_curve(
     topo: &Topology,
-    routes: &[RoutePorts],
+    flows: &FlowSet,
     cfg: &NetsimConfig,
     rates: &[f64],
 ) -> Result<Vec<NetsimReport>> {
@@ -33,7 +34,7 @@ pub fn load_curve(
         rates.windows(2).all(|w| w[0] < w[1]),
         "netsim: injection rates must be strictly ascending: {rates:?}"
     );
-    rates.iter().map(|&r| run_netsim(topo, routes, cfg, r)).collect()
+    rates.iter().map(|&r| run_netsim(topo, flows, cfg, r)).collect()
 }
 
 /// The default injection-rate grid: 0.05 to 1.0 in 0.05 steps.
@@ -104,17 +105,16 @@ mod tests {
     use super::*;
     use crate::nodes::Placement;
     use crate::patterns::Pattern;
-    use crate::routing::trace::trace_flows;
     use crate::routing::AlgorithmKind;
     use crate::topology::{build_pgft, PgftSpec};
 
-    fn setup(kind: AlgorithmKind) -> (Topology, Vec<RoutePorts>) {
+    fn setup(kind: AlgorithmKind) -> (Topology, FlowSet) {
         let topo = build_pgft(&PgftSpec::case_study());
         let types = Placement::paper_io().apply(&topo).unwrap();
         let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
         let router = kind.build(&topo, Some(&types), 1);
-        let routes = trace_flows(&topo, &*router, &flows);
-        (topo, routes)
+        let set = FlowSet::trace(&topo, &*router, &flows);
+        (topo, set)
     }
 
     fn cfg() -> NetsimConfig {

@@ -32,7 +32,7 @@
 use super::event::{Calendar, Event};
 use super::inject::draw_gap;
 use super::{NetsimConfig, NetsimReport, SATURATION_FRACTION};
-use crate::routing::trace::RoutePorts;
+use crate::eval::FlowSet;
 use crate::util::rng::Xoshiro256;
 use std::collections::VecDeque;
 
@@ -54,9 +54,9 @@ struct Packet {
     delivered: u32,
 }
 
-/// Mutable simulation state over borrowed routes.
+/// Mutable simulation state over a borrowed route store.
 pub(crate) struct Engine<'a> {
-    routes: &'a [RoutePorts],
+    flows: &'a FlowSet,
     rate: f64,
     // Config (copied out for borrow-friendly field access).
     packet_flits: u32,
@@ -89,16 +89,16 @@ pub(crate) struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    /// Set up a run of `routes` at offered load `rate` (flits per cycle
-    /// per flow). The caller validated `cfg` and `rate`.
+    /// Set up a run of the route store at offered load `rate` (flits
+    /// per cycle per flow). The caller validated `cfg` and `rate`.
     pub(crate) fn new(
         num_ports: usize,
-        routes: &'a [RoutePorts],
+        flows: &'a FlowSet,
         cfg: &NetsimConfig,
         rate: f64,
     ) -> Engine<'a> {
         let vcs = cfg.vcs as usize;
-        let nf = routes.len();
+        let nf = flows.len();
         let horizon = cfg.warmup + cfg.measure + cfg.drain;
         let rngs = (0..nf)
             .map(|f| {
@@ -108,7 +108,7 @@ impl<'a> Engine<'a> {
             })
             .collect();
         Engine {
-            routes,
+            flows,
             rate,
             packet_flits: cfg.packet_flits,
             vcs,
@@ -141,8 +141,8 @@ impl<'a> Engine<'a> {
         let end = self.warmup + self.measure + self.drain;
         // Seed the first arrival of every active flow (gap ≥ 1, so the
         // calendar cursor invariant holds from cycle 0).
-        for f in 0..self.routes.len() {
-            if self.routes[f].ports.is_empty() {
+        for f in 0..self.flows.len() {
+            if self.flows.route(f).is_empty() {
                 continue; // self-flow: nothing to simulate
             }
             let gap = draw_gap(&mut self.rngs[f], self.p_event);
@@ -204,7 +204,7 @@ impl<'a> Engine<'a> {
             None => return,
         };
         let vc = self.packets[pid as usize].vc as usize;
-        let p0 = self.routes[flow].ports[0];
+        let p0 = self.flows.route(flow)[0];
         let qi = p0 * self.vcs + vc;
         if self.credits[qi] > 0 {
             self.credits[qi] -= 1;
@@ -242,9 +242,10 @@ impl<'a> Engine<'a> {
                 None => continue,
             };
             let flow = self.packets[head.packet as usize].flow as usize;
+            let route = self.flows.route(flow);
             let nh = head.hop as usize + 1;
-            if nh < self.routes[flow].ports.len() {
-                let q = self.routes[flow].ports[nh];
+            if nh < route.len() {
+                let q = route[nh];
                 if self.credits[q * vcs + vc] == 0 {
                     continue; // blocked on downstream credit
                 }
@@ -257,9 +258,10 @@ impl<'a> Engine<'a> {
             let flit = self.queues[base + vc].pop_front().expect("chosen VC has a head flit");
             self.credits[base + vc] += 1; // our slot frees as the flit leaves
             let flow = self.packets[flit.packet as usize].flow as usize;
+            let route = self.flows.route(flow);
             let nh = flit.hop as usize + 1;
-            if nh < self.routes[flow].ports.len() {
-                let q = self.routes[flow].ports[nh];
+            if nh < route.len() {
+                let q = route[nh];
                 self.credits[q * vcs + vc] -= 1; // reserve downstream slot
                 self.cal.schedule(
                     t + self.link_latency,
@@ -297,7 +299,7 @@ impl<'a> Engine<'a> {
 
     /// Summarize the run.
     fn finish(self) -> NetsimReport {
-        let active = self.routes.iter().filter(|r| !r.ports.is_empty()).count();
+        let active = self.flows.num_active();
         let offered_aggregate = self.rate * active as f64;
         let measure = self.measure as f64;
         let accepted = self.accepted_flits as f64 / measure;

@@ -29,14 +29,15 @@
 //!
 //! ```
 //! use pgft::prelude::*;
+//! use pgft::eval::FlowSet;
 //! use pgft::netsim::{run_netsim, NetsimConfig};
 //! let topo = build_pgft(&PgftSpec::case_study());
 //! let types = Placement::paper_io().apply(&topo).unwrap();
 //! let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
 //! let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
-//! let routes = trace_flows(&topo, &*router, &flows);
+//! let set = FlowSet::trace(&topo, &*router, &flows);
 //! let cfg = NetsimConfig { warmup: 200, measure: 1000, drain: 200, ..Default::default() };
-//! let rep = run_netsim(&topo, &routes, &cfg, 0.05).unwrap();
+//! let rep = run_netsim(&topo, &set, &cfg, 0.05).unwrap();
 //! assert!(!rep.saturated, "gdmodk is stable well below its 1/7 fair rate");
 //! ```
 
@@ -48,7 +49,7 @@ pub mod inject;
 pub use curve::{curve_table, default_rates, load_curve, saturation_point, CurvePoint, Saturation};
 pub use inject::Injection;
 
-use crate::routing::trace::RoutePorts;
+use crate::eval::FlowSet;
 use crate::topology::Topology;
 use anyhow::{ensure, Result};
 
@@ -142,12 +143,13 @@ pub struct NetsimReport {
     pub saturated: bool,
 }
 
-/// Run one flit-level simulation of `routes` on `topo` at offered load
-/// `rate` (flits per cycle per flow, in `(0, 1]`). Deterministic in
-/// `(routes, cfg, rate)`.
+/// Run one flit-level simulation of a traced route store on `topo` at
+/// offered load `rate` (flits per cycle per flow, in `(0, 1]`).
+/// Deterministic in `(flows, cfg, rate)`. The store is borrowed — the
+/// same [`FlowSet`] a sweep cell's other evaluators read.
 pub fn run_netsim(
     topo: &Topology,
-    routes: &[RoutePorts],
+    flows: &FlowSet,
     cfg: &NetsimConfig,
     rate: f64,
 ) -> Result<NetsimReport> {
@@ -156,11 +158,8 @@ pub fn run_netsim(
         rate > 0.0 && rate <= 1.0,
         "netsim: offered load {rate} outside (0, 1] flits/cycle/flow"
     );
-    ensure!(
-        routes.iter().any(|r| !r.ports.is_empty()),
-        "netsim: no active flows to simulate"
-    );
-    Ok(engine::Engine::new(topo.num_ports(), routes, cfg, rate).run())
+    ensure!(flows.num_active() > 0, "netsim: no active flows to simulate");
+    Ok(engine::Engine::new(topo.num_ports(), flows, cfg, rate).run())
 }
 
 #[cfg(test)]
@@ -168,17 +167,16 @@ mod tests {
     use super::*;
     use crate::nodes::Placement;
     use crate::patterns::Pattern;
-    use crate::routing::trace::trace_flows;
     use crate::routing::AlgorithmKind;
     use crate::topology::{build_pgft, PgftSpec};
 
-    fn routes(kind: AlgorithmKind) -> (Topology, Vec<RoutePorts>) {
+    fn routes(kind: AlgorithmKind) -> (Topology, FlowSet) {
         let topo = build_pgft(&PgftSpec::case_study());
         let types = Placement::paper_io().apply(&topo).unwrap();
         let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
         let router = kind.build(&topo, Some(&types), 1);
-        let routes = trace_flows(&topo, &*router, &flows);
-        (topo, routes)
+        let set = FlowSet::trace(&topo, &*router, &flows);
+        (topo, set)
     }
 
     fn small_cfg() -> NetsimConfig {
@@ -252,7 +250,8 @@ mod tests {
         cfg.link_latency = 0;
         assert!(run_netsim(&topo, &routes, &cfg, 0.5).is_err());
         // All-self-flow route sets cannot be simulated.
-        let self_routes = vec![RoutePorts { src: 0, dst: 0, ports: vec![] }];
+        let router = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        let self_routes = FlowSet::trace(&topo, &*router, &[(0, 0)]);
         assert!(run_netsim(&topo, &self_routes, &small_cfg(), 0.5).is_err());
     }
 }

@@ -23,21 +23,38 @@ impl IncidenceMatrix {
     /// Build the dense matrix from traced routes, compressing columns to
     /// the ports the routes actually use.
     pub fn from_routes(topo: &Topology, routes: &[RoutePorts]) -> IncidenceMatrix {
+        Self::from_port_rows(topo, routes.len(), |f| &routes[f].ports)
+    }
+
+    /// Build from an arena-backed [`crate::eval::FlowSet`] — the
+    /// eval-layer entry point ([`crate::eval::FairRateEval`]); same
+    /// matrix as [`IncidenceMatrix::from_routes`] on the equivalent
+    /// route set, with no per-route allocation on the input side.
+    pub fn from_flowset(topo: &Topology, flows: &crate::eval::FlowSet) -> IncidenceMatrix {
+        Self::from_port_rows(topo, flows.len(), |f| flows.route(f))
+    }
+
+    /// Shared two-pass builder over any row accessor: map used ports to
+    /// columns, then fill the dense 0/1 matrix.
+    fn from_port_rows<'a>(
+        topo: &Topology,
+        flows: usize,
+        row: impl Fn(usize) -> &'a [PortId],
+    ) -> IncidenceMatrix {
         let mut col_of = vec![usize::MAX; topo.num_ports()];
         let mut used_ports = Vec::new();
-        for r in routes {
-            for &p in &r.ports {
+        for f in 0..flows {
+            for &p in row(f) {
                 if col_of[p] == usize::MAX {
                     col_of[p] = used_ports.len();
                     used_ports.push(p);
                 }
             }
         }
-        let flows = routes.len();
         let ports = used_ports.len();
         let mut dense = vec![0f32; flows * ports];
-        for (f, r) in routes.iter().enumerate() {
-            for &p in &r.ports {
+        for f in 0..flows {
+            for &p in row(f) {
                 dense[f * ports + col_of[p]] = 1.0;
             }
         }
@@ -118,6 +135,21 @@ mod tests {
         for p in 0..topo.num_ports() {
             assert_eq!(inc.col_of_port(p).is_some(), used.contains(&p));
         }
+    }
+
+    #[test]
+    fn flowset_and_routes_builders_agree() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = crate::nodes::Placement::paper_io().apply(&topo).unwrap();
+        let flows = Pattern::C2ioAll.flows(&topo, &types).unwrap();
+        let r = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 0);
+        let routes = trace_flows(&topo, &*r, &flows);
+        let set = crate::eval::FlowSet::trace(&topo, &*r, &flows);
+        let a = IncidenceMatrix::from_routes(&topo, &routes);
+        let b = IncidenceMatrix::from_flowset(&topo, &set);
+        assert_eq!(a.num_flows(), b.num_flows());
+        assert_eq!(a.num_ports(), b.num_ports());
+        assert_eq!(a.dense(), b.dense(), "identical column order and entries");
     }
 
     #[test]

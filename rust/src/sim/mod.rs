@@ -27,7 +27,6 @@ pub use packet::{PacketSim, PacketSimConfig, PacketSimResult};
 use crate::metrics::CongestionReport;
 use crate::nodes::NodeTypeMap;
 use crate::patterns::Pattern;
-use crate::routing::trace::trace_flows;
 use crate::routing::AlgorithmKind;
 use crate::topology::Topology;
 use anyhow::Result;
@@ -55,13 +54,14 @@ pub struct SimReport {
     pub solver: String,
 }
 
-/// Max-min fair rates of a traced route set on unit-capacity links (the
-/// deterministic pure-rust solver). The shared entry point for sweep
-/// cells and the fault subsystem's throughput-retention figures: both
-/// the pristine and the degraded route sets go through this one
-/// function, so retention ratios compare like with like.
-pub fn fair_rates(topo: &Topology, routes: &[crate::routing::trace::RoutePorts]) -> Vec<f64> {
-    let inc = IncidenceMatrix::from_routes(topo, routes);
+/// Max-min fair rates of a traced [`crate::eval::FlowSet`] on
+/// unit-capacity links (the deterministic pure-rust solver). The shared
+/// entry point for [`crate::eval::FairRateEval`], sweep cells and the
+/// fault subsystem's throughput-retention figures: both the pristine
+/// and the degraded route stores go through this one function, so
+/// retention ratios compare like with like.
+pub fn fair_rates(topo: &Topology, flows: &crate::eval::FlowSet) -> Vec<f64> {
+    let inc = IncidenceMatrix::from_flowset(topo, flows);
     let cap = vec![1.0f64; inc.num_ports()];
     solve_fairrate_exact(&inc, &cap)
 }
@@ -79,8 +79,9 @@ pub fn simulate_flow_level(
 ) -> Result<SimReport> {
     let router = kind.build(topo, Some(types), seed);
     let flows = pattern.flows(topo, types)?;
-    let routes = trace_flows(topo, &*router, &flows);
-    let inc = IncidenceMatrix::from_routes(topo, &routes);
+    // One arena-backed trace, shared by the solver and the metric.
+    let set = crate::eval::FlowSet::trace(topo, &*router, &flows);
+    let inc = IncidenceMatrix::from_flowset(topo, &set);
     let cap = vec![1.0f32; inc.num_ports()];
 
     // Use the XLA artifact when one fits the problem shape; otherwise
@@ -101,7 +102,7 @@ pub fn simulate_flow_level(
         }
     };
 
-    let rep = CongestionReport::compute(topo, &routes);
+    let rep = CongestionReport::compute_flowset(topo, &set);
     let sum: f64 = rates.iter().sum();
     let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
     Ok(SimReport {

@@ -4,36 +4,11 @@ use crate::metrics::AlgoSummary;
 use crate::report::Table;
 use anyhow::{ensure, Context, Result};
 
-/// Flow-level max-min throughput figures of one cell (present when the
-/// spec requested `simulate`). Computed with the deterministic pure-rust
-/// solver so parallel and serial sweeps agree bit-for-bit.
-#[derive(Clone, Debug, PartialEq)]
-pub struct SweepSim {
-    /// Sum of max-min fair rates over all flows (links have capacity 1).
-    pub aggregate_throughput: f64,
-    /// Worst flow rate — the pattern's completion is bound by it.
-    pub min_rate: f64,
-    /// Time to deliver one unit of data per flow: `1 / min_rate`.
-    pub completion_time: f64,
-}
-
-/// Flit-level simulation figures of one cell (present when the spec's
-/// `netsim` axis is non-empty). See [`crate::netsim`].
-#[derive(Clone, Debug, PartialEq)]
-pub struct NetsimStats {
-    /// Offered load per flow (flits/cycle) — the swept injection rate.
-    pub offered: f64,
-    /// Accepted aggregate throughput (flits/cycle, measurement window).
-    pub accepted: f64,
-    /// Mean packet latency in cycles (packets injected in the window).
-    pub mean_latency: f64,
-    /// 99th-percentile packet latency in cycles.
-    pub p99_latency: f64,
-    /// Whether the cell ran past its saturation point
-    /// (accepted < [`crate::netsim::SATURATION_FRACTION`] × offered
-    /// aggregate).
-    pub saturated: bool,
-}
+// The per-cell figure structs moved into the unified eval layer
+// (`crate::eval`), where the evaluators that produce them live; the
+// sweep surface re-exports them under their historical names so rows,
+// CSV columns and callers are unchanged.
+pub use crate::eval::{FairRateStats as SweepSim, NetsimStats};
 
 /// One cell of an executed sweep: the grid coordinates plus the static
 /// congestion summary, fault-scenario figures and optional throughput.

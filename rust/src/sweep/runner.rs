@@ -3,14 +3,14 @@
 
 use super::result::{NetsimStats, SweepResult, SweepSim};
 use super::spec::SweepSpec;
+use crate::eval::{
+    evaluate_all, CongestionEval, Evaluator, FairRateEval, FlowSet, NetsimEval,
+};
 use crate::faults::{DegradedRouter, FaultModel};
-use crate::metrics::{AlgoSummary, CongestionReport};
-use crate::netsim::{run_netsim, NetsimConfig};
+use crate::metrics::AlgoSummary;
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
-use crate::routing::trace::{trace_flows, RoutePorts};
 use crate::routing::AlgorithmKind;
-use crate::sim::fair_rates;
 use crate::topology::{families, Topology};
 use crate::util::par;
 use anyhow::Result;
@@ -66,11 +66,20 @@ type JobKey = (usize, AlgorithmKind, usize, usize, usize, u64);
 /// [`par::par_map`] call, so topology/placement-heavy grids parallelize
 /// as well as pattern/algorithm-heavy ones.
 ///
-/// Fault cells route through [`DegradedRouter`] and additionally report
-/// the rerouting cost (`routes_changed` vs. the pristine trace of the
-/// same cell) and — with `simulate` — fair-rate throughput retention.
-/// A scenario that partitions the fabric yields an *unroutable* row
-/// (zeroed metrics, `routable = false`) instead of failing the grid.
+/// Every cell traces its flows **once** into an arena-backed
+/// [`FlowSet`] and scores it through the uniform
+/// [`crate::eval::Evaluator`] stack (congestion always; fair-rate with
+/// `simulate`; flit-level per netsim axis entry), so no evaluator ever
+/// re-traces or re-allocates the routes.
+///
+/// Fault cells route through [`DegradedRouter`] — repairing the
+/// pristine store with [`FlowSet::retrace_incremental`], which
+/// re-traces only the flows a dead link actually touched — and
+/// additionally report the rerouting cost (`routes_changed` vs. the
+/// pristine trace of the same cell) and — with `simulate` — fair-rate
+/// throughput retention. A scenario that partitions the fabric yields
+/// an *unroutable* row (zeroed metrics, `routable = false`) instead of
+/// failing the grid.
 pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResult>> {
     spec.validate()?;
 
@@ -208,33 +217,21 @@ struct Cell {
     netsim: Option<NetsimStats>,
 }
 
-fn sim_from_rates(rates: &[f64]) -> SweepSim {
-    let sum: f64 = rates.iter().sum();
-    let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
-    SweepSim { aggregate_throughput: sum, min_rate: min, completion_time: 1.0 / min }
-}
-
-/// Run the flit-level simulator on one cell's routes at one offered
-/// load (the cell seed drives the injection streams). A cell with no
-/// simulatable flow (all self-flows) yields empty netsim columns
-/// rather than failing the grid.
-fn netsim_stats(
-    topo: &Topology,
-    routes: &[RoutePorts],
-    seed: u64,
-    rate: f64,
-) -> Option<NetsimStats> {
-    let cfg = NetsimConfig { seed, ..Default::default() };
-    match run_netsim(topo, routes, &cfg, rate) {
-        Ok(r) => Some(NetsimStats {
-            offered: r.offered,
-            accepted: r.accepted,
-            mean_latency: r.mean_latency,
-            p99_latency: r.p99_latency,
-            saturated: r.saturated,
-        }),
-        Err(_) => None,
+/// The evaluator stack of one cell, selected uniformly through
+/// [`crate::eval::Evaluator`]: the static congestion metric always
+/// runs; `simulate` adds the fair-rate engine; a netsim axis entry
+/// adds the flit-level engine at that offered load (which swallows
+/// unsimulatable route sets into empty columns — grid cells degrade,
+/// they don't fail).
+fn cell_evaluators(spec: &SweepSpec, netsim_rate: Option<f64>) -> Vec<Box<dyn Evaluator>> {
+    let mut evs: Vec<Box<dyn Evaluator>> = vec![Box::new(CongestionEval)];
+    if spec.simulate {
+        evs.push(Box::new(FairRateEval));
     }
+    if let Some(rate) = netsim_rate {
+        evs.push(Box::new(NetsimEval::at(rate)));
+    }
+    evs
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -250,54 +247,36 @@ fn compute_cell(
     seed: u64,
 ) -> Cell {
     let router = algo.build(topo, Some(types), seed);
+    let evaluators = cell_evaluators(spec, netsim_rate);
     if fault_model.is_none() {
-        // Pristine cell: identical to the pre-fault engine.
-        if spec.simulate || netsim_rate.is_some() {
-            // Simulation needs the materialized routes; reuse them for
-            // the metric instead of re-tracing.
-            let routes = trace_flows(topo, &*router, flows);
-            let rep = CongestionReport::compute(topo, &routes);
-            let sim = spec.simulate.then(|| sim_from_rates(&fair_rates(topo, &routes)));
-            let netsim = netsim_rate.and_then(|rate| netsim_stats(topo, &routes, seed, rate));
-            Cell {
-                summary: AlgoSummary::from_report(
-                    topo,
-                    &rep,
-                    algo.as_str(),
-                    &pattern.name(),
-                    flows.len(),
-                ),
-                dead_links: 0,
-                routes_changed: 0,
-                routable: true,
-                sim,
-                retention: None,
-                netsim,
-            }
-        } else {
-            // Metric-only cell: the fused trace+metric path avoids
-            // materializing routes entirely (§Perf iteration 4).
-            let rep = CongestionReport::compute_flows(topo, &*router, flows);
-            Cell {
-                summary: AlgoSummary::from_report(
-                    topo,
-                    &rep,
-                    algo.as_str(),
-                    &pattern.name(),
-                    flows.len(),
-                ),
-                dead_links: 0,
-                routes_changed: 0,
-                routable: true,
-                sim: None,
-                retention: None,
-                netsim: None,
-            }
+        // Pristine cell: one arena-backed trace, scored by the whole
+        // stack. (Metric-only cells could shave the arena with the
+        // fused `compute_flows` path, but the store is pattern-sized —
+        // a few KiB for the paper grids — and the uniform eval seam is
+        // the point; `compute_flows` stays for true Monte-Carlo hot
+        // loops like `pgft random-dist`.)
+        let pristine = FlowSet::trace(topo, &*router, flows);
+        let cells = evaluate_all(&evaluators, topo, &pristine, seed);
+        let rep = cells.congestion.as_ref().expect("CongestionEval always runs");
+        Cell {
+            summary: AlgoSummary::from_report(
+                topo,
+                rep,
+                algo.as_str(),
+                &pattern.name(),
+                flows.len(),
+            ),
+            dead_links: 0,
+            routes_changed: 0,
+            routable: true,
+            sim: cells.fairrate,
+            retention: None,
+            netsim: cells.netsim,
         }
     } else {
         // Fault cell: expand the scenario deterministically from the
-        // cell seed, reroute with the degraded wrapper, and report the
-        // rerouting cost against the pristine trace of the same cell.
+        // cell seed, repair the pristine store incrementally with the
+        // degraded wrapper, and report the rerouting cost.
         let scenario = fault_model.generate(topo, seed);
         let faults = scenario.fault_set(topo);
         let dead_links = faults.num_dead();
@@ -329,37 +308,40 @@ fn compute_cell(
                 };
             }
         };
-        // The pristine trace is recomputed per fault cell rather than
-        // shared with the cell's `none` job: sharing would thread a
-        // cross-job dependency through the fan-out for a cost that is at
-        // most 2x on fault cells (trace + one extra fair-rate solve).
-        // Revisit if fault grids dominate sweep wall-clock.
-        let pristine = trace_flows(topo, &*router, flows);
-        let rerouted = trace_flows(topo, &degraded, flows);
-        let routes_changed = pristine
-            .iter()
-            .zip(&rerouted)
-            .filter(|(a, b)| a.ports != b.ports)
-            .count();
-        let rep = CongestionReport::compute(topo, &rerouted);
-        let (sim, retention) = if spec.simulate {
-            let degraded_rates = fair_rates(topo, &rerouted);
-            let pristine_rates = fair_rates(topo, &pristine);
-            let sim = sim_from_rates(&degraded_rates);
-            let pristine_agg: f64 = pristine_rates.iter().sum();
-            let retention =
-                if pristine_agg > 0.0 { sim.aggregate_throughput / pristine_agg } else { 1.0 };
-            (Some(sim), Some(retention))
-        } else {
-            (None, None)
-        };
-        // Fault cells simulate the *rerouted* tables, so the netsim
+        // The pristine trace happens only after the routability check,
+        // so partitioned cells (early return above) never pay for it.
+        let pristine = FlowSet::trace(topo, &*router, flows);
+        // Incremental repair: only flows whose pristine route crosses a
+        // dead link are re-traced (byte-identical to a full re-trace —
+        // the FlowSet invariant pinned by tests/eval_agreement.rs).
+        let (rerouted, routes_changed) = pristine.retrace_incremental(topo, &faults, &degraded);
+        debug_assert_eq!(
+            routes_changed,
+            pristine.diff_count(&rerouted),
+            "routes_changed must equal the incremental diff"
+        );
+        // Fault cells evaluate the *rerouted* store, so the netsim
         // columns quantify degraded-fabric latency/throughput directly.
-        let netsim = netsim_rate.and_then(|rate| netsim_stats(topo, &rerouted, seed, rate));
+        let cells = evaluate_all(&evaluators, topo, &rerouted, seed);
+        let rep = cells.congestion.as_ref().expect("CongestionEval always runs");
+        let retention = cells.fairrate.as_ref().map(|sim| {
+            // Retention compares the degraded aggregate against the
+            // same engine's score of the pristine store.
+            let pristine_agg = FairRateEval
+                .evaluate(topo, &pristine, seed)
+                .fairrate
+                .expect("FairRateEval fills its cells")
+                .aggregate_throughput;
+            if pristine_agg > 0.0 {
+                sim.aggregate_throughput / pristine_agg
+            } else {
+                1.0
+            }
+        });
         Cell {
             summary: AlgoSummary::from_report(
                 topo,
-                &rep,
+                rep,
                 algo.as_str(),
                 &pattern.name(),
                 flows.len(),
@@ -367,9 +349,9 @@ fn compute_cell(
             dead_links,
             routes_changed,
             routable: true,
-            sim,
+            sim: cells.fairrate,
             retention,
-            netsim,
+            netsim: cells.netsim,
         }
     }
 }

@@ -1,0 +1,235 @@
+//! The eval-layer acceptance harness: the refactor onto the
+//! arena-backed [`FlowSet`] and the [`pgft::eval::Evaluator`] trait
+//! must be *observationally invisible*.
+//!
+//!  1. **Evaluator ↔ pre-refactor agreement** — on randomized
+//!     spec × placement × algorithm cases, every shipped evaluator
+//!     reproduces the path it replaced: `CongestionEval` is
+//!     byte-identical to `CongestionReport::compute` over
+//!     `trace_flows` routes (per-port `C_p` included), `FairRateEval`
+//!     is bit-exact against `solve_fairrate_exact` over
+//!     `IncidenceMatrix::from_routes`, and the `FlowSet` arena stores
+//!     exactly the bytes the legacy `Vec<RoutePorts>` surface traced.
+//!  2. **Netsim low-load parity** — `NetsimEval` through the shared
+//!     store still matches the fair-rate oracle below saturation for
+//!     all six algorithms, and a store imported from the legacy
+//!     surface simulates bit-identically to a directly traced one.
+//!  3. **Incremental ≡ full re-trace** — across 50 randomized fault
+//!     scenarios × 6 algorithms, `FlowSet::retrace_incremental`
+//!     produces a store byte-identical to a full re-trace with the
+//!     same degraded router, and its `routes_changed` equals both the
+//!     route diff and the dirty-flow count.
+//!  4. The committed `BENCH_eval.json` perf record is well-formed and
+//!     shows incremental re-trace beating a full re-trace on
+//!     single-link fault cells.
+
+mod common;
+
+use common::{random_fault_model, random_placement, random_spec};
+use pgft::eval::{CongestionEval, Evaluator, FairRateEval, NetsimEval};
+use pgft::metrics::CongestionReport;
+use pgft::netsim::NetsimConfig;
+use pgft::prelude::*;
+use pgft::routing::verify::all_pairs;
+use pgft::sim::{solve_fairrate_exact, IncidenceMatrix};
+use pgft::util::prop::Prop;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The ISSUE's acceptance budget for the retrace identity.
+const RETRACE_CASES: u32 = 50;
+
+#[test]
+fn prop_evaluators_agree_with_pre_refactor_paths() {
+    Prop::new("eval-agreement").cases(25).run(|g| {
+        let spec = random_spec(g);
+        let topo = build_pgft(&spec);
+        let n = topo.num_nodes() as u32;
+        let types = Placement::parse(&random_placement(g, n))
+            .unwrap()
+            .apply(&topo)
+            .unwrap();
+        let seed = g.int_in(0, 1 << 16) as u64;
+        let kind = *g.choose(&AlgorithmKind::ALL);
+        let flows = all_pairs(n);
+        let router = kind.build(&topo, Some(&types), seed);
+
+        // The store holds exactly what the legacy surface traced.
+        let set = FlowSet::trace(&topo, &*router, &flows);
+        let routes = trace_flows(&topo, &*router, &flows);
+        assert_eq!(set.to_routes(), routes, "{kind} on {spec}: arena bytes diverge");
+        assert_eq!(FlowSet::from_routes(&routes), set, "{kind} on {spec}: import diverges");
+
+        // CongestionEval ≡ the pre-refactor metric, per port.
+        let cells = CongestionEval.evaluate(&topo, &set, seed);
+        let reference = CongestionReport::compute(&topo, &routes);
+        assert_eq!(
+            cells.congestion.unwrap().per_port,
+            reference.per_port,
+            "{kind} on {spec}: C_p must be byte-identical"
+        );
+
+        // FairRateEval ≡ the pre-refactor solver path, bit for bit.
+        let fair = FairRateEval.evaluate(&topo, &set, seed).fairrate.unwrap();
+        let inc = IncidenceMatrix::from_routes(&topo, &routes);
+        let rates = solve_fairrate_exact(&inc, &vec![1.0; inc.num_ports()]);
+        let agg: f64 = rates.iter().sum();
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(fair.aggregate_throughput, agg, "{kind} on {spec}");
+        assert_eq!(fair.min_rate, min, "{kind} on {spec}");
+    });
+}
+
+#[test]
+fn netsim_eval_keeps_low_load_parity_with_the_fairrate_oracle() {
+    // Deterministic half of the netsim agreement: for all six
+    // algorithms on the paper's case study, the flit-level evaluator
+    // over the shared store accepts what it is offered below every
+    // fair-rate floor (0.02 < 1/28), exactly like the pre-refactor
+    // engine over `Vec<RoutePorts>` did.
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+    let ev = NetsimEval {
+        config: NetsimConfig { warmup: 200, measure: 1200, drain: 200, ..Default::default() },
+        rate: 0.02,
+    };
+    for kind in AlgorithmKind::ALL {
+        let router = kind.build(&topo, Some(&types), 1);
+        let set = FlowSet::trace(&topo, &*router, &flows);
+        let fair_min = pgft::sim::fair_rates(&topo, &set)
+            .into_iter()
+            .fold(f64::INFINITY, f64::min);
+        assert!(fair_min > 0.02, "{kind}: premise — offered below the fair floor");
+        let ns = ev.evaluate(&topo, &set, 1).netsim.unwrap();
+        let ratio = ns.accepted / (0.02 * set.num_active() as f64);
+        assert!(
+            ratio > 0.75 && ratio < 1.25,
+            "{kind}: low-load accepted/offered = {ratio:.3} disagrees with the oracle"
+        );
+        // A store imported through the legacy surface simulates
+        // bit-identically — the representation cannot leak into results.
+        let imported = FlowSet::from_routes(&trace_flows(&topo, &*router, &flows));
+        assert_eq!(ev.evaluate(&topo, &imported, 1), ev.evaluate(&topo, &set, 1), "{kind}");
+    }
+}
+
+#[test]
+fn prop_incremental_retrace_is_byte_identical_to_full_retrace() {
+    let survivable = AtomicUsize::new(0);
+    Prop::new("incremental-retrace").cases(RETRACE_CASES).run(|g| {
+        let spec = random_spec(g);
+        let topo = build_pgft(&spec);
+        let n = topo.num_nodes() as u32;
+        let types = Placement::parse(&random_placement(g, n))
+            .unwrap()
+            .apply(&topo)
+            .unwrap();
+        let model_spec = random_fault_model(g, spec.h);
+        let model = FaultModel::parse(&model_spec).unwrap();
+        let seed = g.int_in(0, 1 << 16) as u64;
+        let faults = model.generate(&topo, seed).fault_set(&topo);
+        let flows = all_pairs(n);
+        for kind in AlgorithmKind::ALL {
+            let pristine = FlowSet::trace(&topo, &*kind.build(&topo, Some(&types), seed), &flows);
+            let degraded =
+                match DegradedRouter::new(&topo, &faults, kind.build(&topo, Some(&types), seed)) {
+                    Ok(d) => d,
+                    Err(_) => continue, // partitioned: nothing to retrace
+                };
+            let (incremental, changed) =
+                pristine.retrace_incremental(&topo, &faults, &degraded);
+            let full = FlowSet::trace(&topo, &degraded, &flows);
+            assert_eq!(
+                incremental, full,
+                "{kind} on {spec} ({model_spec}@{seed}): incremental ≠ full re-trace"
+            );
+            assert_eq!(
+                changed,
+                pristine.diff_count(&full),
+                "{kind} on {spec} ({model_spec}@{seed}): routes_changed ≠ route diff"
+            );
+            assert_eq!(
+                changed,
+                pristine.dirty_flows(&topo, &faults).len(),
+                "{kind} on {spec} ({model_spec}@{seed}): routes_changed ≠ dirty flows"
+            );
+            survivable.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    assert!(
+        survivable.load(Ordering::Relaxed) > 0,
+        "the generator never produced a survivable scenario"
+    );
+}
+
+#[test]
+fn sweep_fault_cells_match_the_incremental_diff() {
+    // The runner-level version of the same invariant (the satellite
+    // fix): a fault sweep's `routes_changed` equals the dirty-flow
+    // retrace cost, and zero-fault scenarios report zero.
+    let spec = SweepSpec {
+        topologies: vec!["case-study".into()],
+        placements: vec!["io:last:1".into()],
+        patterns: vec![Pattern::C2ioSym],
+        algorithms: vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk],
+        faults: vec!["none".into(), "links:0".into(), "stage:3:2".into()],
+        seeds: vec![1],
+        simulate: true,
+        netsim: Vec::new(),
+    };
+    let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+    for row in &rows {
+        if row.fault == "stage:3:2" {
+            assert!(row.routable);
+            assert_eq!(row.dead_links, 2);
+            // Recompute the dirty set independently.
+            let topo = build_pgft(&PgftSpec::case_study());
+            let types = Placement::paper_io().apply(&topo).unwrap();
+            let kind = AlgorithmKind::parse(&row.summary.algorithm).unwrap();
+            let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+            let pristine = FlowSet::trace(&topo, &*kind.build(&topo, Some(&types), 1), &flows);
+            let faults = FaultModel::parse("stage:3:2")
+                .unwrap()
+                .generate(&topo, 1)
+                .fault_set(&topo);
+            assert_eq!(
+                row.routes_changed,
+                pristine.dirty_flows(&topo, &faults).len(),
+                "{}",
+                row.summary.algorithm
+            );
+        } else {
+            assert_eq!(row.routes_changed, 0, "{}", row.fault);
+        }
+    }
+}
+
+#[test]
+fn committed_bench_eval_json_is_wellformed_and_shows_the_speedup() {
+    // `benches/bench_eval.rs` rewrites this file on every bench run
+    // (CI uploads it as the perf-trajectory artifact); the committed
+    // copy must parse and must already show incremental re-trace
+    // beating a full re-trace on a single-link fault cell.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_eval.json");
+    let body = std::fs::read_to_string(path).expect("BENCH_eval.json is committed");
+    for key in [
+        "\"schema\"",
+        "\"traces_per_sec\"",
+        "\"retrace\"",
+        "\"speedup\"",
+        "\"netsim_events_per_sec\"",
+        "\"dirty_flows\"",
+    ] {
+        assert!(body.contains(key), "BENCH_eval.json misses {key}: {body}");
+    }
+    let speedup: f64 = body
+        .split("\"speedup\":")
+        .nth(1)
+        .and_then(|s| s.split(|c| c == ',' || c == '}').next())
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or_else(|| panic!("unparsable speedup in {body}"));
+    assert!(
+        speedup > 1.0,
+        "incremental re-trace must beat full re-trace on a single-link fault (got {speedup}x)"
+    );
+}

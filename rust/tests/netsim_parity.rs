@@ -19,19 +19,18 @@
 
 use pgft::netsim::{run_netsim, NetsimConfig, NetsimReport};
 use pgft::prelude::*;
-use pgft::routing::trace::RoutePorts;
 use pgft::sim::fair_rates;
 
 fn cfg() -> NetsimConfig {
     NetsimConfig { warmup: 200, measure: 1600, drain: 200, ..Default::default() }
 }
 
-/// Traced C2IO case-study routes for one algorithm.
-fn case_routes(kind: AlgorithmKind, topo: &Topology) -> Vec<RoutePorts> {
+/// Traced C2IO case-study route store for one algorithm.
+fn case_routes(kind: AlgorithmKind, topo: &Topology) -> FlowSet {
     let types = Placement::paper_io().apply(topo).unwrap();
     let flows = Pattern::C2ioSym.flows(topo, &types).unwrap();
     let router = kind.build(topo, Some(&types), 1);
-    trace_flows(topo, &*router, &flows)
+    FlowSet::trace(topo, &*router, &flows)
 }
 
 struct AlgoFigures {
@@ -211,7 +210,7 @@ fn degraded_tables_simulate_end_to_end() {
     let scenario = FaultModel::parse("stage:3:2").unwrap().generate(&topo, 1);
     let faults = scenario.fault_set(&topo);
     let router = AlgorithmKind::Gdmodk.build_degraded(&topo, Some(&types), 1, &faults).unwrap();
-    let routes = trace_flows(&topo, &*router, &flows);
+    let routes = FlowSet::trace(&topo, &*router, &flows);
     let small = NetsimConfig { warmup: 150, measure: 600, drain: 150, ..Default::default() };
     let a = run_netsim(&topo, &routes, &small, 0.5).unwrap();
     let b = run_netsim(&topo, &routes, &small, 0.5).unwrap();
