@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         seeds: vec![1],
         simulate: false,
         netsim: Vec::new(),
+        workloads: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions::default())?;
     print!("{}", pgft::metrics::render_algorithm_table(&pgft::sweep::summaries(&rows)));

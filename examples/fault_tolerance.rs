@@ -107,6 +107,7 @@ fn main() -> anyhow::Result<()> {
         seeds: vec![1],
         simulate: true,
         netsim: Vec::new(),
+        workloads: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions::default())?;
     print!("{}", pgft::sweep::fault_table(&rows).to_text());

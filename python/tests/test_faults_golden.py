@@ -69,8 +69,9 @@ def test_schema_and_pinned_rows(csv_text):
             assert dead == "2"
         elif fault == "stage:3:4":
             assert dead == "4"
-        # No simulate/netsim requested: float columns stay empty.
-        assert r[17:] == [""] * 9
+        # No simulate/netsim/workload requested: the optional-axis
+        # columns stay empty.
+        assert r[17:] == [""] * 13
 
 
 def test_rng_matches_rust_reference_semantics():

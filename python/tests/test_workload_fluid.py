@@ -1,0 +1,30 @@
+"""The workload fluid-makespan figures pinned by the Rust suite must
+reproduce under the independent Python mirror.
+
+``python/tools/check_workload_fluid.py`` re-implements the fluid phase
+simulation of ``rust/src/workload/compile.rs`` over the routing ports in
+``gen_faults_golden.py`` and asserts the acceptance figures of
+``rust/tests/workload_model.rs``: gdmodk beats dmodk by > 2x on the
+built-in ``mix`` (measured ~2.91x), and single-phase checkpoint
+makespans are exactly 28672.0 (dmodk) / 7168.0 (gdmodk).
+"""
+
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.normpath(os.path.join(HERE, "..", "tools")))
+
+import check_workload_fluid as fluid  # noqa: E402
+
+
+def test_fluid_mirror_reproduces_rust_pins():
+    results = fluid.check()  # raises on any divergence
+    assert results["mix"]["ratio"] > 2.0
+    assert results["mix"]["phases"] == 63
+    assert results["single-c2io-sym-1024/dmodk"] == 28672.0
+    assert results["single-c2io-sym-1024/gdmodk"] == 7168.0
+
+
+def test_fluid_mirror_is_deterministic():
+    assert fluid.check() == fluid.check()

@@ -619,7 +619,12 @@ COLUMNS = [
     "hot_ports", "hot_per_level", "cmax_up", "cmax_down", "used_top", "total_top",
     "dead_links", "routes_changed", "routable", "agg_thru", "min_rate", "completion",
     "retention", "ns_offered", "ns_accepted", "ns_mean_lat", "ns_p99_lat", "ns_saturated",
+    "workload", "wl_phases", "wl_makespan", "wl_job_times",
 ]
+
+# Optional-axis columns (simulate / netsim / workload) that stay empty in
+# this grid: everything after `routable`.
+EMPTY_TAIL = [""] * (len(COLUMNS) - 17)
 
 
 def join_nums(xs: list) -> str:
@@ -681,8 +686,7 @@ def golden_rows() -> list:
                         str(len(flows)), "0", "0", join_nums([0] * (H + 1)),
                         join_nums([0] * (H + 1)), join_nums([0] * (H + 1)), "0", "16",
                         str(dead_links), str(len(flows)), "0",
-                        "", "", "", "", "", "", "", "", "",
-                    ])
+                    ] + EMPTY_TAIL)
                     continue
                 routed = [((s, d), trace_route(topo, degraded, s, d)) for (s, d) in flows]
                 for (_sd, ports) in routed:
@@ -719,8 +723,7 @@ def golden_rows() -> list:
                 join_nums(cells["hot_per_level"]), join_nums(cells["c_max_up"]),
                 join_nums(cells["c_max_down"]), str(cells["used_top"]),
                 str(cells["total_top"]), str(dead_links), str(routes_changed), "1",
-                "", "", "", "", "", "", "", "", "",
-            ])
+            ] + EMPTY_TAIL)
     return rows
 
 

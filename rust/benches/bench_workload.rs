@@ -1,0 +1,82 @@
+//! Workload-subsystem performance: phase lowering throughput
+//! (phases compiled/s) and fluid makespan evaluation (cells/s), emitted
+//! both as bench lines and as a machine-readable `BENCH_workload.json`
+//! (uploaded as a CI artifact so the subsystem's perf trajectory is
+//! tracked run over run).
+//!
+//! CI smoke-runs this with `PGFT_BENCH_SMOKE=1` (1 iteration) so the
+//! bench code cannot rot; real numbers come from a plain
+//! `cargo bench --bench bench_workload`. The output path defaults to
+//! `BENCH_workload.json` in the package root and can be overridden with
+//! `PGFT_BENCH_WORKLOAD_OUT`.
+
+use pgft::prelude::*;
+use pgft::util::bench::Bench;
+use pgft::workload::{evaluate_makespan, lower, WorkloadSpec};
+use std::time::Duration;
+
+fn main() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::parse("io:last:1,gpgpu:first:2").unwrap().apply(&topo).unwrap();
+    let spec = WorkloadSpec::mix();
+    let smoke = matches!(std::env::var("PGFT_BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0");
+
+    println!("== workload lowering (mix on case-study) ==");
+    let lowered = lower(&spec, &topo, &types).unwrap();
+    let phases_per_lowering = lowered.num_segments() as u64;
+    let st = Bench::new("workload/lower/mix")
+        .target_time(Duration::from_millis(300))
+        .samples(5, 200)
+        .throughput_elems(phases_per_lowering)
+        .run(|_| {
+            std::hint::black_box(lower(&spec, &topo, &types).unwrap());
+        });
+    let lowerings_per_sec = 1e9 / st.median_ns;
+    let phases_per_sec = phases_per_lowering as f64 * lowerings_per_sec;
+    println!("  {phases_per_lowering} segments/lowering, {phases_per_sec:.0} phases compiled/s");
+
+    println!("\n== fluid makespan evaluation (cells/s, mix on case-study) ==");
+    let mut cells_per_sec = 0.0;
+    let mut mix_makespan = Vec::new();
+    for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk] {
+        let router = kind.build(&topo, Some(&types), 1);
+        let st = Bench::new(format!("workload/makespan/{kind}"))
+            .target_time(Duration::from_millis(400))
+            .samples(5, 40)
+            .run(|_| {
+                std::hint::black_box(evaluate_makespan(&topo, &*router, &lowered).unwrap());
+            });
+        cells_per_sec = 1e9 / st.median_ns; // last algo's figure is representative
+        let eval = evaluate_makespan(&topo, &*router, &lowered).unwrap();
+        println!(
+            "  {kind}: makespan {:.1} over {} phases",
+            eval.makespan,
+            eval.phases.len()
+        );
+        mix_makespan.push((kind.as_str(), eval.makespan));
+    }
+    // The acceptance invariant, asserted here too so a perf run can
+    // never record a regression of the headline silently.
+    assert!(
+        mix_makespan[1].1 * 2.0 < mix_makespan[0].1,
+        "gdmodk must beat dmodk on the mix: {mix_makespan:?}"
+    );
+
+    let json = format!(
+        "{{\n  \"schema\": \"pgft-bench-workload/1\",\n  \"source\": \"{}\",\n  \
+         \"lowerings_per_sec\": {:.1},\n  \"phases_per_lowering\": {},\n  \
+         \"phases_compiled_per_sec\": {:.1},\n  \"makespan_cells_per_sec\": {:.1},\n  \
+         \"mix_makespan\": {{\"dmodk\": {:.4}, \"gdmodk\": {:.4}}}\n}}\n",
+        if smoke { "rust-bench-smoke" } else { "rust-bench" },
+        lowerings_per_sec,
+        phases_per_lowering,
+        phases_per_sec,
+        cells_per_sec,
+        mix_makespan[0].1,
+        mix_makespan[1].1,
+    );
+    let out =
+        std::env::var("PGFT_BENCH_WORKLOAD_OUT").unwrap_or_else(|_| "BENCH_workload.json".into());
+    std::fs::write(&out, &json).expect("write BENCH_workload.json");
+    println!("\nwrote {out}:\n{json}");
+}

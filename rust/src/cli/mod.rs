@@ -10,6 +10,9 @@
 //!             [--seeds 1,2] [--simulate] [--format csv] [--out FILE]
 //! pgft eval [--topo ..] [--algo ..] [--pattern ..] [--seed N]
 //!           [--evaluators congestion,fairrate,netsim:0.3] [--faults SPEC]
+//! pgft workload [--workload mix,single:c2io-sym:1024|FILE.toml] [--topo ..]
+//!               [--placement io:last:1,gpgpu:first:2] [--algo ..] [--seeds 1,2]
+//!               [--faults SPEC] [--netsim RATE] [--no-phase-detail]
 //! pgft analyze [--topo ..] [--placement ..] [--pattern c2io-sym,c2io-all]
 //!              [--algo all|dmodk,...] [--seed N] [--format text|csv|json] [--out FILE]
 //! pgft ports --algo dmodk --pattern c2io-sym [--level 3]      # per-port detail (Figs 4-7)
@@ -40,10 +43,32 @@ use crate::routing::{AlgorithmKind, Router};
 use crate::sim::{render_sim_table, simulate_flow_level, PacketSim, PacketSimConfig};
 use crate::sweep::{fault_table, run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
 use crate::topology::{families, render, Topology};
+use crate::workload::{
+    evaluate_makespan, evaluate_makespan_traced, lower, WorkloadEval, WorkloadSpec,
+};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Flag spellings that mean the same thing. [`Args::get`] resolves a
+/// lookup through its group, so every subcommand accepts both the
+/// singular and plural spelling of each axis uniformly — `Args::parse`
+/// has no unknown-flag rejection, so without this table a missed
+/// spelling was silently ignored per subcommand (the old per-call
+/// `get("faults").or_else(|| get("fault"))` hacks, each covering only
+/// the spellings its author remembered).
+const ALIAS_GROUPS: &[&[&str]] = &[
+    &["algo", "algos"],
+    &["pattern", "patterns"],
+    &["placement", "placements"],
+    &["fault", "faults"],
+    &["seed", "seeds"],
+    &["topo", "topology"],
+    &["workload", "workloads"],
+    &["rate", "rates"],
+    &["evaluator", "evaluators"],
+];
 
 /// Parsed `--key value` / `--flag` arguments.
 pub struct Args {
@@ -74,9 +99,18 @@ impl Args {
         Ok(Args { cmd, opts })
     }
 
-    /// Value of `--key`, if given.
+    /// Value of `--key`, if given — under its exact spelling first, then
+    /// under any alias from [`ALIAS_GROUPS`] (group order).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.opts.get(key).map(|s| s.as_str())
+        if let Some(v) = self.opts.get(key) {
+            return Some(v.as_str());
+        }
+        ALIAS_GROUPS
+            .iter()
+            .filter(|group| group.contains(&key))
+            .flat_map(|group| group.iter())
+            .filter(|alt| **alt != key)
+            .find_map(|alt| self.opts.get(*alt).map(|s| s.as_str()))
     }
 
     /// Value of `--key`, or `default`.
@@ -161,6 +195,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "faults" => cmd_faults(&args),
         "eval" => cmd_eval(&args),
+        "workload" => cmd_workload(&args),
         "analyze" => cmd_analyze(&args),
         "ports" => cmd_ports(&args),
         "random-dist" => cmd_random_dist(&args),
@@ -184,7 +219,8 @@ commands:
   topo         show a topology (--topo case-study|medium-512|PGFT(...); --dot; --leaves)
   sweep        parallel experiment grid: algorithms × patterns × placements × seeds
                (--config FILE, or --topo/--placements A;B/--pattern/--algo/--seeds 1,2;
-                --simulate adds flow-level throughput; --serial / --threads N)
+                --simulate adds flow-level throughput; --workload W,.. adds the
+                wl_* makespan columns; --serial / --threads N)
   faults       fault-injection grid: algorithms × fault scenarios on one topology
                (--faults none,rate:0.05,links:4,switches:1,stage:3:2,cascade:4;
                 reports rerouting cost and, with --simulate, throughput retention)
@@ -192,6 +228,12 @@ commands:
                (algorithm, pattern) cell, scored by any evaluator stack
                (--evaluators congestion,fairrate,netsim:0.3; --faults SPEC
                 repairs the store via incremental re-trace first)
+  workload     application workloads: concurrent multi-phase job mixes over
+               typed node groups (--workload mix|allreduce|checkpoint|
+               single:<pattern>:BYTES|FILE.toml; collectives: ring/rd
+               allreduce, binomial bcast, pairwise a2a, gather); fluid
+               makespan per algorithm, per-phase breakdown on stderr,
+               --netsim RATE adds the phase-sequenced flit-level replay
   analyze      congestion table per algorithm × pattern (the paper's analysis)
   ports        per-port detail for one algorithm/pattern (Figs 4-7)
   random-dist  C_topo histogram over random-routing seeds (§III.D)
@@ -252,6 +294,13 @@ fn parse_rates(spec: &str) -> Result<Vec<f64>> {
         .collect()
 }
 
+/// Parse a comma-separated seed list (`1,2,3`).
+fn parse_seeds(spec: &str) -> Result<Vec<u64>> {
+    spec.split(',')
+        .map(|s| s.parse::<u64>().map_err(|e| anyhow::anyhow!("--seeds {s:?}: {e}")))
+        .collect()
+}
+
 /// Worker-thread count from `--serial` / `--threads N`.
 fn parse_threads(args: &Args) -> Result<usize> {
     if args.flag("serial") {
@@ -274,39 +323,36 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         None => SweepSpec::paper_grid(&args.get_or("topo", "case-study")),
     };
-    // Every axis accepts both the singular spelling the other
-    // subcommands use and the natural plural — Args::parse has no
-    // unknown-flag rejection, so a missed spelling would otherwise be
-    // silently ignored and the default grid would run instead.
-    if let Some(p) = args.get("placements").or_else(|| args.get("placement")) {
+    // Every axis accepts both the singular and plural spelling through
+    // the uniform ALIAS_GROUPS table (Args::get resolves them).
+    if let Some(p) = args.get("placements") {
         // ';'-separated so individual specs keep their ','-stacks.
         spec.placements = p.split(';').map(str::to_string).collect();
     }
-    if let Some(p) = args.get("pattern").or_else(|| args.get("patterns")) {
+    if let Some(p) = args.get("pattern") {
         spec.patterns = p.split(',').map(Pattern::parse).collect::<Result<Vec<_>>>()?;
     }
-    if let Some(a) = args.get("algo").or_else(|| args.get("algos")) {
+    if let Some(a) = args.get("algo") {
         spec.algorithms = if a == "all" {
             AlgorithmKind::ALL.to_vec()
         } else {
             a.split(',').map(AlgorithmKind::parse).collect::<Result<Vec<_>>>()?
         };
     }
-    if let Some(f) = args.get("faults").or_else(|| args.get("fault")) {
+    if let Some(f) = args.get("faults") {
         spec.faults = f.split(',').map(str::to_string).collect();
     }
-    // `--seed` (the other subcommands' spelling) works here too.
-    if let Some(seeds) = args.get("seeds").or_else(|| args.get("seed")) {
-        spec.seeds = seeds
-            .split(',')
-            .map(|s| s.parse::<u64>().map_err(|e| anyhow::anyhow!("--seeds {s:?}: {e}")))
-            .collect::<Result<Vec<_>>>()?;
+    if let Some(seeds) = args.get("seeds") {
+        spec.seeds = parse_seeds(seeds)?;
     }
     if args.flag("simulate") {
         spec.simulate = true;
     }
     if let Some(n) = args.get("netsim") {
         spec.netsim = parse_rates(n)?;
+    }
+    if let Some(w) = args.get("workload") {
+        spec.workloads = w.split(',').map(str::to_string).collect();
     }
     spec.validate()?;
     let threads = parse_threads(args)?;
@@ -330,11 +376,6 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// pristine) and, with `--simulate`, fair-rate throughput retention.
 /// Fully deterministic: the same `--seeds` produce byte-identical CSV.
 fn cmd_faults(args: &Args) -> Result<()> {
-    let seeds: Vec<u64> = args
-        .get_or("seeds", &args.u64_or("seed", 1)?.to_string())
-        .split(',')
-        .map(|x| x.parse::<u64>().map_err(|e| anyhow::anyhow!("--seeds {x:?}: {e}")))
-        .collect::<Result<Vec<_>>>()?;
     let spec = SweepSpec {
         topologies: vec![args.get_or("topo", "case-study")],
         placements: vec![args.get_or("placement", "io:last:1")],
@@ -345,12 +386,13 @@ fn cmd_faults(args: &Args) -> Result<()> {
             .split(',')
             .map(str::to_string)
             .collect(),
-        seeds,
+        seeds: parse_seeds(&args.get_or("seeds", "1"))?,
         simulate: args.flag("simulate"),
         netsim: match args.get("netsim") {
             Some(n) => parse_rates(n)?,
             None => Vec::new(),
         },
+        workloads: Vec::new(),
     };
     spec.validate()?;
     let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
@@ -431,6 +473,147 @@ fn cmd_eval(args: &Args) -> Result<()> {
     emit(&t, args)
 }
 
+/// `pgft workload` — evaluate application workloads (concurrent
+/// multi-phase job mixes, [`crate::workload`]) per algorithm and seed:
+/// lower each workload onto the fabric once, run the fluid phase
+/// simulation with every selected router (degraded via `--faults SPEC`),
+/// and emit one row per (workload, algorithm, seed) with the makespan,
+/// phase count and per-job completion times. A per-phase breakdown goes
+/// to stderr (so `--out`/stdout CSV stays machine-clean); with
+/// `--netsim RATE` the breakdown additionally carries flit-level
+/// per-phase figures from the phase-sequenced replay
+/// ([`crate::netsim::run_netsim_phased`]). Deterministic: the same
+/// `--seeds` produce byte-identical CSV.
+fn cmd_workload(args: &Args) -> Result<()> {
+    let topo = families::named(&args.get_or("topo", "case-study"))?;
+    crate::topology::validate::validate(&topo)?;
+    // The default placement carries GPGPU nodes so the built-in job
+    // mixes resolve out of the box.
+    let placement = Placement::parse(&args.get_or("placement", "io:last:1,gpgpu:first:2"))?;
+    let types = placement.apply(&topo)?;
+    let seeds = parse_seeds(&args.get_or("seeds", "1"))?;
+    let netsim_rate: Option<f64> = args
+        .get("netsim")
+        .map(|r| r.parse().map_err(|e| anyhow::anyhow!("--netsim {r:?}: {e}")))
+        .transpose()?;
+    let mut t = Table::new(
+        "application workloads: fluid makespan per (workload, algorithm, seed)",
+        &["workload", "algo", "seed", "jobs", "phases", "makespan", "job_times"],
+    );
+    let mut detail = Table::new(
+        "per-phase breakdown (fluid rates; ns_* columns from the phase-sequenced \
+         flit-level replay when --netsim RATE is given)",
+        &[
+            "workload", "algo", "seed", "phase", "t_start", "duration", "flows",
+            "agg_rate", "min_rate", "ns_accepted", "ns_mean_lat", "ns_saturated",
+        ],
+    );
+    // With the breakdown suppressed there is nothing to show per-phase
+    // figures in, so the (expensive) flit-level replay would be wasted
+    // work — reject the conflicting request instead of silently
+    // dropping either flag.
+    let want_detail = !args.flag("no-phase-detail");
+    if !want_detail && netsim_rate.is_some() {
+        bail!(
+            "--netsim RATE fills the per-phase breakdown that --no-phase-detail \
+             suppresses; drop one of the two flags"
+        );
+    }
+    let fault_given = matches!(args.get("faults"), Some(s) if s != "none");
+    for wname in args.get_or("workload", "mix").split(',') {
+        let spec = WorkloadSpec::parse(wname)?;
+        let lowered = lower(&spec, &topo, &types)?;
+        for kind in parse_algos(args)? {
+            // The fluid makespan is deterministic: only random
+            // algorithms and generated fault scenarios make it
+            // seed-sensitive, so other algo/seed combinations build the
+            // router and evaluate once, then reuse (mirroring the sweep
+            // runner's dedup). With `--netsim` the phase stores the
+            // evaluation traced are kept and replayed — the flit-level
+            // run itself re-seeds per row.
+            let seeded = fault_given
+                || matches!(kind, AlgorithmKind::Random | AlgorithmKind::RandomPair);
+            let mut cached: Option<(WorkloadEval, Vec<FlowSet>)> = None;
+            for &seed in &seeds {
+                if seeded || cached.is_none() {
+                    let router: Box<dyn Router> = match parse_fault_set(args, &topo, seed)? {
+                        Some(f) => kind.build_degraded(&topo, Some(&types), seed, &f)?,
+                        None => kind.build(&topo, Some(&types), seed),
+                    };
+                    cached = Some(if netsim_rate.is_some() {
+                        evaluate_makespan_traced(&topo, &*router, &lowered)?
+                    } else {
+                        (evaluate_makespan(&topo, &*router, &lowered)?, Vec::new())
+                    });
+                }
+                let (eval, sets) = cached.as_ref().expect("evaluated above");
+                t.row(&[
+                    spec.name.clone(),
+                    kind.as_str().to_string(),
+                    seed.to_string(),
+                    eval.job_times.len().to_string(),
+                    eval.phases.len().to_string(),
+                    eval.makespan.to_string(),
+                    eval.job_times
+                        .iter()
+                        .map(|(name, time)| format!("{name}={time}"))
+                        .collect::<Vec<_>>()
+                        .join("|"),
+                ]);
+                if !want_detail {
+                    continue;
+                }
+                let ns = match netsim_rate {
+                    Some(rate) => {
+                        let cfg = NetsimConfig {
+                            seed,
+                            warmup: args.u64_or("warmup", 300)?,
+                            measure: args.u64_or("measure", 500)?,
+                            drain: args.u64_or("drain", 300)?,
+                            ..Default::default()
+                        };
+                        Some(crate::netsim::run_netsim_phased(&topo, sets, &cfg, rate)?)
+                    }
+                    None => None,
+                };
+                for phase in &eval.phases {
+                    let (ns_acc, ns_lat, ns_sat) = match ns.as_ref() {
+                        Some(rep) => {
+                            let p = &rep.phases[phase.index];
+                            (
+                                format!("{:.4}", p.accepted),
+                                format!("{:.2}", p.mean_latency),
+                                if p.saturated { "1".into() } else { "0".into() },
+                            )
+                        }
+                        None => Default::default(),
+                    };
+                    detail.row(&[
+                        spec.name.clone(),
+                        kind.as_str().to_string(),
+                        seed.to_string(),
+                        phase.index.to_string(),
+                        format!("{:.3}", phase.t_start),
+                        format!("{:.3}", phase.duration),
+                        phase.flow_pairs.len().to_string(),
+                        format!("{:.4}", phase.aggregate_rate),
+                        format!("{:.6}", phase.min_rate),
+                        ns_acc,
+                        ns_lat,
+                        ns_sat,
+                    ]);
+                }
+            }
+        }
+    }
+    emit(&t, args)?;
+    // The phase breakdown goes to stderr unless suppressed.
+    if want_detail {
+        eprint!("{}", detail.to_text());
+    }
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let spec = SweepSpec {
         topologies: vec![args.get_or("topo", "case-study")],
@@ -441,6 +624,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         seeds: vec![args.u64_or("seed", 1)?],
         simulate: false,
         netsim: Vec::new(),
+        workloads: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
     emit(&summary_table(&rows), args)?;
@@ -672,6 +856,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         seeds: vec![cfg.seed],
         simulate: true,
         netsim: Vec::new(),
+        workloads: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions { threads: parse_threads(args)? })?;
     print!("{}", render_algorithm_table(&crate::sweep::summaries(&rows)));
@@ -768,6 +953,34 @@ mod tests {
         assert_eq!(a.u64_or("seed", 0).unwrap(), 3);
         assert_eq!(a.get_or("missing", "x"), "x");
         assert!(Args::parse(&argv(&["c", "oops"])).is_err());
+    }
+
+    #[test]
+    fn alias_table_resolves_spellings_uniformly() {
+        // Singular and plural spellings resolve through one table in
+        // both directions; exact spellings win over aliases.
+        let a = Args::parse(&argv(&[
+            "x", "--fault", "links:2", "--seeds", "1,2", "--patterns", "c2io-sym",
+            "--topology", "case-study",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("faults"), Some("links:2"));
+        assert_eq!(a.get("fault"), Some("links:2"));
+        assert_eq!(a.get("seed"), Some("1,2"));
+        assert_eq!(a.get("pattern"), Some("c2io-sym"));
+        assert_eq!(a.get("topo"), Some("case-study"));
+        assert_eq!(a.get("workload"), None, "unrelated keys stay unset");
+        let b = Args::parse(&argv(&["x", "--algo", "dmodk", "--algos", "gdmodk"])).unwrap();
+        assert_eq!(b.get("algo"), Some("dmodk"), "exact spelling wins");
+        assert_eq!(b.get("algos"), Some("gdmodk"));
+        // Every alias group is self-consistent (no key in two groups).
+        let mut seen = std::collections::BTreeSet::new();
+        for group in ALIAS_GROUPS {
+            assert!(group.len() >= 2, "{group:?}");
+            for key in *group {
+                assert!(seen.insert(*key), "key {key} appears in two alias groups");
+            }
+        }
     }
 
     #[test]
@@ -878,6 +1091,41 @@ mod tests {
         assert!(run(&argv(&["netsim", "--rates", "0.5,0.1"])).is_err());
         assert!(run(&argv(&["netsim", "--injection", "poisson"])).is_err());
         assert!(run(&argv(&["netsim", "--faults", "meteor:3"])).is_err());
+    }
+
+    #[test]
+    fn workload_command_runs_and_rejects_bad_specs() {
+        run(&argv(&["workload", "--workload", "mix", "--algo", "dmodk,gdmodk"])).unwrap();
+        // The singular/plural alias and fault scenarios compose; the
+        // phase detail can be suppressed.
+        run(&argv(&[
+            "workload", "--workloads", "checkpoint", "--algo", "gdmodk",
+            "--faults", "stage:3:2", "--no-phase-detail",
+        ]))
+        .unwrap();
+        assert!(run(&argv(&["workload", "--workload", "frobnicate"])).is_err());
+        assert!(run(&argv(&["workload", "--workload", "single:warp:64"])).is_err());
+        assert!(run(&argv(&["workload", "--faults", "meteor:3"])).is_err());
+        // --netsim fills the detail table --no-phase-detail suppresses:
+        // the conflicting request is rejected, not silently resolved.
+        assert!(run(&argv(&[
+            "workload", "--workload", "checkpoint", "--algo", "gdmodk",
+            "--netsim", "0.2", "--no-phase-detail",
+        ]))
+        .is_err());
+        // A placement without GPGPU nodes cannot host the mix.
+        assert!(run(&argv(&["workload", "--placement", "io:last:1"])).is_err());
+    }
+
+    #[test]
+    fn sweep_accepts_workload_axis() {
+        run(&argv(&[
+            "sweep", "--topo", "case-study", "--placements", "io:last:1,gpgpu:first:2",
+            "--pattern", "c2io-sym", "--algo", "gdmodk",
+            "--workload", "single:c2io-sym:1024", "--serial",
+        ]))
+        .unwrap();
+        assert!(run(&argv(&["sweep", "--workload", "frobnicate"])).is_err());
     }
 
     #[test]

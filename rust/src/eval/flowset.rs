@@ -92,6 +92,26 @@ impl FlowSet {
         set
     }
 
+    /// Concatenate several stores into one contiguous arena, in order
+    /// (flow `i` of set `k` lands after every flow of sets `0..k`). The
+    /// phase-sequenced simulator ([`crate::netsim::run_netsim_phased`])
+    /// uses this to fuse per-phase route stores into one simulatable
+    /// union without re-tracing anything.
+    pub fn concat(sets: &[&FlowSet]) -> FlowSet {
+        let mut out = FlowSet::empty();
+        out.pairs.reserve(sets.iter().map(|s| s.len()).sum());
+        out.ports.reserve(sets.iter().map(|s| s.total_hops()).sum());
+        for set in sets {
+            out.pairs.extend_from_slice(&set.pairs);
+            out.weights.extend_from_slice(&set.weights);
+            for f in 0..set.len() {
+                out.ports.extend_from_slice(set.route(f));
+                out.offsets.push(out.ports.len() as u32);
+            }
+        }
+        out
+    }
+
     /// Materialize per-flow [`RoutePorts`] (interop with consumers that
     /// still want owned per-route vectors, e.g. `routing::verify`).
     pub fn to_routes(&self) -> Vec<RoutePorts> {
@@ -274,6 +294,19 @@ mod tests {
         assert_eq!(set.weight(1), 1);
         let unit = FlowSet::trace(&topo, &*router, &[(0, 63), (1, 62)]);
         assert_eq!(set.route(0), unit.route(0), "weights never change routing");
+    }
+
+    #[test]
+    fn concat_preserves_routes_and_order() {
+        let (topo, flows) = setup();
+        let router = AlgorithmKind::Gdmodk.build(&topo, None, 1);
+        let a = FlowSet::trace(&topo, &*router, &flows[..10]);
+        let b = FlowSet::trace(&topo, &*router, &flows[10..]);
+        let union = FlowSet::concat(&[&a, &b]);
+        let whole = FlowSet::trace(&topo, &*router, &flows);
+        assert_eq!(union, whole, "concat of a split trace equals the whole trace");
+        assert_eq!(FlowSet::concat(&[&FlowSet::empty(), &whole]), whole);
+        assert_eq!(FlowSet::concat(&[]), FlowSet::empty());
     }
 
     #[test]

@@ -12,8 +12,11 @@
 //! parallel experiment-sweep engine ([`sweep`]) that turns
 //! the paper's algorithm × pattern × placement grids into one command,
 //! a fault-injection & online-rerouting subsystem ([`faults`]) that adds
-//! seeded failure scenarios as a first-class sweep axis, and a BXI-style
-//! fabric-manager coordinator. With the `xla` cargo
+//! seeded failure scenarios as a first-class sweep axis, an
+//! application-workload subsystem ([`workload`]: concurrent multi-phase
+//! job mixes and MPI-style collective schedules over typed node groups,
+//! scored by a fluid makespan metric and replayable flit-by-flit), and a
+//! BXI-style fabric-manager coordinator. With the `xla` cargo
 //! feature, the simulation hot path runs AOT-compiled JAX/Pallas
 //! programs through PJRT (see `rust/src/runtime`); without it the exact
 //! pure-rust solvers are used.
@@ -60,6 +63,7 @@ pub mod sim;
 pub mod sweep;
 pub mod topology;
 pub mod util;
+pub mod workload;
 
 /// Convenience re-exports.
 pub mod prelude {
@@ -75,4 +79,5 @@ pub mod prelude {
     pub use crate::routing::{AlgorithmKind, ForwardingTables, Router};
     pub use crate::sweep::{run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
     pub use crate::topology::{build_pgft, families, PgftSpec, Topology};
+    pub use crate::workload::{Collective, GroupSpec, Job, Phase, WorkloadSpec};
 }

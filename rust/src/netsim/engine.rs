@@ -80,22 +80,42 @@ pub(crate) struct Engine<'a> {
     rngs: Vec<Xoshiro256>,
     packets: Vec<Packet>,
     cal: Calendar,
+    // Per-flow injection window `[start, end)` in cycles. The default
+    // (whole run) reproduces the classic single-table behavior
+    // bit-for-bit; phase-sequenced runs give each phase's flows a
+    // disjoint window so sources swap flow tables at phase boundaries
+    // (see `netsim::phased`).
+    windows: Vec<(u64, u64)>,
     // Statistics.
     injected_packets: u64,
     delivered_packets: u64,
     accepted_flits: u64,
     flow_flits: Vec<u64>,
-    latencies: Vec<u64>,
+    latencies: Vec<(u32, u64)>,
+}
+
+/// A finished run plus the per-flow detail the phase-sequenced runner
+/// needs (the public [`NetsimReport`] keeps only aggregates).
+pub(crate) struct RunDetail {
+    /// The aggregate report (identical to what [`Engine::run`] returns).
+    pub report: NetsimReport,
+    /// `(flow, latency)` of every packet injected inside the measurement
+    /// window and delivered in time.
+    pub latencies: Vec<(u32, u64)>,
 }
 
 impl<'a> Engine<'a> {
     /// Set up a run of the route store at offered load `rate` (flits
     /// per cycle per flow). The caller validated `cfg` and `rate`.
+    /// `windows` optionally restricts each flow's injection to
+    /// `[start, end)` cycles (one entry per flow); `None` keeps every
+    /// source active for the whole run.
     pub(crate) fn new(
         num_ports: usize,
         flows: &'a FlowSet,
         cfg: &NetsimConfig,
         rate: f64,
+        windows: Option<Vec<(u64, u64)>>,
     ) -> Engine<'a> {
         let vcs = cfg.vcs as usize;
         let nf = flows.len();
@@ -128,6 +148,7 @@ impl<'a> Engine<'a> {
             rngs,
             packets: Vec::new(),
             cal: Calendar::new(horizon),
+            windows: windows.unwrap_or_else(|| vec![(0, u64::MAX); nf]),
             injected_packets: 0,
             delivered_packets: 0,
             accepted_flits: 0,
@@ -137,16 +158,25 @@ impl<'a> Engine<'a> {
     }
 
     /// Run to the horizon and summarize.
-    pub(crate) fn run(mut self) -> NetsimReport {
+    pub(crate) fn run(self) -> NetsimReport {
+        self.run_detailed().report
+    }
+
+    /// Run to the horizon and return the report plus per-flow latency
+    /// samples (the phase-sequenced runner buckets them per phase).
+    pub(crate) fn run_detailed(mut self) -> RunDetail {
         let end = self.warmup + self.measure + self.drain;
-        // Seed the first arrival of every active flow (gap ≥ 1, so the
-        // calendar cursor invariant holds from cycle 0).
+        // Seed the first arrival of every active flow at the start of
+        // its injection window (gap ≥ 1, so the calendar cursor
+        // invariant holds from cycle 0).
         for f in 0..self.flows.len() {
             if self.flows.route(f).is_empty() {
                 continue; // self-flow: nothing to simulate
             }
             let gap = draw_gap(&mut self.rngs[f], self.p_event);
-            self.cal.schedule(gap, Event::NewPacket { flow: f as u32 });
+            // saturating: a near-infinite gap simply lands past the horizon.
+            self.cal
+                .schedule(self.windows[f].0.saturating_add(gap), Event::NewPacket { flow: f as u32 });
         }
         for t in 1..=end {
             for (_seq, ev) in self.cal.take(t) {
@@ -177,21 +207,31 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// The injection process fires: create `burst` packets, wake the
-    /// source, draw the next inter-arrival gap.
+    /// The injection process fires: create `burst` packets (while the
+    /// flow's injection window is open), wake the source, draw the next
+    /// inter-arrival gap. Both the creation and the next draw are gated
+    /// on the window still being open — a closed window stops the
+    /// flow's RNG stream. Default-window runs (`end = u64::MAX`) never
+    /// take the closed branch, which is what keeps classic whole-run
+    /// netsim bit-identical to the pre-window engine.
     fn on_new_packet(&mut self, flow: usize, t: u64) {
-        for _ in 0..self.burst {
-            let vc = self.next_vc[flow] % self.vcs as u32;
-            self.next_vc[flow] = self.next_vc[flow].wrapping_add(1);
-            let pid = self.packets.len() as u32;
-            let pkt = Packet { flow: flow as u32, arrival: t, vc, pushed: 0, delivered: 0 };
-            self.packets.push(pkt);
-            self.backlog[flow].push_back(pid);
-            self.injected_packets += 1;
+        if t < self.windows[flow].1 {
+            for _ in 0..self.burst {
+                let vc = self.next_vc[flow] % self.vcs as u32;
+                self.next_vc[flow] = self.next_vc[flow].wrapping_add(1);
+                let pid = self.packets.len() as u32;
+                let pkt = Packet { flow: flow as u32, arrival: t, vc, pushed: 0, delivered: 0 };
+                self.packets.push(pkt);
+                self.backlog[flow].push_back(pid);
+                self.injected_packets += 1;
+            }
+            self.wake_source(flow, t + 1);
+            let gap = draw_gap(&mut self.rngs[flow], self.p_event);
+            self.cal.schedule(t.saturating_add(gap), Event::NewPacket { flow: flow as u32 });
         }
-        self.wake_source(flow, t + 1);
-        let gap = draw_gap(&mut self.rngs[flow], self.p_event);
-        self.cal.schedule(t + gap, Event::NewPacket { flow: flow as u32 });
+        // A closed window stops rescheduling (and RNG draws): at most
+        // one no-op event fires past `end` per flow, keeping
+        // phase-sequenced runs cheap.
     }
 
     /// The source pushes at most one backlog flit into the first route
@@ -287,18 +327,27 @@ impl<'a> Engine<'a> {
         let done = pkt.delivered == self.packet_flits;
         if in_window {
             self.accepted_flits += 1;
-            self.flow_flits[flow] += 1;
+            // Per-flow throughput is measured inside the flow's own
+            // injection window (clamped to the global one) — with the
+            // default whole-run window this is exactly `in_window`;
+            // phase-sequenced runs attribute each phase only the flits
+            // delivered while its table was live, so a saturated
+            // phase's draining backlog cannot inflate its figure.
+            let (ws, we) = self.windows[flow];
+            if t >= ws.max(self.warmup) && t < we.min(self.warmup + self.measure) {
+                self.flow_flits[flow] += 1;
+            }
         }
         if done {
             self.delivered_packets += 1;
             if arrival >= self.warmup && arrival < self.warmup + self.measure {
-                self.latencies.push(t - arrival);
+                self.latencies.push((flow as u32, t - arrival));
             }
         }
     }
 
     /// Summarize the run.
-    fn finish(self) -> NetsimReport {
+    fn finish(self) -> RunDetail {
         let active = self.flows.num_active();
         let offered_aggregate = self.rate * active as f64;
         let measure = self.measure as f64;
@@ -306,15 +355,9 @@ impl<'a> Engine<'a> {
         let flow_accepted: Vec<f64> =
             self.flow_flits.iter().map(|&f| f as f64 / measure).collect();
         let mut lat = self.latencies;
-        lat.sort_unstable();
-        let (mean_latency, p99_latency) = if lat.is_empty() {
-            (0.0, 0.0)
-        } else {
-            let mean = lat.iter().sum::<u64>() as f64 / lat.len() as f64;
-            let idx = ((lat.len() - 1) as f64 * 0.99).round() as usize;
-            (mean, lat[idx.min(lat.len() - 1)] as f64)
-        };
-        NetsimReport {
+        lat.sort_unstable_by_key(|&(_, l)| l);
+        let (mean_latency, p99_latency) = summarize_latencies(&lat);
+        let report = NetsimReport {
             offered: self.rate,
             offered_aggregate,
             accepted,
@@ -327,6 +370,20 @@ impl<'a> Engine<'a> {
             flows: active,
             events: self.cal.scheduled(),
             saturated: accepted < SATURATION_FRACTION * offered_aggregate,
-        }
+        };
+        RunDetail { report, latencies: lat }
     }
+}
+
+/// `(mean, p99)` of latency-sorted `(flow, latency)` samples — the one
+/// summary formula both the whole-run report and the per-phase stats
+/// use, so they cannot drift apart.
+pub(crate) fn summarize_latencies(sorted: &[(u32, u64)]) -> (f64, f64) {
+    if sorted.is_empty() {
+        return (0.0, 0.0);
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0].1 <= w[1].1), "samples must be sorted");
+    let mean = sorted.iter().map(|&(_, l)| l).sum::<u64>() as f64 / sorted.len() as f64;
+    let idx = ((sorted.len() - 1) as f64 * 0.99).round() as usize;
+    (mean, sorted[idx.min(sorted.len() - 1)].1 as f64)
 }

@@ -19,7 +19,10 @@
 //!  * [`engine`] — VC/credit port model over precomputed routes,
 //!  * [`inject`] — Bernoulli / burst packet-arrival processes,
 //!  * [`curve`] — injection-rate sweeps, the latency-vs-load table and
-//!    saturation-point detection.
+//!    saturation-point detection,
+//!  * [`phased`] — phase-sequenced replay of a workload's flow-table
+//!    sequence (sources swap tables at phase boundaries; see
+//!    [`crate::workload`]).
 //!
 //! Units: one cycle forwards one flit per port, i.e. links have
 //! capacity 1 flit/cycle — the exact unit scale of
@@ -45,9 +48,11 @@ pub mod curve;
 pub mod engine;
 pub mod event;
 pub mod inject;
+pub mod phased;
 
 pub use curve::{curve_table, default_rates, load_curve, saturation_point, CurvePoint, Saturation};
 pub use inject::Injection;
+pub use phased::{run_netsim_phased, PhaseNetsim, PhasedNetsimReport};
 
 use crate::eval::FlowSet;
 use crate::topology::Topology;
@@ -159,7 +164,7 @@ pub fn run_netsim(
         "netsim: offered load {rate} outside (0, 1] flits/cycle/flow"
     );
     ensure!(flows.num_active() > 0, "netsim: no active flows to simulate");
-    Ok(engine::Engine::new(topo.num_ports(), flows, cfg, rate).run())
+    Ok(engine::Engine::new(topo.num_ports(), flows, cfg, rate, None).run())
 }
 
 #[cfg(test)]

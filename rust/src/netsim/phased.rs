@@ -1,0 +1,246 @@
+//! Phase-sequenced flit-level simulation: sources swap flow tables at
+//! phase boundaries.
+//!
+//! A workload's fluid evaluation ([`crate::workload::evaluate_makespan`])
+//! produces a sequence of global phases, each with its own flow union.
+//! This runner replays that sequence in **one continuous** flit-level
+//! simulation: the per-phase route stores are concatenated into a single
+//! arena ([`FlowSet::concat`]) and every flow gets a disjoint injection
+//! window — phase `k`'s sources start injecting exactly when phase
+//! `k−1`'s window closes, while `k−1`'s in-flight packets are still
+//! draining through the same fabric. Cross-phase interference (a
+//! checkpoint burst landing on a fabric still congested by the previous
+//! allreduce step) is therefore modelled, which per-phase independent
+//! runs would miss.
+//!
+//! Timeline: `cfg.warmup` cycles of phase-0 traffic to reach steady
+//! state, then `cfg.measure` measured cycles **per phase**, then
+//! `cfg.drain` cycles for stragglers. Per-phase throughput counts only
+//! flits delivered while the phase's own window was live (so a
+//! saturated phase's draining backlog congests its successors — which
+//! is the point — but cannot inflate its own figure); latency samples
+//! attribute to the injecting phase however late the packet lands.
+//! Sources are open-loop within a window: a phase pushed past
+//! saturation keeps draining its backlog after its window closes, like
+//! an application that over-ran its phase budget.
+//!
+//! Determinism matches the rest of `netsim`: the same
+//! `(phases, cfg, rate)` reproduce the report byte-for-byte.
+
+use super::engine::{summarize_latencies, Engine};
+use super::{NetsimConfig, SATURATION_FRACTION};
+use crate::eval::FlowSet;
+use crate::topology::Topology;
+use anyhow::{ensure, Result};
+
+/// Flit-level figures of one phase of a phase-sequenced run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseNetsim {
+    /// Phase index (aligned with the workload's phase sequence).
+    pub phase: usize,
+    /// Active (non-self) flows injecting during the phase.
+    pub flows: usize,
+    /// Offered aggregate of the phase (rate × active flows).
+    pub offered_aggregate: f64,
+    /// Accepted aggregate throughput of the phase's flows
+    /// (flits/cycle, normalized by the per-phase window).
+    pub accepted: f64,
+    /// Mean packet latency of the phase's flows (cycles; 0 when no
+    /// packet was measured).
+    pub mean_latency: f64,
+    /// 99th-percentile packet latency of the phase's flows.
+    pub p99_latency: f64,
+    /// Whether the phase accepted less than
+    /// [`SATURATION_FRACTION`] × its offered aggregate.
+    pub saturated: bool,
+}
+
+/// Result of one phase-sequenced run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhasedNetsimReport {
+    /// Per-phase figures, in phase order (idle-only phases report zero
+    /// flows and are never saturated).
+    pub phases: Vec<PhaseNetsim>,
+    /// Total events the calendar processed.
+    pub events: u64,
+    /// Packets created over the whole run.
+    pub injected_packets: u64,
+    /// Packets fully delivered over the whole run.
+    pub delivered_packets: u64,
+}
+
+/// Run the phase sequence `phase_sets` (one traced [`FlowSet`] per
+/// phase, e.g. from [`crate::workload::phase_flowsets`]) at offered
+/// load `rate` per flow. At least one phase must carry an active flow;
+/// individual idle phases are allowed and simply hold their window
+/// open with nothing injecting.
+pub fn run_netsim_phased(
+    topo: &Topology,
+    phase_sets: &[FlowSet],
+    cfg: &NetsimConfig,
+    rate: f64,
+) -> Result<PhasedNetsimReport> {
+    cfg.validate()?;
+    ensure!(
+        rate > 0.0 && rate <= 1.0,
+        "netsim: offered load {rate} outside (0, 1] flits/cycle/flow"
+    );
+    ensure!(!phase_sets.is_empty(), "netsim: empty phase sequence");
+    ensure!(
+        phase_sets.iter().any(|s| s.num_active() > 0),
+        "netsim: no phase carries an active flow"
+    );
+    let refs: Vec<&FlowSet> = phase_sets.iter().collect();
+    let union = FlowSet::concat(&refs);
+    let n_phases = phase_sets.len();
+    let m = cfg.measure;
+
+    // Injection windows: phase 0 additionally owns the warmup so the
+    // fabric is in steady state when its measured window opens.
+    let mut windows = Vec::with_capacity(union.len());
+    let mut ranges = Vec::with_capacity(n_phases); // flow-index range per phase
+    let mut base = 0usize;
+    for (k, set) in phase_sets.iter().enumerate() {
+        let start = if k == 0 { 0 } else { cfg.warmup + k as u64 * m };
+        let end = cfg.warmup + (k as u64 + 1) * m;
+        windows.extend(std::iter::repeat((start, end)).take(set.len()));
+        ranges.push(base..base + set.len());
+        base += set.len();
+    }
+
+    // One continuous run: global measurement window spans every phase.
+    let run_cfg = NetsimConfig { measure: n_phases as u64 * m, ..cfg.clone() };
+    let detail =
+        Engine::new(topo.num_ports(), &union, &run_cfg, rate, Some(windows)).run_detailed();
+    let report = &detail.report;
+
+    // Bucket the per-flow figures back into phases. `flow_accepted` is
+    // normalized by the global window; rescale to the per-phase window.
+    let phases = ranges
+        .iter()
+        .enumerate()
+        .map(|(k, range)| {
+            let active =
+                range.clone().filter(|&f| !union.route(f).is_empty()).count();
+            let accepted: f64 = range
+                .clone()
+                .map(|f| report.flow_accepted[f] * n_phases as f64)
+                .sum();
+            let mut lat: Vec<(u32, u64)> = detail
+                .latencies
+                .iter()
+                .filter(|&&(f, _)| range.contains(&(f as usize)))
+                .copied()
+                .collect();
+            lat.sort_unstable_by_key(|&(_, l)| l);
+            let (mean_latency, p99_latency) = summarize_latencies(&lat);
+            let offered_aggregate = rate * active as f64;
+            PhaseNetsim {
+                phase: k,
+                flows: active,
+                offered_aggregate,
+                accepted,
+                mean_latency,
+                p99_latency,
+                saturated: active > 0
+                    && accepted < SATURATION_FRACTION * offered_aggregate,
+            }
+        })
+        .collect();
+
+    Ok(PhasedNetsimReport {
+        phases,
+        events: report.events,
+        injected_packets: report.injected_packets,
+        delivered_packets: report.delivered_packets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::patterns::Pattern;
+    use crate::routing::AlgorithmKind;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn setup() -> (Topology, Vec<FlowSet>) {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+        let phases = [Pattern::C2ioSym, Pattern::Io2cSym, Pattern::Shift { k: 1 }]
+            .iter()
+            .map(|p| FlowSet::trace(&topo, &*router, &p.flows(&topo, &types).unwrap()))
+            .collect();
+        (topo, phases)
+    }
+
+    fn small_cfg() -> NetsimConfig {
+        NetsimConfig { warmup: 200, measure: 600, drain: 200, ..Default::default() }
+    }
+
+    #[test]
+    fn phases_report_independently_and_deterministically() {
+        let (topo, phases) = setup();
+        let a = run_netsim_phased(&topo, &phases, &small_cfg(), 0.05).unwrap();
+        assert_eq!(a.phases.len(), 3);
+        for (k, p) in a.phases.iter().enumerate() {
+            assert_eq!(p.phase, k);
+            assert!(p.flows > 0);
+            assert!(p.accepted > 0.0, "phase {k}: {p:?}");
+            assert!(!p.saturated, "gdmodk at 5% load is stable: {p:?}");
+            assert!(p.mean_latency >= 6.0, "all phases cross >= 6 hops: {p:?}");
+            assert!(p.p99_latency >= p.mean_latency);
+        }
+        let b = run_netsim_phased(&topo, &phases, &small_cfg(), 0.05).unwrap();
+        assert_eq!(a, b, "same inputs, byte-identical report");
+        let mut cfg = small_cfg();
+        cfg.seed = 2;
+        assert_ne!(a, run_netsim_phased(&topo, &phases, &cfg, 0.05).unwrap());
+    }
+
+    #[test]
+    fn idle_phases_are_quiet_windows() {
+        let (topo, mut phases) = setup();
+        phases.insert(1, FlowSet::empty());
+        let rep = run_netsim_phased(&topo, &phases, &small_cfg(), 0.05).unwrap();
+        assert_eq!(rep.phases.len(), 4);
+        let idle = &rep.phases[1];
+        assert_eq!((idle.flows, idle.accepted), (0, 0.0), "{idle:?}");
+        assert!(!idle.saturated);
+        assert!(rep.phases[2].accepted > 0.0, "traffic resumes after the gap");
+    }
+
+    #[test]
+    fn overloaded_phases_saturate_individually() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let dmodk = AlgorithmKind::Dmodk.build(&topo, Some(&types), 1);
+        let gdmodk = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+        let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+        // Same pattern, one phase per router: dmodk's 2-port funnel
+        // saturates at 0.6 flits/cycle/flow, gdmodk accepts far more.
+        let phases =
+            vec![FlowSet::trace(&topo, &*dmodk, &flows), FlowSet::trace(&topo, &*gdmodk, &flows)];
+        let rep = run_netsim_phased(&topo, &phases, &small_cfg(), 0.6).unwrap();
+        assert!(rep.phases[0].saturated, "{:?}", rep.phases[0]);
+        assert!(
+            rep.phases[1].accepted > 1.5 * rep.phases[0].accepted,
+            "gdmodk {:?} vs dmodk {:?}",
+            rep.phases[1],
+            rep.phases[0]
+        );
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected() {
+        let (topo, phases) = setup();
+        assert!(run_netsim_phased(&topo, &phases, &small_cfg(), 0.0).is_err());
+        assert!(run_netsim_phased(&topo, &phases, &small_cfg(), 1.5).is_err());
+        assert!(run_netsim_phased(&topo, &[], &small_cfg(), 0.5).is_err());
+        assert!(
+            run_netsim_phased(&topo, &[FlowSet::empty()], &small_cfg(), 0.5).is_err(),
+            "all-idle phase sequences cannot be simulated"
+        );
+    }
+}

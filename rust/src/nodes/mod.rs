@@ -11,6 +11,10 @@ pub use reindex::TypeReindex;
 use crate::topology::Nid;
 use std::fmt;
 
+/// The accepted node-type names (the vocabulary parse errors across the
+/// crate cite; see [`NodeType::parse`] for the aliases).
+pub const TYPE_VOCAB: &str = "compute|io|service|gpgpu|fpga|customN";
+
 /// Node types observed on production clusters (§II). `Custom` leaves room
 /// for site-specific classes (e.g. Lustre routers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]

@@ -147,8 +147,9 @@ impl Placement {
         for item in items {
             let parts: Vec<&str> = item.split(':').collect();
             ensure!(parts.len() >= 2, "placement {item:?}: want type:kind[:args]");
-            let ty = NodeType::parse(parts[0])
-                .ok_or_else(|| anyhow::anyhow!("unknown node type {:?}", parts[0]))?;
+            let ty = NodeType::parse(parts[0]).ok_or_else(|| {
+                anyhow::anyhow!("unknown node type {:?} (types: {})", parts[0], crate::nodes::TYPE_VOCAB)
+            })?;
             let arg = |i: usize| -> Result<u32> {
                 parts
                     .get(i)
@@ -162,7 +163,10 @@ impl Placement {
                 "stride" => Placement::Strided { ty, offset: arg(2)?, stride: arg(3)? },
                 "leaves" => Placement::DedicatedLeaves { ty, leaves: arg(2)? },
                 "random" => Placement::Random { ty, count: arg(2)?, seed: arg(3)? as u64 },
-                k => anyhow::bail!("unknown placement kind {k:?}"),
+                k => anyhow::bail!(
+                    "unknown placement kind {k:?} (expected one of \
+                     last:N|first:N|stride:OFF:STEP|leaves:N|random:N:SEED)"
+                ),
             };
             out.push(p);
         }

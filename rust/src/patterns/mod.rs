@@ -13,10 +13,16 @@
 //! Classic worst-case patterns (all-to-all, shift, gather/scatter,
 //! permutations, hot-spot) are included for baseline comparisons.
 
-use crate::nodes::{NodeType, NodeTypeMap};
+use crate::nodes::{NodeType, NodeTypeMap, TYPE_VOCAB};
 use crate::topology::{Endpoint, Nid, Topology};
 use crate::util::rng::Xoshiro256;
 use anyhow::{ensure, Result};
+
+/// The accepted pattern spellings (the vocabulary parse errors cite —
+/// see [`Pattern::parse`] for the semantics of each form).
+pub const PATTERN_VOCAB: &str = "c2io-sym|c2io-all|io2c-sym|io2c-all|all-to-all|shift:K|\
+    gather:ROOT|scatter:ROOT|randperm:SEED|hotspot:D|biject:SRC:DST|dense:SRC:DST|\
+    dense-any:SRC:DST|transpose:<inner>";
 
 /// A communication pattern: a generator of (src, dst) flows.
 #[derive(Clone, Debug, PartialEq)]
@@ -219,8 +225,9 @@ impl Pattern {
                 .map_err(|e| anyhow::anyhow!("pattern {s:?}: {e}"))
         };
         let ty = |i: usize| -> Result<NodeType> {
-            NodeType::parse(parts.get(i).copied().unwrap_or(""))
-                .ok_or_else(|| anyhow::anyhow!("pattern {s:?}: bad node type at {i}"))
+            NodeType::parse(parts.get(i).copied().unwrap_or("")).ok_or_else(|| {
+                anyhow::anyhow!("pattern {s:?}: bad node type at {i} (types: {TYPE_VOCAB})")
+            })
         };
         Ok(match parts[0] {
             "c2io-sym" | "c2io" => Pattern::C2ioSym,
@@ -239,7 +246,10 @@ impl Pattern {
                 Pattern::TypeDense { src_ty: ty(1)?, dst_ty: ty(2)?, cross_top_only: false }
             }
             "transpose" => Pattern::Transpose(Box::new(Pattern::parse(&parts[1..].join(":"))?)),
-            other => anyhow::bail!("unknown pattern {other:?}"),
+            other => anyhow::bail!(
+                "unknown pattern {other:?} (expected one of {PATTERN_VOCAB}; \
+                 node types: {TYPE_VOCAB})"
+            ),
         })
     }
 }
@@ -365,8 +375,14 @@ mod tests {
             let (t, m) = setup();
             assert!(!p.flows(&t, &m).unwrap().is_empty(), "{s}");
         }
-        assert!(Pattern::parse("warp-drive").is_err());
+        // Unknown patterns enumerate the full accepted vocabulary.
+        let err = Pattern::parse("warp-drive").unwrap_err().to_string();
+        for word in ["c2io-sym", "shift:K", "biject:SRC:DST", "transpose:", "gpgpu"] {
+            assert!(err.contains(word), "vocabulary misses {word}: {err}");
+        }
         assert!(Pattern::parse("shift").is_err());
+        let err = Pattern::parse("biject:warp:io").unwrap_err().to_string();
+        assert!(err.contains("compute|io|service"), "type vocabulary cited: {err}");
     }
 
     #[test]

@@ -7,8 +7,10 @@ use anyhow::{ensure, Context, Result};
 // The per-cell figure structs moved into the unified eval layer
 // (`crate::eval`), where the evaluators that produce them live; the
 // sweep surface re-exports them under their historical names so rows,
-// CSV columns and callers are unchanged.
+// CSV columns and callers are unchanged. WorkloadStats lives with the
+// workload subsystem for the same reason.
 pub use crate::eval::{FairRateStats as SweepSim, NetsimStats};
+pub use crate::workload::WorkloadStats;
 
 /// One cell of an executed sweep: the grid coordinates plus the static
 /// congestion summary, fault-scenario figures and optional throughput.
@@ -43,12 +45,15 @@ pub struct SweepResult {
     /// Flit-level simulation figures when the spec's `netsim` axis is
     /// non-empty (absent on unroutable fault cells).
     pub netsim: Option<NetsimStats>,
+    /// Workload makespan figures when the spec's `workloads` axis is
+    /// non-empty (absent on unroutable fault cells).
+    pub workload: Option<WorkloadStats>,
 }
 
 /// Column names of the sweep table, in emission order. Vector-valued
 /// summary fields (`hot_per_level`, `cmax_up`, `cmax_down`) are encoded
 /// `"a|b|c"` so every cell stays CSV- and JSON-friendly.
-pub const COLUMNS: [&str; 26] = [
+pub const COLUMNS: [&str; 30] = [
     "topology",
     "placement",
     "algo",
@@ -75,6 +80,10 @@ pub const COLUMNS: [&str; 26] = [
     "ns_mean_lat",
     "ns_p99_lat",
     "ns_saturated",
+    "workload",
+    "wl_phases",
+    "wl_makespan",
+    "wl_job_times",
 ];
 
 fn join_nums<T: std::fmt::Display>(xs: &[T]) -> String {
@@ -116,6 +125,15 @@ impl SweepResult {
             ),
             None => Default::default(),
         };
+        let (wl_name, wl_phases, wl_makespan, wl_job_times) = match &self.workload {
+            Some(w) => (
+                w.name.clone(),
+                w.phases.to_string(),
+                w.makespan.to_string(),
+                join_nums(&w.job_times),
+            ),
+            None => Default::default(),
+        };
         vec![
             self.topology.clone(),
             self.placement.clone(),
@@ -143,6 +161,10 @@ impl SweepResult {
             ns_mean,
             ns_p99,
             ns_sat,
+            wl_name,
+            wl_phases,
+            wl_makespan,
+            wl_job_times,
         ]
     }
 
@@ -193,6 +215,16 @@ impl SweepResult {
                 saturated: flag(25)?,
             })
         };
+        let workload = if cells[26..30].iter().all(|c| c.is_empty()) {
+            None
+        } else {
+            Some(WorkloadStats {
+                name: cells[26].clone(),
+                phases: int(27)? as usize,
+                makespan: float(28)?,
+                job_times: split_nums(&cells[29])?,
+            })
+        };
         let routable = flag(16)?;
         Ok(SweepResult {
             topology: cells[0].clone(),
@@ -217,6 +249,7 @@ impl SweepResult {
             sim,
             retention,
             netsim,
+            workload,
         })
     }
 }
@@ -317,6 +350,12 @@ mod tests {
                 p99_latency: 84.0,
                 saturated: true,
             }),
+            workload: sim.then(|| WorkloadStats {
+                name: "mix".into(),
+                phases: 63,
+                makespan: 29123.75,
+                job_times: vec![29123.75, 14201.5],
+            }),
         }
     }
 
@@ -373,6 +412,12 @@ mod tests {
         let mut cells = sample(true).to_cells();
         cells[22] = "fast".into();
         assert!(SweepResult::from_cells(&cells).is_err());
+        let mut cells = sample(true).to_cells();
+        cells[28] = "eons".into();
+        assert!(SweepResult::from_cells(&cells).is_err(), "wl_makespan must be a number");
+        let mut cells = sample(true).to_cells();
+        cells[29] = "1|two".into();
+        assert!(SweepResult::from_cells(&cells).is_err(), "wl_job_times must be numbers");
         let wrong = Table::new("x", &["a", "b"]);
         assert!(sweep_results_from_table(&wrong).is_err());
     }

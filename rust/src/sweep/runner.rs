@@ -10,10 +10,11 @@ use crate::faults::{DegradedRouter, FaultModel};
 use crate::metrics::AlgoSummary;
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
-use crate::routing::AlgorithmKind;
+use crate::routing::{AlgorithmKind, Router};
 use crate::topology::{families, Topology};
 use crate::util::par;
-use anyhow::Result;
+use crate::workload::{evaluate_makespan, lower, LoweredWorkload, WorkloadSpec, WorkloadStats};
+use anyhow::{Context, Result};
 use std::collections::HashMap;
 
 /// Execution options of a sweep (how, not what — the *what* lives in
@@ -41,16 +42,24 @@ struct Group {
     /// Pattern flow lists, generated once and shared by every algorithm
     /// and seed of the group.
     flows: Vec<Vec<(u32, u32)>>,
+    /// Workloads lowered onto this group's fabric (one per
+    /// `spec.workloads` entry), shared by every algorithm and seed.
+    lowered: Vec<LoweredWorkload>,
 }
 
 /// A unique unit of work: (group, algorithm, pattern, fault, netsim
 /// axis index, effective seed).
 type JobKey = (usize, AlgorithmKind, usize, usize, usize, u64);
 
+/// A unique workload evaluation: (group, algorithm, fault, workload
+/// index, effective seed) — deliberately independent of the pattern
+/// and netsim axes, which the `wl_*` columns do not depend on.
+type WlKey = (usize, AlgorithmKind, usize, usize, u64);
+
 /// Execute a sweep and return one [`SweepResult`] per grid cell, in
 /// deterministic grid order: topology-major, then placement, pattern,
-/// algorithm, fault, netsim offered load, seed — independent of thread
-/// count and scheduling.
+/// algorithm, fault, workload, netsim offered load, seed — independent
+/// of thread count and scheduling.
 ///
 /// Work sharing:
 ///  * each topology is built and validated once, each placement applied
@@ -71,6 +80,14 @@ type JobKey = (usize, AlgorithmKind, usize, usize, usize, u64);
 /// [`crate::eval::Evaluator`] stack (congestion always; fair-rate with
 /// `simulate`; flit-level per netsim axis entry), so no evaluator ever
 /// re-traces or re-allocates the routes.
+///
+/// A `workloads` axis entry additionally evaluates that workload's
+/// fluid makespan ([`crate::workload::evaluate_makespan`]) with the
+/// cell's router. Workloads are lowered once per (topology, placement),
+/// and — because the `wl_*` columns are independent of the cell's
+/// pattern and netsim rate — evaluated once per (group, algorithm,
+/// fault, workload, effective seed) in their own deduplicated job
+/// batch, then attached to every matching row.
 ///
 /// Fault cells route through [`DegradedRouter`] — repairing the
 /// pristine store with [`FlowSet::retrace_incremental`], which
@@ -98,6 +115,11 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
             model.validate_for(&topo.spec)?;
         }
     }
+    let workload_specs: Vec<WorkloadSpec> = spec
+        .workloads
+        .iter()
+        .map(|w| WorkloadSpec::parse(w))
+        .collect::<Result<Vec<_>>>()?;
     let mut groups: Vec<Group> = Vec::with_capacity(spec.topologies.len() * spec.placements.len());
     for topo_idx in 0..spec.topologies.len() {
         for (placement_idx, placement_spec) in spec.placements.iter().enumerate() {
@@ -107,41 +129,74 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
                 .iter()
                 .map(|p| p.flows(&topos[topo_idx], &types))
                 .collect::<Result<Vec<_>>>()?;
-            groups.push(Group { topo_idx, placement_idx, types, flows });
+            let lowered = workload_specs
+                .iter()
+                .map(|w| {
+                    lower(w, &topos[topo_idx], &types).with_context(|| {
+                        format!(
+                            "workload {:?} on {} / {placement_spec}",
+                            w.name, spec.topologies[topo_idx]
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            groups.push(Group { topo_idx, placement_idx, types, flows, lowered });
         }
     }
 
     // The netsim axis: `None` when the axis is off (factor of one), one
-    // offered load per entry otherwise.
+    // offered load per entry otherwise. The workload axis follows the
+    // same shape (`None` = off, `Some(index)` into the lowered specs).
     let netsim_axis: Vec<Option<f64>> = if spec.netsim.is_empty() {
         vec![None]
     } else {
         spec.netsim.iter().copied().map(Some).collect()
     };
+    let workload_axis: Vec<Option<usize>> = if spec.workloads.is_empty() {
+        vec![None]
+    } else {
+        (0..spec.workloads.len()).map(Some).collect()
+    };
 
     // Phase 2: deduplicate every grid cell into unique jobs, flattened
     // across all groups. A cell is seed-sensitive when its algorithm is
     // random, its fault scenario is generated (non-`none`), OR it runs a
-    // flit-level simulation (seeded injection processes).
+    // flit-level simulation (seeded injection processes). The workload
+    // evaluation is deduplicated separately below — its `wl_*` columns
+    // do not depend on the pattern or netsim axes, so one evaluation
+    // per (group, algorithm, fault, workload, effective seed) serves
+    // every matching cell.
     let mut jobs: Vec<JobKey> = Vec::new();
     let mut job_index: HashMap<JobKey, usize> = HashMap::new();
     let mut cell_jobs: Vec<usize> = Vec::with_capacity(spec.num_cells());
+    let mut wl_jobs: Vec<WlKey> = Vec::new();
+    let mut wl_index: HashMap<WlKey, usize> = HashMap::new();
     for gi in 0..groups.len() {
         for pi in 0..spec.patterns.len() {
             for &algo in &spec.algorithms {
                 for fi in 0..fault_models.len() {
-                    for ni in 0..netsim_axis.len() {
-                        for &seed in &spec.seeds {
-                            let sensitive = seed_sensitive(algo)
-                                || !fault_models[fi].is_none()
-                                || netsim_axis[ni].is_some();
-                            let effective = if sensitive { seed } else { spec.seeds[0] };
-                            let key = (gi, algo, pi, fi, ni, effective);
-                            let j = *job_index.entry(key).or_insert_with(|| {
-                                jobs.push(key);
-                                jobs.len() - 1
-                            });
-                            cell_jobs.push(j);
+                    for wi in 0..workload_axis.len() {
+                        for ni in 0..netsim_axis.len() {
+                            for &seed in &spec.seeds {
+                                let sensitive = seed_sensitive(algo)
+                                    || !fault_models[fi].is_none()
+                                    || netsim_axis[ni].is_some();
+                                let effective = if sensitive { seed } else { spec.seeds[0] };
+                                let key = (gi, algo, pi, fi, ni, effective);
+                                let j = *job_index.entry(key).or_insert_with(|| {
+                                    jobs.push(key);
+                                    jobs.len() - 1
+                                });
+                                cell_jobs.push(j);
+                                if let Some(w) = workload_axis[wi] {
+                                    let ws = workload_seed(spec, algo, &fault_models[fi], seed);
+                                    let wl_key = (gi, algo, fi, w, ws);
+                                    wl_index.entry(wl_key).or_insert_with(|| {
+                                        wl_jobs.push(wl_key);
+                                        wl_jobs.len() - 1
+                                    });
+                                }
+                            }
                         }
                     }
                 }
@@ -165,31 +220,53 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
             seed,
         )
     });
+    // Phase 3b: the deduplicated workload evaluations (empty unless the
+    // workload axis is on).
+    let wl_cells = par::par_map(opts.threads, &wl_jobs, |_, &(gi, algo, fi, w, seed)| {
+        let group = &groups[gi];
+        workload_cell(
+            &topos[group.topo_idx],
+            &group.types,
+            algo,
+            &fault_models[fi],
+            &group.lowered[w],
+            seed,
+        )
+    });
 
-    // Phase 4: emit one row per requested cell, in grid order.
+    // Phase 4: emit one row per requested cell, in grid order, joining
+    // each cell with its (shared) workload evaluation when the axis is
+    // on.
     let mut out = Vec::with_capacity(spec.num_cells());
     let mut cursor = 0usize;
-    for group in &groups {
+    for (gi, group) in groups.iter().enumerate() {
         for _pi in 0..spec.patterns.len() {
-            for _algo in &spec.algorithms {
-                for fault in &spec.faults {
-                    for _ni in 0..netsim_axis.len() {
-                        for &seed in &spec.seeds {
-                            let cell = &cells[cell_jobs[cursor]];
-                            cursor += 1;
-                            out.push(SweepResult {
-                                topology: spec.topologies[group.topo_idx].clone(),
-                                placement: spec.placements[group.placement_idx].clone(),
-                                fault: fault.clone(),
-                                seed,
-                                summary: cell.summary.clone(),
-                                dead_links: cell.dead_links,
-                                routes_changed: cell.routes_changed,
-                                routable: cell.routable,
-                                sim: cell.sim.clone(),
-                                retention: cell.retention,
-                                netsim: cell.netsim.clone(),
-                            });
+            for &algo in &spec.algorithms {
+                for (fi, fault) in spec.faults.iter().enumerate() {
+                    for &wl in &workload_axis {
+                        for _ni in 0..netsim_axis.len() {
+                            for &seed in &spec.seeds {
+                                let cell = &cells[cell_jobs[cursor]];
+                                cursor += 1;
+                                let workload = wl.and_then(|w| {
+                                    let ws = workload_seed(spec, algo, &fault_models[fi], seed);
+                                    wl_cells[wl_index[&(gi, algo, fi, w, ws)]].clone()
+                                });
+                                out.push(SweepResult {
+                                    topology: spec.topologies[group.topo_idx].clone(),
+                                    placement: spec.placements[group.placement_idx].clone(),
+                                    fault: fault.clone(),
+                                    seed,
+                                    summary: cell.summary.clone(),
+                                    dead_links: cell.dead_links,
+                                    routes_changed: cell.routes_changed,
+                                    routable: cell.routable,
+                                    sim: cell.sim.clone(),
+                                    retention: cell.retention,
+                                    netsim: cell.netsim.clone(),
+                                    workload,
+                                });
+                            }
                         }
                     }
                 }
@@ -197,6 +274,17 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
         }
     }
     Ok(out)
+}
+
+/// The effective seed of a workload evaluation: the fluid makespan is
+/// deterministic, so only random algorithms and generated fault
+/// scenarios make it seed-sensitive (the netsim axis never does).
+fn workload_seed(spec: &SweepSpec, algo: AlgorithmKind, fault: &FaultModel, seed: u64) -> u64 {
+    if seed_sensitive(algo) || !fault.is_none() {
+        seed
+    } else {
+        spec.seeds[0]
+    }
 }
 
 /// Routing depends on the seed only for the random algorithms; every
@@ -215,6 +303,31 @@ struct Cell {
     sim: Option<SweepSim>,
     retention: Option<f64>,
     netsim: Option<NetsimStats>,
+}
+
+/// One deduplicated workload evaluation: build the (fault-aware)
+/// router for the scenario expanded from `seed` and run the fluid
+/// makespan. Fault cells evaluate on the *rerouted* fabric; a scenario
+/// that partitions it yields empty `wl_*` columns (matching the cell's
+/// own unroutable row), never a grid error.
+fn workload_cell(
+    topo: &Topology,
+    types: &NodeTypeMap,
+    algo: AlgorithmKind,
+    fault_model: &FaultModel,
+    lowered: &LoweredWorkload,
+    seed: u64,
+) -> Option<WorkloadStats> {
+    let router: Box<dyn Router> = if fault_model.is_none() {
+        algo.build(topo, Some(types), seed)
+    } else {
+        let faults = fault_model.generate(topo, seed).fault_set(topo);
+        match DegradedRouter::new(topo, &faults, algo.build(topo, Some(types), seed)) {
+            Ok(d) => Box::new(d),
+            Err(_) => return None, // partitioned: empty wl_* columns
+        }
+    };
+    evaluate_makespan(topo, &*router, lowered).ok().map(|e| WorkloadStats::from_eval(&e))
 }
 
 /// The evaluator stack of one cell, selected uniformly through
@@ -370,6 +483,7 @@ mod tests {
             seeds: vec![1],
             simulate: false,
             netsim: Vec::new(),
+            workloads: Vec::new(),
         }
     }
 
@@ -489,6 +603,51 @@ mod tests {
         // And the parallel run is byte-identical to serial, floats included.
         let serial = run_sweep(&spec, &SweepOptions { threads: 1 }).unwrap();
         assert_eq!(serial, rows);
+    }
+
+    #[test]
+    fn workload_axis_attaches_makespan_columns() {
+        let mut spec = tiny_spec();
+        spec.patterns = vec![Pattern::C2ioSym];
+        spec.placements = vec!["io:last:1,gpgpu:first:2".into()];
+        spec.algorithms = vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk];
+        spec.workloads = vec!["mix".into(), "single:c2io-sym:1024".into()];
+        let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+        assert_eq!(rows.len(), 4, "workload axis multiplies the grid");
+        for row in &rows {
+            let wl = row.workload.as_ref().expect("workload columns attached");
+            assert!(wl.makespan > 0.0);
+            assert!(wl.phases > 0);
+            assert!(!wl.job_times.is_empty());
+        }
+        // Rows come back workload-major within a (pattern, algo) block,
+        // and the acceptance headline holds through the grid engine:
+        // gdmodk's mix makespan beats dmodk's.
+        let at = |algo: &str, wl: &str| {
+            rows.iter()
+                .find(|r| {
+                    r.summary.algorithm == algo
+                        && r.workload.as_ref().is_some_and(|w| w.name == wl)
+                })
+                .unwrap()
+                .workload
+                .clone()
+                .unwrap()
+        };
+        assert!(at("gdmodk", "mix").makespan < at("dmodk", "mix").makespan);
+        // And the parallel run is byte-identical to serial, floats included.
+        let serial = run_sweep(&spec, &SweepOptions { threads: 1 }).unwrap();
+        assert_eq!(serial, rows);
+    }
+
+    #[test]
+    fn workload_axis_errors_cleanly_on_missing_groups() {
+        // `mix` needs gpgpu nodes; the paper placement has none — the
+        // grid must fail with a pointer at the group, not run empty.
+        let mut spec = tiny_spec();
+        spec.workloads = vec!["mix".into()];
+        let err = run_sweep(&spec, &SweepOptions::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("gpgpu"), "{err:#}");
     }
 
     #[test]

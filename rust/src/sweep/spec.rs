@@ -42,6 +42,13 @@ pub struct SweepSpec {
     /// multiplies the grid and attaches accepted-throughput and
     /// mean/p99-latency columns to every cell.
     pub netsim: Vec<f64>,
+    /// Application-workload axis ([`crate::workload`]): workload
+    /// selectors ([`crate::workload::WorkloadSpec::parse`] strings —
+    /// built-ins, `single:<pattern>:BYTES`, or `.toml` paths). Empty
+    /// disables the axis; non-empty multiplies the grid and attaches the
+    /// fluid makespan columns (`wl_*`) to every cell, evaluated with the
+    /// cell's algorithm, fault scenario and seed.
+    pub workloads: Vec<String>,
 }
 
 impl SweepSpec {
@@ -63,6 +70,7 @@ impl SweepSpec {
             seeds: vec![1],
             simulate: false,
             netsim: Vec::new(),
+            workloads: Vec::new(),
         }
     }
 
@@ -83,9 +91,9 @@ impl SweepSpec {
         // `pgft run` experiment file): a non-empty document must carry a
         // `[sweep]` section, and every key in it must be recognized —
         // otherwise defaults would silently shadow the user's intent.
-        const KNOWN: [&str; 8] = [
+        const KNOWN: [&str; 10] = [
             "topologies", "placements", "patterns", "algorithms", "faults", "seeds", "simulate",
-            "netsim",
+            "netsim", "workload", "workloads",
         ];
         if !doc.sections.is_empty() {
             let section = doc
@@ -150,6 +158,16 @@ impl SweepSpec {
             Some(v) => v.as_float_array()?,
             None => Vec::new(),
         };
+        // `workload` and `workloads` are interchangeable spellings.
+        ensure!(
+            !(doc.get("sweep", "workload").is_some() && doc.get("sweep", "workloads").is_some()),
+            "[sweep] has both `workload` and `workloads` — keep one"
+        );
+        let workloads = match doc.get("sweep", "workload").or_else(|| doc.get("sweep", "workloads"))
+        {
+            Some(v) => v.as_str_array()?,
+            None => Vec::new(),
+        };
         let spec = SweepSpec {
             topologies,
             placements,
@@ -159,6 +177,7 @@ impl SweepSpec {
             seeds,
             simulate,
             netsim,
+            workloads,
         };
         spec.validate()?;
         Ok(spec)
@@ -178,6 +197,7 @@ impl SweepSpec {
             * self.patterns.len()
             * self.algorithms.len()
             * self.faults.len()
+            * self.workloads.len().max(1)
             * self.netsim.len().max(1)
             * self.seeds.len()
     }
@@ -205,6 +225,10 @@ impl SweepSpec {
             "sweep: netsim offered loads must be strictly ascending: {:?}",
             self.netsim
         );
+        for w in &self.workloads {
+            crate::workload::WorkloadSpec::parse(w)
+                .with_context(|| format!("sweep workload spec {w:?}"))?;
+        }
         Ok(())
     }
 }
@@ -289,6 +313,28 @@ simulate = true
         assert!(
             SweepSpec::from_doc(&Doc::parse("[sweep]\nnetsim = [0.5, 0.1]\n").unwrap()).is_err()
         );
+    }
+
+    #[test]
+    fn workload_axis_parses_and_validates() {
+        let doc =
+            Doc::parse("[sweep]\nworkload = [\"mix\", \"single:c2io-sym:1024\"]\n").unwrap();
+        let s = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(s.workloads.len(), 2);
+        assert_eq!(s.num_cells(), 2 * 4 * 6 * 2, "workloads multiply the grid");
+        // The plural spelling works too; both at once is ambiguous.
+        let doc = Doc::parse("[sweep]\nworkloads = [\"mix\"]\n").unwrap();
+        assert_eq!(SweepSpec::from_doc(&doc).unwrap().workloads, vec!["mix".to_string()]);
+        let doc =
+            Doc::parse("[sweep]\nworkload = [\"mix\"]\nworkloads = [\"mix\"]\n").unwrap();
+        assert!(SweepSpec::from_doc(&doc).is_err());
+        // Defaults to off (factor of one), and bad selectors are
+        // rejected at validation time with the full vocabulary.
+        let s = SweepSpec::from_doc(&Doc::parse("").unwrap()).unwrap();
+        assert!(s.workloads.is_empty());
+        let doc = Doc::parse("[sweep]\nworkload = [\"frobnicate\"]\n").unwrap();
+        let err = SweepSpec::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("single:"), "{err:#}");
     }
 
     #[test]

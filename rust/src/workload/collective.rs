@@ -1,0 +1,270 @@
+//! MPI-style collective operations compiled into per-step flow lists.
+//!
+//! A collective is a *schedule*: an ordered sequence of bulk-synchronous
+//! steps, each a list of `(src, dst)` flows over an arbitrary node group
+//! with a uniform per-flow byte volume. The compiled form is exactly
+//! what the workload lowering ([`crate::workload::compile`]) consumes —
+//! one [`crate::eval::FlowSet`] per step — so collective traffic flows
+//! through the same evaluator stack as any static pattern.
+//!
+//! Shipped algorithms (the textbook forms; `n` = group size, `bytes` =
+//! per-member payload):
+//!
+//! | collective         | steps          | per-flow bytes | total volume        |
+//! |--------------------|----------------|----------------|---------------------|
+//! | `ring-allreduce`   | `2(n−1)`       | `bytes/n`      | `2(n−1)·bytes`      |
+//! | `rd-allreduce`     | `log₂ n`       | `bytes`        | `n·log₂ n·bytes`    |
+//! | `binomial-bcast`   | `⌈log₂ n⌉`     | `bytes`        | `(n−1)·bytes`       |
+//! | `pairwise-a2a`     | `n−1`          | `bytes/n`      | `(n−1)·bytes`       |
+//! | `gather`           | `1`            | `bytes`        | `(n−1)·bytes`       |
+//!
+//! Invariants pinned by `tests/workload_model.rs`: schedules conserve
+//! the closed-form total volume, every group member participates, each
+//! ring step is the intra-group shift-by-one permutation, and
+//! recursive doubling runs exactly `log₂ n` perfect-matching steps on
+//! power-of-two groups.
+
+use crate::topology::Nid;
+use anyhow::{ensure, Result};
+
+/// The accepted collective names (the vocabulary parse errors cite).
+pub const COLLECTIVE_VOCAB: &str =
+    "ring-allreduce|rd-allreduce|binomial-bcast|pairwise-a2a|gather";
+
+/// One MPI-style collective operation over a node group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collective {
+    /// Ring allreduce: reduce-scatter then allgather around the group
+    /// ring — `2(n−1)` shift-by-one steps of `bytes/n` chunks (the
+    /// bandwidth-optimal large-message algorithm).
+    RingAllreduce,
+    /// Recursive-doubling allreduce: `log₂ n` butterfly exchange steps,
+    /// full payload per step (latency-optimal; power-of-two groups only).
+    RecursiveDoublingAllreduce,
+    /// Binomial-tree broadcast from the group's first member: the set of
+    /// informed members doubles each step.
+    BinomialBroadcast,
+    /// Pairwise-exchange all-to-all: step `s` sends each member's chunk
+    /// to the peer `s` positions around the group ring.
+    PairwiseAllToAll,
+    /// Single-step gather: every member sends its payload to the group's
+    /// first member (incast).
+    GatherToRoot,
+}
+
+/// One bulk-synchronous step of a compiled collective: concurrent flows,
+/// all carrying the same byte volume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectiveStep {
+    /// Concurrent `(src, dst)` flows of this step (no self-flows).
+    pub flows: Vec<(Nid, Nid)>,
+    /// Bytes each flow moves in this step.
+    pub bytes_per_flow: f64,
+}
+
+impl Collective {
+    /// Parse a collective name (see [`COLLECTIVE_VOCAB`]).
+    pub fn parse(s: &str) -> Result<Collective> {
+        Ok(match s {
+            "ring-allreduce" => Collective::RingAllreduce,
+            "rd-allreduce" => Collective::RecursiveDoublingAllreduce,
+            "binomial-bcast" => Collective::BinomialBroadcast,
+            "pairwise-a2a" => Collective::PairwiseAllToAll,
+            "gather" => Collective::GatherToRoot,
+            other => anyhow::bail!(
+                "unknown collective {other:?} (expected one of {COLLECTIVE_VOCAB})"
+            ),
+        })
+    }
+
+    /// Canonical name (inverse of [`Collective::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::RingAllreduce => "ring-allreduce",
+            Collective::RecursiveDoublingAllreduce => "rd-allreduce",
+            Collective::BinomialBroadcast => "binomial-bcast",
+            Collective::PairwiseAllToAll => "pairwise-a2a",
+            Collective::GatherToRoot => "gather",
+        }
+    }
+
+    /// Closed-form total byte volume the schedule moves (the figure the
+    /// volume-conservation property test checks the compiled steps
+    /// against).
+    pub fn total_bytes(&self, n: usize, bytes: u64) -> f64 {
+        let (n, b) = (n as f64, bytes as f64);
+        match self {
+            Collective::RingAllreduce => 2.0 * (n - 1.0) * n * (b / n),
+            Collective::RecursiveDoublingAllreduce => (n.log2().round()) * n * b,
+            Collective::BinomialBroadcast => (n - 1.0) * b,
+            Collective::PairwiseAllToAll => (n - 1.0) * n * (b / n),
+            Collective::GatherToRoot => (n - 1.0) * b,
+        }
+    }
+
+    /// Compile the collective over `group` (distinct NIDs, ≥ 2 members)
+    /// with a per-member payload of `bytes` into its step schedule.
+    /// Member *indices* drive the algorithms, so the same schedule shape
+    /// lands on whatever NIDs the group resolution selected.
+    pub fn schedule(&self, group: &[Nid], bytes: u64) -> Result<Vec<CollectiveStep>> {
+        let n = group.len();
+        ensure!(n >= 2, "collective {} needs a group of >= 2 nodes, got {n}", self.name());
+        ensure!(bytes >= 1, "collective {}: payload must be >= 1 byte", self.name());
+        {
+            let mut sorted = group.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            ensure!(sorted.len() == n, "collective {}: group has duplicate NIDs", self.name());
+        }
+        let chunk = bytes as f64 / n as f64;
+        let full = bytes as f64;
+        let steps = match self {
+            Collective::RingAllreduce => {
+                // Reduce-scatter + allgather: 2(n−1) identical ring
+                // shifts of one chunk (which chunk rotates is a payload
+                // detail; the flow shape is the shift-by-one pattern).
+                let shift: Vec<(Nid, Nid)> =
+                    (0..n).map(|i| (group[i], group[(i + 1) % n])).collect();
+                (0..2 * (n - 1))
+                    .map(|_| CollectiveStep { flows: shift.clone(), bytes_per_flow: chunk })
+                    .collect()
+            }
+            Collective::RecursiveDoublingAllreduce => {
+                ensure!(
+                    n.is_power_of_two(),
+                    "rd-allreduce needs a power-of-two group, got {n} members \
+                     (use ring-allreduce for arbitrary group sizes)"
+                );
+                (0..n.trailing_zeros())
+                    .map(|s| CollectiveStep {
+                        flows: (0..n).map(|i| (group[i], group[i ^ (1 << s)])).collect(),
+                        bytes_per_flow: full,
+                    })
+                    .collect()
+            }
+            Collective::BinomialBroadcast => {
+                let mut steps = Vec::new();
+                let mut informed = 1usize;
+                while informed < n {
+                    let flows: Vec<(Nid, Nid)> = (0..informed)
+                        .filter(|i| i + informed < n)
+                        .map(|i| (group[i], group[i + informed]))
+                        .collect();
+                    steps.push(CollectiveStep { flows, bytes_per_flow: full });
+                    informed *= 2;
+                }
+                steps
+            }
+            Collective::PairwiseAllToAll => (1..n)
+                .map(|s| CollectiveStep {
+                    flows: (0..n).map(|i| (group[i], group[(i + s) % n])).collect(),
+                    bytes_per_flow: chunk,
+                })
+                .collect(),
+            Collective::GatherToRoot => vec![CollectiveStep {
+                flows: (1..n).map(|i| (group[i], group[0])).collect(),
+                bytes_per_flow: full,
+            }],
+        };
+        debug_assert!(
+            steps.iter().all(|st| st.flows.iter().all(|&(s, d)| s != d)),
+            "collective schedules never emit self-flows"
+        );
+        Ok(steps)
+    }
+}
+
+impl std::fmt::Display for Collective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [Collective; 5] = [
+        Collective::RingAllreduce,
+        Collective::RecursiveDoublingAllreduce,
+        Collective::BinomialBroadcast,
+        Collective::PairwiseAllToAll,
+        Collective::GatherToRoot,
+    ];
+
+    #[test]
+    fn parse_roundtrip_and_vocab_in_errors() {
+        for c in ALL {
+            assert_eq!(Collective::parse(c.name()).unwrap(), c);
+        }
+        let err = Collective::parse("allgatherv").unwrap_err().to_string();
+        assert!(err.contains("ring-allreduce") && err.contains("gather"), "{err}");
+    }
+
+    #[test]
+    fn ring_steps_are_shift_by_one() {
+        let group = [3u32, 7, 11, 20];
+        let steps = Collective::RingAllreduce.schedule(&group, 400).unwrap();
+        assert_eq!(steps.len(), 2 * 3);
+        for st in &steps {
+            assert_eq!(st.flows, vec![(3, 7), (7, 11), (11, 20), (20, 3)]);
+            assert!((st.bytes_per_flow - 100.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_is_log2_perfect_matchings() {
+        let group: Vec<u32> = (0..8).map(|i| i * 5).collect();
+        let steps = Collective::RecursiveDoublingAllreduce.schedule(&group, 64).unwrap();
+        assert_eq!(steps.len(), 3);
+        for st in &steps {
+            assert_eq!(st.flows.len(), 8);
+            let mut srcs: Vec<u32> = st.flows.iter().map(|f| f.0).collect();
+            let mut dsts: Vec<u32> = st.flows.iter().map(|f| f.1).collect();
+            srcs.sort_unstable();
+            dsts.sort_unstable();
+            assert_eq!(srcs, group, "every member sends each step");
+            assert_eq!(dsts, group, "every member receives each step");
+        }
+        // Non-power-of-two groups are rejected with a pointer to ring.
+        let err = Collective::RecursiveDoublingAllreduce
+            .schedule(&[1, 2, 3], 64)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("power-of-two") && err.contains("ring-allreduce"), "{err}");
+    }
+
+    #[test]
+    fn volume_conservation_closed_forms() {
+        let group: Vec<u32> = (0..16).collect();
+        for c in ALL {
+            let steps = c.schedule(&group, 1 << 20).unwrap();
+            let moved: f64 =
+                steps.iter().map(|s| s.flows.len() as f64 * s.bytes_per_flow).sum();
+            let want = c.total_bytes(group.len(), 1 << 20);
+            assert!(
+                (moved - want).abs() < 1e-6 * want,
+                "{c}: moved {moved}, closed form {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_informs_everyone_once() {
+        let group: Vec<u32> = (0..11).collect();
+        let steps = Collective::BinomialBroadcast.schedule(&group, 9).unwrap();
+        assert_eq!(steps.len(), 4, "ceil(log2 11)");
+        let mut dsts: Vec<u32> = steps.iter().flat_map(|s| s.flows.iter().map(|f| f.1)).collect();
+        dsts.sort_unstable();
+        assert_eq!(dsts, (1..11).collect::<Vec<u32>>(), "each non-root informed exactly once");
+    }
+
+    #[test]
+    fn degenerate_groups_are_rejected() {
+        for c in ALL {
+            assert!(c.schedule(&[5], 64).is_err(), "{c}: singleton group");
+            assert!(c.schedule(&[1, 2, 2, 4], 64).is_err(), "{c}: duplicate NIDs");
+            assert!(c.schedule(&[1, 2], 0).is_err(), "{c}: zero payload");
+        }
+    }
+}

@@ -1,0 +1,526 @@
+//! Jobs, node groups, phases and the [`WorkloadSpec`]: *what* runs on
+//! the fabric.
+//!
+//! A [`Job`] is a node group — selected by [`crate::nodes::NodeType`]
+//! and/or NID range, i.e. by the same placement vocabulary the paper
+//! builds its premise on — plus an ordered sequence of [`Phase`]s:
+//! collectives ([`Collective`]), pattern traffic bursts
+//! ([`crate::patterns::Pattern`]) or idle gaps. A [`WorkloadSpec`] is
+//! several jobs running **concurrently** (each advancing through its own
+//! phases), which is what finally stresses the node-type-balancing claim
+//! on realistic overlapping application mixes instead of one static
+//! pattern at a time.
+//!
+//! Specs come from three places, uniformly through
+//! [`WorkloadSpec::parse`]: named built-ins (`mix`, `allreduce`,
+//! `checkpoint`), a `single:<pattern>:<bytes>` one-phase form (the
+//! bridge to static-pattern sweep cells, pinned bit-exact by
+//! `tests/workload_model.rs`), or a TOML file:
+//!
+//! ```toml
+//! [workload]
+//! name = "train-and-checkpoint"
+//!
+//! [job.train]
+//! group  = "type:gpgpu"
+//! phases = ["ring-allreduce:4096", "idle:64", "ring-allreduce:4096"]
+//!
+//! [job.ckpt]
+//! group  = "type:compute"
+//! phases = ["idle:32", "pattern:c2io-sym:1024"]
+//! ```
+//!
+//! (Job sections are read in name order — the order is cosmetic, since
+//! jobs run concurrently; only row/flow ordering follows it.)
+
+use super::collective::{Collective, COLLECTIVE_VOCAB};
+use crate::config::Doc;
+use crate::nodes::{NodeType, NodeTypeMap, TYPE_VOCAB};
+use crate::patterns::{Pattern, PATTERN_VOCAB};
+use crate::topology::{Nid, Topology};
+use anyhow::{ensure, Context, Result};
+
+/// The accepted group-selector forms (the vocabulary parse errors cite).
+pub const GROUP_VOCAB: &str = "all|type:TY|type:TY:N|nids:A-B";
+
+/// The accepted phase forms (the vocabulary parse errors cite).
+pub const PHASE_VOCAB: &str = "<collective>:BYTES|pattern:<pattern>:BYTES|idle:TIME";
+
+/// The accepted workload-spec forms (the vocabulary parse errors cite).
+pub const WORKLOAD_VOCAB: &str = "mix|allreduce|checkpoint|single:<pattern>:BYTES|FILE.toml";
+
+/// Selects a job's node group from the fabric's type map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GroupSpec {
+    /// Every node of the fabric.
+    All,
+    /// Every node of one type.
+    Type {
+        /// The selecting node type.
+        ty: NodeType,
+    },
+    /// The first `count` nodes of one type, in NID order.
+    TypeFirst {
+        /// The selecting node type.
+        ty: NodeType,
+        /// How many nodes to take.
+        count: usize,
+    },
+    /// An inclusive NID range.
+    Range {
+        /// First NID of the range.
+        start: Nid,
+        /// Last NID of the range (inclusive).
+        end: Nid,
+    },
+}
+
+impl GroupSpec {
+    /// Parse a group selector (see [`GROUP_VOCAB`]).
+    pub fn parse(s: &str) -> Result<GroupSpec> {
+        let bad = |why: &str| {
+            anyhow::anyhow!("group {s:?}: {why} (expected one of {GROUP_VOCAB}; types: {TYPE_VOCAB})")
+        };
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "all" => Ok(GroupSpec::All),
+            "type" => {
+                let ty = NodeType::parse(parts.get(1).copied().unwrap_or(""))
+                    .ok_or_else(|| bad("bad node type"))?;
+                match parts.get(2) {
+                    None => Ok(GroupSpec::Type { ty }),
+                    Some(c) => {
+                        let count: usize = c.parse().map_err(|_| bad("bad count"))?;
+                        ensure!(count > 0, bad("count must be > 0"));
+                        Ok(GroupSpec::TypeFirst { ty, count })
+                    }
+                }
+            }
+            "nids" => {
+                let (a, b) = parts
+                    .get(1)
+                    .and_then(|r| r.split_once('-'))
+                    .ok_or_else(|| bad("want nids:A-B"))?;
+                let start: Nid = a.parse().map_err(|_| bad("bad range start"))?;
+                let end: Nid = b.parse().map_err(|_| bad("bad range end"))?;
+                ensure!(start <= end, bad("range start exceeds end"));
+                Ok(GroupSpec::Range { start, end })
+            }
+            _ => Err(bad("unknown selector")),
+        }
+    }
+
+    /// Canonical spec string (inverse of [`GroupSpec::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            GroupSpec::All => "all".into(),
+            GroupSpec::Type { ty } => format!("type:{ty}"),
+            GroupSpec::TypeFirst { ty, count } => format!("type:{ty}:{count}"),
+            GroupSpec::Range { start, end } => format!("nids:{start}-{end}"),
+        }
+    }
+
+    /// Resolve to the concrete member NIDs (ascending, distinct). Errors
+    /// when the selection is empty on this fabric — a job over zero
+    /// nodes is always a spec/placement mismatch, not a degenerate run.
+    pub fn resolve(&self, topo: &Topology, types: &NodeTypeMap) -> Result<Vec<Nid>> {
+        let nids = match self {
+            GroupSpec::All => (0..topo.num_nodes() as Nid).collect(),
+            GroupSpec::Type { ty } => types.nids_of(*ty),
+            GroupSpec::TypeFirst { ty, count } => {
+                let all = types.nids_of(*ty);
+                ensure!(
+                    all.len() >= *count,
+                    "group {}: only {} {ty} nodes on this fabric",
+                    self.name(),
+                    all.len()
+                );
+                all.into_iter().take(*count).collect()
+            }
+            GroupSpec::Range { start, end } => {
+                ensure!(
+                    (*end as usize) < topo.num_nodes(),
+                    "group {}: NID {end} outside the fabric (0..{})",
+                    self.name(),
+                    topo.num_nodes()
+                );
+                (*start..=*end).collect()
+            }
+        };
+        ensure!(
+            !nids.is_empty(),
+            "group {} selects no nodes on this fabric (placement census: {})",
+            self.name(),
+            types.census()
+        );
+        Ok(nids)
+    }
+}
+
+/// One phase of a job's lifetime.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Phase {
+    /// Run a collective over the job's group with a per-member payload.
+    Collective {
+        /// The collective operation.
+        op: Collective,
+        /// Per-member payload in bytes.
+        bytes: u64,
+    },
+    /// A traffic burst: the pattern's flows restricted to sources inside
+    /// the job's group, each flow moving `bytes`.
+    Traffic {
+        /// The traffic pattern.
+        pattern: Pattern,
+        /// Per-flow volume in bytes.
+        bytes: u64,
+    },
+    /// Compute/sleep: the job injects nothing for `time` units (time is
+    /// measured in bytes-at-unit-link-capacity, the fair-rate scale).
+    Idle {
+        /// Idle duration.
+        time: f64,
+    },
+}
+
+impl Phase {
+    /// Parse a phase spec (see [`PHASE_VOCAB`]).
+    pub fn parse(s: &str) -> Result<Phase> {
+        let vocab = || {
+            format!(
+                "(expected one of {PHASE_VOCAB}; collectives: {COLLECTIVE_VOCAB}; \
+                 patterns: {PATTERN_VOCAB})"
+            )
+        };
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "idle" => {
+                let time: f64 = parts
+                    .get(1)
+                    .with_context(|| format!("phase {s:?}: missing idle time {}", vocab()))?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("phase {s:?}: bad idle time ({e})"))?;
+                ensure!(time > 0.0 && time.is_finite(), "phase {s:?}: idle time must be > 0");
+                Ok(Phase::Idle { time })
+            }
+            "pattern" => {
+                ensure!(parts.len() >= 3, "phase {s:?}: want pattern:<pattern>:BYTES {}", vocab());
+                let bytes = parse_bytes(s, parts[parts.len() - 1])?;
+                let pattern = Pattern::parse(&parts[1..parts.len() - 1].join(":"))?;
+                Ok(Phase::Traffic { pattern, bytes })
+            }
+            _ => {
+                let op = Collective::parse(parts[0])
+                    .map_err(|_| anyhow::anyhow!("unknown phase {s:?} {}", vocab()))?;
+                let bytes = parse_bytes(
+                    s,
+                    parts.get(1).copied().with_context(|| {
+                        format!("phase {s:?}: missing collective payload bytes {}", vocab())
+                    })?,
+                )?;
+                Ok(Phase::Collective { op, bytes })
+            }
+        }
+    }
+
+    /// Canonical spec string (inverse of [`Phase::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Phase::Collective { op, bytes } => format!("{}:{bytes}", op.name()),
+            Phase::Traffic { pattern, bytes } => format!("pattern:{}:{bytes}", pattern.name()),
+            Phase::Idle { time } => format!("idle:{time}"),
+        }
+    }
+}
+
+fn parse_bytes(spec: &str, s: &str) -> Result<u64> {
+    let bytes: u64 =
+        s.parse().map_err(|e| anyhow::anyhow!("phase {spec:?}: bad byte volume {s:?} ({e})"))?;
+    ensure!(bytes >= 1, "phase {spec:?}: byte volume must be >= 1");
+    Ok(bytes)
+}
+
+/// One application job: a node group advancing through its phases.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Job {
+    /// Job name (rows and phase records cite it).
+    pub name: String,
+    /// The node group the job runs on.
+    pub group: GroupSpec,
+    /// The job's phase sequence, executed in order.
+    pub phases: Vec<Phase>,
+}
+
+/// A multi-job application workload: every job starts at time zero and
+/// runs concurrently with the others.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    /// Workload name (result rows cite it).
+    pub name: String,
+    /// The concurrent jobs.
+    pub jobs: Vec<Job>,
+}
+
+impl WorkloadSpec {
+    /// Reject structurally empty specs with a clear message.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.jobs.is_empty(), "workload {:?} has no jobs", self.name);
+        for job in &self.jobs {
+            ensure!(
+                !job.phases.is_empty(),
+                "workload {:?}: job {:?} has no phases",
+                self.name,
+                job.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse a workload selector (see [`WORKLOAD_VOCAB`]): a named
+    /// built-in, the `single:<pattern>:BYTES` one-phase form, or a
+    /// `.toml` file path ([`WorkloadSpec::from_file`]).
+    pub fn parse(s: &str) -> Result<WorkloadSpec> {
+        let spec = match s {
+            "mix" => WorkloadSpec::mix(),
+            "allreduce" => WorkloadSpec::allreduce(),
+            "checkpoint" => WorkloadSpec::checkpoint(),
+            _ => {
+                if let Some(rest) = s.strip_prefix("single:") {
+                    let parts: Vec<&str> = rest.split(':').collect();
+                    ensure!(
+                        parts.len() >= 2,
+                        "workload {s:?}: want single:<pattern>:BYTES \
+                         (patterns: {PATTERN_VOCAB})"
+                    );
+                    let bytes = parse_bytes(s, parts[parts.len() - 1])?;
+                    let pattern = Pattern::parse(&parts[..parts.len() - 1].join(":"))?;
+                    WorkloadSpec {
+                        // The volume is part of the name: axis entries
+                        // differing only in bytes must stay
+                        // distinguishable in the `workload` CSV column.
+                        name: format!("single-{}-{bytes}", pattern.name()),
+                        jobs: vec![Job {
+                            name: "main".into(),
+                            group: GroupSpec::All,
+                            phases: vec![Phase::Traffic { pattern, bytes }],
+                        }],
+                    }
+                } else if s.ends_with(".toml") {
+                    WorkloadSpec::from_file(s)?
+                } else {
+                    anyhow::bail!(
+                        "unknown workload {s:?} (expected one of {WORKLOAD_VOCAB})"
+                    );
+                }
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The overlapping {GPGPU allreduce + compute→IO checkpoint} job mix
+    /// — the workload-level restatement of the paper's premise (node
+    /// types predict traffic), and the acceptance scenario of
+    /// `tests/workload_model.rs`. Needs a placement with `gpgpu`, `io`
+    /// and `compute` nodes (e.g. `io:last:1,gpgpu:first:2`).
+    ///
+    /// The volumes are chosen so the type-crossing checkpoint dominates
+    /// the mix — the regime the paper's claim is about. (The intra-group
+    /// allreduce ring is a group-local permutation both routers serve at
+    /// full rate in isolation; grouped routing pays off on the
+    /// compute→IO collection, where dmodk funnels everything through
+    /// `W_h` top ports.)
+    pub fn mix() -> WorkloadSpec {
+        WorkloadSpec {
+            name: "mix".into(),
+            jobs: vec![
+                Job {
+                    name: "ckpt".into(),
+                    group: GroupSpec::Type { ty: NodeType::Compute },
+                    phases: vec![
+                        Phase::Idle { time: 32.0 },
+                        Phase::Traffic { pattern: Pattern::C2ioSym, bytes: 4096 },
+                    ],
+                },
+                Job {
+                    name: "train".into(),
+                    group: GroupSpec::Type { ty: NodeType::Gpgpu },
+                    phases: vec![
+                        Phase::Collective { op: Collective::RingAllreduce, bytes: 2048 },
+                        Phase::Idle { time: 64.0 },
+                        Phase::Collective { op: Collective::RingAllreduce, bytes: 2048 },
+                    ],
+                },
+            ],
+        }
+    }
+
+    /// A lone GPGPU training job: two ring-allreduce iterations split by
+    /// a compute gap.
+    pub fn allreduce() -> WorkloadSpec {
+        WorkloadSpec { name: "allreduce".into(), jobs: vec![WorkloadSpec::mix().jobs.remove(1)] }
+    }
+
+    /// A lone compute→IO checkpoint burst after a compute gap.
+    pub fn checkpoint() -> WorkloadSpec {
+        WorkloadSpec { name: "checkpoint".into(), jobs: vec![WorkloadSpec::mix().jobs.remove(0)] }
+    }
+
+    /// Parse from a config [`Doc`]: an optional `[workload]` section
+    /// (`name = "..."`) plus one `[job.NAME]` section per job with
+    /// `group` and `phases` keys (see the module docs for an example).
+    /// Jobs are read in section-name order.
+    pub fn from_doc(doc: &Doc) -> Result<WorkloadSpec> {
+        let name = doc.get_str("workload", "name", "workload")?;
+        let mut jobs = Vec::new();
+        for (section, keys) in &doc.sections {
+            if section == "workload" {
+                for key in keys.keys() {
+                    ensure!(key == "name", "unknown [workload] key {key:?} (known: [\"name\"])");
+                }
+                continue;
+            }
+            let job_name = section.strip_prefix("job.").with_context(|| {
+                format!(
+                    "unexpected section [{section}] in a workload config \
+                     (want [workload] and [job.NAME] sections)"
+                )
+            })?;
+            ensure!(!job_name.is_empty(), "empty job name in section [{section}]");
+            for key in keys.keys() {
+                ensure!(
+                    key == "group" || key == "phases",
+                    "unknown [job.{job_name}] key {key:?} (known: [\"group\", \"phases\"])"
+                );
+            }
+            let group = GroupSpec::parse(&doc.get_str(section, "group", "")?)
+                .with_context(|| format!("[job.{job_name}] group"))?;
+            let phases = doc
+                .get(section, "phases")
+                .with_context(|| format!("[job.{job_name}] is missing phases = [...]"))?
+                .as_str_array()?
+                .iter()
+                .map(|p| Phase::parse(p))
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("[job.{job_name}] phases"))?;
+            jobs.push(Job { name: job_name.to_string(), group, phases });
+        }
+        let spec = WorkloadSpec { name, jobs };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Read and parse a workload config file (see [`WorkloadSpec::from_doc`]).
+    pub fn from_file(path: &str) -> Result<WorkloadSpec> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        Self::from_doc(&Doc::parse(&text)?).with_context(|| format!("workload config {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Placement;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn fabric() -> (Topology, NodeTypeMap) {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = Placement::parse("io:last:1,gpgpu:first:2").unwrap().apply(&topo).unwrap();
+        (topo, types)
+    }
+
+    #[test]
+    fn group_parse_resolve_roundtrip() {
+        let (topo, types) = fabric();
+        for (spec, len) in [("all", 64), ("type:gpgpu", 16), ("type:compute:8", 8), ("nids:0-7", 8)]
+        {
+            let g = GroupSpec::parse(spec).unwrap();
+            assert_eq!(g.name(), spec);
+            assert_eq!(g.resolve(&topo, &types).unwrap().len(), len, "{spec}");
+        }
+        // Errors enumerate the vocabulary.
+        let err = GroupSpec::parse("leaf:3").unwrap_err().to_string();
+        assert!(err.contains("type:TY") && err.contains("gpgpu"), "{err}");
+        assert!(GroupSpec::parse("nids:9-3").is_err());
+        assert!(GroupSpec::parse("type:warp").is_err());
+        // Empty selections are spec errors, not degenerate runs.
+        assert!(GroupSpec::Type { ty: NodeType::Fpga }.resolve(&topo, &types).is_err());
+        assert!(GroupSpec::parse("nids:0-64").unwrap().resolve(&topo, &types).is_err());
+        assert!(GroupSpec::parse("type:gpgpu:99").unwrap().resolve(&topo, &types).is_err());
+    }
+
+    #[test]
+    fn phase_parse_roundtrip_and_vocab() {
+        for spec in ["ring-allreduce:4096", "pattern:c2io-sym:1024", "pattern:shift:3:64", "idle:12.5"]
+        {
+            let p = Phase::parse(spec).unwrap();
+            assert_eq!(Phase::parse(&p.name()).unwrap(), p, "{spec}");
+        }
+        assert_eq!(
+            Phase::parse("pattern:shift:3:64").unwrap(),
+            Phase::Traffic { pattern: Pattern::Shift { k: 3 }, bytes: 64 }
+        );
+        let err = Phase::parse("allgatherv:64").unwrap_err().to_string();
+        assert!(
+            err.contains("idle:TIME") && err.contains("rd-allreduce") && err.contains("shift:K"),
+            "full vocabulary must be enumerated: {err}"
+        );
+        assert!(Phase::parse("idle:0").is_err());
+        assert!(Phase::parse("idle:nan").is_err());
+        assert!(Phase::parse("ring-allreduce:0").is_err());
+        assert!(Phase::parse("pattern:c2io-sym").is_err());
+    }
+
+    #[test]
+    fn builtins_validate_and_resolve() {
+        let (topo, types) = fabric();
+        for name in ["mix", "allreduce", "checkpoint"] {
+            let w = WorkloadSpec::parse(name).unwrap();
+            assert_eq!(w.name, name);
+            for job in &w.jobs {
+                assert!(!job.group.resolve(&topo, &types).unwrap().is_empty());
+            }
+        }
+        assert_eq!(WorkloadSpec::mix().jobs.len(), 2);
+        let single = WorkloadSpec::parse("single:c2io-sym:1024").unwrap();
+        assert_eq!(single.jobs.len(), 1);
+        assert_eq!(
+            single.jobs[0].phases,
+            vec![Phase::Traffic { pattern: Pattern::C2ioSym, bytes: 1024 }]
+        );
+        let err = WorkloadSpec::parse("frobnicate").unwrap_err().to_string();
+        assert!(err.contains("mix") && err.contains("single:"), "{err}");
+    }
+
+    #[test]
+    fn toml_roundtrip_and_unknown_keys() {
+        let doc = Doc::parse(
+            r#"
+[workload]
+name = "demo"
+[job.b-train]
+group  = "type:gpgpu"
+phases = ["rd-allreduce:256", "idle:8"]
+[job.a-ckpt]
+group  = "type:compute"
+phases = ["pattern:c2io-sym:64"]
+"#,
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_doc(&doc).unwrap();
+        assert_eq!(w.name, "demo");
+        // Section-name order (BTreeMap): a-ckpt before b-train.
+        assert_eq!(w.jobs[0].name, "a-ckpt");
+        assert_eq!(w.jobs[1].name, "b-train");
+        assert_eq!(w.jobs[1].phases.len(), 2);
+
+        assert!(WorkloadSpec::from_doc(&Doc::parse("[job.x]\ngroup = \"all\"\n").unwrap())
+            .is_err(), "missing phases");
+        assert!(WorkloadSpec::from_doc(
+            &Doc::parse("[job.x]\ngroup = \"all\"\nphases = [\"idle:1\"]\nfoo = 1\n").unwrap()
+        )
+        .is_err(), "unknown job key");
+        assert!(WorkloadSpec::from_doc(&Doc::parse("[sweep]\nseeds = [1]\n").unwrap()).is_err());
+        assert!(WorkloadSpec::from_doc(&Doc::parse("").unwrap()).is_err(), "no jobs");
+    }
+}

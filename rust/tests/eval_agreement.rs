@@ -176,6 +176,7 @@ fn sweep_fault_cells_match_the_incremental_diff() {
         seeds: vec![1],
         simulate: true,
         netsim: Vec::new(),
+        workloads: Vec::new(),
     };
     let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
     for row in &rows {

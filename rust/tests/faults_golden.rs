@@ -105,12 +105,15 @@ fn faults_csv_is_deterministic_schema_stable_and_golden() {
             other => panic!("unexpected fault cell {other:?} in {row}"),
         }
         // No simulation requested: the fair-rate float columns stay
-        // empty, and so do the netsim (flit-level) columns — the grid
-        // ran without a netsim axis.
+        // empty, and so do the netsim (flit-level) and workload
+        // (makespan) columns — the grid ran without those axes.
         assert_eq!(cells[17], "", "{row}");
         assert_eq!(cells[20], "", "{row}");
         for cell in &cells[21..26] {
             assert_eq!(*cell, "", "netsim columns must be empty: {row}");
+        }
+        for cell in &cells[26..30] {
+            assert_eq!(*cell, "", "workload columns must be empty: {row}");
         }
     }
 

@@ -21,6 +21,7 @@ fn grid(simulate: bool) -> SweepSpec {
         seeds: vec![1, 2],
         simulate,
         netsim: Vec::new(),
+        workloads: Vec::new(),
     }
 }
 

@@ -1,0 +1,308 @@
+//! Property and agreement pins for the application-workload subsystem
+//! (`pgft::workload`):
+//!
+//!  1. **Collective schedules** (randomized): per-step flow lists
+//!     conserve the closed-form total volume, every group member
+//!     participates, every ring step is the intra-group shift-by-one,
+//!     and recursive doubling runs exactly `log₂ n` perfect-matching
+//!     steps on power-of-two groups.
+//!  2. **Static-pattern agreement** (`eval_agreement`-style): a
+//!     single-phase workload reproduces the corresponding
+//!     static-pattern sweep cell *bit-exactly* — same flow list, same
+//!     congestion summary, and `makespan == bytes / min_rate` against
+//!     the cell's own fair-rate column.
+//!  3. **CSV determinism**: `pgft workload` emits byte-identical CSV
+//!     per seed, and sweep rows with the `workloads` axis round-trip
+//!     losslessly through CSV.
+//!  4. **The acceptance pin**: on the case-study fabric with the
+//!     overlapping {GPGPU allreduce + compute→IO checkpoint} mix,
+//!     gdmodk's makespan beats dmodk's (the node-type-balancing claim
+//!     at workload level; the independent python mirror
+//!     `python/tools/check_workload_fluid.py` measures ~2.9x).
+//!  5. The committed `BENCH_workload.json` perf record is well-formed.
+
+use pgft::cli;
+use pgft::prelude::*;
+use pgft::sim::fair_rates;
+use pgft::sweep::result::COLUMNS;
+use pgft::sweep::sweep_results_from_table;
+use pgft::report::Table;
+use pgft::util::prop::Prop;
+use pgft::workload::{evaluate_makespan, lower, phase_flowsets, Collective, WorkloadSpec};
+
+const ALL_COLLECTIVES: [Collective; 5] = [
+    Collective::RingAllreduce,
+    Collective::RecursiveDoublingAllreduce,
+    Collective::BinomialBroadcast,
+    Collective::PairwiseAllToAll,
+    Collective::GatherToRoot,
+];
+
+#[test]
+fn collective_schedules_conserve_volume_and_participation() {
+    Prop::new("collective-volume").cases(64).run(|g| {
+        let op = *g.choose(&ALL_COLLECTIVES);
+        let n = match op {
+            Collective::RecursiveDoublingAllreduce => 1usize << g.usize_in(1, 5),
+            _ => g.usize_in(2, 24),
+        };
+        let start = g.usize_in(0, 30) as u32;
+        let stride = g.usize_in(1, 3) as u32;
+        let bytes = g.usize_in(1, 1 << 20) as u64;
+        let group: Vec<u32> = (0..n as u32).map(|i| start + i * stride).collect();
+        let steps = op.schedule(&group, bytes).unwrap();
+        assert!(!steps.is_empty(), "{op}");
+        // Volume conservation against the closed form.
+        let moved: f64 = steps.iter().map(|s| s.flows.len() as f64 * s.bytes_per_flow).sum();
+        let want = op.total_bytes(n, bytes);
+        assert!(
+            (moved - want).abs() <= 1e-9 * want,
+            "{op} n={n} bytes={bytes}: moved {moved}, closed form {want}"
+        );
+        // Every member participates, every endpoint is a member, no
+        // self-flows.
+        let mut seen = std::collections::BTreeSet::new();
+        for step in &steps {
+            for &(s, d) in &step.flows {
+                assert_ne!(s, d, "{op}");
+                assert!(group.contains(&s) && group.contains(&d), "{op}: stray endpoint");
+                seen.insert(s);
+                seen.insert(d);
+            }
+        }
+        assert_eq!(seen.len(), n, "{op} n={n}: every member participates");
+    });
+}
+
+#[test]
+fn ring_steps_are_intra_group_shifts() {
+    Prop::new("ring-shift").cases(32).run(|g| {
+        let n = g.usize_in(2, 24);
+        let group: Vec<u32> = (0..n as u32).map(|i| 2 * i + 1).collect();
+        let steps = Collective::RingAllreduce.schedule(&group, 64).unwrap();
+        assert_eq!(steps.len(), 2 * (n - 1), "reduce-scatter + allgather");
+        let shift: Vec<(u32, u32)> =
+            (0..n).map(|i| (group[i], group[(i + 1) % n])).collect();
+        for (k, step) in steps.iter().enumerate() {
+            assert_eq!(step.flows, shift, "step {k} of {n}-ring is the shift-by-one");
+        }
+    });
+}
+
+#[test]
+fn recursive_doubling_is_log2_matchings_on_pow2_groups() {
+    Prop::new("rd-log2").cases(32).run(|g| {
+        let log = g.usize_in(1, 5);
+        let n = 1usize << log;
+        let group: Vec<u32> = (0..n as u32).map(|i| 3 * i).collect();
+        let steps = Collective::RecursiveDoublingAllreduce.schedule(&group, 64).unwrap();
+        assert_eq!(steps.len(), log, "log2({n}) steps");
+        for step in &steps {
+            // Perfect matching: each member sends once and receives once.
+            let mut srcs: Vec<u32> = step.flows.iter().map(|f| f.0).collect();
+            let mut dsts: Vec<u32> = step.flows.iter().map(|f| f.1).collect();
+            srcs.sort_unstable();
+            dsts.sort_unstable();
+            assert_eq!(srcs, group);
+            assert_eq!(dsts, group);
+        }
+        // Non-power-of-two groups are rejected.
+        if n > 2 {
+            assert!(Collective::RecursiveDoublingAllreduce
+                .schedule(&group[..n - 1], 64)
+                .is_err());
+        }
+    });
+}
+
+/// A single-phase workload must reproduce the equivalent static-pattern
+/// sweep cell exactly: same flow list, same congestion figures, and a
+/// makespan that is bit-exactly `bytes / min_rate` of the cell's own
+/// fair-rate column (division by the minimum is exact because division
+/// is monotone).
+#[test]
+fn single_phase_workload_matches_static_sweep_cell_bit_exactly() {
+    let mut spec = SweepSpec::paper_grid("case-study");
+    spec.placements = vec!["io:last:1".into()];
+    spec.patterns = vec![Pattern::C2ioSym];
+    spec.simulate = true;
+    spec.workloads = vec!["single:c2io-sym:1024".into()];
+    let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+    assert_eq!(rows.len(), 6, "one row per algorithm");
+
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let pattern_flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+    let lowered =
+        lower(&WorkloadSpec::parse("single:c2io-sym:1024").unwrap(), &topo, &types).unwrap();
+
+    for row in &rows {
+        let sim = row.sim.as_ref().expect("simulate attaches fair-rate columns");
+        let wl = row.workload.as_ref().expect("workload axis attaches wl_* columns");
+        assert_eq!(wl.phases, 1, "{}", row.summary.algorithm);
+        // Bit-exact: wl_makespan == bytes / min_rate of the same cell.
+        assert_eq!(
+            wl.makespan,
+            1024.0 / sim.min_rate,
+            "{}: workload and sweep cell disagree",
+            row.summary.algorithm
+        );
+        assert_eq!(wl.job_times, vec![wl.makespan]);
+
+        // And the phase's route store is the pattern's, byte for byte.
+        let kind = AlgorithmKind::parse(&row.summary.algorithm).unwrap();
+        let router = kind.build(&topo, Some(&types), row.seed);
+        let eval = evaluate_makespan(&topo, &*router, &lowered).unwrap();
+        assert_eq!(eval.phases[0].flow_pairs, pattern_flows, "{}", row.summary.algorithm);
+        let set = FlowSet::trace(&topo, &*router, &eval.phases[0].flow_pairs);
+        let rep = CongestionReport::compute_flowset(&topo, &set);
+        assert_eq!(rep.c_topo(), row.summary.c_topo, "{}", row.summary.algorithm);
+        let rates = fair_rates(&topo, &set);
+        let stats = pgft::eval::FairRateStats::from_rates(&rates);
+        assert_eq!(&stats, sim, "{}: fair-rate columns bit-exact", row.summary.algorithm);
+    }
+    // The paper's §III.B/§IV headline survives the workload detour:
+    // dmodk's makespan is 4x gdmodk's (1/28 vs 1/7 min rate).
+    let wl = |algo: &str| {
+        rows.iter()
+            .find(|r| r.summary.algorithm == algo)
+            .unwrap()
+            .workload
+            .clone()
+            .unwrap()
+    };
+    assert_eq!(wl("dmodk").makespan, 28672.0, "1024 x 28");
+    assert_eq!(wl("gdmodk").makespan, 7168.0, "1024 x 7");
+}
+
+/// The acceptance scenario: the overlapping {GPGPU allreduce +
+/// compute→IO checkpoint} mix on the case-study fabric. Gdmodk's
+/// makespan must beat dmodk's decisively, and the phase-sequenced
+/// flit-level replay must run end to end on the same phase sequence.
+#[test]
+fn mix_acceptance_gdmodk_beats_dmodk_at_workload_level() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::parse("io:last:1,gpgpu:first:2").unwrap().apply(&topo).unwrap();
+    let lowered = lower(&WorkloadSpec::mix(), &topo, &types).unwrap();
+    let d = evaluate_makespan(
+        &topo,
+        &*AlgorithmKind::Dmodk.build(&topo, Some(&types), 1),
+        &lowered,
+    )
+    .unwrap();
+    let g = evaluate_makespan(
+        &topo,
+        &*AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1),
+        &lowered,
+    )
+    .unwrap();
+    assert!(
+        g.makespan * 2.0 < d.makespan,
+        "gdmodk {} vs dmodk {} (python/tools/check_workload_fluid.py: ~2.9x)",
+        g.makespan,
+        d.makespan
+    );
+    // Both routers converge in the same number of phases (the segment
+    // structure is workload-determined, only the durations differ).
+    assert_eq!(g.phases.len(), d.phases.len());
+
+    // Flit-level phase replay over the checkpoint workload (small
+    // windows; the mix's 63 phases would dominate test time).
+    let ckpt = lower(&WorkloadSpec::checkpoint(), &topo, &types).unwrap();
+    let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+    let eval = evaluate_makespan(&topo, &*router, &ckpt).unwrap();
+    let sets = phase_flowsets(&topo, &*router, &eval);
+    let cfg = pgft::netsim::NetsimConfig {
+        warmup: 150,
+        measure: 400,
+        drain: 150,
+        ..Default::default()
+    };
+    let rep = pgft::netsim::run_netsim_phased(&topo, &sets, &cfg, 0.1).unwrap();
+    assert_eq!(rep.phases.len(), eval.phases.len());
+    // The idle phase is quiet; the burst phase moves flits.
+    let burst = rep.phases.iter().find(|p| p.flows > 0).expect("burst phase simulated");
+    assert!(burst.accepted > 0.0, "{burst:?}");
+}
+
+fn argv(s: &[&str]) -> Vec<String> {
+    s.iter().map(|x| x.to_string()).collect()
+}
+
+/// `pgft workload` CSV is byte-identical per seed (the CLI half of the
+/// acceptance criterion).
+#[test]
+fn workload_cli_csv_is_deterministic_per_seed() {
+    let dir = std::env::temp_dir().join("pgft_workload_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let run_to = |name: &str, seeds: &str| {
+        let out = dir.join(name);
+        let mut args = argv(&[
+            "workload", "--workload", "mix,checkpoint", "--algo", "dmodk,gdmodk",
+            "--seeds", seeds, "--format", "csv", "--no-phase-detail", "--out",
+        ]);
+        args.push(out.to_str().unwrap().to_string());
+        cli::run(&args).unwrap();
+        std::fs::read_to_string(&out).unwrap()
+    };
+    let a = run_to("a.csv", "1");
+    let b = run_to("b.csv", "1");
+    assert_eq!(a, b, "same seed must produce byte-identical CSV");
+    let header = a.lines().next().unwrap();
+    assert_eq!(header, "workload,algo,seed,jobs,phases,makespan,job_times");
+    assert_eq!(a.lines().count(), 1 + 2 * 2, "2 workloads x 2 algos");
+    // The CSV itself carries the acceptance figure: parse the mix rows
+    // and compare makespans.
+    let makespan = |algo: &str| -> f64 {
+        a.lines()
+            .find(|l| l.starts_with(&format!("mix,{algo},")))
+            .unwrap()
+            .split(',')
+            .nth(5)
+            .unwrap()
+            .parse()
+            .unwrap()
+    };
+    assert!(makespan("gdmodk") * 2.0 < makespan("dmodk"));
+}
+
+/// Sweep rows carrying workload columns survive the CSV round-trip
+/// losslessly (floats included).
+#[test]
+fn sweep_workload_columns_roundtrip_through_csv() {
+    let mut spec = SweepSpec::paper_grid("case-study");
+    spec.placements = vec!["io:last:1,gpgpu:first:2".into()];
+    spec.patterns = vec![Pattern::C2ioSym];
+    spec.algorithms = vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk];
+    spec.workloads = vec!["mix".into()];
+    spec.simulate = true;
+    let rows = run_sweep(&spec, &SweepOptions::default()).unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in &rows {
+        let wl = row.workload.as_ref().unwrap();
+        assert_eq!(wl.name, "mix");
+        assert_eq!(wl.job_times.len(), 2, "two concurrent jobs");
+    }
+    let table = sweep_table(&rows);
+    assert_eq!(table.headers.len(), COLUMNS.len());
+    let back = sweep_results_from_table(&Table::from_csv(&table.to_csv()).unwrap()).unwrap();
+    assert_eq!(back, rows, "lossless CSV round-trip, workload floats included");
+}
+
+/// The committed BENCH_workload.json perf record is well-formed (the
+/// bench rewrites it with measured numbers on every `cargo bench`).
+#[test]
+fn bench_workload_record_is_well_formed() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_workload.json");
+    let body = std::fs::read_to_string(path).expect("BENCH_workload.json is committed");
+    for key in [
+        "\"schema\": \"pgft-bench-workload/1\"",
+        "\"lowerings_per_sec\"",
+        "\"makespan_cells_per_sec\"",
+        "\"mix_makespan\"",
+        "\"dmodk\"",
+        "\"gdmodk\"",
+    ] {
+        assert!(body.contains(key), "BENCH_workload.json misses {key}: {body}");
+    }
+}
