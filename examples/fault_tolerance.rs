@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let types = Placement::paper_io().apply(&topo)?;
     let coord = Coordinator::start(topo.clone(), types, AlgorithmKind::Gdmodk, 1)?;
 
-    let s = coord.stats()?;
+    let s = coord.stats();
     println!(
         "fabric up: algo={} tables v{} ({} entries)",
         s.algorithm, s.table_version, s.table_entries
@@ -32,18 +32,33 @@ fn main() -> anyhow::Result<()> {
         .collect();
     for &v in &victims {
         coord.link_down(v);
-        let s = coord.stats()?;
+        coord.sync()?;
+        let s = coord.stats();
         println!(
             "link {v} down → tables v{} in {} µs, pushing {} changed entries",
             s.table_version, s.last_reroute_micros, s.last_diff_entries
         );
     }
 
+    // The whole storm again as ONE atomic burst: the leader coalesces
+    // it into a single incremental repair and a single table push.
+    for &v in &victims {
+        coord.link_up(v);
+    }
+    coord.sync()?;
+    coord.inject_burst(victims.iter().map(|&v| LinkEvent::Down(v)).collect());
+    coord.sync()?;
+    let s = coord.stats();
+    println!(
+        "burst of {} events → ONE repair: tables v{} in {} µs, {} changed entries",
+        s.last_batch_events, s.table_version, s.last_reroute_micros, s.last_diff_entries
+    );
+
     // The fabric still routes everything (the 4th parallel link carries
     // the bundle) — verify through the coordinator.
     let flows: Vec<(u32, u32)> =
         (0..64).flat_map(|s| (0..64).filter(move |&d| d != s).map(move |d| (s, d))).collect();
-    let routes = coord.trace(flows)?;
+    let routes = coord.trace(&flows);
     let rep = pgft::routing::verify::verify_routes(&topo, &routes);
     rep.ensure_valid()?;
     println!(
@@ -57,12 +72,14 @@ fn main() -> anyhow::Result<()> {
     for &v in &victims {
         coord.link_up(v);
     }
+    coord.sync()?;
     let healed = coord.analyze(Pattern::C2ioSym)?;
     println!("healed C2IO C_topo = {} (Gdmodk optimum restored)", healed.c_topo);
     assert_eq!(healed.c_topo, 1);
 
     // Live algorithm migration, as an operator would.
     coord.set_algorithm(AlgorithmKind::Dmodk);
+    coord.sync()?;
     println!("migrated to dmodk: C_topo = {}", coord.analyze(Pattern::C2ioSym)?.c_topo);
     coord.shutdown();
 

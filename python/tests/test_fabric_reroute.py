@@ -1,0 +1,40 @@
+"""Pin the fabric coordinator's incremental-reroute mirror.
+
+``tools/check_fabric_reroute.py`` replays the pinned cascade scenario
+(``cascade:4`` @ seed 2 on the case-study topology) through the Python
+routing mirror and recomputes the per-event forwarding-table diffs,
+moved-route counts, and post-cascade C_p. The same constants are pinned
+on the Rust side in ``rust/tests/fabric_service.rs`` — if either side
+drifts, one of the two implementations changed behaviour.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_fabric_reroute as fab  # noqa: E402
+
+
+def test_pinned_cascade():
+    results = fab.check()  # raises on any internal divergence
+    assert results["scenario"] == "cascade:4@seed2"
+    assert results["events"] == [85, 64, 88, 90]
+
+    dmodk = results["dmodk"]
+    assert dmodk["partitioned_stages"] == []
+    assert dmodk["diff_entries"] == [16, 80, 14, 14]
+    assert dmodk["routes_changed"] == [256, 448, 192, 192]
+    assert dmodk["final_c_topo_c2io"] == 4
+    assert dmodk["final_c_topo_all_pairs"] == 16
+
+    gdmodk = results["gdmodk"]
+    assert gdmodk["partitioned_stages"] == []
+    assert gdmodk["diff_entries"] == [16, 86, 13, 14]
+    assert gdmodk["routes_changed"] == [256, 496, 168, 184]
+    assert gdmodk["final_c_topo_c2io"] == 2
+    assert gdmodk["final_c_topo_all_pairs"] == 16
+
+
+def test_deterministic():
+    assert fab.check() == fab.check()

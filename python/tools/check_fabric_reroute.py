@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Independent mirror of the fabric coordinator's incremental reroute
+pipeline for one pinned cascade scenario.
+
+``rust/src/coordinator/`` repairs its route store and forwarding tables
+after every fault event and reports two cost figures per event: the
+number of forwarding-table entries that changed (``last_diff_entries``,
+what a fabric manager would push to switches) and the number of
+all-pairs routes that moved (``routes_changed``).  The builder
+containers have no Rust toolchain, so this script recomputes both
+figures — plus the post-cascade congestion ``C_p`` over the paper's
+C2IO pattern — from the Python routing mirror in
+``gen_faults_golden.py`` and pins them (see
+``python/tests/test_fabric_reroute.py``; the Rust side pins the same
+constants in ``rust/tests/fabric_service.rs``).
+
+The pinned scenario is ``cascade:4`` at seed 2 on the case-study
+topology — the smallest seed whose four cumulative stages all leave the
+fabric connected (seed 1 partitions two leaves at stage 3).  Cascade
+generation shares the ``links:K`` branch of ``FaultModel::generate``
+(same sample + shuffle), so the mirror calls
+``generate_faults(topo, "links:4", 2)`` and replays the four deaths as
+cumulative stages, exactly as the coordinator drains them.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, HERE)
+
+import gen_faults_golden as g  # noqa: E402
+
+SCENARIO_MODEL = "links:4"  # cascade:4 generates identically (same branch)
+SCENARIO_SEED = 2
+ALGOS = ("dmodk", "gdmodk")
+UNROUTED = None
+
+
+def all_pairs(n: int) -> list:
+    """Mirror of ``routing::verify::all_pairs`` (src-major, no diagonal)."""
+    return [(s, d) for s in range(n) for d in range(n) if s != d]
+
+
+def reaches(router, sw: int, dst: int) -> bool:
+    """``Router::reaches`` — pristine routers always reach; the degraded
+    mirror exposes its ``good`` field (elements nodes-first)."""
+    if isinstance(router, g.DegradedRouter):
+        return router.good[dst][router.topo.num_nodes + sw]
+    return True
+
+
+def build_switch_tables(topo: g.Topo, router) -> list:
+    """Mirror of ``ForwardingTables::build`` (switch_out only; the diff
+    figure the coordinator reports counts only switch entries)."""
+    out = []
+    for sw in range(topo.num_switches):
+        row = []
+        for dst in range(topo.num_nodes):
+            if not reaches(router, sw, dst):
+                row.append(UNROUTED)
+            elif router.descend_at(sw, dst):
+                j = router.down_link(sw, 0, dst)
+                row.append(topo.down_port_toward(sw, dst, j))
+            else:
+                row.append(router.up_port(sw, 0, dst))
+        out.append(row)
+    return out
+
+
+def diff_entries(a: list, b: list) -> int:
+    """Mirror of ``ForwardingTables::diff_entries``."""
+    return sum(
+        1 for ra, rb in zip(a, b) for x, y in zip(ra, rb) if x != y
+    )
+
+
+def check() -> dict:
+    topo = g.Topo()
+    types = g.build_types(topo)
+    gnid = g.build_gnid(types)
+    c2io = g.c2io_sym_flows(topo, types)
+    pairs = all_pairs(topo.num_nodes)
+    assert len(pairs) == 64 * 63
+
+    events = g.generate_faults(topo, SCENARIO_MODEL, SCENARIO_SEED)
+    assert len(events) == 4 and len(set(events)) == 4
+    for link in events:
+        assert topo.link_stage[link] >= 2, "only switch links are eligible"
+
+    results: dict = {
+        "scenario": f"cascade:4@seed{SCENARIO_SEED}",
+        "events": list(events),
+    }
+    for algo in ALGOS:
+        base = g.XmodkRouter(topo, gnid if algo == "gdmodk" else None)
+        tables = build_switch_tables(topo, base)
+        store = [g.trace_route(topo, base, s, d) for (s, d) in pairs]
+        diffs, moved, partitioned = [], [], []
+        dead: set = set()
+        for step, link in enumerate(events, start=1):
+            dead.add(link)
+            try:
+                degraded = g.DegradedRouter(topo, set(dead), base)
+            except RuntimeError:
+                # Partitioned fabric: the coordinator keeps serving the
+                # previous tables, so nothing changes at this stage.
+                partitioned.append(step)
+                continue
+            new_tables = build_switch_tables(topo, degraded)
+            new_store = [g.trace_route(topo, degraded, s, d) for (s, d) in pairs]
+            # No repaired route may use a dead link, and every route a
+            # dead link touched must have moved (the dirty-flow set is
+            # exactly the changed set — the incremental-repair invariant).
+            for old, new in zip(store, new_store):
+                crosses = any(topo.port_link[p] in dead for p in old)
+                assert crosses == (old != new), "dirty flows = changed flows"
+                assert all(topo.port_link[p] not in dead for p in new)
+            diffs.append(diff_entries(tables, new_tables))
+            moved.append(sum(1 for a, b in zip(store, new_store) if a != b))
+            tables, store = new_tables, new_store
+        final = g.Report(topo, list(zip(pairs, store)))
+        c2io_rep = g.Report(
+            topo, [((s, d), store[s * 63 + d - (1 if d > s else 0)]) for (s, d) in c2io]
+        )
+        results[algo] = {
+            "diff_entries": diffs,
+            "routes_changed": moved,
+            "partitioned_stages": partitioned,
+            "final_c_topo_all_pairs": final.c_topo(),
+            "final_c_topo_c2io": c2io_rep.c_topo(),
+        }
+    return results
+
+
+def main() -> int:
+    import json
+
+    results = check()
+    json.dump(results, sys.stdout, indent=2)
+    sys.stdout.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,192 @@
+//! Online fabric-manager service performance: per-event incremental
+//! reroute latency (p50/p99), burst coalescing cost, and snapshot-read
+//! throughput (queries/s) while the leader is repairing — emitted both
+//! as bench lines and as a machine-readable `BENCH_fabric.json`
+//! (uploaded as a CI artifact).
+//!
+//! CI smoke-runs this with `PGFT_BENCH_SMOKE=1` (tiny sample counts) so
+//! the bench code cannot rot; real numbers come from a plain
+//! `cargo bench --bench bench_fabric`, whose read-load phase pushes a
+//! million queries against the repairing writer. The output path
+//! defaults to `BENCH_fabric.json` in the package root and can be
+//! overridden with `PGFT_BENCH_FABRIC_OUT`.
+
+use pgft::prelude::*;
+use pgft::util::bench::Bench;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Percentile over an ascending-sorted sample (nearest-rank).
+fn percentile(sorted: &[u64], p: usize) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[(sorted.len() - 1) * p / 100]
+}
+
+fn main() {
+    let smoke = std::env::var("PGFT_BENCH_SMOKE").is_ok();
+    let topo = Arc::new(build_pgft(&PgftSpec::case_study()));
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    // The pinned partition-free cascade (see python/tools/check_fabric_reroute.py).
+    let scenario = FaultModel::parse("cascade:4").unwrap().generate(&topo, 2);
+    let drill = scenario.drill_events();
+    let coord = Coordinator::start(topo.clone(), types.clone(), AlgorithmKind::Gdmodk, 2).unwrap();
+
+    println!("== single-event repair cycle (gdmodk, case study) ==");
+    let victim = scenario.events[0];
+    let cycle_st = Bench::new("fabric/repair-cycle/down+up")
+        .target_time(Duration::from_millis(300))
+        .samples(3, 30)
+        .run(|_| {
+            coord.link_down(victim);
+            coord.sync().unwrap();
+            coord.link_up(victim);
+            coord.sync().unwrap();
+        });
+
+    // Per-event reroute latency distribution (as the leader reports it).
+    let rounds = if smoke { 2 } else { 150 };
+    let mut reroute_us: Vec<u64> = Vec::with_capacity(rounds * drill.len());
+    for _ in 0..rounds {
+        for &e in &drill {
+            coord.inject_burst(vec![e]);
+            coord.sync().unwrap();
+            reroute_us.push(coord.stats().last_reroute_micros);
+        }
+    }
+    reroute_us.sort_unstable();
+    let (idle_p50, idle_p99) = (percentile(&reroute_us, 50), percentile(&reroute_us, 99));
+    println!(
+        "  per-event reroute over {} repairs: p50 {idle_p50} µs, p99 {idle_p99} µs",
+        reroute_us.len()
+    );
+
+    println!("\n== burst coalescing (whole cascade as one batch) ==");
+    let v0 = coord.stats().table_version;
+    coord.inject_burst(scenario.as_events());
+    coord.sync().unwrap();
+    let s = coord.stats();
+    assert_eq!(s.table_version, v0 + 1, "a burst must coalesce into ONE table push");
+    assert_eq!(s.last_batch_events, scenario.events.len());
+    assert!(s.degraded);
+    let burst_us = s.last_reroute_micros;
+    println!(
+        "  {} link-down events → 1 repair in {burst_us} µs, {} changed entries",
+        s.last_batch_events, s.last_diff_entries
+    );
+    coord.inject_burst(scenario.events.iter().rev().map(|&l| LinkEvent::Up(l)).collect());
+    coord.sync().unwrap();
+    assert!(!coord.stats().degraded, "drill must end on a pristine fabric");
+
+    println!("\n== snapshot reads against a repairing writer ==");
+    let readers = 4usize;
+    let target_queries: u64 = if smoke { 2_000 } else { 1_000_000 };
+    let cell = coord.snapshots();
+    let stop = Arc::new(AtomicBool::new(false));
+    let count = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..readers)
+        .map(|i| {
+            let cell = cell.clone();
+            let stop = stop.clone();
+            let count = count.clone();
+            std::thread::spawn(move || {
+                let mut local = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = cell.load();
+                    match i % 3 {
+                        0 => assert!(snap.analyze(Pattern::C2ioSym).unwrap().c_topo >= 1),
+                        1 => assert_eq!(snap.trace(&[(0, 63), (63, 0), (1, 62)]).len(), 3),
+                        _ => assert_eq!(snap.tables.version, snap.table_version),
+                    }
+                    local += 1;
+                    if local % 64 == 0 {
+                        count.fetch_add(64, Ordering::Relaxed);
+                    }
+                }
+                local
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut writer_repairs = 0u64;
+    let mut load_us: Vec<u64> = Vec::new();
+    while count.load(Ordering::Relaxed) < target_queries
+        && t0.elapsed() < Duration::from_secs(120)
+    {
+        for &e in &drill {
+            coord.inject_burst(vec![e]);
+            coord.sync().unwrap();
+            load_us.push(coord.stats().last_reroute_micros);
+            writer_repairs += 1;
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let queries: u64 = handles.into_iter().map(|h| h.join().expect("reader panicked")).sum();
+    let secs = t0.elapsed().as_secs_f64();
+    let qps = queries as f64 / secs.max(1e-9);
+    load_us.sort_unstable();
+    let (load_p50, load_p99) = (percentile(&load_us, 50), percentile(&load_us, 99));
+    println!(
+        "  {queries} queries from {readers} readers in {secs:.2}s → {qps:.0} queries/s \
+         while the writer applied {writer_repairs} repairs \
+         (reroute under load: p50 {load_p50} µs, p99 {load_p99} µs)"
+    );
+    coord.shutdown();
+
+    // Deterministic cross-check block, replayed live (it mirrors
+    // python/tools/check_fabric_reroute.py and is pinned — together
+    // with the keys above — by tests/fabric_service.rs, so both the
+    // committed seed record and every bench rewrite carry it).
+    let mut diff_json = Vec::new();
+    let mut moved_json = Vec::new();
+    let mut cp_json = Vec::new();
+    for (kind, name) in [(AlgorithmKind::Dmodk, "dmodk"), (AlgorithmKind::Gdmodk, "gdmodk")] {
+        let c = Coordinator::start(topo.clone(), types.clone(), kind, 2).unwrap();
+        let mut diffs = Vec::new();
+        let mut moved = Vec::new();
+        for &l in &scenario.events {
+            c.inject_burst(vec![LinkEvent::Down(l)]);
+            c.sync().unwrap();
+            let s = c.stats();
+            diffs.push(s.last_diff_entries);
+            moved.push(s.last_routes_changed);
+        }
+        let cp = c.analyze(Pattern::C2ioSym).unwrap().c_topo;
+        c.shutdown();
+        diff_json.push(format!("\"{name}\": {diffs:?}"));
+        moved_json.push(format!("\"{name}\": {moved:?}"));
+        cp_json.push(format!("\"{name}\": {cp}"));
+    }
+
+    // Machine-readable perf record (the CI artifact; the committed copy
+    // is pinned well-formed by tests/fabric_service.rs).
+    let source = if smoke { "rust-bench-smoke" } else { "rust-bench" };
+    let json = format!(
+        "{{\n  \"schema\": \"pgft-bench-fabric/1\",\n  \"source\": \"{source}\",\n  \
+         \"scenario\": \"{}\", \"algorithm\": \"gdmodk\",\n  \
+         \"repair_cycle_ms\": {:.4},\n  \
+         \"reroute_us\": {{\"p50\": {idle_p50}, \"p99\": {idle_p99}, \"samples\": {}}},\n  \
+         \"burst\": {{\"events\": {}, \"table_pushes\": 1, \"reroute_us\": {burst_us}}},\n  \
+         \"read_load\": {{\"readers\": {readers}, \"queries\": {queries}, \
+         \"queries_per_sec\": {qps:.1}, \"writer_repairs\": {writer_repairs}, \
+         \"reroute_us_p50\": {load_p50}, \"reroute_us_p99\": {load_p99}}},\n  \
+         \"pinned\": {{\n    \"events\": {:?},\n    \
+         \"diff_entries\": {{{}}},\n    \
+         \"routes_changed\": {{{}}},\n    \
+         \"post_cascade_c_topo_c2io\": {{{}}}\n  }}\n}}\n",
+        scenario.label(),
+        cycle_st.median_ns / 1e6,
+        reroute_us.len(),
+        scenario.events.len(),
+        scenario.events,
+        diff_json.join(", "),
+        moved_json.join(", "),
+        cp_json.join(", "),
+    );
+    let out = std::env::var("PGFT_BENCH_FABRIC_OUT")
+        .unwrap_or_else(|_| "BENCH_fabric.json".into());
+    std::fs::write(&out, &json).expect("write BENCH_fabric.json");
+    println!("\nwrote {out}:\n{json}");
+}

@@ -23,6 +23,8 @@
 //!             [--injection bernoulli|burst:K] [--faults SPEC] [--seed N]
 //! pgft packet-sim [--message 64] [--pattern ..] [--algo ..]   # slot-level sim
 //! pgft run --config FILE                                      # full experiment
+//! pgft fabric [--algo gdmodk] [--faults cascade:4] [--seed 2] # online service drill
+//!             [--burst] [--readers 4] [--query-ms 200]        #  + read load
 //! pgft fabric-demo [--algo gdmodk]                            # coordinator + fault drill
 //! pgft artifacts                                              # runtime manifest
 //! ```
@@ -203,6 +205,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "netsim" => cmd_netsim(&args),
         "packet-sim" => cmd_packet_sim(&args),
         "run" => cmd_run(&args),
+        "fabric" => cmd_fabric(&args),
         "fabric-demo" => cmd_fabric_demo(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
@@ -246,6 +249,12 @@ commands:
   packet-sim   slot-level packet simulation (completion time; superseded by
                netsim for latency/throughput studies)
   run          full experiment from a TOML config (--config FILE)
+  fabric       online fabric-manager drill: replay a seeded fault scenario
+               through the coordinator (per-event reroute latency, table
+               diffs, p50/p99), then measure snapshot-read queries/s under
+               repair churn (--faults cascade:4 --seed 2; --burst submits
+               each drill half as one coalesced batch; --readers N
+               --query-ms MS size the read-load phase)
   fabric-demo  coordinator lifecycle: route, fail links, reroute, report
   artifacts    list AOT artifacts the runtime can execute
 common options:
@@ -897,13 +906,14 @@ fn cmd_fabric_demo(args: &Args) -> Result<()> {
     let kind = AlgorithmKind::parse(&args.get_or("algo", "gdmodk"))?;
     let topo = Arc::new(topo);
     let coord = Coordinator::start(topo.clone(), types, kind, args.u64_or("seed", 1)?)?;
-    println!("fabric up: {:?}", coord.stats()?);
+    println!("fabric up: {:?}", coord.stats());
     println!("C2IO analysis: {:?}", coord.analyze(Pattern::C2ioSym)?.c_topo);
     // Fault drill: kill two top-stage links, reroute, verify, revive.
     let victims: Vec<_> = topo.links.iter().filter(|l| l.stage == topo.spec.h).take(2).collect();
     for v in &victims {
         coord.link_down(v.id);
-        let s = coord.stats()?;
+        coord.sync()?;
+        let s = coord.stats();
         println!(
             "link {} down → v{} reroute {} µs, diff {} entries",
             v.id, s.table_version, s.last_reroute_micros, s.last_diff_entries
@@ -913,7 +923,123 @@ fn cmd_fabric_demo(args: &Args) -> Result<()> {
     for v in &victims {
         coord.link_up(v.id);
     }
-    println!("healed: {:?}", coord.stats()?);
+    coord.sync()?;
+    println!("healed: {:?}", coord.stats());
+    coord.shutdown();
+    Ok(())
+}
+
+/// Percentile over an ascending-sorted latency sample (nearest-rank).
+fn percentile(sorted: &[u64], p: usize) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[(sorted.len() - 1) * p / 100]
+}
+
+fn cmd_fabric(args: &Args) -> Result<()> {
+    let (topo, types) = load_topo(args)?;
+    let kind = AlgorithmKind::parse(&args.get_or("algo", "gdmodk"))?;
+    let seed = args.u64_or("seed", 2)?;
+    let model = FaultModel::parse(&args.get_or("faults", "cascade:4"))?;
+    model.validate_for(&topo.spec)?;
+    let scenario = model.generate(&topo, seed);
+    anyhow::ensure!(
+        !scenario.events.is_empty(),
+        "fault model {model} generated no events; nothing to drill"
+    );
+    let topo = Arc::new(topo);
+    let coord = Coordinator::start(topo.clone(), types, kind, seed)?;
+
+    // Phase 1 — the seeded drill (every death, then every repair), one
+    // table row per processed batch. --burst submits each half of the
+    // drill as ONE atomic batch instead of per-event singles.
+    let drill = scenario.drill_events();
+    let batches: Vec<Vec<crate::faults::LinkEvent>> = if args.flag("burst") {
+        let n = scenario.events.len();
+        vec![drill[..n].to_vec(), drill[n..].to_vec()]
+    } else {
+        drill.iter().map(|&e| vec![e]).collect()
+    };
+    let mut t = Table::new(
+        &format!("pgft fabric: {} drill, algo={kind}", scenario.label()),
+        &["event", "dead_links", "version", "reroute_us", "diff_entries", "routes_moved", "batch"],
+    );
+    let mut lat: Vec<u64> = Vec::new();
+    for batch in batches {
+        let label = if batch.len() == 1 {
+            batch[0].to_string()
+        } else {
+            format!("burst×{}", batch.len())
+        };
+        coord.inject_burst(batch);
+        coord.sync()?;
+        let s = coord.stats();
+        lat.push(s.last_reroute_micros);
+        t.row(&[
+            label,
+            s.dead_links.to_string(),
+            s.table_version.to_string(),
+            s.last_reroute_micros.to_string(),
+            s.last_diff_entries.to_string(),
+            s.last_routes_changed.to_string(),
+            s.last_batch_events.to_string(),
+        ]);
+    }
+    emit(&t, args)?;
+
+    // Phase 2 — read throughput under repair churn: N reader threads
+    // hammer snapshot queries while this thread keeps the leader
+    // repairing (the drill on loop). Readers share only the snapshot
+    // cell — no channel, no lock held across a query.
+    let readers = args.u64_or("readers", 4)? as usize;
+    let query_ms = args.u64_or("query-ms", 200)?;
+    let cell = coord.snapshots();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let handles: Vec<_> = (0..readers)
+        .map(|i| {
+            let cell = cell.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut queries = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let snap = cell.load();
+                    match i % 3 {
+                        0 => drop(snap.analyze(Pattern::C2ioSym)),
+                        1 => drop(snap.trace(&[(0, 63), (63, 0), (1, 62)])),
+                        _ => assert_eq!(snap.stats.table_version, snap.tables.version),
+                    }
+                    queries += 1;
+                }
+                queries
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut repairs = 0u64;
+    while t0.elapsed().as_millis() < u128::from(query_ms) {
+        for &e in &drill {
+            coord.inject_burst(vec![e]);
+            coord.sync()?;
+            lat.push(coord.stats().last_reroute_micros);
+            repairs += 1;
+        }
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let secs = t0.elapsed().as_secs_f64();
+    let queries: u64 = handles.into_iter().map(|h| h.join().expect("reader panicked")).sum();
+    lat.sort_unstable();
+    eprintln!(
+        "reroute latency over {} repairs: p50 {} µs, p99 {} µs",
+        lat.len(),
+        percentile(&lat, 50),
+        percentile(&lat, 99),
+    );
+    eprintln!(
+        "read load: {queries} queries from {readers} readers in {secs:.2}s \
+         → {:.0} queries/s while the writer applied {repairs} repairs",
+        queries as f64 / secs.max(1e-9),
+    );
     coord.shutdown();
     Ok(())
 }
@@ -992,6 +1118,22 @@ mod tests {
     fn topo_command_runs() {
         run(&argv(&["topo", "--leaves"])).unwrap();
         run(&argv(&["topo", "--topo", "4-ary-2-tree"])).unwrap();
+    }
+
+    #[test]
+    fn fabric_command_runs() {
+        run(&argv(&[
+            "fabric", "--faults", "cascade:2", "--seed", "2", "--readers", "2", "--query-ms",
+            "30",
+        ]))
+        .unwrap();
+        run(&argv(&[
+            "fabric", "--burst", "--algo", "dmodk", "--faults", "cascade:4", "--seed", "2",
+            "--readers", "1", "--query-ms", "20",
+        ]))
+        .unwrap();
+        // A zero-event scenario is a user error, not a silent no-op.
+        assert!(run(&argv(&["fabric", "--faults", "none"])).is_err());
     }
 
     #[test]

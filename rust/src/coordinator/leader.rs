@@ -1,0 +1,308 @@
+//! The leader's write path: full rebuilds and incremental fault
+//! repairs, each ending in exactly one snapshot publication.
+//!
+//! # Incremental-repair invariant
+//!
+//! Fault batches are repaired with [`FlowSet::retrace_incremental`]
+//! (only the flows crossing a dead link are re-traced), never a full
+//! re-trace. Correctness rests on a monotonicity argument: under
+//! [`crate::faults::DegradedRouter`], up\*/down\* reachability only
+//! *shrinks* as the fault set grows, and the router keeps the base
+//! algorithm's choice wherever its link survives. So for `F_new ⊇
+//! F_old`, a store that is correct for `F_old` repaired incrementally
+//! against `F_new` is byte-identical to a from-scratch trace under
+//! `F_new` — pure link-*down* batches therefore compose from the
+//! *current* store. A revive breaks the superset relation, so any batch
+//! containing a link-up repairs from the cached *pristine* store
+//! instead (and a batch that empties the fault set just restores the
+//! pristine store and tables outright). `tests/fabric_service.rs` pins
+//! this equality after every event of a random cascade grid.
+
+use super::snapshot::{FabricSnapshot, FabricStats, SnapshotCell};
+use crate::eval::FlowSet;
+use crate::faults::{FaultSet, LinkEvent};
+use crate::nodes::{NodeTypeMap, TypeReindex};
+use crate::routing::degraded::route_degraded;
+use crate::routing::verify::all_pairs;
+use crate::routing::{AlgorithmKind, ForwardingTables};
+use crate::topology::{Nid, Topology};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Everything a full (from-scratch) build produces.
+struct FullBuild {
+    pristine_flows: Arc<FlowSet>,
+    pristine_tables: Arc<ForwardingTables>,
+    flows: Arc<FlowSet>,
+    tables: ForwardingTables,
+}
+
+/// The single-writer fabric state. Owned by the leader thread; every
+/// mutation publishes one fresh [`FabricSnapshot`] into the cell.
+pub(super) struct Leader {
+    topo: Arc<Topology>,
+    types: Arc<NodeTypeMap>,
+    reindex: TypeReindex,
+    kind: AlgorithmKind,
+    seed: u64,
+    faults: FaultSet,
+    /// Healthy-fabric route store / tables for the current algorithm —
+    /// the repair base whenever a batch revives a link, and the restore
+    /// target when the last fault clears.
+    pristine_flows: Arc<FlowSet>,
+    pristine_tables: Arc<ForwardingTables>,
+    /// Published state (what the current snapshot serves).
+    flows: Arc<FlowSet>,
+    tables: Arc<ForwardingTables>,
+    version: u64,
+    rebuilds: u64,
+    reroutes: u64,
+    failed_repairs: u64,
+    last_reroute_micros: u64,
+    last_diff_entries: usize,
+    last_batch_events: usize,
+    last_routes_changed: usize,
+    cell: Arc<SnapshotCell>,
+}
+
+impl Leader {
+    /// Build the initial state (pristine fabric, version 1) and the cell
+    /// readers will load from.
+    pub(super) fn new(
+        topo: Arc<Topology>,
+        types: Arc<NodeTypeMap>,
+        kind: AlgorithmKind,
+        seed: u64,
+    ) -> Result<(Leader, Arc<SnapshotCell>)> {
+        let t0 = Instant::now();
+        let reindex = TypeReindex::new(&types);
+        let faults = FaultSet::none(&topo);
+        let built = compute_full(&topo, &types, &reindex, kind, seed, &faults)?;
+        let mut tables = built.tables;
+        tables.version = 1;
+        let tables = Arc::new(tables);
+        let stats = FabricStats {
+            algorithm: kind,
+            table_version: 1,
+            rebuilds: 1,
+            reroutes: 0,
+            failed_repairs: 0,
+            dead_links: 0,
+            table_entries: tables.num_entries(),
+            last_reroute_micros: t0.elapsed().as_micros() as u64,
+            last_diff_entries: tables.num_entries(), // initial full push
+            last_batch_events: 0,
+            last_routes_changed: 0,
+            degraded: false,
+        };
+        let cell = Arc::new(SnapshotCell::new(Arc::new(FabricSnapshot {
+            topo: topo.clone(),
+            types: types.clone(),
+            algorithm: kind,
+            seed,
+            table_version: 1,
+            faults: faults.clone(),
+            tables: tables.clone(),
+            flows: built.flows.clone(),
+            stats: stats.clone(),
+        })));
+        let leader = Leader {
+            topo,
+            types,
+            reindex,
+            kind,
+            seed,
+            faults,
+            pristine_flows: built.pristine_flows,
+            pristine_tables: built.pristine_tables,
+            flows: built.flows,
+            tables,
+            version: 1,
+            rebuilds: 1,
+            reroutes: 0,
+            failed_repairs: 0,
+            last_reroute_micros: stats.last_reroute_micros,
+            last_diff_entries: stats.last_diff_entries,
+            last_batch_events: 0,
+            last_routes_changed: 0,
+            cell: cell.clone(),
+        };
+        Ok((leader, cell))
+    }
+
+    fn grouped_reindex(&self) -> Option<&TypeReindex> {
+        if self.kind.is_grouped() {
+            Some(&self.reindex)
+        } else {
+            None
+        }
+    }
+
+    /// Apply one coalesced event batch: fold every event into the fault
+    /// set, repair once, publish once. A batch whose net effect is
+    /// empty (e.g. a down for an already-dead link) publishes nothing.
+    pub(super) fn apply_batch(&mut self, events: &[LinkEvent]) {
+        let t0 = Instant::now();
+        let mut faults = self.faults.clone();
+        for e in events {
+            match *e {
+                LinkEvent::Down(l) => faults.kill(l),
+                LinkEvent::Up(l) => faults.revive(l),
+            }
+        }
+        if faults == self.faults {
+            return;
+        }
+        // Did the batch revive anything that was dead before it? If so
+        // the new fault set is not a superset of the old one and the
+        // current store is no repair base — fall back to the pristine
+        // store (see module docs).
+        let any_revive = self.faults.dead_links().into_iter().any(|l| !faults.is_dead(l));
+        let repaired: Result<(Arc<FlowSet>, ForwardingTables)> = (|| {
+            if faults.num_dead() == 0 {
+                return Ok((self.pristine_flows.clone(), (*self.pristine_tables).clone()));
+            }
+            let router =
+                self.kind.build_degraded(&self.topo, Some(&self.types), self.seed, &faults)?;
+            let base = if any_revive { &self.pristine_flows } else { &self.flows };
+            let (flows, _) = base.retrace_incremental(&self.topo, &faults, &*router);
+            let tables = if router.dest_based() {
+                ForwardingTables::build(&self.topo, &*router)?
+            } else {
+                // Source-based algorithms have no plain LFT form; the
+                // distributable fallback is the procedural balancer
+                // with the same type re-index.
+                route_degraded(&self.topo, &faults, self.grouped_reindex())?
+            };
+            Ok((Arc::new(flows), tables))
+        })();
+        self.last_batch_events = events.len();
+        match repaired {
+            Ok((flows, mut tables)) => {
+                self.version += 1;
+                tables.version = self.version;
+                self.last_routes_changed = self.flows.diff_count(&flows);
+                self.last_diff_entries = self.tables.diff_entries(&tables);
+                self.flows = flows;
+                self.tables = Arc::new(tables);
+                self.reroutes += 1;
+            }
+            Err(e) => {
+                // Partitioned: keep serving the last good tables, but
+                // tell readers the truth about the fault set.
+                self.failed_repairs += 1;
+                eprintln!("fabric repair failed ({} events): {e:#}", events.len());
+            }
+        }
+        self.faults = faults;
+        self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+        self.publish();
+    }
+
+    /// Switch the routing algorithm live: full rebuild (pristine store
+    /// and tables for the new algorithm), then a repair against the
+    /// current fault set if one is active. Counted under `rebuilds`,
+    /// not `reroutes`.
+    pub(super) fn set_algorithm(&mut self, kind: AlgorithmKind) {
+        if kind == self.kind {
+            return;
+        }
+        let t0 = Instant::now();
+        let old_kind = self.kind;
+        self.kind = kind;
+        match compute_full(&self.topo, &self.types, &self.reindex, kind, self.seed, &self.faults) {
+            Ok(built) => {
+                let mut tables = built.tables;
+                self.version += 1;
+                tables.version = self.version;
+                self.last_routes_changed = self.flows.diff_count(&built.flows);
+                self.last_diff_entries = self.tables.diff_entries(&tables);
+                self.pristine_flows = built.pristine_flows;
+                self.pristine_tables = built.pristine_tables;
+                self.flows = built.flows;
+                self.tables = Arc::new(tables);
+                self.rebuilds += 1;
+            }
+            Err(e) => {
+                self.kind = old_kind;
+                self.failed_repairs += 1;
+                eprintln!("algorithm switch to {kind} failed: {e:#}");
+            }
+        }
+        self.last_batch_events = 0;
+        self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+        self.publish();
+    }
+
+    fn stats(&self) -> FabricStats {
+        FabricStats {
+            algorithm: self.kind,
+            table_version: self.version,
+            rebuilds: self.rebuilds,
+            reroutes: self.reroutes,
+            failed_repairs: self.failed_repairs,
+            dead_links: self.faults.num_dead(),
+            table_entries: self.tables.num_entries(),
+            last_reroute_micros: self.last_reroute_micros,
+            last_diff_entries: self.last_diff_entries,
+            last_batch_events: self.last_batch_events,
+            last_routes_changed: self.last_routes_changed,
+            degraded: self.faults.num_dead() > 0,
+        }
+    }
+
+    fn snapshot(&self) -> FabricSnapshot {
+        FabricSnapshot {
+            topo: self.topo.clone(),
+            types: self.types.clone(),
+            algorithm: self.kind,
+            seed: self.seed,
+            table_version: self.version,
+            faults: self.faults.clone(),
+            tables: self.tables.clone(),
+            flows: self.flows.clone(),
+            stats: self.stats(),
+        }
+    }
+
+    fn publish(&self) {
+        self.cell.store(Arc::new(self.snapshot()));
+    }
+}
+
+/// Full (non-incremental) build for one algorithm: the pristine
+/// all-pairs store + tables, and — when `faults` is non-empty — their
+/// degraded counterparts derived from that pristine base.
+fn compute_full(
+    topo: &Arc<Topology>,
+    types: &Arc<NodeTypeMap>,
+    reindex: &TypeReindex,
+    kind: AlgorithmKind,
+    seed: u64,
+    faults: &FaultSet,
+) -> Result<FullBuild> {
+    let grouped = if kind.is_grouped() { Some(reindex) } else { None };
+    let router = kind.build(topo, Some(types), seed);
+    let pairs = all_pairs(topo.num_nodes() as Nid);
+    let pristine_flows = Arc::new(FlowSet::trace(topo, &*router, &pairs));
+    let none = FaultSet::none(topo);
+    let pristine_tables = Arc::new(if router.dest_based() {
+        ForwardingTables::build(topo, &*router)?
+    } else {
+        route_degraded(topo, &none, grouped)?
+    });
+    let (flows, tables) = if faults.num_dead() == 0 {
+        (pristine_flows.clone(), (*pristine_tables).clone())
+    } else {
+        let degraded = kind.build_degraded(topo, Some(types), seed, faults)?;
+        let (flows, _) = pristine_flows.retrace_incremental(topo, faults, &*degraded);
+        let tables = if degraded.dest_based() {
+            ForwardingTables::build(topo, &*degraded)?
+        } else {
+            route_degraded(topo, faults, grouped)?
+        };
+        (Arc::new(flows), tables)
+    };
+    Ok(FullBuild { pristine_flows, pristine_tables, flows, tables })
+}

@@ -1,266 +1,182 @@
-//! Fabric-manager coordinator, in the style of the BXI routing
-//! architecture (Vigneras & Quintin [8]): a leader thread owns the
-//! fabric state — topology, node types, routing algorithm, fault set,
-//! versioned forwarding tables — and processes events (link up/down,
-//! algorithm change, analysis queries) from a command channel. Route
-//! recomputation after faults uses the procedural degraded router seeded
-//! with the Gxmodk type re-index, and the coordinator reports incremental
-//! table-diff sizes (what would be pushed to switches) and reroute
-//! latency.
+//! Online fabric-manager service, in the style of the BXI routing
+//! architecture (Vigneras & Quintin [8]): a single leader thread owns
+//! the fabric state and repairs it; readers are fully decoupled through
+//! versioned immutable snapshots.
 //!
-//! The offline vendor set has no tokio; the event loop is a plain thread
-//! over `std::sync::mpsc`, which a fabric manager would arguably prefer
-//! anyway (single writer, strictly ordered events).
+//! Three design rules shape the service:
+//!
+//!  * **Single writer, batched events.** Link up/down events arrive on
+//!    an mpsc channel (the offline vendor set has no tokio; a fabric
+//!    manager arguably prefers a plain thread anyway — strictly ordered
+//!    events, no executor). The leader drains whatever has accumulated
+//!    and coalesces consecutive event commands into **one** repair and
+//!    one table push: a 10-link burst costs one retrace, one diff, one
+//!    version bump. [`Coordinator::inject_burst`] submits an atomic
+//!    batch; [`crate::faults::FaultScenario::as_events`] /
+//!    [`drill_events`](crate::faults::FaultScenario::drill_events)
+//!    turn seeded cascade scenarios into replayable event streams.
+//!  * **Incremental repair.** The route store is an
+//!    [`crate::eval::FlowSet`] over all node pairs, repaired with
+//!    [`retrace_incremental`](crate::eval::FlowSet::retrace_incremental)
+//!    + [`crate::faults::DegradedRouter`] — only flows crossing a dead
+//!    link are re-traced; there is no full re-trace on the fault path
+//!    (see `leader.rs` for the monotonicity argument and the
+//!    pristine-store fallback on revives).
+//!  * **Lock-free reads.** Every repair publishes one immutable
+//!    [`FabricSnapshot`] (tables + route store + stats) into a
+//!    [`SnapshotCell`]; `analyze`/`trace`/`stats` load the current
+//!    `Arc` and never touch the leader. A slow analysis cannot delay a
+//!    repair, and a repair can never tear a query. Writes are
+//!    asynchronous — [`Coordinator::sync`] barriers on the leader
+//!    having processed everything submitted before it.
+//!
+//! `pgft fabric` drives a seeded event schedule through the service and
+//! reports per-event reroute latency, diff sizes, and read throughput;
+//! `benches/bench_fabric.rs` records the same under a million-query
+//! concurrent load.
 
+mod leader;
+mod snapshot;
+
+pub use snapshot::{FabricSnapshot, FabricStats, SnapshotCell};
+
+use crate::faults::LinkEvent;
 use crate::metrics::AlgoSummary;
-use crate::nodes::{NodeTypeMap, TypeReindex};
+use crate::nodes::NodeTypeMap;
 use crate::patterns::Pattern;
-use crate::routing::degraded::{route_degraded, FaultSet};
-use crate::routing::table::ForwardingTables;
-use crate::routing::trace::{trace_flows, RoutePorts};
+use crate::routing::trace::RoutePorts;
 use crate::routing::AlgorithmKind;
 use crate::topology::{LinkId, Nid, Topology};
 use anyhow::{anyhow, Result};
+use leader::Leader;
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
-
-/// Snapshot of coordinator state for monitoring.
-#[derive(Clone, Debug)]
-pub struct FabricStats {
-    /// Active routing algorithm.
-    pub algorithm: AlgorithmKind,
-    /// Current forwarding-table generation.
-    pub table_version: u64,
-    /// Total reroutes performed since startup.
-    pub reroutes: u64,
-    /// Currently dead links.
-    pub dead_links: usize,
-    /// Total (switch, destination) table entries.
-    pub table_entries: usize,
-    /// Wall-clock cost of the last reroute.
-    pub last_reroute_micros: u64,
-    /// Entries the last reroute changed (incremental push size).
-    pub last_diff_entries: usize,
-    /// Whether the fabric is running on degraded (fault-avoiding) tables.
-    pub degraded: bool,
-}
 
 enum Command {
-    LinkDown(LinkId),
-    LinkUp(LinkId),
+    /// A batch of link transitions, applied as one repair.
+    Events(Vec<LinkEvent>),
     SetAlgorithm(AlgorithmKind),
-    Analyze { pattern: Pattern, reply: Sender<Result<AlgoSummary>> },
-    TraceFlows { flows: Vec<(Nid, Nid)>, reply: Sender<Vec<RoutePorts>> },
-    Stats(Sender<FabricStats>),
+    /// Barrier: replied to once every earlier command is processed.
+    Sync(Sender<()>),
     Shutdown,
 }
 
-/// Handle to a running coordinator thread.
+/// Handle to a running coordinator: commands go to the leader thread,
+/// queries are served from the latest published snapshot.
 pub struct Coordinator {
     tx: Sender<Command>,
+    cell: Arc<SnapshotCell>,
     join: Option<JoinHandle<()>>,
 }
 
-struct State {
-    topo: Arc<Topology>,
-    types: NodeTypeMap,
-    reindex: TypeReindex,
-    kind: AlgorithmKind,
-    seed: u64,
-    faults: FaultSet,
-    /// Current tables: router-derived when healthy & dest-based,
-    /// degraded-procedural otherwise.
-    tables: Option<ForwardingTables>,
-    version: u64,
-    reroutes: u64,
-    last_reroute_micros: u64,
-    last_diff_entries: usize,
-}
-
-impl State {
-    fn rebuild_tables(&mut self) -> Result<()> {
-        let t0 = Instant::now();
-        let new = if self.faults.num_dead() == 0 {
-            let router = self.kind.build(&self.topo, Some(&self.types), self.seed);
-            if router.dest_based() {
-                ForwardingTables::build(&self.topo, &*router)?
-            } else {
-                // Source-based healthy fabric: per-ingress tables are
-                // implicit in the router; the distributable dest-based
-                // form falls back to the procedural balancer with the
-                // same re-index.
-                route_degraded(&self.topo, &self.faults, self.grouped_reindex())?
-            }
-        } else {
-            route_degraded(&self.topo, &self.faults, self.grouped_reindex())?
-        };
-        let diff = match &self.tables {
-            Some(old) => old.diff_entries(&new),
-            None => new.num_entries(),
-        };
-        self.last_diff_entries = diff;
-        self.last_reroute_micros = t0.elapsed().as_micros() as u64;
-        self.version += 1;
-        self.reroutes += 1;
-        let mut new = new;
-        new.version = self.version;
-        self.tables = Some(new);
-        Ok(())
-    }
-
-    fn grouped_reindex(&self) -> Option<&TypeReindex> {
-        if self.kind.is_grouped() {
-            Some(&self.reindex)
-        } else {
-            None
-        }
-    }
-
-    /// Trace flows with the *current* state: healthy fabric uses the
-    /// algorithm's router directly; degraded fabric walks the tables.
-    fn trace(&self, flows: &[(Nid, Nid)]) -> Vec<RoutePorts> {
-        if self.faults.num_dead() == 0 {
-            let router = self.kind.build(&self.topo, Some(&self.types), self.seed);
-            trace_flows(&self.topo, &*router, flows)
-        } else {
-            let t = self.tables.as_ref().expect("tables exist after rebuild");
-            flows.iter().map(|&(s, d)| t.trace(&self.topo, s, d)).collect()
-        }
-    }
-}
-
 impl Coordinator {
-    /// Spawn the leader thread, compute initial tables, and return the
-    /// command handle.
+    /// Compute the initial tables and route store, publish snapshot
+    /// version 1, and spawn the leader thread.
     pub fn start(
         topo: Arc<Topology>,
         types: NodeTypeMap,
         kind: AlgorithmKind,
         seed: u64,
     ) -> Result<Coordinator> {
-        let reindex = TypeReindex::new(&types);
-        let faults = FaultSet::none(&topo);
-        let mut state = State {
-            topo,
-            types,
-            reindex,
-            kind,
-            seed,
-            faults,
-            tables: None,
-            version: 0,
-            reroutes: 0,
-            last_reroute_micros: 0,
-            last_diff_entries: 0,
-        };
-        state.rebuild_tables()?;
+        let (mut leader, cell) = Leader::new(topo, Arc::new(types), kind, seed)?;
         let (tx, rx) = channel::<Command>();
         let join = std::thread::Builder::new()
             .name("pgft-fabric-leader".into())
             .spawn(move || {
-                while let Ok(cmd) = rx.recv() {
-                    match cmd {
-                        Command::LinkDown(l) => {
-                            state.faults.kill(l);
-                            if let Err(e) = state.rebuild_tables() {
-                                eprintln!("reroute after link {l} down failed: {e:#}");
+                'service: while let Ok(first) = rx.recv() {
+                    // Drain everything that accumulated while we were
+                    // busy, then coalesce runs of event commands so a
+                    // burst becomes one repair + one table push.
+                    let mut queue = VecDeque::new();
+                    queue.push_back(first);
+                    while let Ok(cmd) = rx.try_recv() {
+                        queue.push_back(cmd);
+                    }
+                    while let Some(cmd) = queue.pop_front() {
+                        match cmd {
+                            Command::Events(mut batch) => {
+                                while matches!(queue.front(), Some(Command::Events(_))) {
+                                    if let Some(Command::Events(more)) = queue.pop_front() {
+                                        batch.extend(more);
+                                    }
+                                }
+                                leader.apply_batch(&batch);
                             }
-                        }
-                        Command::LinkUp(l) => {
-                            state.faults.revive(l);
-                            if let Err(e) = state.rebuild_tables() {
-                                eprintln!("reroute after link {l} up failed: {e:#}");
+                            Command::SetAlgorithm(k) => leader.set_algorithm(k),
+                            Command::Sync(reply) => {
+                                let _ = reply.send(());
                             }
+                            Command::Shutdown => break 'service,
                         }
-                        Command::SetAlgorithm(k) => {
-                            state.kind = k;
-                            if let Err(e) = state.rebuild_tables() {
-                                eprintln!("algorithm switch failed: {e:#}");
-                            }
-                        }
-                        Command::Analyze { pattern, reply } => {
-                            let res = (|| {
-                                let flows = pattern.flows(&state.topo, &state.types)?;
-                                let routes = state.trace(&flows);
-                                let rep =
-                                    crate::metrics::CongestionReport::compute(&state.topo, &routes);
-                                Ok(AlgoSummary::from_report(
-                                    &state.topo,
-                                    &rep,
-                                    state.kind.as_str(),
-                                    &pattern.name(),
-                                    flows.len(),
-                                ))
-                            })();
-                            let _ = reply.send(res);
-                        }
-                        Command::TraceFlows { flows, reply } => {
-                            let _ = reply.send(state.trace(&flows));
-                        }
-                        Command::Stats(reply) => {
-                            let _ = reply.send(FabricStats {
-                                algorithm: state.kind,
-                                table_version: state.version,
-                                reroutes: state.reroutes,
-                                dead_links: state.faults.num_dead(),
-                                table_entries: state
-                                    .tables
-                                    .as_ref()
-                                    .map(|t| t.num_entries())
-                                    .unwrap_or(0),
-                                last_reroute_micros: state.last_reroute_micros,
-                                last_diff_entries: state.last_diff_entries,
-                                degraded: state.faults.num_dead() > 0,
-                            });
-                        }
-                        Command::Shutdown => break,
                     }
                 }
             })?;
-        Ok(Coordinator { tx, join: Some(join) })
+        Ok(Coordinator { tx, cell, join: Some(join) })
     }
 
-    /// Report a link failure; the leader reroutes incrementally.
+    /// Report a link failure (one-event batch).
     pub fn link_down(&self, l: LinkId) {
-        let _ = self.tx.send(Command::LinkDown(l));
+        let _ = self.tx.send(Command::Events(vec![LinkEvent::Down(l)]));
     }
 
-    /// Report a link recovery; the leader reroutes incrementally.
+    /// Report a link recovery (one-event batch).
     pub fn link_up(&self, l: LinkId) {
-        let _ = self.tx.send(Command::LinkUp(l));
+        let _ = self.tx.send(Command::Events(vec![LinkEvent::Up(l)]));
     }
 
-    /// Switch the routing algorithm live (tables are rebuilt).
+    /// Submit a burst of link events as one atomic batch: exactly one
+    /// repair and one table push, however many events it carries.
+    /// (Singles submitted back-to-back coalesce opportunistically too —
+    /// whatever piles up while the leader is busy becomes one batch —
+    /// but only a burst is *guaranteed* to.)
+    pub fn inject_burst(&self, events: Vec<LinkEvent>) {
+        let _ = self.tx.send(Command::Events(events));
+    }
+
+    /// Switch the routing algorithm live (full rebuild, then repair if
+    /// faults are active).
     pub fn set_algorithm(&self, k: AlgorithmKind) {
         let _ = self.tx.send(Command::SetAlgorithm(k));
     }
 
-    /// Fetch a monitoring snapshot from the leader.
-    pub fn stats(&self) -> Result<FabricStats> {
+    /// Barrier: returns once the leader has processed every command
+    /// submitted before this call (so the snapshot reflects them).
+    pub fn sync(&self) -> Result<()> {
         let (tx, rx) = channel();
-        self.tx.send(Command::Stats(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
+        self.tx.send(Command::Sync(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
         rx.recv().map_err(|_| anyhow!("coordinator stopped"))
     }
 
-    /// Run the §III congestion analysis on the *current* fabric state
-    /// (healthy router or degraded tables).
+    /// The latest published fabric snapshot — an immutable, internally
+    /// consistent view served without contacting the leader. Hold it
+    /// as long as you like; repairs publish new snapshots alongside.
+    pub fn snapshot(&self) -> Arc<FabricSnapshot> {
+        self.cell.load()
+    }
+
+    /// A shareable handle to the publication point: reader threads load
+    /// the latest snapshot straight from the cell, with no reference to
+    /// (or synchronization with) the coordinator handle itself.
+    pub fn snapshots(&self) -> Arc<SnapshotCell> {
+        self.cell.clone()
+    }
+
+    /// Monitoring counters from the latest snapshot (lock-free).
+    pub fn stats(&self) -> FabricStats {
+        self.snapshot().stats.clone()
+    }
+
+    /// Run the §III congestion analysis against the latest snapshot
+    /// (lock-free; never blocks on the leader).
     pub fn analyze(&self, pattern: Pattern) -> Result<AlgoSummary> {
-        let (tx, rx) = channel();
-        self.tx
-            .send(Command::Analyze { pattern, reply: tx })
-            .map_err(|_| anyhow!("coordinator stopped"))?;
-        rx.recv().map_err(|_| anyhow!("coordinator stopped"))?
+        self.snapshot().analyze(pattern)
     }
 
-    /// Trace flows through the current fabric state.
-    pub fn trace(&self, flows: Vec<(Nid, Nid)>) -> Result<Vec<RoutePorts>> {
-        let (tx, rx) = channel();
-        self.tx
-            .send(Command::TraceFlows { flows, reply: tx })
-            .map_err(|_| anyhow!("coordinator stopped"))?;
-        rx.recv().map_err(|_| anyhow!("coordinator stopped"))
+    /// Trace flows against the latest snapshot's route store.
+    pub fn trace(&self, flows: &[(Nid, Nid)]) -> Vec<RoutePorts> {
+        self.snapshot().trace(flows)
     }
 
     /// Stop the leader thread and join it.
@@ -297,11 +213,16 @@ mod tests {
     #[test]
     fn startup_and_stats() {
         let (_t, c) = start(AlgorithmKind::Gdmodk);
-        let s = c.stats().unwrap();
+        let s = c.stats();
         assert_eq!(s.algorithm, AlgorithmKind::Gdmodk);
         assert_eq!(s.table_version, 1);
+        assert_eq!(s.rebuilds, 1);
+        assert_eq!(s.reroutes, 0, "startup is a rebuild, not a reroute");
         assert_eq!(s.dead_links, 0);
         assert!(s.table_entries > 0);
+        let snap = c.snapshot();
+        assert_eq!(snap.table_version, 1);
+        assert_eq!(snap.tables.version, 1);
         c.shutdown();
     }
 
@@ -318,13 +239,17 @@ mod tests {
         let (topo, c) = start(AlgorithmKind::Gdmodk);
         let victim = topo.links.iter().find(|l| l.stage == 3).unwrap().id;
         c.link_down(victim);
-        let s = c.stats().unwrap();
+        c.sync().unwrap();
+        let s = c.stats();
         assert!(s.degraded);
         assert_eq!(s.dead_links, 1);
         assert_eq!(s.table_version, 2);
+        assert_eq!(s.reroutes, 1);
+        assert_eq!(s.rebuilds, 1);
         assert!(s.last_diff_entries > 0, "incremental diff recorded");
+        assert!(s.last_routes_changed > 0);
         // Routes avoid the dead link.
-        let routes = c.trace(vec![(0, 63), (63, 0), (8, 47)]).unwrap();
+        let routes = c.trace(&[(0, 63), (63, 0), (8, 47)]);
         for r in &routes {
             for &p in &r.ports {
                 assert_ne!(topo.ports[p].link, victim);
@@ -332,7 +257,8 @@ mod tests {
         }
         // Revive: back to healthy routing.
         c.link_up(victim);
-        let s = c.stats().unwrap();
+        c.sync().unwrap();
+        let s = c.stats();
         assert!(!s.degraded);
         assert_eq!(s.table_version, 3);
         c.shutdown();
@@ -343,9 +269,12 @@ mod tests {
         let (_t, c) = start(AlgorithmKind::Dmodk);
         assert_eq!(c.analyze(Pattern::C2ioSym).unwrap().c_topo, 4);
         c.set_algorithm(AlgorithmKind::Gdmodk);
+        c.sync().unwrap();
         assert_eq!(c.analyze(Pattern::C2ioSym).unwrap().c_topo, 1);
-        let s = c.stats().unwrap();
+        let s = c.stats();
         assert_eq!(s.algorithm, AlgorithmKind::Gdmodk);
+        assert_eq!(s.rebuilds, 2, "algorithm switch is a rebuild");
+        assert_eq!(s.reroutes, 0);
         c.shutdown();
     }
 
@@ -354,6 +283,36 @@ mod tests {
         let (_t, c) = start(AlgorithmKind::Gsmodk);
         let s = c.analyze(Pattern::C2ioSym).unwrap();
         assert_eq!(s.c_topo, 4, "§IV.B.2");
+        c.shutdown();
+    }
+
+    #[test]
+    fn old_snapshots_stay_valid_after_repairs() {
+        let (topo, c) = start(AlgorithmKind::Dmodk);
+        let before = c.snapshot();
+        let victim = topo.links.iter().find(|l| l.stage == 2).unwrap().id;
+        c.link_down(victim);
+        c.sync().unwrap();
+        let after = c.snapshot();
+        assert_eq!(before.table_version, 1);
+        assert_eq!(after.table_version, 2);
+        // The old snapshot still answers, unchanged, from its own state.
+        assert_eq!(before.analyze(Pattern::C2ioSym).unwrap().c_topo, 4);
+        assert!(!before.stats.degraded && after.stats.degraded);
+        c.shutdown();
+    }
+
+    #[test]
+    fn duplicate_events_are_absorbed() {
+        let (topo, c) = start(AlgorithmKind::Dmodk);
+        let victim = topo.links.iter().find(|l| l.stage == 3).unwrap().id;
+        c.link_down(victim);
+        c.sync().unwrap();
+        let v = c.stats().table_version;
+        c.link_down(victim); // already dead: net no-op, no publish
+        c.sync().unwrap();
+        assert_eq!(c.stats().table_version, v);
+        assert_eq!(c.stats().reroutes, 1);
         c.shutdown();
     }
 }

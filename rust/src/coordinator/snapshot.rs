@@ -1,0 +1,170 @@
+//! Versioned, immutable fabric snapshots and the cell that publishes
+//! them.
+//!
+//! The leader thread ([`crate::coordinator::Coordinator`]) never mutates
+//! published state: every repair builds a fresh [`FabricSnapshot`]
+//! (tables + route store + stats, all internally consistent) and swaps
+//! it into the [`SnapshotCell`] with one pointer store. Readers clone
+//! the current `Arc` and then work entirely on their private snapshot —
+//! queries never observe a half-repaired fabric and never block the
+//! writer beyond the pointer swap itself.
+
+use crate::eval::FlowSet;
+use crate::faults::FaultSet;
+use crate::metrics::{AlgoSummary, CongestionReport};
+use crate::nodes::NodeTypeMap;
+use crate::patterns::Pattern;
+use crate::routing::trace::RoutePorts;
+use crate::routing::{AlgorithmKind, ForwardingTables};
+use crate::topology::{Nid, Topology};
+use anyhow::Result;
+use std::sync::{Arc, RwLock};
+
+/// Monitoring counters, embedded in every snapshot.
+#[derive(Clone, Debug)]
+pub struct FabricStats {
+    /// Active routing algorithm.
+    pub algorithm: AlgorithmKind,
+    /// Current forwarding-table generation (equals
+    /// [`FabricSnapshot::table_version`] and `tables.version`).
+    pub table_version: u64,
+    /// Full table computations (startup + algorithm switches) — never
+    /// fault-driven, and never incremental.
+    pub rebuilds: u64,
+    /// Fault-driven incremental repairs since startup (one per coalesced
+    /// event batch, however many events it absorbed).
+    pub reroutes: u64,
+    /// Repair attempts that failed (fabric partitioned): the snapshot
+    /// keeps serving the last good tables and flags the gap here.
+    pub failed_repairs: u64,
+    /// Currently dead links.
+    pub dead_links: usize,
+    /// Total (switch, destination) table entries.
+    pub table_entries: usize,
+    /// Wall-clock cost of the last repair or rebuild.
+    pub last_reroute_micros: u64,
+    /// Entries the last repair changed (incremental push size).
+    pub last_diff_entries: usize,
+    /// Events absorbed by the last coalesced batch.
+    pub last_batch_events: usize,
+    /// All-pairs routes the last repair moved.
+    pub last_routes_changed: usize,
+    /// Whether the fabric is running on degraded (fault-avoiding) tables.
+    pub degraded: bool,
+}
+
+/// One immutable, internally consistent view of the fabric: the tables
+/// a manager would upload, the all-pairs route store they were derived
+/// with, the fault set they route around, and the stats describing how
+/// they got there. Every query (`analyze`, `trace`, `stats`) reads one
+/// snapshot end to end, so concurrent repairs can never tear a result.
+#[derive(Clone, Debug)]
+pub struct FabricSnapshot {
+    /// The (immutable) fabric graph.
+    pub topo: Arc<Topology>,
+    /// Node-type assignment (drives grouped algorithms and patterns).
+    pub types: Arc<NodeTypeMap>,
+    /// Algorithm the tables were computed with.
+    pub algorithm: AlgorithmKind,
+    /// Seed the algorithm was instantiated with.
+    pub seed: u64,
+    /// Table generation; bumped on every successful repair/rebuild.
+    pub table_version: u64,
+    /// Dead links these tables route around. After a *failed* repair
+    /// (partitioned fabric) this is ahead of `tables` — `stats.failed_repairs`
+    /// counts those gaps.
+    pub faults: FaultSet,
+    /// Distributable forwarding tables (`tables.version == table_version`).
+    pub tables: Arc<ForwardingTables>,
+    /// All-pairs route store the evaluators consume; repaired
+    /// incrementally on fault events.
+    pub flows: Arc<FlowSet>,
+    /// Monitoring counters at publication time.
+    pub stats: FabricStats,
+}
+
+/// All-pairs flow index of `(src, dst)`: the store is traced over
+/// [`crate::routing::verify::all_pairs`] (src-major, diagonal skipped).
+#[inline]
+fn flow_index(n: usize, src: Nid, dst: Nid) -> usize {
+    let (s, d) = (src as usize, dst as usize);
+    s * (n - 1) + d - usize::from(d > s)
+}
+
+impl FabricSnapshot {
+    /// Trace flows against this snapshot's route store (self-flows trace
+    /// empty). Pure read — no channel, no lock, no re-trace.
+    pub fn trace(&self, flows: &[(Nid, Nid)]) -> Vec<RoutePorts> {
+        let n = self.topo.num_nodes();
+        flows
+            .iter()
+            .map(|&(src, dst)| {
+                if src == dst {
+                    return RoutePorts { src, dst, ports: Vec::new() };
+                }
+                let f = flow_index(n, src, dst);
+                debug_assert_eq!(self.flows.pair(f), (src, dst));
+                RoutePorts { src, dst, ports: self.flows.route(f).to_vec() }
+            })
+            .collect()
+    }
+
+    /// Run the §III congestion analysis for a pattern against this
+    /// snapshot's routes.
+    pub fn analyze(&self, pattern: Pattern) -> Result<AlgoSummary> {
+        let flows = pattern.flows(&self.topo, &self.types)?;
+        let routes = self.trace(&flows);
+        let rep = CongestionReport::compute(&self.topo, &routes);
+        Ok(AlgoSummary::from_report(
+            &self.topo,
+            &rep,
+            self.algorithm.as_str(),
+            &pattern.name(),
+            flows.len(),
+        ))
+    }
+}
+
+/// The arc-swap-style publication point: a single `Arc` slot the leader
+/// stores into and any number of readers load from. The critical
+/// section on both sides is one pointer clone/store — readers hold no
+/// lock while they use a snapshot, so a slow query never delays a
+/// repair and a repair never tears a query.
+///
+/// (The offline vendor set has no `arc-swap` crate; an `RwLock` around
+/// the `Arc` gives the same shape. Lock poisoning is ignored — the
+/// stored value is always a fully constructed snapshot.)
+pub struct SnapshotCell {
+    slot: RwLock<Arc<FabricSnapshot>>,
+}
+
+impl SnapshotCell {
+    /// Create a cell holding an initial snapshot.
+    pub fn new(snap: Arc<FabricSnapshot>) -> SnapshotCell {
+        SnapshotCell { slot: RwLock::new(snap) }
+    }
+
+    /// Load the current snapshot (one Arc clone under a read guard).
+    pub fn load(&self) -> Arc<FabricSnapshot> {
+        self.slot.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Publish a new snapshot (one pointer store under a write guard).
+    pub fn store(&self, snap: Arc<FabricSnapshot>) {
+        *self.slot.write().unwrap_or_else(|e| e.into_inner()) = snap;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flow_index_matches_all_pairs_order() {
+        let n = 64usize;
+        let pairs = crate::routing::verify::all_pairs(n as Nid);
+        for (i, &(s, d)) in pairs.iter().enumerate() {
+            assert_eq!(flow_index(n, s, d), i);
+        }
+    }
+}

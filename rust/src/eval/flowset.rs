@@ -18,6 +18,18 @@
 //! per (src, dst) query and [`crate::faults::DegradedRouter`] keeps the
 //! base algorithm's decisions wherever their links survive, so a flow
 //! that touches no dead link re-traces to exactly its pristine ports.
+//!
+//! The same argument *composes across growing fault sets*: up\*/down\*
+//! reachability under `DegradedRouter` only shrinks as faults
+//! accumulate, so for `F_new ⊇ F_old` a store that is correct for
+//! `F_old`, repaired incrementally against `F_new`, equals a full trace
+//! under `F_new` — every stored route is a healthy-link witness that
+//! the degraded router reproduces verbatim, and the dirty ones are
+//! re-traced fresh. The online coordinator
+//! ([`crate::coordinator`]) leans on exactly this to chain cascade
+//! repairs from the previous stage's store; once a *revive* breaks the
+//! superset relation it must restart from the pristine store (revived
+//! links can make previously-moved routes attractive again).
 
 use crate::faults::FaultSet;
 use crate::routing::trace::{trace_route_into, RoutePorts};
@@ -332,6 +344,33 @@ mod tests {
             assert_eq!(incremental, full, "{kind}: incremental must be byte-identical to full");
             assert_eq!(changed, pristine.diff_count(&full), "{kind}");
             assert_eq!(changed, pristine.dirty_flows(&topo, &faults).len(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn incremental_repair_composes_across_cascade() {
+        // The coordinator's chaining invariant: repairing the *previous
+        // stage's* store against the grown fault set equals a full
+        // trace — see the module docs' monotonicity argument.
+        let (topo, _) = setup();
+        let flows = crate::routing::verify::all_pairs(topo.num_nodes() as Nid);
+        let scenario =
+            crate::faults::FaultModel::parse("cascade:4").unwrap().generate(&topo, 2);
+        for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gsmodk] {
+            let base = kind.build(&topo, None, 3);
+            let mut store = FlowSet::trace(&topo, &*base, &flows);
+            for faults in scenario.stages(&topo) {
+                let router = crate::faults::DegradedRouter::new(
+                    &topo,
+                    &faults,
+                    kind.build(&topo, None, 3),
+                )
+                .unwrap();
+                let (repaired, _) = store.retrace_incremental(&topo, &faults, &router);
+                let full = FlowSet::trace(&topo, &router, &flows);
+                assert_eq!(repaired, full, "{kind}: stage must compose from the previous one");
+                store = repaired;
+            }
         }
     }
 

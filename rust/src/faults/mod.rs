@@ -42,7 +42,7 @@ pub mod scenario;
 pub mod view;
 
 pub use router::DegradedRouter;
-pub use scenario::{FaultModel, FaultScenario};
+pub use scenario::{FaultModel, FaultScenario, LinkEvent};
 pub use view::{DegradedTopology, ReachField};
 
 use crate::topology::{LinkId, Topology};

@@ -221,6 +221,37 @@ impl std::fmt::Display for FaultModel {
     }
 }
 
+/// One link state transition, as consumed by the online fabric
+/// coordinator ([`crate::coordinator`]): scenarios expand to ordered
+/// event streams via [`FaultScenario::as_events`] /
+/// [`FaultScenario::drill_events`] and are replayed through the
+/// coordinator's mpsc channel like live SNMP traps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkEvent {
+    /// The link died.
+    Down(LinkId),
+    /// The link came back (repair / cable reseat).
+    Up(LinkId),
+}
+
+impl LinkEvent {
+    /// The affected link.
+    pub fn link(&self) -> LinkId {
+        match *self {
+            LinkEvent::Down(l) | LinkEvent::Up(l) => l,
+        }
+    }
+}
+
+impl std::fmt::Display for LinkEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinkEvent::Down(l) => write!(f, "down:{l}"),
+            LinkEvent::Up(l) => write!(f, "up:{l}"),
+        }
+    }
+}
+
 /// A concrete, ordered fault scenario: the expansion of one
 /// [`FaultModel`] against one topology and seed.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -260,6 +291,23 @@ impl FaultScenario {
     /// Short human label, e.g. `links:4@seed1(4 dead)`.
     pub fn label(&self) -> String {
         format!("{}@seed{}({} dead)", self.model, self.seed, self.events.len())
+    }
+
+    /// The scenario as a coordinator event stream: one
+    /// [`LinkEvent::Down`] per death, in cascade order.
+    pub fn as_events(&self) -> Vec<LinkEvent> {
+        self.events.iter().map(|&l| LinkEvent::Down(l)).collect()
+    }
+
+    /// A full failure-and-repair drill: every death in cascade order,
+    /// then every repair in reverse order (last link to die is the
+    /// first to be fixed), ending back at the pristine fabric.
+    pub fn drill_events(&self) -> Vec<LinkEvent> {
+        self.events
+            .iter()
+            .map(|&l| LinkEvent::Down(l))
+            .chain(self.events.iter().rev().map(|&l| LinkEvent::Up(l)))
+            .collect()
     }
 }
 
@@ -375,5 +423,32 @@ mod tests {
             }
         }
         assert_eq!(stages.last().unwrap(), &s.fault_set(&t));
+    }
+
+    #[test]
+    fn event_streams_mirror_the_scenario() {
+        let t = topo();
+        let s = FaultModel::Cascade { count: 3 }.generate(&t, 5);
+        let down = s.as_events();
+        assert_eq!(down.len(), 3);
+        for (e, &l) in down.iter().zip(&s.events) {
+            assert_eq!(*e, LinkEvent::Down(l));
+            assert_eq!(e.link(), l);
+        }
+        let drill = s.drill_events();
+        assert_eq!(drill.len(), 6);
+        assert_eq!(&drill[..3], &down[..]);
+        // Repairs run in reverse death order and cancel out.
+        let mut f = FaultSet::none(&t);
+        for e in &drill {
+            match *e {
+                LinkEvent::Down(l) => f.kill(l),
+                LinkEvent::Up(l) => f.revive(l),
+            }
+        }
+        assert_eq!(f.num_dead(), 0);
+        assert_eq!(drill[3], LinkEvent::Up(s.events[2]));
+        assert_eq!(format!("{}", drill[0]), format!("down:{}", s.events[0]));
+        assert_eq!(format!("{}", drill[3]), format!("up:{}", s.events[2]));
     }
 }

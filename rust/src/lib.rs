@@ -16,7 +16,10 @@
 //! application-workload subsystem ([`workload`]: concurrent multi-phase
 //! job mixes and MPI-style collective schedules over typed node groups,
 //! scored by a fluid makespan metric and replayable flit-by-flit), and a
-//! BXI-style fabric-manager coordinator. With the `xla` cargo
+//! BXI-style online fabric-manager service ([`coordinator`]: a single
+//! leader thread repairing tables incrementally through the `FlowSet`
+//! store while queries read lock-free from versioned immutable
+//! snapshots). With the `xla` cargo
 //! feature, the simulation hot path runs AOT-compiled JAX/Pallas
 //! programs through PJRT (see `rust/src/runtime`); without it the exact
 //! pure-rust solvers are used.
@@ -67,10 +70,13 @@ pub mod workload;
 
 /// Convenience re-exports.
 pub mod prelude {
+    pub use crate::coordinator::{Coordinator, FabricSnapshot, FabricStats};
     pub use crate::eval::{
         CongestionEval, EvalCells, Evaluator, FairRateEval, FlowSet, NetsimEval,
     };
-    pub use crate::faults::{DegradedRouter, DegradedTopology, FaultModel, FaultScenario, FaultSet};
+    pub use crate::faults::{
+        DegradedRouter, DegradedTopology, FaultModel, FaultScenario, FaultSet, LinkEvent,
+    };
     pub use crate::metrics::{AlgoSummary, CongestionReport};
     pub use crate::netsim::{load_curve, run_netsim, Injection, NetsimConfig, NetsimReport};
     pub use crate::nodes::{NodeType, NodeTypeMap, Placement, TypeReindex};

@@ -28,14 +28,15 @@ fn fault_storm_and_recovery() {
     for &v in &victims {
         c.link_down(v);
     }
-    let s = c.stats().unwrap();
+    c.sync().unwrap();
+    let s = c.stats();
     assert_eq!(s.dead_links, victims.len());
     assert!(s.degraded);
 
     // Every pair still routes, avoiding all dead links.
     let flows: Vec<(u32, u32)> =
         (0..64).flat_map(|s| (0..64).filter(move |&d| d != s).map(move |d| (s, d))).collect();
-    let routes = c.trace(flows).unwrap();
+    let routes = c.trace(&flows);
     let rep = pgft::routing::verify::check_routes(&topo, &routes).unwrap();
     assert!(rep.deadlock_free);
     for r in &routes {
@@ -52,6 +53,7 @@ fn fault_storm_and_recovery() {
     for &v in &victims {
         c.link_up(v);
     }
+    c.sync().unwrap();
     assert_eq!(c.analyze(Pattern::C2ioSym).unwrap().c_topo, 1);
     c.shutdown();
 }
@@ -61,9 +63,12 @@ fn reroute_latency_and_diff_are_reported() {
     let (topo, _types, c) = start(AlgorithmKind::Dmodk);
     let victim = topo.links.iter().find(|l| l.stage == 3).unwrap().id;
     c.link_down(victim);
-    let s = c.stats().unwrap();
+    c.sync().unwrap();
+    let s = c.stats();
     assert!(s.last_reroute_micros > 0);
     assert!(s.last_diff_entries > 0 && s.last_diff_entries <= s.table_entries);
+    assert_eq!(s.reroutes, 1);
+    assert_eq!(s.last_batch_events, 1);
     c.shutdown();
 }
 
@@ -73,11 +78,14 @@ fn algorithm_migration_live() {
     let before = c.analyze(Pattern::C2ioAll).unwrap();
     assert_eq!(before.c_topo, 4);
     c.set_algorithm(AlgorithmKind::Gdmodk);
+    c.sync().unwrap();
     let after = c.analyze(Pattern::C2ioAll).unwrap();
     assert_eq!(after.c_topo, 2);
-    let s = c.stats().unwrap();
+    let s = c.stats();
     assert_eq!(s.algorithm, AlgorithmKind::Gdmodk);
     assert!(s.table_version >= 2);
+    assert_eq!(s.rebuilds, 2, "a live algorithm switch is a rebuild, not a reroute");
+    assert_eq!(s.reroutes, 0);
     c.shutdown();
 }
 

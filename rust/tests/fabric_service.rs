@@ -1,0 +1,300 @@
+//! Property pins for the online fabric-manager service (ISSUE 6):
+//!
+//!  * a batched burst repairs byte-identically to one-event-at-a-time;
+//!  * after EVERY event of a random cascade×algorithm grid, the
+//!    incrementally repaired snapshot equals a from-scratch rebuild
+//!    (and a partitioned stage keeps the last good tables);
+//!  * link-up after link-down restores the pristine tables, with
+//!    monotone versions and a `degraded`-flag round-trip;
+//!  * the pinned cascade (`cascade:4` @ seed 2) reproduces the
+//!    diff-entry / routes-moved / C_p constants cross-checked by
+//!    `python/tools/check_fabric_reroute.py`;
+//!  * N reader threads never observe a torn snapshot while the writer
+//!    replays a cascade, and never block the writer unboundedly;
+//!  * the committed `BENCH_fabric.json` seed record stays well-formed.
+
+use pgft::prelude::*;
+use pgft::routing::degraded::route_degraded;
+use pgft::routing::verify::all_pairs;
+use pgft::topology::{LinkId, Nid};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn case_study() -> (Arc<Topology>, NodeTypeMap) {
+    let topo = Arc::new(build_pgft(&PgftSpec::case_study()));
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    (topo, types)
+}
+
+/// From-scratch ground truth for one algorithm under one fault set:
+/// full all-pairs trace + freshly built tables. `None` when the fabric
+/// is partitioned (no valid routing exists).
+fn full_rebuild(
+    topo: &Arc<Topology>,
+    types: &NodeTypeMap,
+    reindex: &TypeReindex,
+    kind: AlgorithmKind,
+    seed: u64,
+    faults: &FaultSet,
+) -> Option<(FlowSet, ForwardingTables)> {
+    let router = kind.build_degraded(topo, Some(types), seed, faults).ok()?;
+    let pairs = all_pairs(topo.num_nodes() as Nid);
+    let flows = FlowSet::trace(topo, &*router, &pairs);
+    let grouped = if kind.is_grouped() { Some(reindex) } else { None };
+    let tables = if router.dest_based() {
+        ForwardingTables::build(topo, &*router).unwrap()
+    } else {
+        route_degraded(topo, faults, grouped).unwrap()
+    };
+    Some((flows, tables))
+}
+
+/// Tables equality modulo the coordinator's version stamp.
+fn same_tables(a: &ForwardingTables, b: &ForwardingTables) {
+    assert_eq!(a.switch_out, b.switch_out, "switch LFTs differ");
+    assert_eq!(a.node_out, b.node_out, "injection tables differ");
+}
+
+#[test]
+fn batched_burst_is_byte_identical_to_serial_events() {
+    let (topo, types) = case_study();
+    let scenario = FaultModel::parse("cascade:4").unwrap().generate(&topo, 2);
+    for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk, AlgorithmKind::Gsmodk] {
+        // One event at a time, barriered: four repairs, four pushes.
+        let serial = Coordinator::start(topo.clone(), types.clone(), kind, 2).unwrap();
+        for &l in &scenario.events {
+            serial.link_down(l);
+            serial.sync().unwrap();
+            assert_eq!(serial.stats().last_batch_events, 1);
+        }
+        // The same storm as ONE atomic burst: one repair, one push.
+        let burst = Coordinator::start(topo.clone(), types.clone(), kind, 2).unwrap();
+        burst.inject_burst(scenario.as_events());
+        burst.sync().unwrap();
+
+        let a = serial.snapshot();
+        let b = burst.snapshot();
+        assert_eq!(a.table_version, 1 + scenario.events.len() as u64);
+        assert_eq!(b.table_version, 2, "a burst coalesces into exactly one table push");
+        assert_eq!(b.stats.reroutes, 1);
+        assert_eq!(b.stats.last_batch_events, scenario.events.len());
+        assert_eq!(*a.flows, *b.flows, "{kind}: route stores must be byte-identical");
+        same_tables(&a.tables, &b.tables);
+        assert!(a.stats.degraded && b.stats.degraded);
+        serial.shutdown();
+        burst.shutdown();
+    }
+}
+
+#[test]
+fn incremental_repair_equals_full_rebuild_on_random_grid() {
+    let (topo, types) = case_study();
+    let reindex = TypeReindex::new(&types);
+    let mut cases = 0usize;
+    let mut partitioned_stages = 0usize;
+    'grid: for seed in 1..=9u64 {
+        let model = format!("cascade:{}", 3 + seed % 3);
+        let scenario = FaultModel::parse(&model).unwrap().generate(&topo, seed);
+        for kind in AlgorithmKind::ALL {
+            if cases == 50 {
+                break 'grid;
+            }
+            cases += 1;
+            let c = Coordinator::start(topo.clone(), types.clone(), kind, seed).unwrap();
+            let mut faults = FaultSet::none(&topo);
+            let mut version = 1u64;
+            let mut failed = 0u64;
+            for &l in &scenario.events {
+                c.link_down(l);
+                c.sync().unwrap();
+                faults.kill(l);
+                let snap = c.snapshot();
+                assert_eq!(snap.faults.num_dead(), faults.num_dead());
+                match full_rebuild(&topo, &types, &reindex, kind, seed, &faults) {
+                    Some((flows, tables)) => {
+                        version += 1;
+                        assert_eq!(snap.table_version, version, "{model}@{seed}/{kind}");
+                        assert_eq!(
+                            *snap.flows, flows,
+                            "{model}@{seed}/{kind}: incremental repair ≠ full rebuild"
+                        );
+                        same_tables(&snap.tables, &tables);
+                    }
+                    None => {
+                        // Partitioned: last good tables stay up, the
+                        // failure is counted, the version does not move.
+                        partitioned_stages += 1;
+                        failed += 1;
+                        assert_eq!(snap.table_version, version);
+                        assert_eq!(snap.stats.failed_repairs, failed);
+                        assert!(snap.stats.degraded);
+                    }
+                }
+            }
+            // Heal everything in one burst: back to the pristine build,
+            // equality resumes even after a partitioned stage.
+            c.inject_burst(scenario.events.iter().map(|&l| LinkEvent::Up(l)).collect());
+            c.sync().unwrap();
+            let snap = c.snapshot();
+            assert_eq!(snap.table_version, version + 1);
+            assert!(!snap.stats.degraded);
+            let healthy = full_rebuild(&topo, &types, &reindex, kind, seed, &FaultSet::none(&topo))
+                .expect("healthy fabric always routes");
+            assert_eq!(*snap.flows, healthy.0);
+            same_tables(&snap.tables, &healthy.1);
+            c.shutdown();
+        }
+    }
+    assert_eq!(cases, 50);
+    eprintln!("grid: 50 cases, {partitioned_stages} partitioned stages exercised");
+}
+
+#[test]
+fn link_up_restores_pristine_tables_with_monotone_versions() {
+    let (topo, types) = case_study();
+    let scenario = FaultModel::parse("cascade:4").unwrap().generate(&topo, 2);
+    let c = Coordinator::start(topo.clone(), types, AlgorithmKind::Gdmodk, 2).unwrap();
+    let pristine = c.snapshot();
+    assert!(!pristine.stats.degraded);
+
+    let mut versions = vec![pristine.table_version];
+    let mut saw_degraded = false;
+    for &e in &scenario.drill_events() {
+        match e {
+            LinkEvent::Down(l) => c.link_down(l),
+            LinkEvent::Up(l) => c.link_up(l),
+        }
+        c.sync().unwrap();
+        let s = c.stats();
+        saw_degraded |= s.degraded;
+        versions.push(s.table_version);
+    }
+    assert!(versions.windows(2).all(|w| w[0] < w[1]), "versions move strictly up: {versions:?}");
+    assert!(saw_degraded, "the drill actually degraded the fabric");
+
+    let healed = c.snapshot();
+    assert!(!healed.stats.degraded, "degraded flag round-trips to false");
+    assert_eq!(healed.faults.num_dead(), 0);
+    assert_eq!(*healed.flows, *pristine.flows, "pristine route store restored");
+    same_tables(&healed.tables, &pristine.tables);
+    assert_eq!(healed.stats.reroutes, scenario.drill_events().len() as u64);
+    c.shutdown();
+}
+
+/// The pinned scenario cross-checked (diff entries, routes moved, final
+/// C_p) by `python/tools/check_fabric_reroute.py` — any drift here must
+/// also show up in `python/tests/test_fabric_reroute.py`.
+#[test]
+fn pinned_cascade_matches_python_mirror() {
+    const EVENTS: [LinkId; 4] = [85, 64, 88, 90];
+    // (algorithm, per-event diff entries, per-event routes moved,
+    //  healthy C_p, post-cascade C_p) for Pattern::C2ioSym.
+    let pins = [
+        (AlgorithmKind::Dmodk, [16usize, 80, 14, 14], [256usize, 448, 192, 192], 4u32, 4u32),
+        (AlgorithmKind::Gdmodk, [16, 86, 13, 14], [256, 496, 168, 184], 1, 2),
+    ];
+    let (topo, types) = case_study();
+    let scenario = FaultModel::parse("cascade:4").unwrap().generate(&topo, 2);
+    assert_eq!(scenario.events, EVENTS, "pinned event schedule drifted");
+    for (kind, diffs, moved, healthy_cp, degraded_cp) in pins {
+        let c = Coordinator::start(topo.clone(), types.clone(), kind, 2).unwrap();
+        assert_eq!(c.analyze(Pattern::C2ioSym).unwrap().c_topo, healthy_cp, "{kind} healthy");
+        for (i, &l) in scenario.events.iter().enumerate() {
+            c.link_down(l);
+            c.sync().unwrap();
+            let s = c.stats();
+            assert_eq!(s.last_diff_entries, diffs[i], "{kind} event {i}: diff entries");
+            assert_eq!(s.last_routes_changed, moved[i], "{kind} event {i}: routes moved");
+        }
+        let s = c.stats();
+        assert_eq!(s.dead_links, 4);
+        assert_eq!(s.reroutes, 4);
+        assert_eq!(s.rebuilds, 1, "fault repairs are not rebuilds");
+        assert_eq!(s.failed_repairs, 0);
+        assert_eq!(c.analyze(Pattern::C2ioSym).unwrap().c_topo, degraded_cp, "{kind} degraded");
+        c.shutdown();
+    }
+}
+
+#[test]
+fn snapshot_reads_stay_consistent_under_writer_churn() {
+    let (topo, types) = case_study();
+    let scenario = FaultModel::parse("cascade:4").unwrap().generate(&topo, 2);
+    let drill = scenario.drill_events();
+    let c = Coordinator::start(topo.clone(), types, AlgorithmKind::Gdmodk, 2).unwrap();
+    let cell = c.snapshots();
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..6)
+        .map(|i| {
+            let cell = cell.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut observed = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = cell.load();
+                    // Internal consistency: every field of one snapshot
+                    // describes the same fabric state — no torn reads.
+                    assert_eq!(snap.tables.version, snap.table_version);
+                    assert_eq!(snap.stats.table_version, snap.table_version);
+                    assert_eq!(snap.stats.dead_links, snap.faults.num_dead());
+                    assert_eq!(snap.stats.degraded, snap.faults.num_dead() > 0);
+                    match i % 3 {
+                        0 => {
+                            let a = snap.analyze(Pattern::C2ioSym).unwrap();
+                            assert!(a.c_topo >= 1);
+                        }
+                        1 => {
+                            for r in snap.trace(&[(0, 63), (63, 0), (1, 62)]) {
+                                assert!(!r.ports.is_empty());
+                            }
+                        }
+                        _ => assert_eq!(snap.flows.len(), 64 * 63),
+                    }
+                    observed += 1;
+                }
+                observed
+            })
+        })
+        .collect();
+
+    // The writer replays the cascade drill under full read load; every
+    // individual repair must land within a (very generous) bound — the
+    // readers can never block the leader.
+    let mut slowest = Duration::ZERO;
+    for _ in 0..12 {
+        for &e in &drill {
+            let t0 = Instant::now();
+            c.inject_burst(vec![e]);
+            c.sync().unwrap();
+            slowest = slowest.max(t0.elapsed());
+        }
+    }
+    assert!(slowest < Duration::from_secs(5), "a repair stalled for {slowest:?} under read load");
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = readers.into_iter().map(|h| h.join().expect("reader panicked")).sum();
+    assert!(total > 0, "readers made progress");
+    let s = c.stats();
+    assert_eq!(s.reroutes, 12 * drill.len() as u64);
+    assert!(!s.degraded, "drill ends healthy");
+    c.shutdown();
+    eprintln!("stress: {total} consistent snapshot reads, slowest repair {slowest:?}");
+}
+
+#[test]
+fn bench_fabric_seed_record_is_well_formed() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_fabric.json");
+    let body = std::fs::read_to_string(path).expect("BENCH_fabric.json is committed");
+    for key in [
+        "\"schema\": \"pgft-bench-fabric/1\"",
+        "\"scenario\": \"cascade:4@seed2(4 dead)\"",
+        "\"reroute_us\"",
+        "\"queries_per_sec\"",
+        "\"table_pushes\": 1",
+        "\"events\": [85, 64, 88, 90]",
+        "\"dmodk\": [16, 80, 14, 14]",
+        "\"gdmodk\": [16, 86, 13, 14]",
+    ] {
+        assert!(body.contains(key), "BENCH_fabric.json lost {key}");
+    }
+}
