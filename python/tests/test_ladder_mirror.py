@@ -1,0 +1,144 @@
+"""The parameterized ladder mirror must agree with the golden mirror.
+
+``python/tools/pgft_ladder.py`` generalizes the hard-coded case-study
+port in ``gen_faults_golden.py`` to any ``PGFT(h; m; w; p)`` and swaps
+the dense per-destination reachability tables for lazy memoized ones.
+On the case study — where both exist — the two must agree on every
+observable: topology ids, pristine routes, fault expansion, and every
+degraded route.  The sampled-pair generator and the chunk-and-splice
+repair (the Python half of the Rust ``retrace_incremental_par``
+invariant) are pinned here too.
+"""
+
+import os
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+TOOLS = os.path.normpath(os.path.join(HERE, "..", "tools"))
+sys.path.insert(0, TOOLS)
+
+import gen_faults_golden as gold  # noqa: E402
+import pgft_ladder as lad  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def case_pair():
+    return gold.Topo(), lad.Topo(lad.named_spec("case-study"))
+
+
+def all_pairs(n):
+    return [(s, d) for s in range(n) for d in range(n) if s != d]
+
+
+def test_topology_ids_match_the_golden_mirror(case_pair):
+    g, l = case_pair
+    assert l.num_nodes == g.num_nodes == 64
+    assert l.num_switches == g.num_switches == 14
+    assert l.num_links == g.num_links == 96
+    assert l.num_ports == g.num_ports == 192
+    assert l.sw_level == g.sw_level
+    assert l.sw_up == g.sw_up
+    assert l.sw_down == g.sw_down
+    assert l.node_up == g.node_up
+    assert l.link_stage == g.link_stage
+    assert l.port_link == g.port_link
+    assert l.port_index == g.port_index
+    # Int-encoded peers carry the same graph as the golden tuples.
+    for p in range(l.num_ports):
+        kind, idx = g.port_peer[p]
+        assert l.port_peer[p] == (idx if kind == "n" else l.num_nodes + idx)
+
+
+def test_pristine_routes_match_and_are_minimal(case_pair):
+    g, l = case_pair
+    types = gold.build_types(g)
+    gnid = gold.build_gnid(types)
+    for key_gnid in (None, gnid):
+        rg = gold.XmodkRouter(g, key_gnid)
+        rl = lad.XmodkRouter(l, key_gnid)
+        for (s, d) in all_pairs(64):
+            route = lad.trace_route(l, rl, s, d)
+            assert route == gold.trace_route(g, rg, s, d), (s, d)
+            # The arena pre-sizing invariant behind FlowSet::trace:
+            # pristine Xmodk routes are exactly minimal_hops long.
+            assert len(route) == l.spec.minimal_hops(s, d), (s, d)
+
+
+def test_fault_expansion_matches_links_k(case_pair):
+    g, l = case_pair
+    for k, seed in [(2, 1), (5, 7), (0, 1)]:
+        assert lad.generate_link_faults(l, k, seed) == gold.generate_faults(
+            g, f"links:{k}", seed
+        )
+
+
+def test_lazy_degraded_router_matches_the_dense_one(case_pair):
+    g, l = case_pair
+    types = gold.build_types(g)
+    gnid = gold.build_gnid(types)
+    survivable = 0
+    for seed in range(1, 9):
+        dead = set(lad.generate_link_faults(l, 3, seed))
+        try:
+            dense = gold.DegradedRouter(g, dead, gold.XmodkRouter(g, gnid))
+        except RuntimeError:
+            continue  # partitioned: nothing to compare
+        survivable += 1
+        lazy = lad.LazyDegradedRouter(l, dead, lad.XmodkRouter(l, gnid))
+        for (s, d) in all_pairs(64):
+            assert lad.trace_route(l, lazy, s, d) == gold.trace_route(
+                g, dense, s, d
+            ), (seed, s, d)
+        if survivable >= 2:
+            break
+    assert survivable >= 2, "the seed range never produced survivable scenarios"
+
+
+def test_sample_pairs_is_deterministic_and_self_free():
+    a = lad.sample_pairs(512, 3, 42)
+    assert a == lad.sample_pairs(512, 3, 42)
+    assert a != lad.sample_pairs(512, 3, 43)
+    assert len(a) == 512 * 3
+    for i, (s, d) in enumerate(a):
+        assert s == i // 3
+        assert s != d
+        assert 0 <= d < 512
+
+
+def test_chunked_repair_splices_byte_identical_to_serial(case_pair):
+    # The Python half of the parallel-retrace invariant: partition the
+    # dirty flows into chunks, re-trace each independently, splice in
+    # flow order — identical to the serial repair for any chunking.
+    _, l = case_pair
+    base = lad.XmodkRouter(l)
+    flows = lad.sample_pairs(64, 4, 1)
+    pristine = [lad.trace_route(l, base, s, d) for (s, d) in flows]
+    dead = set(lad.generate_link_faults(l, 6, 3))
+    dirty = lad.dirty_flows(pristine, l, dead)
+    assert dirty, "premise: the scenario must dirty some flows"
+    degraded = lad.LazyDegradedRouter(l, dead, base)
+    serial = list(pristine)
+    for f in dirty:
+        serial[f] = lad.trace_route(l, degraded, *flows[f])
+    for workers in (1, 2, 4, 8):
+        chunk = max((len(dirty) + 4 * workers - 1) // (4 * workers), 1)
+        spliced = list(pristine)
+        for lo in range(0, len(dirty), chunk):
+            worker = lad.LazyDegradedRouter(l, dead, base)  # private memo
+            for f in dirty[lo : lo + chunk]:
+                spliced[f] = lad.trace_route(l, worker, *flows[f])
+        assert spliced == serial, workers
+
+
+def test_ladder_specs_have_the_advertised_scale():
+    # Mirrors families::tests::ladder_specs_have_the_advertised_scale.
+    expected = {"xl-16k": 16_384, "xl-64k": 65_536, "xl-256k": 262_144}
+    for name, nodes in expected.items():
+        assert lad.named_spec(name).num_nodes == nodes
+    for name, topology, dsts, faults in lad.LADDER:
+        assert topology in expected
+        assert dsts >= 1
+        assert faults >= 0
+    assert lad.arena_bytes(2, 6) == 8 * 2 + 4 * 2 + 4 * 3 + 4 * 6

@@ -1,0 +1,468 @@
+#!/usr/bin/env python3
+"""Parameterized PGFT mirror for the eval size ladder.
+
+``gen_faults_golden.py`` is the *golden-pinned* mirror of the paper's
+case study — its topology constants are deliberately hard-coded so the
+golden CSV can never drift.  This module is the generalization that the
+large-fabric work needs: the same id-assignment, routing, fault and
+rerouting semantics as the Rust side (``topology::build``,
+``routing::xmodk``, ``faults::scenario``, ``faults::router``,
+``eval::ladder``), parameterized over any ``PGFT(h; m; w; p)`` spec and
+engineered to stay tractable at 16k-256k endpoints in pure Python:
+
+* ports/peers are flat ``array``-friendly int lists (a peer is ``nid``
+  for a node or ``num_nodes + sid`` for a switch), not tuples;
+* the degraded router is **lazy**: per-destination reachability is
+  memoized on first use instead of materialized for every destination
+  up front (the dense per-dst tables that are fine at 64 nodes are the
+  exact thing DESIGN.md §10 rules out at scale).
+
+The RNG classes are imported from ``gen_faults_golden`` so the two
+mirrors can never disagree about the bit streams; the ladder specs and
+the sampled-pair generator mirror ``rust/src/eval/ladder.rs`` constant
+for constant.  ``python/tests/test_ladder_mirror.py`` cross-checks this
+module against the golden mirror on the case study.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from gen_faults_golden import Xoshiro256  # noqa: E402  (shared RNG mirror)
+
+# Mirrors eval::ladder::PAIR_SEED_XOR and faults::scenario's seed domain.
+PAIR_SEED_XOR = 0x5A3B_1E0D_C4F2_9786
+FAULT_SEED_XOR = 0xFA_0175_CE4A_5105
+
+# Mirrors eval::ladder::LADDER (name, topology, dsts_per_node, fault_links).
+LADDER = [
+    ("16k", "xl-16k", 4, 320),
+    ("64k", "xl-64k", 2, 1280),
+    ("256k", "xl-256k", 1, 0),
+]
+
+# Mirrors topology::families::named_spec for the specs the ladder needs.
+NAMED_SPECS = {
+    "case-study": ([8, 4, 2], [1, 2, 1], [1, 1, 4]),
+    "medium-512": ([16, 8, 4], [1, 4, 2], [1, 1, 2]),
+    "xl-16k": ([32, 32, 16], [1, 16, 8], [1, 1, 2]),
+    "xl-64k": ([32, 32, 64], [1, 16, 8], [1, 1, 2]),
+    "xl-256k": ([64, 64, 64], [1, 32, 16], [1, 1, 2]),
+}
+
+
+class Spec:
+    """``PgftSpec`` mirror: ``PGFT(h; m; w; p)``."""
+
+    def __init__(self, m: list, w: list, p: list) -> None:
+        assert len(m) == len(w) == len(p)
+        self.h = len(m)
+        self.m = list(m)
+        self.w = list(w)
+        self.p = list(p)
+
+    @property
+    def num_nodes(self) -> int:
+        out = 1
+        for x in self.m:
+            out *= x
+        return out
+
+    def w_prefix(self, l: int) -> int:
+        out = 1
+        for x in self.w[:l]:
+            out *= x
+        return out
+
+    def minimal_hops(self, src: int, dst: int) -> int:
+        """Mirror of ``PgftSpec::minimal_hops``."""
+        if src == dst:
+            return 0
+        a, b = src, dst
+        for l, m in enumerate(self.m):
+            a //= m
+            b //= m
+            if a == b:
+                return 2 * (l + 1)
+        return 2 * self.h
+
+
+def named_spec(name: str) -> Spec:
+    m, w, p = NAMED_SPECS[name]
+    return Spec(m, w, p)
+
+
+class Topo:
+    """Parameterized mirror of ``topology::build::build_pgft``.
+
+    Same switch/port/link id assignment as the golden mirror; peers are
+    encoded as ints (``peer < n`` = node id, else ``peer - n`` = switch
+    id) so tracing at 256k endpoints does not chase tuples.
+    """
+
+    def __init__(self, spec: Spec) -> None:
+        self.spec = spec
+        h, m, w, p = spec.h, spec.m, spec.w, spec.p
+        n = spec.num_nodes
+        self.num_nodes = n
+
+        self.sw_level: list = []
+        self.sw_top: list = []
+        self.sw_bottom: list = []
+        self.sw_up: list = []
+        self.sw_down: list = []
+        self.level_start = []
+        for l in range(1, h + 1):
+            self.level_start.append(len(self.sw_level))
+            above = 1
+            for x in m[l:]:
+                above *= x
+            below = spec.w_prefix(l)
+            for within in range(above * below):
+                x = within
+                bottom = []
+                for j in range(l):
+                    bottom.append(x % w[j])
+                    x //= w[j]
+                top = []
+                for j in range(h - l):
+                    top.append(x % m[l + j])
+                    x //= m[l + j]
+                assert x == 0
+                self.sw_level.append(l)
+                self.sw_top.append(top)
+                self.sw_bottom.append(bottom)
+                self.sw_up.append([None] * self.up_ports_at(l))
+                self.sw_down.append([None] * self.down_ports_at(l))
+        self.level_start.append(len(self.sw_level))
+        self.num_switches = len(self.sw_level)
+
+        self.node_up = [[None] * self.up_ports_at(0) for _ in range(n)]
+
+        # ports: peer (int-encoded), up?, link, index-on-owner
+        self.port_peer: list = []
+        self.port_up: list = []
+        self.port_link: list = []
+        self.port_index: list = []
+        self.link_up: list = []
+        self.link_stage: list = []
+
+        # stage 1: nodes to leaves
+        for nid in range(n):
+            digits = self._digits(nid)
+            child_idx = digits[0]
+            for c in range(w[0]):
+                leaf = self.switch_at(1, digits[1:], [c])
+                for j in range(p[0]):
+                    up_idx = c + w[0] * j
+                    down_idx = child_idx * p[0] + j
+                    self._add_link(nid, True, up_idx, leaf, down_idx, 1)
+
+        # stages 2..h
+        for l in range(1, h):
+            for sid in range(self.level_start[l - 1], self.level_start[l]):
+                top = self.sw_top[sid]
+                bottom = self.sw_bottom[sid]
+                child_idx = top[0]
+                for c in range(w[l]):
+                    parent = self.switch_at(l + 1, top[1:], bottom + [c])
+                    for j in range(p[l]):
+                        up_idx = c + w[l] * j
+                        down_idx = child_idx * p[l] + j
+                        self._add_link(sid, False, up_idx, parent, down_idx, l + 1)
+
+        self.num_ports = len(self.port_peer)
+        self.num_links = len(self.link_up)
+
+    def _digits(self, nid: int) -> list:
+        d = []
+        x = nid
+        for l in range(self.spec.h):
+            d.append(x % self.spec.m[l])
+            x //= self.spec.m[l]
+        return d
+
+    def up_ports_at(self, l: int) -> int:
+        s = self.spec
+        return 0 if l >= s.h else s.w[l] * s.p[l]
+
+    def down_ports_at(self, l: int) -> int:
+        s = self.spec
+        return s.m[l - 1] * s.p[l - 1]
+
+    def switch_at(self, level: int, top: list, bottom: list) -> int:
+        s = self.spec
+        bot = 0
+        for j in range(level - 1, -1, -1):
+            bot = bot * s.w[j] + bottom[j]
+        topv = 0
+        for j in range(s.h - level - 1, -1, -1):
+            topv = topv * s.m[level + j] + top[j]
+        within = topv * s.w_prefix(level) + bot
+        return self.level_start[level - 1] + within
+
+    def _add_link(self, lower, lower_is_node, up_idx, upper_sw, down_idx, stage):
+        n = self.num_nodes
+        link_id = len(self.link_up)
+        up_port = len(self.port_peer)
+        self.port_peer += [n + upper_sw, lower if lower_is_node else n + lower]
+        self.port_up += [True, False]
+        self.port_link += [link_id, link_id]
+        self.port_index += [up_idx, down_idx]
+        self.link_up.append(up_port)
+        self.link_stage.append(stage)
+        if lower_is_node:
+            self.node_up[lower][up_idx] = up_port
+        else:
+            self.sw_up[lower][up_idx] = up_port
+        self.sw_down[upper_sw][down_idx] = up_port + 1
+
+    def is_ancestor(self, sw: int, nid: int) -> bool:
+        level = self.sw_level[sw]
+        d = self._digits(nid)
+        return all(d[level + j] == t for j, t in enumerate(self.sw_top[sw]))
+
+    def child_index_toward(self, sw: int, nid: int) -> int:
+        return self._digits(nid)[self.sw_level[sw] - 1]
+
+    def down_port_toward(self, sw: int, nid: int, j: int) -> int:
+        p_l = self.spec.p[self.sw_level[sw] - 1]
+        c = self.child_index_toward(sw, nid)
+        return self.sw_down[sw][c * p_l + j]
+
+    def eligible_links(self) -> list:
+        """Fault-eligible links (stage >= 2), in id order."""
+        return [l for l in range(self.num_links) if self.link_stage[l] >= 2]
+
+
+# ---------------------------------------------------------------------------
+# routing — Xmodk closed forms + trace (parameterized golden mirror)
+# ---------------------------------------------------------------------------
+
+
+class XmodkRouter:
+    """Dmodk (``key = dst``) or Gdmodk (``key = gnid[dst]``)."""
+
+    def __init__(self, topo: Topo, gnid=None) -> None:
+        self.topo = topo
+        self.gnid = gnid
+
+    def key(self, src: int, dst: int) -> int:
+        return self.gnid[dst] if self.gnid is not None else dst
+
+    def _up_index(self, level: int, key: int) -> int:
+        s = self.topo.spec
+        k = s.w[level] * s.p[level]
+        return (key // s.w_prefix(level)) % k
+
+    def inject_port(self, src: int, dst: int) -> int:
+        return self.topo.node_up[src][self._up_index(0, self.key(src, dst))]
+
+    def up_port(self, sw: int, src: int, dst: int) -> int:
+        level = self.topo.sw_level[sw]
+        return self.topo.sw_up[sw][self._up_index(level, self.key(src, dst))]
+
+    def down_link(self, sw: int, src: int, dst: int) -> int:
+        s = self.topo.spec
+        level = self.topo.sw_level[sw]
+        return (self.key(src, dst) // s.w_prefix(level)) % s.p[level - 1]
+
+    def descend_at(self, sw: int, dst: int) -> bool:
+        return self.topo.is_ancestor(sw, dst)
+
+
+def trace_route(topo: Topo, router, src: int, dst: int) -> list:
+    """Mirror of ``routing::trace::trace_route_into``."""
+    if src == dst:
+        return []
+    n = topo.num_nodes
+    ports = [router.inject_port(src, dst)]
+    cur = topo.port_peer[ports[0]]
+    while True:
+        if cur < n:
+            assert cur == dst, f"route ended at node {cur}, wanted {dst}"
+            return ports
+        sw = cur - n
+        if router.descend_at(sw, dst):
+            j = router.down_link(sw, src, dst)
+            out = topo.down_port_toward(sw, dst, j)
+        else:
+            out = router.up_port(sw, src, dst)
+        ports.append(out)
+        cur = topo.port_peer[out]
+        assert len(ports) <= 2 * topo.spec.h + 1, "route too long: loop?"
+
+
+# ---------------------------------------------------------------------------
+# faults — links:K expansion + the lazy degraded router
+# ---------------------------------------------------------------------------
+
+
+def generate_link_faults(topo: Topo, count: int, seed: int) -> list:
+    """Mirror of ``FaultModel::generate`` for ``links:K``."""
+    rng = Xoshiro256(seed ^ FAULT_SEED_XOR)
+    eligible = topo.eligible_links()
+    k = min(count, len(eligible))
+    idx = rng.sample_indices(max(len(eligible), 1), k)
+    rng.shuffle(idx)
+    return [eligible[i] for i in idx]
+
+
+class LazyDegradedRouter:
+    """Same routing decisions as the golden mirror's ``DegradedRouter``,
+    with per-destination reachability memoized on demand.
+
+    ``descend`` is only ever true on ancestors of ``dst`` (a sparse set:
+    ``sum_l w_prefix(l)`` switches), so it is stored per destination as
+    a dict over those ancestors.  Switch goodness recurses upward
+    (``good(sw) = descend[sw] or any alive up-port with a good
+    parent``) and memoizes per (dst, switch) — only the switches a
+    trace actually inspects are ever evaluated, which is what makes
+    repair tractable at 64k endpoints where the golden mirror's dense
+    per-dst tables would be ~70 GiB.
+    """
+
+    def __init__(self, topo: Topo, dead: set, base) -> None:
+        self.topo = topo
+        self.dead = dead
+        self.base = base
+        self._descend: dict = {}  # dst -> {ancestor_sw: bool}
+        self._good: dict = {}  # dst -> {sw: bool}
+
+    def _alive(self, port: int) -> bool:
+        return self.topo.port_link[port] not in self.dead
+
+    def _descend_map(self, dst: int) -> dict:
+        d = self._descend.get(dst)
+        if d is not None:
+            return d
+        topo, spec = self.topo, self.topo.spec
+        d = {}
+        digits = topo._digits(dst)
+        # Level by level, bottom up (mirror of DegradedTopology::reach):
+        # an ancestor can descend iff one of its parallel links toward
+        # dst reaches the node (level 1) or a descending child ancestor.
+        for l in range(1, spec.h + 1):
+            top = digits[l:]
+            wl = spec.w_prefix(l)
+            bottom = [0] * l
+            for _ in range(wl):
+                sw = topo.switch_at(l, top, bottom)
+                ok = False
+                for j in range(spec.p[l - 1]):
+                    port = topo.down_port_toward(sw, dst, j)
+                    if not self._alive(port):
+                        continue
+                    peer = topo.port_peer[port]
+                    if peer < topo.num_nodes:
+                        if peer == dst:
+                            ok = True
+                            break
+                    elif d.get(peer - topo.num_nodes, False):
+                        ok = True
+                        break
+                d[sw] = ok
+                for j in range(l):
+                    bottom[j] += 1
+                    if bottom[j] < spec.w[j]:
+                        break
+                    bottom[j] = 0
+        return self._descend.setdefault(dst, d)
+
+    def _switch_good(self, sw: int, dst: int) -> bool:
+        memo = self._good.setdefault(dst, {})
+        g = memo.get(sw)
+        if g is not None:
+            return g
+        descend = self._descend_map(dst)
+        if descend.get(sw, False):
+            memo[sw] = True
+            return True
+        memo[sw] = False  # cycle guard; up-recursion is acyclic anyway
+        topo = self.topo
+        g = False
+        for p in self.topo.sw_up[sw]:
+            if self._alive(p):
+                peer = topo.port_peer[p]
+                if peer >= topo.num_nodes and self._switch_good(peer - topo.num_nodes, dst):
+                    g = True
+                    break
+        memo[sw] = g
+        return g
+
+    def _up_viable(self, port: int, dst: int) -> bool:
+        if not self._alive(port):
+            return False
+        peer = self.topo.port_peer[port]
+        return peer >= self.topo.num_nodes and self._switch_good(
+            peer - self.topo.num_nodes, dst
+        )
+
+    def _pick_up(self, ports: list, preferred: int, dst: int) -> int:
+        start = self.topo.port_index[preferred]
+        assert ports[start] == preferred
+        for i in range(len(ports)):
+            port = ports[(start + i) % len(ports)]
+            if self._up_viable(port, dst):
+                return port
+        raise RuntimeError("no viable up-port: fabric partitioned toward dst")
+
+    def inject_port(self, src: int, dst: int) -> int:
+        preferred = self.base.inject_port(src, dst)
+        return self._pick_up(self.topo.node_up[src], preferred, dst)
+
+    def up_port(self, sw: int, src: int, dst: int) -> int:
+        preferred = self.base.up_port(sw, src, dst)
+        return self._pick_up(self.topo.sw_up[sw], preferred, dst)
+
+    def down_link(self, sw: int, src: int, dst: int) -> int:
+        p_l = self.topo.spec.p[self.topo.sw_level[sw] - 1]
+        preferred = self.base.down_link(sw, src, dst) % p_l
+        for i in range(p_l):
+            j = (preferred + i) % p_l
+            if self._alive(self.topo.down_port_toward(sw, dst, j)):
+                return j
+        raise RuntimeError("descend_at guaranteed an alive parallel link")
+
+    def descend_at(self, sw: int, dst: int) -> bool:
+        return self._descend_map(dst).get(sw, False)
+
+
+# ---------------------------------------------------------------------------
+# eval — sampled pairs, dirty flows, FlowSet byte accounting
+# ---------------------------------------------------------------------------
+
+
+def sample_pairs(num_nodes: int, dsts_per_node: int, seed: int) -> list:
+    """Mirror of ``eval::ladder::sample_pairs`` (same RNG stream)."""
+    assert num_nodes >= 2
+    rng = Xoshiro256(seed ^ PAIR_SEED_XOR)
+    out = []
+    for src in range(num_nodes):
+        for _ in range(dsts_per_node):
+            dst = rng.next_below(num_nodes - 1)
+            if dst >= src:
+                dst += 1
+            out.append((src, dst))
+    return out
+
+
+def dirty_flows(routes: list, topo: Topo, dead: set) -> list:
+    """Mirror of ``FlowSet::dirty_flows``: indices of flows whose
+    pristine route crosses a dead link (empty fault set short-circuits).
+    """
+    if not dead:
+        return []
+    link = topo.port_link
+    return [
+        f for f, ports in enumerate(routes) if any(link[p] in dead for p in ports)
+    ]
+
+
+def arena_bytes(num_flows: int, total_hops: int) -> int:
+    """Mirror of ``FlowSet::arena_bytes``: pairs (2×u32) + weights (u32)
+    + CSR offsets (u32, flows+1) + port arena (u32 per hop)."""
+    return 8 * num_flows + 4 * num_flows + 4 * (num_flows + 1) + 4 * total_hops

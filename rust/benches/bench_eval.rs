@@ -1,79 +1,193 @@
-//! Eval-layer performance: arena trace throughput (traces/s),
-//! incremental-vs-full re-trace on a single-link fault cell, and the
-//! flit-level engine's events/s — emitted both as bench lines and as a
-//! machine-readable `BENCH_eval.json` (uploaded as a CI artifact, so
-//! the perf trajectory of the eval core is tracked run over run).
+//! Eval-layer performance on the size ladder: arena trace throughput
+//! (flows/s) and bytes/flow at every rung, full-vs-incremental re-trace
+//! on the rung's preset fault scenario, and the parallel incremental
+//! repair's thread-sweep speedup — emitted both as bench lines and as a
+//! machine-readable `BENCH_eval.json` (schema `pgft-bench-eval/2`,
+//! uploaded as a CI artifact, so the perf trajectory of the eval core is
+//! tracked run over run).
 //!
-//! CI smoke-runs this with `PGFT_BENCH_SMOKE=1` (1 iteration) so the
-//! bench code cannot rot; real numbers come from a plain
-//! `cargo bench --bench bench_eval`. The output path defaults to
-//! `BENCH_eval.json` in the package root and can be overridden with
-//! `PGFT_BENCH_EVAL_OUT`.
+//! Rungs, smallest first: `case-study` (64 endpoints, all-pairs),
+//! `medium-512` (all-pairs), then the sampled-pair ladder from
+//! [`pgft::eval::LADDER`] — `16k`, `64k`, `256k`. The 256k rung skips
+//! the re-trace leg (its record says why): building a fault-aware
+//! router materializes per-destination reachability bitsets that are
+//! out of memory budget at that scale (DESIGN.md §10).
+//!
+//! CI smoke-runs this with `PGFT_BENCH_SMOKE=1`: every [`Bench`] clamps
+//! to a single iteration *and* the ladder stops after the `16k` rung,
+//! so the bench code cannot rot without CI paying for the big rungs.
+//! Real numbers come from a plain `cargo bench --bench bench_eval`.
+//! The output path defaults to `BENCH_eval.json` in the package root
+//! and can be overridden with `PGFT_BENCH_EVAL_OUT`.
+//!
+//! Every leg asserts the invariant it measures: the incremental repair
+//! (serial and at every thread count) must be byte-identical to a full
+//! re-trace under the same faults.
 
+use pgft::eval::LADDER;
 use pgft::netsim::{run_netsim, NetsimConfig};
 use pgft::prelude::*;
 use pgft::routing::verify::all_pairs;
 use pgft::util::bench::Bench;
+use std::fmt::Write as _;
 use std::time::Duration;
 
-fn main() {
-    let case = build_pgft(&PgftSpec::case_study());
-    let medium = families::named("medium-512").unwrap();
+/// Matches `util::bench::smoke_mode` (private there): CI sets
+/// `PGFT_BENCH_SMOKE=1` and the ladder stops after the `16k` rung.
+fn smoke() -> bool {
+    matches!(std::env::var("PGFT_BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0")
+}
 
-    println!("== arena trace throughput (all-pairs, dmodk) ==");
-    let mut traces_per_sec = Vec::new();
-    for (label, topo) in [("case-study", &case), ("medium-512", &medium)] {
-        let types = Placement::paper_io().apply(topo).unwrap();
+/// One rung's JSON record, assembled as it is measured.
+struct RungRecord {
+    rung: &'static str,
+    endpoints: usize,
+    flows: usize,
+    trace_ms: f64,
+    flows_per_sec: f64,
+    bytes_per_flow: f64,
+    /// `Ok` = measured re-trace leg, `Err` = human-readable skip reason.
+    retrace: Result<RetraceRecord, &'static str>,
+}
+
+struct RetraceRecord {
+    dead_links: usize,
+    dirty_flows: usize,
+    full_ms: f64,
+    serial_ms: f64,
+    parallel: Vec<(usize, f64)>, // (threads, median ms)
+}
+
+const PARALLEL_THREADS: &[usize] = &[2, 4, 8];
+
+fn measure_rung(
+    rung: &'static str,
+    topo: &Topology,
+    flows: &[(u32, u32)],
+    faults: Option<&FaultSet>,
+    skip_reason: &'static str,
+) -> RungRecord {
+    let types = Placement::paper_io().apply(topo).unwrap();
+    let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
+
+    // Trace throughput + arena footprint.
+    let trace_st = Bench::new(format!("eval/flowset-trace/{rung}"))
+        .target_time(Duration::from_millis(400))
+        .samples(3, 50)
+        .throughput_elems(flows.len() as u64)
+        .run(|_| {
+            std::hint::black_box(FlowSet::trace(topo, &*router, flows));
+        });
+    let pristine = FlowSet::trace(topo, &*router, flows);
+    let bytes_per_flow = pristine.arena_bytes() as f64 / pristine.len().max(1) as f64;
+
+    let retrace = match faults {
+        None => Err(skip_reason),
+        Some(faults) => {
+            let degraded = DegradedRouter::new(
+                topo,
+                faults,
+                AlgorithmKind::Dmodk.build(topo, Some(&types), 1),
+            )
+            .unwrap();
+            let dirty = pristine.dirty_flows(topo, faults).len();
+            println!("  {rung}: {dirty} of {} flows cross a dead link", pristine.len());
+            let full_st = Bench::new(format!("eval/retrace-full/{rung}"))
+                .target_time(Duration::from_millis(400))
+                .samples(3, 30)
+                .run(|_| {
+                    std::hint::black_box(FlowSet::trace(topo, &degraded, flows));
+                });
+            let serial_st = Bench::new(format!("eval/retrace-incremental/{rung}"))
+                .target_time(Duration::from_millis(400))
+                .samples(3, 30)
+                .run(|_| {
+                    std::hint::black_box(pristine.retrace_incremental(topo, faults, &degraded));
+                });
+            // The invariant the speedups stand on: incremental ==
+            // full, at every thread count.
+            let full = FlowSet::trace(topo, &degraded, flows);
+            let (serial, changed) = pristine.retrace_incremental(topo, faults, &degraded);
+            assert_eq!(serial, full, "{rung}: incremental must equal a full re-trace");
+            assert_eq!(changed, dirty);
+            let mut parallel = Vec::new();
+            for &threads in PARALLEL_THREADS {
+                let st = Bench::new(format!("eval/retrace-par{threads}/{rung}"))
+                    .target_time(Duration::from_millis(400))
+                    .samples(3, 30)
+                    .run(|_| {
+                        std::hint::black_box(pristine.retrace_incremental_par(
+                            topo, faults, &degraded, threads,
+                        ));
+                    });
+                let (par, _) = pristine.retrace_incremental_par(topo, faults, &degraded, threads);
+                assert_eq!(par, serial, "{rung}: {threads}-thread repair must equal serial");
+                parallel.push((threads, st.median_ns / 1e6));
+            }
+            Ok(RetraceRecord {
+                dead_links: faults.num_dead(),
+                dirty_flows: dirty,
+                full_ms: full_st.median_ns / 1e6,
+                serial_ms: serial_st.median_ns / 1e6,
+                parallel,
+            })
+        }
+    };
+
+    RungRecord {
+        rung,
+        endpoints: topo.num_nodes(),
+        flows: pristine.len(),
+        trace_ms: trace_st.median_ns / 1e6,
+        flows_per_sec: pristine.len() as f64 / (trace_st.median_ns / 1e9),
+        bytes_per_flow,
+        retrace,
+    }
+}
+
+fn main() {
+    let smoke = smoke();
+    let mut ladder: Vec<RungRecord> = Vec::new();
+
+    // Small rungs: the paper fabrics, all-pairs, one dead stage-2 link.
+    println!("== size ladder: trace + incremental repair ==");
+    for (name, topo) in [
+        ("case-study", build_pgft(&PgftSpec::case_study())),
+        ("medium-512", families::named("medium-512").unwrap()),
+    ] {
         let flows = all_pairs(topo.num_nodes() as u32);
-        let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
-        let st = Bench::new(format!("eval/flowset-trace/{label}"))
-            .target_time(Duration::from_millis(400))
-            .samples(5, 100)
-            .throughput_elems(flows.len() as u64)
-            .run(|_| {
-                std::hint::black_box(FlowSet::trace(topo, &*router, &flows));
-            });
-        traces_per_sec.push((label, flows.len() as f64 / (st.median_ns / 1e9)));
+        let mut faults = FaultSet::none(&topo);
+        faults.kill(topo.links.iter().find(|l| l.stage == 2).unwrap().id);
+        ladder.push(measure_rung(name, &topo, &flows, Some(&faults), ""));
     }
 
-    println!("\n== incremental vs full re-trace (1 dead link, medium-512) ==");
-    let types = Placement::paper_io().apply(&medium).unwrap();
-    let flows = all_pairs(medium.num_nodes() as u32);
-    let mut faults = FaultSet::none(&medium);
-    faults.kill(medium.links.iter().find(|l| l.stage == 2).unwrap().id);
-    let pristine =
-        FlowSet::trace(&medium, &*AlgorithmKind::Dmodk.build(&medium, Some(&types), 1), &flows);
-    let degraded = DegradedRouter::new(
-        &medium,
-        &faults,
-        AlgorithmKind::Dmodk.build(&medium, Some(&types), 1),
-    )
-    .unwrap();
-    let dirty = pristine.dirty_flows(&medium, &faults).len();
-    println!("  {} of {} flows cross the dead link", dirty, pristine.len());
-    let full_st = Bench::new("eval/retrace/full")
-        .target_time(Duration::from_millis(400))
-        .samples(5, 60)
-        .run(|_| {
-            std::hint::black_box(FlowSet::trace(&medium, &degraded, &flows));
-        });
-    let incr_st = Bench::new("eval/retrace/incremental")
-        .target_time(Duration::from_millis(400))
-        .samples(5, 60)
-        .run(|_| {
-            std::hint::black_box(pristine.retrace_incremental(&medium, &faults, &degraded));
-        });
-    let (incremental, changed) = pristine.retrace_incremental(&medium, &faults, &degraded);
-    assert_eq!(
-        incremental,
-        FlowSet::trace(&medium, &degraded, &flows),
-        "incremental re-trace must be byte-identical to a full re-trace"
-    );
-    assert_eq!(changed, dirty);
-    let speedup = full_st.median_ns / incr_st.median_ns.max(1e-9);
-    println!("  incremental re-trace speedup on a single-link fault: {speedup:.2}x");
+    // Ladder rungs: sampled pairs, `links:K` preset scenarios.
+    for rung in &LADDER {
+        if smoke && rung.name != "16k" {
+            println!("  (smoke mode: skipping the {} rung)", rung.name);
+            continue;
+        }
+        let topo = families::named(rung.topology).unwrap();
+        let flows = pgft::eval::sample_pairs(topo.num_nodes(), rung.dsts_per_node, 1);
+        let faults = if rung.fault_links > 0 {
+            let model = FaultModel::parse(&format!("links:{}", rung.fault_links)).unwrap();
+            Some(model.generate(&topo, 1).fault_set(&topo))
+        } else {
+            None
+        };
+        ladder.push(measure_rung(
+            rung.name,
+            &topo,
+            &flows,
+            faults.as_ref(),
+            "fault-aware router reachability tables exceed the memory budget \
+             at 256k endpoints (DESIGN.md §10)",
+        ));
+    }
 
+    // Flit-level engine events/s (unchanged leg from schema v1).
     println!("\n== flit-level engine events/s (case study, C2IO, gdmodk) ==");
+    let case = build_pgft(&PgftSpec::case_study());
     let ctypes = Placement::paper_io().apply(&case).unwrap();
     let cflows = Pattern::C2ioSym.flows(&case, &ctypes).unwrap();
     let router = AlgorithmKind::Gdmodk.build(&case, Some(&ctypes), 1);
@@ -89,25 +203,65 @@ fn main() {
     let events_per_sec = events as f64 / (ns_st.median_ns / 1e9);
 
     // Machine-readable perf record (the CI artifact; the committed copy
-    // is pinned well-formed by tests/eval_agreement.rs).
-    let tps = |label: &str| {
-        traces_per_sec.iter().find(|(l, _)| *l == label).map(|(_, v)| *v).unwrap_or(0.0)
-    };
-    let json = format!(
-        "{{\n  \"schema\": \"pgft-bench-eval/1\",\n  \"source\": \"rust-bench\",\n  \
-         \"traces_per_sec\": {{\"case-study\": {:.1}, \"medium-512\": {:.1}}},\n  \
-         \"retrace\": {{\"topology\": \"medium-512\", \"dead_links\": 1, \"flows\": {}, \
-         \"dirty_flows\": {}, \"full_ms\": {:.4}, \"incremental_ms\": {:.4}, \
-         \"speedup\": {:.4}}},\n  \"netsim_events_per_sec\": {:.1}\n}}\n",
-        tps("case-study"),
-        tps("medium-512"),
-        pristine.len(),
-        dirty,
-        full_st.median_ns / 1e6,
-        incr_st.median_ns / 1e6,
-        speedup,
-        events_per_sec,
-    );
+    // is pinned well-formed — schema v2, no nulls — by
+    // tests/eval_agreement.rs).
+    let mut json = String::new();
+    let source = if smoke { "rust-bench-smoke" } else { "rust-bench" };
+    writeln!(json, "{{").unwrap();
+    writeln!(json, "  \"schema\": \"pgft-bench-eval/2\",").unwrap();
+    writeln!(json, "  \"source\": \"{source}\",").unwrap();
+    // Honest provenance for the parallel-repair figures: a thread sweep
+    // on a starved host measures scheduling, not the splice design, so
+    // consumers (tests/eval_agreement.rs) gate the speedup threshold on
+    // the parallelism that was actually available.
+    let host_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    writeln!(json, "  \"host_cpus\": {host_cpus},").unwrap();
+    writeln!(json, "  \"netsim\": {{\"events_per_sec\": {events_per_sec:.1}}},").unwrap();
+    writeln!(json, "  \"ladder\": [").unwrap();
+    for (i, r) in ladder.iter().enumerate() {
+        writeln!(json, "    {{").unwrap();
+        writeln!(json, "      \"rung\": \"{}\",", r.rung).unwrap();
+        writeln!(json, "      \"endpoints\": {},", r.endpoints).unwrap();
+        writeln!(json, "      \"flows\": {},", r.flows).unwrap();
+        writeln!(json, "      \"trace_ms\": {:.4},", r.trace_ms).unwrap();
+        writeln!(json, "      \"flows_per_sec\": {:.1},", r.flows_per_sec).unwrap();
+        writeln!(json, "      \"bytes_per_flow\": {:.2},", r.bytes_per_flow).unwrap();
+        match &r.retrace {
+            Err(reason) => {
+                writeln!(json, "      \"retrace\": {{\"skipped\": \"{reason}\"}}").unwrap();
+            }
+            Ok(rt) => {
+                writeln!(json, "      \"retrace\": {{").unwrap();
+                writeln!(json, "        \"dead_links\": {},", rt.dead_links).unwrap();
+                writeln!(json, "        \"dirty_flows\": {},", rt.dirty_flows).unwrap();
+                writeln!(json, "        \"full_ms\": {:.4},", rt.full_ms).unwrap();
+                writeln!(json, "        \"serial_ms\": {:.4},", rt.serial_ms).unwrap();
+                writeln!(
+                    json,
+                    "        \"speedup_incremental\": {:.4},",
+                    rt.full_ms / rt.serial_ms.max(1e-9)
+                )
+                .unwrap();
+                writeln!(json, "        \"parallel\": [").unwrap();
+                for (j, (threads, ms)) in rt.parallel.iter().enumerate() {
+                    writeln!(
+                        json,
+                        "          {{\"threads\": {threads}, \"ms\": {ms:.4}, \
+                         \"speedup\": {:.4}}}{}",
+                        rt.serial_ms / ms.max(1e-9),
+                        if j + 1 < rt.parallel.len() { "," } else { "" }
+                    )
+                    .unwrap();
+                }
+                writeln!(json, "        ]").unwrap();
+                writeln!(json, "      }}").unwrap();
+            }
+        }
+        writeln!(json, "    }}{}", if i + 1 < ladder.len() { "," } else { "" }).unwrap();
+    }
+    writeln!(json, "  ]").unwrap();
+    writeln!(json, "}}").unwrap();
+
     let out = std::env::var("PGFT_BENCH_EVAL_OUT").unwrap_or_else(|_| "BENCH_eval.json".into());
     std::fs::write(&out, &json).expect("write BENCH_eval.json");
     println!("\nwrote {out}:\n{json}");

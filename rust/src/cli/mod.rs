@@ -10,6 +10,7 @@
 //!             [--seeds 1,2] [--simulate] [--format csv] [--out FILE]
 //! pgft eval [--topo ..] [--algo ..] [--pattern ..] [--seed N]
 //!           [--evaluators congestion,fairrate,netsim:0.3] [--faults SPEC]
+//!           [--size 16k|64k|256k]      # large-fabric ladder presets
 //! pgft workload [--workload mix,single:c2io-sym:1024|FILE.toml] [--topo ..]
 //!               [--placement io:last:1,gpgpu:first:2] [--algo ..] [--seeds 1,2]
 //!               [--faults SPEC] [--netsim RATE] [--no-phase-detail]
@@ -230,7 +231,10 @@ commands:
   eval         the unified evaluator surface: one shared FlowSet trace per
                (algorithm, pattern) cell, scored by any evaluator stack
                (--evaluators congestion,fairrate,netsim:0.3; --faults SPEC
-                repairs the store via incremental re-trace first)
+                repairs the store via incremental re-trace first;
+                --size 16k|64k|256k walks a large-fabric ladder rung with
+                sampled pairs, reporting trace/repair rates instead of
+                pattern rows)
   workload     application workloads: concurrent multi-phase job mixes over
                typed node groups (--workload mix|allreduce|checkpoint|
                single:<pattern>:BYTES|FILE.toml; collectives: ring/rd
@@ -420,6 +424,9 @@ fn cmd_faults(args: &Args) -> Result<()> {
 /// [`FlowSet::retrace_incremental`] against the scenario expanded from
 /// `--seed`, and the `changed` column reports how many routes moved.
 fn cmd_eval(args: &Args) -> Result<()> {
+    if let Some(size) = args.get("size") {
+        return cmd_eval_size(args, size);
+    }
     let (topo, types) = load_topo(args)?;
     let seed = args.u64_or("seed", 1)?;
     let evaluators = parse_evaluators(&args.get_or("evaluators", "congestion,fairrate"))?;
@@ -478,6 +485,92 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 ns_sat,
             ]);
         }
+    }
+    emit(&t, args)
+}
+
+/// `pgft eval --size` — one rung of the large-fabric size ladder
+/// ([`crate::eval::LADDER`]): build the rung's 3-level PGFT, generate
+/// its sampled flow pairs, trace the arena-backed store, repair it
+/// against the rung's preset fault scenario (overridable with
+/// `--faults`) through the parallel incremental re-trace, and report
+/// rates (flows/s, bytes/flow, repair ms) instead of pattern rows.
+/// Defaults to `--algo dmodk` and `--evaluators congestion` — the
+/// fair-rate and flit-level engines do not scale to these stores.
+fn cmd_eval_size(args: &Args, size: &str) -> Result<()> {
+    let rung = crate::eval::ladder::rung(size).with_context(|| {
+        let names: Vec<&str> =
+            crate::eval::LADDER.iter().map(|r| r.name).collect();
+        format!("--size {size:?} is not a ladder rung (try one of {names:?})")
+    })?;
+    let topo = families::named(rung.topology)?;
+    crate::topology::validate::validate(&topo)?;
+    let types = Placement::parse(&args.get_or("placement", "io:last:1"))?.apply(&topo)?;
+    let seed = args.u64_or("seed", 1)?;
+    let evaluators = parse_evaluators(&args.get_or("evaluators", "congestion"))?;
+    let flows = crate::eval::sample_pairs(topo.num_nodes(), rung.dsts_per_node, seed);
+    // The rung's preset fault scenario, unless the user asked for one.
+    let fault_spec = match args.get("faults") {
+        Some(s) => s.to_string(),
+        None if rung.fault_links > 0 => format!("links:{}", rung.fault_links),
+        None => "none".to_string(),
+    };
+    let faults = if fault_spec == "none" {
+        None
+    } else {
+        let model = FaultModel::parse(&fault_spec)?;
+        model.validate_for(&topo.spec)?;
+        Some(model.generate(&topo, seed).fault_set(&topo))
+    };
+    let algos = match args.get_or("algo", "dmodk").as_str() {
+        "all" => AlgorithmKind::ALL.to_vec(),
+        spec => spec.split(',').map(AlgorithmKind::parse).collect::<Result<Vec<_>>>()?,
+    };
+    let threads = parse_threads(args)?;
+    let mut t = Table::new(
+        "large-fabric ladder rung: sampled pairs, parallel incremental repair",
+        &[
+            "size", "algo", "flows", "hops", "bytes_per_flow", "trace_ms", "flows_per_sec",
+            "dead_links", "changed", "retrace_ms", "threads", "C_topo", "hot_ports",
+        ],
+    );
+    for kind in algos {
+        let router = kind.build(&topo, Some(&types), seed);
+        let t0 = Instant::now();
+        let pristine = FlowSet::trace(&topo, &*router, &flows);
+        let trace_s = t0.elapsed().as_secs_f64();
+        let bytes_per_flow = pristine.arena_bytes() as f64 / pristine.len().max(1) as f64;
+        let (set, changed, retrace_ms, used_threads) = match &faults {
+            Some(f) => {
+                let degraded = kind.build_degraded(&topo, Some(&types), seed, f)?;
+                let used = threads.min(crate::eval::repair_threads(pristine.len()));
+                let t1 = Instant::now();
+                let (set, changed) =
+                    pristine.retrace_incremental_par(&topo, f, &*degraded, used);
+                (set, changed, t1.elapsed().as_secs_f64() * 1e3, used)
+            }
+            None => (pristine, 0, 0.0, 1),
+        };
+        let cells = evaluate_all(&evaluators, &topo, &set, seed);
+        let (c_topo, hot) = match &cells.congestion {
+            Some(rep) => (rep.c_topo().to_string(), rep.hot_ports().len().to_string()),
+            None => Default::default(),
+        };
+        t.row(&[
+            rung.name.to_string(),
+            kind.as_str().to_string(),
+            set.len().to_string(),
+            set.total_hops().to_string(),
+            format!("{bytes_per_flow:.1}"),
+            format!("{:.1}", trace_s * 1e3),
+            format!("{:.0}", set.len() as f64 / trace_s.max(1e-9)),
+            faults.as_ref().map_or(0, |f| f.num_dead()).to_string(),
+            changed.to_string(),
+            format!("{retrace_ms:.1}"),
+            used_threads.to_string(),
+            c_topo,
+            hot,
+        ]);
     }
     emit(&t, args)
 }
@@ -1211,6 +1304,16 @@ mod tests {
         assert!(run(&argv(&["eval", "--evaluators", "bogus"])).is_err());
         assert!(run(&argv(&["eval", "--evaluators", "netsim:7"])).is_err());
         assert!(run(&argv(&["eval", "--faults", "meteor:3"])).is_err());
+    }
+
+    #[test]
+    fn eval_size_walks_a_ladder_rung_and_rejects_unknown_ones() {
+        // The smallest rung, fault leg off: builds the 16k-endpoint
+        // fabric, samples its pairs and scores the store. (The preset
+        // links:320 repair leg is exercised by the bench and the
+        // retrace property tests — too slow for a debug unit test.)
+        run(&argv(&["eval", "--size", "16k", "--faults", "none", "--serial"])).unwrap();
+        assert!(run(&argv(&["eval", "--size", "1m"])).is_err());
     }
 
     #[test]

@@ -166,7 +166,10 @@ impl Leader {
             let router =
                 self.kind.build_degraded(&self.topo, Some(&self.types), self.seed, &faults)?;
             let base = if any_revive { &self.pristine_flows } else { &self.flows };
-            let (flows, _) = base.retrace_incremental(&self.topo, &faults, &*router);
+            // Large fabrics repair in parallel; the ordered splice keeps
+            // the published store byte-identical to a serial repair.
+            let threads = crate::eval::repair_threads(base.len());
+            let (flows, _) = base.retrace_incremental_par(&self.topo, &faults, &*router, threads);
             let tables = if router.dest_based() {
                 ForwardingTables::build(&self.topo, &*router)?
             } else {
@@ -296,7 +299,9 @@ fn compute_full(
         (pristine_flows.clone(), (*pristine_tables).clone())
     } else {
         let degraded = kind.build_degraded(topo, Some(types), seed, faults)?;
-        let (flows, _) = pristine_flows.retrace_incremental(topo, faults, &*degraded);
+        let threads = crate::eval::repair_threads(pristine_flows.len());
+        let (flows, _) =
+            pristine_flows.retrace_incremental_par(topo, faults, &*degraded, threads);
         let tables = if degraded.dest_based() {
             ForwardingTables::build(topo, &*degraded)?
         } else {

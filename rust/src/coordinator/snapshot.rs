@@ -104,7 +104,8 @@ impl FabricSnapshot {
                 }
                 let f = flow_index(n, src, dst);
                 debug_assert_eq!(self.flows.pair(f), (src, dst));
-                RoutePorts { src, dst, ports: self.flows.route(f).to_vec() }
+                let ports = self.flows.route(f).iter().map(|&p| p as usize).collect();
+                RoutePorts { src, dst, ports }
             })
             .collect()
     }

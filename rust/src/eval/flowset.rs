@@ -8,6 +8,22 @@
 //! sweep cell traces each flow exactly once into one contiguous arena
 //! and every evaluator reads the same bytes.
 //!
+//! # Large-fabric layout
+//!
+//! The store is sized for the eval ladder's 256k-endpoint rung
+//! (`pgft eval --size`, DESIGN.md §10): port ids live in the arena as
+//! `u32` (not `usize` — halves the dominant allocation), the arena is
+//! pre-sized *exactly* from [`crate::topology::PgftSpec::minimal_hops`]
+//! (pristine routes are minimal, so no doubling overshoot), and the
+//! rare growth past the pre-size (fault-aware routers can route longer
+//! than minimal) reserves in bounded [`ARENA_CHUNK`]-entry steps
+//! instead of doubling a GiB-scale buffer. CSR offsets are `u32`, which
+//! caps the arena at [`FlowSet::MAX_ARENA_LEN`] total hops; every
+//! append path goes through a checked conversion that panics with a
+//! capacity error instead of silently wrapping offsets.
+//!
+//! # Incremental repair
+//!
 //! The store also knows how to *repair itself* under faults:
 //! [`FlowSet::retrace_incremental`] re-traces only the flows whose
 //! stored path crosses a dead link (flows routed entirely over healthy
@@ -19,7 +35,17 @@
 //! base algorithm's decisions wherever their links survive, so a flow
 //! that touches no dead link re-traces to exactly its pristine ports.
 //!
-//! The same argument *composes across growing fault sets*: up\*/down\*
+//! [`FlowSet::retrace_incremental_par`] fans the dirty flows out over
+//! [`crate::util::par::par_map`]: the dirty list is split into
+//! consecutive chunks, each worker traces its chunk into a private
+//! sub-arena, and the caller splices sub-arenas back in ascending flow
+//! order. Because routers are stateless and the splice preserves flow
+//! order, the output is **byte-identical to the serial path for every
+//! thread count** — also property-pinned in `tests/eval_agreement.rs`.
+//!
+//! # Composition across growing fault sets
+//!
+//! The repair argument *composes across growing fault sets*: up\*/down\*
 //! reachability under `DegradedRouter` only shrinks as faults
 //! accumulate, so for `F_new ⊇ F_old` a store that is correct for
 //! `F_old`, repaired incrementally against `F_new`, equals a full trace
@@ -35,6 +61,80 @@ use crate::faults::FaultSet;
 use crate::routing::trace::{trace_route_into, RoutePorts};
 use crate::routing::Router;
 use crate::topology::{Nid, PortId, Topology};
+use crate::util::par::par_map;
+
+/// Growth quantum for the port arena once a store outgrows its exact
+/// pre-size (only fault-aware routers can — they may route longer than
+/// minimal). A bounded step instead of `Vec`'s doubling: at the
+/// 256k-endpoint rung a doubling step would transiently hold two
+/// GiB-scale buffers for a few extra hops.
+const ARENA_CHUNK: usize = 1 << 20;
+
+/// Checked CSR offset conversion: every arena append goes through this
+/// so an oversized pattern fails with a capacity error instead of
+/// wrapping offsets at `u32::MAX` and corrupting every later route
+/// slice.
+#[inline]
+fn arena_offset(len: usize) -> u32 {
+    match u32::try_from(len) {
+        Ok(o) => o,
+        Err(_) => panic!(
+            "FlowSet port arena overflow: {len} hop entries exceed the u32 CSR offset \
+             limit of {}; split the pattern or use sampled pairs (see DESIGN.md §10)",
+            u32::MAX
+        ),
+    }
+}
+
+/// Port ids are stored 32-bit; no buildable topology comes near the
+/// limit (the 256k-endpoint rung has <1M ports), so this is a
+/// debug-only tripwire rather than a hot-path branch.
+#[inline]
+fn port_u32(p: PortId) -> u32 {
+    debug_assert!(p <= u32::MAX as usize, "port id {p} exceeds the u32 arena element width");
+    p as u32
+}
+
+/// Reserve room for `extra` more arena entries in bounded chunks (see
+/// [`ARENA_CHUNK`]); no-op while the existing capacity suffices.
+#[inline]
+fn reserve_chunked(ports: &mut Vec<u32>, extra: usize) {
+    if ports.capacity() - ports.len() < extra {
+        ports.reserve_exact(ARENA_CHUNK.max(extra));
+    }
+}
+
+/// Append a `PortId`-typed route (legacy tracing surface) to an arena.
+#[inline]
+fn push_route(ports: &mut Vec<u32>, route: &[PortId]) {
+    reserve_chunked(ports, route.len());
+    ports.extend(route.iter().map(|&p| port_u32(p)));
+}
+
+/// Append an already-32-bit route (arena-to-arena copy).
+#[inline]
+fn push_route_u32(ports: &mut Vec<u32>, route: &[u32]) {
+    reserve_chunked(ports, route.len());
+    ports.extend_from_slice(route);
+}
+
+/// Worker-thread count policy for store repairs. Parallel retrace pays
+/// a scoped-thread spawn per call, which swamps the win on small
+/// fabrics (a whole case-study repair is tens of microseconds), so
+/// repair sites only go wide when the store is large enough to
+/// amortize the spawns; below the threshold the serial path is both
+/// simpler and faster.
+pub fn repair_threads(flows: usize) -> usize {
+    /// Smallest store for which the fan-out pays for itself; the 16k
+    /// ladder rung (65k flows) is comfortably above, every case-study /
+    /// medium-512 sweep cell is below.
+    const PAR_REPAIR_MIN_FLOWS: usize = 32_768;
+    if flows >= PAR_REPAIR_MIN_FLOWS {
+        crate::util::par::max_threads()
+    } else {
+        1
+    }
+}
 
 /// A compact, contiguous store of traced routes: CSR layout with a
 /// flow → (src, dst, weight) table.
@@ -46,11 +146,17 @@ pub struct FlowSet {
     weights: Vec<u32>,
     /// CSR offsets into `ports`; `offsets.len() == pairs.len() + 1`.
     offsets: Vec<u32>,
-    /// Flat arena of every route's output ports, concatenated.
-    ports: Vec<PortId>,
+    /// Flat arena of every route's output ports, concatenated (32-bit
+    /// ids — see the module docs on the large-fabric layout).
+    ports: Vec<u32>,
 }
 
 impl FlowSet {
+    /// Largest port arena a store can address: CSR offsets are `u32`.
+    /// At ~6 hops per flow this is room for ~700M flows — appends past
+    /// it fail with a capacity error (see [`FlowSet::trace`]).
+    pub const MAX_ARENA_LEN: usize = u32::MAX as usize;
+
     /// An empty store (useful as a fold seed).
     pub fn empty() -> FlowSet {
         FlowSet { pairs: Vec::new(), weights: Vec::new(), offsets: vec![0], ports: Vec::new() }
@@ -59,18 +165,32 @@ impl FlowSet {
     /// Trace every `(src, dst)` flow with `router` into one contiguous
     /// arena (unit weights). This is the single trace a sweep cell
     /// performs; every evaluator then shares the result.
+    ///
+    /// # Panics
+    ///
+    /// If the total hop count exceeds [`FlowSet::MAX_ARENA_LEN`] (the
+    /// u32 CSR offset limit), with a capacity error naming the limit.
     pub fn trace(topo: &Topology, router: &dyn Router, flows: &[(Nid, Nid)]) -> FlowSet {
+        // Exact pre-size: pristine routers produce minimal routes, so
+        // the arena holds exactly the sum of minimal hop counts. A
+        // fault-aware router can exceed a flow's minimal length; the
+        // append path then grows in bounded chunks.
+        let cap: usize =
+            flows.iter().map(|&(s, d)| topo.spec.minimal_hops(s as u64, d as u64)).sum();
         let mut set = FlowSet {
             pairs: Vec::with_capacity(flows.len()),
             weights: vec![1; flows.len()],
             offsets: Vec::with_capacity(flows.len() + 1),
-            ports: Vec::with_capacity(flows.len() * 2 * topo.spec.h),
+            ports: Vec::with_capacity(cap),
         };
         set.offsets.push(0);
+        let mut scratch: Vec<PortId> = Vec::with_capacity(2 * topo.spec.h + 1);
         for &(src, dst) in flows {
             set.pairs.push((src, dst));
-            trace_route_into(topo, router, src, dst, &mut set.ports);
-            set.offsets.push(set.ports.len() as u32);
+            scratch.clear();
+            trace_route_into(topo, router, src, dst, &mut scratch);
+            push_route(&mut set.ports, &scratch);
+            set.offsets.push(arena_offset(set.ports.len()));
         }
         set
     }
@@ -98,8 +218,8 @@ impl FlowSet {
         set.ports.reserve(routes.iter().map(|r| r.ports.len()).sum());
         for r in routes {
             set.pairs.push((r.src, r.dst));
-            set.ports.extend_from_slice(&r.ports);
-            set.offsets.push(set.ports.len() as u32);
+            push_route(&mut set.ports, &r.ports);
+            set.offsets.push(arena_offset(set.ports.len()));
         }
         set
     }
@@ -117,8 +237,8 @@ impl FlowSet {
             out.pairs.extend_from_slice(&set.pairs);
             out.weights.extend_from_slice(&set.weights);
             for f in 0..set.len() {
-                out.ports.extend_from_slice(set.route(f));
-                out.offsets.push(out.ports.len() as u32);
+                push_route_u32(&mut out.ports, set.route(f));
+                out.offsets.push(arena_offset(out.ports.len()));
             }
         }
         out
@@ -130,7 +250,8 @@ impl FlowSet {
         (0..self.len())
             .map(|f| {
                 let (src, dst) = self.pairs[f];
-                RoutePorts { src, dst, ports: self.route(f).to_vec() }
+                let ports = self.route(f).iter().map(|&p| p as PortId).collect();
+                RoutePorts { src, dst, ports }
             })
             .collect()
     }
@@ -155,6 +276,16 @@ impl FlowSet {
         self.ports.len()
     }
 
+    /// Resident bytes of the store (flow table + weights + CSR offsets +
+    /// port arena) — the `bytes_per_flow` figure `BENCH_eval.json`
+    /// tracks per ladder rung.
+    pub fn arena_bytes(&self) -> usize {
+        self.pairs.len() * std::mem::size_of::<(Nid, Nid)>()
+            + self.weights.len() * std::mem::size_of::<u32>()
+            + self.offsets.len() * std::mem::size_of::<u32>()
+            + self.ports.len() * std::mem::size_of::<u32>()
+    }
+
     /// `(src, dst)` of one flow.
     #[inline]
     pub fn pair(&self, flow: usize) -> (Nid, Nid) {
@@ -169,26 +300,33 @@ impl FlowSet {
 
     /// The traced route of one flow: every output port in traversal
     /// order (empty for self-flows). Borrowed straight from the arena —
-    /// no per-route allocation anywhere.
+    /// no per-route allocation anywhere. Elements are 32-bit port ids;
+    /// cast to `usize` to index topology tables.
     #[inline]
-    pub fn route(&self, flow: usize) -> &[PortId] {
+    pub fn route(&self, flow: usize) -> &[u32] {
         &self.ports[self.offsets[flow] as usize..self.offsets[flow + 1] as usize]
     }
 
     /// Iterate `((src, dst), route)` in flow order.
-    pub fn iter(&self) -> impl Iterator<Item = ((Nid, Nid), &[PortId])> + '_ {
+    pub fn iter(&self) -> impl Iterator<Item = ((Nid, Nid), &[u32])> + '_ {
         (0..self.len()).map(|f| (self.pairs[f], self.route(f)))
     }
 
     /// Whether a flow's stored route crosses a link the fault set killed.
     #[inline]
     pub fn crosses_fault(&self, topo: &Topology, faults: &FaultSet, flow: usize) -> bool {
-        self.route(flow).iter().any(|&p| faults.is_dead(topo.ports[p].link))
+        self.route(flow).iter().any(|&p| faults.is_dead(topo.ports[p as usize].link))
     }
 
     /// Flows whose stored route crosses a dead link — exactly the set a
-    /// fault event forces to move.
+    /// fault event forces to move. An empty fault set short-circuits
+    /// without touching the arena: a zero-fault sweep cell at the
+    /// 256k-endpoint rung must not pay a full-arena scan to learn that
+    /// nothing is dirty.
     pub fn dirty_flows(&self, topo: &Topology, faults: &FaultSet) -> Vec<usize> {
+        if faults.num_dead() == 0 {
+            return Vec::new();
+        }
         (0..self.len()).filter(|&f| self.crosses_fault(topo, faults, f)).collect()
     }
 
@@ -212,6 +350,68 @@ impl FlowSet {
         faults: &FaultSet,
         router: &dyn Router,
     ) -> (FlowSet, usize) {
+        self.retrace_incremental_par(topo, faults, router, 1)
+    }
+
+    /// [`FlowSet::retrace_incremental`] with the dirty flows fanned out
+    /// over up to `threads` workers ([`crate::util::par::par_map`]).
+    ///
+    /// The dirty list is split into consecutive chunks; each worker
+    /// traces its chunk into a private sub-arena, and the sub-arenas
+    /// are spliced back in ascending flow order. Routers are stateless
+    /// per (src, dst) query, so the traced bytes do not depend on which
+    /// worker produced them, and the order-preserving splice makes the
+    /// result **byte-identical to the serial path for every thread
+    /// count** (property-pinned in `tests/eval_agreement.rs`).
+    ///
+    /// Thread-count policy lives with the callers ([`repair_threads`]):
+    /// below ~32k flows the scoped-thread spawns cost more than the
+    /// retrace itself.
+    pub fn retrace_incremental_par(
+        &self,
+        topo: &Topology,
+        faults: &FaultSet,
+        router: &dyn Router,
+        threads: usize,
+    ) -> (FlowSet, usize) {
+        let dirty = self.dirty_flows(topo, faults);
+        if dirty.is_empty() {
+            return (self.clone(), 0);
+        }
+        // 4 chunks per worker keeps the atomic-cursor work stealing
+        // meaningful (dirty flows cluster around the dead links, so
+        // chunk costs vary) without shredding the sub-arenas.
+        let threads = threads.max(1);
+        let chunk = dirty.len().div_ceil(threads * 4).max(1);
+        let groups: Vec<&[usize]> = dirty.chunks(chunk).collect();
+        // Each worker returns (sub-arena, per-flow hop counts) for its
+        // chunk; lens delimit the sub-arena the same way CSR offsets do.
+        let traced: Vec<(Vec<u32>, Vec<u32>)> = par_map(threads, &groups, |_, group| {
+            let mut arena: Vec<u32> = Vec::with_capacity(group.len() * 2 * topo.spec.h);
+            let mut lens: Vec<u32> = Vec::with_capacity(group.len());
+            let mut scratch: Vec<PortId> = Vec::with_capacity(2 * topo.spec.h + 1);
+            for &f in *group {
+                let (src, dst) = self.pairs[f];
+                scratch.clear();
+                trace_route_into(topo, router, src, dst, &mut scratch);
+                let start = arena.len();
+                push_route(&mut arena, &scratch);
+                lens.push(arena_offset(arena.len() - start));
+                // A dirty flow always moves: its old route used a dead
+                // link the fault-aware router can no longer take.
+                debug_assert_ne!(
+                    &arena[start..],
+                    self.route(f),
+                    "retrace of a dirty flow {src}->{dst} reproduced a dead-link route"
+                );
+            }
+            (arena, lens)
+        });
+        // Splice: one ordered walk over all flows, copying clean routes
+        // from the old arena and dirty routes from the sub-arenas. The
+        // chunks partition the ascending dirty list consecutively, so
+        // three cursors (group, len index, sub-arena position) advance
+        // monotonically and the output bytes equal the serial path's.
         let mut out = FlowSet {
             pairs: self.pairs.clone(),
             weights: self.weights.clone(),
@@ -219,26 +419,27 @@ impl FlowSet {
             ports: Vec::with_capacity(self.ports.len()),
         };
         out.offsets.push(0);
-        let mut changed = 0usize;
+        let mut di = 0usize;
+        let (mut gi, mut li, mut ai) = (0usize, 0usize, 0usize);
         for f in 0..self.len() {
-            let (src, dst) = self.pairs[f];
-            if self.crosses_fault(topo, faults, f) {
-                let start = out.ports.len();
-                trace_route_into(topo, router, src, dst, &mut out.ports);
-                // A dirty flow always moves: its old route used a dead
-                // link the fault-aware router can no longer take.
-                debug_assert_ne!(
-                    &out.ports[start..],
-                    self.route(f),
-                    "retrace of a dirty flow {src}->{dst} reproduced a dead-link route"
-                );
-                changed += 1;
+            if di < dirty.len() && dirty[di] == f {
+                let (arena, lens) = &traced[gi];
+                let len = lens[li] as usize;
+                push_route_u32(&mut out.ports, &arena[ai..ai + len]);
+                di += 1;
+                li += 1;
+                ai += len;
+                if li == lens.len() && gi + 1 < traced.len() {
+                    gi += 1;
+                    li = 0;
+                    ai = 0;
+                }
             } else {
-                out.ports.extend_from_slice(self.route(f));
+                push_route_u32(&mut out.ports, self.route(f));
             }
-            out.offsets.push(out.ports.len() as u32);
+            out.offsets.push(arena_offset(out.ports.len()));
         }
-        (out, changed)
+        (out, dirty.len())
     }
 
     /// Number of flows whose route differs between two stores over the
@@ -265,6 +466,10 @@ mod tests {
         (topo, flows)
     }
 
+    fn as_u32(ports: &[PortId]) -> Vec<u32> {
+        ports.iter().map(|&p| p as u32).collect()
+    }
+
     #[test]
     fn trace_matches_route_ports_surface() {
         let (topo, flows) = setup();
@@ -276,11 +481,29 @@ mod tests {
             assert_eq!(set.total_hops(), routes.iter().map(|r| r.ports.len()).sum::<usize>());
             for (f, r) in routes.iter().enumerate() {
                 assert_eq!(set.pair(f), (r.src, r.dst), "{kind}");
-                assert_eq!(set.route(f), r.ports.as_slice(), "{kind}");
+                assert_eq!(set.route(f), as_u32(&r.ports).as_slice(), "{kind}");
                 assert_eq!(set.weight(f), 1);
             }
             assert_eq!(set.to_routes(), routes, "{kind}");
             assert_eq!(FlowSet::from_routes(&routes), set, "{kind}");
+        }
+    }
+
+    #[test]
+    fn trace_presizes_the_arena_exactly() {
+        let (topo, flows) = setup();
+        for kind in AlgorithmKind::ALL {
+            let router = kind.build(&topo, None, 3);
+            let set = FlowSet::trace(&topo, &*router, &flows);
+            let minimal: usize = flows
+                .iter()
+                .map(|&(s, d)| topo.spec.minimal_hops(s as u64, d as u64))
+                .sum();
+            assert_eq!(
+                set.total_hops(),
+                minimal,
+                "{kind}: pristine routes must be minimal (the pre-size contract)"
+            );
         }
     }
 
@@ -322,14 +545,41 @@ mod tests {
     }
 
     #[test]
-    fn incremental_retrace_equals_full_retrace() {
+    fn arena_offset_accepts_the_boundary() {
+        assert_eq!(arena_offset(0), 0);
+        assert_eq!(arena_offset(FlowSet::MAX_ARENA_LEN), u32::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "port arena overflow")]
+    fn arena_offset_rejects_past_the_boundary() {
+        // One entry past the u32 CSR limit: the exact wrap point the
+        // pre-guard `as u32` casts silently corrupted.
+        arena_offset(FlowSet::MAX_ARENA_LEN + 1);
+    }
+
+    #[test]
+    fn dirty_flows_short_circuits_empty_fault_sets() {
         let (topo, flows) = setup();
+        let router = AlgorithmKind::Dmodk.build(&topo, None, 0);
+        let set = FlowSet::trace(&topo, &*router, &flows);
+        assert!(set.dirty_flows(&topo, &FaultSet::none(&topo)).is_empty());
+    }
+
+    fn bundle_faults(topo: &Topology) -> FaultSet {
         // Kill 2 of the 4 parallel links of the first L2→top bundle.
         let l2 = topo.level_switches(2).next().unwrap();
-        let mut faults = FaultSet::none(&topo);
+        let mut faults = FaultSet::none(topo);
         for &p in topo.switches[l2].up_ports.iter().take(2) {
             faults.kill(topo.ports[p].link);
         }
+        faults
+    }
+
+    #[test]
+    fn incremental_retrace_equals_full_retrace() {
+        let (topo, flows) = setup();
+        let faults = bundle_faults(&topo);
         for kind in AlgorithmKind::ALL {
             let base = kind.build(&topo, None, 7);
             let pristine = FlowSet::trace(&topo, &*base, &flows);
@@ -344,6 +594,29 @@ mod tests {
             assert_eq!(incremental, full, "{kind}: incremental must be byte-identical to full");
             assert_eq!(changed, pristine.diff_count(&full), "{kind}");
             assert_eq!(changed, pristine.dirty_flows(&topo, &faults).len(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn parallel_retrace_equals_serial_for_every_thread_count() {
+        let (topo, flows) = setup();
+        let faults = bundle_faults(&topo);
+        for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gsmodk] {
+            let pristine = FlowSet::trace(&topo, &*kind.build(&topo, None, 7), &flows);
+            let degraded = crate::faults::DegradedRouter::new(
+                &topo,
+                &faults,
+                kind.build(&topo, None, 7),
+            )
+            .unwrap();
+            let (serial, serial_changed) =
+                pristine.retrace_incremental(&topo, &faults, &degraded);
+            for threads in [1usize, 2, 4, 8] {
+                let (par, changed) =
+                    pristine.retrace_incremental_par(&topo, &faults, &degraded, threads);
+                assert_eq!(par, serial, "{kind}, {threads} threads: splice must be byte-stable");
+                assert_eq!(changed, serial_changed, "{kind}, {threads} threads");
+            }
         }
     }
 
@@ -386,5 +659,13 @@ mod tests {
         let (repaired, changed) = pristine.retrace_incremental(&topo, &faults, &degraded);
         assert_eq!(changed, 0);
         assert_eq!(repaired, pristine);
+    }
+
+    #[test]
+    fn repair_threads_policy_gates_on_store_size() {
+        assert_eq!(repair_threads(0), 1);
+        assert_eq!(repair_threads(4096), 1, "case-study cells stay serial");
+        assert!(repair_threads(65_536) >= 1);
+        assert_eq!(repair_threads(65_536), crate::util::par::max_threads());
     }
 }

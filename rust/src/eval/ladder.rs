@@ -1,0 +1,135 @@
+//! The eval size ladder: named large-fabric rungs and sampled-pair
+//! flow generation.
+//!
+//! The paper's evaluation lives on a 64-node case study; the pipeline
+//! itself is built to score production-shaped fabrics. This module
+//! names the rungs the scaling story is measured on — 3-level PGFTs at
+//! 16k / 64k / 256k endpoints (see `xl-*` in
+//! [`crate::topology::families`]) — and generates the deterministic
+//! *sampled-pair* patterns that make them tractable: all-pairs at 256k
+//! endpoints is ~69 G flows (petabytes of arena), while `dsts_per_node`
+//! sampled destinations per source keep the flow count linear in the
+//! node count and still exercise every source and (with overwhelming
+//! probability) every inter-switch link.
+//!
+//! The generator is mirrored byte-for-byte in
+//! `python/tools/pgft_ladder.py`; `python/tests/test_ladder_mirror.py`
+//! cross-checks the two. `pgft eval --size` and `benches/bench_eval.rs`
+//! both select rungs from [`LADDER`].
+
+use crate::topology::Nid;
+use crate::util::rng::Xoshiro256;
+
+/// Seed-domain separator for sampled-pair generation, so a rung's pair
+/// sample never reuses the RNG stream of its fault scenario at the same
+/// user seed. Mirrored in `python/tools/pgft_ladder.py`.
+const PAIR_SEED_XOR: u64 = 0x5A3B_1E0D_C4F2_9786;
+
+/// One rung of the size ladder.
+#[derive(Clone, Copy, Debug)]
+pub struct LadderRung {
+    /// Short CLI name (`pgft eval --size 16k`).
+    pub name: &'static str,
+    /// Named topology in [`crate::topology::families`].
+    pub topology: &'static str,
+    /// Sampled destinations per source node.
+    pub dsts_per_node: usize,
+    /// Dead links for the rung's retrace measurement (a `links:K` fault
+    /// scenario; ~10% of flows dirty at 4 eligible hops per route).
+    /// `0` means the retrace leg is skipped on this rung — building a
+    /// fault-aware router materializes per-destination reachability
+    /// tables that are out of memory budget at 256k endpoints (see
+    /// DESIGN.md §10).
+    pub fault_links: usize,
+}
+
+impl LadderRung {
+    /// Total sampled flows on this rung's topology (`nodes ×
+    /// dsts_per_node`).
+    pub fn num_flows(&self, num_nodes: usize) -> usize {
+        num_nodes * self.dsts_per_node
+    }
+}
+
+/// The ladder, smallest rung first.
+pub const LADDER: [LadderRung; 3] = [
+    LadderRung { name: "16k", topology: "xl-16k", dsts_per_node: 4, fault_links: 320 },
+    LadderRung { name: "64k", topology: "xl-64k", dsts_per_node: 2, fault_links: 1280 },
+    LadderRung { name: "256k", topology: "xl-256k", dsts_per_node: 1, fault_links: 0 },
+];
+
+/// Look a rung up by its CLI name (`"16k"`) or topology name
+/// (`"xl-16k"`), case-insensitively.
+pub fn rung(size: &str) -> Option<&'static LadderRung> {
+    let key = size.trim().to_ascii_lowercase();
+    LADDER.iter().find(|r| r.name == key || r.topology == key)
+}
+
+/// Deterministic sampled pairs: for each source in id order,
+/// `dsts_per_node` destinations drawn uniformly from the *other* nodes
+/// (no self-flows; repeats across draws are allowed — they model
+/// multi-flow endpoints and keep the generator one-pass). The `dst >=
+/// src` shift makes the draw uniform over `n - 1` candidates without
+/// rejection, so the stream is exactly reproducible by the Python
+/// mirror.
+pub fn sample_pairs(num_nodes: usize, dsts_per_node: usize, seed: u64) -> Vec<(Nid, Nid)> {
+    assert!(num_nodes >= 2, "sampled pairs need at least two nodes");
+    let mut rng = Xoshiro256::new(seed ^ PAIR_SEED_XOR);
+    let n = num_nodes as u64;
+    let mut out = Vec::with_capacity(num_nodes * dsts_per_node);
+    for src in 0..num_nodes as Nid {
+        for _ in 0..dsts_per_node {
+            let mut dst = rng.next_below(n - 1) as Nid;
+            if dst >= src {
+                dst += 1;
+            }
+            out.push((src, dst));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::families::named_spec;
+
+    #[test]
+    fn ladder_rungs_resolve_to_named_topologies() {
+        for r in &LADDER {
+            let spec = named_spec(r.topology).unwrap_or_else(|e| panic!("{}: {e}", r.topology));
+            assert!(spec.num_nodes() >= 16_384, "{}", r.name);
+            assert_eq!(rung(r.name).unwrap().topology, r.topology);
+            assert_eq!(rung(&r.topology.to_uppercase()).unwrap().name, r.name);
+        }
+        assert!(rung("1k").is_none());
+    }
+
+    #[test]
+    fn sample_pairs_is_deterministic_and_self_free() {
+        let a = sample_pairs(512, 3, 42);
+        let b = sample_pairs(512, 3, 42);
+        assert_eq!(a, b, "same seed, same pairs");
+        assert_ne!(a, sample_pairs(512, 3, 43), "seed drives the sample");
+        assert_eq!(a.len(), 512 * 3);
+        for (i, &(src, dst)) in a.iter().enumerate() {
+            assert_eq!(src, (i / 3) as Nid, "sources run in id order");
+            assert_ne!(src, dst, "no self-flows");
+            assert!((dst as usize) < 512);
+        }
+    }
+
+    #[test]
+    fn sample_pairs_covers_the_destination_space() {
+        // With 8 draws per source over 64 nodes, every node should be
+        // hit as a destination (P(miss) ≈ 64·(1-1/63)^512 ≈ 2e-2... use
+        // a fixed seed so the test is not flaky but meaningful).
+        let pairs = sample_pairs(64, 8, 1);
+        let mut seen = [false; 64];
+        for &(_, dst) in &pairs {
+            seen[dst as usize] = true;
+        }
+        let hit = seen.iter().filter(|&&s| s).count();
+        assert!(hit >= 60, "destination coverage too thin: {hit}/64");
+    }
+}

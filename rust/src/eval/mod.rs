@@ -40,8 +40,10 @@
 //! ```
 
 pub mod flowset;
+pub mod ladder;
 
-pub use flowset::FlowSet;
+pub use flowset::{repair_threads, FlowSet};
+pub use ladder::{sample_pairs, LadderRung, LADDER};
 
 use crate::metrics::CongestionReport;
 use crate::netsim::{run_netsim, NetsimConfig, NetsimReport};

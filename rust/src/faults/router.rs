@@ -31,7 +31,26 @@ use crate::routing::Router;
 use crate::topology::{Endpoint, Nid, PortId, SwitchId, Topology};
 use anyhow::{ensure, Result};
 
+/// Bit test in a packed `Vec<u64>` bitset.
+#[inline]
+fn get_bit(bits: &[u64], i: usize) -> bool {
+    bits[i >> 6] & (1u64 << (i & 63)) != 0
+}
+
+/// Bit set in a packed `Vec<u64>` bitset.
+#[inline]
+fn set_bit(bits: &mut [u64], i: usize) {
+    bits[i >> 6] |= 1u64 << (i & 63);
+}
+
 /// A fault-aware wrapper around any [`Router`] (see module docs).
+///
+/// The per-destination reachability tables are bit-packed: the dense
+/// `Vec<bool>` layout cost `n·(n + ns)` bytes — ~4.5 GiB at the 64k
+/// rung of the eval ladder — while the packed form is 8× leaner and
+/// indexes identically. (At 256k endpoints even the packed tables are
+/// ~8.6 GiB, which is why the ladder's top rung skips the retrace leg;
+/// see DESIGN.md §10.)
 pub struct DegradedRouter {
     base: Box<dyn Router>,
     faults: FaultSet,
@@ -39,11 +58,11 @@ pub struct DegradedRouter {
     n: usize,
     /// Switch count of the topology this was built for.
     ns: usize,
-    /// `descend[dst · ns + sw]` — can `sw` pure-descend to `dst`?
-    descend: Vec<bool>,
-    /// `good[dst · (n + ns) + elem]` — does an up\*/down\* path survive?
+    /// Bit `dst · ns + sw` — can `sw` pure-descend to `dst`?
+    descend: Vec<u64>,
+    /// Bit `dst · (n + ns) + elem` — does an up\*/down\* path survive?
     /// (elements nodes-first, as in [`super::view::ReachField`]).
-    good: Vec<bool>,
+    good: Vec<u64>,
 }
 
 impl DegradedRouter {
@@ -58,8 +77,8 @@ impl DegradedRouter {
         let n = topo.num_nodes();
         let ns = topo.num_switches();
         let view = DegradedTopology::new(topo, faults);
-        let mut descend = vec![false; n * ns];
-        let mut good = vec![false; n * (n + ns)];
+        let mut descend = vec![0u64; (n * ns).div_ceil(64)];
+        let mut good = vec![0u64; (n * (n + ns)).div_ceil(64)];
         for dst in 0..n as Nid {
             let field = view.reach(dst);
             for src in 0..n {
@@ -71,8 +90,16 @@ impl DegradedRouter {
                 );
             }
             let d = dst as usize;
-            descend[d * ns..(d + 1) * ns].copy_from_slice(&field.descend);
-            good[d * (n + ns)..(d + 1) * (n + ns)].copy_from_slice(&field.good);
+            for (sw, &v) in field.descend.iter().enumerate() {
+                if v {
+                    set_bit(&mut descend, d * ns + sw);
+                }
+            }
+            for (e, &v) in field.good.iter().enumerate() {
+                if v {
+                    set_bit(&mut good, d * (n + ns) + e);
+                }
+            }
         }
         Ok(DegradedRouter { base, faults: faults.clone(), n, ns, descend, good })
     }
@@ -85,7 +112,7 @@ impl DegradedRouter {
     /// Whether element `sw` still reaches `dst` (up\*/down\*).
     #[inline]
     fn switch_good(&self, sw: SwitchId, dst: Nid) -> bool {
-        self.good[dst as usize * (self.n + self.ns) + self.n + sw]
+        get_bit(&self.good, dst as usize * (self.n + self.ns) + self.n + sw)
     }
 
     /// An up-port is viable if its cable is alive and its parent still
@@ -146,7 +173,7 @@ impl Router for DegradedRouter {
     }
 
     fn descend_at(&self, _topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
-        self.descend[dst as usize * self.ns + sw]
+        get_bit(&self.descend, dst as usize * self.ns + sw)
     }
 
     fn reaches(&self, _topo: &Topology, sw: SwitchId, dst: Nid) -> bool {

@@ -45,58 +45,120 @@ pub struct CongestionReport {
     pub per_port: Vec<PortStats>,
 }
 
-/// The one congestion kernel: per-port NID *bitmaps* — O(hops) bit-sets
-/// plus an O(ports · N/64) popcount sweep, with two flat `u64` arenas
-/// (`ports × ⌈N/64⌉` words each; 180 KiB for a 512-node all-pairs run).
-/// Chosen over per-port `HashSet`s and over scatter+sort+dedup after
-/// measuring all three in `bench_perf` (see EXPERIMENTS.md §Perf); the
-/// losing variants survive only as `#[cfg(test)]` cross-checks below.
-/// Every public entry point (`compute`, `compute_flows`,
-/// `compute_flowset`) accumulates through this accumulator, so there is
-/// exactly one shipped implementation of the metric.
+/// The one congestion kernel, in *blocked/word-parallel* form. The
+/// previous shape kept two dense `ports × ⌈N/64⌉` bitset arenas — fine
+/// at 512 nodes (180 KiB) but ~60 GiB at the 256k-endpoint rung of the
+/// eval ladder. This form buffers the flow incidences once (`O(hops)`,
+/// the same order as the route arena it summarizes) and then sweeps the
+/// node-id space in 64-node *blocks*: within one block every port needs
+/// only a single `u64` word, so the whole per-port state is three flat
+/// `O(ports)` arrays, the distinct-count merge is one
+/// `u64::count_ones` per *touched* port per block, and epoch stamps
+/// make the per-block reset `O(touched ports)` instead of `O(ports)`.
+/// Total: `O(hops)` work and `O(hops + ports)` memory, independent of
+/// the node count. Chosen over per-port `HashSet`s and over
+/// scatter+sort+dedup after measuring all three in `bench_perf` (see
+/// EXPERIMENTS.md §Perf); the losing variants survive only as
+/// `#[cfg(test)]` cross-checks below, which also pin the blocked form
+/// on randomized large-degree topologies. Every public entry point
+/// (`compute`, `compute_flows`, `compute_flowset`) accumulates through
+/// this accumulator, so there is exactly one shipped implementation of
+/// the metric.
 struct BitmapAccum {
-    words: usize,
+    num_nodes: usize,
     per_port: Vec<PortStats>,
-    src_bits: Vec<u64>,
-    dst_bits: Vec<u64>,
+    /// Buffered incidences: `(src, dst)` per flow plus a CSR hop arena
+    /// (`routes` is counted eagerly in [`BitmapAccum::add`]; the
+    /// distinct counts need the full flow list, so they wait for
+    /// [`BitmapAccum::finish`]).
+    flows: Vec<(u32, u32)>,
+    offsets: Vec<usize>,
+    hops: Vec<u32>,
 }
 
 impl BitmapAccum {
     fn new(num_ports: usize, num_nodes: usize) -> BitmapAccum {
-        let words = (num_nodes + 63) / 64;
         BitmapAccum {
-            words,
+            num_nodes,
             per_port: vec![PortStats::default(); num_ports],
-            src_bits: vec![0u64; num_ports * words],
-            dst_bits: vec![0u64; num_ports * words],
+            flows: Vec::new(),
+            offsets: vec![0],
+            hops: Vec::new(),
         }
     }
 
     #[inline]
-    fn add(&mut self, src: u32, dst: u32, ports: &[PortId]) {
-        let (sw, sb) = ((src / 64) as usize, src % 64);
-        let (dw, db) = ((dst / 64) as usize, dst % 64);
-        for &p in ports {
-            self.per_port[p].routes += 1;
-            self.src_bits[p * self.words + sw] |= 1u64 << sb;
-            self.dst_bits[p * self.words + dw] |= 1u64 << db;
+    fn add(&mut self, src: u32, dst: u32, ports: impl IntoIterator<Item = u32>) {
+        for p in ports {
+            self.per_port[p as usize].routes += 1;
+            self.hops.push(p);
         }
+        self.flows.push((src, dst));
+        self.offsets.push(self.hops.len());
     }
 
     fn finish(self) -> CongestionReport {
-        let BitmapAccum { words, mut per_port, src_bits, dst_bits } = self;
-        for (p, st) in per_port.iter_mut().enumerate() {
-            if st.routes == 0 {
-                continue;
+        let BitmapAccum { num_nodes, mut per_port, flows, offsets, hops } = self;
+        let blocks = num_nodes.div_ceil(64).max(1);
+        let num_ports = per_port.len();
+        // Per-port single-word state for the current 64-node block, with
+        // epoch stamps (a stale stamp means "word not yet touched this
+        // block") and the touched-port list driving the merge + reset.
+        let mut word = vec![0u64; num_ports];
+        let mut stamp = vec![0u32; num_ports];
+        let mut touched: Vec<u32> = Vec::new();
+        // Counting-sort scratch: flow indices bucketed by key block.
+        let mut order = vec![0u32; flows.len()];
+        let mut starts = vec![0usize; blocks + 1];
+        let mut epoch = 0u32;
+        // Two passes over the same buffered incidences: distinct
+        // *sources* per port, then distinct *destinations*.
+        for pick_src in [true, false] {
+            let key = |f: usize| if pick_src { flows[f].0 } else { flows[f].1 };
+            // Stable counting sort of flows by the 64-node block their
+            // key falls in, so each block's flows are visited together.
+            starts.iter_mut().for_each(|s| *s = 0);
+            for f in 0..flows.len() {
+                starts[(key(f) / 64) as usize + 1] += 1;
             }
-            st.srcs = src_bits[p * words..(p + 1) * words]
-                .iter()
-                .map(|w| w.count_ones())
-                .sum();
-            st.dsts = dst_bits[p * words..(p + 1) * words]
-                .iter()
-                .map(|w| w.count_ones())
-                .sum();
+            for b in 0..blocks {
+                starts[b + 1] += starts[b];
+            }
+            let mut cursor = starts.clone();
+            for f in 0..flows.len() {
+                let b = (key(f) / 64) as usize;
+                order[cursor[b]] = f as u32;
+                cursor[b] += 1;
+            }
+            for b in 0..blocks {
+                if starts[b] == starts[b + 1] {
+                    continue;
+                }
+                epoch += 1;
+                for &fi in &order[starts[b]..starts[b + 1]] {
+                    let f = fi as usize;
+                    let bit = 1u64 << (key(f) % 64);
+                    for &p in &hops[offsets[f]..offsets[f + 1]] {
+                        let p = p as usize;
+                        if stamp[p] != epoch {
+                            stamp[p] = epoch;
+                            word[p] = 0;
+                            touched.push(p as u32);
+                        }
+                        word[p] |= bit;
+                    }
+                }
+                for &p in &touched {
+                    let p = p as usize;
+                    let st = &mut per_port[p];
+                    if pick_src {
+                        st.srcs += word[p].count_ones();
+                    } else {
+                        st.dsts += word[p].count_ones();
+                    }
+                }
+                touched.clear();
+            }
         }
         CongestionReport { per_port }
     }
@@ -109,7 +171,7 @@ impl CongestionReport {
     pub fn compute(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
         let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
         for r in routes {
-            acc.add(r.src, r.dst, &r.ports);
+            acc.add(r.src, r.dst, r.ports.iter().map(|&p| p as u32));
         }
         acc.finish()
     }
@@ -123,7 +185,7 @@ impl CongestionReport {
     ) -> CongestionReport {
         let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
         for ((src, dst), ports) in flows.iter() {
-            acc.add(src, dst, ports);
+            acc.add(src, dst, ports.iter().copied());
         }
         acc.finish()
     }
@@ -203,7 +265,7 @@ impl CongestionReport {
         for &(src, dst) in flows {
             ports.clear();
             crate::routing::trace::trace_route_into(topo, router, src, dst, &mut ports);
-            acc.add(src, dst, &ports);
+            acc.add(src, dst, ports.iter().map(|&p| p as u32));
         }
         acc.finish()
     }
@@ -393,6 +455,39 @@ mod tests {
                 assert_eq!(a.per_port[p], s.per_port[p], "{kind} port {p} (sort-dedup)");
                 assert_eq!(a.per_port[p], c.per_port[p], "{kind} port {p} (fused)");
                 assert_eq!(a.per_port[p], d.per_port[p], "{kind} port {p} (flowset)");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_blocked_kernel_matches_hashset_on_large_degree_topologies() {
+        use crate::util::rng::Xoshiro256;
+        // High-arity shapes whose node counts straddle several 64-node
+        // blocks — the blocked sweep's tile boundary — with random
+        // (non-all-pairs) flows so block occupancy is ragged.
+        let specs = [
+            PgftSpec::new(vec![16, 8], vec![1, 8], vec![1, 2]).unwrap(),
+            PgftSpec::new(vec![24, 6], vec![1, 5], vec![1, 3]).unwrap(),
+            PgftSpec::new(vec![8, 4, 4], vec![1, 4, 2], vec![1, 2, 2]).unwrap(),
+        ];
+        for (si, spec) in specs.iter().enumerate() {
+            let topo = build_pgft(spec);
+            let n = topo.num_nodes() as u64;
+            let mut rng = Xoshiro256::new(0xB10C ^ si as u64);
+            let flows: Vec<(u32, u32)> = (0..4 * n)
+                .map(|_| (rng.next_below(n) as u32, rng.next_below(n) as u32))
+                .collect();
+            for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Random] {
+                let r = kind.build(&topo, None, si as u64 + 1);
+                let routes = trace_flows(&topo, &*r, &flows);
+                let blocked = CongestionReport::compute(&topo, &routes);
+                let oracle = CongestionReport::compute_hashset(&topo, &routes);
+                for p in 0..topo.num_ports() {
+                    assert_eq!(
+                        blocked.per_port[p], oracle.per_port[p],
+                        "spec {si} {kind} port {p}"
+                    );
+                }
             }
         }
     }

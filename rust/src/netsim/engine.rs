@@ -244,7 +244,7 @@ impl<'a> Engine<'a> {
             None => return,
         };
         let vc = self.packets[pid as usize].vc as usize;
-        let p0 = self.flows.route(flow)[0];
+        let p0 = self.flows.route(flow)[0] as usize;
         let qi = p0 * self.vcs + vc;
         if self.credits[qi] > 0 {
             self.credits[qi] -= 1;
@@ -285,7 +285,7 @@ impl<'a> Engine<'a> {
             let route = self.flows.route(flow);
             let nh = head.hop as usize + 1;
             if nh < route.len() {
-                let q = route[nh];
+                let q = route[nh] as usize;
                 if self.credits[q * vcs + vc] == 0 {
                     continue; // blocked on downstream credit
                 }
@@ -301,7 +301,7 @@ impl<'a> Engine<'a> {
             let route = self.flows.route(flow);
             let nh = flit.hop as usize + 1;
             if nh < route.len() {
-                let q = route[nh];
+                let q = route[nh] as usize;
                 self.credits[q * vcs + vc] -= 1; // reserve downstream slot
                 self.cal.schedule(
                     t + self.link_latency,

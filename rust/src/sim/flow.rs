@@ -8,6 +8,27 @@
 use crate::routing::trace::RoutePorts;
 use crate::topology::{PortId, Topology};
 
+/// Row element of a route: a port id in either of the repo's two
+/// widths (`usize` on the legacy surface, `u32` in the route arena).
+trait PortElem: Copy {
+    /// The id as a table index.
+    fn port(self) -> PortId;
+}
+
+impl PortElem for PortId {
+    #[inline]
+    fn port(self) -> PortId {
+        self
+    }
+}
+
+impl PortElem for u32 {
+    #[inline]
+    fn port(self) -> PortId {
+        self as PortId
+    }
+}
+
 /// Dense row-major (flows × used-ports) 0/1 matrix with the port-id
 /// compression maps.
 #[derive(Clone, Debug)]
@@ -35,16 +56,20 @@ impl IncidenceMatrix {
     }
 
     /// Shared two-pass builder over any row accessor: map used ports to
-    /// columns, then fill the dense 0/1 matrix.
-    fn from_port_rows<'a>(
+    /// columns, then fill the dense 0/1 matrix. Generic over the row
+    /// element ([`PortElem`]) because the legacy [`RoutePorts`] surface
+    /// stores `usize` port ids while the arena-backed `FlowSet` stores
+    /// `u32`.
+    fn from_port_rows<'a, P: PortElem + 'a>(
         topo: &Topology,
         flows: usize,
-        row: impl Fn(usize) -> &'a [PortId],
+        row: impl Fn(usize) -> &'a [P],
     ) -> IncidenceMatrix {
         let mut col_of = vec![usize::MAX; topo.num_ports()];
         let mut used_ports = Vec::new();
         for f in 0..flows {
             for &p in row(f) {
+                let p = p.port();
                 if col_of[p] == usize::MAX {
                     col_of[p] = used_ports.len();
                     used_ports.push(p);
@@ -55,7 +80,7 @@ impl IncidenceMatrix {
         let mut dense = vec![0f32; flows * ports];
         for f in 0..flows {
             for &p in row(f) {
-                dense[f * ports + col_of[p]] = 1.0;
+                dense[f * ports + col_of[p.port()]] = 1.0;
             }
         }
         IncidenceMatrix { dense, flows, used_ports, col_of }

@@ -206,6 +206,12 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
 
     // Phase 3: one grid-wide parallel fan-out. Results land in job
     // order regardless of scheduling, so the output is deterministic.
+    // When the grid has fewer unique jobs than workers (a single huge
+    // fault cell is the common case), the spare threads go *inside* the
+    // cell: the incremental repair itself fans out with
+    // [`FlowSet::retrace_incremental_par`], whose ordered splice keeps
+    // the output byte-identical to serial.
+    let inner_threads = (opts.threads / jobs.len().max(1)).max(1);
     let cells = par::par_map(opts.threads, &jobs, |_, &(gi, algo, pi, fi, ni, seed)| {
         let group = &groups[gi];
         compute_cell(
@@ -218,6 +224,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
             &fault_models[fi],
             netsim_axis[ni],
             seed,
+            inner_threads,
         )
     });
     // Phase 3b: the deduplicated workload evaluations (empty unless the
@@ -358,6 +365,7 @@ fn compute_cell(
     fault_model: &FaultModel,
     netsim_rate: Option<f64>,
     seed: u64,
+    inner_threads: usize,
 ) -> Cell {
     let router = algo.build(topo, Some(types), seed);
     let evaluators = cell_evaluators(spec, netsim_rate);
@@ -426,8 +434,12 @@ fn compute_cell(
         let pristine = FlowSet::trace(topo, &*router, flows);
         // Incremental repair: only flows whose pristine route crosses a
         // dead link are re-traced (byte-identical to a full re-trace —
-        // the FlowSet invariant pinned by tests/eval_agreement.rs).
-        let (rerouted, routes_changed) = pristine.retrace_incremental(topo, &faults, &degraded);
+        // the FlowSet invariant pinned by tests/eval_agreement.rs). The
+        // repair fans out over the cell's share of spare threads, but
+        // only when the store is big enough to amortize the spawn cost.
+        let threads = inner_threads.min(crate::eval::repair_threads(pristine.len()));
+        let (rerouted, routes_changed) =
+            pristine.retrace_incremental_par(topo, &faults, &degraded, threads);
         debug_assert_eq!(
             routes_changed,
             pristine.diff_count(&rerouted),

@@ -75,6 +75,15 @@ pub fn named_spec(name: &str) -> Result<PgftSpec> {
         // Large cluster: 4096 nodes, BXI-like 48-port switch shapes
         // (24 down / 24 up at the leaf level, slimmed above).
         "large-4096" => PgftSpec::new(vec![16, 16, 16], vec![1, 8, 4], vec![1, 2, 2]),
+        // The eval size ladder (`pgft eval --size`, benches/bench_eval.rs):
+        // 3-level production-shaped fabrics at 16k/64k/256k endpoints,
+        // 48-port leaf/spine shapes with 2:1 taper toward the top.
+        // 16384 nodes: 512 × 48-port leaves (32 down / 16 up), 256 L2, 128 tops.
+        "xl-16k" => PgftSpec::new(vec![32, 32, 16], vec![1, 16, 8], vec![1, 1, 2]),
+        // 65536 nodes: 2048 leaves, 1024 L2, 128 × 128-port director tops.
+        "xl-64k" => PgftSpec::new(vec![32, 32, 64], vec![1, 16, 8], vec![1, 1, 2]),
+        // 262144 nodes: 4096 × 96-port leaves, 2048 L2, 512 tops.
+        "xl-256k" => PgftSpec::new(vec![64, 64, 64], vec![1, 32, 16], vec![1, 1, 2]),
         _ => PgftSpec::parse(name),
     }
 }
@@ -121,6 +130,23 @@ mod tests {
         // Fallback to spec parsing.
         assert_eq!(named("PGFT(2; 4,4; 1,4; 1,1)").unwrap().num_nodes(), 16);
         assert!(named("no-such-topology").is_err());
+    }
+
+    #[test]
+    fn ladder_specs_have_the_advertised_scale() {
+        for (name, nodes, switches) in [
+            ("xl-16k", 16_384, 896),
+            ("xl-64k", 65_536, 3_200),
+            ("xl-256k", 262_144, 6_656),
+        ] {
+            let s = named_spec(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(s.num_nodes(), nodes, "{name}");
+            assert_eq!(s.total_switches(), switches, "{name}");
+        }
+        // The 16k rung builds quickly enough to pin the graph itself.
+        let t = named("xl-16k").unwrap();
+        assert_eq!(t.num_nodes(), 16_384);
+        assert_eq!(t.num_switches(), 896);
     }
 
     #[test]

@@ -155,6 +155,31 @@ impl PgftSpec {
         total
     }
 
+    /// Hop count of a *minimal* route `src → dst`: `0` for self-flows,
+    /// else `2·L` where `L` is the lowest level at which the two nodes
+    /// share an ancestor subtree (a level-`L` subtree spans
+    /// `Π_{i<=L} m_i` consecutive node ids). Every pristine router in
+    /// this crate produces exactly minimal routes — the up-phase stops
+    /// at the first common ancestor — which is what lets
+    /// [`crate::eval::FlowSet::trace`] pre-size its port arena exactly.
+    /// Fault-aware routers may exceed this (climbing past broken
+    /// descent paths).
+    pub fn minimal_hops(&self, src: u64, dst: u64) -> usize {
+        if src == dst {
+            return 0;
+        }
+        let (mut a, mut b) = (src, dst);
+        for (l, &m) in self.m.iter().enumerate() {
+            a /= m as u64;
+            b /= m as u64;
+            if a == b {
+                return 2 * (l + 1);
+            }
+        }
+        // Ids out of range never share an ancestor; cap at the full climb.
+        2 * self.h
+    }
+
     /// Canonical display form.
     pub fn display(&self) -> String {
         let join = |v: &[u32]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
@@ -230,6 +255,17 @@ mod tests {
         let s = PgftSpec::case_study();
         // node-leaf: 64·1·1 = 64; leaf-L2: 8·2·1 = 16; L2-top: 4·1·4 = 16.
         assert_eq!(s.total_links(), 96);
+    }
+
+    #[test]
+    fn minimal_hops_matches_ancestor_levels() {
+        let s = PgftSpec::case_study();
+        assert_eq!(s.minimal_hops(0, 0), 0);
+        assert_eq!(s.minimal_hops(0, 1), 2); // same leaf (ids 0..8)
+        assert_eq!(s.minimal_hops(0, 9), 4); // same group (ids 0..32)
+        assert_eq!(s.minimal_hops(0, 63), 6); // across the top
+        assert_eq!(s.minimal_hops(63, 0), 6); // symmetric
+        assert_eq!(s.minimal_hops(31, 32), 6);
     }
 
     #[test]

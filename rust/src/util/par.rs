@@ -6,17 +6,24 @@
 //!
 //!  * **work stealing** via a shared atomic cursor (cells vary wildly in
 //!    cost: an all-to-all trace on `medium-512` is ~1000× a case-study
-//!    cell, so static chunking would idle most workers), and
+//!    cell, so static chunking would idle most workers),
 //!  * **deterministic, input-ordered results**: every item writes to its
 //!    own slot, so the output is independent of scheduling. This is what
 //!    lets `pgft sweep` guarantee byte-identical output with and without
-//!    `--serial`.
+//!    `--serial`, and
+//!  * **fail-fast panic propagation**: a panicking closure is caught on
+//!    the worker, every other worker stops claiming new items, and the
+//!    original payload is resumed on the *caller* thread once the scope
+//!    joins — instead of the remaining workers draining the whole queue
+//!    (minutes of doomed cells on a large sweep) before the panic
+//!    surfaces.
 //!
 //! Workers are scoped threads ([`std::thread::scope`]) — no pool object
-//! to manage, no `'static` bounds, and a panicking cell propagates to the
-//! caller exactly as it would serially.
+//! to manage and no `'static` bounds.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Number of worker threads to use by default: the hardware parallelism
@@ -31,6 +38,11 @@ pub fn max_threads() -> usize {
 /// `f` receives `(index, &item)`. With `threads <= 1` (or one item) the
 /// map degenerates to a plain serial loop on the calling thread — the
 /// `--serial` reference path. Results are identical either way.
+///
+/// If `f` panics on any item, the first panic payload is re-raised on
+/// the calling thread (like the serial loop would) and the remaining
+/// workers abandon the queue as soon as they observe the abort flag —
+/// they never hang parked on unclaimed items.
 pub fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -42,23 +54,42 @@ where
         return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
     }
     let next = AtomicUsize::new(0);
+    let aborted = AtomicBool::new(false);
+    // First panic payload wins; later ones (already-running items) are
+    // dropped, matching what a serial loop would have surfaced.
+    let panic_payload: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
     let slots: Mutex<Vec<Option<R>>> =
         Mutex::new(std::iter::repeat_with(|| None).take(items.len()).collect());
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
+                if aborted.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;
                 }
-                // Compute outside the lock; the lock only guards the
-                // O(1) slot store, so contention is negligible for the
+                // Compute outside the locks; they only guard O(1)
+                // stores, so contention is negligible for the
                 // coarse-grained cells the sweep engine schedules.
-                let r = f(i, &items[i]);
-                slots.lock().unwrap()[i] = Some(r);
+                // `AssertUnwindSafe` is sound here: on panic the whole
+                // map is abandoned and only the payload escapes, so no
+                // closure state is observed in a broken state.
+                match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                    Ok(r) => slots.lock().unwrap()[i] = Some(r),
+                    Err(payload) => {
+                        aborted.store(true, Ordering::Relaxed);
+                        panic_payload.lock().unwrap().get_or_insert(payload);
+                        break;
+                    }
+                }
             });
         }
     });
+    if let Some(payload) = panic_payload.into_inner().unwrap() {
+        resume_unwind(payload);
+    }
     slots
         .into_inner()
         .unwrap()
@@ -96,6 +127,44 @@ mod tests {
         let none: Vec<i32> = Vec::new();
         assert!(par_map(8, &none, |_, &x| x).is_empty());
         assert_eq!(par_map(8, &[41], |_, &x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn worker_panic_fails_fast_and_propagates() {
+        let items: Vec<usize> = (0..2000).collect();
+        let completed = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            par_map(8, &items, |i, _| {
+                if i == 0 {
+                    panic!("boom at {i}");
+                }
+                // Each surviving item sleeps ~1 ms, so draining the full
+                // queue would take ~250 ms across 7 workers: if the
+                // abort flag did not stop them, `completed` would reach
+                // the item count and the assertion below would fail.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                completed.fetch_add(1, Ordering::Relaxed);
+            })
+        }));
+        let payload = result.expect_err("worker panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string payload>".to_string());
+        assert!(msg.contains("boom"), "original payload must survive: {msg:?}");
+        assert!(
+            completed.load(Ordering::Relaxed) < items.len() - 1,
+            "workers kept draining the queue after the panic"
+        );
+    }
+
+    #[test]
+    fn serial_path_panic_still_propagates() {
+        let items = vec![1u32];
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            par_map(1, &items, |_, _| -> u32 { panic!("serial boom") })
+        }));
+        assert!(result.is_err());
     }
 
     #[test]
