@@ -1,0 +1,154 @@
+"""The telemetry cross-checker must accept self-consistent documents
+and reject corrupted ones.
+
+``python/tools/check_telemetry.py`` validates ``pgft netsim
+--telemetry`` output against the Python pipeline (injection replay,
+flit conservation, per-port route bounds).  CI feeds it real Rust
+output; this test pins the checker's own behavior with synthetic
+documents built from the same replay, so a silent checker regression
+cannot slip through either side.
+"""
+
+import copy
+import json
+import os
+import sys
+import types
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+TOOLS = os.path.normpath(os.path.join(HERE, "..", "tools"))
+sys.path.insert(0, TOOLS)
+
+import check_telemetry as ct  # noqa: E402
+
+CFG = types.SimpleNamespace(
+    warmup=100, measure=400, drain=100, seed=1, packet_flits=4, vcs=2, vc_capacity=8
+)
+RATES = [0.1, 0.3]
+
+
+def synthetic_run(algo):
+    """A run dict the checker must accept: injection from the replay,
+    every flit delivered, forwarded exactly the delivered lower bound."""
+    flows, routes = ct.build_pipeline(algo)
+    nf = len(flows)
+    pf = CFG.packet_flits
+    injected = [ct.replay_injected_packets(f, RATES, CFG) for f in range(nf)]
+    delivered = [n * pf for n in injected]
+    forwarded = [0] * ct._TOPO.num_ports
+    for f, ports in enumerate(routes):
+        for p in ports:
+            forwarded[p] += delivered[f]
+    total = sum(injected)
+    horizon = CFG.warmup + CFG.measure + CFG.drain
+    return {
+        "label": {"algo": algo, "pattern": "c2io-sym", "rates": ",".join(str(r) for r in RATES)},
+        "counters": {
+            "netsim.cycles": len(RATES) * horizon,
+            "netsim.packets.injected": total,
+            "netsim.flits.injected": total * pf,
+            "netsim.flits.created": total * pf,
+            "netsim.flits.delivered": total * pf,
+            "netsim.flits.accepted": total * pf,
+            "netsim.flits.in_flight_end": 0,
+            "netsim.flits.buffered_end": 0,
+            "netsim.flits.backlogged_end": 0,
+        },
+        "maxima": {},
+        "vectors": {
+            "netsim.flow.injected_packets": {"kind": "sum", "values": injected},
+            "netsim.flow.delivered_flits": {"kind": "sum", "values": delivered},
+            "netsim.port.forwarded_flits": {"kind": "sum", "values": forwarded},
+            "netsim.port.credit_stalls": {"kind": "sum", "values": [0] * ct._TOPO.num_ports},
+            "netsim.vc.occupancy_hwm": {
+                "kind": "max",
+                "values": [1] * (ct._TOPO.num_ports * CFG.vcs),
+            },
+        },
+        "histograms": {"netsim.queue_depth": {"count": 3, "buckets": [[1, 2], [2, 1]]}},
+        "spans": {},
+    }
+
+
+@pytest.fixture(scope="module")
+def doc():
+    return {
+        "schema": "pgft-telemetry/1",
+        "command": "netsim",
+        "host_cpus": 4,
+        "runs": [synthetic_run("dmodk"), synthetic_run("gdmodk")],
+        "journal": [],
+    }
+
+
+def test_injection_replay_is_deterministic_and_rate_monotone():
+    a = [ct.replay_injected_packets(f, RATES, CFG) for f in range(8)]
+    assert a == [ct.replay_injected_packets(f, RATES, CFG) for f in range(8)]
+    assert sum(a) > 0, "0.1+0.3 over 600 cycles must inject packets"
+    lo = sum(ct.replay_injected_packets(f, [0.1], CFG) for f in range(8))
+    hi = sum(ct.replay_injected_packets(f, [0.8], CFG) for f in range(8))
+    assert lo < hi, "higher offered load must inject more packets"
+
+
+def test_draw_gap_mirrors_rust_semantics():
+    rng = ct.Xoshiro256(7)
+    gaps = [ct.draw_gap(rng, 0.125) for _ in range(20000)]
+    assert all(g >= 1 for g in gaps)
+    mean = sum(gaps) / len(gaps)
+    assert abs(mean - 8.0) < 0.4, mean  # geometric mean gap 1/p
+    assert ct.draw_gap(ct.Xoshiro256(3), 1.0) == 1
+
+
+def test_checker_accepts_a_consistent_document(doc):
+    checked, skipped = ct.check_document(doc, CFG)
+    assert checked == 2 and skipped == 0
+
+
+def test_checker_skips_unsupported_runs(doc):
+    d = copy.deepcopy(doc)
+    d["runs"].append(
+        {"label": {"algo": "random", "pattern": "shift:1", "rates": "0.1"}}
+    )
+    checked, skipped = ct.check_document(d, CFG)
+    assert checked == 2 and skipped == 1
+
+
+def test_checker_rejects_corrupted_injection_counter(doc):
+    d = copy.deepcopy(doc)
+    d["runs"][0]["counters"]["netsim.packets.injected"] += 1
+    with pytest.raises(ct.CheckError, match="packets.injected"):
+        ct.check_document(d, CFG)
+
+
+def test_checker_rejects_broken_conservation(doc):
+    d = copy.deepcopy(doc)
+    d["runs"][1]["counters"]["netsim.flits.delivered"] -= 1
+    with pytest.raises(ct.CheckError, match="conservation"):
+        ct.check_document(d, CFG)
+
+
+def test_checker_rejects_out_of_bounds_port_counter(doc):
+    d = copy.deepcopy(doc)
+    values = d["runs"][0]["vectors"]["netsim.port.forwarded_flits"]["values"]
+    hot = max(range(len(values)), key=lambda p: values[p])
+    values[hot] -= 1  # below the delivered-flit lower bound
+    with pytest.raises(ct.CheckError, match="outside"):
+        ct.check_document(d, CFG)
+
+
+def test_checker_rejects_wrong_schema_and_nulls(doc, tmp_path):
+    d = copy.deepcopy(doc)
+    d["schema"] = "pgft-telemetry/0"
+    with pytest.raises(ct.CheckError, match="schema"):
+        ct.check_document(d, CFG)
+    # End-to-end via main(): a null anywhere fails the document.
+    bad = copy.deepcopy(doc)
+    bad["runs"][0]["counters"]["netsim.cycles"] = None
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps(bad))
+    assert ct.main([str(p)]) == 1
+    good = tmp_path / "g.json"
+    good.write_text(json.dumps(doc))
+    assert ct.main([str(good)]) == 0

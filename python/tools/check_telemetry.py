@@ -1,0 +1,282 @@
+#!/usr/bin/env python3
+"""Cross-check a ``pgft netsim --telemetry`` document against the
+golden-pinned Python pipeline.
+
+The Rust engine exports per-flow injection counters, per-flow delivered
+flits and per-port forwarded-flit counters in its ``pgft-telemetry/1``
+document.  This script rebuilds the same case-study fabric, routes and
+seeded injection streams from the independent Python port behind
+``rust/tests/golden/faults_case_study.csv`` (``gen_faults_golden.py``)
+and verifies, per run:
+
+* ``netsim.flow.injected_packets`` matches an exact replay of the
+  closed-form geometric-gap Bernoulli injection (same xoshiro256**
+  per-flow streams, same ``1 + floor(ln(1-u)/ln1p(-p))`` draw);
+* the flit-conservation identity holds in the exported counters:
+  injected == delivered + in-flight + buffered + backlogged;
+* every per-port forwarded-flit counter is bracketed by the routes:
+  the flits of flows crossing a port that were *delivered* must all
+  have been forwarded there, and a port can never forward more than
+  the flits those flows *injected*;
+* shapes and caps: one slot per port, ``ports x vcs`` occupancy marks
+  never above the VC capacity, and the document carries no ``null``.
+
+Only the case-study ``c2io-sym`` runs of the deterministic ``dmodk`` /
+``gdmodk`` algorithms are checkable (the Python port mirrors exactly
+those); other runs are reported as skipped, not failed.  The engine
+parameters must match the ``pgft netsim`` invocation — pass the same
+``--warmup/--measure/--drain/--seed/--packet-flits`` values.
+
+Usage::
+
+    pgft netsim --topo case-study --algo dmodk,gdmodk --pattern c2io-sym \
+        --rates 0.1,0.3 --warmup 100 --measure 400 --drain 100 \
+        --telemetry netsim-telemetry.json --format csv --out /dev/null
+    python3 python/tools/check_telemetry.py netsim-telemetry.json \
+        --warmup 100 --measure 400 --drain 100
+
+The behavioral contract is pinned by ``python/tests/test_telemetry.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, HERE)
+
+from gen_faults_golden import (  # noqa: E402
+    MASK,
+    Topo,
+    XmodkRouter,
+    Xoshiro256,
+    build_gnid,
+    build_types,
+    c2io_sym_flows,
+    trace_route,
+)
+
+# util::rng seeds one xoshiro stream per flow at seed + (f+1) * golden gamma.
+GOLDEN_GAMMA = 0x9E3779B97F4A7C15
+
+
+class CheckError(AssertionError):
+    """A telemetry cross-check failure (message carries the detail)."""
+
+
+def ensure(cond: bool, msg: str) -> None:
+    if not cond:
+        raise CheckError(msg)
+
+
+def next_f64(rng: Xoshiro256) -> float:
+    """Mirror of ``util::rng::Xoshiro256::next_f64`` — exact: the
+    53-bit mantissa scale is a power of two, so no rounding happens."""
+    return (rng.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def draw_gap(rng: Xoshiro256, p: float) -> int:
+    """Mirror of ``netsim::inject::draw_gap`` (closed-form geometric)."""
+    if p >= 1.0:
+        return 1
+    u = next_f64(rng)
+    g = math.floor(math.log(1.0 - u) / math.log1p(-p))
+    if not math.isfinite(g) or g >= 2**64:
+        return MASK
+    return 1 + int(g)
+
+
+def replay_injected_packets(flow_index: int, rates: list, cfg) -> int:
+    """Packets the engine injects for one flow across a rate grid.
+
+    Mirrors ``Engine::run_detailed``: the first arrival is seeded at
+    ``gap`` after the window start (0), every firing inside the horizon
+    injects one packet (Bernoulli burst = 1) and redraws the gap; an
+    arrival past ``warmup + measure + drain`` never fires.
+    """
+    end = cfg.warmup + cfg.measure + cfg.drain
+    total = 0
+    for rate in rates:
+        p = rate / float(cfg.packet_flits)
+        rng = Xoshiro256((cfg.seed + (flow_index + 1) * GOLDEN_GAMMA) & MASK)
+        t = 0
+        while True:
+            t = min(t + draw_gap(rng, p), MASK)
+            if t > end:
+                break
+            total += 1
+    return total
+
+
+def build_pipeline(algo: str):
+    """Case-study topo + c2io-sym routes for one algorithm (cached)."""
+    if algo not in _PIPELINES:
+        topo = _TOPO
+        types = build_types(topo)
+        gnid = build_gnid(types)
+        router = XmodkRouter(topo, gnid if algo == "gdmodk" else None)
+        flows = c2io_sym_flows(topo, types)
+        routes = [trace_route(topo, router, s, d) for (s, d) in flows]
+        _PIPELINES[algo] = (flows, routes)
+    return _PIPELINES[algo]
+
+
+_TOPO = Topo()
+_PIPELINES: dict = {}
+
+
+def check_run(run: dict, cfg) -> None:
+    """Cross-check one labelled telemetry run. Raises CheckError."""
+    label = run.get("label", {})
+    algo = label.get("algo", "?")
+    rates = [float(x) for x in label.get("rates", "").split(",") if x]
+    ensure(rates, f"run {label}: no rates in the label")
+    flows, routes = build_pipeline(algo)
+    nf = len(flows)
+    counters = run["counters"]
+    vectors = run["vectors"]
+    pf = cfg.packet_flits
+
+    # 1. The injection replay: exact, per flow, summed over the grid.
+    expected = [replay_injected_packets(f, rates, cfg) for f in range(nf)]
+    got = vectors["netsim.flow.injected_packets"]["values"]
+    ensure(len(got) == nf, f"{algo}: {len(got)} flow slots, expected {nf}")
+    for f in range(nf):
+        ensure(
+            got[f] == expected[f],
+            f"{algo} flow {f} {flows[f]}: injected {got[f]} != replay {expected[f]}",
+        )
+    ensure(
+        counters["netsim.packets.injected"] == sum(expected),
+        f"{algo}: packets.injected {counters['netsim.packets.injected']} "
+        f"!= replay total {sum(expected)}",
+    )
+    ensure(
+        counters["netsim.flits.injected"] == sum(expected) * pf,
+        f"{algo}: flits.injected must be packets x {pf}",
+    )
+    horizon = cfg.warmup + cfg.measure + cfg.drain
+    ensure(
+        counters["netsim.cycles"] == len(rates) * horizon,
+        f"{algo}: cycles {counters['netsim.cycles']} != "
+        f"{len(rates)} runs x {horizon}",
+    )
+
+    # 2. Flit conservation, from the exported counters alone.
+    injected = counters["netsim.flits.injected"]
+    accounted = (
+        counters["netsim.flits.delivered"]
+        + counters["netsim.flits.in_flight_end"]
+        + counters["netsim.flits.buffered_end"]
+        + counters["netsim.flits.backlogged_end"]
+    )
+    ensure(
+        injected == accounted,
+        f"{algo}: conservation broken: injected {injected} != accounted {accounted}",
+    )
+    ensure(
+        counters["netsim.flits.created"]
+        == injected - counters["netsim.flits.backlogged_end"],
+        f"{algo}: created flits must be injected minus end-of-run backlog",
+    )
+    ensure(
+        counters["netsim.flits.accepted"] <= counters["netsim.flits.delivered"],
+        f"{algo}: accepted (measured-window) flits exceed delivered",
+    )
+
+    # 3. Per-port forwarded-flit counters, bracketed by the routes.
+    forwarded = vectors["netsim.port.forwarded_flits"]["values"]
+    delivered = vectors["netsim.flow.delivered_flits"]["values"]
+    ensure(
+        len(forwarded) == _TOPO.num_ports,
+        f"{algo}: {len(forwarded)} port slots, expected {_TOPO.num_ports}",
+    )
+    ensure(len(delivered) == nf, f"{algo}: {len(delivered)} delivered-flit slots")
+    lower = [0] * _TOPO.num_ports
+    upper = [0] * _TOPO.num_ports
+    for f, ports in enumerate(routes):
+        for p in ports:
+            lower[p] += delivered[f]
+            upper[p] += expected[f] * pf
+    for p in range(_TOPO.num_ports):
+        ensure(
+            lower[p] <= forwarded[p] <= upper[p],
+            f"{algo} port {p}: forwarded {forwarded[p]} outside "
+            f"[{lower[p]}, {upper[p]}] from the route membership",
+        )
+
+    # 4. Shapes and caps of the remaining per-entity families.
+    hwm = vectors["netsim.vc.occupancy_hwm"]["values"]
+    ensure(
+        len(hwm) == _TOPO.num_ports * cfg.vcs,
+        f"{algo}: {len(hwm)} VC slots, expected ports x vcs",
+    )
+    ensure(
+        all(v <= cfg.vc_capacity for v in hwm),
+        f"{algo}: a VC occupancy mark exceeds the capacity {cfg.vc_capacity}",
+    )
+    ensure(
+        vectors["netsim.vc.occupancy_hwm"]["kind"] == "max",
+        f"{algo}: occupancy high-water marks must merge as max",
+    )
+    stalls = vectors["netsim.port.credit_stalls"]["values"]
+    ensure(len(stalls) == _TOPO.num_ports, f"{algo}: credit-stall slots")
+    qd = run["histograms"]["netsim.queue_depth"]
+    ensure(
+        qd["count"] == sum(c for _, c in qd["buckets"]),
+        f"{algo}: queue-depth histogram count != bucket sum",
+    )
+
+
+def check_document(doc: dict, cfg) -> tuple:
+    """Check a whole telemetry document; returns (checked, skipped)."""
+    ensure(doc.get("schema") == "pgft-telemetry/1", "wrong or missing schema tag")
+    ensure(doc.get("command") == "netsim", "document is not a netsim emission")
+    ensure(doc.get("host_cpus", 0) >= 1, "host_cpus provenance missing")
+    checked, skipped = 0, 0
+    for run in doc.get("runs", []):
+        label = run.get("label", {})
+        if label.get("pattern") != "c2io-sym" or label.get("algo") not in (
+            "dmodk",
+            "gdmodk",
+        ):
+            skipped += 1
+            continue
+        check_run(run, cfg)
+        checked += 1
+    ensure(checked > 0, "no checkable (case-study c2io-sym dmodk/gdmodk) runs")
+    return checked, skipped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("telemetry", help="pgft-telemetry/1 JSON from pgft netsim")
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--measure", type=int, default=400)
+    ap.add_argument("--drain", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--packet-flits", dest="packet_flits", type=int, default=4)
+    ap.add_argument("--vcs", type=int, default=2)
+    ap.add_argument("--vc-capacity", dest="vc_capacity", type=int, default=8)
+    cfg = ap.parse_args(argv)
+    with open(cfg.telemetry, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        ensure("null" not in text, "telemetry documents must not carry null")
+        checked, skipped = check_document(json.loads(text), cfg)
+    except CheckError as e:
+        sys.stderr.write(f"FAIL {cfg.telemetry}: {e}\n")
+        return 1
+    sys.stderr.write(
+        f"OK {cfg.telemetry}: {checked} run(s) cross-checked against the "
+        f"Python pipeline ({skipped} skipped)\n"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,6 +25,17 @@ fn percentile(sorted: &[u64], p: usize) -> u64 {
     sorted[(sorted.len() - 1) * p / 100]
 }
 
+/// Render a float measurement for the JSON record. A non-finite value
+/// (a degenerate smoke-run division) becomes an explicit skip object so
+/// the schema-v2 record never carries `null`, `NaN` or `inf` tokens.
+fn fin(v: f64, digits: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.digits$}")
+    } else {
+        "{\"skipped\": \"measurement was not finite\"}".to_string()
+    }
+}
+
 fn main() {
     let smoke = std::env::var("PGFT_BENCH_SMOKE").is_ok();
     let topo = Arc::new(build_pgft(&PgftSpec::case_study()));
@@ -72,9 +83,28 @@ fn main() {
     assert_eq!(s.last_batch_events, scenario.events.len());
     assert!(s.degraded);
     let burst_us = s.last_reroute_micros;
+    // The per-phase breakdown comes from the leader's event journal
+    // (published with the snapshot), not from stopwatches in the bench.
+    let burst_rec = coord
+        .snapshot()
+        .journal
+        .last()
+        .cloned()
+        .expect("the burst repair must be journalled");
+    assert_eq!(burst_rec.events, scenario.events.len());
     println!(
         "  {} link-down events → 1 repair in {burst_us} µs, {} changed entries",
         s.last_batch_events, s.last_diff_entries
+    );
+    println!(
+        "  phases (µs): coalesce {} | dirty-scan {} | retrace {} | tables {} | \
+         diff {} | publish {}",
+        burst_rec.coalesce_ns / 1_000,
+        burst_rec.dirty_scan_ns / 1_000,
+        burst_rec.retrace_ns / 1_000,
+        burst_rec.tables_ns / 1_000,
+        burst_rec.diff_ns / 1_000,
+        burst_rec.publish_ns / 1_000
     );
     coord.inject_burst(scenario.events.iter().rev().map(|&l| LinkEvent::Up(l)).collect());
     coord.sync().unwrap();
@@ -164,22 +194,33 @@ fn main() {
     // is pinned well-formed by tests/fabric_service.rs).
     let source = if smoke { "rust-bench-smoke" } else { "rust-bench" };
     let json = format!(
-        "{{\n  \"schema\": \"pgft-bench-fabric/1\",\n  \"source\": \"{source}\",\n  \
+        "{{\n  \"schema\": \"pgft-bench-fabric/2\",\n  \"source\": \"{source}\",\n  \
+         \"host_cpus\": {},\n  \
          \"scenario\": \"{}\", \"algorithm\": \"gdmodk\",\n  \
-         \"repair_cycle_ms\": {:.4},\n  \
+         \"repair_cycle_ms\": {},\n  \
          \"reroute_us\": {{\"p50\": {idle_p50}, \"p99\": {idle_p99}, \"samples\": {}}},\n  \
-         \"burst\": {{\"events\": {}, \"table_pushes\": 1, \"reroute_us\": {burst_us}}},\n  \
+         \"burst\": {{\"events\": {}, \"table_pushes\": 1, \"reroute_us\": {burst_us}, \
+         \"phases_us\": {{\"coalesce\": {}, \"dirty_scan\": {}, \"retrace\": {}, \
+         \"tables\": {}, \"diff\": {}, \"publish\": {}}}}},\n  \
          \"read_load\": {{\"readers\": {readers}, \"queries\": {queries}, \
-         \"queries_per_sec\": {qps:.1}, \"writer_repairs\": {writer_repairs}, \
+         \"queries_per_sec\": {}, \"writer_repairs\": {writer_repairs}, \
          \"reroute_us_p50\": {load_p50}, \"reroute_us_p99\": {load_p99}}},\n  \
          \"pinned\": {{\n    \"events\": {:?},\n    \
          \"diff_entries\": {{{}}},\n    \
          \"routes_changed\": {{{}}},\n    \
          \"post_cascade_c_topo_c2io\": {{{}}}\n  }}\n}}\n",
+        pgft::util::par::max_threads(),
         scenario.label(),
-        cycle_st.median_ns / 1e6,
+        fin(cycle_st.median_ns / 1e6, 4),
         reroute_us.len(),
         scenario.events.len(),
+        burst_rec.coalesce_ns / 1_000,
+        burst_rec.dirty_scan_ns / 1_000,
+        burst_rec.retrace_ns / 1_000,
+        burst_rec.tables_ns / 1_000,
+        burst_rec.diff_ns / 1_000,
+        burst_rec.publish_ns / 1_000,
+        fin(qps, 1),
         scenario.events,
         diff_json.join(", "),
         moved_json.join(", "),

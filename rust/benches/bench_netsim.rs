@@ -5,7 +5,7 @@
 //! CI smoke-runs this with `PGFT_BENCH_SMOKE=1` (1 iteration) so the
 //! bench code cannot rot; real numbers come from a plain `cargo bench`.
 
-use pgft::netsim::{load_curve, run_netsim, saturation_point, NetsimConfig};
+use pgft::netsim::{load_curve_with, run_netsim, run_netsim_with, saturation_point, NetsimConfig};
 use pgft::prelude::*;
 use pgft::util::bench::Bench;
 use std::time::Duration;
@@ -21,8 +21,14 @@ fn main() {
         let router = kind.build(&topo, Some(&types), 1);
         let routes = FlowSet::trace(&topo, &*router, &flows);
         for rate in [0.05f64, 0.3, 0.8] {
-            let rep = run_netsim(&topo, &routes, &cfg, rate).unwrap();
-            let events = rep.events;
+            // The events/iteration figure comes from the telemetry
+            // counters of one instrumented warm-up run; the timed loop
+            // below stays on the disabled path, which is the number the
+            // smoke gate watches for instrumentation overhead.
+            let telem = Telemetry::enabled();
+            let rep = run_netsim_with(&topo, &routes, &cfg, rate, &telem).unwrap();
+            let events = telem.snapshot().counter("netsim.events");
+            assert_eq!(events, rep.events, "telemetry event counter must match the report");
             Bench::new(format!("netsim/{kind}/rate-{rate}"))
                 .target_time(Duration::from_millis(300))
                 .throughput_elems(events)
@@ -38,15 +44,20 @@ fn main() {
     for kind in AlgorithmKind::ALL {
         let router = kind.build(&topo, Some(&types), 1);
         let routes = FlowSet::trace(&topo, &*router, &flows);
-        let (curve, d) = pgft::util::bench::time_once(&format!("netsim/curve/{kind}"), || {
-            load_curve(&topo, &routes, &cfg, &rates).unwrap()
-        });
+        // Timing comes from the engine's own `netsim.run` span rather
+        // than ad-hoc stopwatch bookkeeping around the call.
+        let telem = Telemetry::enabled();
+        let curve = load_curve_with(&topo, &routes, &cfg, &rates, &telem).unwrap();
+        let reg = telem.snapshot();
+        let span = *reg.spans().get("netsim.run").expect("load_curve_with records netsim.run");
         let sat = saturation_point(&curve).expect("non-empty curve");
         println!(
-            "  {kind:<12} peak accepted {:>6.2} flits/cycle, knee at offered {:>4.2} ({})",
+            "  {kind:<12} peak accepted {:>6.2} flits/cycle, knee at offered {:>4.2} \
+             ({} across {} runs)",
             sat.peak_accepted,
             sat.knee_offered,
-            pgft::util::bench::human_duration(d)
+            pgft::util::bench::human_duration(Duration::from_nanos(span.total_ns)),
+            span.count
         );
         peaks.push((kind, sat.peak_accepted));
     }

@@ -15,6 +15,17 @@ use pgft::util::bench::Bench;
 use pgft::workload::{evaluate_makespan, lower, WorkloadSpec};
 use std::time::Duration;
 
+/// Render a float measurement for the JSON record. A non-finite value
+/// (a degenerate smoke-run division) becomes an explicit skip object so
+/// the schema-v2 record never carries `null`, `NaN` or `inf` tokens.
+fn fin(v: f64, digits: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.digits$}")
+    } else {
+        "{\"skipped\": \"measurement was not finite\"}".to_string()
+    }
+}
+
 fn main() {
     let topo = build_pgft(&PgftSpec::case_study());
     let types = Placement::parse("io:last:1,gpgpu:first:2").unwrap().apply(&topo).unwrap();
@@ -63,15 +74,17 @@ fn main() {
     );
 
     let json = format!(
-        "{{\n  \"schema\": \"pgft-bench-workload/1\",\n  \"source\": \"{}\",\n  \
-         \"lowerings_per_sec\": {:.1},\n  \"phases_per_lowering\": {},\n  \
-         \"phases_compiled_per_sec\": {:.1},\n  \"makespan_cells_per_sec\": {:.1},\n  \
+        "{{\n  \"schema\": \"pgft-bench-workload/2\",\n  \"source\": \"{}\",\n  \
+         \"host_cpus\": {},\n  \
+         \"lowerings_per_sec\": {},\n  \"phases_per_lowering\": {},\n  \
+         \"phases_compiled_per_sec\": {},\n  \"makespan_cells_per_sec\": {},\n  \
          \"mix_makespan\": {{\"dmodk\": {:.4}, \"gdmodk\": {:.4}}}\n}}\n",
         if smoke { "rust-bench-smoke" } else { "rust-bench" },
-        lowerings_per_sec,
+        pgft::util::par::max_threads(),
+        fin(lowerings_per_sec, 1),
         phases_per_lowering,
-        phases_per_sec,
-        cells_per_sec,
+        fin(phases_per_sec, 1),
+        fin(cells_per_sec, 1),
         mix_makespan[0].1,
         mix_makespan[1].1,
     );

@@ -5,7 +5,7 @@
 //! pgft topo --topo case-study [--dot] [--leaves] [--placement io:last:1]
 //! pgft sweep [--config FILE] [--topo ..] [--placements A;B] [--pattern ..]
 //!            [--algo ..] [--faults none,rate:0.05] [--seeds 1,2] [--simulate]
-//!            [--serial|--threads N]
+//!            [--serial|--threads N] [--telemetry OUT.json]
 //! pgft faults [--topo ..] [--algo ..] [--pattern ..] [--faults SPECS]
 //!             [--seeds 1,2] [--simulate] [--format csv] [--out FILE]
 //! pgft eval [--topo ..] [--algo ..] [--pattern ..] [--seed N]
@@ -22,10 +22,12 @@
 //! pgft netsim [--rates 0.05,0.1] [--algo ..] [--pattern ..]   # flit-level curves
 //!             [--packet-flits 4] [--vcs 2] [--vc-capacity 8] [--link-latency 1]
 //!             [--injection bernoulli|burst:K] [--faults SPEC] [--seed N]
+//!             [--telemetry OUT.json]   # per-port/VC counters per (algo, pattern)
 //! pgft packet-sim [--message 64] [--pattern ..] [--algo ..]   # slot-level sim
 //! pgft run --config FILE                                      # full experiment
 //! pgft fabric [--algo gdmodk] [--faults cascade:4] [--seed 2] # online service drill
 //!             [--burst] [--readers 4] [--query-ms 200]        #  + read load
+//!             [--telemetry OUT.json]   # event journal: per-phase repair timings
 //! pgft fabric-demo [--algo gdmodk]                            # coordinator + fault drill
 //! pgft artifacts                                              # runtime manifest
 //! ```
@@ -36,7 +38,8 @@ use crate::eval::{evaluate_all, parse_evaluators, FlowSet};
 use crate::faults::{FaultModel, FaultSet};
 use crate::metrics::{render_algorithm_table, CongestionReport};
 use crate::netsim::{
-    curve_table, default_rates, load_curve, saturation_point, CurvePoint, Injection, NetsimConfig,
+    curve_table, default_rates, load_curve_with, saturation_point, CurvePoint, Injection,
+    NetsimConfig,
 };
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
@@ -44,7 +47,13 @@ use crate::report::Table;
 use crate::routing::trace::trace_flows;
 use crate::routing::{AlgorithmKind, Router};
 use crate::sim::{render_sim_table, simulate_flow_level, PacketSim, PacketSimConfig};
-use crate::sweep::{fault_table, run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
+use crate::sweep::{
+    fault_table, run_sweep, run_sweep_with, sweep_table, SweepOptions, SweepResult, SweepSpec,
+};
+use crate::telemetry::{
+    summary_table as telemetry_summary_table, write_telemetry, BatchRecord, Registry, Telemetry,
+    TelemetryRun,
+};
 use crate::topology::{families, render, Topology};
 use crate::workload::{
     evaluate_makespan, evaluate_makespan_traced, lower, WorkloadEval, WorkloadSpec,
@@ -149,6 +158,36 @@ fn parse_fault_set(args: &Args, topo: &Topology, seed: u64) -> Result<Option<Fau
         }
         _ => Ok(None),
     }
+}
+
+/// Expand the `--telemetry OUT.json` flag into a recording handle: live
+/// when the flag is present, inert otherwise (an inert handle makes
+/// every instrumented path compile down to an untaken branch, so
+/// uninstrumented runs stay byte- and speed-identical).
+fn telemetry_handle(args: &Args) -> Telemetry {
+    if args.get("telemetry").is_some() {
+        Telemetry::enabled()
+    } else {
+        Telemetry::disabled()
+    }
+}
+
+/// Write the `pgft-telemetry/1` document named by `--telemetry` and
+/// print the human summary to stderr (so `--out`/stdout CSV stays
+/// machine-clean). A no-op when the flag was not given.
+fn emit_telemetry(
+    args: &Args,
+    command: &str,
+    runs: &[TelemetryRun],
+    journal: &[BatchRecord],
+) -> Result<()> {
+    let Some(path) = args.get("telemetry") else {
+        return Ok(());
+    };
+    write_telemetry(path, command, runs, journal)?;
+    eprint!("{}", telemetry_summary_table(runs, journal).to_text());
+    eprintln!("wrote telemetry {path}");
+    Ok(())
 }
 
 fn load_topo(args: &Args) -> Result<(Topology, NodeTypeMap)> {
@@ -264,6 +303,11 @@ commands:
 common options:
   --topo NAME --placement SPEC --algo LIST|all --pattern LIST --seed N
   --format text|csv|json --out FILE
+  --telemetry OUT.json   (sweep/eval/netsim/fabric) write a pgft-telemetry/1
+               document — counters, per-port vectors, histograms, span
+               timings, and (fabric) the leader's per-batch event journal —
+               plus a summary table on stderr; never changes stdout/--out
+               bytes
 "#;
 
 fn cmd_topo(args: &Args) -> Result<()> {
@@ -369,10 +413,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     spec.validate()?;
     let threads = parse_threads(args)?;
+    let telem = telemetry_handle(args);
     let t0 = Instant::now();
-    let rows = run_sweep(&spec, &SweepOptions { threads })?;
+    let rows = run_sweep_with(&spec, &SweepOptions { threads }, &telem)?;
     let elapsed = t0.elapsed();
     emit(&sweep_table(&rows), args)?;
+    emit_telemetry(args, "sweep", &[TelemetryRun::unlabelled(telem.snapshot())], &[])?;
     eprintln!(
         "{} cells in {:.3}s on {} thread{}",
         rows.len(),
@@ -431,6 +477,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 1)?;
     let evaluators = parse_evaluators(&args.get_or("evaluators", "congestion,fairrate"))?;
     let faults = parse_fault_set(args, &topo, seed)?;
+    let telem = telemetry_handle(args);
     let mut t = Table::new(
         "unified eval: evaluator stack over one shared route store per cell",
         &[
@@ -446,7 +493,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
             let (set, changed) = match &faults {
                 Some(f) => {
                     let degraded = kind.build_degraded(&topo, Some(&types), seed, f)?;
-                    pristine.retrace_incremental(&topo, f, &*degraded)
+                    let threads = crate::eval::repair_threads(pristine.len());
+                    pristine.retrace_incremental_telem(&topo, f, &*degraded, threads, &telem)
                 }
                 None => (pristine, 0),
             };
@@ -486,7 +534,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
             ]);
         }
     }
-    emit(&t, args)
+    emit(&t, args)?;
+    emit_telemetry(args, "eval", &[TelemetryRun::unlabelled(telem.snapshot())], &[])
 }
 
 /// `pgft eval --size` — one rung of the large-fabric size ladder
@@ -867,6 +916,12 @@ fn cmd_netsim(args: &Args) -> Result<()> {
     };
     // Optional fault scenario: simulate rerouted (degraded) tables.
     let faults = parse_fault_set(args, &topo, seed)?;
+    // One telemetry run per (algo, pattern): every rate of that curve
+    // merges into the same registry, so per-port counters aggregate
+    // over one configuration's rate grid only (the rate list rides in
+    // the run label).
+    let telemetry_on = args.get("telemetry").is_some();
+    let mut truns: Vec<TelemetryRun> = Vec::new();
     let mut points: Vec<CurvePoint> = Vec::new();
     let mut sat = Table::new(
         "saturation points (peak accepted flits/cycle, knee offered load)",
@@ -880,7 +935,19 @@ fn cmd_netsim(args: &Args) -> Result<()> {
                 None => kind.build(&topo, Some(&types), seed),
             };
             let set = FlowSet::trace(&topo, &*router, &flows);
-            let curve = load_curve(&topo, &set, &cfg, &rates)?;
+            let telem =
+                if telemetry_on { Telemetry::enabled() } else { Telemetry::disabled() };
+            let curve = load_curve_with(&topo, &set, &cfg, &rates, &telem)?;
+            if telemetry_on {
+                let mut label = BTreeMap::new();
+                label.insert("algo".to_string(), kind.as_str().to_string());
+                label.insert("pattern".to_string(), pattern.name());
+                label.insert(
+                    "rates".to_string(),
+                    rates.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(","),
+                );
+                truns.push(TelemetryRun { label, registry: telem.snapshot() });
+            }
             if let Some(s) = saturation_point(&curve) {
                 sat.row(&[
                     kind.as_str().to_string(),
@@ -901,6 +968,7 @@ fn cmd_netsim(args: &Args) -> Result<()> {
     // The saturation summary goes to stderr so `--out`/stdout CSV stays
     // machine-clean.
     eprint!("{}", sat.to_text());
+    emit_telemetry(args, "netsim", &truns, &[])?;
     Ok(())
 }
 
@@ -1133,6 +1201,22 @@ fn cmd_fabric(args: &Args) -> Result<()> {
          → {:.0} queries/s while the writer applied {repairs} repairs",
         queries as f64 / secs.max(1e-9),
     );
+    // --telemetry: the leader's event journal (per-phase repair
+    // timings, straight off the final snapshot) plus the headline
+    // service counters as one unlabelled run.
+    if args.get("telemetry").is_some() {
+        let snap = coord.snapshot();
+        let s = &snap.stats;
+        let mut reg = Registry::default();
+        reg.add("fabric.table_version", s.table_version);
+        reg.add("fabric.rebuilds", s.rebuilds);
+        reg.add("fabric.reroutes", s.reroutes);
+        reg.add("fabric.failed_repairs", s.failed_repairs);
+        reg.add("fabric.dead_links", s.dead_links as u64);
+        reg.add("fabric.table_entries", s.table_entries as u64);
+        reg.span_ns("fabric.last_reroute", s.last_reroute_micros * 1_000);
+        emit_telemetry(args, "fabric", &[TelemetryRun::unlabelled(reg)], &snap.journal)?;
+    }
     coord.shutdown();
     Ok(())
 }
@@ -1282,6 +1366,92 @@ mod tests {
         assert_eq!(ca, cb, "same seed must produce byte-identical CSV");
         assert!(ca.lines().next().unwrap().contains("fault"));
         assert_eq!(ca.lines().count(), 1 + 4, "header + 2 algos × 2 faults");
+    }
+
+    #[test]
+    fn telemetry_flag_writes_schema_and_leaves_output_bytes_alone() {
+        let dir = std::env::temp_dir().join("pgft_telemetry_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let plain_csv = dir.join("plain.csv");
+        let telem_csv = dir.join("telem.csv");
+        let telem_json = dir.join("netsim.json");
+        let base = [
+            "netsim", "--algo", "dmodk", "--pattern", "c2io-sym", "--rates", "0.1,0.3",
+            "--warmup", "50", "--measure", "200", "--drain", "50", "--format", "csv",
+        ];
+        let mut plain: Vec<String> = argv(&base);
+        plain.extend(argv(&["--out", plain_csv.to_str().unwrap()]));
+        run(&plain).unwrap();
+        let mut instrumented: Vec<String> = argv(&base);
+        instrumented.extend(argv(&[
+            "--out",
+            telem_csv.to_str().unwrap(),
+            "--telemetry",
+            telem_json.to_str().unwrap(),
+        ]));
+        run(&instrumented).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&plain_csv).unwrap(),
+            std::fs::read_to_string(&telem_csv).unwrap(),
+            "--telemetry must not perturb a single output byte"
+        );
+        let doc = std::fs::read_to_string(&telem_json).unwrap();
+        assert!(doc.contains("\"schema\": \"pgft-telemetry/1\""), "{doc}");
+        assert!(doc.contains("\"command\": \"netsim\""));
+        assert!(doc.contains("\"algo\": \"dmodk\""));
+        assert!(doc.contains("\"rates\": \"0.1,0.3\""));
+        assert!(doc.contains("netsim.port.forwarded_flits"));
+        assert!(doc.contains("netsim.vc.occupancy_hwm"));
+        assert!(doc.contains("netsim.port.credit_stalls"));
+        assert!(doc.contains("netsim.queue_depth"));
+        assert!(!doc.contains("null"), "no-null discipline: {doc}");
+    }
+
+    #[test]
+    fn sweep_and_fabric_emit_telemetry_documents() {
+        let dir = std::env::temp_dir().join("pgft_telemetry_cli_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let sweep_json = dir.join("sweep.json");
+        run(&argv(&[
+            "sweep", "--topo", "case-study", "--pattern", "c2io-sym", "--algo",
+            "dmodk,gdmodk", "--faults", "none,links:2", "--serial", "--telemetry",
+            sweep_json.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = std::fs::read_to_string(&sweep_json).unwrap();
+        assert!(doc.contains("\"sweep.cells\": 4"), "{doc}");
+        assert!(doc.contains("sweep.cell.trace"));
+        assert!(doc.contains("sweep.cell.retrace"));
+        assert!(!doc.contains("null"));
+        let fabric_json = dir.join("fabric.json");
+        run(&argv(&[
+            "fabric", "--burst", "--faults", "cascade:4", "--seed", "2", "--readers", "1",
+            "--query-ms", "20", "--telemetry", fabric_json.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = std::fs::read_to_string(&fabric_json).unwrap();
+        assert!(doc.contains("\"command\": \"fabric\""));
+        assert!(doc.contains("\"kind\": \"repair\""), "journal carries repairs: {doc}");
+        assert!(doc.contains("\"kind\": \"restore\""), "drill ends healed: {doc}");
+        assert!(doc.contains("fabric.reroutes"));
+        assert!(!doc.contains("null"));
+    }
+
+    #[test]
+    fn eval_emits_retrace_telemetry() {
+        let dir = std::env::temp_dir().join("pgft_telemetry_cli_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let eval_json = dir.join("eval.json");
+        run(&argv(&[
+            "eval", "--algo", "gdmodk", "--faults", "stage:3:2", "--evaluators",
+            "congestion", "--telemetry", eval_json.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = std::fs::read_to_string(&eval_json).unwrap();
+        assert!(doc.contains("\"eval.retrace.calls\": 1"), "{doc}");
+        assert!(doc.contains("eval.retrace.dirty_flows"));
+        assert!(doc.contains("eval.retrace.chunk"));
+        assert!(!doc.contains("null"));
     }
 
     #[test]

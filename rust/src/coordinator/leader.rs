@@ -25,6 +25,7 @@ use crate::nodes::{NodeTypeMap, TypeReindex};
 use crate::routing::degraded::route_degraded;
 use crate::routing::verify::all_pairs;
 use crate::routing::{AlgorithmKind, ForwardingTables};
+use crate::telemetry::{BatchKind, BatchRecord, Journal, JOURNAL_CAP};
 use crate::topology::{Nid, Topology};
 use anyhow::Result;
 use std::sync::Arc;
@@ -63,6 +64,9 @@ pub(super) struct Leader {
     last_diff_entries: usize,
     last_batch_events: usize,
     last_routes_changed: usize,
+    /// Bounded ring of per-batch phase breakdowns, cloned into every
+    /// published snapshot (see [`crate::telemetry::journal`]).
+    journal: Journal,
     cell: Arc<SnapshotCell>,
 }
 
@@ -106,6 +110,7 @@ impl Leader {
             tables: tables.clone(),
             flows: built.flows.clone(),
             stats: stats.clone(),
+            journal: Vec::new(),
         })));
         let leader = Leader {
             topo,
@@ -126,6 +131,7 @@ impl Leader {
             last_diff_entries: stats.last_diff_entries,
             last_batch_events: 0,
             last_routes_changed: 0,
+            journal: Journal::new(JOURNAL_CAP),
             cell: cell.clone(),
         };
         Ok((leader, cell))
@@ -151,6 +157,7 @@ impl Leader {
                 LinkEvent::Up(l) => faults.revive(l),
             }
         }
+        let coalesce_ns = t0.elapsed().as_nanos() as u64;
         if faults == self.faults {
             return;
         }
@@ -159,6 +166,20 @@ impl Leader {
         // current store is no repair base — fall back to the pristine
         // store (see module docs).
         let any_revive = self.faults.dead_links().into_iter().any(|l| !faults.is_dead(l));
+        let mut record = BatchRecord {
+            kind: if faults.num_dead() == 0 { BatchKind::Restore } else { BatchKind::Repair },
+            events: events.len(),
+            dead_links: faults.num_dead(),
+            dirty_flows: 0,
+            routes_changed: 0,
+            diff_entries: 0,
+            coalesce_ns,
+            dirty_scan_ns: 0,
+            retrace_ns: 0,
+            tables_ns: 0,
+            diff_ns: 0,
+            publish_ns: 0,
+        };
         let repaired: Result<(Arc<FlowSet>, ForwardingTables)> = (|| {
             if faults.num_dead() == 0 {
                 return Ok((self.pristine_flows.clone(), (*self.pristine_tables).clone()));
@@ -169,7 +190,12 @@ impl Leader {
             // Large fabrics repair in parallel; the ordered splice keeps
             // the published store byte-identical to a serial repair.
             let threads = crate::eval::repair_threads(base.len());
-            let (flows, _) = base.retrace_incremental_par(&self.topo, &faults, &*router, threads);
+            let (flows, changed, timing) =
+                base.retrace_incremental_timed(&self.topo, &faults, &*router, threads);
+            record.dirty_flows = changed;
+            record.dirty_scan_ns = timing.dirty_scan_ns;
+            record.retrace_ns = timing.trace_ns + timing.splice_ns;
+            let tt = Instant::now();
             let tables = if router.dest_based() {
                 ForwardingTables::build(&self.topo, &*router)?
             } else {
@@ -178,6 +204,7 @@ impl Leader {
                 // with the same type re-index.
                 route_degraded(&self.topo, &faults, self.grouped_reindex())?
             };
+            record.tables_ns = tt.elapsed().as_nanos() as u64;
             Ok((Arc::new(flows), tables))
         })();
         self.last_batch_events = events.len();
@@ -185,22 +212,31 @@ impl Leader {
             Ok((flows, mut tables)) => {
                 self.version += 1;
                 tables.version = self.version;
+                let td = Instant::now();
                 self.last_routes_changed = self.flows.diff_count(&flows);
                 self.last_diff_entries = self.tables.diff_entries(&tables);
+                record.diff_ns = td.elapsed().as_nanos() as u64;
+                record.routes_changed = self.last_routes_changed;
+                record.diff_entries = self.last_diff_entries;
                 self.flows = flows;
                 self.tables = Arc::new(tables);
                 self.reroutes += 1;
+                self.faults = faults;
+                self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+                self.publish_journalled(record);
             }
             Err(e) => {
                 // Partitioned: keep serving the last good tables, but
-                // tell readers the truth about the fault set.
+                // tell readers the truth about the fault set. Failed
+                // repairs are counted, not journalled — the journal
+                // records completed mutations only.
                 self.failed_repairs += 1;
                 eprintln!("fabric repair failed ({} events): {e:#}", events.len());
+                self.faults = faults;
+                self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+                self.publish();
             }
         }
-        self.faults = faults;
-        self.last_reroute_micros = t0.elapsed().as_micros() as u64;
-        self.publish();
     }
 
     /// Switch the routing algorithm live: full rebuild (pristine store
@@ -214,28 +250,52 @@ impl Leader {
         let t0 = Instant::now();
         let old_kind = self.kind;
         self.kind = kind;
-        match compute_full(&self.topo, &self.types, &self.reindex, kind, self.seed, &self.faults) {
+        let built =
+            compute_full(&self.topo, &self.types, &self.reindex, kind, self.seed, &self.faults);
+        // The whole from-scratch build (all-pairs trace + tables, plus
+        // the degraded derivation under active faults) lands under the
+        // journal record's `retrace_ns` — a rebuild has no incremental
+        // phases to split it into.
+        let build_ns = t0.elapsed().as_nanos() as u64;
+        self.last_batch_events = 0;
+        match built {
             Ok(built) => {
                 let mut tables = built.tables;
                 self.version += 1;
                 tables.version = self.version;
+                let td = Instant::now();
                 self.last_routes_changed = self.flows.diff_count(&built.flows);
                 self.last_diff_entries = self.tables.diff_entries(&tables);
+                let diff_ns = td.elapsed().as_nanos() as u64;
                 self.pristine_flows = built.pristine_flows;
                 self.pristine_tables = built.pristine_tables;
                 self.flows = built.flows;
                 self.tables = Arc::new(tables);
                 self.rebuilds += 1;
+                self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+                self.publish_journalled(BatchRecord {
+                    kind: BatchKind::Rebuild,
+                    events: 0,
+                    dead_links: self.faults.num_dead(),
+                    dirty_flows: 0,
+                    routes_changed: self.last_routes_changed,
+                    diff_entries: self.last_diff_entries,
+                    coalesce_ns: 0,
+                    dirty_scan_ns: 0,
+                    retrace_ns: build_ns,
+                    tables_ns: 0,
+                    diff_ns,
+                    publish_ns: 0,
+                });
             }
             Err(e) => {
                 self.kind = old_kind;
                 self.failed_repairs += 1;
                 eprintln!("algorithm switch to {kind} failed: {e:#}");
+                self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+                self.publish();
             }
         }
-        self.last_batch_events = 0;
-        self.last_reroute_micros = t0.elapsed().as_micros() as u64;
-        self.publish();
     }
 
     fn stats(&self) -> FabricStats {
@@ -266,11 +326,27 @@ impl Leader {
             tables: self.tables.clone(),
             flows: self.flows.clone(),
             stats: self.stats(),
+            journal: self.journal.records(),
         }
     }
 
     fn publish(&self) {
         self.cell.store(Arc::new(self.snapshot()));
+    }
+
+    /// Complete a journal record with the measured publish cost, append
+    /// it, and publish. The snapshot is built *before* the record is
+    /// appended (that build is what `publish_ns` measures — the cell
+    /// store itself is one pointer swap), then its journal view is
+    /// refreshed so the published snapshot already carries this batch's
+    /// full phase breakdown.
+    fn publish_journalled(&mut self, mut record: BatchRecord) {
+        let tp = Instant::now();
+        let mut snap = self.snapshot();
+        record.publish_ns = tp.elapsed().as_nanos() as u64;
+        self.journal.push(record);
+        snap.journal = self.journal.records();
+        self.cell.store(Arc::new(snap));
     }
 }
 

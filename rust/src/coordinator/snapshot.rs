@@ -16,6 +16,7 @@ use crate::nodes::NodeTypeMap;
 use crate::patterns::Pattern;
 use crate::routing::trace::RoutePorts;
 use crate::routing::{AlgorithmKind, ForwardingTables};
+use crate::telemetry::BatchRecord;
 use crate::topology::{Nid, Topology};
 use anyhow::Result;
 use std::sync::{Arc, RwLock};
@@ -81,6 +82,12 @@ pub struct FabricSnapshot {
     pub flows: Arc<FlowSet>,
     /// Monitoring counters at publication time.
     pub stats: FabricStats,
+    /// The leader's event journal at publication time: one
+    /// [`BatchRecord`] per applied mutation (repairs, rebuilds,
+    /// restores) with its per-phase wall-clock breakdown, oldest first,
+    /// bounded at [`crate::telemetry::JOURNAL_CAP`] records. Purely
+    /// diagnostic — nothing deterministic reads it.
+    pub journal: Vec<BatchRecord>,
 }
 
 /// All-pairs flow index of `(src, dst)`: the store is traced over

@@ -60,8 +60,10 @@
 use crate::faults::FaultSet;
 use crate::routing::trace::{trace_route_into, RoutePorts};
 use crate::routing::Router;
+use crate::telemetry::Telemetry;
 use crate::topology::{Nid, PortId, Topology};
 use crate::util::par::par_map;
+use std::time::Instant;
 
 /// Growth quantum for the port arena once a store outgrows its exact
 /// pre-size (only fault-aware routers can — they may route longer than
@@ -134,6 +136,20 @@ pub fn repair_threads(flows: usize) -> usize {
     } else {
         1
     }
+}
+
+/// Wall-clock phase breakdown of one incremental repair. Diagnostic
+/// only: it feeds the coordinator's event journal and the telemetry
+/// registry, never a deterministic output (the repaired bytes are
+/// identical whether or not anyone reads the clock).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RetraceTiming {
+    /// Scanning the store for flows crossing dead links.
+    pub dirty_scan_ns: u64,
+    /// Re-tracing the dirty flows (all workers, wall-clock).
+    pub trace_ns: u64,
+    /// The ordered splice into the repaired arena.
+    pub splice_ns: u64,
 }
 
 /// A compact, contiguous store of traced routes: CSR layout with a
@@ -374,9 +390,77 @@ impl FlowSet {
         router: &dyn Router,
         threads: usize,
     ) -> (FlowSet, usize) {
+        let (out, changed, _, _) = self.retrace_core(topo, faults, router, threads);
+        (out, changed)
+    }
+
+    /// [`FlowSet::retrace_incremental_par`] returning the wall-clock
+    /// phase breakdown as well — the coordinator leader journals it per
+    /// fault batch. The repaired store is byte-identical to the
+    /// untimed paths.
+    pub fn retrace_incremental_timed(
+        &self,
+        topo: &Topology,
+        faults: &FaultSet,
+        router: &dyn Router,
+        threads: usize,
+    ) -> (FlowSet, usize, RetraceTiming) {
+        let (out, changed, timing, _) = self.retrace_core(topo, faults, router, threads);
+        (out, changed, timing)
+    }
+
+    /// [`FlowSet::retrace_incremental_par`] recording into a
+    /// [`Telemetry`] handle: dirty-flow and arena-byte counters, the
+    /// dirty-scan/trace/splice span breakdown, and one
+    /// `eval.retrace.chunk` span per worker chunk. Workers never touch
+    /// the handle — per-chunk durations ride back on the existing
+    /// result channel and everything merges in one shard at the end —
+    /// so a disabled handle is exactly the plain parallel path.
+    pub fn retrace_incremental_telem(
+        &self,
+        topo: &Topology,
+        faults: &FaultSet,
+        router: &dyn Router,
+        threads: usize,
+        telem: &Telemetry,
+    ) -> (FlowSet, usize) {
+        if !telem.is_enabled() {
+            return self.retrace_incremental_par(topo, faults, router, threads);
+        }
+        let (out, changed, timing, chunk_ns) = self.retrace_core(topo, faults, router, threads);
+        let mut shard = telem.shard();
+        shard.add("eval.retrace.calls", 1);
+        shard.add("eval.retrace.flows", self.len() as u64);
+        shard.add("eval.retrace.dirty_flows", changed as u64);
+        shard.add("eval.retrace.arena_bytes", out.arena_bytes() as u64);
+        shard.span_ns("eval.retrace.dirty_scan", timing.dirty_scan_ns);
+        shard.span_ns("eval.retrace.trace", timing.trace_ns);
+        shard.span_ns("eval.retrace.splice", timing.splice_ns);
+        for ns in chunk_ns {
+            shard.span_ns("eval.retrace.chunk", ns);
+        }
+        telem.merge(shard);
+        (out, changed)
+    }
+
+    /// The one repair implementation every public variant delegates to.
+    /// Returns the repaired store, the dirty count, the phase timing,
+    /// and the per-chunk trace durations (empty when nothing was
+    /// dirty). The `Instant` reads cost nanoseconds against a retrace
+    /// and never influence the repaired bytes.
+    fn retrace_core(
+        &self,
+        topo: &Topology,
+        faults: &FaultSet,
+        router: &dyn Router,
+        threads: usize,
+    ) -> (FlowSet, usize, RetraceTiming, Vec<u64>) {
+        let t0 = Instant::now();
         let dirty = self.dirty_flows(topo, faults);
+        let dirty_scan_ns = t0.elapsed().as_nanos() as u64;
         if dirty.is_empty() {
-            return (self.clone(), 0);
+            let timing = RetraceTiming { dirty_scan_ns, ..Default::default() };
+            return (self.clone(), 0, timing, Vec::new());
         }
         // 4 chunks per worker keeps the atomic-cursor work stealing
         // meaningful (dirty flows cluster around the dead links, so
@@ -384,9 +468,12 @@ impl FlowSet {
         let threads = threads.max(1);
         let chunk = dirty.len().div_ceil(threads * 4).max(1);
         let groups: Vec<&[usize]> = dirty.chunks(chunk).collect();
-        // Each worker returns (sub-arena, per-flow hop counts) for its
-        // chunk; lens delimit the sub-arena the same way CSR offsets do.
-        let traced: Vec<(Vec<u32>, Vec<u32>)> = par_map(threads, &groups, |_, group| {
+        // Each worker returns (sub-arena, per-flow hop counts, chunk
+        // duration) for its chunk; lens delimit the sub-arena the same
+        // way CSR offsets do.
+        let t1 = Instant::now();
+        let traced: Vec<(Vec<u32>, Vec<u32>, u64)> = par_map(threads, &groups, |_, group| {
+            let tc = Instant::now();
             let mut arena: Vec<u32> = Vec::with_capacity(group.len() * 2 * topo.spec.h);
             let mut lens: Vec<u32> = Vec::with_capacity(group.len());
             let mut scratch: Vec<PortId> = Vec::with_capacity(2 * topo.spec.h + 1);
@@ -405,13 +492,15 @@ impl FlowSet {
                     "retrace of a dirty flow {src}->{dst} reproduced a dead-link route"
                 );
             }
-            (arena, lens)
+            (arena, lens, tc.elapsed().as_nanos() as u64)
         });
+        let trace_ns = t1.elapsed().as_nanos() as u64;
         // Splice: one ordered walk over all flows, copying clean routes
         // from the old arena and dirty routes from the sub-arenas. The
         // chunks partition the ascending dirty list consecutively, so
         // three cursors (group, len index, sub-arena position) advance
         // monotonically and the output bytes equal the serial path's.
+        let t2 = Instant::now();
         let mut out = FlowSet {
             pairs: self.pairs.clone(),
             weights: self.weights.clone(),
@@ -423,7 +512,7 @@ impl FlowSet {
         let (mut gi, mut li, mut ai) = (0usize, 0usize, 0usize);
         for f in 0..self.len() {
             if di < dirty.len() && dirty[di] == f {
-                let (arena, lens) = &traced[gi];
+                let (arena, lens, _) = &traced[gi];
                 let len = lens[li] as usize;
                 push_route_u32(&mut out.ports, &arena[ai..ai + len]);
                 di += 1;
@@ -439,7 +528,10 @@ impl FlowSet {
             }
             out.offsets.push(arena_offset(out.ports.len()));
         }
-        (out, dirty.len())
+        let splice_ns = t2.elapsed().as_nanos() as u64;
+        let chunk_ns: Vec<u64> = traced.iter().map(|t| t.2).collect();
+        let timing = RetraceTiming { dirty_scan_ns, trace_ns, splice_ns };
+        (out, dirty.len(), timing, chunk_ns)
     }
 
     /// Number of flows whose route differs between two stores over the

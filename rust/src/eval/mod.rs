@@ -42,7 +42,7 @@
 pub mod flowset;
 pub mod ladder;
 
-pub use flowset::{repair_threads, FlowSet};
+pub use flowset::{repair_threads, FlowSet, RetraceTiming};
 pub use ladder::{sample_pairs, LadderRung, LADDER};
 
 use crate::metrics::CongestionReport;

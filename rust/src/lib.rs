@@ -19,7 +19,10 @@
 //! BXI-style online fabric-manager service ([`coordinator`]: a single
 //! leader thread repairing tables incrementally through the `FlowSet`
 //! store while queries read lock-free from versioned immutable
-//! snapshots). With the `xla` cargo
+//! snapshots), and a deterministic telemetry layer ([`telemetry`]:
+//! sharded counters/histograms/span timers plus the coordinator's
+//! fabric event journal, surfaced as `--telemetry OUT.json` without
+//! perturbing any output byte). With the `xla` cargo
 //! feature, the simulation hot path runs AOT-compiled JAX/Pallas
 //! programs through PJRT (see `rust/src/runtime`); without it the exact
 //! pure-rust solvers are used.
@@ -64,6 +67,7 @@ pub mod routing;
 pub mod runtime;
 pub mod sim;
 pub mod sweep;
+pub mod telemetry;
 pub mod topology;
 pub mod util;
 pub mod workload;
@@ -84,6 +88,7 @@ pub mod prelude {
     pub use crate::routing::trace::{trace_flows, trace_route};
     pub use crate::routing::{AlgorithmKind, ForwardingTables, Router};
     pub use crate::sweep::{run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
+    pub use crate::telemetry::{BatchRecord, Journal, Registry, Telemetry};
     pub use crate::topology::{build_pgft, families, PgftSpec, Topology};
     pub use crate::workload::{Collective, GroupSpec, Job, Phase, WorkloadSpec};
 }

@@ -2,9 +2,10 @@
 //! saturation point — the standard presentation of the interconnect
 //! literature, and the `pgft netsim` CLI's output shape.
 
-use super::{run_netsim, NetsimConfig, NetsimReport};
+use super::{run_netsim_with, NetsimConfig, NetsimReport};
 use crate::eval::FlowSet;
 use crate::report::Table;
+use crate::telemetry::Telemetry;
 use crate::topology::Topology;
 use anyhow::{ensure, Result};
 
@@ -29,12 +30,26 @@ pub fn load_curve(
     cfg: &NetsimConfig,
     rates: &[f64],
 ) -> Result<Vec<NetsimReport>> {
+    load_curve_with(topo, flows, cfg, rates, &Telemetry::disabled())
+}
+
+/// [`load_curve`] with an instrumentation handle: every point of the
+/// curve records into the same registry (the CLI scopes one handle per
+/// `(algo, pattern)` so per-port counters aggregate over the rate grid
+/// of one configuration only).
+pub fn load_curve_with(
+    topo: &Topology,
+    flows: &FlowSet,
+    cfg: &NetsimConfig,
+    rates: &[f64],
+    telem: &Telemetry,
+) -> Result<Vec<NetsimReport>> {
     ensure!(!rates.is_empty(), "netsim: no injection rates to sweep");
     ensure!(
         rates.windows(2).all(|w| w[0] < w[1]),
         "netsim: injection rates must be strictly ascending: {rates:?}"
     );
-    rates.iter().map(|&r| run_netsim(topo, flows, cfg, r)).collect()
+    rates.iter().map(|&r| run_netsim_with(topo, flows, cfg, r, telem)).collect()
 }
 
 /// The default injection-rate grid: 0.05 to 1.0 in 0.05 steps.

@@ -33,6 +33,7 @@ use super::event::{Calendar, Event};
 use super::inject::draw_gap;
 use super::{NetsimConfig, NetsimReport, SATURATION_FRACTION};
 use crate::eval::FlowSet;
+use crate::telemetry::{hist_bucket, Registry, Telemetry, VecKind, HIST_BUCKETS};
 use crate::util::rng::Xoshiro256;
 use std::collections::VecDeque;
 
@@ -52,6 +53,51 @@ struct Packet {
     vc: u32,
     pushed: u32,
     delivered: u32,
+}
+
+/// Per-run instrumentation arrays. Allocated only when a live
+/// [`Telemetry`] handle is attached ([`Engine::instrument`]); the hot
+/// loop records into plain vectors (no lock, no map lookup) and
+/// `finish` folds them into the handle's registry in one merge.
+/// Everything here is keyed by simulated quantities — cycles, flits,
+/// queue depths — never wall-clock, so an instrumented run stays
+/// byte-identical to an uninstrumented one.
+struct EngineTelem {
+    handle: Telemetry,
+    /// Flits transmitted per port (final-hop transmits included).
+    port_forwarded: Vec<u64>,
+    /// Service rounds in which a port held head flits but every one
+    /// was blocked on downstream credit.
+    port_credit_stalls: Vec<u64>,
+    /// Occupancy high-water mark per (port, VC) buffer slot.
+    vc_occupancy_hwm: Vec<u64>,
+    /// Power-of-two queue-depth histogram, sampled at every push.
+    queue_depth: Vec<u64>,
+    /// Packets created per flow.
+    flow_injected_packets: Vec<u64>,
+    /// Flits delivered per flow.
+    flow_delivered_flits: Vec<u64>,
+}
+
+impl EngineTelem {
+    fn new(handle: Telemetry, num_ports: usize, vcs: usize, nf: usize) -> EngineTelem {
+        EngineTelem {
+            handle,
+            port_forwarded: vec![0; num_ports],
+            port_credit_stalls: vec![0; num_ports],
+            vc_occupancy_hwm: vec![0; num_ports * vcs],
+            queue_depth: vec![0; HIST_BUCKETS],
+            flow_injected_packets: vec![0; nf],
+            flow_delivered_flits: vec![0; nf],
+        }
+    }
+
+    /// Record one buffer push: `qi` is the (port, VC) slot, `depth`
+    /// the queue length after the push.
+    fn push_sample(&mut self, qi: usize, depth: u64) {
+        self.vc_occupancy_hwm[qi] = self.vc_occupancy_hwm[qi].max(depth);
+        self.queue_depth[hist_bucket(depth)] += 1;
+    }
 }
 
 /// Mutable simulation state over a borrowed route store.
@@ -92,6 +138,13 @@ pub(crate) struct Engine<'a> {
     accepted_flits: u64,
     flow_flits: Vec<u64>,
     latencies: Vec<(u32, u64)>,
+    // Flit-conservation accounting (always on — a handful of u64 bumps
+    // per flit event, asserted at finish in debug builds) and the
+    // optional instrumentation arrays.
+    created_flits: u64,
+    delivered_flits: u64,
+    in_flight_flits: u64,
+    telem: Option<Box<EngineTelem>>,
 }
 
 /// A finished run plus the per-flow detail the phase-sequenced runner
@@ -154,7 +207,23 @@ impl<'a> Engine<'a> {
             accepted_flits: 0,
             flow_flits: vec![0; nf],
             latencies: Vec::new(),
+            created_flits: 0,
+            delivered_flits: 0,
+            in_flight_flits: 0,
+            telem: None,
         }
+    }
+
+    /// Attach a telemetry handle. A disabled handle changes nothing —
+    /// no arrays are allocated and every record site stays a single
+    /// branch on `None`; a live one allocates the per-port, per-VC and
+    /// per-flow accumulators merged into its registry at finish.
+    pub(crate) fn instrument(mut self, telem: &Telemetry) -> Engine<'a> {
+        if telem.is_enabled() {
+            let (np, vcs, nf) = (self.service_pending.len(), self.vcs, self.flows.len());
+            self.telem = Some(Box::new(EngineTelem::new(telem.clone(), np, vcs, nf)));
+        }
+        self
     }
 
     /// Run to the horizon and summarize.
@@ -224,6 +293,9 @@ impl<'a> Engine<'a> {
                 self.packets.push(pkt);
                 self.backlog[flow].push_back(pid);
                 self.injected_packets += 1;
+                if let Some(tm) = self.telem.as_deref_mut() {
+                    tm.flow_injected_packets[flow] += 1;
+                }
             }
             self.wake_source(flow, t + 1);
             let gap = draw_gap(&mut self.rngs[flow], self.p_event);
@@ -249,6 +321,11 @@ impl<'a> Engine<'a> {
         if self.credits[qi] > 0 {
             self.credits[qi] -= 1;
             self.queues[qi].push_back(Flit { packet: pid, hop: 0 });
+            self.created_flits += 1;
+            let depth = self.queues[qi].len() as u64;
+            if let Some(tm) = self.telem.as_deref_mut() {
+                tm.push_sample(qi, depth);
+            }
             self.packets[pid as usize].pushed += 1;
             if self.packets[pid as usize].pushed == self.packet_flits {
                 self.backlog[flow].pop_front();
@@ -264,7 +341,13 @@ impl<'a> Engine<'a> {
     /// transmit time).
     fn on_arrive(&mut self, port: usize, packet: u32, hop: u16, t: u64) {
         let vc = self.packets[packet as usize].vc as usize;
-        self.queues[port * self.vcs + vc].push_back(Flit { packet, hop });
+        let qi = port * self.vcs + vc;
+        self.in_flight_flits -= 1;
+        self.queues[qi].push_back(Flit { packet, hop });
+        let depth = self.queues[qi].len() as u64;
+        if let Some(tm) = self.telem.as_deref_mut() {
+            tm.push_sample(qi, depth);
+        }
         self.wake_service(port, t + 1);
     }
 
@@ -275,6 +358,7 @@ impl<'a> Engine<'a> {
         let vcs = self.vcs;
         let base = port * vcs;
         let mut chosen: Option<usize> = None;
+        let mut saw_blocked = false;
         for i in 1..=vcs {
             let vc = (self.last_vc[port] + i) % vcs;
             let head = match self.queues[base + vc].front() {
@@ -287,6 +371,7 @@ impl<'a> Engine<'a> {
             if nh < route.len() {
                 let q = route[nh] as usize;
                 if self.credits[q * vcs + vc] == 0 {
+                    saw_blocked = true;
                     continue; // blocked on downstream credit
                 }
             }
@@ -297,18 +382,28 @@ impl<'a> Engine<'a> {
             self.last_vc[port] = vc;
             let flit = self.queues[base + vc].pop_front().expect("chosen VC has a head flit");
             self.credits[base + vc] += 1; // our slot frees as the flit leaves
+            if let Some(tm) = self.telem.as_deref_mut() {
+                tm.port_forwarded[port] += 1;
+            }
             let flow = self.packets[flit.packet as usize].flow as usize;
             let route = self.flows.route(flow);
             let nh = flit.hop as usize + 1;
             if nh < route.len() {
                 let q = route[nh] as usize;
                 self.credits[q * vcs + vc] -= 1; // reserve downstream slot
+                self.in_flight_flits += 1;
                 self.cal.schedule(
                     t + self.link_latency,
                     Event::Arrive { port: q as u32, packet: flit.packet, hop: nh as u16 },
                 );
             } else {
                 self.deliver(flit.packet, t);
+            }
+        } else if saw_blocked {
+            // Every head flit the port held was credit-blocked: one
+            // wholly stalled service round.
+            if let Some(tm) = self.telem.as_deref_mut() {
+                tm.port_credit_stalls[port] += 1;
             }
         }
         // Poll again while any VC holds flits (transmitted or blocked).
@@ -325,6 +420,10 @@ impl<'a> Engine<'a> {
         let flow = pkt.flow as usize;
         let arrival = pkt.arrival;
         let done = pkt.delivered == self.packet_flits;
+        self.delivered_flits += 1;
+        if let Some(tm) = self.telem.as_deref_mut() {
+            tm.flow_delivered_flits[flow] += 1;
+        }
         if in_window {
             self.accepted_flits += 1;
             // Per-flow throughput is measured inside the flow's own
@@ -371,6 +470,55 @@ impl<'a> Engine<'a> {
             events: self.cal.scheduled(),
             saturated: accepted < SATURATION_FRACTION * offered_aggregate,
         };
+        // Flit conservation: every injected flit is delivered, on a
+        // link (an Arrive scheduled — possibly past the horizon, where
+        // the calendar drops it), parked in a VC buffer, or still in
+        // the source backlog. The accepted/offered stats cannot see a
+        // silently dropped flit; this equality can.
+        let buffered: u64 = self.queues.iter().map(|q| q.len() as u64).sum();
+        let backlogged: u64 = self
+            .backlog
+            .iter()
+            .flat_map(|b| b.iter())
+            .map(|&pid| (self.packet_flits - self.packets[pid as usize].pushed) as u64)
+            .sum();
+        let injected_flits = self.injected_packets * self.packet_flits as u64;
+        debug_assert_eq!(
+            injected_flits,
+            self.delivered_flits + self.in_flight_flits + buffered + backlogged,
+            "flit conservation: injected == delivered + in-flight + buffered + backlogged"
+        );
+        debug_assert_eq!(
+            self.created_flits,
+            injected_flits - backlogged,
+            "created flits are exactly the injected minus the never-pushed backlog"
+        );
+        if let Some(tm) = self.telem {
+            let mut reg = Registry::default();
+            reg.add("netsim.cycles", self.warmup + self.measure + self.drain);
+            reg.add("netsim.events", report.events);
+            reg.add("netsim.packets.injected", self.injected_packets);
+            reg.add("netsim.packets.delivered", self.delivered_packets);
+            reg.add("netsim.packets.measured", report.measured_packets);
+            reg.add("netsim.flits.injected", injected_flits);
+            reg.add("netsim.flits.created", self.created_flits);
+            reg.add("netsim.flits.delivered", self.delivered_flits);
+            reg.add("netsim.flits.accepted", self.accepted_flits);
+            reg.add("netsim.flits.in_flight_end", self.in_flight_flits);
+            reg.add("netsim.flits.buffered_end", buffered);
+            reg.add("netsim.flits.backlogged_end", backlogged);
+            reg.vec_bulk("netsim.port.forwarded_flits", VecKind::Sum, &tm.port_forwarded);
+            reg.vec_bulk("netsim.port.credit_stalls", VecKind::Sum, &tm.port_credit_stalls);
+            reg.vec_bulk("netsim.vc.occupancy_hwm", VecKind::Max, &tm.vc_occupancy_hwm);
+            reg.vec_bulk(
+                "netsim.flow.injected_packets",
+                VecKind::Sum,
+                &tm.flow_injected_packets,
+            );
+            reg.vec_bulk("netsim.flow.delivered_flits", VecKind::Sum, &tm.flow_delivered_flits);
+            reg.hist_bulk("netsim.queue_depth", &tm.queue_depth);
+            tm.handle.merge_registry(&reg);
+        }
         RunDetail { report, latencies: lat }
     }
 }

@@ -50,11 +50,15 @@ pub mod event;
 pub mod inject;
 pub mod phased;
 
-pub use curve::{curve_table, default_rates, load_curve, saturation_point, CurvePoint, Saturation};
+pub use curve::{
+    curve_table, default_rates, load_curve, load_curve_with, saturation_point, CurvePoint,
+    Saturation,
+};
 pub use inject::Injection;
 pub use phased::{run_netsim_phased, PhaseNetsim, PhasedNetsimReport};
 
 use crate::eval::FlowSet;
+use crate::telemetry::Telemetry;
 use crate::topology::Topology;
 use anyhow::{ensure, Result};
 
@@ -158,13 +162,32 @@ pub fn run_netsim(
     cfg: &NetsimConfig,
     rate: f64,
 ) -> Result<NetsimReport> {
+    run_netsim_with(topo, flows, cfg, rate, &Telemetry::disabled())
+}
+
+/// [`run_netsim`] with an instrumentation handle. A disabled handle is
+/// exactly `run_netsim` (nothing allocates); a live one additionally
+/// merges the run's counters into the handle's registry — per-port
+/// forwarded flits and credit stalls, per-VC occupancy high-water
+/// marks, the queue-depth histogram, per-flow injected/delivered
+/// counts, the flit-conservation ledger, and one `netsim.run`
+/// wall-clock span. The report itself is byte-identical either way
+/// (pinned by `tests/telemetry.rs`).
+pub fn run_netsim_with(
+    topo: &Topology,
+    flows: &FlowSet,
+    cfg: &NetsimConfig,
+    rate: f64,
+    telem: &Telemetry,
+) -> Result<NetsimReport> {
     cfg.validate()?;
     ensure!(
         rate > 0.0 && rate <= 1.0,
         "netsim: offered load {rate} outside (0, 1] flits/cycle/flow"
     );
     ensure!(flows.num_active() > 0, "netsim: no active flows to simulate");
-    Ok(engine::Engine::new(topo.num_ports(), flows, cfg, rate, None).run())
+    let engine = engine::Engine::new(topo.num_ports(), flows, cfg, rate, None).instrument(telem);
+    Ok(telem.time("netsim.run", || engine.run()))
 }
 
 #[cfg(test)]

@@ -49,5 +49,5 @@ pub mod spec;
 pub use result::{
     fault_table, summaries, sweep_results_from_table, sweep_table, SweepResult, SweepSim,
 };
-pub use runner::{run_sweep, SweepOptions};
+pub use runner::{run_sweep, run_sweep_with, SweepOptions};
 pub use spec::SweepSpec;

@@ -11,6 +11,7 @@ use crate::metrics::AlgoSummary;
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
 use crate::routing::{AlgorithmKind, Router};
+use crate::telemetry::Telemetry;
 use crate::topology::{families, Topology};
 use crate::util::par;
 use crate::workload::{evaluate_makespan, lower, LoweredWorkload, WorkloadSpec, WorkloadStats};
@@ -98,6 +99,20 @@ type WlKey = (usize, AlgorithmKind, usize, usize, u64);
 /// an *unroutable* row (zeroed metrics, `routable = false`) instead of
 /// failing the grid.
 pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResult>> {
+    run_sweep_with(spec, opts, &Telemetry::disabled())
+}
+
+/// [`run_sweep`] with an instrumentation handle: each unique cell job
+/// records a `sweep.cells` count and a `sweep.cell.trace` /
+/// `sweep.cell.evaluate` / `sweep.cell.retrace` span breakdown into its
+/// own thread-local shard, merged once per cell — workers never share a
+/// lock mid-cell, and the rows stay byte-identical to an uninstrumented
+/// (or serial) run.
+pub fn run_sweep_with(
+    spec: &SweepSpec,
+    opts: &SweepOptions,
+    telem: &Telemetry,
+) -> Result<Vec<SweepResult>> {
     spec.validate()?;
 
     // Phase 1 (serial, cheap relative to cells): resolve topologies,
@@ -225,6 +240,7 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<Vec<SweepResul
             netsim_axis[ni],
             seed,
             inner_threads,
+            telem,
         )
     });
     // Phase 3b: the deduplicated workload evaluations (empty unless the
@@ -366,6 +382,42 @@ fn compute_cell(
     netsim_rate: Option<f64>,
     seed: u64,
     inner_threads: usize,
+    telem: &Telemetry,
+) -> Cell {
+    // One shard per cell: recording is lock-free inside the worker and
+    // the registry lock is taken exactly once, at the merge below.
+    let mut shard = telem.shard();
+    shard.add("sweep.cells", 1);
+    let cell = compute_cell_inner(
+        spec,
+        topo,
+        types,
+        algo,
+        pattern,
+        flows,
+        fault_model,
+        netsim_rate,
+        seed,
+        inner_threads,
+        &mut shard,
+    );
+    telem.merge(shard);
+    cell
+}
+
+#[allow(clippy::too_many_arguments)]
+fn compute_cell_inner(
+    spec: &SweepSpec,
+    topo: &Topology,
+    types: &NodeTypeMap,
+    algo: AlgorithmKind,
+    pattern: &Pattern,
+    flows: &[(u32, u32)],
+    fault_model: &FaultModel,
+    netsim_rate: Option<f64>,
+    seed: u64,
+    inner_threads: usize,
+    shard: &mut crate::telemetry::Shard,
 ) -> Cell {
     let router = algo.build(topo, Some(types), seed);
     let evaluators = cell_evaluators(spec, netsim_rate);
@@ -376,8 +428,9 @@ fn compute_cell(
         // a few KiB for the paper grids — and the uniform eval seam is
         // the point; `compute_flows` stays for true Monte-Carlo hot
         // loops like `pgft random-dist`.)
-        let pristine = FlowSet::trace(topo, &*router, flows);
-        let cells = evaluate_all(&evaluators, topo, &pristine, seed);
+        let pristine = shard.time("sweep.cell.trace", || FlowSet::trace(topo, &*router, flows));
+        let cells =
+            shard.time("sweep.cell.evaluate", || evaluate_all(&evaluators, topo, &pristine, seed));
         let rep = cells.congestion.as_ref().expect("CongestionEval always runs");
         Cell {
             summary: AlgoSummary::from_report(
@@ -431,15 +484,16 @@ fn compute_cell(
         };
         // The pristine trace happens only after the routability check,
         // so partitioned cells (early return above) never pay for it.
-        let pristine = FlowSet::trace(topo, &*router, flows);
+        let pristine = shard.time("sweep.cell.trace", || FlowSet::trace(topo, &*router, flows));
         // Incremental repair: only flows whose pristine route crosses a
         // dead link are re-traced (byte-identical to a full re-trace —
         // the FlowSet invariant pinned by tests/eval_agreement.rs). The
         // repair fans out over the cell's share of spare threads, but
         // only when the store is big enough to amortize the spawn cost.
         let threads = inner_threads.min(crate::eval::repair_threads(pristine.len()));
-        let (rerouted, routes_changed) =
-            pristine.retrace_incremental_par(topo, &faults, &degraded, threads);
+        let (rerouted, routes_changed) = shard.time("sweep.cell.retrace", || {
+            pristine.retrace_incremental_par(topo, &faults, &degraded, threads)
+        });
         debug_assert_eq!(
             routes_changed,
             pristine.diff_count(&rerouted),
@@ -447,7 +501,8 @@ fn compute_cell(
         );
         // Fault cells evaluate the *rerouted* store, so the netsim
         // columns quantify degraded-fabric latency/throughput directly.
-        let cells = evaluate_all(&evaluators, topo, &rerouted, seed);
+        let cells =
+            shard.time("sweep.cell.evaluate", || evaluate_all(&evaluators, topo, &rerouted, seed));
         let rep = cells.congestion.as_ref().expect("CongestionEval always runs");
         let retention = cells.fairrate.as_ref().map(|sim| {
             // Retention compares the degraded aggregate against the

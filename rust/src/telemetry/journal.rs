@@ -1,0 +1,183 @@
+//! The fabric event journal: a bounded ring of per-batch repair
+//! records the coordinator leader appends to on every mutation and
+//! exposes read-only through
+//! [`FabricSnapshot`](crate::coordinator::FabricSnapshot).
+//!
+//! The journal is always on — the leader already pays an `Instant`
+//! read per batch for `last_reroute_micros`, and a fixed-capacity ring
+//! of plain-old-data records costs nothing detectable next to a
+//! retrace — so a `cascade:4` drill can always be decomposed into its
+//! per-phase timings after the fact, without re-running it
+//! instrumented. The bound ([`JOURNAL_CAP`]) keeps a long-lived
+//! coordinator's memory flat: the ring holds the most recent records
+//! and silently sheds the oldest.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+/// Default journal capacity (records kept before the oldest is shed).
+pub const JOURNAL_CAP: usize = 256;
+
+/// What kind of mutation a journal record describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchKind {
+    /// An incremental fault repair (link up/down batch).
+    Repair,
+    /// A full rebuild (algorithm switch).
+    Rebuild,
+    /// A batch that emptied the fault set: pristine state restored
+    /// from cache, no retrace ran.
+    Restore,
+}
+
+impl fmt::Display for BatchKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BatchKind::Repair => "repair",
+            BatchKind::Rebuild => "rebuild",
+            BatchKind::Restore => "restore",
+        })
+    }
+}
+
+/// One leader mutation, decomposed into its phases. Every duration is
+/// wall-clock nanoseconds (the journal is diagnostic — nothing
+/// deterministic reads it); every count is exact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchRecord {
+    /// What the mutation was.
+    pub kind: BatchKind,
+    /// Link events coalesced into this batch.
+    pub events: usize,
+    /// Dead links after the batch was folded in.
+    pub dead_links: usize,
+    /// Flows the dirty scan marked for re-trace (0 for restores).
+    pub dirty_flows: usize,
+    /// Flows whose routes changed against the previously published
+    /// store.
+    pub routes_changed: usize,
+    /// LFT entries that differ from the previously published tables.
+    pub diff_entries: usize,
+    /// Folding the event batch into the fault set.
+    pub coalesce_ns: u64,
+    /// Scanning the route store for flows crossing dead links.
+    pub dirty_scan_ns: u64,
+    /// Re-tracing the dirty flows (including the ordered splice).
+    pub retrace_ns: u64,
+    /// Rebuilding the forwarding tables.
+    pub tables_ns: u64,
+    /// Diffing the new store/tables against the published ones.
+    pub diff_ns: u64,
+    /// Publishing the new snapshot into the cell.
+    pub publish_ns: u64,
+}
+
+impl BatchRecord {
+    /// Total recorded time across every phase (nanoseconds).
+    pub fn total_ns(&self) -> u64 {
+        self.coalesce_ns
+            + self.dirty_scan_ns
+            + self.retrace_ns
+            + self.tables_ns
+            + self.diff_ns
+            + self.publish_ns
+    }
+}
+
+/// The bounded ring buffer of [`BatchRecord`]s.
+#[derive(Clone, Debug, Default)]
+pub struct Journal {
+    cap: usize,
+    buf: VecDeque<BatchRecord>,
+}
+
+impl Journal {
+    /// An empty journal keeping at most `cap` records (`cap` is capped
+    /// below by 1 — a zero-capacity journal would silently drop
+    /// everything).
+    pub fn new(cap: usize) -> Journal {
+        Journal { cap: cap.max(1), buf: VecDeque::new() }
+    }
+
+    /// Append a record, shedding the oldest when full.
+    pub fn push(&mut self, rec: BatchRecord) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(rec);
+    }
+
+    /// The retained records, oldest first.
+    pub fn records(&self) -> Vec<BatchRecord> {
+        self.buf.iter().cloned().collect()
+    }
+
+    /// Number of retained records.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been journalled (or everything was shed).
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The retention bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(events: usize) -> BatchRecord {
+        BatchRecord {
+            kind: BatchKind::Repair,
+            events,
+            dead_links: 1,
+            dirty_flows: 2,
+            routes_changed: 3,
+            diff_entries: 4,
+            coalesce_ns: 1,
+            dirty_scan_ns: 2,
+            retrace_ns: 3,
+            tables_ns: 4,
+            diff_ns: 5,
+            publish_ns: 6,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_in_order() {
+        let mut j = Journal::new(3);
+        assert!(j.is_empty());
+        for i in 0..5 {
+            j.push(rec(i));
+        }
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.capacity(), 3);
+        let evs: Vec<usize> = j.records().iter().map(|r| r.events).collect();
+        assert_eq!(evs, vec![2, 3, 4], "oldest shed, order preserved");
+    }
+
+    #[test]
+    fn total_sums_phases() {
+        assert_eq!(rec(0).total_ns(), 21);
+    }
+
+    #[test]
+    fn kind_labels() {
+        assert_eq!(BatchKind::Repair.to_string(), "repair");
+        assert_eq!(BatchKind::Rebuild.to_string(), "rebuild");
+        assert_eq!(BatchKind::Restore.to_string(), "restore");
+    }
+
+    #[test]
+    fn zero_capacity_clamped() {
+        let mut j = Journal::new(0);
+        j.push(rec(9));
+        assert_eq!(j.len(), 1);
+    }
+}

@@ -1,0 +1,549 @@
+//! The metric store: named counters, maxima, indexed vectors,
+//! power-of-two histograms and wall-clock span statistics, with the
+//! sharded recording surface that keeps `par_map` workers off any
+//! shared lock.
+//!
+//! # Determinism rules
+//!
+//! Metrics that feed *outputs* (CSV cells, asserted counters, the
+//! python cross-check) must be keyed by simulated quantities only —
+//! simulated cycles, flit counts, queue depths. Wall-clock time is
+//! quarantined in [`SpanStat`]s, which are reported but never compared
+//! or folded into deterministic results. The merge operations below
+//! (sum, max, element-wise sum/max) are all commutative and
+//! associative over `u64`, so counter totals are identical whatever
+//! thread count or merge order produced them — `tests/telemetry.rs`
+//! pins sharded merge ≡ serial recording.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Number of power-of-two histogram buckets: bucket 0 holds the value
+/// 0 and bucket `b ≥ 1` holds values in `[2^(b−1), 2^b)`, so bucket 64
+/// tops out the `u64` range and no sample can overflow the fixed
+/// layout.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Bucket index of a histogram sample (see [`HIST_BUCKETS`]).
+#[inline]
+pub fn hist_bucket(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// How the elements of a [`VectorMetric`] combine across shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VecKind {
+    /// Element-wise sum (e.g. per-port forwarded flits).
+    #[default]
+    Sum,
+    /// Element-wise maximum (e.g. per-VC occupancy high-water marks).
+    Max,
+}
+
+impl VecKind {
+    /// The lower-case label the JSON report emits (`sum` / `max`).
+    pub fn label(self) -> &'static str {
+        match self {
+            VecKind::Sum => "sum",
+            VecKind::Max => "max",
+        }
+    }
+}
+
+/// A dense `u64` vector metric indexed by a small integer key (port,
+/// VC slot, flow index). Shards resize lazily; merging aligns lengths.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct VectorMetric {
+    /// Merge rule for the elements.
+    pub kind: VecKind,
+    /// The element values (index = the metric's integer key).
+    pub values: Vec<u64>,
+}
+
+/// A fixed-layout power-of-two histogram (see [`hist_bucket`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    /// Total number of samples observed.
+    pub count: u64,
+    /// One slot per bucket, always [`HIST_BUCKETS`] long.
+    pub buckets: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { count: 0, buckets: vec![0; HIST_BUCKETS] }
+    }
+}
+
+/// Aggregated wall-clock figures of one named span. Wall-clock is
+/// non-deterministic by nature; spans are reported for humans and
+/// benches, never folded into deterministic outputs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanStat {
+    /// Number of completed spans.
+    pub count: u64,
+    /// Summed duration in nanoseconds.
+    pub total_ns: u64,
+    /// Longest single span in nanoseconds.
+    pub max_ns: u64,
+}
+
+/// The merged metric store: every family keyed by name in a `BTreeMap`
+/// so iteration (and therefore every emitted report) is byte-ordered
+/// and reproducible.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    maxima: BTreeMap<String, u64>,
+    vectors: BTreeMap<String, VectorMetric>,
+    histograms: BTreeMap<String, Histogram>,
+    spans: BTreeMap<String, SpanStat>,
+}
+
+impl Registry {
+    /// Add `v` to the named counter (created at 0).
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_default() += v;
+    }
+
+    /// Raise the named maximum to at least `v`.
+    pub fn record_max(&mut self, name: &str, v: u64) {
+        let slot = self.maxima.entry(name.to_string()).or_default();
+        *slot = (*slot).max(v);
+    }
+
+    /// Observe one sample in the named power-of-two histogram.
+    pub fn observe(&mut self, name: &str, v: u64) {
+        let h = self.histograms.entry(name.to_string()).or_default();
+        h.count += 1;
+        h.buckets[hist_bucket(v)] += 1;
+    }
+
+    /// Add `v` to element `idx` of the named [`VecKind::Sum`] vector.
+    pub fn vec_add(&mut self, name: &str, idx: usize, v: u64) {
+        let m = self.vectors.entry(name.to_string()).or_default();
+        m.kind = VecKind::Sum;
+        if m.values.len() <= idx {
+            m.values.resize(idx + 1, 0);
+        }
+        m.values[idx] += v;
+    }
+
+    /// Raise element `idx` of the named [`VecKind::Max`] vector to at
+    /// least `v`.
+    pub fn vec_max(&mut self, name: &str, idx: usize, v: u64) {
+        let m = self.vectors.entry(name.to_string()).or_default();
+        m.kind = VecKind::Max;
+        if m.values.len() <= idx {
+            m.values.resize(idx + 1, 0);
+        }
+        m.values[idx] = m.values[idx].max(v);
+    }
+
+    /// Record one completed span of `ns` nanoseconds under `name`.
+    pub fn span_ns(&mut self, name: &str, ns: u64) {
+        let s = self.spans.entry(name.to_string()).or_default();
+        s.count += 1;
+        s.total_ns += ns;
+        s.max_ns = s.max_ns.max(ns);
+    }
+
+    /// Install a whole pre-built [`VecKind::Sum`] vector at once (the
+    /// netsim engine accumulates into plain arrays in its hot loop and
+    /// hands them over in one call at the end of the run).
+    pub fn vec_bulk(&mut self, name: &str, kind: VecKind, values: &[u64]) {
+        let other = VectorMetric { kind, values: values.to_vec() };
+        merge_vector(self.vectors.entry(name.to_string()).or_default(), &other);
+    }
+
+    /// Install pre-accumulated histogram buckets at once (the buckets
+    /// slice must use the [`HIST_BUCKETS`] layout). The sample count is
+    /// recovered as the bucket sum.
+    pub fn hist_bulk(&mut self, name: &str, buckets: &[u64]) {
+        debug_assert_eq!(buckets.len(), HIST_BUCKETS, "fixed power-of-two layout");
+        let h = self.histograms.entry(name.to_string()).or_default();
+        for (m, o) in h.buckets.iter_mut().zip(buckets) {
+            *m += o;
+            h.count += o;
+        }
+    }
+
+    /// Fold `other` into `self`: counters sum, maxima max, vectors
+    /// merge element-wise by kind, histograms add bucket-wise, spans
+    /// accumulate. All rules are commutative and associative, so merge
+    /// order cannot influence totals.
+    pub fn merge_from(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_default() += v;
+        }
+        for (k, v) in &other.maxima {
+            let slot = self.maxima.entry(k.clone()).or_default();
+            *slot = (*slot).max(*v);
+        }
+        for (k, v) in &other.vectors {
+            merge_vector(self.vectors.entry(k.clone()).or_default(), v);
+        }
+        for (k, h) in &other.histograms {
+            let mine = self.histograms.entry(k.clone()).or_default();
+            mine.count += h.count;
+            for (m, o) in mine.buckets.iter_mut().zip(&h.buckets) {
+                *m += o;
+            }
+        }
+        for (k, s) in &other.spans {
+            let mine = self.spans.entry(k.clone()).or_default();
+            mine.count += s.count;
+            mine.total_ns += s.total_ns;
+            mine.max_ns = mine.max_ns.max(s.max_ns);
+        }
+    }
+
+    /// The named counter's value (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// All counters, name-ordered.
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    /// All maxima, name-ordered.
+    pub fn maxima(&self) -> &BTreeMap<String, u64> {
+        &self.maxima
+    }
+
+    /// All vector metrics, name-ordered.
+    pub fn vectors(&self) -> &BTreeMap<String, VectorMetric> {
+        &self.vectors
+    }
+
+    /// All histograms, name-ordered.
+    pub fn histograms(&self) -> &BTreeMap<String, Histogram> {
+        &self.histograms
+    }
+
+    /// All span statistics, name-ordered.
+    pub fn spans(&self) -> &BTreeMap<String, SpanStat> {
+        &self.spans
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+            && self.maxima.is_empty()
+            && self.vectors.is_empty()
+            && self.histograms.is_empty()
+            && self.spans.is_empty()
+    }
+}
+
+fn merge_vector(mine: &mut VectorMetric, other: &VectorMetric) {
+    debug_assert!(
+        mine.values.is_empty() || mine.kind == other.kind,
+        "vector metric merged under conflicting kinds"
+    );
+    mine.kind = other.kind;
+    if mine.values.len() < other.values.len() {
+        mine.values.resize(other.values.len(), 0);
+    }
+    for (i, v) in other.values.iter().enumerate() {
+        match other.kind {
+            VecKind::Sum => mine.values[i] += v,
+            VecKind::Max => mine.values[i] = mine.values[i].max(*v),
+        }
+    }
+}
+
+/// A private per-worker recording surface: writes go into a local
+/// [`Registry`] with no synchronization at all, and the whole shard is
+/// folded into the shared handle **once** at scope exit via
+/// [`Telemetry::merge`]. When the parent handle is disabled the shard
+/// is dead (`live == false`) and every record call is a branch on a
+/// bool — nothing allocates, nothing locks.
+#[derive(Debug, Default)]
+pub struct Shard {
+    live: bool,
+    reg: Registry,
+}
+
+impl Shard {
+    pub(crate) fn new(live: bool) -> Shard {
+        Shard { live, reg: Registry::default() }
+    }
+
+    /// Whether the parent handle was enabled when the shard was cut.
+    pub fn is_live(&self) -> bool {
+        self.live
+    }
+
+    /// Add `v` to the named counter.
+    pub fn add(&mut self, name: &str, v: u64) {
+        if self.live {
+            self.reg.add(name, v);
+        }
+    }
+
+    /// Raise the named maximum to at least `v`.
+    pub fn record_max(&mut self, name: &str, v: u64) {
+        if self.live {
+            self.reg.record_max(name, v);
+        }
+    }
+
+    /// Observe one histogram sample.
+    pub fn observe(&mut self, name: &str, v: u64) {
+        if self.live {
+            self.reg.observe(name, v);
+        }
+    }
+
+    /// Add `v` to element `idx` of the named sum-vector.
+    pub fn vec_add(&mut self, name: &str, idx: usize, v: u64) {
+        if self.live {
+            self.reg.vec_add(name, idx, v);
+        }
+    }
+
+    /// Raise element `idx` of the named max-vector to at least `v`.
+    pub fn vec_max(&mut self, name: &str, idx: usize, v: u64) {
+        if self.live {
+            self.reg.vec_max(name, idx, v);
+        }
+    }
+
+    /// Record one completed span of `ns` nanoseconds.
+    pub fn span_ns(&mut self, name: &str, ns: u64) {
+        if self.live {
+            self.reg.span_ns(name, ns);
+        }
+    }
+
+    /// Time `f` under the named span. Disabled shards run `f` without
+    /// touching the clock.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        if !self.live {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        self.reg.span_ns(name, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    /// The shard's private registry (consumed by [`Telemetry::merge`]).
+    pub(crate) fn into_registry(self) -> Registry {
+        self.reg
+    }
+}
+
+/// The cloneable instrumentation handle. A disabled handle (the
+/// default, and what every un-instrumented caller passes) carries no
+/// allocation at all — every operation is one `Option` check, so
+/// instrumented hot paths cost nothing in normal runs. An enabled
+/// handle shares one mutex-guarded [`Registry`]; hot loops should
+/// record through a [`Shard`] (or private arrays) and merge once.
+///
+/// ```
+/// use pgft::telemetry::Telemetry;
+/// let t = Telemetry::enabled();
+/// t.add("demo.count", 3);
+/// let mut shard = t.shard();
+/// shard.add("demo.count", 4);
+/// t.merge(shard);
+/// assert_eq!(t.snapshot().counter("demo.count"), 7);
+/// assert_eq!(Telemetry::disabled().snapshot().counter("demo.count"), 0);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<Mutex<Registry>>>,
+}
+
+impl Telemetry {
+    /// A live handle with a fresh empty registry.
+    pub fn enabled() -> Telemetry {
+        Telemetry { inner: Some(Arc::new(Mutex::new(Registry::default()))) }
+    }
+
+    /// The inert handle: every operation is a no-op after one cheap
+    /// check (same as `Telemetry::default()`).
+    pub fn disabled() -> Telemetry {
+        Telemetry { inner: None }
+    }
+
+    /// Whether recording is live.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut Registry) -> R) -> Option<R> {
+        self.inner.as_ref().map(|m| {
+            // Same poisoning policy as `coordinator::SnapshotCell`: a
+            // panicked recorder does not invalidate counters.
+            let mut g = m.lock().unwrap_or_else(|e| e.into_inner());
+            f(&mut g)
+        })
+    }
+
+    /// Cut a recording shard (live iff this handle is enabled).
+    pub fn shard(&self) -> Shard {
+        Shard::new(self.is_enabled())
+    }
+
+    /// Fold a shard's records into the shared registry (one lock).
+    pub fn merge(&self, shard: Shard) {
+        if shard.is_live() {
+            let reg = shard.into_registry();
+            self.with(|r| r.merge_from(&reg));
+        }
+    }
+
+    /// Fold a pre-built registry into the shared one (one lock).
+    pub fn merge_registry(&self, reg: &Registry) {
+        self.with(|r| r.merge_from(reg));
+    }
+
+    /// Add `v` to the named counter (locks; fine on cold paths).
+    pub fn add(&self, name: &str, v: u64) {
+        self.with(|r| r.add(name, v));
+    }
+
+    /// Raise the named maximum to at least `v`.
+    pub fn record_max(&self, name: &str, v: u64) {
+        self.with(|r| r.record_max(name, v));
+    }
+
+    /// Observe one histogram sample.
+    pub fn observe(&self, name: &str, v: u64) {
+        self.with(|r| r.observe(name, v));
+    }
+
+    /// Record one completed span of `ns` nanoseconds.
+    pub fn span_ns(&self, name: &str, ns: u64) {
+        self.with(|r| r.span_ns(name, ns));
+    }
+
+    /// Time `f` under the named span; disabled handles never touch the
+    /// clock.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        if !self.is_enabled() {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        self.span_ns(name, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    /// A point-in-time copy of the merged registry (empty for disabled
+    /// handles).
+    pub fn snapshot(&self) -> Registry {
+        self.with(|r| r.clone()).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(hist_bucket(0), 0);
+        assert_eq!(hist_bucket(1), 1);
+        assert_eq!(hist_bucket(2), 2);
+        assert_eq!(hist_bucket(3), 2);
+        assert_eq!(hist_bucket(4), 3);
+        assert_eq!(hist_bucket(1023), 10);
+        assert_eq!(hist_bucket(1024), 11);
+        assert_eq!(hist_bucket(u64::MAX), 64);
+    }
+
+    #[test]
+    fn merge_rules_per_family() {
+        let mut a = Registry::default();
+        a.add("c", 2);
+        a.record_max("m", 5);
+        a.vec_add("vs", 1, 3);
+        a.vec_max("vm", 0, 9);
+        a.observe("h", 4);
+        a.span_ns("s", 100);
+        let mut b = Registry::default();
+        b.add("c", 3);
+        b.record_max("m", 4);
+        b.vec_add("vs", 3, 1);
+        b.vec_max("vm", 0, 7);
+        b.observe("h", 0);
+        b.span_ns("s", 250);
+        a.merge_from(&b);
+        assert_eq!(a.counter("c"), 5);
+        assert_eq!(a.maxima()["m"], 5);
+        assert_eq!(a.vectors()["vs"].values, vec![0, 3, 0, 1]);
+        assert_eq!(a.vectors()["vm"].values, vec![9]);
+        let h = &a.histograms()["h"];
+        assert_eq!((h.count, h.buckets[3], h.buckets[0]), (2, 1, 1));
+        let s = a.spans()["s"];
+        assert_eq!((s.count, s.total_ns, s.max_ns), (2, 350, 250));
+    }
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let t = Telemetry::disabled();
+        assert!(!t.is_enabled());
+        t.add("x", 1);
+        t.observe("h", 2);
+        let mut s = t.shard();
+        assert!(!s.is_live());
+        s.add("x", 5);
+        assert_eq!(s.time("span", || 41 + 1), 42);
+        t.merge(s);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn sharded_merge_equals_direct_recording() {
+        let direct = Telemetry::enabled();
+        for i in 0..10u64 {
+            direct.add("c", i);
+            direct.observe("h", i);
+        }
+        let sharded = Telemetry::enabled();
+        let mut s1 = sharded.shard();
+        let mut s2 = sharded.shard();
+        for i in 0..5u64 {
+            s1.add("c", i);
+            s1.observe("h", i);
+        }
+        for i in 5..10u64 {
+            s2.add("c", i);
+            s2.observe("h", i);
+        }
+        // Merge order must not matter.
+        sharded.merge(s2);
+        sharded.merge(s1);
+        assert_eq!(direct.snapshot(), sharded.snapshot());
+    }
+
+    #[test]
+    fn clones_share_one_registry() {
+        let t = Telemetry::enabled();
+        let u = t.clone();
+        u.add("c", 7);
+        assert_eq!(t.snapshot().counter("c"), 7);
+    }
+
+    #[test]
+    fn bulk_vector_install_merges() {
+        let mut r = Registry::default();
+        r.vec_bulk("p", VecKind::Sum, &[1, 2]);
+        r.vec_bulk("p", VecKind::Sum, &[0, 1, 4]);
+        assert_eq!(r.vectors()["p"].values, vec![1, 3, 4]);
+        r.vec_bulk("q", VecKind::Max, &[3, 1]);
+        r.vec_bulk("q", VecKind::Max, &[2, 5]);
+        assert_eq!(r.vectors()["q"].values, vec![3, 5]);
+    }
+}

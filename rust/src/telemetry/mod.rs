@@ -1,0 +1,50 @@
+//! Deterministic-safe instrumentation: counters, histograms, span
+//! timers, and the coordinator's fabric event journal.
+//!
+//! The paper's argument is about *where* flits and cycles go, but
+//! until this module the codebase could only report end results (C_p,
+//! fair rates, saturation verdicts). This subsystem makes the four
+//! load-bearing layers observable — the netsim engine (per-port
+//! forwarded flits, per-VC occupancy high-water marks, credit-stall
+//! counts, queue-depth histograms), the eval pipeline (retrace
+//! dirty-flow counts and phase timings), the sweep runner (per-cell
+//! trace/evaluate/retrace breakdown) and the coordinator leader (the
+//! per-batch repair [`Journal`]) — without perturbing a single output
+//! byte.
+//!
+//! Three rules keep it deterministic and free when unused:
+//!
+//!  * **Disabled means free.** [`Telemetry`] is a cloneable handle
+//!    around `Option<Arc<Mutex<Registry>>>`; the disabled handle is
+//!    `None` and every operation is one branch. Hot loops additionally
+//!    record into plain local arrays or [`Shard`]s and merge once, so
+//!    the instrumented netsim event loop costs nothing measurable with
+//!    telemetry off (pinned by the bench smoke).
+//!  * **Sharded recording, commutative merge.** `par_map` workers
+//!    never share a lock: each records into a private [`Shard`] and
+//!    the shard is folded in at scope exit. All merge rules (sum, max,
+//!    element-wise sum/max, bucket-wise sum) are commutative and
+//!    associative, so counter totals are thread-count-invariant.
+//!  * **Simulated-cycle keys only in deterministic paths.** Anything
+//!    that can feed an output or an assertion is keyed by simulated
+//!    quantities (cycles, flits, queue depths). Wall-clock lives only
+//!    in [`SpanStat`]s and the journal's phase timings, which are
+//!    diagnostic.
+//!
+//! `--telemetry OUT.json` on the `sweep`, `netsim`, `eval` and
+//! `fabric` subcommands emits the [`report`] module's
+//! `pgft-telemetry/1` document (no-null discipline, `host_cpus`
+//! provenance) plus a stderr summary table;
+//! `python/tools/check_telemetry.py` cross-checks the netsim flit
+//! counters against the golden Python pipeline.
+
+pub mod journal;
+pub mod metrics;
+pub mod report;
+
+pub use journal::{BatchKind, BatchRecord, Journal, JOURNAL_CAP};
+pub use metrics::{
+    hist_bucket, Histogram, Registry, Shard, SpanStat, Telemetry, VecKind, VectorMetric,
+    HIST_BUCKETS,
+};
+pub use report::{summary_table, telemetry_json, write_telemetry, TelemetryRun};

@@ -1,0 +1,316 @@
+//! The `pgft-telemetry/1` JSON emitter and the human stderr summary.
+//!
+//! Discipline matches `BENCH_eval.json` schema-v2: a `schema` tag, a
+//! `host_cpus` provenance field, and **no null anywhere** — an absent
+//! measurement is simply not a key, and empty collections are empty
+//! objects/arrays. Everything is hand-formatted (the crate carries no
+//! serde); all maps iterate in `BTreeMap` order so the document is
+//! byte-deterministic for a given registry state (span durations are
+//! wall-clock and vary run to run — the *shape* is what is stable).
+
+use super::journal::BatchRecord;
+use super::metrics::Registry;
+use crate::report::Table;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One labelled registry inside a telemetry document. A `pgft netsim`
+/// emission carries one run per `(algo, pattern)` curve — the whole
+/// rate grid merges into it, and the rate list rides in the label — so
+/// per-port counters are never summed across unrelated configurations;
+/// the other subcommands carry a single run with an empty label.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryRun {
+    /// Label keys identifying the run (e.g. `algo`, `pattern`,
+    /// `rate`), emitted in key order; empty for single-run commands.
+    pub label: BTreeMap<String, String>,
+    /// The merged metrics of the run.
+    pub registry: Registry,
+}
+
+impl TelemetryRun {
+    /// An unlabelled run around a registry snapshot.
+    pub fn unlabelled(registry: Registry) -> TelemetryRun {
+        TelemetryRun { label: BTreeMap::new(), registry }
+    }
+
+    /// A short human name for the run (`k=v` pairs, or `all`).
+    pub fn name(&self) -> String {
+        if self.label.is_empty() {
+            "all".to_string()
+        } else {
+            self.label.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" ")
+        }
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut o = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(o, "\\u{:04x}", c as u32);
+            }
+            c => o.push(c),
+        }
+    }
+    o
+}
+
+fn map_json<V, F: Fn(&V) -> String>(map: &BTreeMap<String, V>, indent: &str, val: F) -> String {
+    if map.is_empty() {
+        return "{}".to_string();
+    }
+    let inner: Vec<String> =
+        map.iter().map(|(k, v)| format!("{indent}  \"{}\": {}", esc(k), val(v))).collect();
+    format!("{{\n{}\n{indent}}}", inner.join(",\n"))
+}
+
+fn u64s_json(values: &[u64]) -> String {
+    let body: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", body.join(", "))
+}
+
+fn run_json(run: &TelemetryRun) -> String {
+    let r = &run.registry;
+    let label = map_json(&run.label, "      ", |v: &String| format!("\"{}\"", esc(v)));
+    let counters = map_json(r.counters(), "      ", |v: &u64| v.to_string());
+    let maxima = map_json(r.maxima(), "      ", |v: &u64| v.to_string());
+    let vectors = map_json(r.vectors(), "      ", |m: &super::VectorMetric| {
+        format!("{{\"kind\": \"{}\", \"values\": {}}}", m.kind.label(), u64s_json(&m.values))
+    });
+    let histograms = map_json(r.histograms(), "      ", |h: &super::Histogram| {
+        // Only populated buckets, as [bucket, count] pairs: fixed
+        // 65-slot layouts are mostly zeros and zeros are noise.
+        let pairs: Vec<String> = h
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(b, &c)| format!("[{b}, {c}]"))
+            .collect();
+        format!("{{\"count\": {}, \"buckets\": [{}]}}", h.count, pairs.join(", "))
+    });
+    let spans = map_json(r.spans(), "      ", |s: &super::SpanStat| {
+        format!(
+            "{{\"count\": {}, \"total_ns\": {}, \"max_ns\": {}}}",
+            s.count, s.total_ns, s.max_ns
+        )
+    });
+    format!(
+        "    {{\n      \"label\": {label},\n      \"counters\": {counters},\n      \
+         \"maxima\": {maxima},\n      \"vectors\": {vectors},\n      \
+         \"histograms\": {histograms},\n      \"spans\": {spans}\n    }}"
+    )
+}
+
+fn journal_json(records: &[BatchRecord]) -> String {
+    if records.is_empty() {
+        return "[]".to_string();
+    }
+    let lines: Vec<String> = records
+        .iter()
+        .map(|b| {
+            format!(
+                "    {{\"kind\": \"{}\", \"events\": {}, \"dead_links\": {}, \
+                 \"dirty_flows\": {}, \"routes_changed\": {}, \"diff_entries\": {}, \
+                 \"coalesce_ns\": {}, \"dirty_scan_ns\": {}, \"retrace_ns\": {}, \
+                 \"tables_ns\": {}, \"diff_ns\": {}, \"publish_ns\": {}}}",
+                b.kind,
+                b.events,
+                b.dead_links,
+                b.dirty_flows,
+                b.routes_changed,
+                b.diff_entries,
+                b.coalesce_ns,
+                b.dirty_scan_ns,
+                b.retrace_ns,
+                b.tables_ns,
+                b.diff_ns,
+                b.publish_ns
+            )
+        })
+        .collect();
+    format!("[\n{}\n  ]", lines.join(",\n"))
+}
+
+/// Render a full `pgft-telemetry/1` document. `command` names the
+/// emitting subcommand; `journal` is empty for everything but
+/// `fabric`. No field is ever `null`.
+pub fn telemetry_json(command: &str, runs: &[TelemetryRun], journal: &[BatchRecord]) -> String {
+    let runs_body = if runs.is_empty() {
+        "[]".to_string()
+    } else {
+        let items: Vec<String> = runs.iter().map(run_json).collect();
+        format!("[\n{}\n  ]", items.join(",\n"))
+    };
+    format!(
+        "{{\n  \"schema\": \"pgft-telemetry/1\",\n  \"command\": \"{}\",\n  \
+         \"host_cpus\": {},\n  \"runs\": {},\n  \"journal\": {}\n}}\n",
+        esc(command),
+        crate::util::par::max_threads(),
+        runs_body,
+        journal_json(journal)
+    )
+}
+
+/// Write a `pgft-telemetry/1` document to `path`.
+pub fn write_telemetry(
+    path: impl AsRef<Path>,
+    command: &str,
+    runs: &[TelemetryRun],
+    journal: &[BatchRecord],
+) -> Result<()> {
+    let body = telemetry_json(command, runs, journal);
+    std::fs::write(path.as_ref(), body)
+        .with_context(|| format!("write telemetry {}", path.as_ref().display()))
+}
+
+/// The stderr summary: one row per metric per run (and one per journal
+/// record), so a human can read the headline figures without opening
+/// the JSON.
+pub fn summary_table(runs: &[TelemetryRun], journal: &[BatchRecord]) -> Table {
+    let mut t = Table::new("telemetry summary", &["run", "metric", "kind", "value"]);
+    for run in runs {
+        let name = run.name();
+        let r = &run.registry;
+        for (k, v) in r.counters() {
+            t.row(&[name.clone(), k.clone(), "counter".into(), v.to_string()]);
+        }
+        for (k, v) in r.maxima() {
+            t.row(&[name.clone(), k.clone(), "max".into(), v.to_string()]);
+        }
+        for (k, m) in r.vectors() {
+            let sum: u64 = m.values.iter().sum();
+            let peak = m.values.iter().copied().max().unwrap_or(0);
+            t.row(&[
+                name.clone(),
+                k.clone(),
+                format!("vec/{}", m.kind.label()),
+                format!("len={} sum={sum} peak={peak}", m.values.len()),
+            ]);
+        }
+        for (k, h) in r.histograms() {
+            let top = h.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
+            t.row(&[
+                name.clone(),
+                k.clone(),
+                "hist".into(),
+                format!("count={} top_bucket={top}", h.count),
+            ]);
+        }
+        for (k, s) in r.spans() {
+            t.row(&[
+                name.clone(),
+                k.clone(),
+                "span".into(),
+                format!(
+                    "count={} total_us={} max_us={}",
+                    s.count,
+                    s.total_ns / 1_000,
+                    s.max_ns / 1_000
+                ),
+            ]);
+        }
+    }
+    for (i, b) in journal.iter().enumerate() {
+        t.row(&[
+            format!("journal[{i}]"),
+            b.kind.to_string(),
+            "batch".into(),
+            format!(
+                "events={} dirty={} changed={} retrace_us={} total_us={}",
+                b.events,
+                b.dirty_flows,
+                b.routes_changed,
+                b.retrace_ns / 1_000,
+                b.total_ns() / 1_000
+            ),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{BatchKind, VecKind};
+
+    fn sample_run() -> TelemetryRun {
+        let mut r = Registry::default();
+        r.add("netsim.events", 42);
+        r.record_max("netsim.peak", 9);
+        r.vec_bulk("netsim.port.forwarded_flits", VecKind::Sum, &[3, 0, 5]);
+        r.observe("netsim.queue_depth", 4);
+        r.span_ns("netsim.run", 1_500);
+        let mut label = BTreeMap::new();
+        label.insert("algo".to_string(), "dmodk".to_string());
+        TelemetryRun { label, registry: r }
+    }
+
+    fn sample_journal() -> Vec<BatchRecord> {
+        vec![BatchRecord {
+            kind: BatchKind::Repair,
+            events: 4,
+            dead_links: 4,
+            dirty_flows: 10,
+            routes_changed: 6,
+            diff_entries: 3,
+            coalesce_ns: 1,
+            dirty_scan_ns: 2,
+            retrace_ns: 3,
+            tables_ns: 4,
+            diff_ns: 5,
+            publish_ns: 6,
+        }]
+    }
+
+    #[test]
+    fn document_shape_and_no_nulls() {
+        let doc = telemetry_json("netsim", &[sample_run()], &sample_journal());
+        assert!(doc.contains("\"schema\": \"pgft-telemetry/1\""), "{doc}");
+        assert!(doc.contains("\"command\": \"netsim\""));
+        assert!(doc.contains("\"host_cpus\": "));
+        assert!(doc.contains("\"algo\": \"dmodk\""));
+        assert!(doc.contains("\"netsim.events\": 42"));
+        assert!(doc.contains("\"kind\": \"sum\", \"values\": [3, 0, 5]"));
+        assert!(doc.contains("\"buckets\": [[3, 1]]"), "{doc}");
+        assert!(doc.contains("\"kind\": \"repair\""));
+        assert!(!doc.contains("null"), "no-null discipline: {doc}");
+    }
+
+    #[test]
+    fn empty_document_is_valid_and_null_free() {
+        let doc = telemetry_json("sweep", &[], &[]);
+        assert!(doc.contains("\"runs\": []"));
+        assert!(doc.contains("\"journal\": []"));
+        assert!(!doc.contains("null"));
+    }
+
+    #[test]
+    fn summary_rows_cover_every_family() {
+        let t = summary_table(&[sample_run()], &sample_journal());
+        let text = t.to_text();
+        assert!(text.contains("netsim.events"), "{text}");
+        assert!(text.contains("vec/sum"));
+        assert!(text.contains("hist"));
+        assert!(text.contains("span"));
+        assert!(text.contains("journal[0]"));
+        assert_eq!(t.rows.len(), 6);
+    }
+
+    #[test]
+    fn write_roundtrips_to_disk() {
+        let dir = std::env::temp_dir().join("pgft_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        write_telemetry(&p, "eval", &[sample_run()], &[]).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("pgft-telemetry/1"));
+    }
+}

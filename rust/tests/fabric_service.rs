@@ -286,10 +286,11 @@ fn bench_fabric_seed_record_is_well_formed() {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_fabric.json");
     let body = std::fs::read_to_string(path).expect("BENCH_fabric.json is committed");
     for key in [
-        "\"schema\": \"pgft-bench-fabric/1\"",
+        "\"schema\": \"pgft-bench-fabric/2\"",
         "\"scenario\": \"cascade:4@seed2(4 dead)\"",
         "\"reroute_us\"",
         "\"queries_per_sec\"",
+        "\"phases_us\"",
         "\"table_pushes\": 1",
         "\"events\": [85, 64, 88, 90]",
         "\"dmodk\": [16, 80, 14, 14]",
@@ -297,4 +298,8 @@ fn bench_fabric_seed_record_is_well_formed() {
     ] {
         assert!(body.contains(key), "BENCH_fabric.json lost {key}");
     }
+    // Schema v2 bans nulls: an absent measurement is an explicit
+    // `{"skipped": "<reason>"}` object instead.
+    assert!(!body.contains("null"), "BENCH_fabric.json must not carry null: {body}");
+    assert!(body.contains("\"skipped\": "), "absent measurements need skip reasons: {body}");
 }

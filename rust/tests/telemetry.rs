@@ -1,0 +1,232 @@
+//! The telemetry layer's core contract: instrumentation NEVER changes
+//! deterministic outputs (telemetry-on runs are byte-identical to
+//! telemetry-off runs, serial or parallel), counter totals are
+//! thread-count-invariant, the netsim flit-conservation identity holds
+//! in the exported counters, and the coordinator journal records every
+//! applied mutation of a cascade drill. Wall-clock span *durations* are
+//! never asserted — only structural facts (names, counts, identities).
+
+use pgft::netsim::{load_curve_with, run_netsim_with};
+use pgft::prelude::*;
+use pgft::sweep::run_sweep_with;
+use pgft::telemetry::{telemetry_json, BatchKind, TelemetryRun};
+
+fn case_study_routes(kind: AlgorithmKind) -> (Topology, FlowSet) {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+    let router = kind.build(&topo, Some(&types), 1);
+    let routes = FlowSet::trace(&topo, &*router, &flows);
+    (topo, routes)
+}
+
+fn fast_cfg() -> NetsimConfig {
+    NetsimConfig { warmup: 100, measure: 400, drain: 100, ..Default::default() }
+}
+
+/// Counters / maxima / vectors / histograms of a registry — everything
+/// deterministic. Spans carry wall-clock durations and are excluded.
+fn deterministic_view(r: &Registry) -> impl PartialEq + std::fmt::Debug {
+    (r.counters().clone(), r.maxima().clone(), r.vectors().clone(), r.histograms().clone())
+}
+
+#[test]
+fn netsim_reports_are_identical_with_telemetry_on() {
+    let (topo, routes) = case_study_routes(AlgorithmKind::Gdmodk);
+    let cfg = fast_cfg();
+    for rate in [0.3, 0.8] {
+        let off = run_netsim(&topo, &routes, &cfg, rate).unwrap();
+        let telem = Telemetry::enabled();
+        let on = run_netsim_with(&topo, &routes, &cfg, rate, &telem).unwrap();
+        assert_eq!(on, off, "telemetry must not perturb the simulation at rate {rate}");
+    }
+    // Whole curves too, through the instrumented entry point.
+    let rates = [0.2, 0.6, 0.9];
+    let off = load_curve(&topo, &routes, &cfg, &rates).unwrap();
+    let on = load_curve_with(&topo, &routes, &cfg, &rates, &Telemetry::enabled()).unwrap();
+    assert_eq!(on, off);
+}
+
+#[test]
+fn netsim_counters_obey_flit_conservation() {
+    let (topo, routes) = case_study_routes(AlgorithmKind::Dmodk);
+    let cfg = fast_cfg();
+    // 0.8 saturates dmodk on C2IO, so backlog and buffered terms are
+    // exercised, not just zero.
+    let telem = Telemetry::enabled();
+    run_netsim_with(&topo, &routes, &cfg, 0.8, &telem).unwrap();
+    let reg = telem.snapshot();
+    let c = |name: &str| reg.counter(name);
+    assert!(c("netsim.events") > 0);
+    assert_eq!(c("netsim.cycles"), cfg.warmup + cfg.measure + cfg.drain);
+    assert_eq!(
+        c("netsim.flits.injected"),
+        c("netsim.flits.delivered")
+            + c("netsim.flits.in_flight_end")
+            + c("netsim.flits.buffered_end")
+            + c("netsim.flits.backlogged_end"),
+        "flit conservation: injected == delivered + in-flight + buffered + backlogged"
+    );
+    assert_eq!(
+        c("netsim.flits.created"),
+        c("netsim.flits.injected") - c("netsim.flits.backlogged_end"),
+        "created flits are the injected minus the never-pushed backlog"
+    );
+    assert!(c("netsim.flits.accepted") <= c("netsim.flits.delivered"));
+    assert_eq!(
+        c("netsim.flits.injected"),
+        c("netsim.packets.injected") * u64::from(cfg.packet_flits)
+    );
+    // The per-port/per-VC families exist and are shaped by the fabric.
+    let fwd = &reg.vectors()["netsim.port.forwarded_flits"];
+    assert!(fwd.values.iter().sum::<u64>() > 0, "some port must forward flits");
+    let hwm = &reg.vectors()["netsim.vc.occupancy_hwm"];
+    assert_eq!(hwm.values.len(), fwd.values.len() * cfg.vcs as usize);
+    assert!(hwm.values.iter().all(|&v| v <= u64::from(cfg.vc_capacity)));
+    assert!(reg.histograms()["netsim.queue_depth"].count > 0);
+}
+
+#[test]
+fn netsim_counters_are_reproducible_run_to_run() {
+    let (topo, routes) = case_study_routes(AlgorithmKind::Gdmodk);
+    let cfg = fast_cfg();
+    let snap = |_: usize| {
+        let telem = Telemetry::enabled();
+        run_netsim_with(&topo, &routes, &cfg, 0.5, &telem).unwrap();
+        telem.snapshot()
+    };
+    let (a, b) = (snap(0), snap(1));
+    assert_eq!(deterministic_view(&a), deterministic_view(&b));
+    // Spans vary in duration but not in count.
+    assert_eq!(a.spans()["netsim.run"].count, 1);
+    assert_eq!(b.spans()["netsim.run"].count, 1);
+}
+
+#[test]
+fn disabled_handle_records_nothing_and_changes_nothing() {
+    let (topo, routes) = case_study_routes(AlgorithmKind::Gdmodk);
+    let cfg = fast_cfg();
+    let telem = Telemetry::disabled();
+    assert!(!telem.is_enabled());
+    let rep = run_netsim_with(&topo, &routes, &cfg, 0.5, &telem).unwrap();
+    assert_eq!(rep, run_netsim(&topo, &routes, &cfg, 0.5).unwrap());
+    assert_eq!(telem.snapshot(), Registry::default(), "disabled handles stay empty");
+}
+
+fn small_grid() -> SweepSpec {
+    SweepSpec {
+        topologies: vec!["case-study".into()],
+        placements: vec!["io:last:1".into()],
+        patterns: vec![Pattern::C2ioSym, Pattern::Shift { k: 1 }],
+        algorithms: vec![AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk],
+        faults: vec!["none".into(), "links:2".into()],
+        seeds: vec![1],
+        simulate: false,
+        netsim: Vec::new(),
+        workloads: Vec::new(),
+    }
+}
+
+#[test]
+fn sweep_rows_are_identical_with_telemetry_on_serial_and_parallel() {
+    let spec = small_grid();
+    let baseline = run_sweep(&spec, &SweepOptions { threads: 1 }).unwrap();
+    let mut snapshots = Vec::new();
+    for threads in [1, 4] {
+        let telem = Telemetry::enabled();
+        let rows = run_sweep_with(&spec, &SweepOptions { threads }, &telem).unwrap();
+        assert_eq!(rows, baseline, "telemetry must not perturb rows at {threads} threads");
+        assert_eq!(sweep_table(&rows).to_csv(), sweep_table(&baseline).to_csv());
+        snapshots.push(telem.snapshot());
+    }
+    // Counter totals are thread-count-invariant; so are span *counts*
+    // (the same cells are timed, however they are scheduled).
+    let (serial, parallel) = (&snapshots[0], &snapshots[1]);
+    assert_eq!(deterministic_view(serial), deterministic_view(parallel));
+    assert_eq!(serial.counter("sweep.cells"), spec.num_cells() as u64);
+    let counts =
+        |r: &Registry| r.spans().iter().map(|(k, s)| (k.clone(), s.count)).collect::<Vec<_>>();
+    assert_eq!(counts(serial), counts(parallel));
+    assert!(serial.spans().contains_key("sweep.cell.trace"));
+    assert!(serial.spans().contains_key("sweep.cell.evaluate"));
+    assert!(serial.spans().contains_key("sweep.cell.retrace"), "fault cells retrace");
+}
+
+#[test]
+fn retrace_counters_are_thread_count_invariant() {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let flows = Pattern::C2ioSym.flows(&topo, &types).unwrap();
+    let router = AlgorithmKind::Gdmodk.build(&topo, Some(&types), 1);
+    let pristine = FlowSet::trace(&topo, &*router, &flows);
+    let scenario = FaultModel::parse("stage:3:2").unwrap().generate(&topo, 1);
+    let faults = scenario.fault_set(&topo);
+    let degraded =
+        AlgorithmKind::Gdmodk.build_degraded(&topo, Some(&types), 1, &faults).unwrap();
+
+    let mut views = Vec::new();
+    let mut changed_counts = Vec::new();
+    for threads in [1, 2, 4] {
+        let telem = Telemetry::enabled();
+        let (_, changed) =
+            pristine.retrace_incremental_telem(&topo, &faults, &*degraded, threads, &telem);
+        let reg = telem.snapshot();
+        assert_eq!(reg.counter("eval.retrace.calls"), 1);
+        assert_eq!(reg.counter("eval.retrace.flows"), pristine.len() as u64);
+        assert_eq!(reg.counter("eval.retrace.dirty_flows"), changed as u64);
+        changed_counts.push(changed);
+        // Chunk spans split differently per thread count; the counter
+        // families must not.
+        views.push((
+            reg.counters().clone(),
+            reg.maxima().clone(),
+            reg.vectors().clone(),
+            reg.histograms().clone(),
+        ));
+    }
+    assert!(views.windows(2).all(|w| w[0] == w[1]), "counters vary with thread count");
+    assert!(changed_counts.windows(2).all(|w| w[0] == w[1]));
+    assert!(changed_counts[0] > 0, "a stage cut must dirty some flows");
+}
+
+#[test]
+fn coordinator_journal_records_a_cascade_drill() {
+    let topo = std::sync::Arc::new(build_pgft(&PgftSpec::case_study()));
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    let scenario = FaultModel::parse("cascade:4").unwrap().generate(&topo, 2);
+    let coord = Coordinator::start(topo, types, AlgorithmKind::Gdmodk, 2).unwrap();
+    coord.sync().unwrap();
+    assert!(coord.snapshot().journal.is_empty(), "startup publishes an empty journal");
+
+    coord.inject_burst(scenario.as_events());
+    coord.sync().unwrap();
+    let snap = coord.snapshot();
+    let repair = snap.journal.last().expect("the burst repair is journalled");
+    assert_eq!(repair.kind, BatchKind::Repair);
+    assert_eq!(repair.events, scenario.events.len());
+    assert_eq!(repair.dead_links, scenario.events.len());
+    assert!(repair.dirty_flows > 0);
+    assert!(repair.routes_changed > 0);
+    assert!(repair.diff_entries > 0);
+
+    coord.inject_burst(scenario.events.iter().rev().map(|&l| LinkEvent::Up(l)).collect());
+    coord.sync().unwrap();
+    let snap = coord.snapshot();
+    let restore = snap.journal.last().expect("the restore is journalled");
+    assert_eq!(restore.kind, BatchKind::Restore);
+    assert_eq!(restore.dead_links, 0);
+    assert_eq!(snap.journal.len(), 2, "one record per applied batch");
+    coord.shutdown();
+}
+
+#[test]
+fn telemetry_document_from_a_real_run_is_null_free() {
+    let (topo, routes) = case_study_routes(AlgorithmKind::Gdmodk);
+    let telem = Telemetry::enabled();
+    run_netsim_with(&topo, &routes, &fast_cfg(), 0.5, &telem).unwrap();
+    let doc = telemetry_json("netsim", &[TelemetryRun::unlabelled(telem.snapshot())], &[]);
+    assert!(doc.contains("\"schema\": \"pgft-telemetry/1\""));
+    assert!(doc.contains("\"netsim.flits.delivered\""));
+    assert!(doc.contains("\"netsim.port.forwarded_flits\""));
+    assert!(!doc.contains("null"), "no-null discipline: {doc}");
+}

@@ -296,7 +296,7 @@ fn bench_workload_record_is_well_formed() {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_workload.json");
     let body = std::fs::read_to_string(path).expect("BENCH_workload.json is committed");
     for key in [
-        "\"schema\": \"pgft-bench-workload/1\"",
+        "\"schema\": \"pgft-bench-workload/2\"",
         "\"lowerings_per_sec\"",
         "\"makespan_cells_per_sec\"",
         "\"mix_makespan\"",
@@ -305,4 +305,7 @@ fn bench_workload_record_is_well_formed() {
     ] {
         assert!(body.contains(key), "BENCH_workload.json misses {key}: {body}");
     }
+    // Schema v2 bans nulls: an absent measurement is an explicit
+    // `{"skipped": "<reason>"}` object instead.
+    assert!(!body.contains("null"), "BENCH_workload.json must not carry null: {body}");
 }
