@@ -6,6 +6,10 @@ the sweep is explicit and seeded)."""
 import numpy as np
 import pytest
 
+# compile.kernels imports jax at module scope; without it collection
+# errors out rather than skipping — guard before the transitive import.
+pytest.importorskip("jax", reason="Pallas kernel needs jax")
+
 from compile.kernels.fairrate import port_accumulate
 from compile.kernels.ref import ref_port_accumulate
 

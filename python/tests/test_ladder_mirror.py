@@ -134,7 +134,12 @@ def test_chunked_repair_splices_byte_identical_to_serial(case_pair):
 
 def test_ladder_specs_have_the_advertised_scale():
     # Mirrors families::tests::ladder_specs_have_the_advertised_scale.
-    expected = {"xl-16k": 16_384, "xl-64k": 65_536, "xl-256k": 262_144}
+    expected = {
+        "xl-16k": 16_384,
+        "xl-64k": 65_536,
+        "xl-256k": 262_144,
+        "xl-1m": 1_048_576,
+    }
     for name, nodes in expected.items():
         assert lad.named_spec(name).num_nodes == nodes
     for name, topology, dsts, faults in lad.LADDER:
@@ -142,3 +147,77 @@ def test_ladder_specs_have_the_advertised_scale():
         assert dsts >= 1
         assert faults >= 0
     assert lad.arena_bytes(2, 6) == 8 * 2 + 4 * 2 + 4 * 3 + 4 * 6
+
+
+def test_implicit_topo_agrees_with_tables_everywhere(case_pair):
+    # The Python half of the tentpole's byte-identity pin: the
+    # closed-form ImplicitTopo (mirror of topology::view) must agree
+    # with the materialized Topo on every observable — ids, port graph,
+    # ancestry, down-port arithmetic, and whole routes.
+    _, t = case_pair
+    i = lad.ImplicitTopo(t.spec)
+    assert (i.num_nodes, i.num_switches, i.num_links, i.num_ports) == (
+        t.num_nodes, t.num_switches, t.num_links, t.num_ports
+    )
+    for p in range(t.num_ports):
+        assert i.port_peer[p] == t.port_peer[p], p
+        assert i.port_link[p] == t.port_link[p], p
+        assert i.port_up[p] == t.port_up[p], p
+        assert i.port_index[p] == t.port_index[p], p
+    assert [i.link_stage[x] for x in range(t.num_links)] == list(t.link_stage)
+    for s in range(t.num_switches):
+        assert i.sw_level[s] == t.sw_level[s]
+        assert i.sw_up[s] == t.sw_up[s], s
+    for n in range(t.num_nodes):
+        assert i.node_up[n] == t.node_up[n], n
+    for sw in range(t.num_switches):
+        for dst in range(0, t.num_nodes, 7):
+            assert i.is_ancestor(sw, dst) == t.is_ancestor(sw, dst), (sw, dst)
+    assert list(i.eligible_links()) == list(t.eligible_links())
+    rt, ri = lad.XmodkRouter(t), lad.XmodkRouter(i)
+    for (s, d) in all_pairs(t.num_nodes):
+        assert lad.trace_route(i, ri, s, d) == lad.trace_route(t, rt, s, d), (s, d)
+
+
+def test_budgeted_lazy_router_is_route_identical_and_evicts(case_pair):
+    # Memory-bounded repair: a tiny reach budget must change *nothing*
+    # about the routes — only force arena flushes (evictions > 0) —
+    # while the default budget never evicts at this scale.
+    _, t = case_pair
+    base = lad.XmodkRouter(t)
+    dead = set(lad.generate_link_faults(t, 4, 7))
+    flows = all_pairs(t.num_nodes)
+    roomy = lad.LazyDegradedRouter(t, dead, base, lad.DEFAULT_REACH_BUDGET)
+    tight = lad.LazyDegradedRouter(t, dead, base, 2048)
+    want = [lad.trace_route(t, roomy, s, d) for (s, d) in flows]
+    got = [lad.trace_route(t, tight, s, d) for (s, d) in flows]
+    assert got == want
+    assert roomy.stats["evictions"] == 0
+    assert tight.stats["evictions"] > 0
+    for r in (roomy, tight):
+        assert r.stats["computed"] > 0
+        assert r.stats["hits"] > 0
+        assert 0 < r.stats["resident_bytes"] <= r.stats["peak_bytes"]
+    # The flush check runs on descend-map builds; the per-switch memo
+    # charges between them may overshoot by a few entries, never more.
+    assert tight.stats["peak_bytes"] <= 2048 + tight._entry_bytes + 8 * lad.MEMO_ENTRY_BYTES
+
+
+def test_congestion_kernel_mirrors_agree_with_brute_force(case_pair):
+    # Blocked (1 word/port) and striped (4 words/port) kernels must
+    # both reproduce the set-based distinct-source/destination counts.
+    _, t = case_pair
+    base = lad.XmodkRouter(t)
+    flows = lad.sample_pairs(t.num_nodes, 5, 9)
+    routes = [lad.trace_route(t, base, s, d) for (s, d) in flows]
+    src = [set() for _ in range(t.num_ports)]
+    dst = [set() for _ in range(t.num_ports)]
+    for f, r in enumerate(routes):
+        for p in r:
+            src[p].add(flows[f][0])
+            dst[p].add(flows[f][1])
+    brute = ([len(x) for x in src], [len(x) for x in dst])
+    assert lad.port_loads_blocked(flows, routes, t.num_ports) == brute
+    assert lad.port_loads_striped(flows, routes, t.num_ports) == brute
+    want_c = max(min(s, d) for s, d in zip(*brute))
+    assert lad.c_topo(*brute) == want_c > 0

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Seed `rust/BENCH_eval.json` (schema pgft-bench-eval/2) from the
+"""Seed `rust/BENCH_eval.json` (schema pgft-bench-eval/3) from the
 Python port of the pipeline.
 
 The eval-layer perf record is normally written by `cargo bench --bench
@@ -10,18 +10,33 @@ the *same* ladder on the parameterized Python mirror
 (`pgft_ladder.py`, cross-checked against the golden-pinned
 `gen_faults_golden.py` by `python/tests/test_ladder_mirror.py`):
 
- * per rung — trace throughput (flows/s, trace_ms) and arena bytes per
-   flow on the rung's flow set (all-pairs for the paper fabrics,
-   sampled pairs for 16k/64k/256k);
+ * per rung — trace throughput (flows/s, trace_ms), arena bytes per
+   flow, and the process peak RSS after the rung (`ru_maxrss`, the
+   Python stand-in for the rust emitter's `VmHWM`; both are monotone
+   high-water marks, so each rung's figure bounds everything measured
+   up to it);
  * per faulted rung — full re-trace vs serial incremental (dirty flows
    only) vs chunk-and-splice parallel repair at 2/4/8 workers, with
-   the byte-identity invariant asserted at every width;
+   the byte-identity invariant asserted at every width. Rungs at and
+   above 16k endpoints repair through the *budgeted* lazy reachability
+   (`DEFAULT_REACH_BUDGET`, the accounting mirror of
+   `faults::router::LazyReach`) and record the reach-arena peak they
+   paid (`reach_peak_mb`) — which is what closed the 256k retrace skip
+   of schema v2 and lets the 1m rung run `links:K` at all;
+ * the `1m` rung traces through `ImplicitTopo` (the mirror of
+   `topology::view::ImplicitTopology` — no port tables), `mode:
+   "implicit"`; the 16k rung traces through *both* and asserts the
+   routes are identical, mirroring the rust bench's identity pin;
+ * `kernel` — the striped congestion kernel against the single-word
+   blocked baseline on the 16k store, structurally mirrored from
+   `metrics::BitmapAccum` (same blocking, stamps and popcount merges;
+   the ratio reflects Python dispatch, not SIMD — `source` records the
+   provenance, and a `cargo bench` run regenerates rust numbers);
  * `host_cpus` — the parallelism actually available while measuring.
    On a single-CPU host the parallel entries honestly hover around
    1.0x (they measure fork overhead, not the splice design); the
    speedup>1.5x acceptance in `tests/eval_agreement.rs` applies to
-   records produced with >= 4 CPUs, which a `cargo bench` run on any
-   normal machine regenerates;
+   records produced with >= 4 CPUs;
  * `netsim` — the flit-level engine is rust-only, so a python-port
    record says `skipped` instead of carrying null.
 
@@ -37,6 +52,7 @@ from __future__ import annotations
 import multiprocessing as mp
 import os
 import pathlib
+import resource
 import sys
 import time
 
@@ -45,6 +61,9 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 import pgft_ladder as lad  # noqa: E402
 
 PARALLEL_WORKERS = [2, 4, 8]
+
+# Mirror of the sweep runner's (and rust bench's) lazy-reach policy.
+LAZY_REACH_MIN_NODES = 16_384
 
 
 def best_of(reps: int, fn):
@@ -62,6 +81,12 @@ def all_pairs(n: int) -> list:
     return [(s, d) for s in range(n) for d in range(n) if s != d]
 
 
+def peak_rss_mb() -> float:
+    """`ru_maxrss` is KiB on Linux — the same monotone high-water story
+    as the rust emitter's `VmHWM`."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
 # Worker state is inherited through fork (COW) — only the slice bounds
 # cross the pipe. Each worker builds its own LazyDegradedRouter so the
 # memo tables are private, exactly like the per-worker sub-arenas in
@@ -71,10 +96,10 @@ _G: dict = {}
 
 def _repair_slice(bounds):
     lo, hi = bounds
-    topo, dead, base, flows, dirty = (
-        _G[k] for k in ("topo", "dead", "base", "flows", "dirty")
+    topo, dead, base, flows, dirty, budget = (
+        _G[k] for k in ("topo", "dead", "base", "flows", "dirty", "budget")
     )
-    worker = lad.LazyDegradedRouter(topo, dead, base)
+    worker = lad.LazyDegradedRouter(topo, dead, base, budget)
     return [lad.trace_route(topo, worker, *flows[dirty[i]]) for i in range(lo, hi)]
 
 
@@ -94,8 +119,11 @@ def parallel_repair(workers: int):
     return out
 
 
-def measure_rung(rung, topo, flows, dead, skip_reason, reps):
+def measure_rung(rung, mode, topo, flows, dead, reps):
     base = lad.XmodkRouter(topo)
+    budget = (
+        lad.DEFAULT_REACH_BUDGET if topo.num_nodes >= LAZY_REACH_MIN_NODES else 0
+    )
 
     pristine, trace_s = best_of(
         reps, lambda: [lad.trace_route(topo, base, s, d) for (s, d) in flows]
@@ -104,6 +132,7 @@ def measure_rung(rung, topo, flows, dead, skip_reason, reps):
     bytes_per_flow = lad.arena_bytes(len(flows), hops) / max(len(flows), 1)
     rec = {
         "rung": rung,
+        "mode": mode,
         "endpoints": topo.num_nodes,
         "flows": len(flows),
         "trace_ms": trace_s * 1e3,
@@ -112,7 +141,8 @@ def measure_rung(rung, topo, flows, dead, skip_reason, reps):
     }
 
     if dead is None:
-        rec["retrace"] = skip_reason
+        rec["retrace"] = "no fault scenario configured for this rung"
+        rec["peak_rss_mb"] = peak_rss_mb()
         return rec
 
     dirty = lad.dirty_flows(pristine, topo, dead)
@@ -120,15 +150,19 @@ def measure_rung(rung, topo, flows, dead, skip_reason, reps):
     full, full_s = best_of(
         reps,
         lambda: [
-            lad.trace_route(topo, lad.LazyDegradedRouter(topo, dead, base), s, d)
+            lad.trace_route(topo, r, s, d)
+            for r in (lad.LazyDegradedRouter(topo, dead, base, budget),)
             for (s, d) in flows
         ],
     )
-    # ^ one shared lazy router per pass would be fair too; a fresh one
-    # per flow would not. Rebuild per *pass* so reps stay cold.
+    # ^ one shared lazy router per pass (a fresh one per flow would not
+    # be fair). Rebuild per *pass* so reps stay cold.
+
+    serial_router_cell = []
 
     def serial():
-        worker = lad.LazyDegradedRouter(topo, dead, base)
+        worker = lad.LazyDegradedRouter(topo, dead, base, budget)
+        serial_router_cell.append(worker)
         out = list(pristine)
         for f in dirty:
             out[f] = lad.trace_route(topo, worker, *flows[f])
@@ -136,9 +170,10 @@ def measure_rung(rung, topo, flows, dead, skip_reason, reps):
 
     serial_routes, serial_s = best_of(reps, serial)
     assert serial_routes == full, f"{rung}: incremental must equal a full re-trace"
+    reach_peak_mb = serial_router_cell[-1].stats["peak_bytes"] / (1 << 20)
 
     _G.update(topo=topo, dead=dead, base=base, flows=flows, dirty=dirty,
-              pristine=pristine)
+              pristine=pristine, budget=budget)
     parallel = []
     for workers in PARALLEL_WORKERS:
         par, par_s = best_of(reps, lambda: parallel_repair(workers))
@@ -151,29 +186,62 @@ def measure_rung(rung, topo, flows, dead, skip_reason, reps):
         "dirty_flows": len(dirty),
         "full_ms": full_s * 1e3,
         "serial_ms": serial_s * 1e3,
+        "reach_peak_mb": reach_peak_mb,
         "parallel": parallel,
     }
+    rec["peak_rss_mb"] = peak_rss_mb()
     return rec
 
 
-def emit(records, host_cpus: int) -> str:
+def measure_kernel():
+    """The striped-vs-blocked duel on the 16k store (mirror of the rust
+    bench's kernel leg; reports must agree exactly)."""
+    topo = lad.Topo(lad.named_spec("xl-16k"))
+    base = lad.XmodkRouter(topo)
+    flows = lad.sample_pairs(topo.num_nodes, 4, 1)
+    routes = [lad.trace_route(topo, base, s, d) for (s, d) in flows]
+    striped, striped_s = best_of(
+        2, lambda: lad.port_loads_striped(flows, routes, topo.num_ports)
+    )
+    blocked, blocked_s = best_of(
+        2, lambda: lad.port_loads_blocked(flows, routes, topo.num_ports)
+    )
+    assert striped == blocked, "striped kernel must reproduce the blocked kernel"
+    return {
+        "rung": "16k",
+        "flows": len(flows),
+        "blocked_flows_per_sec": len(flows) / blocked_s,
+        "striped_flows_per_sec": len(flows) / striped_s,
+        "speedup": blocked_s / max(striped_s, 1e-9),
+    }
+
+
+def emit(kernel, records, host_cpus: int) -> str:
     out = ["{"]
-    out.append('  "schema": "pgft-bench-eval/2",')
+    out.append('  "schema": "pgft-bench-eval/3",')
     out.append('  "source": "python-port",')
     out.append(f'  "host_cpus": {host_cpus},')
     out.append(
         '  "netsim": {"skipped": "flit-level engine is rust-only; '
         'cargo bench --bench bench_eval measures events/s"},'
     )
+    out.append(
+        f'  "kernel": {{"rung": "{kernel["rung"]}", "flows": {kernel["flows"]}, '
+        f'"blocked_flows_per_sec": {kernel["blocked_flows_per_sec"]:.1f}, '
+        f'"striped_flows_per_sec": {kernel["striped_flows_per_sec"]:.1f}, '
+        f'"speedup": {kernel["speedup"]:.4f}}},'
+    )
     out.append('  "ladder": [')
     for i, r in enumerate(records):
         out.append("    {")
         out.append(f'      "rung": "{r["rung"]}",')
+        out.append(f'      "mode": "{r["mode"]}",')
         out.append(f'      "endpoints": {r["endpoints"]},')
         out.append(f'      "flows": {r["flows"]},')
         out.append(f'      "trace_ms": {r["trace_ms"]:.4f},')
         out.append(f'      "flows_per_sec": {r["flows_per_sec"]:.1f},')
         out.append(f'      "bytes_per_flow": {r["bytes_per_flow"]:.2f},')
+        out.append(f'      "peak_rss_mb": {r["peak_rss_mb"]:.1f},')
         rt = r["retrace"]
         if isinstance(rt, str):
             out.append(f'      "retrace": {{"skipped": "{rt}"}}')
@@ -183,6 +251,7 @@ def emit(records, host_cpus: int) -> str:
             out.append(f'        "dirty_flows": {rt["dirty_flows"]},')
             out.append(f'        "full_ms": {rt["full_ms"]:.4f},')
             out.append(f'        "serial_ms": {rt["serial_ms"]:.4f},')
+            out.append(f'        "reach_peak_mb": {rt["reach_peak_mb"]:.2f},')
             speedup = rt["full_ms"] / max(rt["serial_ms"], 1e-9)
             out.append(f'        "speedup_incremental": {speedup:.4f},')
             out.append('        "parallel": [')
@@ -211,35 +280,45 @@ def main() -> int:
         flows = all_pairs(topo.num_nodes)
         dead = {next(l for l in range(topo.num_links) if topo.link_stage[l] == 2)}
         print(f"== {name}: {topo.num_nodes} endpoints, {len(flows)} flows ==")
-        records.append(measure_rung(name, topo, flows, dead, "", reps=3))
+        records.append(measure_rung(name, "tables", topo, flows, dead, reps=3))
 
     # Ladder rungs: sampled pairs, links:K preset scenarios, seed 1.
+    # 16k/64k/256k run on materialized tables, 1m through the implicit
+    # view; all repair under the lazy reach budget.
     for name, topology, dsts, fault_links in lad.LADDER:
-        topo = lad.Topo(lad.named_spec(topology))
+        spec = lad.named_spec(topology)
+        if name == "1m":
+            topo, mode = lad.ImplicitTopo(spec), "implicit"
+        else:
+            topo, mode = lad.Topo(spec), "tables"
         flows = lad.sample_pairs(topo.num_nodes, dsts, 1)
+        if name == "16k":
+            # Mirror of the rust bench's identity pin: the implicit
+            # view must trace byte-identical to the tables.
+            implicit = lad.ImplicitTopo(spec)
+            base_t, base_i = lad.XmodkRouter(topo), lad.XmodkRouter(implicit)
+            for (s, d) in flows[:4096]:
+                assert lad.trace_route(topo, base_t, s, d) == lad.trace_route(
+                    implicit, base_i, s, d
+                ), (s, d)
+            print("  16k: implicit view traced identical to tables (4096 flows)")
         dead = (
             set(lad.generate_link_faults(topo, fault_links, 1))
             if fault_links > 0
             else None
         )
         print(f"== {name}: {topo.num_nodes} endpoints, {len(flows)} flows ==")
-        records.append(
-            measure_rung(
-                name,
-                topo,
-                flows,
-                dead,
-                "fault-aware router reachability tables exceed the memory "
-                "budget at 256k endpoints (DESIGN.md §10)",
-                reps=2,
-            )
-        )
+        reps = 2 if topo.num_nodes <= 65_536 else 1
+        records.append(measure_rung(name, mode, topo, flows, dead, reps=reps))
+
+    print("== congestion kernel: striped vs blocked (16k store) ==")
+    kernel = measure_kernel()
 
     try:
         host_cpus = len(os.sched_getaffinity(0))
     except AttributeError:
         host_cpus = os.cpu_count() or 1
-    body = emit(records, host_cpus)
+    body = emit(kernel, records, host_cpus)
     out_path = sys.argv[1] if len(sys.argv) > 1 else str(
         pathlib.Path(__file__).resolve().parents[2] / "rust" / "BENCH_eval.json"
     )

@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""Generate `rust/tests/golden/ladder_trace_1m.csv`: dmodk routes for a
+deterministic sample of xl-1m (1,048,576-endpoint) flows, traced through
+the Python `ImplicitTopo` mirror.
+
+The rust side (`tests/implicit_ladder_golden.rs`) traces the *same*
+flows through `topology::view::ImplicitTopology` and compares byte for
+byte — a cross-language pin of the closed-form port arithmetic at the
+top of the size ladder, where no materialized table exists to diff
+against.
+
+Flow subset: `sample_pairs(n, 1, 1)` (the exact xl-1m ladder sample,
+seed 1) strided by 8192 → 128 flows spanning the whole source space.
+
+Row format: `src,dst,port;port;...;port` (global port ids in hop order).
+
+Usage: python3 python/tools/gen_ladder_trace_golden.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+import pgft_ladder as lad  # noqa: E402
+
+STRIDE = 8192
+
+
+def main() -> int:
+    topo = lad.ImplicitTopo(lad.named_spec("xl-1m"))
+    router = lad.XmodkRouter(topo)  # dmodk: key = dst
+    flows = lad.sample_pairs(topo.num_nodes, 1, 1)[::STRIDE]
+    lines = []
+    for src, dst in flows:
+        route = lad.trace_route(topo, router, src, dst)
+        lines.append(f"{src},{dst}," + ";".join(str(p) for p in route))
+    out = (
+        pathlib.Path(__file__).resolve().parents[2]
+        / "rust" / "tests" / "golden" / "ladder_trace_1m.csv"
+    )
+    out.write_text("\n".join(lines) + "\n")
+    print(f"wrote {out} ({len(lines)} flows)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

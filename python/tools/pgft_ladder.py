@@ -41,7 +41,8 @@ FAULT_SEED_XOR = 0xFA_0175_CE4A_5105
 LADDER = [
     ("16k", "xl-16k", 4, 320),
     ("64k", "xl-64k", 2, 1280),
-    ("256k", "xl-256k", 1, 0),
+    ("256k", "xl-256k", 1, 2560),
+    ("1m", "xl-1m", 1, 5120),
 ]
 
 # Mirrors topology::families::named_spec for the specs the ladder needs.
@@ -51,7 +52,15 @@ NAMED_SPECS = {
     "xl-16k": ([32, 32, 16], [1, 16, 8], [1, 1, 2]),
     "xl-64k": ([32, 32, 64], [1, 16, 8], [1, 1, 2]),
     "xl-256k": ([64, 64, 64], [1, 32, 16], [1, 1, 2]),
+    "xl-1m": ([64, 64, 256], [1, 32, 16], [1, 1, 2]),
 }
+
+# Mirrors faults::router: the default lazy-reachability arena budget and
+# the per-entry accounting constants (approximations for budget math,
+# not an allocator — same numbers the rust side charges).
+DEFAULT_REACH_BUDGET = 256 << 20
+MEMO_ENTRY_BYTES = 48
+REACH_ENTRY_OVERHEAD = 72
 
 
 class Spec:
@@ -238,6 +247,190 @@ class Topo:
         return [l for l in range(self.num_links) if self.link_stage[l] >= 2]
 
 
+class _Fn:
+    """List-shaped view over a closed-form accessor, so the implicit
+    topology can stand in wherever ``Topo``'s flat lists are indexed."""
+
+    def __init__(self, fn) -> None:
+        self._fn = fn
+
+    def __getitem__(self, i: int):
+        return self._fn(i)
+
+
+class ImplicitTopo:
+    """Mirror of ``topology::view::ImplicitTopology``: every ``Topo``
+    query answered arithmetically from the spec — O(h) resident state,
+    no port/link tables.  Port ids are the same as ``Topo``'s by
+    construction (``up = 2·link``, ``down = 2·link + 1``, links in the
+    nested cabling order of ``build_pgft``), which is the contract
+    ``rust/src/topology/view.rs`` pins exhaustively and the xl-1m
+    golden cross-check rides on.
+    """
+
+    def __init__(self, spec: Spec) -> None:
+        self.spec = spec
+        h = spec.h
+        self.mprod = [1] * (h + 1)
+        for l in range(h):
+            self.mprod[l + 1] = self.mprod[l] * spec.m[l]
+        self.wpref = [spec.w_prefix(l) for l in range(h + 1)]
+        self.num_nodes = spec.num_nodes
+        self.level_start = []
+        acc = 0
+        for l in range(1, h + 1):
+            self.level_start.append(acc)
+            acc += (self.num_nodes // self.mprod[l]) * self.wpref[l]
+        self.level_start.append(acc)
+        self.num_switches = acc
+        self.stage_first = []
+        lacc = 0
+        for s in range(h):
+            self.stage_first.append(lacc)
+            lower = (
+                self.num_nodes
+                if s == 0
+                else (self.num_nodes // self.mprod[s]) * self.wpref[s]
+            )
+            lacc += lower * spec.w[s] * spec.p[s]
+        self.stage_first.append(lacc)
+        self.num_links = lacc
+        self.num_ports = 2 * lacc
+        # The list-shaped faces Topo consumers index into.
+        self.port_peer = _Fn(self._port_peer)
+        self.port_link = _Fn(lambda p: p >> 1)
+        self.port_up = _Fn(lambda p: p & 1 == 0)
+        self.port_index = _Fn(self._port_index)
+        self.link_stage = _Fn(lambda l: self._locate_link(l)[0] + 1)
+        self.sw_level = _Fn(lambda sw: self._locate(sw)[0])
+        self.node_up = _Fn(self._node_up_ports)
+        self.sw_up = _Fn(self._sw_up_ports)
+
+    # -- shared digit/placement arithmetic (same forms as Topo) --------
+
+    def _digits(self, nid: int) -> list:
+        d = []
+        x = nid
+        for l in range(self.spec.h):
+            d.append(x % self.spec.m[l])
+            x //= self.spec.m[l]
+        return d
+
+    def up_ports_at(self, l: int) -> int:
+        s = self.spec
+        return 0 if l >= s.h else s.w[l] * s.p[l]
+
+    def down_ports_at(self, l: int) -> int:
+        s = self.spec
+        return s.m[l - 1] * s.p[l - 1]
+
+    def switch_at(self, level: int, top: list, bottom: list) -> int:
+        s = self.spec
+        bot = 0
+        for j in range(level - 1, -1, -1):
+            bot = bot * s.w[j] + bottom[j]
+        topv = 0
+        for j in range(s.h - level - 1, -1, -1):
+            topv = topv * s.m[level + j] + top[j]
+        within = topv * self.wpref[level] + bot
+        return self.level_start[level - 1] + within
+
+    # -- closed-form locate + accessors (mirror of view.rs) ------------
+
+    def _locate(self, sw: int):
+        for l in range(1, self.spec.h + 1):
+            if sw < self.level_start[l]:
+                return l, sw - self.level_start[l - 1]
+        raise IndexError(f"switch id {sw} out of range")
+
+    def _locate_link(self, link: int):
+        for s in range(self.spec.h - 1, -1, -1):
+            if link >= self.stage_first[s]:
+                return s, link - self.stage_first[s]
+        raise IndexError(f"link id {link} out of range")
+
+    def _node_up_ports(self, nid: int) -> list:
+        w, p = self.spec.w[0], self.spec.p[0]
+        out = []
+        for idx in range(w * p):
+            c, j = idx % w, idx // w
+            out.append(2 * (nid * w * p + c * p + j))
+        return out
+
+    def _sw_up_ports(self, sw: int) -> list:
+        l, within = self._locate(sw)
+        if l == self.spec.h:  # top-level switches have no up-ports
+            return []
+        w, p = self.spec.w[l], self.spec.p[l]
+        out = []
+        for idx in range(w * p):
+            c, j = idx % w, idx // w
+            out.append(2 * (self.stage_first[l] + within * w * p + c * p + j))
+        return out
+
+    def _port_peer(self, port: int) -> int:
+        s, off = self._locate_link(port >> 1)
+        w, par = self.spec.w[s], self.spec.p[s]
+        lower = off // (w * par)
+        c = (off % (w * par)) // par
+        if port & 1:  # down-port: the peer is the lower element
+            if s == 0:
+                return lower
+            return self.num_nodes + self.level_start[s - 1] + lower
+        # Up-port: the level-(s+1) parent. A node is "all top digits".
+        if s == 0:
+            topv, bot = lower, 0
+        else:
+            topv, bot = lower // self.wpref[s], lower % self.wpref[s]
+        within = (topv // self.spec.m[s]) * self.wpref[s + 1] + self.wpref[s] * c + bot
+        return self.num_nodes + self.level_start[s] + within
+
+    def _port_index(self, port: int) -> int:
+        s, off = self._locate_link(port >> 1)
+        w, par = self.spec.w[s], self.spec.p[s]
+        lower = off // (w * par)
+        rem = off % (w * par)
+        c, j = rem // par, rem % par
+        if port & 1 == 0:
+            return c + w * j
+        a = lower % self.spec.m[0] if s == 0 else (lower // self.wpref[s]) % self.spec.m[s]
+        return a * par + j
+
+    def is_ancestor(self, sw: int, nid: int) -> bool:
+        l, within = self._locate(sw)
+        return within // self.wpref[l] == nid // self.mprod[l]
+
+    def child_index_toward(self, sw: int, nid: int) -> int:
+        l, _ = self._locate(sw)
+        return (nid // self.mprod[l - 1]) % self.spec.m[l - 1]
+
+    def down_port_toward(self, sw: int, nid: int, j: int) -> int:
+        l, within = self._locate(sw)
+        par = self.spec.p[l - 1]
+        if l == 1:
+            plane = within % self.wpref[1]
+            link = nid * self.wpref[1] * par + plane * par + j
+        else:
+            bot = within % self.wpref[l]
+            topv = within // self.wpref[l]
+            plane = bot // self.wpref[l - 1]
+            child_bot = bot % self.wpref[l - 1]
+            a = (nid // self.mprod[l - 1]) % self.spec.m[l - 1]
+            child_within = (topv * self.spec.m[l - 1] + a) * self.wpref[l - 1] + child_bot
+            link = (
+                self.stage_first[l - 1]
+                + child_within * self.spec.w[l - 1] * par
+                + plane * par
+                + j
+            )
+        return 2 * link + 1
+
+    def eligible_links(self) -> range:
+        """Fault-eligible links (stage >= 2): a contiguous id range —
+        the property ``FaultModel::generate_view`` relies on."""
+        return range(self.stage_first[1], self.num_links)
+
+
 # ---------------------------------------------------------------------------
 # routing — Xmodk closed forms + trace (parameterized golden mirror)
 # ---------------------------------------------------------------------------
@@ -325,20 +518,48 @@ class LazyDegradedRouter:
     per-dst tables would be ~70 GiB.
     """
 
-    def __init__(self, topo: Topo, dead: set, base) -> None:
+    def __init__(self, topo: Topo, dead: set, base, budget: int = 0) -> None:
         self.topo = topo
         self.dead = dead
         self.base = base
         self._descend: dict = {}  # dst -> {ancestor_sw: bool}
         self._good: dict = {}  # dst -> {sw: bool}
+        # Mirror of faults::router::LazyReach budget accounting: an
+        # entry costs its packed descend bits plus a fixed overhead,
+        # each memoized good verdict MEMO_ENTRY_BYTES; exceeding the
+        # budget flushes the whole arena (deterministic O(1) amortized
+        # eviction — DESIGN.md §12). budget=0 keeps the memos unbounded
+        # (the pre-existing behavior the mirror tests pin).
+        self.budget = budget
+        total_bits = sum(topo.spec.w_prefix(l) for l in range(1, topo.spec.h + 1))
+        self._entry_bytes = ((total_bits + 63) // 64) * 8 + REACH_ENTRY_OVERHEAD
+        self.stats = {
+            "computed": 0, "hits": 0, "evictions": 0,
+            "resident_bytes": 0, "peak_bytes": 0,
+        }
 
     def _alive(self, port: int) -> bool:
         return self.topo.port_link[port] not in self.dead
 
+    def _charge(self, cost: int) -> None:
+        st = self.stats
+        st["resident_bytes"] += cost
+        st["peak_bytes"] = max(st["peak_bytes"], st["resident_bytes"])
+
     def _descend_map(self, dst: int) -> dict:
         d = self._descend.get(dst)
         if d is not None:
+            self.stats["hits"] += 1
             return d
+        if (
+            self.budget
+            and self._descend
+            and self.stats["resident_bytes"] + self._entry_bytes > self.budget
+        ):
+            self.stats["evictions"] += len(self._descend)
+            self._descend.clear()
+            self._good.clear()
+            self.stats["resident_bytes"] = 0
         topo, spec = self.topo, self.topo.spec
         d = {}
         digits = topo._digits(dst)
@@ -370,6 +591,8 @@ class LazyDegradedRouter:
                     if bottom[j] < spec.w[j]:
                         break
                     bottom[j] = 0
+        self.stats["computed"] += 1
+        self._charge(self._entry_bytes)
         return self._descend.setdefault(dst, d)
 
     def _switch_good(self, sw: int, dst: int) -> bool:
@@ -380,6 +603,7 @@ class LazyDegradedRouter:
         descend = self._descend_map(dst)
         if descend.get(sw, False):
             memo[sw] = True
+            self._charge(MEMO_ENTRY_BYTES)
             return True
         memo[sw] = False  # cycle guard; up-recursion is acyclic anyway
         topo = self.topo
@@ -391,6 +615,7 @@ class LazyDegradedRouter:
                     g = True
                     break
         memo[sw] = g
+        self._charge(MEMO_ENTRY_BYTES)
         return g
 
     def _up_viable(self, port: int, dst: int) -> bool:
@@ -466,3 +691,73 @@ def arena_bytes(num_flows: int, total_hops: int) -> int:
     """Mirror of ``FlowSet::arena_bytes``: pairs (2×u32) + weights (u32)
     + CSR offsets (u32, flows+1) + port arena (u32 per hop)."""
     return 8 * num_flows + 4 * num_flows + 4 * (num_flows + 1) + 4 * total_hops
+
+
+# ---------------------------------------------------------------------------
+# metrics — the blocked and striped congestion kernels
+# ---------------------------------------------------------------------------
+
+# Mirrors metrics::STRIPE: node-id block width = STRIPE × 64.
+KERNEL_STRIPE = 4
+
+
+def _port_loads(flows, routes, num_ports, words_per_port):
+    """One structural mirror serves both kernels: sweep the node-id
+    space in ``words_per_port × 64``-id blocks, keep one bitmap stripe
+    per *touched* port (epoch stamps make the reset cheap), popcount on
+    block exit.  ``words_per_port=1`` is the blocked single-word kernel,
+    ``KERNEL_STRIPE`` the striped one (``metrics::BitmapAccum``).
+
+    Returns ``(src_counts, dst_counts)`` — per-port distinct sources /
+    destinations, the inputs of ``C_p = min(src, dst)``.
+    """
+    span = words_per_port * 64
+    counts = ([0] * num_ports, [0] * num_ports)
+    stamp = [0] * num_ports
+    words = [0] * (num_ports * words_per_port)
+    epoch = 0
+    for which in (0, 1):
+        out = counts[which]
+        blocks: dict = {}
+        for f, (src, dst) in enumerate(flows):
+            key = (src, dst)[which]
+            blocks.setdefault(key // span, []).append(f)
+        for b in sorted(blocks):
+            epoch += 1
+            touched = []
+            base = b * span
+            for f in blocks[b]:
+                rel = (flows[f][which] - base)
+                wi, bit = rel // 64, 1 << (rel % 64)
+                for p in routes[f]:
+                    if stamp[p] != epoch:
+                        stamp[p] = epoch
+                        lo = p * words_per_port
+                        for k in range(words_per_port):
+                            words[lo + k] = 0
+                        touched.append(p)
+                    words[p * words_per_port + wi] |= bit
+            for p in touched:
+                lo = p * words_per_port
+                out[p] += sum(
+                    words[lo + k].bit_count() for k in range(words_per_port)
+                )
+    return counts
+
+
+def port_loads_blocked(flows, routes, num_ports):
+    """Mirror of ``CongestionReport::compute_flowset_blocked``."""
+    return _port_loads(flows, routes, num_ports, 1)
+
+
+def port_loads_striped(flows, routes, num_ports):
+    """Mirror of ``CongestionReport::compute_flowset_stats``'s kernel."""
+    return _port_loads(flows, routes, num_ports, KERNEL_STRIPE)
+
+
+def c_topo(src_counts, dst_counts) -> int:
+    """``C_topo = max_p min(src(p), dst(p))`` over switch output ports
+    (every port here — node injection ports never carry transit)."""
+    return max(
+        (min(s, d) for s, d in zip(src_counts, dst_counts)), default=0
+    )

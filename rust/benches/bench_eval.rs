@@ -1,17 +1,31 @@
 //! Eval-layer performance on the size ladder: arena trace throughput
 //! (flows/s) and bytes/flow at every rung, full-vs-incremental re-trace
-//! on the rung's preset fault scenario, and the parallel incremental
-//! repair's thread-sweep speedup — emitted both as bench lines and as a
-//! machine-readable `BENCH_eval.json` (schema `pgft-bench-eval/2`,
-//! uploaded as a CI artifact, so the perf trajectory of the eval core is
-//! tracked run over run).
+//! on the rung's preset fault scenario, the parallel incremental
+//! repair's thread-sweep speedup, and the striped-vs-blocked congestion
+//! kernel — emitted both as bench lines and as a machine-readable
+//! `BENCH_eval.json` (schema `pgft-bench-eval/3`, uploaded as a CI
+//! artifact, so the perf trajectory of the eval core is tracked run
+//! over run).
 //!
 //! Rungs, smallest first: `case-study` (64 endpoints, all-pairs),
 //! `medium-512` (all-pairs), then the sampled-pair ladder from
-//! [`pgft::eval::LADDER`] — `16k`, `64k`, `256k`. The 256k rung skips
-//! the re-trace leg (its record says why): building a fault-aware
-//! router materializes per-destination reachability bitsets that are
-//! out of memory budget at that scale (DESIGN.md §10).
+//! [`pgft::eval::LADDER`] — `16k`, `64k`, `256k`, `1m`. Rungs at and
+//! above 16k endpoints repair through the *lazily built*
+//! per-destination reachability ([`DegradedRouter::new_lazy`], budget
+//! [`DEFAULT_REACH_BUDGET`], DESIGN.md §12) — the policy the sweep
+//! runner applies — so the 256k re-trace that schema v2 had to skip is
+//! now measured, and the record carries the reach-table peak actually
+//! paid (`reach_peak_mb`). The `1m` rung runs through the arithmetic
+//! [`ImplicitTopology`] view (its port tables would cost tens of GiB
+//! materialized); the 16k rung additionally traces through *both*
+//! views and asserts the stores are byte-identical, so the implicit
+//! arithmetic cannot drift from the built graph without the bench
+//! failing.
+//!
+//! Every record also carries the process peak RSS (`peak_rss_mb`,
+//! Linux `VmHWM` — a monotone high-water mark, so each rung's figure
+//! bounds everything measured up to and including it; on non-Linux
+//! hosts the field degrades to `{"skipped": ...}`, never `null`).
 //!
 //! CI smoke-runs this with `PGFT_BENCH_SMOKE=1`: every [`Bench`] clamps
 //! to a single iteration *and* the ladder stops after the `16k` rung,
@@ -22,7 +36,8 @@
 //!
 //! Every leg asserts the invariant it measures: the incremental repair
 //! (serial and at every thread count) must be byte-identical to a full
-//! re-trace under the same faults.
+//! re-trace under the same faults, and the striped kernel's report
+//! must equal the blocked kernel's.
 
 use pgft::eval::LADDER;
 use pgft::netsim::{run_netsim, NetsimConfig};
@@ -38,14 +53,32 @@ fn smoke() -> bool {
     matches!(std::env::var("PGFT_BENCH_SMOKE"), Ok(v) if !v.is_empty() && v != "0")
 }
 
+/// Process peak RSS in MiB from Linux `VmHWM` (`/proc/self/status`).
+/// `None` off Linux — the record then says `{"skipped": ...}`.
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+/// Mirror of the sweep runner's lazy-reachability policy: at and above
+/// this node count the fault-aware router builds reach tables lazily
+/// under [`DEFAULT_REACH_BUDGET`] instead of materializing all of them.
+const LAZY_REACH_MIN_NODES: usize = 16_384;
+
 /// One rung's JSON record, assembled as it is measured.
 struct RungRecord {
     rung: &'static str,
+    /// `"tables"` or `"implicit"` — which topology view traced it.
+    mode: &'static str,
     endpoints: usize,
     flows: usize,
     trace_ms: f64,
     flows_per_sec: f64,
     bytes_per_flow: f64,
+    /// `VmHWM` after the rung finished; `None` degrades to a skip note.
+    peak_rss_mb: Option<f64>,
     /// `Ok` = measured re-trace leg, `Err` = human-readable skip reason.
     retrace: Result<RetraceRecord, &'static str>,
 }
@@ -56,58 +89,54 @@ struct RetraceRecord {
     full_ms: f64,
     serial_ms: f64,
     parallel: Vec<(usize, f64)>, // (threads, median ms)
+    /// Peak reach-table footprint ([`ReachStats::peak_bytes`], MiB).
+    /// 0 in eager mode: the eager tables are not arena-accounted.
+    reach_peak_mb: f64,
 }
 
 const PARALLEL_THREADS: &[usize] = &[2, 4, 8];
 
 fn measure_rung(
     rung: &'static str,
-    topo: &Topology,
+    mode: &'static str,
+    view: &dyn TopologyView,
+    router: &dyn Router,
     flows: &[(u32, u32)],
-    faults: Option<&FaultSet>,
+    fault_leg: Option<(&FaultSet, &DegradedRouter)>,
     skip_reason: &'static str,
 ) -> RungRecord {
-    let types = Placement::paper_io().apply(topo).unwrap();
-    let router = AlgorithmKind::Dmodk.build(topo, Some(&types), 1);
-
     // Trace throughput + arena footprint.
     let trace_st = Bench::new(format!("eval/flowset-trace/{rung}"))
         .target_time(Duration::from_millis(400))
         .samples(3, 50)
         .throughput_elems(flows.len() as u64)
         .run(|_| {
-            std::hint::black_box(FlowSet::trace(topo, &*router, flows));
+            std::hint::black_box(FlowSet::trace(view, router, flows));
         });
-    let pristine = FlowSet::trace(topo, &*router, flows);
+    let pristine = FlowSet::trace(view, router, flows);
     let bytes_per_flow = pristine.arena_bytes() as f64 / pristine.len().max(1) as f64;
 
-    let retrace = match faults {
+    let retrace = match fault_leg {
         None => Err(skip_reason),
-        Some(faults) => {
-            let degraded = DegradedRouter::new(
-                topo,
-                faults,
-                AlgorithmKind::Dmodk.build(topo, Some(&types), 1),
-            )
-            .unwrap();
-            let dirty = pristine.dirty_flows(topo, faults).len();
+        Some((faults, degraded)) => {
+            let dirty = pristine.dirty_flows(view, faults).len();
             println!("  {rung}: {dirty} of {} flows cross a dead link", pristine.len());
             let full_st = Bench::new(format!("eval/retrace-full/{rung}"))
                 .target_time(Duration::from_millis(400))
                 .samples(3, 30)
                 .run(|_| {
-                    std::hint::black_box(FlowSet::trace(topo, &degraded, flows));
+                    std::hint::black_box(FlowSet::trace(view, degraded, flows));
                 });
             let serial_st = Bench::new(format!("eval/retrace-incremental/{rung}"))
                 .target_time(Duration::from_millis(400))
                 .samples(3, 30)
                 .run(|_| {
-                    std::hint::black_box(pristine.retrace_incremental(topo, faults, &degraded));
+                    std::hint::black_box(pristine.retrace_incremental(view, faults, degraded));
                 });
             // The invariant the speedups stand on: incremental ==
             // full, at every thread count.
-            let full = FlowSet::trace(topo, &degraded, flows);
-            let (serial, changed) = pristine.retrace_incremental(topo, faults, &degraded);
+            let full = FlowSet::trace(view, degraded, flows);
+            let (serial, changed) = pristine.retrace_incremental(view, faults, degraded);
             assert_eq!(serial, full, "{rung}: incremental must equal a full re-trace");
             assert_eq!(changed, dirty);
             let mut parallel = Vec::new();
@@ -117,31 +146,51 @@ fn measure_rung(
                     .samples(3, 30)
                     .run(|_| {
                         std::hint::black_box(pristine.retrace_incremental_par(
-                            topo, faults, &degraded, threads,
+                            view, faults, degraded, threads,
                         ));
                     });
-                let (par, _) = pristine.retrace_incremental_par(topo, faults, &degraded, threads);
+                let (par, _) = pristine.retrace_incremental_par(view, faults, degraded, threads);
                 assert_eq!(par, serial, "{rung}: {threads}-thread repair must equal serial");
                 parallel.push((threads, st.median_ns / 1e6));
             }
+            let reach = degraded.reach_stats();
             Ok(RetraceRecord {
                 dead_links: faults.num_dead(),
                 dirty_flows: dirty,
                 full_ms: full_st.median_ns / 1e6,
                 serial_ms: serial_st.median_ns / 1e6,
                 parallel,
+                reach_peak_mb: reach.peak_bytes as f64 / (1 << 20) as f64,
             })
         }
     };
 
     RungRecord {
         rung,
-        endpoints: topo.num_nodes(),
+        mode,
+        endpoints: view.num_nodes(),
         flows: pristine.len(),
         trace_ms: trace_st.median_ns / 1e6,
         flows_per_sec: pristine.len() as f64 / (trace_st.median_ns / 1e9),
         bytes_per_flow,
+        peak_rss_mb: peak_rss_mb(),
         retrace,
+    }
+}
+
+/// Build the fault-aware router the way the sweep runner would: lazy
+/// reachability under the fixed budget at ladder scale, eager below.
+fn degraded_for(
+    view: &dyn TopologyView,
+    faults: &FaultSet,
+    base: Box<dyn Router>,
+    tables: Option<&Topology>,
+) -> DegradedRouter {
+    match tables {
+        Some(topo) if topo.num_nodes() < LAZY_REACH_MIN_NODES => {
+            DegradedRouter::new(topo, faults, base).unwrap()
+        }
+        _ => DegradedRouter::new_lazy(view, faults, base, DEFAULT_REACH_BUDGET),
     }
 }
 
@@ -158,32 +207,111 @@ fn main() {
         let flows = all_pairs(topo.num_nodes() as u32);
         let mut faults = FaultSet::none(&topo);
         faults.kill(topo.links.iter().find(|l| l.stage == 2).unwrap().id);
-        ladder.push(measure_rung(name, &topo, &flows, Some(&faults), ""));
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let router = AlgorithmKind::Dmodk.build(&topo, Some(&types), 1);
+        let degraded = degraded_for(
+            &topo,
+            &faults,
+            AlgorithmKind::Dmodk.build(&topo, Some(&types), 1),
+            Some(&topo),
+        );
+        ladder.push(measure_rung(
+            name,
+            "tables",
+            &topo,
+            &*router,
+            &flows,
+            Some((&faults, &degraded)),
+            "",
+        ));
     }
 
-    // Ladder rungs: sampled pairs, `links:K` preset scenarios.
+    // Ladder rungs: sampled pairs, `links:K` preset scenarios, lazy
+    // reachability. The top rung has no tables at all.
     for rung in &LADDER {
         if smoke && rung.name != "16k" {
             println!("  (smoke mode: skipping the {} rung)", rung.name);
             continue;
         }
-        let topo = families::named(rung.topology).unwrap();
-        let flows = pgft::eval::sample_pairs(topo.num_nodes(), rung.dsts_per_node, 1);
+        let spec = families::named_spec(rung.topology).unwrap();
+        let implicit = ImplicitTopology::new(&spec);
+        let tables: Option<Topology> = if rung.name == "1m" {
+            None
+        } else {
+            Some(families::named(rung.topology).unwrap())
+        };
+        let (view, mode): (&dyn TopologyView, &'static str) = match &tables {
+            Some(topo) => (topo, "tables"),
+            None => (&implicit, "implicit"),
+        };
+        let types = tables.as_ref().map(|t| Placement::paper_io().apply(t).unwrap());
+        let flows = pgft::eval::sample_pairs(view.num_nodes(), rung.dsts_per_node, 1);
+        let router = AlgorithmKind::Dmodk.build_view(view, types.as_ref(), 1).unwrap();
+        if rung.name == "16k" {
+            // Pin the implicit arithmetic against the built graph: the
+            // same router, traced through both views, must produce a
+            // byte-identical store.
+            let topo = tables.as_ref().unwrap();
+            let via_tables = FlowSet::trace(topo, &*router, &flows);
+            let via_implicit = FlowSet::trace(&implicit, &*router, &flows);
+            assert_eq!(
+                via_implicit, via_tables,
+                "16k: implicit trace diverged from materialized tables"
+            );
+            println!("  16k: implicit view traced byte-identical to tables");
+        }
         let faults = if rung.fault_links > 0 {
             let model = FaultModel::parse(&format!("links:{}", rung.fault_links)).unwrap();
-            Some(model.generate(&topo, 1).fault_set(&topo))
+            let scenario = match &tables {
+                Some(topo) => model.generate(topo, 1),
+                None => model.generate_view(view, 1).unwrap(),
+            };
+            Some(scenario.fault_set_sized(view.num_links()))
         } else {
             None
         };
-        ladder.push(measure_rung(
-            rung.name,
-            &topo,
-            &flows,
-            faults.as_ref(),
-            "fault-aware router reachability tables exceed the memory budget \
-             at 256k endpoints (DESIGN.md §10)",
-        ));
+        let degraded = faults.as_ref().map(|f| {
+            degraded_for(
+                view,
+                f,
+                AlgorithmKind::Dmodk.build_view(view, types.as_ref(), 1).unwrap(),
+                tables.as_ref(),
+            )
+        });
+        let fault_leg = faults.as_ref().zip(degraded.as_ref());
+        ladder.push(measure_rung(rung.name, mode, view, &*router, &flows, fault_leg, ""));
     }
+
+    // Congestion-kernel duel: the striped (4×u64 block) kernel against
+    // the single-word blocked baseline it replaced, on the largest
+    // store already traced above. Reports must agree bit-for-bit.
+    println!("\n== congestion kernel: striped vs blocked ==");
+    let ktopo = families::named("xl-16k").unwrap();
+    let krouter = AlgorithmKind::Dmodk.build(&ktopo, None, 1);
+    let kflows = pgft::eval::sample_pairs(ktopo.num_nodes(), 4, 1);
+    let kset = FlowSet::trace(&ktopo, &*krouter, &kflows);
+    let (striped_rep, kstats) = CongestionReport::compute_flowset_stats(&ktopo, &kset);
+    let blocked_rep = CongestionReport::compute_flowset_blocked(&ktopo, &kset);
+    assert_eq!(
+        striped_rep, blocked_rep,
+        "striped kernel must reproduce the blocked kernel bit-for-bit"
+    );
+    let blocked_st = Bench::new("eval/kernel-blocked/16k")
+        .target_time(Duration::from_millis(400))
+        .samples(3, 30)
+        .throughput_elems(kset.len() as u64)
+        .run(|_| {
+            std::hint::black_box(CongestionReport::compute_flowset_blocked(&ktopo, &kset));
+        });
+    let striped_st = Bench::new("eval/kernel-striped/16k")
+        .target_time(Duration::from_millis(400))
+        .samples(3, 30)
+        .throughput_elems(kset.len() as u64)
+        .run(|_| {
+            std::hint::black_box(CongestionReport::compute_flowset_stats(&ktopo, &kset));
+        });
+    let blocked_fps = kset.len() as f64 / (blocked_st.median_ns / 1e9);
+    let striped_fps = kset.len() as f64 / (striped_st.median_ns / 1e9);
 
     // Flit-level engine events/s (unchanged leg from schema v1).
     println!("\n== flit-level engine events/s (case study, C2IO, gdmodk) ==");
@@ -203,29 +331,51 @@ fn main() {
     let events_per_sec = events as f64 / (ns_st.median_ns / 1e9);
 
     // Machine-readable perf record (the CI artifact; the committed copy
-    // is pinned well-formed — schema v2, no nulls — by
+    // is pinned well-formed — schema v3, no nulls — by
     // tests/eval_agreement.rs).
     let mut json = String::new();
     let source = if smoke { "rust-bench-smoke" } else { "rust-bench" };
     writeln!(json, "{{").unwrap();
-    writeln!(json, "  \"schema\": \"pgft-bench-eval/2\",").unwrap();
+    writeln!(json, "  \"schema\": \"pgft-bench-eval/3\",").unwrap();
     writeln!(json, "  \"source\": \"{source}\",").unwrap();
-    // Honest provenance for the parallel-repair figures: a thread sweep
-    // on a starved host measures scheduling, not the splice design, so
-    // consumers (tests/eval_agreement.rs) gate the speedup threshold on
-    // the parallelism that was actually available.
+    // Honest provenance for the parallel-repair and kernel figures: a
+    // thread sweep on a starved host measures scheduling, not the
+    // splice design, and autovectorization width varies by host — so
+    // consumers (tests/eval_agreement.rs) gate their thresholds on the
+    // parallelism that was actually available.
     let host_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     writeln!(json, "  \"host_cpus\": {host_cpus},").unwrap();
     writeln!(json, "  \"netsim\": {{\"events_per_sec\": {events_per_sec:.1}}},").unwrap();
+    writeln!(
+        json,
+        "  \"kernel\": {{\"rung\": \"16k\", \"flows\": {}, \
+         \"blocked_flows_per_sec\": {blocked_fps:.1}, \
+         \"striped_flows_per_sec\": {striped_fps:.1}, \
+         \"speedup\": {:.4}, \"touched_ports\": {}, \"merged_words\": {}}},",
+        kset.len(),
+        striped_fps / blocked_fps.max(1e-9),
+        kstats.touched_ports,
+        kstats.merged_words,
+    )
+    .unwrap();
     writeln!(json, "  \"ladder\": [").unwrap();
     for (i, r) in ladder.iter().enumerate() {
         writeln!(json, "    {{").unwrap();
         writeln!(json, "      \"rung\": \"{}\",", r.rung).unwrap();
+        writeln!(json, "      \"mode\": \"{}\",", r.mode).unwrap();
         writeln!(json, "      \"endpoints\": {},", r.endpoints).unwrap();
         writeln!(json, "      \"flows\": {},", r.flows).unwrap();
         writeln!(json, "      \"trace_ms\": {:.4},", r.trace_ms).unwrap();
         writeln!(json, "      \"flows_per_sec\": {:.1},", r.flows_per_sec).unwrap();
         writeln!(json, "      \"bytes_per_flow\": {:.2},", r.bytes_per_flow).unwrap();
+        match r.peak_rss_mb {
+            Some(mb) => writeln!(json, "      \"peak_rss_mb\": {mb:.1},").unwrap(),
+            None => writeln!(
+                json,
+                "      \"peak_rss_mb\": {{\"skipped\": \"VmHWM needs /proc (Linux)\"}},"
+            )
+            .unwrap(),
+        }
         match &r.retrace {
             Err(reason) => {
                 writeln!(json, "      \"retrace\": {{\"skipped\": \"{reason}\"}}").unwrap();
@@ -236,6 +386,7 @@ fn main() {
                 writeln!(json, "        \"dirty_flows\": {},", rt.dirty_flows).unwrap();
                 writeln!(json, "        \"full_ms\": {:.4},", rt.full_ms).unwrap();
                 writeln!(json, "        \"serial_ms\": {:.4},", rt.serial_ms).unwrap();
+                writeln!(json, "        \"reach_peak_mb\": {:.2},", rt.reach_peak_mb).unwrap();
                 writeln!(
                     json,
                     "        \"speedup_incremental\": {:.4},",

@@ -35,7 +35,7 @@
 use crate::config::ExperimentConfig;
 use crate::coordinator::Coordinator;
 use crate::eval::{evaluate_all, parse_evaluators, FlowSet};
-use crate::faults::{FaultModel, FaultSet};
+use crate::faults::{DegradedRouter, FaultModel, FaultSet, DEFAULT_REACH_BUDGET};
 use crate::metrics::{render_algorithm_table, CongestionReport};
 use crate::netsim::{
     curve_table, default_rates, load_curve_with, saturation_point, CurvePoint, Injection,
@@ -54,11 +54,11 @@ use crate::telemetry::{
     summary_table as telemetry_summary_table, write_telemetry, BatchRecord, Registry, Telemetry,
     TelemetryRun,
 };
-use crate::topology::{families, render, Topology};
+use crate::topology::{families, render, ImplicitTopology, Topology, TopologyView};
 use crate::workload::{
     evaluate_makespan, evaluate_makespan_traced, lower, WorkloadEval, WorkloadSpec,
 };
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -80,6 +80,7 @@ const ALIAS_GROUPS: &[&[&str]] = &[
     &["workload", "workloads"],
     &["rate", "rates"],
     &["evaluator", "evaluators"],
+    &["thread", "threads"],
 ];
 
 /// Parsed `--key value` / `--flag` arguments.
@@ -271,9 +272,15 @@ commands:
                (algorithm, pattern) cell, scored by any evaluator stack
                (--evaluators congestion,fairrate,netsim:0.3; --faults SPEC
                 repairs the store via incremental re-trace first;
-                --size 16k|64k|256k walks a large-fabric ladder rung with
-                sampled pairs, reporting trace/repair rates instead of
-                pattern rows)
+                --serial / --threads N caps the repair fan-out — stores
+                below ~32k flows fall back to serial regardless, the
+                width policy that keeps small repairs spawn-free;
+                --size 16k|64k|256k|1m walks a large-fabric ladder rung
+                with sampled pairs, reporting trace/repair rates instead
+                of pattern rows; --implicit routes a rung through the
+                arithmetic topology view — no port tables — and asserts
+                byte-identity against the materialized trace; the 1m
+                rung is implicit-only)
   workload     application workloads: concurrent multi-phase job mixes over
                typed node groups (--workload mix|allreduce|checkpoint|
                single:<pattern>:BYTES|FILE.toml; collectives: ring/rd
@@ -469,11 +476,17 @@ fn cmd_faults(args: &Args) -> Result<()> {
 /// `--faults SPEC` the store is first repaired through
 /// [`FlowSet::retrace_incremental`] against the scenario expanded from
 /// `--seed`, and the `changed` column reports how many routes moved.
+///
+/// `--serial` / `--threads N` cap the repair fan-out; the
+/// [`crate::eval::repair_threads`] width policy still gates small
+/// stores to serial (the spawn cost swamps the win below ~32k flows),
+/// so the flag is a *cap*, not a force.
 fn cmd_eval(args: &Args) -> Result<()> {
     if let Some(size) = args.get("size") {
         return cmd_eval_size(args, size);
     }
     let (topo, types) = load_topo(args)?;
+    let max_threads = parse_threads(args)?;
     let seed = args.u64_or("seed", 1)?;
     let evaluators = parse_evaluators(&args.get_or("evaluators", "congestion,fairrate"))?;
     let faults = parse_fault_set(args, &topo, seed)?;
@@ -493,7 +506,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
             let (set, changed) = match &faults {
                 Some(f) => {
                     let degraded = kind.build_degraded(&topo, Some(&types), seed, f)?;
-                    let threads = crate::eval::repair_threads(pristine.len());
+                    let threads = max_threads.min(crate::eval::repair_threads(pristine.len()));
                     pristine.retrace_incremental_telem(&topo, f, &*degraded, threads, &telem)
                 }
                 None => (pristine, 0),
@@ -539,25 +552,64 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 /// `pgft eval --size` — one rung of the large-fabric size ladder
-/// ([`crate::eval::LADDER`]): build the rung's 3-level PGFT, generate
+/// ([`crate::eval::LADDER`]): resolve the rung's 3-level PGFT, generate
 /// its sampled flow pairs, trace the arena-backed store, repair it
 /// against the rung's preset fault scenario (overridable with
 /// `--faults`) through the parallel incremental re-trace, and report
 /// rates (flows/s, bytes/flow, repair ms) instead of pattern rows.
 /// Defaults to `--algo dmodk` and `--evaluators congestion` — the
 /// fair-rate and flit-level engines do not scale to these stores.
+///
+/// `--implicit` routes the rung through the arithmetic
+/// [`ImplicitTopology`] view instead of materialized port tables and
+/// asserts the resulting trace is byte-identical to the tables where
+/// they exist (every rung below 1M). The 1M rung is implicit-only —
+/// its port tables would cost tens of GiB — and its fault repair runs
+/// the lazily-built per-destination reachability under
+/// [`DEFAULT_REACH_BUDGET`] (DESIGN.md §12); the `reach_mb` column
+/// reports the peak reach-table footprint actually paid.
 fn cmd_eval_size(args: &Args, size: &str) -> Result<()> {
     let rung = crate::eval::ladder::rung(size).with_context(|| {
         let names: Vec<&str> =
             crate::eval::LADDER.iter().map(|r| r.name).collect();
         format!("--size {size:?} is not a ladder rung (try one of {names:?})")
     })?;
-    let topo = families::named(rung.topology)?;
-    crate::topology::validate::validate(&topo)?;
-    let types = Placement::parse(&args.get_or("placement", "io:last:1"))?.apply(&topo)?;
+    let spec = families::named_spec(rung.topology)?;
+    let use_implicit = rung.name == "1m" || args.flag("implicit");
+    let implicit = ImplicitTopology::new(&spec);
+    let tables: Option<Topology> = if rung.name == "1m" {
+        None
+    } else {
+        let topo = families::named(rung.topology)?;
+        crate::topology::validate::validate(&topo)?;
+        Some(topo)
+    };
+    let view: &dyn TopologyView = if use_implicit {
+        &implicit
+    } else {
+        tables.as_ref().expect("every rung below 1m materializes tables")
+    };
+    // Node types need materialized tables today (placement walks the
+    // graph); the 1m rung runs untyped, which keeps dmodk/smodk exact
+    // and only loses the IO-aware tie-break.
+    let types = match &tables {
+        Some(topo) => {
+            Some(Placement::parse(&args.get_or("placement", "io:last:1"))?.apply(topo)?)
+        }
+        None => None,
+    };
     let seed = args.u64_or("seed", 1)?;
-    let evaluators = parse_evaluators(&args.get_or("evaluators", "congestion"))?;
-    let flows = crate::eval::sample_pairs(topo.num_nodes(), rung.dsts_per_node, seed);
+    let eval_spec = args.get_or("evaluators", "congestion");
+    let evaluators = parse_evaluators(&eval_spec)?;
+    if use_implicit {
+        ensure!(
+            eval_spec == "congestion",
+            "--implicit scores through the table-free congestion kernel only \
+             (got --evaluators {eval_spec:?}); the fair-rate and flit engines \
+             need materialized tables"
+        );
+    }
+    let flows = crate::eval::sample_pairs(view.num_nodes(), rung.dsts_per_node, seed);
     // The rung's preset fault scenario, unless the user asked for one.
     let fault_spec = match args.get("faults") {
         Some(s) => s.to_string(),
@@ -568,46 +620,101 @@ fn cmd_eval_size(args: &Args, size: &str) -> Result<()> {
         None
     } else {
         let model = FaultModel::parse(&fault_spec)?;
-        model.validate_for(&topo.spec)?;
-        Some(model.generate(&topo, seed).fault_set(&topo))
+        model.validate_for(&spec)?;
+        let scenario = match &tables {
+            Some(topo) => model.generate(topo, seed),
+            None => model.generate_view(view, seed)?,
+        };
+        Some(scenario.fault_set_sized(view.num_links()))
     };
     let algos = match args.get_or("algo", "dmodk").as_str() {
         "all" => AlgorithmKind::ALL.to_vec(),
         spec => spec.split(',').map(AlgorithmKind::parse).collect::<Result<Vec<_>>>()?,
     };
     let threads = parse_threads(args)?;
+    let telem = telemetry_handle(args);
     let mut t = Table::new(
         "large-fabric ladder rung: sampled pairs, parallel incremental repair",
         &[
-            "size", "algo", "flows", "hops", "bytes_per_flow", "trace_ms", "flows_per_sec",
-            "dead_links", "changed", "retrace_ms", "threads", "C_topo", "hot_ports",
+            "size", "algo", "mode", "flows", "hops", "bytes_per_flow", "trace_ms",
+            "flows_per_sec", "dead_links", "changed", "retrace_ms", "threads",
+            "reach_mb", "C_topo", "hot_ports",
         ],
     );
+    let mode = if use_implicit { "implicit" } else { "tables" };
     for kind in algos {
-        let router = kind.build(&topo, Some(&types), seed);
-        let t0 = Instant::now();
-        let pristine = FlowSet::trace(&topo, &*router, &flows);
-        let trace_s = t0.elapsed().as_secs_f64();
-        let bytes_per_flow = pristine.arena_bytes() as f64 / pristine.len().max(1) as f64;
-        let (set, changed, retrace_ms, used_threads) = match &faults {
-            Some(f) => {
-                let degraded = kind.build_degraded(&topo, Some(&types), seed, f)?;
-                let used = threads.min(crate::eval::repair_threads(pristine.len()));
-                let t1 = Instant::now();
-                let (set, changed) =
-                    pristine.retrace_incremental_par(&topo, f, &*degraded, used);
-                (set, changed, t1.elapsed().as_secs_f64() * 1e3, used)
-            }
-            None => (pristine, 0, 0.0, 1),
+        let router = if use_implicit {
+            kind.build_view(view, types.as_ref(), seed)?
+        } else {
+            kind.build(tables.as_ref().unwrap(), types.as_ref(), seed)
         };
-        let cells = evaluate_all(&evaluators, &topo, &set, seed);
-        let (c_topo, hot) = match &cells.congestion {
-            Some(rep) => (rep.c_topo().to_string(), rep.hot_ports().len().to_string()),
-            None => Default::default(),
+        let t0 = Instant::now();
+        let pristine = FlowSet::trace(view, &*router, &flows);
+        let trace_s = t0.elapsed().as_secs_f64();
+        if use_implicit {
+            if let Some(topo) = &tables {
+                // The contract the implicit view lives by: same router,
+                // same flows, byte-identical store either way.
+                let reference = FlowSet::trace(topo, &*router, &flows);
+                ensure!(
+                    pristine == reference,
+                    "implicit trace diverged from materialized tables on rung {}",
+                    rung.name
+                );
+            }
+        }
+        let bytes_per_flow = pristine.arena_bytes() as f64 / pristine.len().max(1) as f64;
+        telem.add("eval.store.arena_bytes", pristine.arena_bytes() as u64);
+        let (set, changed, retrace_ms, used_threads, reach) = match &faults {
+            Some(f) => {
+                let used = threads.min(crate::eval::repair_threads(pristine.len()));
+                if use_implicit {
+                    let base = kind.build_view(view, types.as_ref(), seed)?;
+                    let degraded = crate::faults::DegradedRouter::new_lazy(
+                        view,
+                        f,
+                        base,
+                        DEFAULT_REACH_BUDGET,
+                    );
+                    let t1 = Instant::now();
+                    let (set, changed) =
+                        pristine.retrace_incremental_par(view, f, &degraded, used);
+                    let ms = t1.elapsed().as_secs_f64() * 1e3;
+                    (set, changed, ms, used, Some(degraded.reach_stats()))
+                } else {
+                    let topo = tables.as_ref().unwrap();
+                    let degraded = kind.build_degraded(topo, types.as_ref(), seed, f)?;
+                    let t1 = Instant::now();
+                    let (set, changed) =
+                        pristine.retrace_incremental_par(view, f, &*degraded, used);
+                    (set, changed, t1.elapsed().as_secs_f64() * 1e3, used, None)
+                }
+            }
+            None => (pristine, 0, 0.0, 1, None),
+        };
+        if let Some(r) = &reach {
+            telem.add("eval.reach.computed", r.computed);
+            telem.add("eval.reach.hits", r.hits);
+            telem.add("eval.reach.evictions", r.evictions);
+            telem.add("eval.reach.peak_bytes", r.peak_bytes);
+        }
+        let (c_topo, hot) = if use_implicit {
+            let (rep, ks) = CongestionReport::compute_flowset_stats(view, &set);
+            telem.add("eval.kernel.blocks", ks.blocks);
+            telem.add("eval.kernel.touched_ports", ks.touched_ports);
+            telem.add("eval.kernel.merged_words", ks.merged_words);
+            (rep.c_topo().to_string(), rep.hot_ports().len().to_string())
+        } else {
+            let cells = evaluate_all(&evaluators, tables.as_ref().unwrap(), &set, seed);
+            match &cells.congestion {
+                Some(rep) => (rep.c_topo().to_string(), rep.hot_ports().len().to_string()),
+                None => Default::default(),
+            }
         };
         t.row(&[
             rung.name.to_string(),
             kind.as_str().to_string(),
+            mode.to_string(),
             set.len().to_string(),
             set.total_hops().to_string(),
             format!("{bytes_per_flow:.1}"),
@@ -617,11 +724,16 @@ fn cmd_eval_size(args: &Args, size: &str) -> Result<()> {
             changed.to_string(),
             format!("{retrace_ms:.1}"),
             used_threads.to_string(),
+            reach.map_or_else(
+                || "0.0".to_string(),
+                |r| format!("{:.1}", r.peak_bytes as f64 / 1e6),
+            ),
             c_topo,
             hot,
         ]);
     }
-    emit(&t, args)
+    emit(&t, args)?;
+    emit_telemetry(args, "eval", &[TelemetryRun::unlabelled(telem.snapshot())], &[])
 }
 
 /// `pgft workload` — evaluate application workloads (concurrent
@@ -1483,7 +1595,19 @@ mod tests {
         // links:320 repair leg is exercised by the bench and the
         // retrace property tests — too slow for a debug unit test.)
         run(&argv(&["eval", "--size", "16k", "--faults", "none", "--serial"])).unwrap();
-        assert!(run(&argv(&["eval", "--size", "1m"])).is_err());
+        // Same rung through the arithmetic view: cmd_eval_size asserts
+        // the implicit trace is byte-identical to the tables in-line,
+        // so a clean exit IS the identity check.
+        run(&argv(&[
+            "eval", "--size", "16k", "--implicit", "--faults", "none", "--serial",
+        ]))
+        .unwrap();
+        assert!(run(&argv(&["eval", "--size", "2m"])).is_err());
+        // Implicit mode refuses evaluator stacks that need port tables.
+        assert!(run(&argv(&[
+            "eval", "--size", "16k", "--implicit", "--evaluators", "fairrate",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -61,7 +61,7 @@ use crate::faults::FaultSet;
 use crate::routing::trace::{trace_route_into, RoutePorts};
 use crate::routing::Router;
 use crate::telemetry::Telemetry;
-use crate::topology::{Nid, PortId, Topology};
+use crate::topology::{Nid, PortId, TopologyView};
 use crate::util::par::par_map;
 use std::time::Instant;
 
@@ -186,13 +186,14 @@ impl FlowSet {
     ///
     /// If the total hop count exceeds [`FlowSet::MAX_ARENA_LEN`] (the
     /// u32 CSR offset limit), with a capacity error naming the limit.
-    pub fn trace(topo: &Topology, router: &dyn Router, flows: &[(Nid, Nid)]) -> FlowSet {
+    pub fn trace(topo: &dyn TopologyView, router: &dyn Router, flows: &[(Nid, Nid)]) -> FlowSet {
         // Exact pre-size: pristine routers produce minimal routes, so
         // the arena holds exactly the sum of minimal hop counts. A
         // fault-aware router can exceed a flow's minimal length; the
         // append path then grows in bounded chunks.
+        let spec = topo.spec();
         let cap: usize =
-            flows.iter().map(|&(s, d)| topo.spec.minimal_hops(s as u64, d as u64)).sum();
+            flows.iter().map(|&(s, d)| spec.minimal_hops(s as u64, d as u64)).sum();
         let mut set = FlowSet {
             pairs: Vec::with_capacity(flows.len()),
             weights: vec![1; flows.len()],
@@ -200,7 +201,7 @@ impl FlowSet {
             ports: Vec::with_capacity(cap),
         };
         set.offsets.push(0);
-        let mut scratch: Vec<PortId> = Vec::with_capacity(2 * topo.spec.h + 1);
+        let mut scratch: Vec<PortId> = Vec::with_capacity(2 * spec.h + 1);
         for &(src, dst) in flows {
             set.pairs.push((src, dst));
             scratch.clear();
@@ -215,7 +216,7 @@ impl FlowSet {
     /// per flow for demand-aware evaluators; the built-in evaluators
     /// treat every flow as one unit of demand).
     pub fn trace_weighted(
-        topo: &Topology,
+        topo: &dyn TopologyView,
         router: &dyn Router,
         flows: &[(Nid, Nid, u32)],
     ) -> FlowSet {
@@ -330,8 +331,8 @@ impl FlowSet {
 
     /// Whether a flow's stored route crosses a link the fault set killed.
     #[inline]
-    pub fn crosses_fault(&self, topo: &Topology, faults: &FaultSet, flow: usize) -> bool {
-        self.route(flow).iter().any(|&p| faults.is_dead(topo.ports[p as usize].link))
+    pub fn crosses_fault(&self, topo: &dyn TopologyView, faults: &FaultSet, flow: usize) -> bool {
+        self.route(flow).iter().any(|&p| faults.is_dead(topo.port_link(p as usize)))
     }
 
     /// Flows whose stored route crosses a dead link — exactly the set a
@@ -339,7 +340,7 @@ impl FlowSet {
     /// without touching the arena: a zero-fault sweep cell at the
     /// 256k-endpoint rung must not pay a full-arena scan to learn that
     /// nothing is dirty.
-    pub fn dirty_flows(&self, topo: &Topology, faults: &FaultSet) -> Vec<usize> {
+    pub fn dirty_flows(&self, topo: &dyn TopologyView, faults: &FaultSet) -> Vec<usize> {
         if faults.num_dead() == 0 {
             return Vec::new();
         }
@@ -362,7 +363,7 @@ impl FlowSet {
     /// (`benches/bench_eval.rs` records the speedup).
     pub fn retrace_incremental(
         &self,
-        topo: &Topology,
+        topo: &dyn TopologyView,
         faults: &FaultSet,
         router: &dyn Router,
     ) -> (FlowSet, usize) {
@@ -385,7 +386,7 @@ impl FlowSet {
     /// retrace itself.
     pub fn retrace_incremental_par(
         &self,
-        topo: &Topology,
+        topo: &dyn TopologyView,
         faults: &FaultSet,
         router: &dyn Router,
         threads: usize,
@@ -400,7 +401,7 @@ impl FlowSet {
     /// untimed paths.
     pub fn retrace_incremental_timed(
         &self,
-        topo: &Topology,
+        topo: &dyn TopologyView,
         faults: &FaultSet,
         router: &dyn Router,
         threads: usize,
@@ -418,7 +419,7 @@ impl FlowSet {
     /// so a disabled handle is exactly the plain parallel path.
     pub fn retrace_incremental_telem(
         &self,
-        topo: &Topology,
+        topo: &dyn TopologyView,
         faults: &FaultSet,
         router: &dyn Router,
         threads: usize,
@@ -450,7 +451,7 @@ impl FlowSet {
     /// and never influence the repaired bytes.
     fn retrace_core(
         &self,
-        topo: &Topology,
+        topo: &dyn TopologyView,
         faults: &FaultSet,
         router: &dyn Router,
         threads: usize,
@@ -472,11 +473,12 @@ impl FlowSet {
         // duration) for its chunk; lens delimit the sub-arena the same
         // way CSR offsets do.
         let t1 = Instant::now();
+        let h = topo.spec().h;
         let traced: Vec<(Vec<u32>, Vec<u32>, u64)> = par_map(threads, &groups, |_, group| {
             let tc = Instant::now();
-            let mut arena: Vec<u32> = Vec::with_capacity(group.len() * 2 * topo.spec.h);
+            let mut arena: Vec<u32> = Vec::with_capacity(group.len() * 2 * h);
             let mut lens: Vec<u32> = Vec::with_capacity(group.len());
-            let mut scratch: Vec<PortId> = Vec::with_capacity(2 * topo.spec.h + 1);
+            let mut scratch: Vec<PortId> = Vec::with_capacity(2 * h + 1);
             for &f in *group {
                 let (src, dst) = self.pairs[f];
                 scratch.clear();
@@ -549,7 +551,7 @@ mod tests {
     use crate::patterns::Pattern;
     use crate::routing::trace::trace_flows;
     use crate::routing::AlgorithmKind;
-    use crate::topology::{build_pgft, PgftSpec};
+    use crate::topology::{build_pgft, PgftSpec, Topology};
 
     fn setup() -> (Topology, Vec<(Nid, Nid)>) {
         let topo = build_pgft(&PgftSpec::case_study());

@@ -4,13 +4,16 @@
 //! The paper's evaluation lives on a 64-node case study; the pipeline
 //! itself is built to score production-shaped fabrics. This module
 //! names the rungs the scaling story is measured on — 3-level PGFTs at
-//! 16k / 64k / 256k endpoints (see `xl-*` in
+//! 16k / 64k / 256k / 1M endpoints (see `xl-*` in
 //! [`crate::topology::families`]) — and generates the deterministic
 //! *sampled-pair* patterns that make them tractable: all-pairs at 256k
 //! endpoints is ~69 G flows (petabytes of arena), while `dsts_per_node`
 //! sampled destinations per source keep the flow count linear in the
 //! node count and still exercise every source and (with overwhelming
-//! probability) every inter-switch link.
+//! probability) every inter-switch link. The top rung (1M endpoints)
+//! additionally requires the implicit topology
+//! ([`crate::topology::ImplicitTopology`]) — its port tables would not
+//! fit a sensible memory budget materialized.
 //!
 //! The generator is mirrored byte-for-byte in
 //! `python/tools/pgft_ladder.py`; `python/tests/test_ladder_mirror.py`
@@ -36,10 +39,11 @@ pub struct LadderRung {
     pub dsts_per_node: usize,
     /// Dead links for the rung's retrace measurement (a `links:K` fault
     /// scenario; ~10% of flows dirty at 4 eligible hops per route).
-    /// `0` means the retrace leg is skipped on this rung — building a
-    /// fault-aware router materializes per-destination reachability
-    /// tables that are out of memory budget at 256k endpoints (see
-    /// DESIGN.md §10).
+    /// Every rung runs the retrace leg: the fault-aware router builds
+    /// its per-destination reachability *lazily* under a fixed memory
+    /// budget ([`crate::faults::DEFAULT_REACH_BUDGET`], DESIGN.md §12),
+    /// so dirty destinations are the only ones that ever pay for a
+    /// reach table. `0` would skip the leg; no current rung uses it.
     pub fault_links: usize,
 }
 
@@ -52,10 +56,11 @@ impl LadderRung {
 }
 
 /// The ladder, smallest rung first.
-pub const LADDER: [LadderRung; 3] = [
+pub const LADDER: [LadderRung; 4] = [
     LadderRung { name: "16k", topology: "xl-16k", dsts_per_node: 4, fault_links: 320 },
     LadderRung { name: "64k", topology: "xl-64k", dsts_per_node: 2, fault_links: 1280 },
-    LadderRung { name: "256k", topology: "xl-256k", dsts_per_node: 1, fault_links: 0 },
+    LadderRung { name: "256k", topology: "xl-256k", dsts_per_node: 1, fault_links: 2560 },
+    LadderRung { name: "1m", topology: "xl-1m", dsts_per_node: 1, fault_links: 5120 },
 ];
 
 /// Look a rung up by its CLI name (`"16k"`) or topology name

@@ -41,7 +41,7 @@ pub mod router;
 pub mod scenario;
 pub mod view;
 
-pub use router::DegradedRouter;
+pub use router::{DegradedRouter, ReachStats, DEFAULT_REACH_BUDGET};
 pub use scenario::{FaultModel, FaultScenario, LinkEvent};
 pub use view::{DegradedTopology, ReachField};
 
@@ -57,7 +57,14 @@ pub struct FaultSet {
 impl FaultSet {
     /// A fully healthy fabric (no dead links).
     pub fn none(topo: &Topology) -> FaultSet {
-        FaultSet { dead: vec![false; topo.links.len()], count: 0 }
+        FaultSet::none_sized(topo.links.len())
+    }
+
+    /// A fully healthy fabric by link count — the constructor for
+    /// implicit topologies ([`crate::topology::TopologyView::num_links`]),
+    /// where no link table exists to measure.
+    pub fn none_sized(num_links: usize) -> FaultSet {
+        FaultSet { dead: vec![false; num_links], count: 0 }
     }
 
     /// A fault set with the given links dead.

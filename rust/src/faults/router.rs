@@ -28,8 +28,10 @@
 use super::view::DegradedTopology;
 use super::FaultSet;
 use crate::routing::Router;
-use crate::topology::{Endpoint, Nid, PortId, SwitchId, Topology};
+use crate::topology::{Endpoint, Nid, PortId, SwitchId, Topology, TopologyView};
 use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// Bit test in a packed `Vec<u64>` bitset.
 #[inline]
@@ -43,14 +45,206 @@ fn set_bit(bits: &mut [u64], i: usize) {
     bits[i >> 6] |= 1u64 << (i & 63);
 }
 
+/// Default reach-arena budget for [`DegradedRouter::new_lazy`]: 256 MiB,
+/// far above what a retrace's dirty-destination working set needs at any
+/// ladder rung, far below the ~8.6 GiB the eager tables cost at 256k.
+pub const DEFAULT_REACH_BUDGET: usize = 256 << 20;
+
+/// Residency/throughput counters of the lazy reachability arena
+/// (all zero in eager mode). Exported to telemetry as `eval.reach.*`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReachStats {
+    /// Destination entries computed (arena misses).
+    pub computed: u64,
+    /// Queries served by a resident destination entry.
+    pub hits: u64,
+    /// Destination entries dropped by arena flushes.
+    pub evictions: u64,
+    /// Approximate resident bytes right now.
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes`.
+    pub peak_bytes: u64,
+}
+
+/// Per-destination lazy reachability: descend bits for the destination's
+/// ancestor cone plus a memo of good-switch verdicts actually queried.
+struct ReachEntry {
+    /// Packed descend bits: level `l`'s `W_l` ancestors at bit offset
+    /// `level_bit_off[l-1]` (non-ancestors can never pure-descend).
+    descend: Vec<u64>,
+    /// Memoized "does `sw` still reach dst" verdicts, filled by the
+    /// upward recursion as routes actually query them.
+    good: HashMap<SwitchId, bool>,
+}
+
+/// The lazy arena: destination entries under a byte budget. When the
+/// budget would be exceeded the whole arena is reclaimed (arena-style
+/// flush, not per-entry LRU: eviction is O(1) amortized, deterministic,
+/// and a retrace's dirty destinations are visited in grouped runs, so
+/// refaulting is rare — see DESIGN.md §12).
+struct LazyReach {
+    budget: usize,
+    bytes: usize,
+    /// Bit offset of each level's ancestor slice in a `ReachEntry`
+    /// (`level_bit_off[h]` = total bits).
+    level_bit_off: Vec<usize>,
+    entries: HashMap<Nid, ReachEntry>,
+    stats: ReachStats,
+}
+
+/// Approximate heap bytes of one memoized good verdict (HashMap entry
+/// plus load-factor slack) — only budget accounting, not an allocator.
+const MEMO_ENTRY_BYTES: usize = 48;
+
+impl LazyReach {
+    fn new(spec: &crate::topology::PgftSpec, budget: usize) -> LazyReach {
+        let mut level_bit_off = Vec::with_capacity(spec.h + 1);
+        let mut acc = 0usize;
+        for l in 1..=spec.h {
+            level_bit_off.push(acc);
+            acc += spec.w_prefix(l) as usize;
+        }
+        level_bit_off.push(acc);
+        LazyReach { budget, bytes: 0, level_bit_off, entries: HashMap::new(), stats: ReachStats::default() }
+    }
+
+    /// Ensure `dst`'s entry is resident, flushing the arena first if the
+    /// budget would be exceeded. Returns whether it was computed fresh.
+    fn ensure(&mut self, topo: &dyn TopologyView, faults: &FaultSet, dst: Nid) -> bool {
+        if self.entries.contains_key(&dst) {
+            self.stats.hits += 1;
+            return false;
+        }
+        let total_bits = *self.level_bit_off.last().unwrap();
+        let entry_bytes = total_bits.div_ceil(64) * 8 + std::mem::size_of::<ReachEntry>();
+        if self.bytes + entry_bytes > self.budget && !self.entries.is_empty() {
+            self.stats.evictions += self.entries.len() as u64;
+            self.entries.clear();
+            self.bytes = 0;
+        }
+        // Bottom-up over the ancestor cone only (Σ W_l switches, not ns):
+        // a switch pure-descends iff some alive parallel link leads to a
+        // child that pure-descends (level 1: to the destination node).
+        // Identical to the full-fabric pass in `DegradedTopology::reach`
+        // restricted to ancestors — non-ancestors never descend.
+        let spec = topo.spec();
+        let mut descend = vec![0u64; total_bits.div_ceil(64)];
+        for l in 1..=spec.h {
+            let anc = topo.ancestors_at(l, dst);
+            let child_anc_start = if l > 1 { topo.ancestors_at(l - 1, dst).start } else { 0 };
+            for sw in anc.clone() {
+                let off = self.level_bit_off[l - 1] + (sw - anc.start);
+                let alive = (0..spec.p[l - 1]).any(|j| {
+                    let port = topo.down_port_toward(sw, dst, j);
+                    if faults.is_dead(topo.port_link(port)) {
+                        return false;
+                    }
+                    match topo.port_peer(port) {
+                        Endpoint::Node(peer) => peer == dst,
+                        Endpoint::Switch(child) => {
+                            let coff = self.level_bit_off[l - 2] + (child - child_anc_start);
+                            get_bit(&descend, coff)
+                        }
+                    }
+                });
+                if alive {
+                    set_bit(&mut descend, off);
+                }
+            }
+        }
+        self.entries.insert(dst, ReachEntry { descend, good: HashMap::new() });
+        self.bytes += entry_bytes;
+        self.stats.computed += 1;
+        self.stats.resident_bytes = self.bytes as u64;
+        self.stats.peak_bytes = self.stats.peak_bytes.max(self.bytes as u64);
+        true
+    }
+
+    /// Descend bit for an arbitrary switch (false off the ancestor cone).
+    fn descend_at(&mut self, topo: &dyn TopologyView, faults: &FaultSet, sw: SwitchId, dst: Nid) -> bool {
+        self.ensure(topo, faults, dst);
+        let l = topo.switch_level(sw);
+        let anc = topo.ancestors_at(l, dst);
+        if !anc.contains(&sw) {
+            return false;
+        }
+        let off = self.level_bit_off[l - 1] + (sw - anc.start);
+        get_bit(&self.entries[&dst].descend, off)
+    }
+
+    /// Memoized upward recursion: `sw` reaches `dst` iff it
+    /// pure-descends or some alive up-link leads to a parent that does.
+    /// The one-pass top-down sweep of the eager tables computes exactly
+    /// this fixpoint (up-links are strictly level-increasing, so the
+    /// recursion terminates at the top level), which keeps lazy and
+    /// eager verdicts — and therefore every routing decision —
+    /// byte-identical.
+    fn switch_good(&mut self, topo: &dyn TopologyView, faults: &FaultSet, sw: SwitchId, dst: Nid) -> bool {
+        self.ensure(topo, faults, dst);
+        if let Some(&v) = self.entries[&dst].good.get(&sw) {
+            self.stats.hits += 1;
+            return v;
+        }
+        let v = if self.descend_at(topo, faults, sw, dst) {
+            true
+        } else {
+            let l = topo.switch_level(sw);
+            let spec = topo.spec();
+            (0..spec.up_ports_at(l)).any(|u| {
+                let port = topo.switch_up_port(sw, u);
+                if faults.is_dead(topo.port_link(port)) {
+                    return false;
+                }
+                match topo.port_peer(port) {
+                    Endpoint::Switch(parent) => self.switch_good(topo, faults, parent, dst),
+                    Endpoint::Node(_) => false,
+                }
+            })
+        };
+        self.entries.get_mut(&dst).expect("entry resident").good.insert(sw, v);
+        self.bytes += MEMO_ENTRY_BYTES;
+        self.stats.resident_bytes = self.bytes as u64;
+        self.stats.peak_bytes = self.stats.peak_bytes.max(self.bytes as u64);
+        v
+    }
+}
+
+/// Where the per-destination reachability verdicts come from.
+enum ReachStore {
+    /// All destinations precomputed and bit-packed at construction
+    /// (validates full connectivity; `n·(n+2·ns)` bits — ~8.6 GiB at the
+    /// 256k rung, which is what priced the big rungs out before the lazy
+    /// mode existed).
+    Eager {
+        /// Bit `dst · ns + sw` — can `sw` pure-descend to `dst`?
+        descend: Vec<u64>,
+        /// Bit `dst · (n + ns) + elem` — does an up\*/down\* path
+        /// survive? (elements nodes-first, as in
+        /// [`super::view::ReachField`]).
+        good: Vec<u64>,
+    },
+    /// Destinations computed on first query under a byte budget —
+    /// O(dirty destinations), not O(n), during an incremental retrace.
+    Lazy(Mutex<LazyReach>),
+}
+
 /// A fault-aware wrapper around any [`Router`] (see module docs).
 ///
-/// The per-destination reachability tables are bit-packed: the dense
-/// `Vec<bool>` layout cost `n·(n + ns)` bytes — ~4.5 GiB at the 64k
-/// rung of the eval ladder — while the packed form is 8× leaner and
-/// indexes identically. (At 256k endpoints even the packed tables are
-/// ~8.6 GiB, which is why the ladder's top rung skips the retrace leg;
-/// see DESIGN.md §10.)
+/// Two reachability strategies share identical routing decisions:
+///
+/// * [`DegradedRouter::new`] — **eager**: every destination's bit-packed
+///   descend/good tables precomputed, full connectivity validated up
+///   front (a partition is a clean `Err`). `n·(n+2·ns)` bits: fine
+///   through 64k endpoints, ~8.6 GiB at 256k.
+/// * [`DegradedRouter::new_lazy`] — **memory-bounded**: per-destination
+///   reachability computed on first query (descend over the Σ W_l
+///   ancestor cone, good via memoized upward recursion) and kept in an
+///   arena under a byte budget. An incremental retrace only queries the
+///   fault-dirty destinations, so the 256k retrace leg and the 1M
+///   `links:K` legs run in tens of MiB. No up-front validation: routing
+///   a pair the surviving fabric no longer connects panics with the
+///   partition named (the ladder's stage≥2 `links:K` scenarios cannot
+///   partition node links).
 pub struct DegradedRouter {
     base: Box<dyn Router>,
     faults: FaultSet,
@@ -58,11 +252,7 @@ pub struct DegradedRouter {
     n: usize,
     /// Switch count of the topology this was built for.
     ns: usize,
-    /// Bit `dst · ns + sw` — can `sw` pure-descend to `dst`?
-    descend: Vec<u64>,
-    /// Bit `dst · (n + ns) + elem` — does an up\*/down\* path survive?
-    /// (elements nodes-first, as in [`super::view::ReachField`]).
-    good: Vec<u64>,
+    reach: ReachStore,
 }
 
 impl DegradedRouter {
@@ -101,7 +291,32 @@ impl DegradedRouter {
                 }
             }
         }
-        Ok(DegradedRouter { base, faults: faults.clone(), n, ns, descend, good })
+        Ok(DegradedRouter {
+            base,
+            faults: faults.clone(),
+            n,
+            ns,
+            reach: ReachStore::Eager { descend, good },
+        })
+    }
+
+    /// Memory-bounded wrapper over any [`TopologyView`]: reachability is
+    /// computed per destination on first query and kept in an arena of at
+    /// most ~`budget` bytes (see [`DEFAULT_REACH_BUDGET`]). Construction
+    /// is O(1); routing decisions are byte-identical to [`DegradedRouter::new`].
+    pub fn new_lazy(
+        topo: &dyn TopologyView,
+        faults: &FaultSet,
+        base: Box<dyn Router>,
+        budget: usize,
+    ) -> DegradedRouter {
+        DegradedRouter {
+            base,
+            faults: faults.clone(),
+            n: topo.num_nodes(),
+            ns: topo.num_switches(),
+            reach: ReachStore::Lazy(Mutex::new(LazyReach::new(topo.spec(), budget))),
+        }
     }
 
     /// The fault mask this router routes around.
@@ -109,37 +324,63 @@ impl DegradedRouter {
         &self.faults
     }
 
+    /// Residency counters of the lazy reach arena (zeros in eager mode).
+    pub fn reach_stats(&self) -> ReachStats {
+        match &self.reach {
+            ReachStore::Eager { .. } => ReachStats::default(),
+            ReachStore::Lazy(m) => m.lock().expect("reach arena poisoned").stats,
+        }
+    }
+
     /// Whether element `sw` still reaches `dst` (up\*/down\*).
     #[inline]
-    fn switch_good(&self, sw: SwitchId, dst: Nid) -> bool {
-        get_bit(&self.good, dst as usize * (self.n + self.ns) + self.n + sw)
+    fn switch_good(&self, topo: &dyn TopologyView, sw: SwitchId, dst: Nid) -> bool {
+        match &self.reach {
+            ReachStore::Eager { good, .. } => {
+                get_bit(good, dst as usize * (self.n + self.ns) + self.n + sw)
+            }
+            ReachStore::Lazy(m) => m
+                .lock()
+                .expect("reach arena poisoned")
+                .switch_good(topo, &self.faults, sw, dst),
+        }
     }
 
     /// An up-port is viable if its cable is alive and its parent still
     /// reaches the destination.
     #[inline]
-    fn up_viable(&self, topo: &Topology, port: PortId, dst: Nid) -> bool {
-        if self.faults.is_dead(topo.ports[port].link) {
+    fn up_viable(&self, topo: &dyn TopologyView, port: PortId, dst: Nid) -> bool {
+        if self.faults.is_dead(topo.port_link(port)) {
             return false;
         }
         match topo.port_peer(port) {
-            Endpoint::Switch(parent) => self.switch_good(parent, dst),
+            Endpoint::Switch(parent) => self.switch_good(topo, parent, dst),
             Endpoint::Node(_) => false,
         }
     }
 
-    /// First viable up-port scanning cyclically from the preferred one.
-    fn pick_up(&self, topo: &Topology, ports: &[PortId], preferred: PortId, dst: Nid) -> PortId {
-        let start = topo.ports[preferred].index as usize;
-        debug_assert_eq!(ports[start], preferred, "preferred port not owned by element");
-        for i in 0..ports.len() {
-            let port = ports[(start + i) % ports.len()];
+    /// First viable up-port scanning cyclically from the preferred one;
+    /// `port_of` maps an up-port index to the port id (node or switch
+    /// accessor) and `count` is the element's up-port count.
+    fn pick_up(
+        &self,
+        topo: &dyn TopologyView,
+        count: u32,
+        port_of: &dyn Fn(u32) -> PortId,
+        preferred: PortId,
+        dst: Nid,
+    ) -> PortId {
+        let start = topo.port_index(preferred);
+        debug_assert_eq!(port_of(start), preferred, "preferred port not owned by element");
+        for i in 0..count {
+            let port = port_of((start + i) % count);
             if self.up_viable(topo, port, dst) {
                 return port;
             }
         }
         unreachable!(
-            "no viable up-port toward {dst}: connectivity was validated at construction"
+            "no viable up-port toward {dst}: fabric partitioned (eager mode validates \
+             this at construction; lazy mode surfaces it here)"
         )
     }
 }
@@ -149,35 +390,43 @@ impl Router for DegradedRouter {
         format!("degraded[{} dead]({})", self.faults.num_dead(), self.base.name())
     }
 
-    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId {
+    fn inject_port(&self, topo: &dyn TopologyView, src: Nid, dst: Nid) -> PortId {
         let preferred = self.base.inject_port(topo, src, dst);
-        self.pick_up(topo, &topo.nodes[src as usize].up_ports, preferred, dst)
+        let count = topo.spec().up_ports_at(0);
+        self.pick_up(topo, count, &|u| topo.node_up_port(src, u), preferred, dst)
     }
 
-    fn up_port(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
+    fn up_port(&self, topo: &dyn TopologyView, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
         let preferred = self.base.up_port(topo, sw, src, dst);
-        self.pick_up(topo, &topo.switches[sw].up_ports, preferred, dst)
+        let count = topo.spec().up_ports_at(topo.switch_level(sw));
+        self.pick_up(topo, count, &|u| topo.switch_up_port(sw, u), preferred, dst)
     }
 
-    fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
-        let level = topo.switches[sw].level;
-        let p_l = topo.spec.p[level - 1];
+    fn down_link(&self, topo: &dyn TopologyView, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
+        let level = topo.switch_level(sw);
+        let p_l = topo.spec().p[level - 1];
         let preferred = self.base.down_link(topo, sw, src, dst) % p_l;
         for i in 0..p_l {
             let j = (preferred + i) % p_l;
-            if !self.faults.is_dead(topo.ports[topo.down_port_toward(sw, dst, j)].link) {
+            if !self.faults.is_dead(topo.port_link(topo.down_port_toward(sw, dst, j))) {
                 return j;
             }
         }
         unreachable!("descend_at guaranteed an alive parallel link toward {dst} at switch {sw}")
     }
 
-    fn descend_at(&self, _topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
-        get_bit(&self.descend, dst as usize * self.ns + sw)
+    fn descend_at(&self, topo: &dyn TopologyView, sw: SwitchId, dst: Nid) -> bool {
+        match &self.reach {
+            ReachStore::Eager { descend, .. } => get_bit(descend, dst as usize * self.ns + sw),
+            ReachStore::Lazy(m) => m
+                .lock()
+                .expect("reach arena poisoned")
+                .descend_at(topo, &self.faults, sw, dst),
+        }
     }
 
-    fn reaches(&self, _topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
-        self.switch_good(sw, dst)
+    fn reaches(&self, topo: &dyn TopologyView, sw: SwitchId, dst: Nid) -> bool {
+        self.switch_good(topo, sw, dst)
     }
 
     fn dest_based(&self) -> bool {
@@ -276,6 +525,67 @@ mod tests {
                 assert!(!faults.is_dead(t.ports[p].link));
             }
         }
+    }
+
+    /// Lazy (memory-bounded) reachability must reproduce the eager
+    /// tables' routing decisions port for port — on the materialized
+    /// graph *and* through the implicit topology view.
+    #[test]
+    fn lazy_reach_is_byte_identical_to_eager() {
+        let spec = PgftSpec::case_study();
+        let t = topo();
+        let implicit = crate::topology::ImplicitTopology::new(&spec);
+        let mut faults = FaultSet::none(&t);
+        // A mixed scenario: part of a parallel bundle plus a leaf uplink.
+        let l2 = t.level_switches(2).next().unwrap();
+        for &p in t.switches[l2].up_ports.iter().take(2) {
+            faults.kill(t.ports[p].link);
+        }
+        let leaf = t.level_switches(1).next().unwrap();
+        faults.kill(t.ports[t.switches[leaf].up_ports[0]].link);
+        let flows = all_pairs(64);
+        for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gsmodk, AlgorithmKind::RandomPair] {
+            let eager = DegradedRouter::new(&t, &faults, kind.build(&t, None, 9)).unwrap();
+            let lazy = DegradedRouter::new_lazy(
+                &t,
+                &faults,
+                kind.build(&t, None, 9),
+                super::DEFAULT_REACH_BUDGET,
+            );
+            let lazy_impl = DegradedRouter::new_lazy(
+                &implicit,
+                &faults,
+                kind.build(&t, None, 9),
+                super::DEFAULT_REACH_BUDGET,
+            );
+            let a = trace_flows(&t, &eager, &flows);
+            assert_eq!(a, trace_flows(&t, &lazy, &flows), "{kind}: lazy != eager");
+            assert_eq!(a, trace_flows(&implicit, &lazy_impl, &flows), "{kind}: implicit != tables");
+            let stats = lazy.reach_stats();
+            assert_eq!(stats.computed, 64, "one reach entry per destination");
+            assert!(stats.hits > 0 && stats.resident_bytes > 0);
+            assert_eq!(eager.reach_stats(), super::ReachStats::default());
+        }
+    }
+
+    /// A starvation-level budget forces arena flushes but must not change
+    /// a single routing decision.
+    #[test]
+    fn tiny_budget_evicts_but_routes_identically() {
+        let t = topo();
+        let mut faults = FaultSet::none(&t);
+        let l2 = t.level_switches(2).next().unwrap();
+        for &p in t.switches[l2].up_ports.iter().take(3) {
+            faults.kill(t.ports[p].link);
+        }
+        let flows = all_pairs(64);
+        let eager = DegradedRouter::new(&t, &faults, AlgorithmKind::Dmodk.build(&t, None, 0)).unwrap();
+        let lazy =
+            DegradedRouter::new_lazy(&t, &faults, AlgorithmKind::Dmodk.build(&t, None, 0), 1);
+        assert_eq!(trace_flows(&t, &eager, &flows), trace_flows(&t, &lazy, &flows));
+        let stats = lazy.reach_stats();
+        assert!(stats.evictions > 0, "a 1-byte budget must flush between destinations");
+        assert!(stats.computed >= 64, "flushed destinations recompute on refault");
     }
 
     #[test]

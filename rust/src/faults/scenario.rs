@@ -18,7 +18,7 @@
 //! rerouting quality. `stage:1:K` still targets node links explicitly.
 
 use super::FaultSet;
-use crate::topology::{LinkId, Topology};
+use crate::topology::{LinkId, Topology, TopologyView};
 use crate::util::rng::Xoshiro256;
 use anyhow::{bail, ensure, Context, Result};
 
@@ -213,6 +213,52 @@ impl FaultModel {
         };
         FaultScenario { model: self.name(), seed, events }
     }
+
+    /// Expand against any [`TopologyView`] — the generation path for
+    /// implicit topologies, where no link table exists to filter. Uses
+    /// the fact that each stage's links occupy one contiguous id range
+    /// (eligible stage ≥ 2 links are `stage_first_link(2)..num_links`),
+    /// so the result is **byte-identical** to [`FaultModel::generate`]
+    /// for every link-based model. `switches:K` needs the materialized
+    /// per-switch port lists and errors here.
+    pub fn generate_view(&self, view: &dyn TopologyView, seed: u64) -> Result<FaultScenario> {
+        let mut rng = Xoshiro256::new(seed ^ 0xFA_0175_CE4A_5105);
+        let spec = view.spec();
+        let elig_start = if spec.h >= 2 { view.stage_first_link(2) } else { view.num_links() };
+        let elig_len = view.num_links() - elig_start;
+        let events: Vec<LinkId> = match self {
+            FaultModel::None => Vec::new(),
+            FaultModel::LinkRate { rate } => (elig_start..view.num_links())
+                .filter(|_| rng.next_f64() < *rate)
+                .collect(),
+            FaultModel::LinkCount { count } | FaultModel::Cascade { count } => {
+                let k = (*count).min(elig_len);
+                let mut idx = rng.sample_indices(elig_len.max(1), k);
+                rng.shuffle(&mut idx);
+                idx.into_iter().map(|i| elig_start + i).collect()
+            }
+            FaultModel::SwitchCount { .. } => bail!(
+                "fault model {:?} walks per-switch port lists and needs a materialized \
+                 topology (use a link-based model on implicit topologies)",
+                self.name()
+            ),
+            FaultModel::StageCut { stage, count } => {
+                let lo = view.stage_first_link(*stage);
+                let hi = if *stage < spec.h { view.stage_first_link(*stage + 1) } else { view.num_links() };
+                if lo == hi {
+                    Vec::new()
+                } else {
+                    let stage_len = hi - lo;
+                    let bundle = (spec.up_ports_at(*stage - 1) as usize).max(1);
+                    let bundles = (stage_len / bundle).max(1);
+                    let start = (rng.next_below(bundles as u64) as usize) * bundle;
+                    let k = (*count).min(stage_len);
+                    (0..k).map(|i| lo + (start + i) % stage_len).collect()
+                }
+            }
+        };
+        Ok(FaultScenario { model: self.name(), seed, events })
+    }
 }
 
 impl std::fmt::Display for FaultModel {
@@ -272,7 +318,16 @@ impl FaultScenario {
 
     /// The final fault set (all events applied).
     pub fn fault_set(&self, topo: &Topology) -> FaultSet {
-        FaultSet::from_links(topo, &self.events)
+        self.fault_set_sized(topo.links.len())
+    }
+
+    /// The final fault set by link count (implicit-topology path).
+    pub fn fault_set_sized(&self, num_links: usize) -> FaultSet {
+        let mut f = FaultSet::none_sized(num_links);
+        for &l in &self.events {
+            f.kill(l);
+        }
+        f
     }
 
     /// Cumulative fault sets after each event — `stages()[i]` holds the
@@ -378,6 +433,28 @@ mod tests {
         for ok in ["stage:1:1", "stage:2:1", "stage:3:4", "rate:0.5", "none"] {
             FaultModel::parse(ok).unwrap().validate_for(&t.spec).unwrap();
         }
+    }
+
+    /// The implicit generation path must reproduce the table-walking one
+    /// event for event (it feeds the same seeds at the same rungs).
+    #[test]
+    fn generate_view_is_byte_identical_to_generate() {
+        let t = topo();
+        let v = crate::topology::ImplicitTopology::new(&t.spec);
+        for spec in ["none", "rate:0.2", "links:4", "cascade:3", "stage:3:2", "stage:2:3"] {
+            let m = FaultModel::parse(spec).unwrap();
+            for seed in [0u64, 1, 7, 99] {
+                assert_eq!(
+                    m.generate(&t, seed),
+                    m.generate_view(&v, seed).unwrap(),
+                    "{spec} seed {seed}"
+                );
+            }
+        }
+        assert!(FaultModel::parse("switches:1").unwrap().generate_view(&v, 0).is_err());
+        // fault_set_sized mirrors fault_set.
+        let s = FaultModel::parse("links:4").unwrap().generate(&t, 1);
+        assert_eq!(s.fault_set(&t), s.fault_set_sized(t.links.len()));
     }
 
     #[test]

@@ -80,8 +80,9 @@ pub mod prelude {
     };
     pub use crate::faults::{
         DegradedRouter, DegradedTopology, FaultModel, FaultScenario, FaultSet, LinkEvent,
+        ReachStats, DEFAULT_REACH_BUDGET,
     };
-    pub use crate::metrics::{AlgoSummary, CongestionReport};
+    pub use crate::metrics::{AlgoSummary, CongestionReport, KernelStats};
     pub use crate::netsim::{load_curve, run_netsim, Injection, NetsimConfig, NetsimReport};
     pub use crate::nodes::{NodeType, NodeTypeMap, Placement, TypeReindex};
     pub use crate::patterns::Pattern;
@@ -89,6 +90,8 @@ pub mod prelude {
     pub use crate::routing::{AlgorithmKind, ForwardingTables, Router};
     pub use crate::sweep::{run_sweep, sweep_table, SweepOptions, SweepResult, SweepSpec};
     pub use crate::telemetry::{BatchRecord, Journal, Registry, Telemetry};
-    pub use crate::topology::{build_pgft, families, PgftSpec, Topology};
+    pub use crate::topology::{
+        build_pgft, families, ImplicitTopology, PgftSpec, Topology, TopologyView,
+    };
     pub use crate::workload::{Collective, GroupSpec, Job, Phase, WorkloadSpec};
 }

@@ -17,7 +17,7 @@ pub mod report;
 pub use report::{render_algorithm_table, AlgoSummary};
 
 use crate::routing::trace::RoutePorts;
-use crate::topology::{PortId, Topology};
+use crate::topology::{PortId, Topology, TopologyView};
 
 /// Per-port flow statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -45,25 +45,51 @@ pub struct CongestionReport {
     pub per_port: Vec<PortStats>,
 }
 
-/// The one congestion kernel, in *blocked/word-parallel* form. The
-/// previous shape kept two dense `ports × ⌈N/64⌉` bitset arenas — fine
+/// Words per port in the striped kernel: each block of the node-id
+/// space covers `STRIPE × 64` ids, and a port's per-block state is a
+/// contiguous stripe of `STRIPE` `u64` words. The stripe is a fixed,
+/// small power of two so the per-port fold is a straight-line loop the
+/// compiler auto-vectorizes (one 256-bit OR/popcount chain on AVX2) —
+/// no unstable SIMD intrinsics anywhere. 4 words won over 8 in
+/// `bench_eval`'s kernel leg: the wider stripe halves the block count
+/// but doubles the reset/merge footprint of every touched port, and
+/// sampled-pair patterns touch many ports per block.
+const STRIPE: usize = 4;
+
+/// Counters from one striped-kernel run — the `eval.kernel.*`
+/// telemetry surface (`pgft eval` records them per rung).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    /// Stripe blocks swept across both (source, destination) passes.
+    pub blocks: u64,
+    /// Port-stripe activations: a port touched in a block it had not
+    /// yet been touched in (stamp misses ⇒ stripe resets).
+    pub touched_ports: u64,
+    /// `u64` words folded into distinct counts (`STRIPE` per touched
+    /// port per block) — the kernel's popcount volume.
+    pub merged_words: u64,
+}
+
+/// The one congestion kernel, in *striped/word-parallel* form. The
+/// original shape kept two dense `ports × ⌈N/64⌉` bitset arenas — fine
 /// at 512 nodes (180 KiB) but ~60 GiB at the 256k-endpoint rung of the
 /// eval ladder. This form buffers the flow incidences once (`O(hops)`,
 /// the same order as the route arena it summarizes) and then sweeps the
-/// node-id space in 64-node *blocks*: within one block every port needs
-/// only a single `u64` word, so the whole per-port state is three flat
-/// `O(ports)` arrays, the distinct-count merge is one
-/// `u64::count_ones` per *touched* port per block, and epoch stamps
-/// make the per-block reset `O(touched ports)` instead of `O(ports)`.
-/// Total: `O(hops)` work and `O(hops + ports)` memory, independent of
-/// the node count. Chosen over per-port `HashSet`s and over
-/// scatter+sort+dedup after measuring all three in `bench_perf` (see
-/// EXPERIMENTS.md §Perf); the losing variants survive only as
-/// `#[cfg(test)]` cross-checks below, which also pin the blocked form
-/// on randomized large-degree topologies. Every public entry point
-/// (`compute`, `compute_flows`, `compute_flowset`) accumulates through
-/// this accumulator, so there is exactly one shipped implementation of
-/// the metric.
+/// node-id space in [`STRIPE`]`×64`-node *blocks*: within one block
+/// every port needs only a `STRIPE`-word stripe, so the whole per-port
+/// state is three flat `O(ports)` arrays, the distinct-count merge is
+/// one fixed-width popcount fold per *touched* port per block, and
+/// epoch stamps make the per-block reset `O(touched ports)` instead of
+/// `O(ports)`. Total: `O(hops)` work and `O(hops + ports)` memory,
+/// independent of the node count. The pre-striping single-word variant
+/// survives as [`CongestionReport::compute_flowset_blocked`] so
+/// `bench_eval` can record the striping speedup; per-port `HashSet`s
+/// and scatter+sort+dedup (measured in `bench_perf`, EXPERIMENTS.md
+/// §Perf) survive only as `#[cfg(test)]` cross-checks below, which
+/// also pin both word kernels on randomized ragged block boundaries.
+/// Every public entry point (`compute`, `compute_flows`,
+/// `compute_flowset`) accumulates through this accumulator, so there
+/// is exactly one shipped implementation of the metric.
 struct BitmapAccum {
     num_nodes: usize,
     per_port: Vec<PortStats>,
@@ -98,25 +124,109 @@ impl BitmapAccum {
     }
 
     fn finish(self) -> CongestionReport {
+        self.finish_striped().0
+    }
+
+    /// The shipped kernel: sweep the node-id space in `STRIPE×64`-node
+    /// blocks, one `STRIPE`-word stripe of state per touched port.
+    fn finish_striped(self) -> (CongestionReport, KernelStats) {
         let BitmapAccum { num_nodes, mut per_port, flows, offsets, hops } = self;
-        let blocks = num_nodes.div_ceil(64).max(1);
+        let span = STRIPE * 64;
+        let blocks = num_nodes.div_ceil(span).max(1);
         let num_ports = per_port.len();
-        // Per-port single-word state for the current 64-node block, with
-        // epoch stamps (a stale stamp means "word not yet touched this
-        // block") and the touched-port list driving the merge + reset.
-        let mut word = vec![0u64; num_ports];
+        // Per-port stripe state for the current block, with epoch stamps
+        // (a stale stamp means "stripe not yet touched this block") and
+        // the touched-port list driving the merge + reset.
+        let mut words = vec![0u64; num_ports * STRIPE];
         let mut stamp = vec![0u32; num_ports];
         let mut touched: Vec<u32> = Vec::new();
         // Counting-sort scratch: flow indices bucketed by key block.
         let mut order = vec![0u32; flows.len()];
         let mut starts = vec![0usize; blocks + 1];
         let mut epoch = 0u32;
+        let mut stats = KernelStats::default();
         // Two passes over the same buffered incidences: distinct
         // *sources* per port, then distinct *destinations*.
         for pick_src in [true, false] {
             let key = |f: usize| if pick_src { flows[f].0 } else { flows[f].1 };
-            // Stable counting sort of flows by the 64-node block their
-            // key falls in, so each block's flows are visited together.
+            // Stable counting sort of flows by the block their key falls
+            // in, so each block's flows are visited together.
+            starts.iter_mut().for_each(|s| *s = 0);
+            for f in 0..flows.len() {
+                starts[key(f) as usize / span + 1] += 1;
+            }
+            for b in 0..blocks {
+                starts[b + 1] += starts[b];
+            }
+            let mut cursor = starts.clone();
+            for f in 0..flows.len() {
+                let b = key(f) as usize / span;
+                order[cursor[b]] = f as u32;
+                cursor[b] += 1;
+            }
+            for b in 0..blocks {
+                if starts[b] == starts[b + 1] {
+                    continue;
+                }
+                epoch += 1;
+                stats.blocks += 1;
+                let base = (b * span) as u32;
+                for &fi in &order[starts[b]..starts[b + 1]] {
+                    let f = fi as usize;
+                    let rel = (key(f) - base) as usize;
+                    let (wi, bit) = (rel / 64, 1u64 << (rel % 64));
+                    for &p in &hops[offsets[f]..offsets[f + 1]] {
+                        let p = p as usize;
+                        if stamp[p] != epoch {
+                            stamp[p] = epoch;
+                            words[p * STRIPE..(p + 1) * STRIPE].fill(0);
+                            touched.push(p as u32);
+                        }
+                        words[p * STRIPE + wi] |= bit;
+                    }
+                }
+                stats.touched_ports += touched.len() as u64;
+                stats.merged_words += (touched.len() * STRIPE) as u64;
+                for &p in &touched {
+                    let p = p as usize;
+                    // Fixed-width fold over the stripe: a straight-line
+                    // popcount chain the compiler keeps in vector
+                    // registers — the kernel's only hot reduction.
+                    let stripe = &words[p * STRIPE..(p + 1) * STRIPE];
+                    let mut ones = 0u32;
+                    for w in stripe {
+                        ones += w.count_ones();
+                    }
+                    let st = &mut per_port[p];
+                    if pick_src {
+                        st.srcs += ones;
+                    } else {
+                        st.dsts += ones;
+                    }
+                }
+                touched.clear();
+            }
+        }
+        (CongestionReport { per_port }, stats)
+    }
+
+    /// The pre-striping kernel (single-word 64-node blocks), kept as the
+    /// measured baseline for the striping speedup in `bench_eval` and as
+    /// a bit-exactness oracle in the kernel property tests. Same
+    /// counting-sort structure; the only difference is one word of block
+    /// state per port instead of a stripe.
+    fn finish_blocked(self) -> CongestionReport {
+        let BitmapAccum { num_nodes, mut per_port, flows, offsets, hops } = self;
+        let blocks = num_nodes.div_ceil(64).max(1);
+        let num_ports = per_port.len();
+        let mut word = vec![0u64; num_ports];
+        let mut stamp = vec![0u32; num_ports];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut order = vec![0u32; flows.len()];
+        let mut starts = vec![0usize; blocks + 1];
+        let mut epoch = 0u32;
+        for pick_src in [true, false] {
+            let key = |f: usize| if pick_src { flows[f].0 } else { flows[f].1 };
             starts.iter_mut().for_each(|s| *s = 0);
             for f in 0..flows.len() {
                 starts[(key(f) / 64) as usize + 1] += 1;
@@ -168,7 +278,7 @@ impl CongestionReport {
     /// Compute per-port distinct-source/destination counts over owned
     /// per-route vectors (the [`RoutePorts`] surface). One bitmap
     /// kernel (the private `BitmapAccum`) serves every entry point.
-    pub fn compute(topo: &Topology, routes: &[RoutePorts]) -> CongestionReport {
+    pub fn compute(topo: &dyn TopologyView, routes: &[RoutePorts]) -> CongestionReport {
         let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
         for r in routes {
             acc.add(r.src, r.dst, r.ports.iter().map(|&p| p as u32));
@@ -178,16 +288,43 @@ impl CongestionReport {
 
     /// Compute over an arena-backed [`crate::eval::FlowSet`] — the
     /// canonical eval-layer entry point ([`crate::eval::CongestionEval`]):
-    /// same kernel, zero per-route allocation, shared trace.
+    /// same kernel, zero per-route allocation, shared trace. Takes any
+    /// [`TopologyView`], so the 1M-endpoint rung scores through the
+    /// implicit topology without port tables.
     pub fn compute_flowset(
-        topo: &Topology,
+        topo: &dyn TopologyView,
+        flows: &crate::eval::FlowSet,
+    ) -> CongestionReport {
+        CongestionReport::compute_flowset_stats(topo, flows).0
+    }
+
+    /// [`CongestionReport::compute_flowset`] returning the kernel's
+    /// work counters as well — the `eval.kernel.*` telemetry surface.
+    pub fn compute_flowset_stats(
+        topo: &dyn TopologyView,
+        flows: &crate::eval::FlowSet,
+    ) -> (CongestionReport, KernelStats) {
+        let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
+        for ((src, dst), ports) in flows.iter() {
+            acc.add(src, dst, ports.iter().copied());
+        }
+        acc.finish_striped()
+    }
+
+    /// The pre-striping single-word kernel over a flow store. Not part
+    /// of the metric's public contract — it exists so `bench_eval` can
+    /// measure the striping speedup against a live baseline. Bit-exact
+    /// with [`CongestionReport::compute_flowset`] (property-pinned).
+    #[doc(hidden)]
+    pub fn compute_flowset_blocked(
+        topo: &dyn TopologyView,
         flows: &crate::eval::FlowSet,
     ) -> CongestionReport {
         let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
         for ((src, dst), ports) in flows.iter() {
             acc.add(src, dst, ports.iter().copied());
         }
-        acc.finish()
+        acc.finish_blocked()
     }
 
     /// Ablation cross-check (§Perf iteration 1 → 2): scatter
@@ -256,12 +393,12 @@ impl CongestionReport {
     /// sweeps use. Equivalent to `trace_flows` + `compute` (asserted in
     /// tests).
     pub fn compute_flows(
-        topo: &Topology,
+        topo: &dyn TopologyView,
         router: &dyn crate::routing::Router,
         flows: &[(u32, u32)],
     ) -> CongestionReport {
         let mut acc = BitmapAccum::new(topo.num_ports(), topo.num_nodes());
-        let mut ports: Vec<PortId> = Vec::with_capacity(2 * topo.spec.h);
+        let mut ports: Vec<PortId> = Vec::with_capacity(2 * topo.spec().h);
         for &(src, dst) in flows {
             ports.clear();
             crate::routing::trace::trace_route_into(topo, router, src, dst, &mut ports);
@@ -490,6 +627,54 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn prop_striped_kernel_is_bit_exact_on_ragged_boundaries() {
+        use crate::util::prop::Prop;
+        use std::collections::HashSet;
+        // Satellite pin for the striped kernel: random node counts that
+        // are NOT multiples of 64 or of the stripe span (STRIPE×64) and
+        // random port counts, so the last block of every pass is ragged.
+        // Three-way agreement per synthetic flow set: striped vs the
+        // retained single-word kernel vs a HashSet oracle, per port,
+        // bit-exact.
+        Prop::new("striped-kernel-ragged").cases(40).run(|g| {
+            let num_nodes = g.usize_in(1, 3 * STRIPE * 64 + 17);
+            let num_ports = g.usize_in(1, 257);
+            let nflows = g.usize_in(0, 160);
+            let mut striped = BitmapAccum::new(num_ports, num_nodes);
+            let mut blocked = BitmapAccum::new(num_ports, num_nodes);
+            let mut srcs: Vec<HashSet<u32>> = vec![HashSet::new(); num_ports];
+            let mut dsts: Vec<HashSet<u32>> = vec![HashSet::new(); num_ports];
+            let mut routes = vec![0u32; num_ports];
+            for _ in 0..nflows {
+                let src = g.usize_in(0, num_nodes - 1) as u32;
+                let dst = g.usize_in(0, num_nodes - 1) as u32;
+                let hops: Vec<u32> = (0..g.usize_in(0, 7))
+                    .map(|_| g.usize_in(0, num_ports - 1) as u32)
+                    .collect();
+                for &p in &hops {
+                    routes[p as usize] += 1;
+                    srcs[p as usize].insert(src);
+                    dsts[p as usize].insert(dst);
+                }
+                striped.add(src, dst, hops.iter().copied());
+                blocked.add(src, dst, hops.iter().copied());
+            }
+            let (s, stats) = striped.finish_striped();
+            let b = blocked.finish_blocked();
+            for p in 0..num_ports {
+                let oracle = PortStats {
+                    routes: routes[p],
+                    srcs: srcs[p].len() as u32,
+                    dsts: dsts[p].len() as u32,
+                };
+                assert_eq!(s.per_port[p], oracle, "striped, port {p}, n={num_nodes}");
+                assert_eq!(b.per_port[p], oracle, "blocked, port {p}, n={num_nodes}");
+            }
+            assert_eq!(stats.merged_words, stats.touched_ports * STRIPE as u64);
+        });
     }
 
     #[test]

@@ -29,31 +29,37 @@ pub use trace::{trace_route, RoutePorts};
 pub use xmodk::{Basis, Xmodk};
 
 use crate::nodes::{NodeTypeMap, TypeReindex};
-use crate::topology::{Nid, PortId, SwitchId, Topology};
+use crate::topology::{Nid, PortId, SwitchId, Topology, TopologyView};
 use anyhow::Result;
 use std::sync::Arc;
 
 /// The routing decision interface: enough to derive any minimal route.
+///
+/// Routers see the fabric through [`TopologyView`], so the same
+/// implementation traces against the materialized [`Topology`] tables or
+/// the arithmetic [`crate::topology::ImplicitTopology`] (the 1M-endpoint
+/// rung) — a `&Topology` coerces to `&dyn TopologyView` at every call
+/// site.
 pub trait Router: Send + Sync {
     /// Human-readable algorithm name (seeds included where relevant).
     fn name(&self) -> String;
 
     /// Injection port of `src` (among its `w_1·p_1` node up-ports).
-    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId;
+    fn inject_port(&self, topo: &dyn TopologyView, src: Nid, dst: Nid) -> PortId;
 
     /// Up-port taken at switch `sw` (not an ancestor of `dst`).
-    fn up_port(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> PortId;
+    fn up_port(&self, topo: &dyn TopologyView, sw: SwitchId, src: Nid, dst: Nid) -> PortId;
 
     /// Parallel-link index (`0..p_l`) used when descending from `sw`
     /// toward `dst`.
-    fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32;
+    fn down_link(&self, topo: &dyn TopologyView, sw: SwitchId, src: Nid, dst: Nid) -> u32;
 
     /// Whether the route should switch from climbing to descending at
     /// `sw`. On a pristine fabric that is exactly "is `sw` an ancestor
     /// of `dst`" (the default); fault-aware routers override it to keep
     /// climbing past ancestors whose descent path died
     /// (see [`crate::faults::DegradedRouter`]).
-    fn descend_at(&self, topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
+    fn descend_at(&self, topo: &dyn TopologyView, sw: SwitchId, dst: Nid) -> bool {
         topo.is_ancestor(sw, dst)
     }
 
@@ -62,7 +68,7 @@ pub trait Router: Send + Sync {
     /// report switches cut off from a destination, and
     /// [`table::ForwardingTables::build`] leaves those entries
     /// [`table::UNROUTED`].
-    fn reaches(&self, topo: &Topology, sw: SwitchId, dst: Nid) -> bool {
+    fn reaches(&self, topo: &dyn TopologyView, sw: SwitchId, dst: Nid) -> bool {
         let _ = (topo, sw, dst);
         true
     }
@@ -155,6 +161,39 @@ impl AlgorithmKind {
             AlgorithmKind::Gdmodk => reindex(Basis::Dest),
             AlgorithmKind::Gsmodk => reindex(Basis::Source),
         }
+    }
+
+    /// Instantiate a router against any [`TopologyView`] — the
+    /// constructor path for the implicit 1M-endpoint rung, where no
+    /// materialized [`Topology`] exists. Every closed-form algorithm
+    /// works; `Random` errors because its constructor samples the
+    /// materialized per-switch tables up front (at implicit scales that
+    /// table is the thing being avoided — use `random-pair`, the
+    /// paper's §III.D dispersion model, instead).
+    pub fn build_view(
+        &self,
+        view: &dyn TopologyView,
+        types: Option<&NodeTypeMap>,
+        seed: u64,
+    ) -> Result<Box<dyn Router>> {
+        let reindex = |basis: Basis| -> Box<dyn Router> {
+            let r = match types {
+                Some(m) => Arc::new(TypeReindex::new(m)),
+                None => Arc::new(TypeReindex::identity(view.num_nodes() as u32)),
+            };
+            Box::new(Xmodk::grouped(basis, r))
+        };
+        Ok(match self {
+            AlgorithmKind::Random => anyhow::bail!(
+                "algorithm 'random' materializes per-switch tables and cannot run \
+                 on an implicit topology; use 'random-pair'"
+            ),
+            AlgorithmKind::RandomPair => Box::new(random::PerPairRandom::new(seed)),
+            AlgorithmKind::Dmodk => Box::new(Xmodk::plain(Basis::Dest)),
+            AlgorithmKind::Smodk => Box::new(Xmodk::plain(Basis::Source)),
+            AlgorithmKind::Gdmodk => reindex(Basis::Dest),
+            AlgorithmKind::Gsmodk => reindex(Basis::Source),
+        })
     }
 
     /// Instantiate a router that routes around the given fault set:

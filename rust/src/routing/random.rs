@@ -8,7 +8,7 @@
 //! congestion." (§III.D quantifies this on the case study.)
 
 use super::Router;
-use crate::topology::{Nid, PortId, SwitchId, Topology};
+use crate::topology::{Nid, PortId, SwitchId, Topology, TopologyView};
 use crate::util::rng::Xoshiro256;
 
 /// Materialized random choices: one up-port index per (element, dest) and
@@ -59,18 +59,18 @@ impl Router for RandomRouter {
         format!("random(seed={})", self.seed)
     }
 
-    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId {
-        let idx = self.node_up[src as usize * self.n + dst as usize] as usize;
-        topo.nodes[src as usize].up_ports[idx]
+    fn inject_port(&self, topo: &dyn TopologyView, src: Nid, dst: Nid) -> PortId {
+        let idx = self.node_up[src as usize * self.n + dst as usize] as u32;
+        topo.node_up_port(src, idx)
     }
 
-    fn up_port(&self, topo: &Topology, sw: SwitchId, _src: Nid, dst: Nid) -> PortId {
+    fn up_port(&self, topo: &dyn TopologyView, sw: SwitchId, _src: Nid, dst: Nid) -> PortId {
         debug_assert!(sw < self.num_switches);
-        let idx = self.sw_up[sw * self.n + dst as usize] as usize;
-        topo.switches[sw].up_ports[idx]
+        let idx = self.sw_up[sw * self.n + dst as usize] as u32;
+        topo.switch_up_port(sw, idx)
     }
 
-    fn down_link(&self, _topo: &Topology, sw: SwitchId, _src: Nid, dst: Nid) -> u32 {
+    fn down_link(&self, _topo: &dyn TopologyView, sw: SwitchId, _src: Nid, dst: Nid) -> u32 {
         self.sw_down[sw * self.n + dst as usize] as u32
     }
 
@@ -116,19 +116,19 @@ impl Router for PerPairRandom {
         format!("random-pair(seed={})", self.seed)
     }
 
-    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId {
-        let ups = topo.nodes[src as usize].up_ports.len() as u64;
-        topo.nodes[src as usize].up_ports[self.draw(u64::MAX, src, dst, ups) as usize]
+    fn inject_port(&self, topo: &dyn TopologyView, src: Nid, dst: Nid) -> PortId {
+        let ups = topo.spec().up_ports_at(0) as u64;
+        topo.node_up_port(src, self.draw(u64::MAX, src, dst, ups) as u32)
     }
 
-    fn up_port(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
-        let ups = topo.switches[sw].up_ports.len() as u64;
-        topo.switches[sw].up_ports[self.draw(sw as u64, src, dst, ups) as usize]
+    fn up_port(&self, topo: &dyn TopologyView, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
+        let ups = topo.spec().up_ports_at(topo.switch_level(sw)) as u64;
+        topo.switch_up_port(sw, self.draw(sw as u64, src, dst, ups) as u32)
     }
 
-    fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
-        let level = topo.switches[sw].level;
-        let par = topo.spec.p[level - 1] as u64;
+    fn down_link(&self, topo: &dyn TopologyView, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
+        let level = topo.switch_level(sw);
+        let par = topo.spec().p[level - 1] as u64;
         self.draw((sw as u64) | (1 << 40), src, dst, par) as u32
     }
 

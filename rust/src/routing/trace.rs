@@ -7,7 +7,7 @@
 //! fat-tree routing deadlock-free (§I.A), and `debug_assert`s enforce it.
 
 use super::Router;
-use crate::topology::{Endpoint, Nid, PortId, Topology};
+use crate::topology::{Endpoint, Nid, PortId, Topology, TopologyView};
 
 /// A traced route: every output port the flow occupies, in order,
 /// including the source node's injection port and the last switch's
@@ -36,8 +36,13 @@ impl RoutePorts {
 
 /// Trace the route for one (src, dst) flow. `src == dst` yields an empty
 /// route (no network traversal).
-pub fn trace_route(topo: &Topology, router: &dyn Router, src: Nid, dst: Nid) -> RoutePorts {
-    let mut ports = Vec::with_capacity(2 * topo.spec.h);
+pub fn trace_route(
+    topo: &dyn TopologyView,
+    router: &dyn Router,
+    src: Nid,
+    dst: Nid,
+) -> RoutePorts {
+    let mut ports = Vec::with_capacity(2 * topo.spec().h);
     trace_route_into(topo, router, src, dst, &mut ports);
     RoutePorts { src, dst, ports }
 }
@@ -45,7 +50,7 @@ pub fn trace_route(topo: &Topology, router: &dyn Router, src: Nid, dst: Nid) -> 
 /// Allocation-free tracing into a caller-provided buffer (the fused
 /// metric hot path, see `CongestionReport::compute_flows`).
 pub fn trace_route_into(
-    topo: &Topology,
+    topo: &dyn TopologyView,
     router: &dyn Router,
     src: Nid,
     dst: Nid,
@@ -80,13 +85,13 @@ pub fn trace_route_into(
         };
         ports.push(out);
         cur = topo.port_peer(out);
-        debug_assert!(ports.len() <= 2 * topo.spec.h + 1, "route too long: loop?");
+        debug_assert!(ports.len() <= 2 * topo.spec().h + 1, "route too long: loop?");
     }
 }
 
 /// Trace a batch of flows.
 pub fn trace_flows(
-    topo: &Topology,
+    topo: &dyn TopologyView,
     router: &dyn Router,
     flows: &[(Nid, Nid)],
 ) -> Vec<RoutePorts> {

@@ -25,7 +25,7 @@
 
 use super::Router;
 use crate::nodes::TypeReindex;
-use crate::topology::{Nid, PortId, SwitchId, Topology};
+use crate::topology::{Nid, PgftSpec, PortId, SwitchId, TopologyView};
 use std::sync::Arc;
 
 /// Which endpoint's NID feeds the modulo formulas.
@@ -70,9 +70,10 @@ impl Xmodk {
     }
 
     /// Up-port index at a level-`l` element (0 = node): the closed form.
+    /// Takes the spec directly — the formulas never touch the graph, which
+    /// is why Xmodk routes identically through tables or the implicit view.
     #[inline]
-    pub fn up_index(topo: &Topology, level: usize, key: u64) -> u32 {
-        let spec = &topo.spec;
+    pub fn up_index(spec: &PgftSpec, level: usize, key: u64) -> u32 {
         let k = spec.w[level] as u64 * spec.p[level] as u64;
         ((key / spec.w_prefix(level)) % k) as u32
     }
@@ -87,8 +88,7 @@ impl Xmodk {
     /// `C_topo(P(Dmodk)) = C_topo(Q(Smodk))` on PGFTs with a stage where
     /// both `w_l > 1` and `p_l > 1` — see `rust/tests/symmetry.rs`.)
     #[inline]
-    pub fn down_index(topo: &Topology, level: usize, key: u64) -> u32 {
-        let spec = &topo.spec;
+    pub fn down_index(spec: &PgftSpec, level: usize, key: u64) -> u32 {
         ((key / spec.w_prefix(level)) % spec.p[level - 1] as u64) as u32
     }
 }
@@ -103,20 +103,20 @@ impl Router for Xmodk {
         }
     }
 
-    fn inject_port(&self, topo: &Topology, src: Nid, dst: Nid) -> PortId {
-        let u = Self::up_index(topo, 0, self.key(src, dst));
-        topo.nodes[src as usize].up_ports[u as usize]
+    fn inject_port(&self, topo: &dyn TopologyView, src: Nid, dst: Nid) -> PortId {
+        let u = Self::up_index(topo.spec(), 0, self.key(src, dst));
+        topo.node_up_port(src, u)
     }
 
-    fn up_port(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
-        let s = &topo.switches[sw];
-        let u = Self::up_index(topo, s.level, self.key(src, dst));
-        s.up_ports[u as usize]
+    fn up_port(&self, topo: &dyn TopologyView, sw: SwitchId, src: Nid, dst: Nid) -> PortId {
+        let level = topo.switch_level(sw);
+        let u = Self::up_index(topo.spec(), level, self.key(src, dst));
+        topo.switch_up_port(sw, u)
     }
 
-    fn down_link(&self, topo: &Topology, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
-        let level = topo.switches[sw].level;
-        Self::down_index(topo, level, self.key(src, dst))
+    fn down_link(&self, topo: &dyn TopologyView, sw: SwitchId, src: Nid, dst: Nid) -> u32 {
+        let level = topo.switch_level(sw);
+        Self::down_index(topo.spec(), level, self.key(src, dst))
     }
 
     fn dest_based(&self) -> bool {
@@ -141,19 +141,19 @@ mod tests {
     fn dmodk_paper_examples() {
         let topo = t();
         // Leaf level (l=1): up index for dest 47 = 47 mod (w2·p2 = 2) = 1.
-        assert_eq!(Xmodk::up_index(&topo, 1, 47), 1);
+        assert_eq!(Xmodk::up_index(&topo.spec,1, 47), 1);
         // All IO destinations (≡7 mod 8) share that L2 parity.
         for d in [7u64, 15, 23, 31, 39, 47, 55, 63] {
-            assert_eq!(Xmodk::up_index(&topo, 1, d), 1, "dest {d}");
+            assert_eq!(Xmodk::up_index(&topo.spec,1, d), 1, "dest {d}");
             // L2 level (l=2): ⌊d/2⌋ mod (w3·p3 = 4) = 3 → last parallel port.
-            assert_eq!(Xmodk::up_index(&topo, 2, d), 3, "dest {d}");
+            assert_eq!(Xmodk::up_index(&topo.spec,2, d), 3, "dest {d}");
             // Top-level down parallel link = ⌊d/2⌋ mod p3 = 3.
-            assert_eq!(Xmodk::down_index(&topo, 3, d), 3, "dest {d}");
+            assert_eq!(Xmodk::down_index(&topo.spec,3, d), 3, "dest {d}");
         }
         // Compute destinations spread: dests 0..7 hit alternating parity.
-        assert_eq!(Xmodk::up_index(&topo, 1, 0), 0);
-        assert_eq!(Xmodk::up_index(&topo, 1, 1), 1);
-        assert_eq!(Xmodk::up_index(&topo, 1, 2), 0);
+        assert_eq!(Xmodk::up_index(&topo.spec,1, 0), 0);
+        assert_eq!(Xmodk::up_index(&topo.spec,1, 1), 1);
+        assert_eq!(Xmodk::up_index(&topo.spec,1, 2), 0);
     }
 
     /// All Dmodk routes to a destination converge on one top switch (the
@@ -196,16 +196,16 @@ mod tests {
             .collect();
         assert_eq!(gkeys, vec![56, 57, 58, 59, 60, 61, 62, 63]);
         // NID 47 → gNID 61 → leaf up index 61 mod 2 = 1 (second L2 switch).
-        assert_eq!(Xmodk::up_index(&topo, 1, 61), 1);
+        assert_eq!(Xmodk::up_index(&topo.spec,1, 61), 1);
         // L2 up index for gNID 61: ⌊61/2⌋ mod 4 = 2 (third parallel port,
         // not the shared last one).
-        assert_eq!(Xmodk::up_index(&topo, 2, 61), 2);
+        assert_eq!(Xmodk::up_index(&topo.spec,2, 61), 2);
         // The four right-subgroup IO gNIDs 60..63 use parallel links
         // 2,2,3,3 — half the links, balanced.
-        let links: Vec<u32> = (60..64).map(|g| Xmodk::up_index(&topo, 2, g)).collect();
+        let links: Vec<u32> = (60..64).map(|g| Xmodk::up_index(&topo.spec,2, g)).collect();
         assert_eq!(links, vec![2, 2, 3, 3]);
         // And the left-subgroup IO gNIDs 56..59 use links 0,0,1,1.
-        let links_l: Vec<u32> = (56..60).map(|g| Xmodk::up_index(&topo, 2, g)).collect();
+        let links_l: Vec<u32> = (56..60).map(|g| Xmodk::up_index(&topo.spec,2, g)).collect();
         assert_eq!(links_l, vec![0, 0, 1, 1]);
     }
 
@@ -217,12 +217,12 @@ mod tests {
     fn smodk_source_port_period() {
         let topo = t();
         for s in 0..32u64 {
-            assert_eq!(Xmodk::up_index(&topo, 1, s), (s % 2) as u32);
-            assert_eq!(Xmodk::up_index(&topo, 2, s), ((s / 2) % 4) as u32);
+            assert_eq!(Xmodk::up_index(&topo.spec,1, s), (s % 2) as u32);
+            assert_eq!(Xmodk::up_index(&topo.spec,2, s), ((s / 2) % 4) as u32);
         }
         // Combo (parity, link) cycles with period 8; s ≡ 7 mod 8 is combo
         // (1, 3) — the skipped one.
-        let combo = |s: u64| (Xmodk::up_index(&topo, 1, s), Xmodk::up_index(&topo, 2, s));
+        let combo = |s: u64| (Xmodk::up_index(&topo.spec,1, s), Xmodk::up_index(&topo.spec,2, s));
         assert_eq!(combo(7), (1, 3));
         assert_eq!(combo(15), (1, 3));
         let mut seen = std::collections::HashSet::new();

@@ -6,7 +6,7 @@ use super::spec::SweepSpec;
 use crate::eval::{
     evaluate_all, CongestionEval, Evaluator, FairRateEval, FlowSet, NetsimEval,
 };
-use crate::faults::{DegradedRouter, FaultModel};
+use crate::faults::{DegradedRouter, FaultModel, FaultSet, DEFAULT_REACH_BUDGET};
 use crate::metrics::AlgoSummary;
 use crate::nodes::{NodeTypeMap, Placement};
 use crate::patterns::Pattern;
@@ -317,6 +317,31 @@ fn seed_sensitive(algo: AlgorithmKind) -> bool {
     matches!(algo, AlgorithmKind::Random | AlgorithmKind::RandomPair)
 }
 
+/// Node count past which fault cells build the *lazy* reachability
+/// store: eager construction validates every (src, dst) pair up front
+/// (turning partitions into clean unroutable rows) but its dense table
+/// is `O(nodes × switches)` bits — out of memory budget at the eval
+/// ladder's scale. The lazy store routes byte-identically (pinned in
+/// `faults::router` tests) under [`DEFAULT_REACH_BUDGET`]; it skips the
+/// up-front validation, so a partitioning scenario on a huge fabric
+/// panics mid-trace instead of degrading — acceptable where the
+/// alternative is not running at all.
+const LAZY_REACH_MIN_NODES: usize = 16_384;
+
+/// Build the fault-aware router for a cell under the store policy
+/// above.
+fn build_degraded_for(
+    topo: &Topology,
+    faults: &FaultSet,
+    base: Box<dyn Router>,
+) -> Result<DegradedRouter> {
+    if topo.num_nodes() >= LAZY_REACH_MIN_NODES {
+        Ok(DegradedRouter::new_lazy(topo, faults, base, DEFAULT_REACH_BUDGET))
+    } else {
+        DegradedRouter::new(topo, faults, base)
+    }
+}
+
 /// Computed content of one unique job.
 struct Cell {
     summary: AlgoSummary,
@@ -345,7 +370,7 @@ fn workload_cell(
         algo.build(topo, Some(types), seed)
     } else {
         let faults = fault_model.generate(topo, seed).fault_set(topo);
-        match DegradedRouter::new(topo, &faults, algo.build(topo, Some(types), seed)) {
+        match build_degraded_for(topo, &faults, algo.build(topo, Some(types), seed)) {
             Ok(d) => Box::new(d),
             Err(_) => return None, // partitioned: empty wl_* columns
         }
@@ -455,7 +480,7 @@ fn compute_cell_inner(
         let faults = scenario.fault_set(topo);
         let dead_links = faults.num_dead();
         let h = topo.spec.h;
-        let degraded = match DegradedRouter::new(topo, &faults, algo.build(topo, Some(types), seed))
+        let degraded = match build_degraded_for(topo, &faults, algo.build(topo, Some(types), seed))
         {
             Ok(d) => d,
             Err(_) => {

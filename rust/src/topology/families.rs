@@ -84,6 +84,10 @@ pub fn named_spec(name: &str) -> Result<PgftSpec> {
         "xl-64k" => PgftSpec::new(vec![32, 32, 64], vec![1, 16, 8], vec![1, 1, 2]),
         // 262144 nodes: 4096 × 96-port leaves, 2048 L2, 512 tops.
         "xl-256k" => PgftSpec::new(vec![64, 64, 64], vec![1, 32, 16], vec![1, 1, 2]),
+        // 1048576 nodes: 16384 × 96-port leaves, 8192 L2, 512 wide tops.
+        // Only reachable through the implicit view (`ImplicitTopology`):
+        // materializing the port tables would cost ~GiBs of ids.
+        "xl-1m" => PgftSpec::new(vec![64, 64, 256], vec![1, 32, 16], vec![1, 1, 2]),
         _ => PgftSpec::parse(name),
     }
 }
@@ -138,6 +142,7 @@ mod tests {
             ("xl-16k", 16_384, 896),
             ("xl-64k", 65_536, 3_200),
             ("xl-256k", 262_144, 6_656),
+            ("xl-1m", 1_048_576, 25_088),
         ] {
             let s = named_spec(name).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(s.num_nodes(), nodes, "{name}");

@@ -7,7 +7,9 @@ pub mod graph;
 pub mod render;
 pub mod spec;
 pub mod validate;
+pub mod view;
 
 pub use build::build_pgft;
 pub use graph::{Endpoint, Link, LinkId, Nid, Node, Port, PortId, Switch, SwitchId, Topology};
 pub use spec::PgftSpec;
+pub use view::{ImplicitTopology, TopologyView};

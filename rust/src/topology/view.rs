@@ -1,0 +1,578 @@
+//! [`TopologyView`] — the arithmetic topology interface the 1M-endpoint
+//! rung traces through.
+//!
+//! The materialized [`Topology`] stores every switch, port and link as a
+//! table row. That is the right shape for the paper's 64-node case study
+//! and stays affordable through the 256k rung of the eval ladder, but at
+//! 1M endpoints the port/link tables (3.7M ports, 1.8M links, plus
+//! per-switch port vectors) start to hurt before the route arena does
+//! (ROADMAP item 1). The construction in [`super::build`] is entirely
+//! regular, though: link ids are assigned in a fixed nested loop order
+//! (node/switch id major, then plane `c`, then parallel link `j`), and
+//! every port id is `2·link` (up) or `2·link + 1` (down). So every table
+//! lookup has a closed form over [`PgftSpec`].
+//!
+//! [`ImplicitTopology`] evaluates those closed forms directly — `O(h)`
+//! state total, no tables — and [`TopologyView`] is the trait the hot
+//! trace→score path consumes, with the materialized [`Topology`] as the
+//! second implementation. The two are **byte-identical** on every query
+//! (pinned by the tests below on randomized PGFTs, and end-to-end on the
+//! 16k rung in CI), which is what lets `pgft eval --size 1m` trace
+//! through the implicit path while every smaller rung can cross-check
+//! against the tables.
+//!
+//! # The closed forms
+//!
+//! Stage `s+1` (0-based `s`, cabling level-`s` elements to level-`s+1`
+//! switches) assigns link ids in the order
+//!
+//! ```text
+//!     link = stage_first[s] + lower·(w_{s+1}·p_{s+1}) + c·p_{s+1} + j
+//! ```
+//!
+//! where `lower` is the node id (stage 1) or the within-level switch
+//! index, `c ∈ [0, w_{s+1})` is the plane digit and `j ∈ [0, p_{s+1})`
+//! the parallel-link index. The lower element's up-port `c + w_{s+1}·j`
+//! is port `2·link`; the parent's down-port `a·p_{s+1} + j` (with `a`
+//! the child digit) is port `2·link + 1`. Within-level switch indices
+//! follow [`Topology::switch_at`]: bottom digits minor (radix `w_1..w_l`,
+//! `W_l = Π w` values per subtree), top digits major — so the `W_l`
+//! ancestors of a node at level `l` are one *contiguous* id range.
+
+use super::graph::{Endpoint, LinkId, Nid, PortId, SwitchId, Topology};
+use super::spec::PgftSpec;
+use std::ops::Range;
+
+/// The arithmetic interface over a PGFT that the trace→score pipeline
+/// consumes: enough to trace routes, mask faults and accumulate the
+/// congestion metric, with no assumption that port/link tables exist.
+///
+/// Implementations must agree bit-for-bit with the materialized
+/// construction in [`super::build`]; `Topology` implements by table
+/// lookup, [`ImplicitTopology`] by closed form, and the tests in this
+/// module pin the two against each other.
+pub trait TopologyView: Send + Sync {
+    /// The PGFT parameters.
+    fn spec(&self) -> &PgftSpec;
+
+    /// Number of end-nodes.
+    fn num_nodes(&self) -> usize;
+
+    /// Number of switches across all levels.
+    fn num_switches(&self) -> usize;
+
+    /// Number of undirected links.
+    fn num_links(&self) -> usize;
+
+    /// Number of directed output ports (2× links).
+    fn num_ports(&self) -> usize {
+        2 * self.num_links()
+    }
+
+    /// 1-based level of a switch.
+    fn switch_level(&self, sw: SwitchId) -> usize;
+
+    /// Switches of a 1-based level, as a contiguous id range.
+    fn level_switches(&self, l: usize) -> Range<SwitchId>;
+
+    /// Up-port `idx` (round-robin order: plane `idx mod w_1`, parallel
+    /// link `idx / w_1`) of node `nid`.
+    fn node_up_port(&self, nid: Nid, idx: u32) -> PortId;
+
+    /// Up-port `idx` of switch `sw` (same round-robin order at its
+    /// level). Must not be called on top-level switches.
+    fn switch_up_port(&self, sw: SwitchId, idx: u32) -> PortId;
+
+    /// The element on the receiving side of a port.
+    fn port_peer(&self, p: PortId) -> Endpoint;
+
+    /// The undirected link a port belongs to.
+    fn port_link(&self, p: PortId) -> LinkId;
+
+    /// Whether the port emits upward (toward the top level).
+    fn port_is_up(&self, p: PortId) -> bool;
+
+    /// Port index within its owner's up-port (or down-port) list — the
+    /// rotation origin for deterministic fault fallback
+    /// ([`crate::faults::DegradedRouter`]).
+    fn port_index(&self, p: PortId) -> u32;
+
+    /// Link stage (`l` joins levels `l-1` and `l`); stage-1 links touch
+    /// end-nodes and are ineligible for the link-fault scenarios.
+    fn link_stage(&self, link: LinkId) -> usize;
+
+    /// First link id of a 1-based stage; stages occupy contiguous id
+    /// ranges `stage_first_link(s)..stage_first_link(s+1)` (with
+    /// `stage_first_link(h+1) == num_links()`), which is what lets
+    /// `links:K` fault scenarios sample eligible (stage ≥ 2) links
+    /// without a table scan.
+    fn stage_first_link(&self, stage: usize) -> LinkId;
+
+    /// Is `sw` an ancestor of node `nid` (i.e. `nid` in its sub-tree)?
+    fn is_ancestor(&self, sw: SwitchId, nid: Nid) -> bool;
+
+    /// For an ancestor switch at level `l`, the child digit (`a_l`) on
+    /// the way down to `nid`.
+    fn child_index_toward(&self, sw: SwitchId, nid: Nid) -> u32;
+
+    /// Down-port of ancestor `sw` toward `nid`'s subtree via parallel
+    /// link `j`.
+    fn down_port_toward(&self, sw: SwitchId, nid: Nid, j: u32) -> PortId;
+
+    /// The `W_l` ancestors of `nid` at 1-based level `l`, as a
+    /// contiguous ascending switch-id range (the within-level layout
+    /// keeps a subtree's switches adjacent — see the module docs).
+    fn ancestors_at(&self, l: usize, nid: Nid) -> Range<SwitchId>;
+}
+
+/// Mixed-radix prefix products of `m`: `mprod[l] = m_1·…·m_l`
+/// (`mprod[0] = 1`).
+fn m_prefix(spec: &PgftSpec) -> Vec<u64> {
+    let mut out = Vec::with_capacity(spec.h + 1);
+    out.push(1u64);
+    for &m in &spec.m {
+        out.push(out.last().unwrap() * m as u64);
+    }
+    out
+}
+
+impl TopologyView for Topology {
+    fn spec(&self) -> &PgftSpec {
+        &self.spec
+    }
+
+    fn num_nodes(&self) -> usize {
+        Topology::num_nodes(self)
+    }
+
+    fn num_switches(&self) -> usize {
+        Topology::num_switches(self)
+    }
+
+    fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    fn switch_level(&self, sw: SwitchId) -> usize {
+        self.switches[sw].level
+    }
+
+    fn level_switches(&self, l: usize) -> Range<SwitchId> {
+        Topology::level_switches(self, l)
+    }
+
+    fn node_up_port(&self, nid: Nid, idx: u32) -> PortId {
+        self.nodes[nid as usize].up_ports[idx as usize]
+    }
+
+    fn switch_up_port(&self, sw: SwitchId, idx: u32) -> PortId {
+        self.switches[sw].up_ports[idx as usize]
+    }
+
+    fn port_peer(&self, p: PortId) -> Endpoint {
+        self.ports[p].peer
+    }
+
+    fn port_link(&self, p: PortId) -> LinkId {
+        self.ports[p].link
+    }
+
+    fn port_is_up(&self, p: PortId) -> bool {
+        self.ports[p].up
+    }
+
+    fn port_index(&self, p: PortId) -> u32 {
+        self.ports[p].index
+    }
+
+    fn link_stage(&self, link: LinkId) -> usize {
+        self.links[link].stage
+    }
+
+    fn stage_first_link(&self, stage: usize) -> LinkId {
+        // The tables don't store stage starts; the cabling order makes
+        // them the same closed form the implicit view uses.
+        stage_first_links(&self.spec)
+            .get(stage - 1)
+            .copied()
+            .unwrap_or(self.links.len() as u64) as LinkId
+    }
+
+    fn is_ancestor(&self, sw: SwitchId, nid: Nid) -> bool {
+        Topology::is_ancestor(self, sw, nid)
+    }
+
+    fn child_index_toward(&self, sw: SwitchId, nid: Nid) -> u32 {
+        Topology::child_index_toward(self, sw, nid)
+    }
+
+    fn down_port_toward(&self, sw: SwitchId, nid: Nid, j: u32) -> PortId {
+        Topology::down_port_toward(self, sw, nid, j)
+    }
+
+    fn ancestors_at(&self, l: usize, nid: Nid) -> Range<SwitchId> {
+        // The Vec-returning inherent method proves (in its tests) that
+        // the ancestors are exactly this contiguous range; reusing the
+        // arithmetic start avoids W_l switch_at calls per query.
+        let mprod = m_prefix(&self.spec);
+        let w_l = self.spec.w_prefix(l) as usize;
+        let topv = (nid as u64 / mprod[l]) as usize;
+        let start = self.level_start[l - 1] + topv * w_l;
+        start..start + w_l
+    }
+}
+
+/// `stage_first[s]` (0-based `s`): first link id of stage `s+1`, plus a
+/// trailing total. Mirrors the nested-loop cabling order of
+/// [`super::build::build_pgft`].
+fn stage_first_links(spec: &PgftSpec) -> Vec<u64> {
+    let mut out = Vec::with_capacity(spec.h + 1);
+    let mut acc = 0u64;
+    for s in 0..spec.h {
+        out.push(acc);
+        let lower = if s == 0 { spec.num_nodes() } else { spec.switches_at_level(s) };
+        acc += lower * spec.w[s] as u64 * spec.p[s] as u64;
+    }
+    out.push(acc);
+    out
+}
+
+/// A PGFT evaluated arithmetically from its spec: `O(h)` resident state,
+/// every [`TopologyView`] query a closed form — no port/link tables.
+/// This is what closes the eval ladder at the `xl-1m` rung, where the
+/// materialized graph alone would cost hundreds of MiB before a single
+/// flow is traced.
+#[derive(Clone, Debug)]
+pub struct ImplicitTopology {
+    spec: PgftSpec,
+    /// `m_1·…·m_l` prefix products (`mprod[0] = 1`).
+    mprod: Vec<u64>,
+    /// `W_l = w_1·…·w_l` prefix products (`wpref[0] = 1`).
+    wpref: Vec<u64>,
+    /// First switch id of each level (`level_start[h]` = total switches).
+    level_start: Vec<SwitchId>,
+    /// First link id of each stage (trailing entry = total links).
+    stage_first: Vec<u64>,
+}
+
+impl ImplicitTopology {
+    /// Precompute the `O(h)` prefix tables for a spec.
+    pub fn new(spec: &PgftSpec) -> ImplicitTopology {
+        let mut level_start = Vec::with_capacity(spec.h + 1);
+        let mut acc = 0usize;
+        for l in 1..=spec.h {
+            level_start.push(acc);
+            acc += spec.switches_at_level(l) as usize;
+        }
+        level_start.push(acc);
+        let wpref = (0..=spec.h).map(|l| spec.w_prefix(l)).collect();
+        ImplicitTopology {
+            mprod: m_prefix(spec),
+            wpref,
+            level_start,
+            stage_first: stage_first_links(spec),
+            spec: spec.clone(),
+        }
+    }
+
+    /// `(level, within-level index)` of a switch.
+    #[inline]
+    fn locate(&self, sw: SwitchId) -> (usize, u64) {
+        debug_assert!(sw < *self.level_start.last().unwrap(), "switch id {sw} out of range");
+        for l in 1..=self.spec.h {
+            if sw < self.level_start[l] {
+                return (l, (sw - self.level_start[l - 1]) as u64);
+            }
+        }
+        unreachable!("switch id {sw} out of range")
+    }
+
+    /// `(0-based stage, within-stage offset)` of a link.
+    #[inline]
+    fn locate_link(&self, link: LinkId) -> (usize, u64) {
+        let link = link as u64;
+        debug_assert!(link < *self.stage_first.last().unwrap(), "link id {link} out of range");
+        for s in (0..self.spec.h).rev() {
+            if link >= self.stage_first[s] {
+                return (s, link - self.stage_first[s]);
+            }
+        }
+        unreachable!("link id {link} out of range")
+    }
+}
+
+impl TopologyView for ImplicitTopology {
+    fn spec(&self) -> &PgftSpec {
+        &self.spec
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.mprod[self.spec.h] as usize
+    }
+
+    fn num_switches(&self) -> usize {
+        *self.level_start.last().unwrap()
+    }
+
+    fn num_links(&self) -> usize {
+        *self.stage_first.last().unwrap() as usize
+    }
+
+    fn switch_level(&self, sw: SwitchId) -> usize {
+        self.locate(sw).0
+    }
+
+    fn level_switches(&self, l: usize) -> Range<SwitchId> {
+        assert!((1..=self.spec.h).contains(&l));
+        self.level_start[l - 1]..self.level_start[l]
+    }
+
+    fn node_up_port(&self, nid: Nid, idx: u32) -> PortId {
+        let (w, p) = (self.spec.w[0] as u64, self.spec.p[0] as u64);
+        debug_assert!((idx as u64) < w * p);
+        let (c, j) = (idx as u64 % w, idx as u64 / w);
+        let link = nid as u64 * w * p + c * p + j;
+        (2 * link) as PortId
+    }
+
+    fn switch_up_port(&self, sw: SwitchId, idx: u32) -> PortId {
+        let (l, within) = self.locate(sw);
+        debug_assert!(l < self.spec.h, "top-level switches have no up-ports");
+        let (w, p) = (self.spec.w[l] as u64, self.spec.p[l] as u64);
+        debug_assert!((idx as u64) < w * p);
+        let (c, j) = (idx as u64 % w, idx as u64 / w);
+        let link = self.stage_first[l] + within * w * p + c * p + j;
+        (2 * link) as PortId
+    }
+
+    fn port_peer(&self, p: PortId) -> Endpoint {
+        let (s, off) = self.locate_link(p >> 1);
+        let (w, par) = (self.spec.w[s] as u64, self.spec.p[s] as u64);
+        let lower = off / (w * par);
+        let c = (off % (w * par)) / par;
+        if p & 1 == 1 {
+            // Down-port: the peer is the lower element.
+            if s == 0 {
+                Endpoint::Node(lower as Nid)
+            } else {
+                Endpoint::Switch(self.level_start[s - 1] + lower as usize)
+            }
+        } else {
+            // Up-port: the peer is the level-(s+1) parent. Its bottom
+            // digits are the child's plus plane `c`; its top digits drop
+            // the child's lowest.
+            // Treat a node as "all top digits, no bottom digits": its
+            // lowest digit is the one the `/ m` below drops.
+            let (topv, bot) = if s == 0 {
+                (lower, 0)
+            } else {
+                (lower / self.wpref[s], lower % self.wpref[s])
+            };
+            let within = (topv / self.spec.m[s] as u64) * self.wpref[s + 1]
+                + self.wpref[s] * c
+                + bot;
+            Endpoint::Switch(self.level_start[s] + within as usize)
+        }
+    }
+
+    fn port_link(&self, p: PortId) -> LinkId {
+        p >> 1
+    }
+
+    fn port_is_up(&self, p: PortId) -> bool {
+        p & 1 == 0
+    }
+
+    fn port_index(&self, p: PortId) -> u32 {
+        let (s, off) = self.locate_link(p >> 1);
+        let (w, par) = (self.spec.w[s] as u64, self.spec.p[s] as u64);
+        let lower = off / (w * par);
+        let rem = off % (w * par);
+        let (c, j) = (rem / par, rem % par);
+        if p & 1 == 0 {
+            // Up-port: round-robin index `c + w·j`.
+            (c + w * j) as u32
+        } else {
+            // Down-port: child-major index `a·p + j` with `a` the child
+            // digit (stage 1: the node's lowest digit; above: the
+            // child's lowest top digit).
+            let a = if s == 0 {
+                lower % self.spec.m[0] as u64
+            } else {
+                (lower / self.wpref[s]) % self.spec.m[s] as u64
+            };
+            (a * par + j) as u32
+        }
+    }
+
+    fn link_stage(&self, link: LinkId) -> usize {
+        self.locate_link(link).0 + 1
+    }
+
+    fn stage_first_link(&self, stage: usize) -> LinkId {
+        self.stage_first[stage - 1] as LinkId
+    }
+
+    fn is_ancestor(&self, sw: SwitchId, nid: Nid) -> bool {
+        let (l, within) = self.locate(sw);
+        within / self.wpref[l] == nid as u64 / self.mprod[l]
+    }
+
+    fn child_index_toward(&self, sw: SwitchId, nid: Nid) -> u32 {
+        let (l, _) = self.locate(sw);
+        ((nid as u64 / self.mprod[l - 1]) % self.spec.m[l - 1] as u64) as u32
+    }
+
+    fn down_port_toward(&self, sw: SwitchId, nid: Nid, j: u32) -> PortId {
+        let (l, within) = self.locate(sw);
+        let par = self.spec.p[l - 1] as u64;
+        debug_assert!((j as u64) < par);
+        debug_assert!(self.is_ancestor(sw, nid), "down_port_toward from a non-ancestor");
+        let link = if l == 1 {
+            // Stage 1: the node's link to this leaf on plane `b_1`.
+            let plane = within % self.wpref[1];
+            nid as u64 * self.wpref[1] * par + plane * par + j as u64
+        } else {
+            // The child toward `nid` keeps the switch's bottom digits
+            // below `b_l` and swaps its own subtree digit `a_l` in.
+            let bot = within % self.wpref[l];
+            let topv = within / self.wpref[l];
+            let plane = bot / self.wpref[l - 1];
+            let child_bot = bot % self.wpref[l - 1];
+            let a = (nid as u64 / self.mprod[l - 1]) % self.spec.m[l - 1] as u64;
+            let child_within = (topv * self.spec.m[l - 1] as u64 + a) * self.wpref[l - 1]
+                + child_bot;
+            let (w, _) = (self.spec.w[l - 1] as u64, ());
+            self.stage_first[l - 1] + child_within * w * par + plane * par + j as u64
+        };
+        (2 * link + 1) as PortId
+    }
+
+    fn ancestors_at(&self, l: usize, nid: Nid) -> Range<SwitchId> {
+        assert!((1..=self.spec.h).contains(&l));
+        let w_l = self.wpref[l] as usize;
+        let start = self.level_start[l - 1] + (nid as u64 / self.mprod[l]) as usize * w_l;
+        start..start + w_l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::build::build_pgft;
+    use crate::util::prop::Prop;
+
+    /// Every query of the implicit view against the materialized tables,
+    /// exhaustively over one spec.
+    fn assert_views_agree(spec: &PgftSpec) {
+        let t = build_pgft(spec);
+        let v = ImplicitTopology::new(spec);
+        let tv: &dyn TopologyView = &t;
+        assert_eq!(v.num_nodes(), tv.num_nodes(), "{spec}");
+        assert_eq!(v.num_switches(), tv.num_switches(), "{spec}");
+        assert_eq!(v.num_links(), tv.num_links(), "{spec}");
+        assert_eq!(v.num_ports(), tv.num_ports(), "{spec}");
+        for l in 1..=spec.h {
+            assert_eq!(v.level_switches(l), tv.level_switches(l), "{spec} level {l}");
+            assert_eq!(v.stage_first_link(l), tv.stage_first_link(l), "{spec} stage {l}");
+        }
+        for nid in 0..t.num_nodes() as Nid {
+            for idx in 0..spec.up_ports_at(0) {
+                assert_eq!(v.node_up_port(nid, idx), tv.node_up_port(nid, idx), "{spec} n{nid}");
+            }
+            for l in 1..=spec.h {
+                assert_eq!(v.ancestors_at(l, nid), tv.ancestors_at(l, nid), "{spec} n{nid} l{l}");
+            }
+        }
+        for sw in 0..t.num_switches() {
+            let l = tv.switch_level(sw);
+            assert_eq!(v.switch_level(sw), l, "{spec} sw{sw}");
+            for idx in 0..spec.up_ports_at(l) {
+                assert_eq!(v.switch_up_port(sw, idx), tv.switch_up_port(sw, idx), "{spec} {sw}");
+            }
+            for nid in 0..t.num_nodes() as Nid {
+                assert_eq!(v.is_ancestor(sw, nid), tv.is_ancestor(sw, nid), "{spec} {sw} {nid}");
+                if tv.is_ancestor(sw, nid) {
+                    assert_eq!(
+                        v.child_index_toward(sw, nid),
+                        tv.child_index_toward(sw, nid),
+                        "{spec} {sw} {nid}"
+                    );
+                    for j in 0..spec.p[l - 1] {
+                        assert_eq!(
+                            v.down_port_toward(sw, nid, j),
+                            tv.down_port_toward(sw, nid, j),
+                            "{spec} {sw} {nid} {j}"
+                        );
+                    }
+                }
+            }
+        }
+        for p in 0..t.num_ports() {
+            assert_eq!(v.port_peer(p), tv.port_peer(p), "{spec} port {p}");
+            assert_eq!(v.port_link(p), tv.port_link(p), "{spec} port {p}");
+            assert_eq!(v.port_is_up(p), tv.port_is_up(p), "{spec} port {p}");
+            assert_eq!(v.port_index(p), tv.port_index(p), "{spec} port {p}");
+        }
+        for link in 0..t.num_links() {
+            assert_eq!(v.link_stage(link), tv.link_stage(link), "{spec} link {link}");
+        }
+    }
+
+    #[test]
+    fn implicit_matches_materialized_on_named_shapes() {
+        for spec in [
+            PgftSpec::case_study(),
+            // Multi-plane (w1 = 2): nodes cable to several leaves.
+            PgftSpec::new(vec![4, 4], vec![2, 2], vec![1, 1]).unwrap(),
+            // Parallel links at every stage.
+            PgftSpec::new(vec![2, 2], vec![1, 2], vec![2, 2]).unwrap(),
+            // The medium bench shape.
+            PgftSpec::new(vec![16, 8, 4], vec![1, 4, 2], vec![1, 1, 2]).unwrap(),
+            // Single level (leaves only).
+            PgftSpec::new(vec![6], vec![2], vec![2]).unwrap(),
+        ] {
+            assert_views_agree(&spec);
+        }
+    }
+
+    #[test]
+    fn prop_implicit_matches_materialized_on_random_pgfts() {
+        Prop::new("implicit-topology").cases(30).run(|g| {
+            let h = g.usize_in(1, 4);
+            let m: Vec<u32> = (0..h).map(|_| g.usize_in(1, 4) as u32).collect();
+            let w: Vec<u32> = (0..h).map(|_| g.usize_in(1, 3) as u32).collect();
+            let p: Vec<u32> = (0..h).map(|_| g.usize_in(1, 3) as u32).collect();
+            let spec = PgftSpec::new(m, w, p).unwrap();
+            if spec.num_nodes() > 128 || spec.total_switches() > 512 {
+                return;
+            }
+            assert_views_agree(&spec);
+        });
+    }
+
+    #[test]
+    fn implicit_ladder_counts_without_building() {
+        // The whole point: rung-scale counts from O(h) state.
+        let spec = crate::topology::families::named_spec("xl-1m").unwrap();
+        let v = ImplicitTopology::new(&spec);
+        assert_eq!(v.num_nodes(), 1_048_576);
+        assert_eq!(v.num_switches(), 25_088);
+        assert_eq!(v.num_links(), 1_835_008);
+        assert_eq!(v.num_ports(), 3_670_016);
+        // Eligible (stage ≥ 2) links are one contiguous range.
+        assert_eq!(v.stage_first_link(2), 1_048_576);
+        assert_eq!(v.link_stage(v.stage_first_link(2)), 2);
+        assert_eq!(v.link_stage(v.stage_first_link(2) - 1), 1);
+        // Spot-check port round-trips at the far end of the id space.
+        let top = v.level_switches(3).end - 1;
+        assert_eq!(v.switch_level(top), 3);
+        let nid = 1_048_575;
+        let anc = v.ancestors_at(3, nid);
+        assert!(anc.contains(&top));
+        let p = v.down_port_toward(top, nid, 1);
+        assert_eq!(v.port_peer(v.node_up_port(nid, 0)), Endpoint::Switch(v.ancestors_at(1, nid).start));
+        assert!(!v.port_is_up(p));
+        assert_eq!(v.link_stage(v.port_link(p)), 3);
+    }
+}

@@ -25,8 +25,11 @@
 //!     byte-identical to the serial repair (the invariant the sweep
 //!     runner, the coordinator leader and `pgft eval --size` stand on).
 //!  5. The committed `BENCH_eval.json` perf record (schema
-//!     `pgft-bench-eval/2`) is well-formed — no null fields, the 16k
-//!     and 64k ladder rungs present — and shows incremental re-trace
+//!     `pgft-bench-eval/3`) is well-formed — no null fields, every
+//!     ladder rung from 16k to 1m present with a *measured* retrace
+//!     leg (the 256k skip of schema v2 is gone: lazy reachability under
+//!     `DEFAULT_REACH_BUDGET` made the leg affordable), the striped-vs-
+//!     blocked kernel duel recorded — and shows incremental re-trace
 //!     beating full, with the parallel repair pulling ahead of serial
 //!     at ≥ 4 threads on the 64k rung.
 
@@ -265,9 +268,14 @@ fn sweep_fault_cells_match_the_incremental_diff() {
 
 /// Extract the body of one ladder-rung record from the hand-written
 /// JSON: everything from its `"rung": "<name>"` key up to the next
-/// rung (or the end of the array).
+/// rung (or the end of the array). Scoped to the `"ladder"` array —
+/// the `kernel` object carries a `"rung"` key of its own.
 fn rung_body<'a>(body: &'a str, rung: &str) -> &'a str {
-    let tail = body
+    let ladder = body
+        .split("\"ladder\":")
+        .nth(1)
+        .expect("BENCH_eval.json misses the ladder section");
+    let tail = ladder
         .split(&format!("\"rung\": \"{rung}\""))
         .nth(1)
         .unwrap_or_else(|| panic!("BENCH_eval.json misses the {rung} rung"));
@@ -292,19 +300,29 @@ fn committed_bench_eval_json_is_wellformed_and_shows_the_speedups() {
     // `python/tools/gen_bench_eval.py`, which produced the committed
     // copy — `"source"` records which) rewrite this file on every
     // run; CI uploads the smoke record as the perf-trajectory
-    // artifact. The committed copy must be schema v2 with no null
-    // fields, carry the 16k and 64k ladder rungs with real retrace
-    // measurements, and show (a) incremental beating full re-trace
-    // and (b) the parallel repair pulling ahead of serial at ≥ 4
-    // threads on the 64k rung whenever the recording host actually
-    // had ≥ 4 CPUs (`host_cpus` records that provenance).
+    // artifact. The committed copy must be schema v3 with no null
+    // fields, carry every ladder rung from 16k to 1m with real retrace
+    // measurements (the 1m rung through the implicit view), record the
+    // striped-vs-blocked kernel duel, and show (a) incremental beating
+    // full re-trace and (b) the parallel repair pulling ahead of
+    // serial at ≥ 4 threads on the 64k rung whenever the recording
+    // host actually had ≥ 4 CPUs (`host_cpus` records that
+    // provenance).
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_eval.json");
     let body = std::fs::read_to_string(path).expect("BENCH_eval.json is committed");
-    assert!(body.contains("\"schema\": \"pgft-bench-eval/2\""), "{body}");
-    assert!(!body.contains("null"), "schema v2 has no null fields: {body}");
-    for key in ["\"source\"", "\"ladder\"", "\"netsim\""] {
+    assert!(body.contains("\"schema\": \"pgft-bench-eval/3\""), "{body}");
+    assert!(!body.contains("null"), "schema v3 has no null fields: {body}");
+    for key in ["\"source\"", "\"ladder\"", "\"netsim\"", "\"kernel\""] {
         assert!(body.contains(key), "BENCH_eval.json misses {key}");
     }
+    // The kernel duel: both kernels measured, the striped/blocked
+    // ratio recorded. The threshold stays provenance-honest — a rate,
+    // not a speedup floor, is what every host can promise.
+    assert!(json_num(&body, "blocked_flows_per_sec") > 0.0, "kernel: blocked leg");
+    assert!(json_num(&body, "striped_flows_per_sec") > 0.0, "kernel: striped leg");
+    // The kernel object is emitted before the ladder, so the first
+    // bare `"speedup"` in the file is the striped/blocked ratio.
+    assert!(json_num(&body, "speedup") > 0.0, "kernel: speedup must be measured");
     // The flit-level leg is rust-only: a rust record measures events/s,
     // a python-port record says so explicitly instead of carrying null.
     assert!(
@@ -351,8 +369,20 @@ fn committed_bench_eval_json_is_wellformed_and_shows_the_speedups() {
             "64k rung: the ≥4-thread sweep must carry measured entries (got {best_at_4plus})"
         );
     }
-    // The 256k rung documents why its retrace leg is absent instead of
-    // carrying nulls.
+    // Schema v3 closes the ladder: the 256k rung's retrace leg is
+    // *measured* (lazy reachability under the budget — the v2 skip is
+    // gone for good), and the 1m rung runs end-to-end through the
+    // implicit view with the reach-table peak it paid on record.
     let r256 = rung_body(&body, "256k");
-    assert!(r256.contains("\"skipped\""), "256k: retrace skip must be explicit: {r256}");
+    assert!(
+        !r256.contains("\"retrace\": {\"skipped\""),
+        "256k: the retrace leg must be measured under the lazy reach budget: {r256}"
+    );
+    assert!(json_num(r256, "dirty_flows") > 0.0, "256k: retrace leg must be measured");
+    assert!(json_num(r256, "reach_peak_mb") > 0.0, "256k: reach budget accounting");
+    let r1m = rung_body(&body, "1m");
+    assert!(r1m.contains("\"mode\": \"implicit\""), "1m runs through the implicit view");
+    assert!(json_num(r1m, "flows_per_sec") > 0.0, "1m: trace leg");
+    assert!(json_num(r1m, "dirty_flows") > 0.0, "1m: retrace leg must be measured");
+    assert!(json_num(r1m, "reach_peak_mb") > 0.0, "1m: reach budget accounting");
 }

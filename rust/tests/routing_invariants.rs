@@ -120,7 +120,7 @@ fn prop_grouped_xmodk_per_type_upload_within_balance_bound() {
             for &(ty, start, count) in reindex.groups() {
                 let mut loads = vec![0i64; k];
                 for gnid in start..start + count {
-                    loads[Xmodk::up_index(&topo, level, gnid as u64) as usize] += 1;
+                    loads[Xmodk::up_index(&topo.spec, level, gnid as u64) as usize] += 1;
                 }
                 let max = *loads.iter().max().unwrap();
                 let min = *loads.iter().min().unwrap();
