@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Warn-only bench-regression guard for the CI eval-bench smoke.
+
+Compares the ladder throughputs of a freshly measured
+``BENCH_eval.ci.json`` (written by ``PGFT_BENCH_SMOKE=1
+PGFT_BENCH_EVAL_OUT=... cargo bench --bench bench_eval``) against the
+committed ``BENCH_eval.json`` reference.  Ladder entries are matched by
+``(rung, mode)`` and their ``flows_per_sec`` compared; a drop beyond
+the threshold prints a GitHub Actions ``::warning::`` annotation.
+
+CI runners are noisy, shared and unlike the machine that produced the
+committed reference, so this guard NEVER fails the build — it always
+exits 0.  It exists to put a visible marker on pull requests whose
+trace/retrace throughput cratered, not to gate them.
+
+Usage::
+
+    python3 python/tools/bench_guard.py BENCH_eval.ci.json BENCH_eval.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Fractional flows_per_sec drop (vs the committed reference) that
+# triggers a warning annotation. Generous: CI boxes are slow and noisy.
+DROP_THRESHOLD = 0.30
+
+
+def ladder_map(doc: dict) -> dict:
+    """``(rung, mode) -> flows_per_sec`` for every ladder entry."""
+    out = {}
+    for entry in doc.get("ladder", []):
+        key = (entry.get("rung"), entry.get("mode"))
+        fps = entry.get("flows_per_sec")
+        if key[0] is not None and isinstance(fps, (int, float)):
+            out[key] = float(fps)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("measured", help="BENCH_eval.ci.json from the CI bench smoke")
+    ap.add_argument("reference", help="committed BENCH_eval.json reference")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.measured, encoding="utf-8") as f:
+            measured = ladder_map(json.load(f))
+        with open(args.reference, encoding="utf-8") as f:
+            reference = ladder_map(json.load(f))
+    except (OSError, ValueError) as e:
+        print(f"::warning::bench_guard: could not read inputs: {e}")
+        return 0
+    if not measured or not reference:
+        print("::warning::bench_guard: no comparable ladder entries found")
+        return 0
+    compared = warned = 0
+    for key, ref_fps in sorted(reference.items()):
+        if key not in measured or ref_fps <= 0:
+            continue
+        compared += 1
+        got = measured[key]
+        drop = (ref_fps - got) / ref_fps
+        rung, mode = key
+        if drop > DROP_THRESHOLD:
+            warned += 1
+            print(
+                f"::warning::bench_guard: ladder {rung}/{mode} throughput "
+                f"{got:.0f} flows/s is {drop:.0%} below the committed "
+                f"reference {ref_fps:.0f} flows/s"
+            )
+        else:
+            sys.stderr.write(
+                f"bench_guard: {rung}/{mode} {got:.0f} flows/s "
+                f"(reference {ref_fps:.0f}, {'+' if drop < 0 else '-'}{abs(drop):.0%})\n"
+            )
+    sys.stderr.write(
+        f"bench_guard: {compared} ladder entr{'y' if compared == 1 else 'ies'} "
+        f"compared, {warned} warning(s) — informational only, always exit 0\n"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,233 @@
+#!/usr/bin/env python3
+"""Cross-check a ``pgft --record`` time-series document against the
+golden Python injection mirror.
+
+The Rust flight recorder exports windowed per-link series in a
+``pgft-timeseries/1`` document.  This script verifies, per recording:
+
+* structural discipline: schema tag, ``host_cpus`` provenance, the
+  sampling config (window/top_k/max_windows), and no ``null`` anywhere;
+* window geometry: retained windows tile the cycle axis contiguously,
+  the first retained index equals the shed count, every window is at
+  most ``window`` cycles long (shorter only at a forced phase/horizon
+  rollover) and the last window closes exactly at the horizon;
+* flit conservation: the per-window deltas of all three series
+  (injected / delivered / forwarded), plus the shed aggregate, sum to
+  the whole-run totals — nothing vanishes when the bounded ring sheds;
+* top-K sanity: at most ``top_k`` ports per window, sorted descending
+  by forwarded flits (ties toward the lower port id), no port forwards
+  more than one flit per cycle of its window, the per-port sum never
+  exceeds the window's forwarded total and every high-water vector has
+  one slot per VC;
+* the exact injection replay: for unphased, unshed ``bernoulli``
+  case-study runs, the per-window ``injected_flits`` series is replayed
+  flit-for-flit from the same closed-form geometric-gap arrival process
+  (xoshiro256** per-flow streams) the engine uses — the recorder's
+  window bucketing is pinned against an independent implementation.
+
+Recordings are self-describing (seed, rate, flow count, horizon ride in
+the document), so no engine parameters need to be passed.  Runs outside
+the replayable set (phased, shed, non-bernoulli, non-case-study) still
+get the structural checks and are reported as partially checked.
+
+Usage::
+
+    pgft netsim --topo case-study --algo dmodk,gdmodk --pattern c2io-sym \
+        --rates 0.8 --warmup 100 --measure 400 --drain 100 \
+        --record ts.json --format csv --out /dev/null
+    python3 python/tools/check_timeseries.py ts.json [--trace trace.json]
+
+``--trace`` additionally validates a ``--trace`` Perfetto/Chrome-trace
+export: well-formed JSON, a non-empty ``traceEvents`` array, the event
+phase grammar and the no-null discipline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, HERE)
+
+from check_telemetry import GOLDEN_GAMMA, CheckError, draw_gap, ensure  # noqa: E402
+from gen_faults_golden import MASK, Xoshiro256  # noqa: E402
+
+
+def replay_window_injection(rec: dict, window: int) -> list:
+    """Per-window injected-flit series replayed from the arrival process.
+
+    Mirrors the engine: each flow's xoshiro256** stream is seeded at
+    ``seed + (flow+1) * golden gamma``; arrivals walk closed-form
+    geometric gaps with ``p = rate / packet_flits``; an arrival at cycle
+    ``t`` (``0 < t <= horizon``) injects ``packet_flits`` flits into the
+    window spanning ``(start, end]`` that contains ``t``.  Windows are
+    uniform here (the replayable set excludes phased runs), so the
+    bucket is ``(t - 1) // window``.
+    """
+    horizon = rec["horizon"]
+    p = rec["rate"] / float(rec["packet_flits"])
+    pf = rec["packet_flits"]
+    out = [0] * len(rec["windows"])
+    for f in range(rec["flows"]):
+        rng = Xoshiro256((rec["seed"] + (f + 1) * GOLDEN_GAMMA) & MASK)
+        t = 0
+        while True:
+            t = min(t + draw_gap(rng, p), MASK)
+            if t > horizon:
+                break
+            out[(t - 1) // window] += pf
+    return out
+
+
+def check_geometry(name: str, rec: dict, window: int, top_k: int) -> None:
+    """Window tiling, ring indices and top-K ordering of one recording."""
+    windows = rec["windows"]
+    ensure(windows, f"{name}: no retained windows")
+    ensure(
+        windows[0]["index"] == rec["shed"]["windows"],
+        f"{name}: first retained index must equal the shed count",
+    )
+    prev_end = windows[0]["start"]
+    for i, w in enumerate(windows):
+        ensure(w["index"] == windows[0]["index"] + i, f"{name}: indices not monotone")
+        ensure(w["start"] == prev_end, f"{name}: window {i} does not tile the axis")
+        span = w["end"] - w["start"]
+        ensure(0 < span <= window, f"{name}: window {i} span {span} out of range")
+        prev_end = w["end"]
+        ports = w["ports"]
+        ensure(len(ports) <= top_k, f"{name}: window {i} exceeds top_k")
+        for a, b in zip(ports, ports[1:]):
+            ensure(
+                (a["forwarded"], -a["port"]) >= (b["forwarded"], -b["port"]),
+                f"{name}: window {i} top-K not sorted (desc, ties to lower id)",
+            )
+        for pw in ports:
+            ensure(
+                pw["forwarded"] <= span,
+                f"{name}: port {pw['port']} forwards >1 flit/cycle in window {i}",
+            )
+            ensure(
+                len(pw["vc_hwm"]) == rec["vcs"],
+                f"{name}: port {pw['port']} high-water vector != vcs slots",
+            )
+        ensure(
+            sum(pw["forwarded"] for pw in ports) <= w["forwarded_flits"],
+            f"{name}: window {i} top-K forwards more than the window total",
+        )
+    ensure(prev_end == rec["horizon"], f"{name}: last window must close at the horizon")
+    if rec["shed"]["windows"] == 0:
+        ensure(windows[0]["start"] == 0, f"{name}: unshed series must start at cycle 0")
+
+
+def check_conservation(name: str, rec: dict) -> None:
+    """Retained + shed window deltas must sum to the run totals."""
+    for series in ("injected_flits", "delivered_flits", "forwarded_flits"):
+        retained = sum(w[series] for w in rec["windows"])
+        total = retained + rec["shed"][series]
+        ensure(
+            total == rec["totals"][series],
+            f"{name}: {series} windows+shed {total} != totals {rec['totals'][series]}",
+        )
+
+
+def replayable(rec: dict) -> bool:
+    """Whether the exact injection replay applies to this recording."""
+    return (
+        rec["injection"] == "bernoulli"
+        and not rec["phases"]
+        and rec["shed"]["windows"] == 0
+        and rec["topo"] == "case-study"
+        and rec.get("label", {}).get("pattern") == "c2io-sym"
+    )
+
+
+def check_recording(rec: dict, window: int, top_k: int) -> bool:
+    """Check one recording; returns True when the replay ran too."""
+    name = ",".join(f"{k}={v}" for k, v in sorted(rec.get("label", {}).items())) or "run"
+    check_geometry(name, rec, window, top_k)
+    check_conservation(name, rec)
+    if not replayable(rec):
+        return False
+    expected = replay_window_injection(rec, window)
+    got = [w["injected_flits"] for w in rec["windows"]]
+    ensure(
+        got == expected,
+        f"{name}: per-window injected series diverges from the Python replay: "
+        f"got {got}, expected {expected}",
+    )
+    ensure(
+        sum(expected) == rec["totals"]["injected_flits"],
+        f"{name}: replay total != recorded injected total",
+    )
+    return True
+
+
+def check_document(doc: dict) -> tuple:
+    """Check a whole time-series document; returns (replayed, partial)."""
+    ensure(doc.get("schema") == "pgft-timeseries/1", "wrong or missing schema tag")
+    ensure(doc.get("host_cpus", 0) >= 1, "host_cpus provenance missing")
+    ensure(doc.get("window", 0) >= 1, "window provenance missing")
+    ensure(doc.get("top_k", 0) >= 1, "top_k provenance missing")
+    ensure(doc.get("max_windows", 0) >= 1, "max_windows provenance missing")
+    runs = doc.get("runs", [])
+    ensure(runs, "document carries no recordings")
+    replayed, partial = 0, 0
+    for rec in runs:
+        if check_recording(rec, doc["window"], doc["top_k"]):
+            replayed += 1
+        else:
+            partial += 1
+    return replayed, partial
+
+
+def check_trace(path: str) -> int:
+    """Validate a Chrome-trace/Perfetto export; returns the event count."""
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    ensure("null" not in text, "trace documents must not carry null")
+    doc = json.loads(text)
+    events = doc.get("traceEvents")
+    ensure(isinstance(events, list) and events, "traceEvents missing or empty")
+    for ev in events:
+        ensure(
+            isinstance(ev.get("name"), str) and ev.get("pid") == 1,
+            f"malformed trace event: {ev}",
+        )
+        ph = ev.get("ph")
+        ensure(ph in ("M", "X", "C"), f"unknown event phase {ph!r}")
+        if ph in ("X", "C"):
+            ensure(ev.get("ts", -1) >= 0, f"event without timestamp: {ev}")
+        if ph == "X":
+            ensure(ev.get("dur", 0) >= 1, f"zero-width slice: {ev}")
+    return len(events)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("timeseries", help="pgft-timeseries/1 JSON from pgft --record")
+    ap.add_argument("--trace", help="optional Perfetto export from pgft --trace")
+    cfg = ap.parse_args(argv)
+    with open(cfg.timeseries, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        ensure("null" not in text, "time-series documents must not carry null")
+        replayed, partial = check_document(json.loads(text))
+        events = check_trace(cfg.trace) if cfg.trace else 0
+    except CheckError as e:
+        sys.stderr.write(f"FAIL {cfg.timeseries}: {e}\n")
+        return 1
+    msg = (
+        f"OK {cfg.timeseries}: {replayed} recording(s) replayed flit-for-flit, "
+        f"{partial} structurally checked"
+    )
+    if cfg.trace:
+        msg += f"; {cfg.trace}: {events} trace events validated"
+    sys.stderr.write(msg + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,7 +38,7 @@ use crate::eval::{evaluate_all, parse_evaluators, FlowSet};
 use crate::faults::{DegradedRouter, FaultModel, FaultSet, DEFAULT_REACH_BUDGET};
 use crate::metrics::{render_algorithm_table, CongestionReport};
 use crate::netsim::{
-    curve_table, default_rates, load_curve_with, saturation_point, CurvePoint, Injection,
+    curve_table, default_rates, load_curve_recorded, saturation_point, CurvePoint, Injection,
     NetsimConfig,
 };
 use crate::nodes::{NodeTypeMap, Placement};
@@ -51,8 +51,9 @@ use crate::sweep::{
     fault_table, run_sweep, run_sweep_with, sweep_table, SweepOptions, SweepResult, SweepSpec,
 };
 use crate::telemetry::{
-    summary_table as telemetry_summary_table, write_telemetry, BatchRecord, Registry, Telemetry,
-    TelemetryRun,
+    attribute, diff_hotspots, parse_timeseries, summary_table as telemetry_summary_table,
+    write_telemetry, write_timeseries, BatchRecord, Hotspot, Recorder, RecorderConfig, Registry,
+    RunInfo, Telemetry, TelemetryRun, TraceBuilder, VecKind,
 };
 use crate::topology::{families, render, ImplicitTopology, Topology, TopologyView};
 use crate::workload::{
@@ -83,10 +84,16 @@ const ALIAS_GROUPS: &[&[&str]] = &[
     &["thread", "threads"],
 ];
 
-/// Parsed `--key value` / `--flag` arguments.
+/// Parsed `--key value` / `--flag` arguments plus bare positional
+/// operands (only `report` consumes positionals; [`run`] rejects stray
+/// ones everywhere else so typos keep failing fast).
 pub struct Args {
     /// The leading subcommand word (`help` when absent).
     pub cmd: String,
+    /// Bare operands in argv order (`pgft report A.json B.json`). A
+    /// bare token right after a valueless `--flag` is taken as that
+    /// flag's value, so operands go first or after `--key value` pairs.
+    pub positionals: Vec<String>,
     opts: BTreeMap<String, String>,
 }
 
@@ -95,12 +102,15 @@ impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
         let mut opts = BTreeMap::new();
+        let mut positionals = Vec::new();
         let mut i = 1;
         while i < argv.len() {
             let a = &argv[i];
-            let key = a
-                .strip_prefix("--")
-                .with_context(|| format!("expected --option, got {a:?}"))?;
+            let Some(key) = a.strip_prefix("--") else {
+                positionals.push(a.clone());
+                i += 1;
+                continue;
+            };
             if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                 opts.insert(key.to_string(), argv[i + 1].clone());
                 i += 2;
@@ -109,7 +119,7 @@ impl Args {
                 i += 1;
             }
         }
-        Ok(Args { cmd, opts })
+        Ok(Args { cmd, positionals, opts })
     }
 
     /// Value of `--key`, if given — under its exact spelling first, then
@@ -191,6 +201,50 @@ fn emit_telemetry(
     Ok(())
 }
 
+/// Expand `--record OUT.json` (plus `--window`/`--top-k`/
+/// `--max-windows`) into a flight-recorder handle. `--trace` also
+/// enables it on the netsim-backed subcommands, whose Perfetto export
+/// is rendered from the recordings. Inert otherwise, so unrecorded runs
+/// stay byte- and speed-identical (pinned by the CLI tests).
+fn recorder_handle(args: &Args) -> Result<Recorder> {
+    if args.get("record").is_none() && args.get("trace").is_none() {
+        return Ok(Recorder::disabled());
+    }
+    let d = RecorderConfig::default();
+    let cfg = RecorderConfig {
+        window: args.u64_or("window", d.window)?,
+        top_k: args.u64_or("top-k", d.top_k as u64)? as usize,
+        max_windows: args.u64_or("max-windows", d.max_windows as u64)? as usize,
+    };
+    cfg.validate()?;
+    Ok(Recorder::enabled(cfg))
+}
+
+/// Drain a flight recorder and write what `--record` / `--trace` asked
+/// for: the `pgft-timeseries/1` document and/or a Chrome-trace JSON
+/// rendered from the same recordings (counter tracks per run, phase
+/// slices for phased replays). Notices go to stderr so `--out`/stdout
+/// stays machine-clean. A no-op for a disabled handle.
+fn emit_recorded(args: &Args, command: &str, rec: &Recorder) -> Result<()> {
+    if !rec.is_enabled() {
+        return Ok(());
+    }
+    let recs = rec.take();
+    if let Some(path) = args.get("record") {
+        write_timeseries(path, command, &rec.config(), &recs)?;
+        eprintln!("wrote time-series {path} ({} runs)", recs.len());
+    }
+    if let Some(path) = args.get("trace") {
+        let mut tb = TraceBuilder::new();
+        for r in &recs {
+            tb.add_recording(r);
+        }
+        tb.write(path)?;
+        eprintln!("wrote trace {path} ({} events)", tb.len());
+    }
+    Ok(())
+}
+
 fn load_topo(args: &Args) -> Result<(Topology, NodeTypeMap)> {
     let topo = families::named(&args.get_or("topo", "case-study"))?;
     crate::topology::validate::validate(&topo)?;
@@ -233,6 +287,11 @@ fn emit(table: &Table, args: &Args) -> Result<()> {
 /// Entry point used by `main.rs`; returns the process exit code.
 pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    // Only `report` takes operands; everywhere else a bare token is a
+    // typo (a flag missing its `--`), so keep rejecting it loudly.
+    if args.cmd != "report" && !args.positionals.is_empty() {
+        bail!("expected --option, got {:?}", args.positionals[0]);
+    }
     match args.cmd.as_str() {
         "topo" => cmd_topo(&args),
         "sweep" => cmd_sweep(&args),
@@ -248,6 +307,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "run" => cmd_run(&args),
         "fabric" => cmd_fabric(&args),
         "fabric-demo" => cmd_fabric_demo(&args),
+        "report" => cmd_report(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -306,6 +366,13 @@ commands:
                each drill half as one coalesced batch; --readers N
                --query-ms MS size the read-load phase)
   fabric-demo  coordinator lifecycle: route, fail links, reroute, report
+  report       hotspot attribution over recorded time-series: pgft report
+               A.json [B.json] rebuilds each run's fabric from its recorded
+               provenance, prints the hottest links (stage, element, node-type
+               group, saturation onset, persistence; --top N rows per run)
+               and diffs matched runs — across the two files, or within one
+               file between runs differing only in their algo label
+               (absent/cooler/similar/hotter verdicts, A is the baseline)
   artifacts    list AOT artifacts the runtime can execute
 common options:
   --topo NAME --placement SPEC --algo LIST|all --pattern LIST --seed N
@@ -315,6 +382,18 @@ common options:
                timings, and (fabric) the leader's per-batch event journal —
                plus a summary table on stderr; never changes stdout/--out
                bytes
+  --record OUT.json      (netsim, workload with --netsim RATE) flight-record
+               the flit replay into a pgft-timeseries/1 document: per-link
+               forwarded flits, per-(port,VC) occupancy high-water, credit
+               stalls and accepted/injected per fixed simulated-cycle window
+               (--window CYCLES, default 64), top-K links per window
+               (--top-k K, default 16), bounded ring of --max-windows
+               (default 4096; oldest windows shed, totals conserved);
+               never changes stdout/--out bytes
+  --trace OUT.json       (netsim, workload, fabric) export a Chrome-trace/
+               Perfetto JSON timeline: windowed counter tracks and phase
+               spans from the recorder, plus (fabric) the coordinator's
+               journalled repair batches with per-phase slices
 "#;
 
 fn cmd_topo(args: &Args) -> Result<()> {
@@ -782,6 +861,12 @@ fn cmd_workload(args: &Args) -> Result<()> {
              suppresses; drop one of the two flags"
         );
     }
+    // The flight recorder samples the phase-sequenced flit-level replay,
+    // so it needs one to sample.
+    let rec = recorder_handle(args)?;
+    if rec.is_enabled() && netsim_rate.is_none() {
+        bail!("--record/--trace sample the flit-level replay; add --netsim RATE");
+    }
     let fault_given = matches!(args.get("faults"), Some(s) if s != "none");
     for wname in args.get_or("workload", "mix").split(',') {
         let spec = WorkloadSpec::parse(wname)?;
@@ -835,7 +920,19 @@ fn cmd_workload(args: &Args) -> Result<()> {
                             drain: args.u64_or("drain", 300)?,
                             ..Default::default()
                         };
-                        Some(crate::netsim::run_netsim_phased(&topo, sets, &cfg, rate)?)
+                        let mut info = RunInfo {
+                            label: BTreeMap::new(),
+                            topo: args.get_or("topo", "case-study"),
+                            placement: args
+                                .get_or("placement", "io:last:1,gpgpu:first:2"),
+                        };
+                        info.label.insert("workload".to_string(), spec.name.clone());
+                        info.label
+                            .insert("algo".to_string(), kind.as_str().to_string());
+                        info.label.insert("seed".to_string(), seed.to_string());
+                        Some(crate::netsim::run_netsim_phased_recorded(
+                            &topo, sets, &cfg, rate, &rec, info,
+                        )?)
                     }
                     None => None,
                 };
@@ -874,6 +971,7 @@ fn cmd_workload(args: &Args) -> Result<()> {
     if want_detail {
         eprint!("{}", detail.to_text());
     }
+    emit_recorded(args, "workload", &rec)?;
     Ok(())
 }
 
@@ -1028,6 +1126,9 @@ fn cmd_netsim(args: &Args) -> Result<()> {
     };
     // Optional fault scenario: simulate rerouted (degraded) tables.
     let faults = parse_fault_set(args, &topo, seed)?;
+    // Optional flight recorder: every rate point of every curve lands
+    // as one labelled windowed time-series run in `--record OUT.json`.
+    let rec = recorder_handle(args)?;
     // One telemetry run per (algo, pattern): every rate of that curve
     // merges into the same registry, so per-port counters aggregate
     // over one configuration's rate grid only (the rate list rides in
@@ -1049,7 +1150,17 @@ fn cmd_netsim(args: &Args) -> Result<()> {
             let set = FlowSet::trace(&topo, &*router, &flows);
             let telem =
                 if telemetry_on { Telemetry::enabled() } else { Telemetry::disabled() };
-            let curve = load_curve_with(&topo, &set, &cfg, &rates, &telem)?;
+            // Recording provenance: the run label names the curve, the
+            // topo/placement strings let `pgft report` rebuild the
+            // fabric for hotspot attribution.
+            let mut info = RunInfo {
+                label: BTreeMap::new(),
+                topo: args.get_or("topo", "case-study"),
+                placement: args.get_or("placement", "io:last:1"),
+            };
+            info.label.insert("algo".to_string(), kind.as_str().to_string());
+            info.label.insert("pattern".to_string(), pattern.name());
+            let curve = load_curve_recorded(&topo, &set, &cfg, &rates, &telem, &rec, &info)?;
             if telemetry_on {
                 let mut label = BTreeMap::new();
                 label.insert("algo".to_string(), kind.as_str().to_string());
@@ -1081,6 +1192,7 @@ fn cmd_netsim(args: &Args) -> Result<()> {
     // machine-clean.
     eprint!("{}", sat.to_text());
     emit_telemetry(args, "netsim", &truns, &[])?;
+    emit_recorded(args, "netsim", &rec)?;
     Ok(())
 }
 
@@ -1222,7 +1334,17 @@ fn cmd_fabric(args: &Args) -> Result<()> {
         "fault model {model} generated no events; nothing to drill"
     );
     let topo = Arc::new(topo);
-    let coord = Coordinator::start(topo.clone(), types, kind, seed)?;
+    // `--telemetry`/`--trace` instrument the leader itself: repairs run
+    // through the telemetry-aware retrace, so `eval.retrace.*` and
+    // `eval.reach.*` counters (and the lazy reach arena's residency
+    // peaks) land in the handle's registry.
+    let wants_trace = args.get("trace").is_some();
+    let telem = if args.get("telemetry").is_some() || wants_trace {
+        Telemetry::enabled()
+    } else {
+        Telemetry::disabled()
+    };
+    let coord = Coordinator::start_instrumented(topo.clone(), types, kind, seed, telem.clone())?;
 
     // Phase 1 — the seeded drill (every death, then every repair), one
     // table row per processed batch. --burst submits each half of the
@@ -1314,22 +1436,221 @@ fn cmd_fabric(args: &Args) -> Result<()> {
         queries as f64 / secs.max(1e-9),
     );
     // --telemetry: the leader's event journal (per-phase repair
-    // timings, straight off the final snapshot) plus the headline
-    // service counters as one unlabelled run.
-    if args.get("telemetry").is_some() {
+    // timings, straight off the final snapshot), the leader-side
+    // retrace/reach counters, and the headline service counters as one
+    // unlabelled run. --trace: the same journal and registry rendered
+    // as a Chrome-trace/Perfetto timeline.
+    if args.get("telemetry").is_some() || wants_trace {
         let snap = coord.snapshot();
         let s = &snap.stats;
-        let mut reg = Registry::default();
+        // The leader's own counters (eval.retrace.*, eval.reach.*)
+        // seed the registry; the service stats ride alongside.
+        let mut reg = telem.snapshot();
         reg.add("fabric.table_version", s.table_version);
         reg.add("fabric.rebuilds", s.rebuilds);
         reg.add("fabric.reroutes", s.reroutes);
         reg.add("fabric.failed_repairs", s.failed_repairs);
         reg.add("fabric.dead_links", s.dead_links as u64);
         reg.add("fabric.table_entries", s.table_entries as u64);
+        reg.add("coordinator.journal.shed", s.journal_shed);
+        reg.record_max("fabric.reach_peak_bytes", s.reach_peak_bytes);
+        reg.vec_bulk(
+            "fabric.reroute_micros_window",
+            VecKind::Max,
+            &s.reroute_micros_window,
+        );
         reg.span_ns("fabric.last_reroute", s.last_reroute_micros * 1_000);
-        emit_telemetry(args, "fabric", &[TelemetryRun::unlabelled(reg)], &snap.journal)?;
+        emit_telemetry(
+            args,
+            "fabric",
+            &[TelemetryRun::unlabelled(reg.clone())],
+            &snap.journal,
+        )?;
+        if let Some(path) = args.get("trace") {
+            let mut tb = TraceBuilder::new();
+            tb.add_journal(&snap.journal);
+            tb.add_telemetry_run(&TelemetryRun::unlabelled(reg));
+            tb.write(path)?;
+            eprintln!("wrote trace {path} ({} events)", tb.len());
+        }
     }
     coord.shutdown();
+    Ok(())
+}
+
+/// Display name of a recorded run: its label `k=v` pairs, or `run`.
+fn run_name(info: &RunInfo) -> String {
+    if info.label.is_empty() {
+        return "run".to_string();
+    }
+    info.label.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(",")
+}
+
+/// Pairing key for the hotspot diff: every label except `algo`, plus
+/// the fabric provenance — runs that differ only in their routing
+/// algorithm compare like for like (same pattern, rate, workload,
+/// topology and placement).
+fn match_key(info: &RunInfo) -> String {
+    let labels: Vec<String> = info
+        .label
+        .iter()
+        .filter(|(k, _)| k.as_str() != "algo")
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    format!("{}|{}|{}", info.topo, info.placement, labels.join(","))
+}
+
+/// `pgft report`'s fabric cache, keyed by recorded `(topo, placement)`
+/// provenance so every distinct fabric is rebuilt once per invocation.
+type FabricCache = BTreeMap<(String, String), (Topology, Option<NodeTypeMap>)>;
+
+/// Rebuild (once per distinct provenance) the fabric a recording was
+/// sampled on, from the `topo`/`placement` strings the recorder stored.
+fn fabric_for<'a>(
+    fabrics: &'a mut FabricCache,
+    info: &RunInfo,
+) -> Result<&'a (Topology, Option<NodeTypeMap>)> {
+    let key = (info.topo.clone(), info.placement.clone());
+    if !fabrics.contains_key(&key) {
+        ensure!(
+            !info.topo.is_empty(),
+            "recording carries no topology provenance; re-record with a current pgft"
+        );
+        let topo = families::named(&info.topo)?;
+        crate::topology::validate::validate(&topo)?;
+        let types = if info.placement.is_empty() {
+            None
+        } else {
+            Some(Placement::parse(&info.placement)?.apply(&topo)?)
+        };
+        fabrics.insert(key.clone(), (topo, types));
+    }
+    Ok(&fabrics[&key])
+}
+
+/// `pgft report` — hotspot attribution over `pgft-timeseries/1`
+/// documents, and hotspot diffing between recordings.
+///
+/// `pgft report A.json` rebuilds each run's fabric from its recorded
+/// provenance and prints the hottest links per run: the link label, its
+/// stage, the element below it, the node-type group it feeds, the
+/// saturation-onset window and whether the hotspot persisted to the end
+/// of the run. `pgft report A.json B.json` additionally matches runs
+/// across the two documents (identical labels apart from `algo`) and
+/// prints the verdict table — which of A's hotspots are `absent`,
+/// `cooler`, `similar` or `hotter` under B; that table becomes stdout
+/// and the attribution moves to stderr. A single document whose runs
+/// differ only in their `algo` label is diffed the same way (first
+/// algorithm seen is the baseline), so one recorded
+/// `pgft netsim --algos dmodk,gdmodk --record` sweep carries the
+/// paper's dmodk-vs-gdmodk hotspot comparison on its own. `--top N`
+/// bounds the rows per run (default 5).
+fn cmd_report(args: &Args) -> Result<()> {
+    let files = &args.positionals;
+    ensure!(
+        !files.is_empty() && files.len() <= 2,
+        "usage: pgft report A.json [B.json] (A is the diff baseline)"
+    );
+    let docs: Vec<crate::telemetry::TimeSeriesDoc> = files
+        .iter()
+        .map(|p| {
+            let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+            parse_timeseries(&text).with_context(|| format!("parsing {p}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let top = args.u64_or("top", 5)? as usize;
+    let mut fabrics = BTreeMap::new();
+    let mut t = Table::new(
+        "flight-recorder hotspot attribution (per run, hottest first)",
+        &[
+            "file", "run", "link", "stage", "below", "group", "onset", "persist", "peak_fwd",
+            "total_fwd", "util",
+        ],
+    );
+    // Per document: (display name, full hotspot list) per run.
+    let mut per_doc: Vec<Vec<(String, Vec<Hotspot>)>> = Vec::new();
+    for (fi, doc) in docs.iter().enumerate() {
+        let mut runs = Vec::new();
+        for run in &doc.runs {
+            let (topo, types) = fabric_for(&mut fabrics, &run.info)?;
+            let hs = attribute(run, topo, types.as_ref())?;
+            let name = run_name(&run.info);
+            for h in hs.iter().take(top) {
+                t.row(&[
+                    files[fi].clone(),
+                    name.clone(),
+                    h.label.clone(),
+                    h.stage.to_string(),
+                    h.switch.clone(),
+                    h.group.clone(),
+                    h.onset.map(|o| o.to_string()).unwrap_or_default(),
+                    String::from(if h.persistent { "1" } else { "0" }),
+                    h.peak_forwarded.to_string(),
+                    h.total_forwarded.to_string(),
+                    format!("{:.3}", h.utilization),
+                ]);
+            }
+            runs.push((name, hs));
+        }
+        per_doc.push(runs);
+    }
+    // Matched run pairs to diff: across the two documents, or within
+    // the single document for runs differing only in `algo`.
+    let mut pairs: Vec<((usize, usize), (usize, usize))> = Vec::new();
+    if docs.len() == 2 {
+        for i in 0..docs[0].runs.len() {
+            let key = match_key(&docs[0].runs[i].info);
+            if let Some(j) = docs[1].runs.iter().position(|r| match_key(&r.info) == key) {
+                pairs.push(((0, i), (1, j)));
+            }
+        }
+    } else {
+        let keys: Vec<String> = docs[0].runs.iter().map(|r| match_key(&r.info)).collect();
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                let differs = docs[0].runs[i].info.label.get("algo")
+                    != docs[0].runs[j].info.label.get("algo");
+                if keys[i] == keys[j] && differs && !pairs.iter().any(|&(_, b)| b == (0, j)) {
+                    pairs.push(((0, i), (0, j)));
+                }
+            }
+        }
+    }
+    let mut d = Table::new(
+        "hotspot diff: baseline (a) vs candidate (b) per matched run pair",
+        &[
+            "run_a", "run_b", "link", "stage", "group", "a_total", "b_total", "a_onset",
+            "b_onset", "a_persist", "verdict",
+        ],
+    );
+    for &((da, ia), (db, ib)) in &pairs {
+        let (na, ha) = &per_doc[da][ia];
+        let (nb, hb) = &per_doc[db][ib];
+        for x in diff_hotspots(ha, hb).into_iter().take(top) {
+            d.row(&[
+                na.clone(),
+                nb.clone(),
+                x.label.clone(),
+                x.stage.to_string(),
+                x.group.clone(),
+                x.a_total.to_string(),
+                x.b_total.to_string(),
+                x.a_onset.map(|o| o.to_string()).unwrap_or_default(),
+                x.b_onset.map(|o| o.to_string()).unwrap_or_default(),
+                String::from(if x.a_persistent { "1" } else { "0" }),
+                x.verdict.to_string(),
+            ]);
+        }
+    }
+    if docs.len() == 2 {
+        emit(&d, args)?;
+        eprint!("{}", t.to_text());
+    } else {
+        emit(&t, args)?;
+        if !pairs.is_empty() {
+            eprint!("{}", d.to_text());
+        }
+    }
     Ok(())
 }
 
@@ -1367,7 +1688,13 @@ mod tests {
         assert!(a.flag("dot"));
         assert_eq!(a.u64_or("seed", 0).unwrap(), 3);
         assert_eq!(a.get_or("missing", "x"), "x");
-        assert!(Args::parse(&argv(&["c", "oops"])).is_err());
+        // Bare operands parse into `positionals` (for `pgft report`)…
+        let p = Args::parse(&argv(&["report", "a.json", "b.json", "--top", "3"])).unwrap();
+        assert_eq!(p.positionals, ["a.json", "b.json"]);
+        assert_eq!(p.u64_or("top", 5).unwrap(), 3);
+        // …but every other command still rejects them loudly in run().
+        let err = run(&argv(&["analyze", "oops"])).unwrap_err().to_string();
+        assert!(err.contains("oops"), "{err}");
     }
 
     #[test]
@@ -1564,6 +1891,120 @@ mod tests {
         assert!(doc.contains("eval.retrace.dirty_flows"));
         assert!(doc.contains("eval.retrace.chunk"));
         assert!(!doc.contains("null"));
+    }
+
+    #[test]
+    fn record_flag_writes_timeseries_and_report_attributes_it() {
+        let dir = std::env::temp_dir().join("pgft_recorder_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let plain_csv = dir.join("plain.csv");
+        let rec_csv = dir.join("rec.csv");
+        let ts_json = dir.join("ts.json");
+        let base = [
+            "netsim", "--algo", "dmodk,gdmodk", "--pattern", "c2io-sym", "--rates", "0.8",
+            "--warmup", "50", "--measure", "200", "--drain", "50", "--format", "csv",
+        ];
+        let mut plain: Vec<String> = argv(&base);
+        plain.extend(argv(&["--out", plain_csv.to_str().unwrap()]));
+        run(&plain).unwrap();
+        let mut recorded: Vec<String> = argv(&base);
+        recorded.extend(argv(&[
+            "--out",
+            rec_csv.to_str().unwrap(),
+            "--record",
+            ts_json.to_str().unwrap(),
+            "--window",
+            "64",
+        ]));
+        run(&recorded).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&plain_csv).unwrap(),
+            std::fs::read_to_string(&rec_csv).unwrap(),
+            "--record must not perturb a single output byte"
+        );
+        let doc = std::fs::read_to_string(&ts_json).unwrap();
+        assert!(doc.contains("\"schema\": \"pgft-timeseries/1\""), "{doc}");
+        assert!(doc.contains("\"command\": \"netsim\""));
+        assert!(doc.contains("\"window\": 64"));
+        assert!(doc.contains("\"algo\": \"dmodk\""));
+        assert!(doc.contains("\"algo\": \"gdmodk\""));
+        assert!(doc.contains("\"rate\": \"0.8\""));
+        assert!(doc.contains("\"forwarded\""));
+        assert!(!doc.contains("null"), "no-null discipline: {doc}");
+        // The report command rebuilds the fabric from the recorded
+        // provenance and attributes hotspots; the two runs differ only
+        // in `algo`, so the within-file diff pairs them.
+        let report_csv = dir.join("report.csv");
+        run(&argv(&[
+            "report",
+            ts_json.to_str().unwrap(),
+            "--format",
+            "csv",
+            "--out",
+            report_csv.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let rep = std::fs::read_to_string(&report_csv).unwrap();
+        assert!(rep.contains("algo=dmodk"), "{rep}");
+        assert!(rep.contains("algo=gdmodk"), "{rep}");
+    }
+
+    #[test]
+    fn workload_record_and_trace_capture_the_phased_replay() {
+        let dir = std::env::temp_dir().join("pgft_recorder_cli_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ts_json = dir.join("wl.json");
+        let tr_json = dir.join("wl_trace.json");
+        run(&argv(&[
+            "workload", "--workload", "checkpoint", "--algo", "gdmodk", "--netsim", "0.3",
+            "--record", ts_json.to_str().unwrap(), "--trace", tr_json.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = std::fs::read_to_string(&ts_json).unwrap();
+        assert!(doc.contains("\"command\": \"workload\""), "{doc}");
+        assert!(doc.contains("\"workload\": \"checkpoint\""));
+        assert!(doc.contains("\"phases\": ["));
+        assert!(!doc.contains("null"));
+        let trace = std::fs::read_to_string(&tr_json).unwrap();
+        assert!(trace.contains("\"traceEvents\""), "{trace}");
+        assert!(trace.contains("\"ph\": \"C\""), "counter tracks: {trace}");
+        assert!(trace.contains("phase"), "phase spans: {trace}");
+        // Recording samples the flit replay, so it needs one.
+        assert!(run(&argv(&[
+            "workload", "--workload", "checkpoint", "--record",
+            dir.join("nope.json").to_str().unwrap(),
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn fabric_trace_and_telemetry_export_journal_and_reach_series() {
+        let dir = std::env::temp_dir().join("pgft_recorder_cli_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let telem_json = dir.join("fabric.json");
+        let tr_json = dir.join("fabric_trace.json");
+        run(&argv(&[
+            "fabric", "--burst", "--faults", "cascade:4", "--seed", "2", "--readers", "1",
+            "--query-ms", "20", "--telemetry", telem_json.to_str().unwrap(), "--trace",
+            tr_json.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = std::fs::read_to_string(&telem_json).unwrap();
+        assert!(doc.contains("coordinator.journal.shed"), "{doc}");
+        assert!(doc.contains("fabric.reroute_micros_window"));
+        assert!(doc.contains("eval.reach.computed"), "repairs route through the lazy arena");
+        assert!(doc.contains("eval.retrace.calls"));
+        assert!(!doc.contains("null"));
+        let trace = std::fs::read_to_string(&tr_json).unwrap();
+        assert!(trace.contains("\"traceEvents\""), "{trace}");
+        assert!(trace.contains("repair"), "journalled batches become spans: {trace}");
+    }
+
+    #[test]
+    fn report_command_rejects_bad_usage() {
+        assert!(run(&argv(&["report"])).is_err());
+        assert!(run(&argv(&["report", "a.json", "b.json", "c.json"])).is_err());
+        assert!(run(&argv(&["report", "/definitely/not/there.json"])).is_err());
     }
 
     #[test]

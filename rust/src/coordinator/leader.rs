@@ -20,16 +20,22 @@
 
 use super::snapshot::{FabricSnapshot, FabricStats, SnapshotCell};
 use crate::eval::FlowSet;
-use crate::faults::{FaultSet, LinkEvent};
+use crate::faults::{DegradedRouter, FaultSet, LinkEvent, ReachStats, DEFAULT_REACH_BUDGET};
 use crate::nodes::{NodeTypeMap, TypeReindex};
 use crate::routing::degraded::route_degraded;
 use crate::routing::verify::all_pairs;
-use crate::routing::{AlgorithmKind, ForwardingTables};
-use crate::telemetry::{BatchKind, BatchRecord, Journal, JOURNAL_CAP};
+use crate::routing::{AlgorithmKind, ForwardingTables, Router};
+use crate::telemetry::{BatchKind, BatchRecord, Journal, Telemetry, JOURNAL_CAP};
 use crate::topology::{Nid, Topology};
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Mutations retained in [`FabricStats::reroute_micros_window`]: enough
+/// to smooth a latency estimate over a cascade, small enough that every
+/// snapshot clone stays cheap.
+const REROUTE_WINDOW_CAP: usize = 64;
 
 /// Everything a full (from-scratch) build produces.
 struct FullBuild {
@@ -67,6 +73,16 @@ pub(super) struct Leader {
     /// Bounded ring of per-batch phase breakdowns, cloned into every
     /// published snapshot (see [`crate::telemetry::journal`]).
     journal: Journal,
+    /// Sliding window of per-mutation reroute costs (micros), oldest
+    /// first, capped at [`REROUTE_WINDOW_CAP`].
+    reroute_window: VecDeque<u64>,
+    /// Reach-arena high-water of the most recent fault repair.
+    reach_peak_bytes: u64,
+    /// Instrumentation handle: repairs route through the
+    /// telemetry-aware retrace and harvest `eval.reach.*` counters, so
+    /// `pgft fabric --telemetry` sees the leader's work. Disabled
+    /// handles cost one branch per call.
+    telem: Telemetry,
     cell: Arc<SnapshotCell>,
 }
 
@@ -78,6 +94,7 @@ impl Leader {
         types: Arc<NodeTypeMap>,
         kind: AlgorithmKind,
         seed: u64,
+        telem: Telemetry,
     ) -> Result<(Leader, Arc<SnapshotCell>)> {
         let t0 = Instant::now();
         let reindex = TypeReindex::new(&types);
@@ -99,6 +116,9 @@ impl Leader {
             last_batch_events: 0,
             last_routes_changed: 0,
             degraded: false,
+            journal_shed: 0,
+            reach_peak_bytes: 0,
+            reroute_micros_window: Vec::new(),
         };
         let cell = Arc::new(SnapshotCell::new(Arc::new(FabricSnapshot {
             topo: topo.clone(),
@@ -132,6 +152,9 @@ impl Leader {
             last_batch_events: 0,
             last_routes_changed: 0,
             journal: Journal::new(JOURNAL_CAP),
+            reroute_window: VecDeque::new(),
+            reach_peak_bytes: 0,
+            telem,
             cell: cell.clone(),
         };
         Ok((leader, cell))
@@ -180,24 +203,39 @@ impl Leader {
             diff_ns: 0,
             publish_ns: 0,
         };
+        let mut reach = ReachStats::default();
         let repaired: Result<(Arc<FlowSet>, ForwardingTables)> = (|| {
             if faults.num_dead() == 0 {
                 return Ok((self.pristine_flows.clone(), (*self.pristine_tables).clone()));
             }
-            let router =
-                self.kind.build_degraded(&self.topo, Some(&self.types), self.seed, &faults)?;
+            // Lazy-checked degraded router: eager partition validation
+            // (same answers as the eager builder, so repair failures
+            // surface identically) but a budgeted lazy reach arena, so
+            // the repair's memory high-water is observable and bounded.
+            let base_router = self.kind.build(&self.topo, Some(&self.types), self.seed);
+            let router = DegradedRouter::new_lazy_checked(
+                &self.topo,
+                &faults,
+                base_router,
+                DEFAULT_REACH_BUDGET,
+            )?;
             let base = if any_revive { &self.pristine_flows } else { &self.flows };
             // Large fabrics repair in parallel; the ordered splice keeps
             // the published store byte-identical to a serial repair.
             let threads = crate::eval::repair_threads(base.len());
-            let (flows, changed, timing) =
-                base.retrace_incremental_timed(&self.topo, &faults, &*router, threads);
+            let (flows, changed, timing) = base.retrace_incremental_timed_telem(
+                &self.topo,
+                &faults,
+                &router,
+                threads,
+                &self.telem,
+            );
             record.dirty_flows = changed;
             record.dirty_scan_ns = timing.dirty_scan_ns;
             record.retrace_ns = timing.trace_ns + timing.splice_ns;
             let tt = Instant::now();
             let tables = if router.dest_based() {
-                ForwardingTables::build(&self.topo, &*router)?
+                ForwardingTables::build(&self.topo, &router)?
             } else {
                 // Source-based algorithms have no plain LFT form; the
                 // distributable fallback is the procedural balancer
@@ -205,6 +243,7 @@ impl Leader {
                 route_degraded(&self.topo, &faults, self.grouped_reindex())?
             };
             record.tables_ns = tt.elapsed().as_nanos() as u64;
+            reach = router.reach_stats();
             Ok((Arc::new(flows), tables))
         })();
         self.last_batch_events = events.len();
@@ -223,6 +262,12 @@ impl Leader {
                 self.reroutes += 1;
                 self.faults = faults;
                 self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+                self.reach_peak_bytes = reach.peak_bytes;
+                self.telem.add("eval.reach.computed", reach.computed);
+                self.telem.add("eval.reach.hits", reach.hits);
+                self.telem.add("eval.reach.evictions", reach.evictions);
+                self.telem.record_max("eval.reach.peak_bytes", reach.peak_bytes);
+                self.note_reroute(self.last_reroute_micros);
                 self.publish_journalled(record);
             }
             Err(e) => {
@@ -273,6 +318,7 @@ impl Leader {
                 self.tables = Arc::new(tables);
                 self.rebuilds += 1;
                 self.last_reroute_micros = t0.elapsed().as_micros() as u64;
+                self.note_reroute(self.last_reroute_micros);
                 self.publish_journalled(BatchRecord {
                     kind: BatchKind::Rebuild,
                     events: 0,
@@ -298,6 +344,15 @@ impl Leader {
         }
     }
 
+    /// Append one completed mutation's cost to the sliding window
+    /// (journalled mutations only, like the journal itself).
+    fn note_reroute(&mut self, micros: u64) {
+        if self.reroute_window.len() == REROUTE_WINDOW_CAP {
+            self.reroute_window.pop_front();
+        }
+        self.reroute_window.push_back(micros);
+    }
+
     fn stats(&self) -> FabricStats {
         FabricStats {
             algorithm: self.kind,
@@ -312,6 +367,9 @@ impl Leader {
             last_batch_events: self.last_batch_events,
             last_routes_changed: self.last_routes_changed,
             degraded: self.faults.num_dead() > 0,
+            journal_shed: self.journal.shed(),
+            reach_peak_bytes: self.reach_peak_bytes,
+            reroute_micros_window: self.reroute_window.iter().copied().collect(),
         }
     }
 

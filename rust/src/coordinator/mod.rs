@@ -46,6 +46,7 @@ use crate::nodes::NodeTypeMap;
 use crate::patterns::Pattern;
 use crate::routing::trace::RoutePorts;
 use crate::routing::AlgorithmKind;
+use crate::telemetry::Telemetry;
 use crate::topology::{LinkId, Nid, Topology};
 use anyhow::{anyhow, Result};
 use leader::Leader;
@@ -80,7 +81,25 @@ impl Coordinator {
         kind: AlgorithmKind,
         seed: u64,
     ) -> Result<Coordinator> {
-        let (mut leader, cell) = Leader::new(topo, Arc::new(types), kind, seed)?;
+        Coordinator::start_instrumented(topo, types, kind, seed, Telemetry::disabled())
+    }
+
+    /// [`Coordinator::start`] with an instrumentation handle: the
+    /// leader routes repairs through the telemetry-aware retrace, so
+    /// `eval.retrace.*` and `eval.reach.*` counters (dirty-flow counts,
+    /// reach-arena residency peaks) accumulate in the handle's registry
+    /// across the service's lifetime. The handle is cloned into the
+    /// leader thread; snapshot it any time — it is lock-protected and
+    /// merge rules are commutative. Disabled handles make this exactly
+    /// [`Coordinator::start`].
+    pub fn start_instrumented(
+        topo: Arc<Topology>,
+        types: NodeTypeMap,
+        kind: AlgorithmKind,
+        seed: u64,
+        telem: Telemetry,
+    ) -> Result<Coordinator> {
+        let (mut leader, cell) = Leader::new(topo, Arc::new(types), kind, seed, telem)?;
         let (tx, rx) = channel::<Command>();
         let join = std::thread::Builder::new()
             .name("pgft-fabric-leader".into())
@@ -299,6 +318,46 @@ mod tests {
         // The old snapshot still answers, unchanged, from its own state.
         assert_eq!(before.analyze(Pattern::C2ioSym).unwrap().c_topo, 4);
         assert!(!before.stats.degraded && after.stats.degraded);
+        c.shutdown();
+    }
+
+    #[test]
+    fn instrumented_repairs_surface_reach_and_window_stats() {
+        let topo = Arc::new(build_pgft(&PgftSpec::case_study()));
+        let types = Placement::paper_io().apply(&topo).unwrap();
+        let telem = Telemetry::enabled();
+        let c = Coordinator::start_instrumented(
+            topo.clone(),
+            types,
+            AlgorithmKind::Gdmodk,
+            1,
+            telem.clone(),
+        )
+        .unwrap();
+        let s = c.stats();
+        assert!(s.reroute_micros_window.is_empty(), "startup is not journalled");
+        assert_eq!((s.journal_shed, s.reach_peak_bytes), (0, 0));
+        let victim = topo.links.iter().find(|l| l.stage == 3).unwrap().id;
+        c.link_down(victim);
+        c.sync().unwrap();
+        let s = c.stats();
+        assert!(s.reach_peak_bytes > 0, "lazy reach arena accounted: {s:?}");
+        assert_eq!(s.reroute_micros_window.len(), 1);
+        assert_eq!(s.reroute_micros_window[0], s.last_reroute_micros);
+        let reg = telem.snapshot();
+        assert!(reg.counter("eval.retrace.calls") >= 1, "repair went through telem retrace");
+        assert!(reg.counter("eval.reach.computed") > 0, "reach misses harvested");
+        assert!(
+            reg.maxima().get("eval.reach.peak_bytes").copied().unwrap_or(0) > 0,
+            "reach peak exported"
+        );
+        // Revive: the restore is journalled (window grows) but builds no
+        // reach structure (peak resets).
+        c.link_up(victim);
+        c.sync().unwrap();
+        let s = c.stats();
+        assert_eq!(s.reroute_micros_window.len(), 2);
+        assert_eq!(s.reach_peak_bytes, 0, "restore builds no reach structure");
         c.shutdown();
     }
 

@@ -52,6 +52,20 @@ pub struct FabricStats {
     pub last_routes_changed: usize,
     /// Whether the fabric is running on degraded (fault-avoiding) tables.
     pub degraded: bool,
+    /// Journal records dropped by the bounded ring since startup
+    /// (exported as `coordinator.journal.shed`): non-zero means
+    /// [`FabricSnapshot::journal`] is a suffix of the mutation history,
+    /// not all of it.
+    pub journal_shed: u64,
+    /// Peak resident bytes of the lazy reachability arena during the
+    /// most recent fault repair (0 at startup and after restores, which
+    /// build no reach structure).
+    pub reach_peak_bytes: u64,
+    /// Sliding window of per-mutation reroute costs in microseconds,
+    /// oldest first, bounded (the flight-recorder series the trace
+    /// exporter renders as a repair-latency track). Wall-clock —
+    /// diagnostic only, like the journal's phase timings.
+    pub reroute_micros_window: Vec<u64>,
 }
 
 /// One immutable, internally consistent view of the fabric: the tables

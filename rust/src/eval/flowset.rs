@@ -429,6 +429,41 @@ impl FlowSet {
             return self.retrace_incremental_par(topo, faults, router, threads);
         }
         let (out, changed, timing, chunk_ns) = self.retrace_core(topo, faults, router, threads);
+        self.record_retrace(telem, &out, changed, &timing, &chunk_ns);
+        (out, changed)
+    }
+
+    /// [`FlowSet::retrace_incremental_timed`] that additionally records
+    /// the [`FlowSet::retrace_incremental_telem`] counters and spans
+    /// when the handle is live — the coordinator leader journals the
+    /// timing per batch *and* surfaces `eval.retrace.*` in
+    /// `pgft fabric --telemetry`. Byte-identical to every other repair
+    /// variant.
+    pub fn retrace_incremental_timed_telem(
+        &self,
+        topo: &dyn TopologyView,
+        faults: &FaultSet,
+        router: &dyn Router,
+        threads: usize,
+        telem: &Telemetry,
+    ) -> (FlowSet, usize, RetraceTiming) {
+        let (out, changed, timing, chunk_ns) = self.retrace_core(topo, faults, router, threads);
+        if telem.is_enabled() {
+            self.record_retrace(telem, &out, changed, &timing, &chunk_ns);
+        }
+        (out, changed, timing)
+    }
+
+    /// Fold one repair's counters and spans into `telem` (the shared
+    /// tail of the `_telem` variants).
+    fn record_retrace(
+        &self,
+        telem: &Telemetry,
+        out: &FlowSet,
+        changed: usize,
+        timing: &RetraceTiming,
+        chunk_ns: &[u64],
+    ) {
         let mut shard = telem.shard();
         shard.add("eval.retrace.calls", 1);
         shard.add("eval.retrace.flows", self.len() as u64);
@@ -437,11 +472,10 @@ impl FlowSet {
         shard.span_ns("eval.retrace.dirty_scan", timing.dirty_scan_ns);
         shard.span_ns("eval.retrace.trace", timing.trace_ns);
         shard.span_ns("eval.retrace.splice", timing.splice_ns);
-        for ns in chunk_ns {
+        for &ns in chunk_ns {
             shard.span_ns("eval.retrace.chunk", ns);
         }
         telem.merge(shard);
-        (out, changed)
     }
 
     /// The one repair implementation every public variant delegates to.

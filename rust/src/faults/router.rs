@@ -319,6 +319,36 @@ impl DegradedRouter {
         }
     }
 
+    /// [`DegradedRouter::new_lazy`] with the eager constructor's
+    /// up-front connectivity validation: a partitioned surviving fabric
+    /// is a clean `Err` (with the broken pair named) instead of a panic
+    /// on first query. Costs one reachability field per destination at
+    /// construction — nothing is retained — then routes through the
+    /// memory-bounded lazy arena. This is what long-lived services (the
+    /// coordinator leader) use: eager validation semantics, lazy
+    /// memory, live [`ReachStats`].
+    pub fn new_lazy_checked(
+        topo: &Topology,
+        faults: &FaultSet,
+        base: Box<dyn Router>,
+        budget: usize,
+    ) -> Result<DegradedRouter> {
+        let n = topo.num_nodes();
+        let view = DegradedTopology::new(topo, faults);
+        for dst in 0..n as Nid {
+            let field = view.reach(dst);
+            for src in 0..n {
+                ensure!(
+                    field.good[src],
+                    "fabric partitioned: no surviving up*/down* path {src} -> {dst} \
+                     ({} dead links)",
+                    faults.num_dead()
+                );
+            }
+        }
+        Ok(DegradedRouter::new_lazy(topo, faults, base, budget))
+    }
+
     /// The fault mask this router routes around.
     pub fn faults(&self) -> &FaultSet {
         &self.faults
@@ -499,6 +529,43 @@ mod tests {
             .err()
             .expect("partition must be rejected");
         assert!(err.to_string().contains("partitioned"), "{err}");
+    }
+
+    /// The checked-lazy constructor validates like eager, routes like
+    /// lazy (live reach stats included).
+    #[test]
+    fn lazy_checked_validates_and_routes_like_eager() {
+        let t = topo();
+        let mut faults = FaultSet::none(&t);
+        faults.kill(t.ports[t.nodes[0].up_ports[0]].link); // node 0 isolated
+        let err = DegradedRouter::new_lazy_checked(
+            &t,
+            &faults,
+            AlgorithmKind::Dmodk.build(&t, None, 0),
+            DEFAULT_REACH_BUDGET,
+        )
+        .err()
+        .expect("partition must be rejected up front");
+        assert!(err.to_string().contains("partitioned"), "{err}");
+
+        let mut faults = FaultSet::none(&t);
+        let l2 = t.level_switches(2).next().unwrap();
+        for &p in t.switches[l2].up_ports.iter().take(3) {
+            faults.kill(t.ports[p].link);
+        }
+        let flows = all_pairs(64);
+        let eager =
+            DegradedRouter::new(&t, &faults, AlgorithmKind::Gdmodk.build(&t, None, 1)).unwrap();
+        let checked = DegradedRouter::new_lazy_checked(
+            &t,
+            &faults,
+            AlgorithmKind::Gdmodk.build(&t, None, 1),
+            DEFAULT_REACH_BUDGET,
+        )
+        .unwrap();
+        assert_eq!(trace_flows(&t, &eager, &flows), trace_flows(&t, &checked, &flows));
+        let stats = checked.reach_stats();
+        assert!(stats.computed > 0 && stats.peak_bytes > 0, "{stats:?}");
     }
 
     #[test]

@@ -2,10 +2,10 @@
 //! saturation point — the standard presentation of the interconnect
 //! literature, and the `pgft netsim` CLI's output shape.
 
-use super::{run_netsim_with, NetsimConfig, NetsimReport};
+use super::{run_netsim_recorded, run_netsim_with, NetsimConfig, NetsimReport};
 use crate::eval::FlowSet;
 use crate::report::Table;
-use crate::telemetry::Telemetry;
+use crate::telemetry::{Recorder, RunInfo, Telemetry};
 use crate::topology::Topology;
 use anyhow::{ensure, Result};
 
@@ -50,6 +50,34 @@ pub fn load_curve_with(
         "netsim: injection rates must be strictly ascending: {rates:?}"
     );
     rates.iter().map(|&r| run_netsim_with(topo, flows, cfg, r, telem)).collect()
+}
+
+/// [`load_curve_with`] with a flight-recorder handle: every rate point
+/// produces one [`crate::telemetry::Recording`] labelled `info` plus a
+/// `rate` key, so a recorded curve is a family of per-rate window
+/// series. Disabled handles make this exactly `load_curve_with`.
+pub fn load_curve_recorded(
+    topo: &Topology,
+    flows: &FlowSet,
+    cfg: &NetsimConfig,
+    rates: &[f64],
+    telem: &Telemetry,
+    rec: &Recorder,
+    info: &RunInfo,
+) -> Result<Vec<NetsimReport>> {
+    ensure!(!rates.is_empty(), "netsim: no injection rates to sweep");
+    ensure!(
+        rates.windows(2).all(|w| w[0] < w[1]),
+        "netsim: injection rates must be strictly ascending: {rates:?}"
+    );
+    rates
+        .iter()
+        .map(|&r| {
+            let mut point_info = info.clone();
+            point_info.label.insert("rate".to_string(), r.to_string());
+            run_netsim_recorded(topo, flows, cfg, r, telem, rec, point_info)
+        })
+        .collect()
 }
 
 /// The default injection-rate grid: 0.05 to 1.0 in 0.05 steps.

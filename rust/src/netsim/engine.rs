@@ -33,7 +33,8 @@ use super::event::{Calendar, Event};
 use super::inject::draw_gap;
 use super::{NetsimConfig, NetsimReport, SATURATION_FRACTION};
 use crate::eval::FlowSet;
-use crate::telemetry::{hist_bucket, Registry, Telemetry, VecKind, HIST_BUCKETS};
+use crate::telemetry::recorder::EngineRec;
+use crate::telemetry::{hist_bucket, Recorder, Registry, RunInfo, Telemetry, VecKind, HIST_BUCKETS};
 use crate::util::rng::Xoshiro256;
 use std::collections::VecDeque;
 
@@ -145,6 +146,10 @@ pub(crate) struct Engine<'a> {
     delivered_flits: u64,
     in_flight_flits: u64,
     telem: Option<Box<EngineTelem>>,
+    // The optional flight-recorder accumulator (windowed time-series).
+    // Like `telem`, a `None` costs one branch per record site, so a
+    // recorded run stays byte-identical to an unrecorded one.
+    rec: Option<Box<EngineRec>>,
 }
 
 /// A finished run plus the per-flow detail the phase-sequenced runner
@@ -211,6 +216,7 @@ impl<'a> Engine<'a> {
             delivered_flits: 0,
             in_flight_flits: 0,
             telem: None,
+            rec: None,
         }
     }
 
@@ -222,6 +228,33 @@ impl<'a> Engine<'a> {
         if telem.is_enabled() {
             let (np, vcs, nf) = (self.service_pending.len(), self.vcs, self.flows.len());
             self.telem = Some(Box::new(EngineTelem::new(telem.clone(), np, vcs, nf)));
+        }
+        self
+    }
+
+    /// Attach a flight-recorder handle. Disabled handles change
+    /// nothing; a live one allocates the window accumulator and pushes
+    /// one [`crate::telemetry::Recording`] into the sink at finish.
+    /// `info` labels the recording; `phases` lists forced window
+    /// rollover cycles (phase ends of a phased replay).
+    pub(crate) fn record(
+        mut self,
+        rec: &Recorder,
+        cfg: &NetsimConfig,
+        info: RunInfo,
+        phases: Vec<u64>,
+    ) -> Engine<'a> {
+        if rec.is_enabled() {
+            let num_ports = self.service_pending.len();
+            self.rec = Some(Box::new(EngineRec::new(
+                rec,
+                info,
+                cfg,
+                self.rate,
+                num_ports,
+                self.flows.len(),
+                phases,
+            )));
         }
         self
     }
@@ -257,6 +290,9 @@ impl<'a> Engine<'a> {
                         self.on_arrive(port as usize, packet, hop, t)
                     }
                 }
+            }
+            if let Some(r) = self.rec.as_deref_mut() {
+                r.maybe_close(t);
             }
         }
         self.finish()
@@ -296,6 +332,9 @@ impl<'a> Engine<'a> {
                 if let Some(tm) = self.telem.as_deref_mut() {
                     tm.flow_injected_packets[flow] += 1;
                 }
+                if let Some(r) = self.rec.as_deref_mut() {
+                    r.on_injected();
+                }
             }
             self.wake_source(flow, t + 1);
             let gap = draw_gap(&mut self.rngs[flow], self.p_event);
@@ -326,6 +365,9 @@ impl<'a> Engine<'a> {
             if let Some(tm) = self.telem.as_deref_mut() {
                 tm.push_sample(qi, depth);
             }
+            if let Some(r) = self.rec.as_deref_mut() {
+                r.on_push(qi, depth);
+            }
             self.packets[pid as usize].pushed += 1;
             if self.packets[pid as usize].pushed == self.packet_flits {
                 self.backlog[flow].pop_front();
@@ -347,6 +389,9 @@ impl<'a> Engine<'a> {
         let depth = self.queues[qi].len() as u64;
         if let Some(tm) = self.telem.as_deref_mut() {
             tm.push_sample(qi, depth);
+        }
+        if let Some(r) = self.rec.as_deref_mut() {
+            r.on_push(qi, depth);
         }
         self.wake_service(port, t + 1);
     }
@@ -385,6 +430,9 @@ impl<'a> Engine<'a> {
             if let Some(tm) = self.telem.as_deref_mut() {
                 tm.port_forwarded[port] += 1;
             }
+            if let Some(r) = self.rec.as_deref_mut() {
+                r.on_forwarded(port);
+            }
             let flow = self.packets[flit.packet as usize].flow as usize;
             let route = self.flows.route(flow);
             let nh = flit.hop as usize + 1;
@@ -405,6 +453,9 @@ impl<'a> Engine<'a> {
             if let Some(tm) = self.telem.as_deref_mut() {
                 tm.port_credit_stalls[port] += 1;
             }
+            if let Some(r) = self.rec.as_deref_mut() {
+                r.on_stall(port);
+            }
         }
         // Poll again while any VC holds flits (transmitted or blocked).
         if (0..vcs).any(|v| !self.queues[base + v].is_empty()) {
@@ -423,6 +474,9 @@ impl<'a> Engine<'a> {
         self.delivered_flits += 1;
         if let Some(tm) = self.telem.as_deref_mut() {
             tm.flow_delivered_flits[flow] += 1;
+        }
+        if let Some(r) = self.rec.as_deref_mut() {
+            r.on_delivered();
         }
         if in_window {
             self.accepted_flits += 1;
@@ -446,7 +500,10 @@ impl<'a> Engine<'a> {
     }
 
     /// Summarize the run.
-    fn finish(self) -> RunDetail {
+    fn finish(mut self) -> RunDetail {
+        if let Some(r) = self.rec.take() {
+            r.finish();
+        }
         let active = self.flows.num_active();
         let offered_aggregate = self.rate * active as f64;
         let measure = self.measure as f64;

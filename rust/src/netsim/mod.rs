@@ -51,14 +51,14 @@ pub mod inject;
 pub mod phased;
 
 pub use curve::{
-    curve_table, default_rates, load_curve, load_curve_with, saturation_point, CurvePoint,
-    Saturation,
+    curve_table, default_rates, load_curve, load_curve_recorded, load_curve_with,
+    saturation_point, CurvePoint, Saturation,
 };
 pub use inject::Injection;
-pub use phased::{run_netsim_phased, PhaseNetsim, PhasedNetsimReport};
+pub use phased::{run_netsim_phased, run_netsim_phased_recorded, PhaseNetsim, PhasedNetsimReport};
 
 use crate::eval::FlowSet;
-use crate::telemetry::Telemetry;
+use crate::telemetry::{Recorder, RunInfo, Telemetry};
 use crate::topology::Topology;
 use anyhow::{ensure, Result};
 
@@ -180,13 +180,34 @@ pub fn run_netsim_with(
     rate: f64,
     telem: &Telemetry,
 ) -> Result<NetsimReport> {
+    run_netsim_recorded(topo, flows, cfg, rate, telem, &Recorder::disabled(), RunInfo::default())
+}
+
+/// [`run_netsim_with`] with a flight-recorder handle. A disabled
+/// handle is exactly `run_netsim_with`; a live one additionally
+/// samples the run into a windowed time-series [`Recording`]
+/// (collected from the handle via [`Recorder::take`]) labelled by
+/// `info`. The report stays byte-identical either way — the recorder
+/// only observes simulated quantities (pinned by `tests/recorder.rs`).
+pub fn run_netsim_recorded(
+    topo: &Topology,
+    flows: &FlowSet,
+    cfg: &NetsimConfig,
+    rate: f64,
+    telem: &Telemetry,
+    rec: &Recorder,
+    info: RunInfo,
+) -> Result<NetsimReport> {
     cfg.validate()?;
+    rec.config().validate()?;
     ensure!(
         rate > 0.0 && rate <= 1.0,
         "netsim: offered load {rate} outside (0, 1] flits/cycle/flow"
     );
     ensure!(flows.num_active() > 0, "netsim: no active flows to simulate");
-    let engine = engine::Engine::new(topo.num_ports(), flows, cfg, rate, None).instrument(telem);
+    let engine = engine::Engine::new(topo.num_ports(), flows, cfg, rate, None)
+        .instrument(telem)
+        .record(rec, cfg, info, Vec::new());
     Ok(telem.time("netsim.run", || engine.run()))
 }
 

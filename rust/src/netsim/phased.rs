@@ -30,6 +30,7 @@
 use super::engine::{summarize_latencies, Engine};
 use super::{NetsimConfig, SATURATION_FRACTION};
 use crate::eval::FlowSet;
+use crate::telemetry::{Recorder, RunInfo};
 use crate::topology::Topology;
 use anyhow::{ensure, Result};
 
@@ -80,7 +81,25 @@ pub fn run_netsim_phased(
     cfg: &NetsimConfig,
     rate: f64,
 ) -> Result<PhasedNetsimReport> {
+    let rec = Recorder::disabled();
+    run_netsim_phased_recorded(topo, phase_sets, cfg, rate, &rec, RunInfo::default())
+}
+
+/// [`run_netsim_phased`] with a flight-recorder handle. The phase-end
+/// cycles are passed to the recorder as forced window-rollover marks,
+/// so every recorded window lies entirely inside one phase and the
+/// series can be segmented at phase boundaries exactly (pinned by
+/// `tests/recorder.rs`). The report is byte-identical either way.
+pub fn run_netsim_phased_recorded(
+    topo: &Topology,
+    phase_sets: &[FlowSet],
+    cfg: &NetsimConfig,
+    rate: f64,
+    rec: &Recorder,
+    info: RunInfo,
+) -> Result<PhasedNetsimReport> {
     cfg.validate()?;
+    rec.config().validate()?;
     ensure!(
         rate > 0.0 && rate <= 1.0,
         "netsim: offered load {rate} outside (0, 1] flits/cycle/flow"
@@ -110,8 +129,12 @@ pub fn run_netsim_phased(
 
     // One continuous run: global measurement window spans every phase.
     let run_cfg = NetsimConfig { measure: n_phases as u64 * m, ..cfg.clone() };
-    let detail =
-        Engine::new(topo.num_ports(), &union, &run_cfg, rate, Some(windows)).run_detailed();
+    // Phase-end cycles force recorder window rollovers so no recorded
+    // window straddles a table swap.
+    let marks: Vec<u64> = (0..n_phases).map(|k| cfg.warmup + (k as u64 + 1) * m).collect();
+    let detail = Engine::new(topo.num_ports(), &union, &run_cfg, rate, Some(windows))
+        .record(rec, &run_cfg, info, marks)
+        .run_detailed();
     let report = &detail.report;
 
     // Bucket the per-flow figures back into phases. `flow_accepted` is

@@ -89,6 +89,7 @@ impl BatchRecord {
 pub struct Journal {
     cap: usize,
     buf: VecDeque<BatchRecord>,
+    shed: u64,
 }
 
 impl Journal {
@@ -96,15 +97,23 @@ impl Journal {
     /// below by 1 — a zero-capacity journal would silently drop
     /// everything).
     pub fn new(cap: usize) -> Journal {
-        Journal { cap: cap.max(1), buf: VecDeque::new() }
+        Journal { cap: cap.max(1), buf: VecDeque::new(), shed: 0 }
     }
 
     /// Append a record, shedding the oldest when full.
     pub fn push(&mut self, rec: BatchRecord) {
         if self.buf.len() == self.cap {
             self.buf.pop_front();
+            self.shed += 1;
         }
         self.buf.push_back(rec);
+    }
+
+    /// Records dropped from the front of the ring since construction.
+    /// `shed() + len()` is the total number of records ever pushed, so
+    /// a consumer can tell a quiet fabric from a journal that wrapped.
+    pub fn shed(&self) -> u64 {
+        self.shed
     }
 
     /// The retained records, oldest first.
@@ -160,6 +169,19 @@ mod tests {
         assert_eq!(j.capacity(), 3);
         let evs: Vec<usize> = j.records().iter().map(|r| r.events).collect();
         assert_eq!(evs, vec![2, 3, 4], "oldest shed, order preserved");
+    }
+
+    #[test]
+    fn shed_counts_dropped_records() {
+        let mut j = Journal::new(3);
+        assert_eq!(j.shed(), 0);
+        for i in 0..5 {
+            j.push(rec(i));
+        }
+        assert_eq!(j.shed(), 2, "5 pushes into cap 3 shed exactly 2");
+        assert_eq!(j.shed() + j.len() as u64, 5, "shed + retained == pushed");
+        j.push(rec(5));
+        assert_eq!(j.shed(), 3);
     }
 
     #[test]

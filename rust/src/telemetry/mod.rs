@@ -37,14 +37,29 @@
 //! provenance) plus a stderr summary table;
 //! `python/tools/check_telemetry.py` cross-checks the netsim flit
 //! counters against the golden Python pipeline.
+//!
+//! On top of the end-of-run registry sit two time-resolved layers: the
+//! [`recorder`] module's flight recorder (windowed time-series of
+//! per-port load, `--record OUT.json`, `pgft report` attribution/diff;
+//! cross-checked by `python/tools/check_timeseries.py`) and the
+//! [`trace`] module's Chrome-trace/Perfetto exporter (`--trace
+//! OUT.json`).
 
 pub mod journal;
 pub mod metrics;
+pub mod recorder;
 pub mod report;
+pub mod trace;
 
 pub use journal::{BatchKind, BatchRecord, Journal, JOURNAL_CAP};
 pub use metrics::{
     hist_bucket, Histogram, Registry, Shard, SpanStat, Telemetry, VecKind, VectorMetric,
     HIST_BUCKETS,
 };
+pub use recorder::{
+    attribute, diff_hotspots, parse_timeseries, timeseries_json, write_timeseries, DiffVerdict,
+    Hotspot, HotspotDiff, PortWindow, Recorder, RecorderConfig, Recording, RunInfo, RunTotals,
+    ShedTotals, TimeSeriesDoc, WindowSample,
+};
 pub use report::{summary_table, telemetry_json, write_telemetry, TelemetryRun};
+pub use trace::TraceBuilder;

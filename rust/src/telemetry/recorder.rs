@@ -1,0 +1,1446 @@
+//! The fabric flight recorder: windowed time-series of netsim load.
+//!
+//! The telemetry [`Registry`](super::Registry) captures end-of-run
+//! totals; the paper's argument needs load as a function of simulated
+//! time — *when* a link saturates and *where*, not just how many flits
+//! it moved overall. The recorder samples the engine on fixed
+//! simulated-cycle **windows**: per-port forwarded flits, credit-stall
+//! rounds and per-(port, VC) occupancy high-water marks, plus the
+//! run-wide injected/delivered/forwarded flit deltas of the window.
+//!
+//! Three rules keep it scalable and deterministic:
+//!
+//!  * **Top-K selection.** A window sample keeps only the K ports with
+//!    the most forwarded flits (deterministic tie-break on port id), so
+//!    a sample is `O(K)` however many ports the fabric has — the
+//!    xl-256k/1m rungs stay memory-bounded.
+//!  * **Bounded ring.** At most `max_windows` samples are retained;
+//!    older windows are shed into an aggregate ([`ShedTotals`]) that
+//!    preserves the conservation identity
+//!    `Σ retained + shed == totals` exactly.
+//!  * **Simulated cycles only.** Every recorded quantity is keyed by
+//!    cycles, flits or queue depths — never wall clock — so a recorded
+//!    run is byte-identical to an unrecorded one and the series is
+//!    reproducible run to run (pinned by `tests/recorder.rs`).
+//!
+//! On top of the series sits the **hotspot attribution pass**
+//! ([`attribute`]): each hot port is mapped back to its link's stage,
+//! owning switch and the node-type group under the link, with
+//! saturation-onset localization (the first window the port exceeded
+//! [`SATURATION_FRACTION`](crate::netsim::SATURATION_FRACTION) of the
+//! window's cycle budget). [`diff_hotspots`] compares two recordings —
+//! the dmodk-vs-gdmodk comparison `pgft report` prints is the
+//! paper-facing payoff: gdmodk does not merely raise aggregate
+//! throughput, it *removes* specific persistent hotspot links.
+//!
+//! Documents use schema `pgft-timeseries/1`: hand-formatted JSON,
+//! labelled runs, window/top-K provenance at top level, and no `null`
+//! anywhere (same discipline as `pgft-telemetry/1`).
+
+use super::report::{esc, map_json, u64s_json};
+use crate::netsim::{NetsimConfig, SATURATION_FRACTION};
+use crate::nodes::NodeTypeMap;
+use crate::topology::{Endpoint, Topology};
+use anyhow::{bail, ensure, Context, Result};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Sampling parameters of a recording session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecorderConfig {
+    /// Window length in simulated cycles (≥ 1). Phase boundaries force
+    /// an extra rollover, so phased replays always close a window
+    /// exactly where a phase ends.
+    pub window: u64,
+    /// Ports kept per window sample (the K hottest by forwarded
+    /// flits; ties break toward the lower port id).
+    pub top_k: usize,
+    /// Retained window samples per run; older windows are shed into
+    /// the run's [`ShedTotals`] aggregate.
+    pub max_windows: usize,
+}
+
+impl Default for RecorderConfig {
+    fn default() -> Self {
+        RecorderConfig { window: 64, top_k: 16, max_windows: 4096 }
+    }
+}
+
+impl RecorderConfig {
+    /// Reject degenerate parameters with a clear message.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.window >= 1, "recorder: window must be >= 1 cycle");
+        ensure!(self.top_k >= 1, "recorder: top_k must be >= 1");
+        ensure!(self.max_windows >= 1, "recorder: max_windows must be >= 1");
+        Ok(())
+    }
+}
+
+/// Aggregate of window samples shed from the bounded ring. The
+/// conservation identity `Σ retained windows + shed == totals` holds
+/// exactly at every moment.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShedTotals {
+    /// Window samples dropped (oldest first).
+    pub windows: u64,
+    /// Flits injected during the shed windows.
+    pub injected_flits: u64,
+    /// Flits delivered during the shed windows.
+    pub delivered_flits: u64,
+    /// Flits forwarded (any port) during the shed windows.
+    pub forwarded_flits: u64,
+}
+
+/// Whole-run flit totals, accumulated independently of the ring.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RunTotals {
+    /// Flits injected over the run (packets × flits per packet).
+    pub injected_flits: u64,
+    /// Flits delivered over the run.
+    pub delivered_flits: u64,
+    /// Port transmissions over the run (final-hop included).
+    pub forwarded_flits: u64,
+}
+
+/// One retained port inside a window sample (top-K selected).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PortWindow {
+    /// Global directed-port id.
+    pub port: u32,
+    /// Flits the port transmitted inside the window.
+    pub forwarded: u64,
+    /// Service rounds inside the window in which every head flit the
+    /// port held was blocked on downstream credit.
+    pub stalls: u64,
+    /// Occupancy high-water mark per VC inside the window.
+    pub vc_hwm: Vec<u64>,
+}
+
+/// One closed window: the half-open cycle span `(start, end]` and the
+/// flit deltas that fell inside it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WindowSample {
+    /// Monotone window index from run start (shed windows keep their
+    /// indices, so retained indices need not start at 0).
+    pub index: u64,
+    /// First cycle of the window is `start + 1`.
+    pub start: u64,
+    /// Last cycle of the window (inclusive).
+    pub end: u64,
+    /// Flits injected inside the window (bucketed by packet arrival
+    /// cycle — exactly replayable from the injection process alone).
+    pub injected_flits: u64,
+    /// Flits delivered inside the window.
+    pub delivered_flits: u64,
+    /// Flits forwarded by any port inside the window.
+    pub forwarded_flits: u64,
+    /// The top-K hottest ports of the window, descending by
+    /// `forwarded` (ties toward the lower port id).
+    pub ports: Vec<PortWindow>,
+}
+
+impl WindowSample {
+    /// Cycles the window spans.
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    /// True for a zero-length (degenerate) window; never produced by
+    /// the engine.
+    pub fn is_empty(&self) -> bool {
+        self.end == self.start
+    }
+}
+
+/// Identifying metadata of a recorded run, supplied by the caller.
+#[derive(Clone, Debug, Default)]
+pub struct RunInfo {
+    /// Label keys (e.g. `algo`, `pattern`, `rate`), emitted in key
+    /// order like a [`TelemetryRun`](super::TelemetryRun) label.
+    pub label: BTreeMap<String, String>,
+    /// Topology spec string (e.g. `case-study`) so `pgft report` can
+    /// rebuild the graph for attribution; empty when unknown.
+    pub topo: String,
+    /// Placement spec string (node-type groups); empty when unknown.
+    pub placement: String,
+}
+
+/// One finished recording: provenance, totals, shed aggregate and the
+/// retained window series.
+#[derive(Clone, Debug)]
+pub struct Recording {
+    /// Caller-supplied identity (label, topology, placement).
+    pub info: RunInfo,
+    /// Window length the series was sampled on (cycles).
+    pub window: u64,
+    /// Ports retained per window sample.
+    pub top_k: usize,
+    /// Ring bound the series was recorded under.
+    pub max_windows: usize,
+    /// Directed ports of the simulated fabric.
+    pub num_ports: usize,
+    /// Virtual channels per port.
+    pub vcs: usize,
+    /// Flows in the simulated route store (self-flows included).
+    pub flows: usize,
+    /// Flits per packet.
+    pub packet_flits: u32,
+    /// Injection seed (the Python mirror replays arrivals from it).
+    pub seed: u64,
+    /// Offered load per flow (flits/cycle).
+    pub rate: f64,
+    /// Injection-process spec string (`bernoulli` / `burst:K`).
+    pub injection: String,
+    /// Total simulated cycles (warmup + measure + drain).
+    pub horizon: u64,
+    /// Forced rollover marks (phase-end cycles) of a phased replay;
+    /// empty for plain runs.
+    pub phases: Vec<u64>,
+    /// Whole-run flit totals.
+    pub totals: RunTotals,
+    /// Aggregate of shed windows.
+    pub shed: ShedTotals,
+    /// Retained window samples, oldest first.
+    pub windows: Vec<WindowSample>,
+}
+
+/// A cloneable recording sink. Disabled handles cost one branch at
+/// every engine record site and allocate nothing; enabled handles
+/// collect one [`Recording`] per engine run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    sink: Option<Arc<Mutex<Vec<Recording>>>>,
+    cfg: RecorderConfig,
+}
+
+impl Recorder {
+    /// The no-op handle.
+    pub fn disabled() -> Recorder {
+        Recorder { sink: None, cfg: RecorderConfig::default() }
+    }
+
+    /// A live handle collecting recordings under `cfg`.
+    pub fn enabled(cfg: RecorderConfig) -> Recorder {
+        Recorder { sink: Some(Arc::new(Mutex::new(Vec::new()))), cfg }
+    }
+
+    /// Whether this handle collects anything.
+    pub fn is_enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// The sampling parameters of this handle.
+    pub fn config(&self) -> RecorderConfig {
+        self.cfg
+    }
+
+    /// Append a finished recording (no-op when disabled).
+    pub fn push(&self, rec: Recording) {
+        if let Some(sink) = &self.sink {
+            sink.lock().expect("recorder sink poisoned").push(rec);
+        }
+    }
+
+    /// Drain the collected recordings, in completion order.
+    pub fn take(&self) -> Vec<Recording> {
+        match &self.sink {
+            Some(sink) => std::mem::take(&mut *sink.lock().expect("recorder sink poisoned")),
+            None => Vec::new(),
+        }
+    }
+}
+
+/// Per-run window accumulator the engine drives. All increments are
+/// plain array bumps (no lock, no map); the window close is `O(touched
+/// ports)`; the sink mutex is taken once, at [`EngineRec::finish`].
+pub(crate) struct EngineRec {
+    sink: Recorder,
+    info: RunInfo,
+    top_k: usize,
+    max_windows: usize,
+    num_ports: usize,
+    vcs: usize,
+    flows: usize,
+    packet_flits: u32,
+    seed: u64,
+    rate: f64,
+    injection: String,
+    horizon: u64,
+    win_len: u64,
+    phases: Vec<u64>,
+    /// Ascending window-end cycles; the last is the horizon.
+    bounds: Vec<u64>,
+    next: usize,
+    index: u64,
+    win_start: u64,
+    // Window-local accumulators, reset in O(touched) at close.
+    fwd: Vec<u64>,
+    stalls: Vec<u64>,
+    hwm: Vec<u64>,
+    touched: Vec<u32>,
+    touched_q: Vec<u32>,
+    win_injected: u64,
+    win_delivered: u64,
+    win_forwarded: u64,
+    totals: RunTotals,
+    out: VecDeque<WindowSample>,
+    shed: ShedTotals,
+}
+
+impl EngineRec {
+    /// Set up the accumulator for one engine run. `phases` lists the
+    /// phase-end cycles of a phased replay (forced rollovers); plain
+    /// runs pass an empty slice.
+    pub(crate) fn new(
+        sink: &Recorder,
+        info: RunInfo,
+        cfg: &NetsimConfig,
+        rate: f64,
+        num_ports: usize,
+        flows: usize,
+        phases: Vec<u64>,
+    ) -> EngineRec {
+        let rc = sink.config();
+        let horizon = cfg.warmup + cfg.measure + cfg.drain;
+        let win_len = rc.window.max(1);
+        let mut bounds: Vec<u64> = Vec::new();
+        let mut b = win_len;
+        while b < horizon {
+            bounds.push(b);
+            b = b.saturating_add(win_len);
+        }
+        bounds.extend(phases.iter().copied().filter(|&p| p > 0 && p < horizon));
+        bounds.push(horizon.max(1));
+        bounds.sort_unstable();
+        bounds.dedup();
+        let vcs = cfg.vcs as usize;
+        EngineRec {
+            sink: sink.clone(),
+            info,
+            top_k: rc.top_k.max(1),
+            max_windows: rc.max_windows.max(1),
+            num_ports,
+            vcs,
+            flows,
+            packet_flits: cfg.packet_flits,
+            seed: cfg.seed,
+            rate,
+            injection: cfg.injection.name(),
+            horizon,
+            win_len,
+            phases,
+            bounds,
+            next: 0,
+            index: 0,
+            win_start: 0,
+            fwd: vec![0; num_ports],
+            stalls: vec![0; num_ports],
+            hwm: vec![0; num_ports * vcs],
+            touched: Vec::new(),
+            touched_q: Vec::new(),
+            win_injected: 0,
+            win_delivered: 0,
+            win_forwarded: 0,
+            totals: RunTotals::default(),
+            out: VecDeque::new(),
+            shed: ShedTotals::default(),
+        }
+    }
+
+    /// One packet created (bucketed by its arrival cycle).
+    pub(crate) fn on_injected(&mut self) {
+        let f = self.packet_flits as u64;
+        self.win_injected += f;
+        self.totals.injected_flits += f;
+    }
+
+    /// One flit transmitted by `port`.
+    pub(crate) fn on_forwarded(&mut self, port: usize) {
+        if self.fwd[port] == 0 && self.stalls[port] == 0 {
+            self.touched.push(port as u32);
+        }
+        self.fwd[port] += 1;
+        self.win_forwarded += 1;
+        self.totals.forwarded_flits += 1;
+    }
+
+    /// One wholly credit-blocked service round at `port`.
+    pub(crate) fn on_stall(&mut self, port: usize) {
+        if self.fwd[port] == 0 && self.stalls[port] == 0 {
+            self.touched.push(port as u32);
+        }
+        self.stalls[port] += 1;
+    }
+
+    /// One buffer push into (port, VC) slot `qi`, queue depth after.
+    pub(crate) fn on_push(&mut self, qi: usize, depth: u64) {
+        if self.hwm[qi] < depth {
+            if self.hwm[qi] == 0 {
+                self.touched_q.push(qi as u32);
+            }
+            self.hwm[qi] = depth;
+        }
+    }
+
+    /// One flit delivered to its destination.
+    pub(crate) fn on_delivered(&mut self) {
+        self.win_delivered += 1;
+        self.totals.delivered_flits += 1;
+    }
+
+    /// Called once per simulated cycle after the cycle's events: closes
+    /// the current window when `t` is a boundary.
+    pub(crate) fn maybe_close(&mut self, t: u64) {
+        if self.next < self.bounds.len() && t == self.bounds[self.next] {
+            self.close(t);
+        }
+    }
+
+    fn close(&mut self, t: u64) {
+        let mut sel = self.touched.clone();
+        sel.sort_unstable_by_key(|&p| (Reverse(self.fwd[p as usize]), p));
+        sel.truncate(self.top_k);
+        let ports = sel
+            .iter()
+            .map(|&p| {
+                let p = p as usize;
+                PortWindow {
+                    port: p as u32,
+                    forwarded: self.fwd[p],
+                    stalls: self.stalls[p],
+                    vc_hwm: self.hwm[p * self.vcs..(p + 1) * self.vcs].to_vec(),
+                }
+            })
+            .collect();
+        let sample = WindowSample {
+            index: self.index,
+            start: self.win_start,
+            end: t,
+            injected_flits: self.win_injected,
+            delivered_flits: self.win_delivered,
+            forwarded_flits: self.win_forwarded,
+            ports,
+        };
+        if self.out.len() == self.max_windows {
+            let old = self.out.pop_front().expect("ring is non-empty at capacity");
+            self.shed.windows += 1;
+            self.shed.injected_flits += old.injected_flits;
+            self.shed.delivered_flits += old.delivered_flits;
+            self.shed.forwarded_flits += old.forwarded_flits;
+        }
+        self.out.push_back(sample);
+        for &p in &self.touched {
+            self.fwd[p as usize] = 0;
+            self.stalls[p as usize] = 0;
+        }
+        self.touched.clear();
+        for &q in &self.touched_q {
+            self.hwm[q as usize] = 0;
+        }
+        self.touched_q.clear();
+        self.win_injected = 0;
+        self.win_delivered = 0;
+        self.win_forwarded = 0;
+        self.win_start = t;
+        self.index += 1;
+        self.next += 1;
+    }
+
+    /// Close any remaining window (the engine's main loop normally
+    /// closes the last one at the horizon) and push the finished
+    /// [`Recording`] into the sink.
+    pub(crate) fn finish(mut self) {
+        while self.next < self.bounds.len() {
+            let b = self.bounds[self.next];
+            self.close(b);
+        }
+        let rec = Recording {
+            info: self.info,
+            window: self.win_len,
+            top_k: self.top_k,
+            max_windows: self.max_windows,
+            num_ports: self.num_ports,
+            vcs: self.vcs,
+            flows: self.flows,
+            packet_flits: self.packet_flits,
+            seed: self.seed,
+            rate: self.rate,
+            injection: self.injection,
+            horizon: self.horizon,
+            phases: self.phases,
+            totals: self.totals,
+            shed: self.shed,
+            windows: self.out.into_iter().collect(),
+        };
+        self.sink.push(rec);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pgft-timeseries/1 document emission
+// ---------------------------------------------------------------------------
+
+fn window_json(w: &WindowSample) -> String {
+    let ports: Vec<String> = w
+        .ports
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"port\": {}, \"forwarded\": {}, \"stalls\": {}, \"vc_hwm\": {}}}",
+                p.port,
+                p.forwarded,
+                p.stalls,
+                u64s_json(&p.vc_hwm)
+            )
+        })
+        .collect();
+    format!(
+        "        {{\"index\": {}, \"start\": {}, \"end\": {}, \"injected_flits\": {}, \
+         \"delivered_flits\": {}, \"forwarded_flits\": {}, \"ports\": [{}]}}",
+        w.index,
+        w.start,
+        w.end,
+        w.injected_flits,
+        w.delivered_flits,
+        w.forwarded_flits,
+        ports.join(", ")
+    )
+}
+
+fn recording_json(rec: &Recording) -> String {
+    let label = map_json(&rec.info.label, "      ", |v: &String| format!("\"{}\"", esc(v)));
+    let windows = if rec.windows.is_empty() {
+        "[]".to_string()
+    } else {
+        let items: Vec<String> = rec.windows.iter().map(window_json).collect();
+        format!("[\n{}\n      ]", items.join(",\n"))
+    };
+    format!(
+        "    {{\n      \"label\": {label},\n      \"topo\": \"{}\",\n      \
+         \"placement\": \"{}\",\n      \"num_ports\": {},\n      \"vcs\": {},\n      \
+         \"flows\": {},\n      \"packet_flits\": {},\n      \"seed\": {},\n      \
+         \"rate\": {},\n      \"injection\": \"{}\",\n      \"horizon\": {},\n      \
+         \"phases\": {},\n      \"totals\": {{\"injected_flits\": {}, \
+         \"delivered_flits\": {}, \"forwarded_flits\": {}}},\n      \
+         \"shed\": {{\"windows\": {}, \"injected_flits\": {}, \"delivered_flits\": {}, \
+         \"forwarded_flits\": {}}},\n      \"windows\": {windows}\n    }}",
+        esc(&rec.info.topo),
+        esc(&rec.info.placement),
+        rec.num_ports,
+        rec.vcs,
+        rec.flows,
+        rec.packet_flits,
+        rec.seed,
+        rec.rate,
+        esc(&rec.injection),
+        rec.horizon,
+        u64s_json(&rec.phases),
+        rec.totals.injected_flits,
+        rec.totals.delivered_flits,
+        rec.totals.forwarded_flits,
+        rec.shed.windows,
+        rec.shed.injected_flits,
+        rec.shed.delivered_flits,
+        rec.shed.forwarded_flits,
+    )
+}
+
+/// Render a full `pgft-timeseries/1` document. `command` names the
+/// emitting subcommand; `cfg` is the shared sampling provenance of
+/// every run in the document. No field is ever `null`.
+pub fn timeseries_json(command: &str, cfg: &RecorderConfig, recs: &[Recording]) -> String {
+    let runs = if recs.is_empty() {
+        "[]".to_string()
+    } else {
+        let items: Vec<String> = recs.iter().map(recording_json).collect();
+        format!("[\n{}\n  ]", items.join(",\n"))
+    };
+    format!(
+        "{{\n  \"schema\": \"pgft-timeseries/1\",\n  \"command\": \"{}\",\n  \
+         \"host_cpus\": {},\n  \"window\": {},\n  \"top_k\": {},\n  \
+         \"max_windows\": {},\n  \"runs\": {}\n}}\n",
+        esc(command),
+        crate::util::par::max_threads(),
+        cfg.window,
+        cfg.top_k,
+        cfg.max_windows,
+        runs
+    )
+}
+
+/// Write a `pgft-timeseries/1` document to `path`.
+pub fn write_timeseries(
+    path: impl AsRef<Path>,
+    command: &str,
+    cfg: &RecorderConfig,
+    recs: &[Recording],
+) -> Result<()> {
+    let body = timeseries_json(command, cfg, recs);
+    std::fs::write(path.as_ref(), body)
+        .with_context(|| format!("write timeseries {}", path.as_ref().display()))
+}
+
+// ---------------------------------------------------------------------------
+// pgft-timeseries/1 document parsing (for `pgft report`)
+// ---------------------------------------------------------------------------
+
+/// A parsed `pgft-timeseries/1` document.
+#[derive(Clone, Debug)]
+pub struct TimeSeriesDoc {
+    /// The subcommand that emitted the document.
+    pub command: String,
+    /// `max_threads()` of the emitting host (provenance only).
+    pub host_cpus: u64,
+    /// The document-level sampling provenance.
+    pub config: RecorderConfig,
+    /// The labelled recordings.
+    pub runs: Vec<Recording>,
+}
+
+fn req<'v>(v: &'v json::Value, key: &str) -> Result<&'v json::Value> {
+    v.get(key).with_context(|| format!("pgft-timeseries: missing key {key:?}"))
+}
+
+fn req_u64(v: &json::Value, key: &str) -> Result<u64> {
+    req(v, key)?.as_u64().with_context(|| format!("pgft-timeseries: {key:?} is not an integer"))
+}
+
+fn req_f64(v: &json::Value, key: &str) -> Result<f64> {
+    req(v, key)?.as_f64().with_context(|| format!("pgft-timeseries: {key:?} is not a number"))
+}
+
+fn req_str<'v>(v: &'v json::Value, key: &str) -> Result<&'v str> {
+    req(v, key)?.as_str().with_context(|| format!("pgft-timeseries: {key:?} is not a string"))
+}
+
+fn req_arr<'v>(v: &'v json::Value, key: &str) -> Result<&'v [json::Value]> {
+    req(v, key)?.as_arr().with_context(|| format!("pgft-timeseries: {key:?} is not an array"))
+}
+
+fn u64_arr(v: &json::Value, key: &str) -> Result<Vec<u64>> {
+    req_arr(v, key)?
+        .iter()
+        .map(|x| x.as_u64().with_context(|| format!("pgft-timeseries: {key:?} holds a non-integer")))
+        .collect()
+}
+
+fn recording_from(v: &json::Value) -> Result<Recording> {
+    let mut label = BTreeMap::new();
+    if let json::Value::Obj(kv) = req(v, "label")? {
+        for (k, val) in kv {
+            let s = val.as_str().context("pgft-timeseries: label values must be strings")?;
+            label.insert(k.clone(), s.to_string());
+        }
+    } else {
+        bail!("pgft-timeseries: label is not an object");
+    }
+    let totals_v = req(v, "totals")?;
+    let shed_v = req(v, "shed")?;
+    let windows = req_arr(v, "windows")?
+        .iter()
+        .map(|w| {
+            let ports = req_arr(w, "ports")?
+                .iter()
+                .map(|p| {
+                    Ok(PortWindow {
+                        port: req_u64(p, "port")? as u32,
+                        forwarded: req_u64(p, "forwarded")?,
+                        stalls: req_u64(p, "stalls")?,
+                        vc_hwm: u64_arr(p, "vc_hwm")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(WindowSample {
+                index: req_u64(w, "index")?,
+                start: req_u64(w, "start")?,
+                end: req_u64(w, "end")?,
+                injected_flits: req_u64(w, "injected_flits")?,
+                delivered_flits: req_u64(w, "delivered_flits")?,
+                forwarded_flits: req_u64(w, "forwarded_flits")?,
+                ports,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Recording {
+        info: RunInfo {
+            label,
+            topo: req_str(v, "topo")?.to_string(),
+            placement: req_str(v, "placement")?.to_string(),
+        },
+        window: 0, // filled from the document level by the caller
+        top_k: 0,
+        max_windows: 0,
+        num_ports: req_u64(v, "num_ports")? as usize,
+        vcs: req_u64(v, "vcs")? as usize,
+        flows: req_u64(v, "flows")? as usize,
+        packet_flits: req_u64(v, "packet_flits")? as u32,
+        seed: req_u64(v, "seed")?,
+        rate: req_f64(v, "rate")?,
+        injection: req_str(v, "injection")?.to_string(),
+        horizon: req_u64(v, "horizon")?,
+        phases: u64_arr(v, "phases")?,
+        totals: RunTotals {
+            injected_flits: req_u64(totals_v, "injected_flits")?,
+            delivered_flits: req_u64(totals_v, "delivered_flits")?,
+            forwarded_flits: req_u64(totals_v, "forwarded_flits")?,
+        },
+        shed: ShedTotals {
+            windows: req_u64(shed_v, "windows")?,
+            injected_flits: req_u64(shed_v, "injected_flits")?,
+            delivered_flits: req_u64(shed_v, "delivered_flits")?,
+            forwarded_flits: req_u64(shed_v, "forwarded_flits")?,
+        },
+        windows,
+    })
+}
+
+/// Parse a `pgft-timeseries/1` document (the inverse of
+/// [`timeseries_json`], used by `pgft report`).
+pub fn parse_timeseries(text: &str) -> Result<TimeSeriesDoc> {
+    let v = json::parse(text)?;
+    let schema = req_str(&v, "schema")?;
+    ensure!(
+        schema == "pgft-timeseries/1",
+        "unsupported schema {schema:?} (expected pgft-timeseries/1)"
+    );
+    let config = RecorderConfig {
+        window: req_u64(&v, "window")?,
+        top_k: req_u64(&v, "top_k")? as usize,
+        max_windows: req_u64(&v, "max_windows")? as usize,
+    };
+    let mut runs = Vec::new();
+    for rv in req_arr(&v, "runs")? {
+        let mut rec = recording_from(rv)?;
+        rec.window = config.window;
+        rec.top_k = config.top_k;
+        rec.max_windows = config.max_windows;
+        runs.push(rec);
+    }
+    Ok(TimeSeriesDoc {
+        command: req_str(&v, "command")?.to_string(),
+        host_cpus: req_u64(&v, "host_cpus")?,
+        config,
+        runs,
+    })
+}
+
+pub(crate) mod json {
+    //! A minimal recursive-descent JSON reader (the crate carries no
+    //! serde). Numbers keep their raw token so integers round-trip
+    //! exactly; only what `pgft-timeseries/1` emits is exercised, but
+    //! the grammar is complete.
+
+    use anyhow::{bail, ensure, Context, Result};
+
+    /// A parsed JSON value.
+    #[derive(Clone, Debug, PartialEq)]
+    pub(crate) enum Value {
+        /// `null` (never produced by pgft emitters; parsed for
+        /// completeness).
+        Null,
+        /// `true` / `false`.
+        Bool(bool),
+        /// A number, kept as its raw token.
+        Num(String),
+        /// A string (escapes decoded).
+        Str(String),
+        /// An array.
+        Arr(Vec<Value>),
+        /// An object, in document order.
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub(crate) fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+
+        pub(crate) fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        pub(crate) fn as_u64(&self) -> Option<u64> {
+            match self {
+                Value::Num(s) => s.parse().ok(),
+                _ => None,
+            }
+        }
+
+        pub(crate) fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(s) => s.parse().ok(),
+                _ => None,
+            }
+        }
+
+        pub(crate) fn as_arr(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(a) => Some(a),
+                _ => None,
+            }
+        }
+    }
+
+    /// Parse one complete JSON document.
+    pub(crate) fn parse(s: &str) -> Result<Value> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.ws();
+        ensure!(p.i == p.b.len(), "json: trailing bytes at offset {}", p.i);
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl Parser<'_> {
+        fn ws(&mut self) {
+            while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&mut self) -> Result<u8> {
+            self.ws();
+            self.b.get(self.i).copied().context("json: unexpected end of input")
+        }
+
+        fn lit(&mut self, s: &str) -> Result<()> {
+            ensure!(
+                self.b[self.i..].starts_with(s.as_bytes()),
+                "json: expected {s:?} at offset {}",
+                self.i
+            );
+            self.i += s.len();
+            Ok(())
+        }
+
+        fn value(&mut self) -> Result<Value> {
+            match self.peek()? {
+                b'{' => self.object(),
+                b'[' => self.array(),
+                b'"' => Ok(Value::Str(self.string()?)),
+                b't' => self.lit("true").map(|_| Value::Bool(true)),
+                b'f' => self.lit("false").map(|_| Value::Bool(false)),
+                b'n' => self.lit("null").map(|_| Value::Null),
+                _ => self.number(),
+            }
+        }
+
+        fn object(&mut self) -> Result<Value> {
+            self.lit("{")?;
+            let mut kv = Vec::new();
+            if self.peek()? == b'}' {
+                self.i += 1;
+                return Ok(Value::Obj(kv));
+            }
+            loop {
+                ensure!(self.peek()? == b'"', "json: object key must be a string");
+                let k = self.string()?;
+                ensure!(self.peek()? == b':', "json: expected ':' after object key");
+                self.i += 1;
+                kv.push((k, self.value()?));
+                match self.peek()? {
+                    b',' => self.i += 1,
+                    b'}' => {
+                        self.i += 1;
+                        return Ok(Value::Obj(kv));
+                    }
+                    c => bail!("json: expected ',' or '}}' in object, got {:?}", c as char),
+                }
+            }
+        }
+
+        fn array(&mut self) -> Result<Value> {
+            self.lit("[")?;
+            let mut out = Vec::new();
+            if self.peek()? == b']' {
+                self.i += 1;
+                return Ok(Value::Arr(out));
+            }
+            loop {
+                out.push(self.value()?);
+                match self.peek()? {
+                    b',' => self.i += 1,
+                    b']' => {
+                        self.i += 1;
+                        return Ok(Value::Arr(out));
+                    }
+                    c => bail!("json: expected ',' or ']' in array, got {:?}", c as char),
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String> {
+            self.lit("\"")?;
+            let mut out = String::new();
+            loop {
+                let c = *self.b.get(self.i).context("json: unterminated string")?;
+                self.i += 1;
+                match c {
+                    b'"' => return Ok(out),
+                    b'\\' => {
+                        let e = *self.b.get(self.i).context("json: unterminated escape")?;
+                        self.i += 1;
+                        match e {
+                            b'"' => out.push('"'),
+                            b'\\' => out.push('\\'),
+                            b'/' => out.push('/'),
+                            b'n' => out.push('\n'),
+                            b't' => out.push('\t'),
+                            b'r' => out.push('\r'),
+                            b'b' => out.push('\u{0008}'),
+                            b'f' => out.push('\u{000c}'),
+                            b'u' => {
+                                let cp = self.hex4()?;
+                                // Surrogate pairs are not produced by any
+                                // pgft emitter; reject rather than decode
+                                // them wrongly.
+                                ensure!(
+                                    !(0xD800..=0xDFFF).contains(&cp),
+                                    "json: surrogate escapes are unsupported"
+                                );
+                                out.push(
+                                    char::from_u32(cp).context("json: invalid \\u escape")?,
+                                );
+                            }
+                            _ => bail!("json: bad escape \\{}", e as char),
+                        }
+                    }
+                    _ => {
+                        // Re-assemble multi-byte UTF-8 sequences: walk back
+                        // one byte and take the full char from the source.
+                        self.i -= 1;
+                        let rest = std::str::from_utf8(&self.b[self.i..])
+                            .context("json: invalid UTF-8")?;
+                        let ch = rest.chars().next().context("json: unterminated string")?;
+                        out.push(ch);
+                        self.i += ch.len_utf8();
+                    }
+                }
+            }
+        }
+
+        fn hex4(&mut self) -> Result<u32> {
+            ensure!(self.i + 4 <= self.b.len(), "json: truncated \\u escape");
+            let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                .context("json: invalid \\u escape")?;
+            let cp = u32::from_str_radix(s, 16).context("json: invalid \\u escape")?;
+            self.i += 4;
+            Ok(cp)
+        }
+
+        fn number(&mut self) -> Result<Value> {
+            self.ws();
+            let start = self.i;
+            while matches!(
+                self.b.get(self.i),
+                Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+            ) {
+                self.i += 1;
+            }
+            ensure!(self.i > start, "json: expected a value at offset {start}");
+            let tok = std::str::from_utf8(&self.b[start..self.i]).expect("ascii token");
+            tok.parse::<f64>().with_context(|| format!("json: bad number {tok:?}"))?;
+            Ok(Value::Num(tok.to_string()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hotspot attribution and recording diff
+// ---------------------------------------------------------------------------
+
+/// One attributed hot link: a port's windowed load mapped back to
+/// (stage, switch, node-type group), with saturation-onset
+/// localization. Figures are over the **retained** windows (the top-K
+/// cut means totals are lower bounds for ports that sometimes fall out
+/// of the selection; persistent hotspots never do).
+#[derive(Clone, Debug)]
+pub struct Hotspot {
+    /// Global directed-port id.
+    pub port: u32,
+    /// Human port label (paper-style switch coordinates).
+    pub label: String,
+    /// Link stage (stage `l` joins levels `l-1` and `l`).
+    pub stage: usize,
+    /// Label of the owning element (switch coordinates or `nodeN`).
+    pub switch: String,
+    /// Node-type census of the nodes under the link's lower endpoint
+    /// (e.g. `compute:7 io:1`), or the node's own type for stage-1
+    /// injection links.
+    pub group: String,
+    /// Retained windows in which the port made the top-K selection.
+    pub windows_seen: u64,
+    /// First window index whose forwarded flits reached
+    /// [`SATURATION_FRACTION`] of the window's cycle budget.
+    pub onset: Option<u64>,
+    /// Whether the port stayed saturated in at least half the retained
+    /// windows from onset onward.
+    pub persistent: bool,
+    /// Largest per-window forwarded count.
+    pub peak_forwarded: u64,
+    /// Forwarded flits summed over the retained windows.
+    pub total_forwarded: u64,
+    /// `total_forwarded` over the retained cycle span (a port moves at
+    /// most 1 flit/cycle, so 1.0 is a fully busy link).
+    pub utilization: f64,
+}
+
+fn group_label(
+    topo: &Topology,
+    types: Option<&NodeTypeMap>,
+    link: usize,
+    cache: &mut BTreeMap<usize, String>,
+) -> String {
+    // The link's lower endpoint is the element that emits upward over
+    // it; the group is whatever subtree hangs below that element.
+    match topo.ports[topo.links[link].up_port].owner {
+        Endpoint::Node(n) => match types {
+            Some(t) => t.type_of(n).to_string(),
+            None => "untyped".to_string(),
+        },
+        Endpoint::Switch(s) => {
+            if let Some(g) = cache.get(&s) {
+                return g.clone();
+            }
+            let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+            for node in &topo.nodes {
+                if topo.is_ancestor(s, node.nid) {
+                    let key = match types {
+                        Some(t) => t.type_of(node.nid).to_string(),
+                        None => "nodes".to_string(),
+                    };
+                    *counts.entry(key).or_insert(0) += 1;
+                }
+            }
+            let label =
+                counts.iter().map(|(k, v)| format!("{k}:{v}")).collect::<Vec<_>>().join(" ");
+            cache.insert(s, label.clone());
+            label
+        }
+    }
+}
+
+/// Attribute a recording's windowed load back to the topology: one
+/// [`Hotspot`] per port that ever made a window's top-K selection,
+/// descending by total forwarded flits (ties toward the lower port id).
+pub fn attribute(
+    rec: &Recording,
+    topo: &Topology,
+    types: Option<&NodeTypeMap>,
+) -> Result<Vec<Hotspot>> {
+    ensure!(
+        topo.num_ports() == rec.num_ports,
+        "recording is over {} ports but the topology has {} — wrong --topo?",
+        rec.num_ports,
+        topo.num_ports()
+    );
+    #[derive(Default)]
+    struct Acc {
+        total: u64,
+        peak: u64,
+        seen: u64,
+        onset: Option<u64>,
+        sat_windows: u64,
+    }
+    let mut acc: BTreeMap<u32, Acc> = BTreeMap::new();
+    let covered: u64 = rec.windows.iter().map(|w| w.len()).sum();
+    for w in &rec.windows {
+        let budget = w.len() as f64;
+        for p in &w.ports {
+            let a = acc.entry(p.port).or_default();
+            a.total += p.forwarded;
+            a.peak = a.peak.max(p.forwarded);
+            a.seen += 1;
+            if p.forwarded as f64 >= SATURATION_FRACTION * budget {
+                a.sat_windows += 1;
+                if a.onset.is_none() {
+                    a.onset = Some(w.index);
+                }
+            }
+        }
+    }
+    let mut cache = BTreeMap::new();
+    let mut out: Vec<Hotspot> = acc
+        .into_iter()
+        .map(|(port, a)| {
+            let link = topo.ports[port as usize].link;
+            let persistent = match a.onset {
+                Some(first) => {
+                    let after = rec.windows.iter().filter(|w| w.index >= first).count() as u64;
+                    after > 0 && 2 * a.sat_windows >= after
+                }
+                None => false,
+            };
+            Hotspot {
+                port,
+                label: topo.port_label(port as usize),
+                stage: topo.links[link].stage,
+                switch: match topo.ports[port as usize].owner {
+                    Endpoint::Switch(s) => topo.switch_label(s),
+                    Endpoint::Node(n) => format!("node{n}"),
+                },
+                group: group_label(topo, types, link, &mut cache),
+                windows_seen: a.seen,
+                onset: a.onset,
+                persistent,
+                peak_forwarded: a.peak,
+                total_forwarded: a.total,
+                utilization: if covered > 0 { a.total as f64 / covered as f64 } else { 0.0 },
+            }
+        })
+        .collect();
+    out.sort_by_key(|h| (Reverse(h.total_forwarded), h.port));
+    Ok(out)
+}
+
+/// How a hotspot of recording A fares in recording B.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffVerdict {
+    /// The port never made B's top-K at all.
+    Absent,
+    /// The port moved ≥ 10% fewer flits in B.
+    Cooler,
+    /// Within 10% either way.
+    Similar,
+    /// The port moved ≥ 10% more flits in B.
+    Hotter,
+}
+
+impl fmt::Display for DiffVerdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DiffVerdict::Absent => "absent",
+            DiffVerdict::Cooler => "cooler",
+            DiffVerdict::Similar => "similar",
+            DiffVerdict::Hotter => "hotter",
+        })
+    }
+}
+
+/// One row of a recording diff: an A-hotspot compared against B.
+#[derive(Clone, Debug)]
+pub struct HotspotDiff {
+    /// Global directed-port id.
+    pub port: u32,
+    /// Human port label.
+    pub label: String,
+    /// Link stage.
+    pub stage: usize,
+    /// Node-type group under the link.
+    pub group: String,
+    /// Total forwarded flits in A.
+    pub a_total: u64,
+    /// Total forwarded flits in B (0 when absent).
+    pub b_total: u64,
+    /// Saturation onset in A.
+    pub a_onset: Option<u64>,
+    /// Saturation onset in B.
+    pub b_onset: Option<u64>,
+    /// Whether the port was a persistent hotspot in A.
+    pub a_persistent: bool,
+    /// The comparison verdict.
+    pub verdict: DiffVerdict,
+}
+
+/// Diff two attributed hotspot lists: every A-hotspot is looked up in
+/// B and classified ([`DiffVerdict`]). The paper-facing use is A =
+/// dmodk, B = gdmodk over the same pattern and rate: gdmodk removes
+/// (or strictly cools) dmodk's persistent top-stage funnel.
+pub fn diff_hotspots(a: &[Hotspot], b: &[Hotspot]) -> Vec<HotspotDiff> {
+    let bmap: BTreeMap<u32, &Hotspot> = b.iter().map(|h| (h.port, h)).collect();
+    let mut out: Vec<HotspotDiff> = a
+        .iter()
+        .map(|ha| {
+            let hb = bmap.get(&ha.port).copied();
+            let b_total = hb.map(|h| h.total_forwarded).unwrap_or(0);
+            let verdict = if b_total == 0 {
+                DiffVerdict::Absent
+            } else if 10 * b_total <= 9 * ha.total_forwarded {
+                DiffVerdict::Cooler
+            } else if 10 * ha.total_forwarded <= 9 * b_total {
+                DiffVerdict::Hotter
+            } else {
+                DiffVerdict::Similar
+            };
+            HotspotDiff {
+                port: ha.port,
+                label: ha.label.clone(),
+                stage: ha.stage,
+                group: ha.group.clone(),
+                a_total: ha.total_forwarded,
+                b_total,
+                a_onset: ha.onset,
+                b_onset: hb.and_then(|h| h.onset),
+                a_persistent: ha.persistent,
+                verdict,
+            }
+        })
+        .collect();
+    out.sort_by_key(|d| (Reverse(d.a_total), d.port));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{build_pgft, PgftSpec};
+
+    fn tiny_cfg(measure: u64) -> NetsimConfig {
+        NetsimConfig { warmup: 0, measure, drain: 0, ..Default::default() }
+    }
+
+    fn rec_handle(window: u64, max_windows: usize) -> Recorder {
+        Recorder::enabled(RecorderConfig { window, top_k: 2, max_windows })
+    }
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        assert!(r.take().is_empty());
+        assert!(Recorder::enabled(RecorderConfig::default()).is_enabled());
+        assert!(RecorderConfig::default().validate().is_ok());
+        assert!(RecorderConfig { window: 0, ..Default::default() }.validate().is_err());
+        assert!(RecorderConfig { top_k: 0, ..Default::default() }.validate().is_err());
+        assert!(RecorderConfig { max_windows: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn windows_close_on_boundaries_and_conserve() {
+        let sink = rec_handle(4, 64);
+        let mut er =
+            EngineRec::new(&sink, RunInfo::default(), &tiny_cfg(10), 0.5, 8, 3, Vec::new());
+        for t in 1..=10u64 {
+            if t == 1 {
+                er.on_injected(); // 4 flits (packet_flits = 4)
+                er.on_forwarded(2);
+                er.on_push(5, 3);
+            }
+            if t == 6 {
+                er.on_forwarded(2);
+                er.on_forwarded(7);
+                er.on_forwarded(7);
+                er.on_stall(1);
+                er.on_delivered();
+            }
+            er.maybe_close(t);
+        }
+        er.finish();
+        let recs = sink.take();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        let ends: Vec<u64> = r.windows.iter().map(|w| w.end).collect();
+        assert_eq!(ends, vec![4, 8, 10]);
+        assert_eq!(r.windows[0].injected_flits, 4);
+        assert_eq!(r.windows[0].forwarded_flits, 1);
+        assert_eq!(r.windows[1].forwarded_flits, 3);
+        assert_eq!(r.windows[1].delivered_flits, 1);
+        // Top-K ordering: port 7 (2 flits) before port 2 (1 flit);
+        // stall-only port 1 is cut by top_k = 2... it ties port 2 at 0
+        // forwarded? No: port 2 forwarded 1, port 7 forwarded 2, port 1
+        // forwarded 0 — top_k keeps 7 then 2.
+        let w1 = &r.windows[1];
+        assert_eq!(w1.ports.len(), 2);
+        assert_eq!((w1.ports[0].port, w1.ports[0].forwarded), (7, 2));
+        assert_eq!((w1.ports[1].port, w1.ports[1].forwarded), (2, 1));
+        // Window-local state reset: window 0's hwm does not leak.
+        assert_eq!(r.windows[0].ports[0].port, 2);
+        assert_eq!(r.windows[0].ports[0].vc_hwm, vec![0, 3]);
+        assert!(w1.ports.iter().all(|p| p.vc_hwm == vec![0, 0]));
+        // Conservation: Σ windows + shed == totals.
+        let inj: u64 = r.windows.iter().map(|w| w.injected_flits).sum();
+        assert_eq!(inj + r.shed.injected_flits, r.totals.injected_flits);
+        assert_eq!(r.totals.injected_flits, 4);
+        assert_eq!(r.totals.forwarded_flits, 4);
+        assert_eq!(r.totals.delivered_flits, 1);
+        assert_eq!(r.shed, ShedTotals::default());
+    }
+
+    #[test]
+    fn ring_sheds_oldest_and_keeps_conservation() {
+        let sink = rec_handle(2, 2);
+        let mut er =
+            EngineRec::new(&sink, RunInfo::default(), &tiny_cfg(10), 0.5, 4, 1, Vec::new());
+        for t in 1..=10u64 {
+            er.on_injected();
+            er.on_forwarded(0);
+            er.maybe_close(t);
+        }
+        er.finish();
+        let r = &sink.take()[0];
+        assert_eq!(r.windows.len(), 2, "ring bound holds");
+        assert_eq!(r.shed.windows, 3, "5 windows total, 3 shed");
+        assert_eq!(r.windows[0].index, 3, "oldest retained window keeps its index");
+        let inj: u64 = r.windows.iter().map(|w| w.injected_flits).sum();
+        let fwd: u64 = r.windows.iter().map(|w| w.forwarded_flits).sum();
+        assert_eq!(inj + r.shed.injected_flits, r.totals.injected_flits);
+        assert_eq!(fwd + r.shed.forwarded_flits, r.totals.forwarded_flits);
+        assert_eq!(r.totals.injected_flits, 40);
+        assert_eq!(r.totals.forwarded_flits, 10);
+    }
+
+    #[test]
+    fn phase_marks_force_rollovers() {
+        let sink = rec_handle(4, 64);
+        let mut er =
+            EngineRec::new(&sink, RunInfo::default(), &tiny_cfg(10), 0.5, 4, 1, vec![5, 10]);
+        for t in 1..=10u64 {
+            er.maybe_close(t);
+        }
+        er.finish();
+        let r = &sink.take()[0];
+        let ends: Vec<u64> = r.windows.iter().map(|w| w.end).collect();
+        assert_eq!(ends, vec![4, 5, 8, 10], "phase ends split windows");
+        assert_eq!(r.phases, vec![5, 10]);
+        assert!(r.windows.iter().all(|w| w.start < w.end), "no degenerate windows");
+    }
+
+    #[test]
+    fn document_roundtrips_and_is_null_free() {
+        let sink = rec_handle(4, 64);
+        let mut info = RunInfo {
+            label: BTreeMap::new(),
+            topo: "case-study".into(),
+            placement: "paper-io".into(),
+        };
+        info.label.insert("algo".into(), "dmodk".into());
+        let mut er = EngineRec::new(&sink, info, &tiny_cfg(8), 0.8, 8, 3, Vec::new());
+        for t in 1..=8u64 {
+            if t == 2 {
+                er.on_injected();
+                er.on_forwarded(3);
+                er.on_push(6, 2);
+                er.on_delivered();
+            }
+            er.maybe_close(t);
+        }
+        er.finish();
+        let recs = sink.take();
+        let doc = timeseries_json("netsim", &sink.config(), &recs);
+        assert!(doc.contains("\"schema\": \"pgft-timeseries/1\""), "{doc}");
+        assert!(doc.contains("\"window\": 4"));
+        assert!(doc.contains("\"algo\": \"dmodk\""));
+        assert!(!doc.contains("null"), "no-null discipline: {doc}");
+        let parsed = parse_timeseries(&doc).unwrap();
+        assert_eq!(parsed.command, "netsim");
+        assert_eq!(parsed.config, RecorderConfig { window: 4, top_k: 2, max_windows: 64 });
+        assert_eq!(parsed.runs.len(), 1);
+        let (a, b) = (&parsed.runs[0], &recs[0]);
+        assert_eq!(a.info.label, b.info.label);
+        assert_eq!(a.info.topo, "case-study");
+        assert_eq!((a.flows, a.num_ports, a.vcs), (b.flows, b.num_ports, b.vcs));
+        assert_eq!(a.rate, 0.8);
+        assert_eq!(a.totals, b.totals);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.windows, b.windows);
+    }
+
+    #[test]
+    fn json_reader_handles_the_grammar() {
+        let v = json::parse(r#"{"a": [1, 2.5, "x\n", true, false, null], "b": {}}"#).unwrap();
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_u64(), Some(1));
+        assert_eq!(arr[1].as_f64(), Some(2.5));
+        assert_eq!(arr[2].as_str(), Some("x\n"));
+        assert_eq!(arr[3], json::Value::Bool(true));
+        assert_eq!(arr[5], json::Value::Null);
+        assert!(json::parse("{").is_err());
+        assert!(json::parse("[1,]").is_err());
+        assert!(json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn attribution_localizes_stage_and_group() {
+        let topo = build_pgft(&PgftSpec::case_study());
+        let types = crate::nodes::Placement::paper_io().apply(&topo).unwrap();
+        // A synthetic recording: one top-stage down-port runs at ~0.94
+        // utilization from window 0, a stage-1 port stays lukewarm.
+        let top_port = topo.level_ports(topo.spec.h, false)[0] as u32;
+        let leaf_port = topo.level_ports(1, false)[0] as u32;
+        let window = |i: u64| WindowSample {
+            index: i,
+            start: i * 64,
+            end: (i + 1) * 64,
+            injected_flits: 100,
+            delivered_flits: 80,
+            forwarded_flits: 90,
+            ports: vec![
+                PortWindow { port: top_port, forwarded: 60, stalls: 0, vc_hwm: vec![4, 4] },
+                PortWindow { port: leaf_port, forwarded: 10, stalls: 2, vc_hwm: vec![1, 0] },
+            ],
+        };
+        let rec = Recording {
+            info: RunInfo::default(),
+            window: 64,
+            top_k: 2,
+            max_windows: 64,
+            num_ports: topo.num_ports(),
+            vcs: 2,
+            flows: 56,
+            packet_flits: 4,
+            seed: 1,
+            rate: 0.8,
+            injection: "bernoulli".into(),
+            horizon: 192,
+            phases: Vec::new(),
+            totals: RunTotals::default(),
+            shed: ShedTotals::default(),
+            windows: (0..3).map(window).collect(),
+        };
+        let hot = attribute(&rec, &topo, Some(&types)).unwrap();
+        assert_eq!(hot.len(), 2);
+        assert_eq!(hot[0].port, top_port, "hottest first");
+        assert_eq!(hot[0].stage, topo.spec.h, "top-stage link");
+        assert_eq!(hot[0].onset, Some(0));
+        assert!(hot[0].persistent);
+        assert!((hot[0].utilization - 60.0 / 64.0).abs() < 1e-9);
+        assert!(hot[0].group.contains(':'), "census-style group: {}", hot[0].group);
+        assert_eq!(hot[1].onset, None);
+        assert!(!hot[1].persistent);
+        // Wrong topology is rejected loudly.
+        let rec2 = Recording { num_ports: 3, ..rec.clone() };
+        assert!(attribute(&rec2, &topo, None).is_err());
+    }
+
+    #[test]
+    fn diff_verdicts_cover_the_quadrants() {
+        let h = |port: u32, total: u64, onset: Option<u64>| Hotspot {
+            port,
+            label: format!("p{port}"),
+            stage: 1,
+            switch: "s".into(),
+            group: "g".into(),
+            windows_seen: 1,
+            onset,
+            persistent: onset.is_some(),
+            peak_forwarded: total,
+            total_forwarded: total,
+            utilization: 0.0,
+        };
+        let a = vec![h(1, 100, Some(0)), h(2, 100, None), h(3, 100, None), h(4, 100, None)];
+        let b = vec![h(2, 50, None), h(3, 104, None), h(4, 200, Some(1))];
+        let d = diff_hotspots(&a, &b);
+        assert_eq!(d.len(), 4);
+        let by_port: BTreeMap<u32, &HotspotDiff> = d.iter().map(|x| (x.port, x)).collect();
+        assert_eq!(by_port[&1].verdict, DiffVerdict::Absent);
+        assert!(by_port[&1].a_persistent);
+        assert_eq!(by_port[&2].verdict, DiffVerdict::Cooler);
+        assert_eq!(by_port[&3].verdict, DiffVerdict::Similar);
+        assert_eq!(by_port[&4].verdict, DiffVerdict::Hotter);
+        assert_eq!(by_port[&4].b_onset, Some(1));
+    }
+}
+

@@ -46,7 +46,7 @@ impl TelemetryRun {
     }
 }
 
-fn esc(s: &str) -> String {
+pub(crate) fn esc(s: &str) -> String {
     let mut o = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -62,7 +62,11 @@ fn esc(s: &str) -> String {
     o
 }
 
-fn map_json<V, F: Fn(&V) -> String>(map: &BTreeMap<String, V>, indent: &str, val: F) -> String {
+pub(crate) fn map_json<V, F: Fn(&V) -> String>(
+    map: &BTreeMap<String, V>,
+    indent: &str,
+    val: F,
+) -> String {
     if map.is_empty() {
         return "{}".to_string();
     }
@@ -71,7 +75,7 @@ fn map_json<V, F: Fn(&V) -> String>(map: &BTreeMap<String, V>, indent: &str, val
     format!("{{\n{}\n{indent}}}", inner.join(",\n"))
 }
 
-fn u64s_json(values: &[u64]) -> String {
+pub(crate) fn u64s_json(values: &[u64]) -> String {
     let body: Vec<String> = values.iter().map(|v| v.to_string()).collect();
     format!("[{}]", body.join(", "))
 }

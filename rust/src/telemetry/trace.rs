@@ -1,0 +1,357 @@
+//! The Chrome-trace / Perfetto JSON exporter.
+//!
+//! [`TraceBuilder`] renders pgft observability data — telemetry span
+//! stats, coordinator [`BatchRecord`] repair timelines, and flight
+//! recorder window series — as a Trace Event Format document
+//! (`{"traceEvents": [...]}`) that `chrome://tracing` and
+//! [ui.perfetto.dev](https://ui.perfetto.dev) open directly.
+//!
+//! Layout is **deterministic**: the builder never reads a clock. Every
+//! timestamp is derived from its input — span stats are laid out
+//! sequentially in metric-name order, journal batches by cumulative
+//! phase time, recorder windows at their simulated-cycle positions
+//! (1 cycle rendered as 1 µs). Wall-clock durations only enter as
+//! *data* (the `_ns` fields the telemetry layer measured), never as
+//! layout, so the same inputs always render the same bytes.
+//!
+//! Track map (one trace "thread" per source):
+//!
+//! | track              | events                                          |
+//! |--------------------|-------------------------------------------------|
+//! | one per run        | `X` slice per telemetry span stat               |
+//! | `coordinator`      | `X` slice per journal batch, phase slices nested |
+//! | one per recording  | `C` counter per window (injected/delivered/forwarded flits) |
+//! | `<run> phases`     | `X` slice per workload phase                    |
+
+use super::journal::BatchRecord;
+use super::recorder::Recording;
+use super::report::{esc, TelemetryRun};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+const PID: u64 = 1;
+
+/// An incremental Trace Event Format document builder.
+#[derive(Clone, Debug, Default)]
+pub struct TraceBuilder {
+    events: Vec<String>,
+    next_tid: u64,
+}
+
+impl TraceBuilder {
+    /// An empty trace.
+    pub fn new() -> TraceBuilder {
+        TraceBuilder::default()
+    }
+
+    /// Number of events added so far.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether no events have been added.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Open a new track (trace thread): emits the `thread_name`
+    /// metadata event and returns the track's tid.
+    pub fn add_thread(&mut self, name: &str) -> u64 {
+        self.next_tid += 1;
+        let tid = self.next_tid;
+        self.events.push(format!(
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {PID}, \"tid\": {tid}, \
+             \"args\": {{\"name\": \"{}\"}}}}",
+            esc(name)
+        ));
+        tid
+    }
+
+    /// Add a complete slice (`ph: "X"`) on `tid`. Timestamps and
+    /// durations are microseconds; a zero duration is clamped to 1 so
+    /// the slice stays visible.
+    pub fn add_span(&mut self, tid: u64, ts_us: u64, dur_us: u64, name: &str, args: &[(&str, u64)]) {
+        let args_body: Vec<String> =
+            args.iter().map(|(k, v)| format!("\"{}\": {v}", esc(k))).collect();
+        self.events.push(format!(
+            "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {ts_us}, \"dur\": {}, \
+             \"pid\": {PID}, \"tid\": {tid}, \"args\": {{{}}}}}",
+            esc(name),
+            dur_us.max(1),
+            args_body.join(", ")
+        ));
+    }
+
+    /// Add a counter sample (`ph: "C"`): one stacked-area track named
+    /// `name` with one series per `(series, value)` pair.
+    pub fn add_counter(&mut self, name: &str, ts_us: u64, series: &[(&str, u64)]) {
+        let args_body: Vec<String> =
+            series.iter().map(|(k, v)| format!("\"{}\": {v}", esc(k))).collect();
+        self.events.push(format!(
+            "{{\"name\": \"{}\", \"ph\": \"C\", \"ts\": {ts_us}, \"pid\": {PID}, \
+             \"args\": {{{}}}}}",
+            esc(name),
+            args_body.join(", ")
+        ));
+    }
+
+    /// Render a telemetry run's span stats as one track of sequential
+    /// slices (metric-name order — span stats are totals, not
+    /// intervals, so the layout is synthetic but the durations are
+    /// real).
+    pub fn add_telemetry_run(&mut self, run: &TelemetryRun) {
+        let spans = run.registry.spans();
+        if spans.is_empty() {
+            return;
+        }
+        let tid = self.add_thread(&format!("telemetry {}", run.name()));
+        let mut ts = 0u64;
+        for (name, s) in spans {
+            let dur = s.total_ns / 1_000;
+            self.add_span(tid, ts, dur, name, &[("count", s.count), ("max_ns", s.max_ns)]);
+            ts += dur.max(1);
+        }
+    }
+
+    /// Render the coordinator journal as one track: a slice per batch
+    /// (laid out by cumulative recorded time) with its six phase
+    /// slices nested inside.
+    pub fn add_journal(&mut self, records: &[BatchRecord]) {
+        if records.is_empty() {
+            return;
+        }
+        let tid = self.add_thread("coordinator journal");
+        let mut ts = 0u64;
+        for b in records {
+            let total_us = b.total_ns() / 1_000;
+            self.add_span(
+                tid,
+                ts,
+                total_us,
+                &b.kind.to_string(),
+                &[
+                    ("events", b.events as u64),
+                    ("dead_links", b.dead_links as u64),
+                    ("dirty_flows", b.dirty_flows as u64),
+                    ("routes_changed", b.routes_changed as u64),
+                    ("diff_entries", b.diff_entries as u64),
+                ],
+            );
+            let mut phase_ts = ts;
+            for (name, ns) in [
+                ("coalesce", b.coalesce_ns),
+                ("dirty_scan", b.dirty_scan_ns),
+                ("retrace", b.retrace_ns),
+                ("tables", b.tables_ns),
+                ("diff", b.diff_ns),
+                ("publish", b.publish_ns),
+            ] {
+                if ns == 0 {
+                    continue;
+                }
+                self.add_span(tid, phase_ts, ns / 1_000, name, &[]);
+                phase_ts += (ns / 1_000).max(1);
+            }
+            ts += total_us.max(1);
+        }
+    }
+
+    /// Render a flight recording: a counter track sampling the three
+    /// flit series at each window end (1 simulated cycle == 1 µs), and
+    /// — for phased replays — a slice track marking each phase.
+    pub fn add_recording(&mut self, rec: &Recording) {
+        let run = if rec.info.label.is_empty() {
+            "run".to_string()
+        } else {
+            rec.info
+                .label
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        for w in &rec.windows {
+            self.add_counter(
+                &format!("flits {run}"),
+                w.end,
+                &[
+                    ("injected", w.injected_flits),
+                    ("delivered", w.delivered_flits),
+                    ("forwarded", w.forwarded_flits),
+                ],
+            );
+        }
+        if !rec.phases.is_empty() {
+            let tid = self.add_thread(&format!("{run} phases"));
+            let mut start = 0u64;
+            for (i, &end) in rec.phases.iter().enumerate() {
+                self.add_span(tid, start, end.saturating_sub(start), &format!("phase {i}"), &[]);
+                start = end;
+            }
+        }
+    }
+
+    /// Render the document (`{"traceEvents": [...]}`).
+    pub fn render(&self) -> String {
+        if self.events.is_empty() {
+            return "{\"traceEvents\": []}\n".to_string();
+        }
+        let body: Vec<String> = self.events.iter().map(|e| format!("  {e}")).collect();
+        format!("{{\"traceEvents\": [\n{}\n]}}\n", body.join(",\n"))
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.render())
+            .with_context(|| format!("write trace {}", path.as_ref().display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::recorder::json;
+    use crate::telemetry::recorder::{
+        PortWindow, Recording, RunInfo, RunTotals, ShedTotals, WindowSample,
+    };
+    use crate::telemetry::{BatchKind, Registry};
+    use std::collections::BTreeMap;
+
+    fn sample_batch() -> BatchRecord {
+        BatchRecord {
+            kind: BatchKind::Repair,
+            events: 2,
+            dead_links: 2,
+            dirty_flows: 7,
+            routes_changed: 4,
+            diff_entries: 3,
+            coalesce_ns: 1_000,
+            dirty_scan_ns: 2_000,
+            retrace_ns: 30_000,
+            tables_ns: 4_000,
+            diff_ns: 5_000,
+            publish_ns: 6_000,
+        }
+    }
+
+    fn sample_recording(phases: Vec<u64>) -> Recording {
+        let mut label = BTreeMap::new();
+        label.insert("algo".to_string(), "dmodk".to_string());
+        Recording {
+            info: RunInfo { label, topo: "case-study".into(), placement: "paper-io".into() },
+            window: 4,
+            top_k: 2,
+            max_windows: 64,
+            num_ports: 8,
+            vcs: 2,
+            flows: 3,
+            packet_flits: 4,
+            seed: 1,
+            rate: 0.8,
+            injection: "bernoulli".into(),
+            horizon: 8,
+            phases,
+            totals: RunTotals::default(),
+            shed: ShedTotals::default(),
+            windows: vec![
+                WindowSample {
+                    index: 0,
+                    start: 0,
+                    end: 4,
+                    injected_flits: 8,
+                    delivered_flits: 4,
+                    forwarded_flits: 12,
+                    ports: vec![PortWindow {
+                        port: 2,
+                        forwarded: 6,
+                        stalls: 1,
+                        vc_hwm: vec![3, 0],
+                    }],
+                },
+                WindowSample {
+                    index: 1,
+                    start: 4,
+                    end: 8,
+                    injected_flits: 4,
+                    delivered_flits: 8,
+                    forwarded_flits: 10,
+                    ports: vec![],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_valid() {
+        let t = TraceBuilder::new();
+        assert!(t.is_empty());
+        let doc = t.render();
+        assert_eq!(doc, "{\"traceEvents\": []}\n");
+        json::parse(&doc).unwrap();
+    }
+
+    #[test]
+    fn journal_lays_batches_sequentially() {
+        let mut t = TraceBuilder::new();
+        t.add_journal(&[sample_batch(), sample_batch()]);
+        let doc = t.render();
+        let v = json::parse(&doc).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 metadata + 2 × (1 batch slice + 6 phase slices).
+        assert_eq!(evs.len(), 15);
+        assert!(doc.contains("\"name\": \"repair\""));
+        assert!(doc.contains("\"name\": \"retrace\""));
+        assert!(doc.contains("\"dirty_flows\": 7"));
+        // Second batch starts where the first ended (48 µs total).
+        assert!(doc.contains("\"ph\": \"X\", \"ts\": 48, \"dur\": 48"), "{doc}");
+        assert!(!doc.contains("null"));
+    }
+
+    #[test]
+    fn telemetry_run_renders_span_stats() {
+        let mut r = Registry::default();
+        r.span_ns("netsim.run", 5_000);
+        r.span_ns("eval.trace", 2_000);
+        let mut t = TraceBuilder::new();
+        t.add_telemetry_run(&TelemetryRun::unlabelled(r));
+        let doc = t.render();
+        // BTreeMap order: eval.trace at 0, netsim.run after it.
+        assert!(doc.contains("\"name\": \"eval.trace\", \"ph\": \"X\", \"ts\": 0, \"dur\": 2"));
+        assert!(doc.contains("\"name\": \"netsim.run\", \"ph\": \"X\", \"ts\": 2, \"dur\": 5"));
+        json::parse(&doc).unwrap();
+        // A spanless registry adds no track at all.
+        let before = t.len();
+        t.add_telemetry_run(&TelemetryRun::unlabelled(Registry::default()));
+        assert_eq!(t.len(), before);
+    }
+
+    #[test]
+    fn recording_renders_counters_and_phases() {
+        let mut t = TraceBuilder::new();
+        t.add_recording(&sample_recording(vec![4, 8]));
+        let doc = t.render();
+        assert!(doc.contains("\"name\": \"flits algo=dmodk\", \"ph\": \"C\", \"ts\": 4"));
+        assert!(doc.contains("\"injected\": 8, \"delivered\": 4, \"forwarded\": 12"));
+        assert!(doc.contains("\"name\": \"phase 0\""));
+        assert!(doc.contains("\"name\": \"phase 1\""));
+        json::parse(&doc).unwrap();
+        assert!(!doc.contains("null"));
+        // Unphased recordings get counters only.
+        let mut t2 = TraceBuilder::new();
+        t2.add_recording(&sample_recording(Vec::new()));
+        assert!(!t2.render().contains("phases"));
+    }
+
+    #[test]
+    fn write_roundtrips_to_disk() {
+        let dir = std::env::temp_dir().join("pgft_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.json");
+        let mut t = TraceBuilder::new();
+        t.add_journal(&[sample_batch()]);
+        t.write(&p).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("traceEvents"));
+        json::parse(&body).unwrap();
+    }
+}

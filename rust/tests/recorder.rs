@@ -1,0 +1,199 @@
+//! Flight-recorder contract: recording NEVER changes the simulation
+//! (recorder-on reports are byte-identical to recorder-off), the window
+//! series is run-to-run invariant, per-window deltas conserve the
+//! whole-run flit totals (shed windows included) and agree with the
+//! end-of-run telemetry counters, phased-replay windows align with
+//! phase boundaries, and — the paper-facing pin — hotspot attribution
+//! at a saturating rate localizes dmodk's persistent top-stage funnel,
+//! which gdmodk removes or strictly cools.
+
+use pgft::netsim::{run_netsim_phased, run_netsim_phased_recorded, run_netsim_recorded};
+use pgft::prelude::*;
+use pgft::telemetry::{
+    attribute, diff_hotspots, DiffVerdict, Recorder, RecorderConfig, Recording, RunInfo,
+    WindowSample,
+};
+
+fn fabric() -> (Topology, NodeTypeMap) {
+    let topo = build_pgft(&PgftSpec::case_study());
+    let types = Placement::paper_io().apply(&topo).unwrap();
+    (topo, types)
+}
+
+fn routes(topo: &Topology, types: &NodeTypeMap, kind: AlgorithmKind, pattern: Pattern) -> FlowSet {
+    let flows = pattern.flows(topo, types).unwrap();
+    let router = kind.build(topo, Some(types), 1);
+    FlowSet::trace(topo, &*router, &flows)
+}
+
+fn fast_cfg() -> NetsimConfig {
+    NetsimConfig { warmup: 100, measure: 400, drain: 100, ..Default::default() }
+}
+
+/// Run one recorded C2IO netsim and return its single recording.
+fn record_one(kind: AlgorithmKind, rate: f64, cfg_rec: RecorderConfig) -> Recording {
+    let (topo, types) = fabric();
+    let set = routes(&topo, &types, kind, Pattern::C2ioSym);
+    let rec = Recorder::enabled(cfg_rec);
+    let info = RunInfo::default();
+    run_netsim_recorded(&topo, &set, &fast_cfg(), rate, &Telemetry::disabled(), &rec, info)
+        .unwrap();
+    let mut recs = rec.take();
+    assert_eq!(recs.len(), 1);
+    recs.remove(0)
+}
+
+#[test]
+fn recorder_never_perturbs_the_simulation() {
+    let (topo, types) = fabric();
+    let cfg = fast_cfg();
+    for kind in [AlgorithmKind::Dmodk, AlgorithmKind::Gdmodk] {
+        let set = routes(&topo, &types, kind, Pattern::C2ioSym);
+        for rate in [0.3, 0.8] {
+            let off = run_netsim(&topo, &set, &cfg, rate).unwrap();
+            let rec = Recorder::enabled(RecorderConfig::default());
+            let on = run_netsim_recorded(
+                &topo,
+                &set,
+                &cfg,
+                rate,
+                &Telemetry::disabled(),
+                &rec,
+                RunInfo::default(),
+            )
+            .unwrap();
+            assert_eq!(
+                on,
+                off,
+                "recording must not perturb {} at rate {rate}",
+                kind.as_str()
+            );
+            assert_eq!(rec.take().len(), 1);
+        }
+    }
+}
+
+#[test]
+fn window_series_is_run_to_run_invariant() {
+    let a = record_one(AlgorithmKind::Dmodk, 0.8, RecorderConfig::default());
+    let b = record_one(AlgorithmKind::Dmodk, 0.8, RecorderConfig::default());
+    assert_eq!(a.windows, b.windows, "the window series is deterministic");
+    assert_eq!(a.totals, b.totals);
+    assert_eq!(a.shed, b.shed);
+}
+
+#[test]
+fn window_deltas_conserve_run_totals_and_match_telemetry() {
+    let (topo, types) = fabric();
+    let set = routes(&topo, &types, AlgorithmKind::Dmodk, Pattern::C2ioSym);
+    let cfg = fast_cfg();
+    let telem = Telemetry::enabled();
+    let rec = Recorder::enabled(RecorderConfig::default());
+    run_netsim_recorded(&topo, &set, &cfg, 0.8, &telem, &rec, RunInfo::default()).unwrap();
+    let r = rec.take().remove(0);
+    // Contiguity: nothing shed, so the retained windows tile the run.
+    assert_eq!(r.horizon, cfg.warmup + cfg.measure + cfg.drain);
+    assert_eq!(r.shed.windows, 0);
+    assert_eq!(r.windows.first().unwrap().start, 0);
+    for w in r.windows.windows(2) {
+        assert_eq!(w[1].start, w[0].end, "windows tile the cycle axis");
+    }
+    assert_eq!(r.windows.last().unwrap().end, r.horizon);
+    // Conservation: per-window deltas sum to the whole-run totals.
+    let sum = |f: fn(&WindowSample) -> u64| r.windows.iter().map(f).sum::<u64>();
+    assert_eq!(sum(|w| w.injected_flits), r.totals.injected_flits);
+    assert_eq!(sum(|w| w.delivered_flits), r.totals.delivered_flits);
+    assert_eq!(sum(|w| w.forwarded_flits), r.totals.forwarded_flits);
+    // And the totals agree with the end-of-run telemetry counters.
+    let reg = telem.snapshot();
+    assert_eq!(r.totals.injected_flits, reg.counter("netsim.flits.injected"));
+    assert_eq!(r.totals.delivered_flits, reg.counter("netsim.flits.delivered"));
+    let port_fwd: u64 = reg.vectors()["netsim.port.forwarded_flits"].values.iter().sum();
+    assert_eq!(r.totals.forwarded_flits, port_fwd);
+}
+
+#[test]
+fn shed_windows_keep_the_totals_conserved() {
+    // A tiny ring forces the oldest windows out; their flit deltas
+    // must reappear in the shed aggregate, never vanish.
+    let small = RecorderConfig { window: 16, top_k: 4, max_windows: 4 };
+    let r = record_one(AlgorithmKind::Dmodk, 0.8, small);
+    assert!(r.shed.windows > 0, "600 cycles / 16 overflow a 4-window ring");
+    assert_eq!(r.windows.len(), 4);
+    let sum = |f: fn(&WindowSample) -> u64| r.windows.iter().map(f).sum::<u64>();
+    assert_eq!(sum(|w| w.injected_flits) + r.shed.injected_flits, r.totals.injected_flits);
+    assert_eq!(sum(|w| w.delivered_flits) + r.shed.delivered_flits, r.totals.delivered_flits);
+    assert_eq!(sum(|w| w.forwarded_flits) + r.shed.forwarded_flits, r.totals.forwarded_flits);
+    // Retained indices are the last four, in order.
+    let first = r.windows.first().unwrap().index;
+    assert_eq!(first, r.shed.windows);
+    for (i, w) in r.windows.iter().enumerate() {
+        assert_eq!(w.index, first + i as u64);
+    }
+}
+
+#[test]
+fn phased_replay_windows_align_with_phase_boundaries() {
+    let (topo, types) = fabric();
+    let sets = vec![
+        routes(&topo, &types, AlgorithmKind::Gdmodk, Pattern::C2ioSym),
+        routes(&topo, &types, AlgorithmKind::Gdmodk, Pattern::C2ioAll),
+    ];
+    let cfg = fast_cfg();
+    let off = run_netsim_phased(&topo, &sets, &cfg, 0.3).unwrap();
+    let rec = Recorder::enabled(RecorderConfig::default());
+    let on =
+        run_netsim_phased_recorded(&topo, &sets, &cfg, 0.3, &rec, RunInfo::default()).unwrap();
+    assert_eq!(on, off, "recording must not perturb the phased replay");
+    let r = rec.take().remove(0);
+    assert_eq!(r.phases.len(), sets.len());
+    for &mark in &r.phases {
+        assert!(
+            r.windows.iter().any(|w| w.end == mark),
+            "phase end {mark} forces a window rollover"
+        );
+        assert!(
+            r.windows.iter().all(|w| !(w.start < mark && mark < w.end)),
+            "no window spans the phase boundary at {mark}"
+        );
+    }
+}
+
+/// The acceptance pin: at a rate that saturates dmodk on the C2IO case
+/// study, attribution localizes a persistent top-stage hotspot with a
+/// saturation onset, and the diff against gdmodk shows that hotspot
+/// absent or strictly cooler — the paper's load-balancing claim read
+/// straight off the flight recorder.
+#[test]
+fn dmodk_funnel_is_localized_and_gdmodk_cools_it() {
+    let dm = record_one(AlgorithmKind::Dmodk, 0.8, RecorderConfig::default());
+    let gd = record_one(AlgorithmKind::Gdmodk, 0.8, RecorderConfig::default());
+    let (topo, types) = fabric();
+    let hd = attribute(&dm, &topo, Some(&types)).unwrap();
+    let hg = attribute(&gd, &topo, Some(&types)).unwrap();
+    assert!(!hd.is_empty() && !hg.is_empty());
+    // dmodk's C2IO funnel shows up as a persistent saturated link at
+    // the top stage.
+    let funnel = hd
+        .iter()
+        .find(|h| h.stage == topo.spec.h && h.persistent && h.onset.is_some())
+        .unwrap_or_else(|| panic!("no persistent top-stage hotspot under dmodk: {hd:?}"));
+    assert!(funnel.utilization > 0.5, "the funnel link is busy: {funnel:?}");
+    // gdmodk removes it or strictly cools it.
+    let diffs = diff_hotspots(&hd, &hg);
+    let fixed: Vec<_> = diffs
+        .iter()
+        .filter(|d| {
+            d.a_persistent
+                && d.a_onset.is_some()
+                && matches!(d.verdict, DiffVerdict::Absent | DiffVerdict::Cooler)
+        })
+        .collect();
+    assert!(
+        fixed.iter().any(|d| d.stage == topo.spec.h),
+        "gdmodk must remove or cool a persistent top-stage dmodk hotspot: {diffs:?}"
+    );
+    for d in &fixed {
+        assert!(d.b_total < d.a_total, "cooled means strictly fewer flits: {d:?}");
+    }
+}
